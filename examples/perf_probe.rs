@@ -1,0 +1,48 @@
+use posit_div::division::srt4_cs::Srt4Cs;
+use posit_div::division::{Algorithm, DivEngine};
+use posit_div::posit::frac_bits;
+use posit_div::posit::{mask, Posit};
+use posit_div::testkit::Rng;
+use std::time::Instant;
+fn main() {
+    let mut rng = Rng::seeded(1);
+    for n in [16u32, 32] {
+        let pairs: Vec<(Posit, Posit)> = (0..4096).map(|_| {
+            (Posit::from_bits(n, rng.next_u64() & mask(n)),
+             Posit::from_bits(n, (rng.next_u64() & mask(n)) | 1))
+        }).collect();
+        let e = Algorithm::Srt4CsOfFr.engine();
+        // warm
+        for &(x, d) in &pairs { std::hint::black_box(e.divide(x, d).result); }
+        let mut best = f64::MAX;
+        for _ in 0..40 {
+            let t0 = Instant::now();
+            for &(x, d) in &pairs { std::hint::black_box(e.divide(x, d).result); }
+            best = best.min(t0.elapsed().as_secs_f64() / pairs.len() as f64);
+        }
+        println!("Posit{n} srt4csoffr: {:.0} ns/div ({:.2} Mdiv/s)", best * 1e9, 1e-6 / best);
+
+        // u128 reference recurrence (the pre-optimization path), fraction
+        // stage only, for the §Perf before/after ablation
+        let wide = Srt4Cs::with_otf_fr();
+        let f = frac_bits(n);
+        let sigs: Vec<(u64, u64)> = (0..4096)
+            .map(|_| ((1 << f) | (rng.next_u64() & ((1 << f) - 1)), (1 << f) | (rng.next_u64() & ((1 << f) - 1))))
+            .collect();
+        for (name, use_wide) in [("u128 ref", true), ("u64 fast", false)] {
+            let mut best = f64::MAX;
+            for _ in 0..20 {
+                let t0 = Instant::now();
+                for &(x, d) in &sigs {
+                    if use_wide {
+                        std::hint::black_box(wide.frac_divide_wide_for_bench(n, x, d));
+                    } else {
+                        std::hint::black_box(wide.fraction_divide(n, x, d));
+                    }
+                }
+                best = best.min(t0.elapsed().as_secs_f64() / sigs.len() as f64);
+            }
+            println!("  fraction stage ({name}): {:.0} ns", best * 1e9);
+        }
+    }
+}

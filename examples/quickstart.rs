@@ -1,0 +1,54 @@
+//! Quickstart: the public API in two minutes.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use posit_div::division::{golden, Algorithm, DivEngine};
+use posit_div::posit::Posit;
+
+fn main() {
+    // --- posits -----------------------------------------------------------
+    let n = 32; // Posit⟨32,2⟩, the 2022-standard es=2
+    let x = Posit::from_f64(n, 355.0);
+    let d = Posit::from_f64(n, 113.0);
+    println!("x = {x:?}");
+    println!("d = {d:?}");
+
+    // --- division through any of the paper's engines ----------------------
+    for alg in [
+        Algorithm::Nrd,        // Algorithm 1 baseline
+        Algorithm::Srt2Cs,     // radix-2 SRT, carry-save residual
+        Algorithm::Srt4CsOfFr, // the paper's optimized radix-4 unit
+        Algorithm::Srt4Scaled, // radix-4 with Table I operand scaling
+        Algorithm::Newton,     // the multiplicative baseline
+    ] {
+        let engine = alg.engine();
+        let div = engine.divide(x, d);
+        println!(
+            "{:<18} -> {:<22} {:>2} iterations, {:>2} cycles",
+            engine.name(),
+            div.result.to_f64(),
+            div.iterations,
+            div.cycles
+        );
+    }
+
+    // every engine is bit-identical to the exact golden model:
+    let want = golden::divide(x, d).result;
+    assert!(Algorithm::ALL.iter().all(|a| a.engine().divide(x, d).result == want));
+    println!("all engines agree bit-exactly: 355/113 = {} (2 ulp from π)", want.to_f64());
+
+    // --- posit arithmetic basics ------------------------------------------
+    let a = Posit::from_f64(16, 0.3);
+    let b = Posit::from_f64(16, 0.6);
+    println!("\nPosit16: 0.3 + 0.6 = {}", a.add(b));
+    println!("Posit16: 0.3 * 0.6 = {}", a.mul(b));
+    println!("Posit16 has {} fraction bits at 1.0; maxpos = {:e}",
+        posit_div::posit::frac_bits(16), Posit::maxpos(16).to_f64());
+
+    // specials: a single NaR, no overflow
+    assert!(Posit::from_f64(16, f64::NAN).is_nar());
+    assert_eq!(Posit::maxpos(16).add(Posit::maxpos(16)), Posit::maxpos(16));
+    println!("posit saturates instead of overflowing; NaR is the only special");
+}

@@ -1,0 +1,79 @@
+//! End-to-end driver (the EXPERIMENTS.md §E2E run): the full three-layer
+//! stack serving batched division requests.
+//!
+//!   L3 Rust coordinator (router + dynamic batcher + metrics)
+//!     -> PJRT backend: the AOT-compiled L2 JAX graph containing the
+//!        L1 Pallas radix-4 SRT kernel (artifacts/, built once by
+//!        `make artifacts`; Python is NOT running now)
+//!     -> native backend: the bit-exact Rust engines (for comparison)
+//!
+//! Serves a DSP-trace workload on Posit16 and Posit32 through both
+//! backends, verifies every response against the exact golden model, and
+//! reports throughput and latency.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example serve_divide
+//! ```
+
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+use posit_div::coordinator::{Backend, BatchPolicy, DivisionService, ServiceConfig};
+use posit_div::division::{golden, Algorithm};
+use posit_div::workload::{self, Workload};
+
+const REQUESTS: usize = 50_000;
+
+fn run(n: u32, backend: Backend, label: &str) {
+    let policy = BatchPolicy { max_batch: 1024, max_wait: Duration::from_micros(200) };
+    let svc = match DivisionService::start(ServiceConfig { n, backend, policy }) {
+        Ok(svc) => svc,
+        Err(e) => {
+            eprintln!("[skip] {label} Posit{n}: {e:#} (run `make artifacts`)");
+            return;
+        }
+    };
+
+    let mut wl = workload::DspTrace::new(n, 0xE2E0 + n as u64);
+    let pairs = workload::take(&mut wl, REQUESTS);
+
+    let t0 = Instant::now();
+    let results = svc.divide_many(&pairs);
+    let wall = t0.elapsed();
+
+    // full verification against the exact golden model
+    let mut checked = 0;
+    for (i, &(x, d)) in pairs.iter().enumerate() {
+        assert_eq!(results[i], golden::divide(x, d).result, "{label} {x:?}/{d:?}");
+        checked += 1;
+    }
+
+    let m = svc.metrics();
+    println!("\n[{label}] Posit{n}: {REQUESTS} requests in {wall:.2?}");
+    println!("  throughput     : {:>12.0} div/s", REQUESTS as f64 / wall.as_secs_f64());
+    println!("  batch latency  : {}", m.batch_latency.summary());
+    println!(
+        "  batches        : {} (mean fill {:.1}%)",
+        m.batches.load(Ordering::Relaxed),
+        100.0 * m.mean_batch_fill(1024)
+    );
+    println!("  verified       : {checked}/{REQUESTS} bit-exact vs golden model");
+    svc.shutdown();
+}
+
+fn main() {
+    println!("=== end-to-end: three-layer posit division service ===");
+    for n in [16u32, 32] {
+        run(
+            n,
+            Backend::Native { alg: Algorithm::Srt4CsOfFr, threads: 4 },
+            "native rust engine (SRT r4 CS OF FR)",
+        );
+        run(
+            n,
+            Backend::Pjrt { artifacts_dir: "artifacts".into() },
+            "PJRT: AOT JAX/Pallas kernel",
+        );
+    }
+    println!("\nall served responses verified bit-exact against the golden model");
+}

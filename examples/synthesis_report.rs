@@ -1,0 +1,74 @@
+//! Regenerate the paper's full evaluation section from the hardware model:
+//! Table I (scaling factors), Table II (iterations/latency), Table III
+//! (termination examples, recomputed live), the Figs. 4–9 sweeps and the
+//! §IV comparison against [14]. Pass `--csv` for machine-readable output.
+//!
+//! ```sh
+//! cargo run --release --example synthesis_report [-- --csv]
+//! ```
+
+use posit_div::division::{scaling, Algorithm, DivEngine};
+use posit_div::hardware::{report, Mode, TSMC28};
+use posit_div::posit::Posit;
+
+fn table1() -> String {
+    let mut out = String::from(
+        "Table I — scaling factor M and components (radix-4, a=2)\n\
+         d (3 bits)    M       components\n",
+    );
+    for idx in 0..8 {
+        let (s1, s2) = scaling::COMPONENTS[idx];
+        let comp = if s2 != 0 {
+            format!("1 + 1/{} + 1/{}", 1 << s1, 1 << s2)
+        } else {
+            format!("1 + 1/{}", 1 << s1)
+        };
+        out.push_str(&format!(
+            "0.1{:03b}xxx    {:<6} {}\n",
+            idx,
+            scaling::M8[idx] as f64 / 8.0,
+            comp
+        ));
+    }
+    out
+}
+
+fn table3() -> String {
+    // The two worked Posit10 examples of §III-F, recomputed by the actual
+    // radix-4 engine.
+    let engine = Algorithm::Srt4CsOfFr.engine();
+    let x = Posit::from_bits(10, 0b0011010111);
+    let d1 = Posit::from_bits(10, 0b0001001100);
+    let d2 = Posit::from_bits(10, 0b0000100110);
+    let q1 = engine.divide(x, d1).result;
+    let q2 = engine.divide(x, d2).result;
+    format!(
+        "Table III — termination & rounding examples (Posit10)\n\
+         X = 0011010111, D1 = 0001001100 -> Q = {:010b} (paper: 0110011111)\n\
+         X = 0011010111, D2 = 0000100110 -> Q = {:010b} (paper: 0111010000)\n",
+        q1.to_bits(),
+        q2.to_bits()
+    )
+}
+
+fn main() {
+    let csv = std::env::args().any(|a| a == "--csv");
+    let tech = TSMC28;
+    if csv {
+        for mode in [Mode::Combinational, Mode::Pipelined] {
+            for n in report::FORMATS {
+                print!("{}", report::sweep_csv(n, mode, &tech));
+            }
+        }
+        return;
+    }
+    println!("{}", table1());
+    println!("{}", report::render_table2());
+    println!("{}", table3());
+    for mode in [Mode::Combinational, Mode::Pipelined] {
+        for n in report::FORMATS {
+            println!("{}", report::render_figure(n, mode, &tech));
+        }
+    }
+    print!("{}", report::render_asap23(&tech));
+}

@@ -1,0 +1,78 @@
+"""AOT export: lower the L2 division graph to HLO *text* artifacts.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the Rust `xla` crate) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage: python -m compile.aot --out-dir ../artifacts
+Emits one artifact per (format, batch): div_p{16,32}_b{B}.hlo.txt plus a
+manifest the Rust runtime reads to discover shapes.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+jax.config.update("jax_enable_x64", True)
+
+# (posit width, batch) variants exported by `make artifacts`.
+VARIANTS = [(16, 256), (32, 256), (16, 1024), (32, 1024)]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(n: int, batch: int) -> str:
+    spec = jax.ShapeDtypeStruct((batch,), jnp.int64)
+
+    def fn(x, d):
+        return (model.divide_batch(x, d, n),)
+
+    text = to_hlo_text(jax.jit(fn).lower(spec, spec))
+    # xla_extension 0.5.1 (the Rust runtime's XLA) mis-executes the s64
+    # gather ops jax >= 0.8 emits: refuse to ship a graph containing one.
+    assert " gather(" not in text, "exported graph contains gather - unsupported by XLA 0.5.1"
+    return text
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="(legacy single-file mode marker)")
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    if args.out:
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {}
+    for n, batch in VARIANTS:
+        text = lower_variant(n, batch)
+        name = f"div_p{n}_b{batch}.hlo.txt"
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(text)
+        manifest[name] = {"n": n, "batch": batch, "dtype": "s64", "inputs": 2}
+        print(f"wrote {name}: {len(text)} chars")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    # legacy marker expected by the Makefile dependency rule
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(json.dumps({"see": "manifest.json"}))
+    print(f"wrote manifest.json ({len(manifest)} variants)")
+
+
+if __name__ == "__main__":
+    main()

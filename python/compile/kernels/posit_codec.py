@@ -1,0 +1,115 @@
+"""Vectorized Posit⟨n,2⟩ codec in pure jnp (build-time only).
+
+Mirrors the Rust `posit::fields` / `posit::round` modules bit-for-bit:
+decode uses the sign-magnitude convention (two's complement first), encode
+rounds in pattern space (guard/sticky on the regime‖exponent‖fraction bit
+string) with saturation at maxpos/minpos and never rounding to 0 or NaR.
+
+Supports n ≤ 32 (the int64 pattern frame needs rl + 2 + sfb ≤ 63 bits);
+Posit64 is served natively by the Rust engines.
+
+All lanes are int64; widths are static Python ints so everything traces
+into a single XLA computation.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+jax.config.update("jax_enable_x64", True)
+
+ES = 2
+
+
+def frac_bits(n: int) -> int:
+    """Worst-case fraction bits of a Posit⟨n,2⟩ (n-5, clamped)."""
+    return max(n - 5, 0)
+
+
+def mask(w: int) -> int:
+    return (1 << w) - 1
+
+
+def decode(bits, n: int):
+    """Decode n-bit patterns (int64 lanes, low n bits significant).
+
+    Returns (is_zero, is_nar, sign, scale, sig):
+      sign  : bool lanes
+      scale : int64, 4k + e
+      sig   : int64, (1 << F) | fraction  — significand in [1,2) at F
+              fraction bits, F = frac_bits(n).
+    """
+    bits = jnp.asarray(bits, jnp.int64) & mask(n)
+    f = frac_bits(n)
+    is_zero = bits == 0
+    is_nar = bits == (1 << (n - 1))
+    sign = (bits >> (n - 1)) & 1 == 1
+    magnitude = jnp.where(sign, (-bits) & mask(n), bits)
+
+    # left-align the n-1 body bits in a uint64 word
+    body = (magnitude & mask(n - 1)).astype(jnp.uint64) << (64 - (n - 1))
+    r0 = (body >> 63) == 1
+    inverted = jnp.where(r0, ~body, body)
+    run = jnp.minimum(lax.clz(inverted), jnp.uint64(n - 1)).astype(jnp.int64)
+    k = jnp.where(r0, run - 1, -run)
+
+    consumed = jnp.minimum(run + 1, n - 1)
+    rem = (n - 1) - consumed  # bits left for exponent + fraction
+    # tail: rem bits, right-aligned (shift count is lane-dependent)
+    tail = jnp.where(
+        rem > 0,
+        ((body << consumed.astype(jnp.uint64)) >> (64 - rem).astype(jnp.uint64)).astype(
+            jnp.int64
+        ),
+        0,
+    )
+    eb = jnp.minimum(rem, ES)
+    e = jnp.where(eb > 0, (tail >> (rem - eb)) << (ES - eb), 0)
+    fb = rem - eb
+    frac = (tail & ((1 << fb) - 1)) << (f - fb)
+
+    scale = 4 * k + e
+    sig = (1 << f) | frac
+    return is_zero, is_nar, sign, scale, sig
+
+
+def encode(sign, scale, sig, sfb: int, sticky, n: int):
+    """Encode to n-bit patterns with pattern-space round-to-nearest-even.
+
+    `sig` lanes must be normalized to [1,2): hidden bit at position `sfb`.
+    Requires rl_max + 2 + sfb ≤ 63, i.e. sfb ≤ 62 - n.
+    """
+    assert sfb <= 62 - n, f"pattern frame overflow: sfb={sfb}, n={n}"
+    sig = jnp.asarray(sig, jnp.int64)
+    scale = jnp.asarray(scale, jnp.int64)
+    sticky = jnp.asarray(sticky, jnp.bool_)
+
+    k = scale >> ES
+    e = scale & mask(ES)
+
+    sat_hi = k >= n - 2  # |v| >= maxpos ⇒ clamp to maxpos
+    sat_lo = k <= -(n - 1)  # 0 < |v| <= minpos boundary ⇒ minpos
+    # clamp k so the frame below stays in range for saturated lanes
+    k_c = jnp.clip(k, -(n - 2), n - 3)
+
+    # unbounded body as an integer: regime ‖ e ‖ frac
+    regime_val = jnp.where(k_c >= 0, (2 << (k_c + 1)) - 2, 1)
+    rl = jnp.where(k_c >= 0, k_c + 2, 1 - k_c)
+    frac = sig & mask(sfb)
+    body = (((regime_val << ES) | e) << sfb) | frac
+    length = rl + ES + sfb
+
+    shift = length - (n - 1)  # ≥ 2 always (rl ≥ 2, sfb ≥ ... )
+    m = body >> shift
+    g = (body >> (shift - 1)) & 1
+    rest = (body & ((1 << (shift - 1)) - 1)) != 0
+    rest = rest | sticky
+    m = m + jnp.where((g == 1) & (rest | (m & 1 == 1)), 1, 0)
+
+    # never 0, never NaR
+    m = jnp.clip(m, 1, mask(n - 1))
+    # saturation
+    m = jnp.where(sat_hi, mask(n - 1), m)
+    m = jnp.where(sat_lo, 1, m)
+
+    return jnp.where(sign, (-m) & mask(n), m)

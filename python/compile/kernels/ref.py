@@ -1,0 +1,42 @@
+"""Pure-jnp correctness oracle for the fraction-division kernel.
+
+Exact integer long division (no recurrence, no truncated estimates): the
+same contract as the Rust `division::golden` model. The kernel must match
+this bit-for-bit after precision refinement.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .posit_codec import frac_bits
+
+jax.config.update("jax_enable_x64", True)
+
+
+def fraction_divide(x_sig, d_sig, n: int, prec: int | None = None):
+    """Exact truncated quotient of significand lanes.
+
+    Returns (q_mag, sticky): q_mag = floor(x/d * 2^prec) with `prec`
+    fraction bits (default n), sticky = (remainder != 0).
+    Requires sig width + prec <= 62 (true for n <= 32 with prec = n).
+    """
+    if prec is None:
+        prec = n
+    f = frac_bits(n)
+    assert f + 1 + prec <= 62, "int64 overflow"
+    x = jnp.asarray(x_sig, jnp.int64)
+    d = jnp.asarray(d_sig, jnp.int64)
+    num = x << prec
+    q = num // d
+    rem = num - q * d
+    return q, rem != 0
+
+
+def refine(q_mag, sticky, from_bits: int, to_bits: int):
+    """Drop precision from `from_bits` to `to_bits` fraction bits, folding
+    the dropped bits into sticky (the Rust `FracQuotient::refine_to`)."""
+    assert to_bits <= from_bits
+    drop = from_bits - to_bits
+    if drop == 0:
+        return q_mag, sticky
+    return q_mag >> drop, sticky | ((q_mag & ((1 << drop) - 1)) != 0)

@@ -1,0 +1,183 @@
+"""L1 Pallas kernel: radix-4 SRT fraction division (CS + OF + FR).
+
+The paper's hot loop — the digit recurrence of §III — re-expressed as a
+batched, lane-parallel Pallas kernel. Every lane carries one division's
+hardware state in int64 registers:
+
+  ws, wc : the carry-save residual pair (datapath width F+7 bits,
+           two's-complement, wrapping — exactly the masked words the RTL
+           holds),
+  q, qd  : the on-the-fly-converted quotient registers (Eqs. 18-19),
+
+and the It-step loop (Table II) is a `fori_loop` whose body does the 7-bit
+slice estimate, the m_k(d-hat) table selection (Eq. 28), the divisor
+multiple generation and one 3:2 compression. Digit selections are
+bit-identical to the Rust `division::srt4_cs` engine.
+
+TPU mapping notes (DESIGN.md §Hardware-Adaptation): the batch is tiled by
+BlockSpec so each block's lane state (6 int64 vectors x BLOCK lanes = 6KiB
+at BLOCK=128) stays in VMEM; the loop is sequential per block, lanes are
+VPU-parallel. The MXU is idle by design - division is shift/add bound.
+interpret=True everywhere: the CPU PJRT client cannot run Mosaic
+custom-calls; real-TPU performance is estimated analytically in DESIGN.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .posit_codec import frac_bits
+
+jax.config.update("jax_enable_x64", True)
+
+# Default lane-block size: 6 state vectors * 128 lanes * 8 B = 6 KiB VMEM.
+BLOCK = 128
+
+# The derived m_k(d-hat) selection table (units of 1/16), one row per
+# divisor interval d in [i/16, (i+1)/16), i = 8..15; thresholds for digits
+# k = -1, 0, 1, 2. Identical to rust/src/division/selection.rs::derive
+# (spot-checked in tests against the Rust engine digit-for-digit).
+SEL_M = (
+    (-13, -5, 3, 12),
+    (-15, -6, 4, 14),
+    (-16, -6, 4, 15),
+    (-18, -7, 4, 16),
+    (-20, -8, 5, 18),
+    (-21, -8, 5, 19),
+    (-23, -9, 5, 20),
+    (-25, -10, 6, 22),
+)
+
+
+def selection_thresholds(dhat):
+    """Compute the m_k(d-hat) thresholds arithmetically (no gather!).
+
+    Same containment formula as the Rust derivation
+    (`selection::Srt4Table::derive`): m_k = ceil((3k-2) * d16 / 3) in 1/16
+    units, with d16 the interval endpoint that maximizes L_k. Produces
+    exactly the SEL_M table for dhat in [8, 15].
+
+    Why not a table gather: xla_extension 0.5.1 (behind the Rust `xla`
+    crate) mis-executes the s64 gather ops emitted by jax >= 0.8, so the
+    exported graph must avoid gather entirely (aot.py enforces this).
+    """
+    d16 = dhat + 8  # interval lower endpoint in 1/16 units
+
+    def ceil_div3(a):
+        return -((-a) // 3)
+
+    cols = []
+    for k in (-1, 0, 1, 2):
+        lnum = 3 * k - 2
+        endpoint = d16 + (1 if lnum > 0 else 0)
+        cols.append(ceil_div3(lnum * endpoint))
+    return cols  # [m_-1, m_0, m_1, m_2] lanes
+
+
+def iterations(n: int) -> int:
+    """Radix-4 iteration count (Table II): ceil((n-1)/2)."""
+    return (n - 1 + 1) // 2
+
+
+def _sext(v, bits: int):
+    """Sign-extend the low `bits` of int64 lanes."""
+    sign = 1 << (bits - 1)
+    return ((v & ((1 << bits) - 1)) ^ sign) - sign
+
+
+def _kernel(x_ref, d_ref, m_ref, q_ref, sticky_ref, *, n: int):
+    f = frac_bits(n)
+    fw = f + 3           # fractional bits of w: w(0) = x/4 = x_sig exactly
+    width = fw + 4       # datapath width (sign + 3 integer bits)
+    wmask = (1 << width) - 1
+    it = iterations(n)
+
+    x = x_ref[...].astype(jnp.int64)
+    d = d_ref[...].astype(jnp.int64)
+    m_lane = m_ref[...]  # (lanes, 4): per-lane m_k(d-hat) thresholds
+
+    d_fp = d << 2
+
+    def body(_, st):
+        ws, wc, q, qd = st
+        # r*w(i): wired shift, dropping overflow (mod 2^width)
+        s_ws = (ws << 2) & wmask
+        s_wc = (wc << 2) & wmask
+        # 7-bit slice estimate: per-word truncation + wrapping slice add
+        t = _sext((s_ws >> (fw - 4)) + (s_wc >> (fw - 4)), width - (fw - 4))
+        # digit = -2 + #(thresholds <= t)
+        digit = (
+            (t >= m_lane[:, 0]).astype(jnp.int64)
+            + (t >= m_lane[:, 1])
+            + (t >= m_lane[:, 2])
+            + (t >= m_lane[:, 3])
+            - 2
+        )  # digit = -2 + #(thresholds <= t)
+        # divisor multiple: 0, ±d, ±2d as (conditional shift, conditional
+        # invert + carry-in) — the hardware's multiple generation
+        mag = jnp.where(jnp.abs(digit) == 2, d_fp << 1, d_fp)
+        mag = jnp.where(digit == 0, 0, mag)
+        neg = digit > 0  # subtracting positive multiples
+        addend = jnp.where(neg, ~mag, mag) & wmask
+        cin = neg.astype(jnp.int64)
+        # 3:2 compression
+        ws2 = (s_ws ^ s_wc ^ addend) & wmask
+        wc2 = ((((s_ws & s_wc) | (s_ws & addend) | (s_wc & addend)) << 1) | cin) & wmask
+        # on-the-fly conversion (Eqs. 18-19)
+        q2 = jnp.where(digit >= 0, (q << 2) | digit, (qd << 2) | (4 + digit))
+        qd2 = jnp.where(digit > 0, (q << 2) | (digit - 1), (qd << 2) | (3 + digit))
+        return ws2, wc2, q2, qd2
+
+    zero = jnp.zeros_like(x)
+    ws, wc, q, qd = jax.lax.fori_loop(0, it, body, (x, zero, zero, zero))
+
+    # Termination: sign / zero of the final residual (values identical to
+    # the FR lookahead networks, which the Rust engines model gate-level).
+    w_final = _sext(ws + wc, width)
+    negr = w_final < 0
+    rem = jnp.where(negr, w_final + d_fp, w_final)
+    q_ref[...] = jnp.where(negr, qd, q)
+    sticky_ref[...] = (rem != 0).astype(jnp.int64)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "block"))
+def fraction_divide(x_sig, d_sig, n: int, block: int = BLOCK):
+    """Divide significand batches: returns (q_mag, sticky).
+
+    q_mag has 2*It - 2 fraction bits; value in (1/2, 2). Exactly the Rust
+    `FracQuotient` of the `Srt4CsOfFr` engine.
+    """
+    assert 8 <= n <= 32, "kernel supports Posit8..Posit32 (int64 datapath)"
+    (lanes,) = x_sig.shape
+    assert lanes % block == 0, f"batch {lanes} not a multiple of block {block}"
+    grid = lanes // block
+
+    # Eq. (28) divisor truncation: 4 MSBs of d in [1/2,1) -> index 8..15;
+    # compute each lane's m_k threshold row before entering the kernel
+    # (the hardware's d-hat-indexed PLA, evaluated once per division).
+    f = frac_bits(n)
+    d64 = d_sig.astype(jnp.int64)
+    dhat = (d64 >> (f - 3)) - 8
+    m_lane = jnp.stack(selection_thresholds(dhat), axis=-1)  # (lanes, 4)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, n=n),
+        out_shape=(
+            jax.ShapeDtypeStruct((lanes,), jnp.int64),
+            jax.ShapeDtypeStruct((lanes,), jnp.int64),
+        ),
+        in_specs=(
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block, 4), lambda i: (i, 0)),
+        ),
+        out_specs=(
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ),
+        grid=(grid,),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(x_sig.astype(jnp.int64), d64, m_lane)
+    return out

@@ -1,0 +1,73 @@
+"""L2: the batched posit-division compute graph.
+
+decode (jnp) -> radix-4 SRT fraction recurrence (the L1 Pallas kernel) ->
+normalize + round + encode (jnp), with full special-case handling. One
+`jax.jit`-able function per (format, batch) pair; `aot.py` lowers it to
+HLO text once, and the Rust runtime executes it via PJRT with Python
+nowhere on the request path.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import posit_codec as codec
+from .kernels import ref
+from .kernels import srt_div
+
+jax.config.update("jax_enable_x64", True)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "use_kernel", "block"))
+def divide_batch(x_bits, d_bits, n: int, use_kernel: bool = True, block: int = srt_div.BLOCK):
+    """Posit division of two int batches of n-bit patterns.
+
+    Returns int64 lanes holding the n-bit quotient patterns. `use_kernel`
+    selects the Pallas recurrence (the system under test) vs the pure-jnp
+    exact oracle (the reference graph used in A/B tests).
+    """
+    f = codec.frac_bits(n)
+    xz, xn, xs, xscale, xsig = codec.decode(x_bits, n)
+    dz, dn, ds, dscale, dsig = codec.decode(d_bits, n)
+
+    if use_kernel:
+        q_mag, sticky = srt_div.fraction_divide(xsig, dsig, n, block)
+        qfb = 2 * srt_div.iterations(n) - 2
+    else:
+        q_mag, sticky = ref.fraction_divide(xsig, dsig, n)
+        qfb = n
+
+    # Normalization (Fig. 2): q in (1/2, 2) -> [1, 2), adjusting the scale.
+    t = xscale - dscale
+    ge_one = (q_mag >> qfb) != 0
+    scale = jnp.where(ge_one, t, t - 1)
+    sfb = jnp.where(ge_one, qfb, qfb - 1)
+    # common fixed sfb for the encoder: shift lanes so the hidden bit sits
+    # at position qfb for all of them (value doubled where q < 1, which the
+    # scale decrement exactly compensates)
+    mag_norm = jnp.where(ge_one, q_mag, q_mag << 1)
+    del sfb
+
+    # The encoder's pattern frame needs qfb <= 62 - n; refine precision to
+    # F+1 fraction bits below the hidden one (enough for any rounding
+    # position) and fold the rest into sticky.
+    keep = f + 1
+    drop = qfb - keep
+    assert drop >= 0
+    sticky = sticky | ((mag_norm & ((1 << drop) - 1)) != 0) if drop else sticky
+    mag_kept = mag_norm >> drop
+
+    q = codec.encode(xs ^ ds, scale, mag_kept, keep, sticky, n)
+
+    # Special cases (paper Eqs. (3)-(6)): NaR if either input is NaR or the
+    # divisor is zero; zero if the dividend is zero.
+    nar = xn | dn | dz
+    q = jnp.where(xz, 0, q)
+    q = jnp.where(nar, 1 << (n - 1), q)
+    return q
+
+
+def reference_divide(x_bits, d_bits, n: int):
+    """The A/B reference graph (exact oracle, no Pallas)."""
+    return divide_batch(x_bits, d_bits, n, use_kernel=False)

@@ -1,0 +1,90 @@
+"""Codec tests: the jnp posit decode/encode must agree with itself
+(round-trip) and with hand-computed patterns, over *every* pattern for
+small widths and property-sampled patterns for wide ones."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import posit_codec as codec
+
+
+def all_patterns(n):
+    return np.arange(1 << n, dtype=np.int64)
+
+
+@pytest.mark.parametrize("n", [8, 10, 12, 16])
+def test_roundtrip_exhaustive(n):
+    bits = all_patterns(n)
+    z, na, s, sc, sig = codec.decode(bits, n)
+    enc = codec.encode(s, sc, sig, codec.frac_bits(n), jnp.zeros(bits.shape, bool), n)
+    real = ~(np.array(z) | np.array(na))
+    np.testing.assert_array_equal(np.array(enc)[real], bits[real])
+
+
+@pytest.mark.parametrize("n", [8, 16, 32])
+def test_specials(n):
+    bits = np.array([0, 1 << (n - 1)], dtype=np.int64)
+    z, na, _, _, _ = codec.decode(bits, n)
+    assert np.array(z).tolist() == [True, False]
+    assert np.array(na).tolist() == [False, True]
+
+
+def test_known_values_p8():
+    # 1.0 = 0|10|00|000; 1.5 = 0|10|00|100; 0.5 = 0|01|11|000 (k=-1,e=3)
+    bits = np.array([0b01000000, 0b01000100, 0b00111000, 0b01111111, 1], dtype=np.int64)
+    _, _, s, sc, sig = codec.decode(bits, 8)
+    f = codec.frac_bits(8)
+    vals = np.array(sig, dtype=float) / (1 << f) * 2.0 ** np.array(sc, dtype=float)
+    np.testing.assert_allclose(vals, [1.0, 1.5, 0.5, 2.0**24, 2.0**-24])
+
+
+def test_encode_saturates():
+    n = 16
+    ones = jnp.ones((4,), jnp.int64)
+    big = codec.encode(
+        jnp.zeros((4,), bool), jnp.asarray([400, 60, -400, -60]), ones << codec.frac_bits(n),
+        codec.frac_bits(n), jnp.zeros((4,), bool), n,
+    )
+    maxpos = (1 << (n - 1)) - 1
+    assert np.array(big).tolist() == [maxpos, maxpos, 1, 1]
+
+
+def test_encode_never_zero_or_nar():
+    n = 10
+    rng = np.random.default_rng(7)
+    sc = rng.integers(-40, 40, size=4096)
+    f = codec.frac_bits(n)
+    sig = (1 << f) | rng.integers(0, 1 << f, size=4096)
+    sign = rng.integers(0, 2, size=4096).astype(bool)
+    enc = np.array(
+        codec.encode(jnp.asarray(sign), jnp.asarray(sc), jnp.asarray(sig), f,
+                     jnp.ones((4096,), bool), n)
+    )
+    assert (enc != 0).all()
+    assert (enc != 1 << (n - 1)).all()
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(0, (1 << 32) - 1))
+def test_roundtrip_p32_sampled(pattern):
+    n = 32
+    bits = np.array([pattern], dtype=np.int64)
+    z, na, s, sc, sig = codec.decode(bits, n)
+    if bool(np.array(z)[0]) or bool(np.array(na)[0]):
+        return
+    enc = codec.encode(s, sc, sig, codec.frac_bits(n), jnp.zeros((1,), bool), n)
+    assert int(np.array(enc)[0]) == pattern
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(6, 30), st.data())
+def test_roundtrip_arbitrary_widths(n, data):
+    pattern = data.draw(st.integers(0, (1 << n) - 1))
+    bits = np.array([pattern], dtype=np.int64)
+    z, na, s, sc, sig = codec.decode(bits, n)
+    if bool(np.array(z)[0]) or bool(np.array(na)[0]):
+        return
+    enc = codec.encode(s, sc, sig, codec.frac_bits(n), jnp.zeros((1,), bool), n)
+    assert int(np.array(enc)[0]) == pattern

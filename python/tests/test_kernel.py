@@ -1,0 +1,113 @@
+"""Kernel-vs-oracle: the Pallas radix-4 SRT recurrence must reproduce the
+exact integer division oracle bit-for-bit — the core L1 correctness
+signal, swept across formats, block shapes and adversarial operands."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import posit_codec as codec
+from compile.kernels import ref, srt_div
+
+
+def rand_sigs(rng, n, lanes):
+    f = codec.frac_bits(n)
+    return (
+        ((1 << f) | rng.integers(0, 1 << f, size=lanes)).astype(np.int64),
+        ((1 << f) | rng.integers(0, 1 << f, size=lanes)).astype(np.int64),
+    )
+
+
+def check(xs, ds, n, block=srt_div.BLOCK):
+    qk, st_ = srt_div.fraction_divide(jnp.asarray(xs), jnp.asarray(ds), n, block)
+    qfb = 2 * srt_div.iterations(n) - 2
+    qr, sr = ref.fraction_divide(jnp.asarray(xs), jnp.asarray(ds), n)
+    qr, sr = ref.refine(qr, sr, n, qfb)
+    np.testing.assert_array_equal(np.array(qk), np.array(qr))
+    np.testing.assert_array_equal(np.array(st_).astype(bool), np.array(sr))
+
+
+@pytest.mark.parametrize("n", [8, 16, 24, 32])
+def test_kernel_equals_oracle_random(n):
+    rng = np.random.default_rng(n)
+    for _ in range(8):
+        xs, ds = rand_sigs(rng, n, 256)
+        check(xs, ds, n)
+
+
+@pytest.mark.parametrize("block", [64, 128, 256])
+def test_block_shapes_equivalent(block):
+    n = 16
+    rng = np.random.default_rng(99)
+    xs, ds = rand_sigs(rng, n, 1024)
+    check(xs, ds, n, block)
+
+
+@pytest.mark.parametrize("n", [16, 32])
+def test_adversarial_operands(n):
+    f = codec.frac_bits(n)
+    one = 1 << f
+    top = (1 << (f + 1)) - 1
+    cases = [
+        (one, one),          # exact 1.0
+        (top, top),          # exact 1.0 with max fractions
+        (one, top),          # q slightly above 1/2
+        (top, one),          # q slightly below 2
+        (one, one | 1),      # long non-terminating quotient
+        (one | 1, one),      # exact in few bits
+        (one | (1 << (f - 1)), one | (1 << (f - 1)) | 1),
+        (3 << (f - 1), one), # 1.5 / 1.0
+    ]
+    lanes = srt_div.BLOCK
+    reps = (lanes + len(cases) - 1) // len(cases)
+    arr = (cases * reps)[:lanes]
+    xs = np.array([c[0] for c in arr], dtype=np.int64)
+    ds = np.array([c[1] for c in arr], dtype=np.int64)
+    check(xs, ds, n)
+
+
+def test_exact_divisions_have_clear_sticky():
+    n = 16
+    f = codec.frac_bits(n)
+    lanes = srt_div.BLOCK
+    # x = d * small power of two fractions: q exact
+    ds = np.full(lanes, (1 << f) | (1 << (f - 1)), dtype=np.int64)  # 1.5
+    xs = ds.copy()  # q = 1 exactly
+    _, st_ = srt_div.fraction_divide(jnp.asarray(xs), jnp.asarray(ds), n)
+    assert not np.array(st_).astype(bool).any()
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_kernel_oracle_hypothesis_p16(data):
+    n = 16
+    f = codec.frac_bits(n)
+    lanes = srt_div.BLOCK
+    frac = st.integers(0, (1 << f) - 1)
+    xs = np.array(data.draw(st.lists(frac, min_size=lanes, max_size=lanes)), dtype=np.int64)
+    ds = np.array(data.draw(st.lists(frac, min_size=lanes, max_size=lanes)), dtype=np.int64)
+    check((1 << f) | xs, (1 << f) | ds, n)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, (1 << 27) - 1), st.integers(0, (1 << 27) - 1))
+def test_kernel_oracle_hypothesis_p32_scalarish(xf, df):
+    n = 32
+    f = codec.frac_bits(n)
+    lanes = srt_div.BLOCK
+    xs = np.full(lanes, (1 << f) | xf, dtype=np.int64)
+    ds = np.full(lanes, (1 << f) | df, dtype=np.int64)
+    check(xs, ds, n)
+
+
+def test_quotient_always_normalizable():
+    # q in (1/2, 2): top two bits of the result must not both be zero.
+    n = 16
+    rng = np.random.default_rng(5)
+    xs, ds = rand_sigs(rng, n, 512)
+    qk, _ = srt_div.fraction_divide(jnp.asarray(xs), jnp.asarray(ds), n)
+    qfb = 2 * srt_div.iterations(n) - 2
+    q = np.array(qk)
+    assert (q >> (qfb - 1) != 0).all()
+    assert (q >> (qfb + 1) == 0).all()

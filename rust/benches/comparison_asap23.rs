@@ -1,0 +1,44 @@
+//! Bench: the §IV comparison against [14] (ASAP'23 two's-complement NRD):
+//! hardware-model deltas plus measured software-engine latency deltas
+//! (the extra iteration of [14] is real and measurable).
+
+use posit_div::bench::{bench_batched, Config};
+use posit_div::division::Algorithm;
+use posit_div::hardware::{report, TSMC28};
+use posit_div::posit::{mask, Posit};
+use posit_div::testkit::Rng;
+
+fn main() {
+    print!("{}", report::render_asap23(&TSMC28));
+    println!("\npaper reference points: NRD ≈ -7% area, -4.2%..-21.5% delay;");
+    println!("SRT-CS delay -40.6/-62.1/-75.6%, area +16.8/13.8/12%, energy -50.2/-70.9/-81.4%\n");
+
+    let mut rng = Rng::seeded(14);
+    for n in [16u32, 32, 64] {
+        let pairs: Vec<(Posit, Posit)> = (0..256)
+            .map(|_| {
+                (
+                    Posit::from_bits(n, rng.next_u64() & mask(n)),
+                    Posit::from_bits(n, (rng.next_u64() & mask(n)) | 1),
+                )
+            })
+            .collect();
+        let time = |alg: Algorithm| {
+            let e = alg.engine();
+            bench_batched(alg.label(), Config::default(), pairs.len() as u64, || {
+                for &(x, d) in &pairs {
+                    posit_div::bench::black_box(e.divide(x, d).result);
+                }
+            })
+            .per_op
+        };
+        let ours = time(Algorithm::Nrd);
+        let theirs = time(Algorithm::NrdAsap23);
+        println!(
+            "Posit{n}: NRD {:?}/div vs NRD[14] {:?}/div ({:+.1}% software latency)",
+            ours,
+            theirs,
+            (ours.as_secs_f64() / theirs.as_secs_f64() - 1.0) * 100.0
+        );
+    }
+}

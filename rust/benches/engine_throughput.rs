@@ -1,0 +1,39 @@
+//! Measured software throughput of every division engine at every format —
+//! the L3 perf baseline tracked in EXPERIMENTS.md §Perf.
+
+use posit_div::bench::{bench_batched, Config, Runner};
+use posit_div::division::Algorithm;
+use posit_div::posit::{mask, Posit};
+use posit_div::testkit::Rng;
+
+fn main() {
+    let mut runner = Runner::new("engine throughput (div/s), 256-pair working set");
+    let mut rng = Rng::seeded(0xB21C);
+    for n in [8u32, 16, 32, 64] {
+        let pairs: Vec<(Posit, Posit)> = (0..256)
+            .map(|_| {
+                (
+                    Posit::from_bits(n, rng.next_u64() & mask(n)),
+                    Posit::from_bits(n, (rng.next_u64() & mask(n)) | 1),
+                )
+            })
+            .collect();
+        for alg in Algorithm::ALL {
+            if alg.radix() == Some(4) && n < 8 {
+                continue;
+            }
+            let e = alg.engine();
+            runner.add(bench_batched(
+                &format!("Posit{n:<2} {}", e.name()),
+                Config::default(),
+                pairs.len() as u64,
+                || {
+                    for &(x, d) in &pairs {
+                        posit_div::bench::black_box(e.divide(x, d).result);
+                    }
+                },
+            ));
+        }
+    }
+    runner.finish();
+}

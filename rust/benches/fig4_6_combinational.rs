@@ -1,0 +1,15 @@
+//! Bench: Figs. 4–6 — combinational synthesis sweeps (area / delay /
+//! power / energy) for all Table IV designs at Posit16/32/64, from the
+//! 28 nm unit-gate model.
+
+use posit_div::hardware::{report, Mode, TSMC28};
+
+fn main() {
+    for n in report::FORMATS {
+        println!("{}", report::render_figure(n, Mode::Combinational, &TSMC28));
+    }
+    println!("CSV:\n");
+    for n in report::FORMATS {
+        print!("{}", report::sweep_csv(n, Mode::Combinational, &TSMC28));
+    }
+}

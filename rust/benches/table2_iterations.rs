@@ -1,0 +1,62 @@
+//! Bench: Table II — iteration counts and pipelined latency, *measured*
+//! from the executing engines (not just the formula), plus wall-clock
+//! division rates per radix.
+
+use posit_div::bench::{bench_batched, Config, Runner};
+use posit_div::division::{iterations, latency_cycles, Algorithm, DivEngine};
+use posit_div::posit::{mask, Posit};
+use posit_div::testkit::Rng;
+
+fn main() {
+    println!("Table II — iterations and latency (measured from engines)");
+    println!(
+        "{:<8} {:>9} {:>11} {:>9} {:>11}",
+        "format", "r2 iters", "r2 latency", "r4 iters", "r4 latency"
+    );
+    for n in [16u32, 32, 64] {
+        let mut rng = Rng::seeded(n as u64);
+        let x = Posit::from_bits(n, rng.next_u64() & mask(n));
+        let d = Posit::from_bits(n, (rng.next_u64() & mask(n)) | 1);
+        let (x, d) = (x.abs().next_up(), d.abs().next_up()); // avoid specials
+        let r2 = Algorithm::Srt2Cs.engine().divide(x, d);
+        let r4 = Algorithm::Srt4Cs.engine().divide(x, d);
+        assert_eq!(r2.iterations, iterations(n, 2));
+        assert_eq!(r4.iterations, iterations(n, 4));
+        assert_eq!(r2.cycles, latency_cycles(n, Algorithm::Srt2Cs));
+        assert_eq!(r4.cycles, latency_cycles(n, Algorithm::Srt4Cs));
+        println!(
+            "Posit{:<4} {:>8} {:>11} {:>9} {:>11}",
+            n, r2.iterations, r2.cycles, r4.iterations, r4.cycles
+        );
+    }
+
+    // Wall-clock counterpart: the software engines' division rate tracks
+    // the iteration count.
+    let mut runner = Runner::new("software division rate (iterations dominate)");
+    let mut rng = Rng::seeded(42);
+    for n in [16u32, 32, 64] {
+        for alg in [Algorithm::Srt2Cs, Algorithm::Srt4Cs] {
+            let engine = alg.engine();
+            let pairs: Vec<(Posit, Posit)> = (0..256)
+                .map(|_| {
+                    (
+                        Posit::from_bits(n, rng.next_u64() & mask(n)),
+                        Posit::from_bits(n, (rng.next_u64() & mask(n)) | 1),
+                    )
+                })
+                .collect();
+            let m = bench_batched(
+                &format!("Posit{n} {}", engine.name()),
+                Config::default(),
+                pairs.len() as u64,
+                || {
+                    for &(x, d) in &pairs {
+                        posit_div::bench::black_box(engine.divide(x, d).result);
+                    }
+                },
+            );
+            runner.add(m);
+        }
+    }
+    runner.finish();
+}

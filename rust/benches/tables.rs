@@ -1,0 +1,35 @@
+//! Bench target covering Tables I and III: live recomputation of the
+//! scaling-factor table and the termination/rounding worked examples.
+
+use posit_div::division::{scaling, Algorithm, DivEngine};
+use posit_div::posit::Posit;
+
+fn main() {
+    println!("Table I (scaling factors, radix-4 a=2):");
+    for idx in 0..8 {
+        let (s1, s2) = scaling::COMPONENTS[idx];
+        println!(
+            "  d=0.1{:03b}xxx  M={:<6} components: 1 + 1/{}{}",
+            idx,
+            scaling::M8[idx] as f64 / 8.0,
+            1u32 << s1,
+            if s2 != 0 { format!(" + 1/{}", 1u32 << s2) } else { String::new() }
+        );
+    }
+
+    println!("\nTable III (Posit10 termination/rounding examples):");
+    let engine = Algorithm::Srt4CsOfFr.engine();
+    let x = Posit::from_bits(10, 0b0011010111);
+    for (d_bits, expect) in [(0b0001001100u64, 0b0110011111u64), (0b0000100110, 0b0111010000)] {
+        let d = Posit::from_bits(10, d_bits);
+        let q = engine.divide(x, d).result;
+        println!(
+            "  X=0011010111 D={:010b} -> Q={:010b} (paper {:010b}) {}",
+            d_bits,
+            q.to_bits(),
+            expect,
+            if q.to_bits() == expect { "MATCH" } else { "MISMATCH" }
+        );
+        assert_eq!(q.to_bits(), expect);
+    }
+}

@@ -1,0 +1,175 @@
+//! Micro-benchmark substrate (criterion is unavailable offline).
+//!
+//! Adaptive-iteration timing with warmup, outlier-robust statistics
+//! (median of sample means), and an aligned-table reporter. Used by every
+//! `cargo bench` target (all declared `harness = false`).
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    /// Mean time per operation (median across samples).
+    pub per_op: Duration,
+    /// Operations per second.
+    pub ops_per_sec: f64,
+    pub samples: usize,
+    pub iters_per_sample: u64,
+}
+
+/// Benchmark configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub warmup: Duration,
+    pub sample_time: Duration,
+    pub samples: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            warmup: Duration::from_millis(100),
+            sample_time: Duration::from_millis(60),
+            samples: 7,
+        }
+    }
+}
+
+impl Config {
+    /// Faster settings for long-running end-to-end benches.
+    pub fn quick() -> Config {
+        Config {
+            warmup: Duration::from_millis(30),
+            sample_time: Duration::from_millis(30),
+            samples: 3,
+        }
+    }
+}
+
+/// Time `op` (which performs `batch` logical operations per call).
+pub fn bench_batched<F: FnMut()>(name: &str, cfg: Config, batch: u64, mut op: F) -> Measurement {
+    // Warmup + calibration: how many calls fit in sample_time?
+    let w0 = Instant::now();
+    let mut calls = 0u64;
+    while w0.elapsed() < cfg.warmup {
+        op();
+        calls += 1;
+    }
+    let per_call = cfg.warmup.as_secs_f64() / calls.max(1) as f64;
+    let iters = ((cfg.sample_time.as_secs_f64() / per_call).ceil() as u64).max(1);
+
+    let mut means: Vec<f64> = Vec::with_capacity(cfg.samples);
+    for _ in 0..cfg.samples {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            op();
+        }
+        means.push(t0.elapsed().as_secs_f64() / (iters * batch) as f64);
+    }
+    means.sort_by(|a, b| a.total_cmp(b));
+    let median = means[means.len() / 2];
+    Measurement {
+        name: name.to_string(),
+        per_op: Duration::from_secs_f64(median),
+        ops_per_sec: 1.0 / median,
+        samples: cfg.samples,
+        iters_per_sample: iters,
+    }
+}
+
+/// Time a single-op closure.
+pub fn bench<F: FnMut()>(name: &str, cfg: Config, op: F) -> Measurement {
+    bench_batched(name, cfg, 1, op)
+}
+
+/// Collects measurements and renders an aligned report.
+#[derive(Default)]
+pub struct Runner {
+    pub rows: Vec<Measurement>,
+    title: String,
+}
+
+impl Runner {
+    pub fn new(title: &str) -> Runner {
+        Runner { rows: Vec::new(), title: title.to_string() }
+    }
+
+    pub fn add(&mut self, m: Measurement) {
+        println!("  measured {:<40} {:>12.2?}/op {:>14.0} op/s", m.name, m.per_op, m.ops_per_sec);
+        self.rows.push(m);
+    }
+
+    pub fn run<F: FnMut()>(&mut self, name: &str, cfg: Config, op: F) {
+        let m = bench(name, cfg, op);
+        self.add(m);
+    }
+
+    pub fn report(&self) -> String {
+        let mut out = format!("\n== {} ==\n{:<42} {:>14} {:>16}\n", self.title, "benchmark", "time/op", "ops/s");
+        for m in &self.rows {
+            out.push_str(&format!(
+                "{:<42} {:>14.2?} {:>16.0}\n",
+                m.name, m.per_op, m.ops_per_sec
+            ));
+        }
+        out
+    }
+
+    pub fn finish(&self) {
+        print!("{}", self.report());
+    }
+}
+
+/// A compiler fence so the optimizer cannot delete benchmarked work.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let cfg = Config {
+            warmup: Duration::from_millis(5),
+            sample_time: Duration::from_millis(5),
+            samples: 3,
+        };
+        let mut acc = 0u64;
+        let m = bench("noop-ish", cfg, || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(m.per_op < Duration::from_micros(10));
+        assert!(m.ops_per_sec > 1e5);
+    }
+
+    #[test]
+    fn batched_accounting() {
+        let cfg = Config {
+            warmup: Duration::from_millis(5),
+            sample_time: Duration::from_millis(5),
+            samples: 3,
+        };
+        let m = bench_batched("batch", cfg, 1000, || {
+            std::hint::black_box((0..1000u64).sum::<u64>());
+        });
+        // per-op must be ~1/1000 of the call time
+        assert!(m.per_op < Duration::from_micros(1));
+    }
+
+    #[test]
+    fn runner_report_contains_rows() {
+        let mut r = Runner::new("t");
+        r.add(Measurement {
+            name: "x".into(),
+            per_op: Duration::from_nanos(10),
+            ops_per_sec: 1e8,
+            samples: 1,
+            iters_per_sample: 1,
+        });
+        assert!(r.report().contains("x"));
+    }
+}

@@ -1,0 +1,101 @@
+//! Minimal command-line argument parser (clap is unavailable offline).
+//!
+//! Grammar: `prog <subcommand> [positional...] [--flag[=| ]value] [--switch]`.
+
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (first token = subcommand).
+    pub fn parse_from<I: IntoIterator<Item = String>>(tokens: I) -> Args {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|p| !p.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    args.flags.insert(name.to_string(), v);
+                } else {
+                    args.flags.insert(name.to_string(), "true".to_string());
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    /// Parse from the process arguments.
+    pub fn parse() -> Args {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    /// Typed flag with default; exits with a message on parse failure.
+    pub fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        match self.flags.get(name) {
+            None => default,
+            Some(v) => v.parse().unwrap_or_else(|_| {
+                eprintln!("invalid value for --{name}: {v:?}");
+                std::process::exit(2);
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = parse("serve x y");
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.positional, vec!["x", "y"]);
+    }
+
+    #[test]
+    fn flags_with_values() {
+        let a = parse("synth --n 32 --mode=pipe --csv");
+        assert_eq!(a.get("n", 0u32), 32);
+        assert_eq!(a.flag("mode"), Some("pipe"));
+        assert!(a.has("csv"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn switch_before_positional_is_greedy() {
+        // documented behavior: `--flag value` consumes the next token
+        let a = parse("run --threads 8 trailing");
+        assert_eq!(a.get("threads", 0u32), 8);
+        assert_eq!(a.positional, vec!["trailing"]);
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = parse("x");
+        assert_eq!(a.get("missing", 7u64), 7);
+    }
+}

@@ -1,0 +1,92 @@
+//! Dynamic batcher: collects division requests into batches bounded by
+//! size and age — the standard serving-system policy (first request in a
+//! batch waits at most `max_wait`; a full batch flushes immediately).
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Batching policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 256, max_wait: Duration::from_micros(200) }
+    }
+}
+
+/// Drain `rx` into a batch according to `policy`. Blocks for the first
+/// item (or returns None when the channel is closed), then fills until
+/// the batch is full or the deadline passes.
+pub fn collect_batch<T>(rx: &Receiver<T>, policy: BatchPolicy) -> Option<Vec<T>> {
+    let first = rx.recv().ok()?;
+    let deadline = Instant::now() + policy.max_wait;
+    let mut batch = Vec::with_capacity(policy.max_batch);
+    batch.push(first);
+    while batch.len() < policy.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(item) => batch.push(item),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn full_batch_flushes_without_waiting() {
+        let (tx, rx) = channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(10) };
+        let t0 = Instant::now();
+        let b = collect_batch(&rx, policy).unwrap();
+        assert_eq!(b, vec![0, 1, 2, 3]);
+        assert!(t0.elapsed() < Duration::from_secs(1), "must not wait when full");
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let (tx, rx) = channel();
+        tx.send(42).unwrap();
+        let policy = BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(20) };
+        let t0 = Instant::now();
+        let b = collect_batch(&rx, policy).unwrap();
+        assert_eq!(b, vec![42]);
+        let e = t0.elapsed();
+        assert!(e >= Duration::from_millis(15), "waited for the deadline: {e:?}");
+        drop(tx);
+    }
+
+    #[test]
+    fn closed_channel_returns_none() {
+        let (tx, rx) = channel::<u32>();
+        drop(tx);
+        assert!(collect_batch(&rx, BatchPolicy::default()).is_none());
+    }
+
+    #[test]
+    fn drains_remaining_after_close() {
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        drop(tx);
+        let b = collect_batch(&rx, BatchPolicy { max_batch: 10, max_wait: Duration::from_millis(5) })
+            .unwrap();
+        assert_eq!(b, vec![1, 2]);
+        assert!(collect_batch(&rx, BatchPolicy::default()).is_none());
+    }
+}

@@ -1,0 +1,141 @@
+//! Service metrics: counters and a log-bucketed latency histogram
+//! (hand-rolled — no external metrics crates in the offline build).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Power-of-two-bucketed latency histogram, lock-free on the record path.
+/// Bucket i counts samples in [2^i, 2^(i+1)) nanoseconds, i < 48.
+pub struct Histogram {
+    buckets: [AtomicU64; 48],
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, d: Duration) {
+        let ns = d.as_nanos().min(u64::MAX as u128) as u64;
+        let idx = (63 - ns.max(1).leading_zeros()).min(47) as usize;
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> Duration {
+        let c = self.count().max(1);
+        Duration::from_nanos(self.sum_ns.load(Ordering::Relaxed) / c)
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_nanos(self.max_ns.load(Ordering::Relaxed))
+    }
+
+    /// Approximate quantile from the bucket distribution (upper bound of
+    /// the bucket containing the q-th sample).
+    pub fn quantile(&self, q: f64) -> Duration {
+        let total = self.count();
+        if total == 0 {
+            return Duration::ZERO;
+        }
+        let target = ((total as f64) * q).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return Duration::from_nanos(1u64 << (i + 1));
+            }
+        }
+        self.max()
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "count={} mean={:?} p50<={:?} p99<={:?} max={:?}",
+            self.count(),
+            self.mean(),
+            self.quantile(0.50),
+            self.quantile(0.99),
+            self.max()
+        )
+    }
+}
+
+/// Aggregated service counters.
+#[derive(Default)]
+pub struct Metrics {
+    /// Per-request end-to-end latency (enqueue → response).
+    pub request_latency: Histogram,
+    /// Per-batch execution latency at the backend.
+    pub batch_latency: Histogram,
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub special_results: AtomicU64,
+}
+
+impl Metrics {
+    pub fn mean_batch_fill(&self, max_batch: usize) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed).max(1);
+        let r = self.requests.load(Ordering::Relaxed);
+        r as f64 / b as f64 / max_batch as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_monotone() {
+        let h = Histogram::new();
+        for i in 1..=1000u64 {
+            h.record(Duration::from_nanos(i * 100));
+        }
+        assert_eq!(h.count(), 1000);
+        assert!(h.quantile(0.5) <= h.quantile(0.99));
+        assert!(h.quantile(0.99) <= h.max() * 2);
+        assert!(h.mean().as_nanos() > 0);
+    }
+
+    #[test]
+    fn histogram_empty() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.99), Duration::ZERO);
+    }
+
+    #[test]
+    fn record_is_thread_safe() {
+        let h = std::sync::Arc::new(Histogram::new());
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let h = h.clone();
+                s.spawn(move || {
+                    for i in 0..10_000 {
+                        h.record(Duration::from_nanos(i));
+                    }
+                });
+            }
+        });
+        assert_eq!(h.count(), 80_000);
+    }
+}

@@ -1,0 +1,301 @@
+//! L3 coordinator: a batched posit-division service.
+//!
+//! The paper's contribution is the arithmetic unit, so the coordinator is
+//! the thin-but-real driver the architecture calls for: a leader thread
+//! owns a dynamic [`batcher`] (size + deadline policy) and a backend —
+//! either the native bit-exact Rust engines spread over a worker [`pool`],
+//! or the AOT-compiled JAX/Pallas graph executed through PJRT
+//! ([`crate::runtime`]). Clients submit `(x, d)` pairs and block on (or
+//! poll) a response channel; [`metrics`] tracks request/batch latency.
+//!
+//! Python never runs here: the PJRT backend executes the pre-compiled
+//! HLO artifact in-process.
+
+pub mod batcher;
+pub mod metrics;
+pub mod pool;
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::Result;
+
+pub use batcher::BatchPolicy;
+pub use metrics::{Histogram, Metrics};
+pub use pool::Pool;
+
+use crate::division::{Algorithm, DivEngine};
+use crate::posit::Posit;
+use crate::runtime::Runtime;
+
+/// Which execution engine serves the batches.
+#[derive(Clone, Debug)]
+pub enum Backend {
+    /// Bit-exact Rust digit-recurrence engines, `threads`-way parallel.
+    Native { alg: Algorithm, threads: usize },
+    /// AOT-compiled JAX/Pallas graph via PJRT (artifacts from `make artifacts`).
+    Pjrt { artifacts_dir: PathBuf },
+}
+
+/// Service configuration.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    pub n: u32,
+    pub backend: Backend,
+    pub policy: BatchPolicy,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            n: 32,
+            backend: Backend::Native { alg: Algorithm::Srt4CsOfFr, threads: 4 },
+            policy: BatchPolicy::default(),
+        }
+    }
+}
+
+struct Request {
+    x: u64,
+    d: u64,
+    enqueued: Instant,
+    respond: Sender<u64>,
+}
+
+/// A handle to a running division service.
+pub struct DivisionService {
+    n: u32,
+    tx: Option<Sender<Request>>,
+    metrics: Arc<Metrics>,
+    leader: Option<JoinHandle<()>>,
+}
+
+impl DivisionService {
+    /// Start the leader thread (and backend) for `cfg`.
+    pub fn start(cfg: ServiceConfig) -> Result<DivisionService> {
+        let (tx, rx) = channel::<Request>();
+        let metrics = Arc::new(Metrics::default());
+        let m = metrics.clone();
+        let n = cfg.n;
+
+        enum Exec {
+            Native { engine: Box<dyn DivEngine + Send + Sync>, pool_threads: usize },
+            Pjrt(Runtime),
+        }
+
+        // The PJRT client is thread-affine (Rc internally), so the backend
+        // is constructed *inside* the leader thread; a ready-channel
+        // surfaces startup errors to the caller synchronously.
+        let backend = cfg.backend.clone();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let policy = cfg.policy;
+        let leader = std::thread::Builder::new()
+            .name("posit-div-leader".into())
+            .spawn(move || {
+                let exec = match &backend {
+                    Backend::Native { alg, threads } => {
+                        Exec::Native { engine: alg.engine(), pool_threads: *threads }
+                    }
+                    Backend::Pjrt { artifacts_dir } => {
+                        match Runtime::load(artifacts_dir)
+                            .and_then(|rt| rt.warmup(n).map(|()| rt))
+                        {
+                            Ok(rt) => Exec::Pjrt(rt),
+                            Err(e) => {
+                                let _ = ready_tx.send(Err(e));
+                                return;
+                            }
+                        }
+                    }
+                };
+                let _ = ready_tx.send(Ok(()));
+                while let Some(batch) = batcher::collect_batch(&rx, policy) {
+                    let t0 = Instant::now();
+                    let results: Vec<u64> = match &exec {
+                        Exec::Native { engine, pool_threads } => {
+                            let chunk =
+                                batch.len().div_ceil((*pool_threads).max(1)).max(1);
+                            let pairs: Vec<(u64, u64)> =
+                                batch.iter().map(|r| (r.x, r.d)).collect();
+                            let mut out = vec![0u64; pairs.len()];
+                            std::thread::scope(|s| {
+                                for (inp, outp) in
+                                    pairs.chunks(chunk).zip(out.chunks_mut(chunk))
+                                {
+                                    s.spawn(|| {
+                                        for (i, o) in inp.iter().zip(outp.iter_mut()) {
+                                            *o = engine
+                                                .divide(
+                                                    Posit::from_bits(n, i.0),
+                                                    Posit::from_bits(n, i.1),
+                                                )
+                                                .result
+                                                .to_bits();
+                                        }
+                                    });
+                                }
+                            });
+                            out
+                        }
+                        Exec::Pjrt(rt) => {
+                            let x: Vec<u64> = batch.iter().map(|r| r.x).collect();
+                            let d: Vec<u64> = batch.iter().map(|r| r.d).collect();
+                            match rt.divide_bits(n, &x, &d) {
+                                Ok(q) => q,
+                                Err(e) => {
+                                    // fail the whole batch as NaR and keep
+                                    // serving (errors are per-batch)
+                                    eprintln!("pjrt batch failed: {e:#}");
+                                    vec![1u64 << (n - 1); batch.len()]
+                                }
+                            }
+                        }
+                    };
+                    m.batch_latency.record(t0.elapsed());
+                    m.batches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    for (req, q) in batch.into_iter().zip(results) {
+                        if q == 1u64 << (n - 1) {
+                            m.special_results
+                                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        }
+                        m.requests.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        m.request_latency.record(req.enqueued.elapsed());
+                        let _ = req.respond.send(q); // receiver may have gone
+                    }
+                }
+            })?;
+
+        ready_rx.recv().expect("leader thread died during startup")?;
+        Ok(DivisionService { n, tx: Some(tx), metrics, leader: Some(leader) })
+    }
+
+    /// Posit width served.
+    pub fn width(&self) -> u32 {
+        self.n
+    }
+
+    /// Submit a division; returns the response channel immediately.
+    pub fn submit(&self, x: Posit, d: Posit) -> Receiver<u64> {
+        assert_eq!(x.width(), self.n);
+        let (rtx, rrx) = channel();
+        self.tx
+            .as_ref()
+            .unwrap()
+            .send(Request { x: x.to_bits(), d: d.to_bits(), enqueued: Instant::now(), respond: rtx })
+            .expect("service stopped");
+        rrx
+    }
+
+    /// Blocking division.
+    pub fn divide(&self, x: Posit, d: Posit) -> Posit {
+        let bits = self.submit(x, d).recv().expect("service stopped");
+        Posit::from_bits(self.n, bits)
+    }
+
+    /// Submit many and wait for all (keeps ordering).
+    pub fn divide_many(&self, pairs: &[(Posit, Posit)]) -> Vec<Posit> {
+        let rxs: Vec<Receiver<u64>> =
+            pairs.iter().map(|&(x, d)| self.submit(x, d)).collect();
+        rxs.into_iter()
+            .map(|r| Posit::from_bits(self.n, r.recv().expect("service stopped")))
+            .collect()
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Stop accepting requests and join the leader.
+    pub fn shutdown(mut self) {
+        self.tx.take();
+        if let Some(h) = self.leader.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for DivisionService {
+    fn drop(&mut self) {
+        self.tx.take();
+        if let Some(h) = self.leader.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::division::golden;
+    use crate::posit::mask;
+    use crate::testkit::Rng;
+
+    fn native_cfg(n: u32) -> ServiceConfig {
+        ServiceConfig {
+            n,
+            backend: Backend::Native { alg: Algorithm::Srt4CsOfFr, threads: 2 },
+            policy: BatchPolicy { max_batch: 64, max_wait: std::time::Duration::from_micros(100) },
+        }
+    }
+
+    #[test]
+    fn native_service_matches_golden() {
+        let svc = DivisionService::start(native_cfg(16)).unwrap();
+        let mut rng = Rng::seeded(0xE2E);
+        let pairs: Vec<(Posit, Posit)> = (0..500)
+            .map(|_| {
+                (
+                    Posit::from_bits(16, rng.next_u64() & mask(16)),
+                    Posit::from_bits(16, rng.next_u64() & mask(16)),
+                )
+            })
+            .collect();
+        let got = svc.divide_many(&pairs);
+        for (i, &(x, d)) in pairs.iter().enumerate() {
+            assert_eq!(got[i], golden::divide(x, d).result, "{x:?}/{d:?}");
+        }
+        assert!(svc.metrics().requests.load(std::sync::atomic::Ordering::Relaxed) >= 500);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn service_handles_specials() {
+        let svc = DivisionService::start(native_cfg(16)).unwrap();
+        let n = 16;
+        assert!(svc.divide(Posit::one(n), Posit::zero(n)).is_nar());
+        assert!(svc.divide(Posit::zero(n), Posit::one(n)).is_zero());
+        assert!(svc.divide(Posit::nar(n), Posit::one(n)).is_nar());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let svc = std::sync::Arc::new(DivisionService::start(native_cfg(32)).unwrap());
+        std::thread::scope(|s| {
+            for t in 0..8 {
+                let svc = svc.clone();
+                s.spawn(move || {
+                    let mut rng = Rng::seeded(t);
+                    for _ in 0..200 {
+                        let x = Posit::from_bits(32, rng.next_u64() & mask(32));
+                        let d = Posit::from_bits(32, rng.next_u64() & mask(32));
+                        let q = svc.divide(x, d);
+                        assert_eq!(q, golden::divide(x, d).result);
+                    }
+                });
+            }
+        });
+        assert!(svc.metrics().batches.load(std::sync::atomic::Ordering::Relaxed) > 0);
+    }
+
+    #[test]
+    fn shutdown_drains() {
+        let svc = DivisionService::start(native_cfg(16)).unwrap();
+        let rx = svc.submit(Posit::one(16), Posit::one(16));
+        svc.shutdown();
+        assert_eq!(rx.recv().unwrap(), Posit::one(16).to_bits());
+    }
+}

@@ -1,0 +1,358 @@
+//! Carry-save (redundant) arithmetic for the residual datapath.
+//!
+//! The paper's first optimization (§III-B1) keeps the partial remainder as
+//! a sum/carry pair so each iteration's `rw(i) − d·q_{i+1}` is a single 3:2
+//! compressor (O(1) depth) instead of a carry-propagate subtraction
+//! (O(log n) depth). This module models the CS words exactly as the
+//! hardware holds them: two's-complement words of a fixed datapath width,
+//! wrapping modulo 2^W — any width shortfall would corrupt results and be
+//! caught by the golden-model tests.
+//!
+//! It also implements the §III-B2 optimization: *sign and zero detection
+//! lookahead* over a CS pair, without converting to conventional form —
+//! the zero detector is the classic gate identity `a+b ≡ 0 (mod 2^W) ⇔
+//! (a⊕b) = ((a∨b)≪1)`, and the sign detector is a Kogge–Stone carry
+//! lookahead into the MSB. Both are verified against plain addition.
+
+/// Mask with the low `w` bits set.
+#[inline]
+pub const fn wmask(w: u32) -> u128 {
+    if w >= 128 {
+        u128::MAX
+    } else {
+        (1u128 << w) - 1
+    }
+}
+
+/// Sign-extend the low `w` bits of `v` to i128.
+#[inline]
+pub const fn sext(v: u128, w: u32) -> i128 {
+    ((v << (128 - w)) as i128) >> (128 - w)
+}
+
+/// A carry-save pair: value = (s + c) mod 2^w, two's complement.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CsPair {
+    pub s: u128,
+    pub c: u128,
+    pub w: u32,
+}
+
+impl CsPair {
+    /// Non-redundant initial value (c = 0), e.g. `ws(0) = x/2, wc(0) = 0`.
+    pub fn from_value(v: i128, w: u32) -> Self {
+        CsPair { s: (v as u128) & wmask(w), c: 0, w }
+    }
+
+    /// 3:2 compress with a third addend and an injected carry-in bit.
+    ///
+    /// Computes `(s + c + add + cin) mod 2^w` in redundant form:
+    /// `s' = s ⊕ c ⊕ add`, `c' = majority(s,c,add) ≪ 1 | cin`. The LSB of
+    /// the shifted carry word is always free, which is where the hardware
+    /// injects the +1 of a two's-complement subtraction.
+    #[inline]
+    pub fn csa(self, add: u128, cin: bool) -> Self {
+        let m = wmask(self.w);
+        let sum = self.s ^ self.c ^ (add & m);
+        let maj = (self.s & self.c) | (self.s & add) | (self.c & add);
+        CsPair { s: sum & m, c: ((maj << 1) | cin as u128) & m, w: self.w }
+    }
+
+    /// Left shift both words (the `r·w(i)` step), dropping overflow bits —
+    /// exactly what the wired shift does in hardware.
+    #[inline]
+    pub fn shl(self, k: u32) -> Self {
+        let m = wmask(self.w);
+        CsPair { s: (self.s << k) & m, c: (self.c << k) & m, w: self.w }
+    }
+
+    /// Convert to conventional two's complement (the slow CPA the redundant
+    /// representation avoids in the loop; used at termination).
+    #[inline]
+    pub fn resolve(self) -> i128 {
+        sext(self.s.wrapping_add(self.c) & wmask(self.w), self.w)
+    }
+
+    /// Truncated estimate: `⌊s/2^drop⌋ + ⌊c/2^drop⌋` computed by a narrow
+    /// `(w − drop)`-bit adder whose carry-out is discarded, exactly like
+    /// the selection hardware: each word truncated *separately* (estimate
+    /// error < 2·2^−t), slices added modulo `2^(w−drop)` and reinterpreted
+    /// as two's complement. The wrap is lossless because the true shifted
+    /// residual always fits the slice range.
+    #[inline]
+    pub fn estimate(self, drop: u32) -> i64 {
+        let bits = self.w - drop;
+        debug_assert!(bits <= 63, "estimate slice wider than i64");
+        let sum = (self.s >> drop).wrapping_add(self.c >> drop);
+        sext(sum & wmask(bits), bits) as i64
+    }
+
+    /// Zero detection without carry propagation (§III-B2):
+    /// `s + c ≡ 0 (mod 2^w)` ⇔ `(s ⊕ c) = ((s ∨ c) ≪ 1)` (within w bits).
+    #[inline]
+    pub fn is_zero_lookahead(self) -> bool {
+        let m = wmask(self.w);
+        (self.s ^ self.c) == ((self.s | self.c) << 1) & m
+    }
+
+    /// Sign detection via Kogge–Stone carry lookahead into the MSB — the
+    /// log-depth network the FR optimization builds instead of a full CPA.
+    pub fn sign_lookahead(self) -> bool {
+        let w = self.w;
+        let m = wmask(w);
+        let a = self.s & m;
+        let b = self.c & m;
+        // generate/propagate per bit
+        let mut g = a & b;
+        let mut p = a ^ b;
+        // parallel-prefix: after ⌈log2 w⌉ doublings, g holds the carry
+        // *out of* each position i (into position i+1).
+        let mut span = 1;
+        while span < w {
+            g |= p & (g << span);
+            p &= p << span;
+            span <<= 1;
+        }
+        // carry into MSB = carry out of bit w-2
+        let carry_in_msb = (g >> (w - 2)) & 1;
+        let msb = ((a ^ b) >> (w - 1)) & 1;
+        (msb ^ carry_in_msb) & 1 == 1
+    }
+
+    /// Zero detection of `s + c + add` (three-input): one CSA level feeds
+    /// the two-input lookahead. Used for the sticky bit of a corrected
+    /// remainder (`w(It) + d`).
+    #[inline]
+    pub fn is_zero_with_addend(self, add: u128) -> bool {
+        self.csa(add, false).is_zero_lookahead()
+    }
+}
+
+
+/// Narrow (u64) carry-save pair for datapaths that fit a machine word
+/// (width ≤ 64 covers every format up to Posit62 on the radix-4 path) —
+/// the release-mode hot path; semantics identical to [`CsPair`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CsPair64 {
+    pub s: u64,
+    pub c: u64,
+    pub w: u32,
+}
+
+#[inline]
+pub const fn wmask64(w: u32) -> u64 {
+    if w >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << w) - 1
+    }
+}
+
+#[inline]
+pub const fn sext64(v: u64, w: u32) -> i64 {
+    ((v << (64 - w)) as i64) >> (64 - w)
+}
+
+impl CsPair64 {
+    #[inline]
+    pub fn from_value(v: i64, w: u32) -> Self {
+        CsPair64 { s: (v as u64) & wmask64(w), c: 0, w }
+    }
+
+    #[inline]
+    pub fn csa(self, add: u64, cin: bool) -> Self {
+        let m = wmask64(self.w);
+        let sum = self.s ^ self.c ^ (add & m);
+        let maj = (self.s & self.c) | (self.s & add) | (self.c & add);
+        CsPair64 { s: sum & m, c: ((maj << 1) | cin as u64) & m, w: self.w }
+    }
+
+    #[inline]
+    pub fn shl(self, k: u32) -> Self {
+        let m = wmask64(self.w);
+        CsPair64 { s: (self.s << k) & m, c: (self.c << k) & m, w: self.w }
+    }
+
+    #[inline]
+    pub fn resolve(self) -> i64 {
+        sext64(self.s.wrapping_add(self.c) & wmask64(self.w), self.w)
+    }
+
+    #[inline]
+    pub fn estimate(self, drop: u32) -> i64 {
+        let bits = self.w - drop;
+        let sum = (self.s >> drop).wrapping_add(self.c >> drop);
+        sext64(sum & wmask64(bits), bits)
+    }
+
+    #[inline]
+    pub fn is_zero_lookahead(self) -> bool {
+        let m = wmask64(self.w);
+        (self.s ^ self.c) == ((self.s | self.c) << 1) & m
+    }
+
+    #[inline]
+    pub fn sign_lookahead(self) -> bool {
+        // value-identical to the wide network (verified against resolve)
+        self.resolve() < 0
+    }
+
+    #[inline]
+    pub fn is_zero_with_addend(self, add: u64) -> bool {
+        self.csa(add, false).is_zero_lookahead()
+    }
+
+    /// Widen to the reference representation (tests).
+    pub fn widen(self) -> CsPair {
+        CsPair { s: self.s as u128, c: self.c as u128, w: self.w }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Rng;
+
+    fn rand_pair(rng: &mut Rng, w: u32) -> CsPair {
+        CsPair {
+            s: (rng.next_u64() as u128 | (rng.next_u64() as u128) << 64) & wmask(w),
+            c: (rng.next_u64() as u128 | (rng.next_u64() as u128) << 64) & wmask(w),
+            w,
+        }
+    }
+
+    #[test]
+    fn csa_preserves_value() {
+        let mut rng = Rng::seeded(0xC5A);
+        for _ in 0..50_000 {
+            let w = rng.range_inclusive(8, 100) as u32;
+            let p = rand_pair(&mut rng, w);
+            let add = (rng.next_u64() as u128) & wmask(w);
+            let cin = rng.chance(1, 2);
+            let q = p.csa(add, cin);
+            let want = (p.s.wrapping_add(p.c).wrapping_add(add).wrapping_add(cin as u128))
+                & wmask(w);
+            let got = q.s.wrapping_add(q.c) & wmask(w);
+            assert_eq!(got, want, "w={w} p={p:?} add={add:#x} cin={cin}");
+        }
+    }
+
+    #[test]
+    fn shl_matches_value_shift_mod_2w() {
+        let mut rng = Rng::seeded(0x511);
+        for _ in 0..20_000 {
+            let w = rng.range_inclusive(8, 100) as u32;
+            let p = rand_pair(&mut rng, w);
+            let k = rng.range_inclusive(0, 3) as u32;
+            let got = p.shl(k).s.wrapping_add(p.shl(k).c) & wmask(w);
+            let want = (p.s.wrapping_add(p.c) << k) & wmask(w);
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn zero_lookahead_equals_true_zero() {
+        let mut rng = Rng::seeded(0x0);
+        for _ in 0..100_000 {
+            let w = rng.range_inclusive(4, 100) as u32;
+            // Bias toward actual zeros: make c = -s half the time.
+            let mut p = rand_pair(&mut rng, w);
+            if rng.chance(1, 2) {
+                p.c = (p.s.wrapping_neg()) & wmask(w);
+            }
+            assert_eq!(
+                p.is_zero_lookahead(),
+                p.s.wrapping_add(p.c) & wmask(w) == 0,
+                "{p:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn sign_lookahead_equals_true_sign() {
+        let mut rng = Rng::seeded(0x51);
+        for _ in 0..100_000 {
+            let w = rng.range_inclusive(4, 100) as u32;
+            let p = rand_pair(&mut rng, w);
+            assert_eq!(p.sign_lookahead(), p.resolve() < 0, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn zero_with_addend() {
+        let mut rng = Rng::seeded(0x3);
+        for _ in 0..50_000 {
+            let w = rng.range_inclusive(4, 90) as u32;
+            let mut p = rand_pair(&mut rng, w);
+            let add = (rng.next_u64() as u128) & wmask(w);
+            if rng.chance(1, 2) {
+                // force s+c+add == 0
+                p.c = (p.s.wrapping_add(add)).wrapping_neg() & wmask(w);
+            }
+            let want = p.s.wrapping_add(p.c).wrapping_add(add) & wmask(w) == 0;
+            assert_eq!(p.is_zero_with_addend(add), want);
+        }
+    }
+
+    #[test]
+    fn estimate_is_sum_of_floors_mod_slice() {
+        let mut rng = Rng::seeded(0xE5);
+        for _ in 0..50_000 {
+            let w = rng.range_inclusive(10, 100) as u32;
+            let p = rand_pair(&mut rng, w);
+            let drop = rng.range_inclusive(w.saturating_sub(60).max(1) as u64, (w - 2) as u64) as u32;
+            let bits = w - drop;
+            let full = (sext(p.s, w) >> drop) + (sext(p.c, w) >> drop);
+            let want = sext((full as u128) & wmask(bits), bits);
+            assert_eq!(p.estimate(drop) as i128, want);
+        }
+    }
+
+    #[test]
+    fn estimate_error_bound() {
+        // ⌊s⌋ + ⌊c⌋ ≤ s + c < ⌊s⌋ + ⌊c⌋ + 2 (in units of 2^drop): the
+        // CS-truncation error bound every selection function relies on.
+        let mut rng = Rng::seeded(0xEE);
+        for _ in 0..50_000 {
+            let w = 40;
+            let p = rand_pair(&mut rng, w);
+            let drop = 10;
+            let est = p.estimate(drop) as i128;
+            let true_val = p.resolve();
+            let lo = est << drop;
+            // value may wrap mod 2^w; compare modulo
+            let diff = (true_val - lo) & wmask(w) as i128;
+            assert!(diff < (2 << drop), "err {diff} too large");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests64 {
+    use super::*;
+    use crate::testkit::Rng;
+
+    #[test]
+    fn narrow_pair_equals_wide_pair() {
+        let mut rng = Rng::seeded(0x64);
+        for _ in 0..100_000 {
+            let w = rng.range_inclusive(8, 64) as u32;
+            let p64 = CsPair64 {
+                s: rng.next_u64() & wmask64(w),
+                c: rng.next_u64() & wmask64(w),
+                w,
+            };
+            let p = p64.widen();
+            let add = rng.next_u64() & wmask64(w);
+            let cin = rng.chance(1, 2);
+            assert_eq!(p64.csa(add, cin).widen(), p.csa(add as u128, cin));
+            assert_eq!(p64.shl(2).widen(), p.shl(2));
+            assert_eq!(p64.resolve() as i128, p.resolve());
+            let drop = rng.range_inclusive(2, (w - 2).min(60) as u64) as u32;
+            assert_eq!(p64.estimate(drop), p.estimate(drop));
+            assert_eq!(p64.is_zero_lookahead(), p.is_zero_lookahead());
+            assert_eq!(p64.sign_lookahead(), p.sign_lookahead());
+            assert_eq!(p64.is_zero_with_addend(add), p.is_zero_with_addend(add as u128));
+        }
+    }
+}

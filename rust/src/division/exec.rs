@@ -1,0 +1,130 @@
+//! The common posit division wrapper (Fig. 2 of the paper).
+//!
+//! Everything outside the fraction recurrence is identical for every
+//! algorithm and implemented once here, mirroring the shared decode /
+//! exponent-subtract / normalize / round blocks of the hardware:
+//!
+//! 1. special-case detection (zero, NaR),
+//! 2. sign: `s_Q = s_X ⊕ s_D`,
+//! 3. scale subtraction `T = 4(k_X − k_D) + e_X − e_D` (Eq. (7)) — the
+//!    regime/exponent split of Eqs. (8)–(9) happens inside the encoder,
+//! 4. the per-algorithm significand recurrence (`DivEngine::fraction_divide`),
+//! 5. normalization (`q ∈ [1/2,2) → [1,2)`, decrementing the exponent), and
+//! 6. regime-aware rounding with the remainder sticky (§III-F, Table III).
+
+use super::{latency_cycles, DivEngine, Division};
+use crate::posit::{round::encode_round, Posit, Unpacked};
+
+/// Cycles consumed by the special-case fast path (decode + detect + encode).
+const SPECIAL_CYCLES: u32 = 3;
+
+/// Run a full posit division through `engine`'s fraction datapath.
+pub fn divide_with<E: DivEngine + ?Sized>(engine: &E, x: Posit, d: Posit) -> Division {
+    assert_eq!(x.width(), d.width(), "operand width mismatch");
+    let n = x.width();
+    let (a, b) = match (x.unpack(), d.unpack()) {
+        (Unpacked::NaR, _) | (_, Unpacked::NaR) | (_, Unpacked::Zero) => {
+            return Division { result: Posit::nar(n), iterations: 0, cycles: SPECIAL_CYCLES }
+        }
+        (Unpacked::Zero, _) => {
+            return Division { result: Posit::zero(n), iterations: 0, cycles: SPECIAL_CYCLES }
+        }
+        (Unpacked::Real(a), Unpacked::Real(b)) => (a, b),
+    };
+
+    let fq = engine.fraction_divide(n, a.sig, b.sig);
+    debug_assert!(fq.mag >> (fq.frac_bits - 1) != 0, "quotient below 1/2: {fq:?}");
+    debug_assert!(fq.mag >> (fq.frac_bits + 1) == 0, "quotient ≥ 2: {fq:?}");
+
+    let sign = a.sign ^ b.sign;
+    let t = a.scale - b.scale; // Eq. (7)
+    // Normalization (§III-F step 3): q ∈ [1/2,1) ⇒ shift left / decrement.
+    let (scale, sfb) = if fq.mag >> fq.frac_bits != 0 {
+        (t, fq.frac_bits)
+    } else {
+        (t - 1, fq.frac_bits - 1)
+    };
+    Division {
+        result: encode_round(n, sign, scale, fq.mag, sfb, fq.sticky),
+        iterations: fq.iterations,
+        cycles: latency_cycles(n, engine.algorithm()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::division::{Algorithm, FracQuotient};
+
+    /// A fake engine delegating to the golden fraction divider: checks the
+    /// wrapper logic in isolation.
+    struct GoldenEngine;
+    impl DivEngine for GoldenEngine {
+        fn name(&self) -> &'static str {
+            "golden-wrapped"
+        }
+        fn algorithm(&self) -> Algorithm {
+            Algorithm::Nrd
+        }
+        fn fraction_divide(&self, n: u32, x: u64, d: u64) -> FracQuotient {
+            crate::division::golden::frac_divide(n, x, d)
+        }
+    }
+
+    #[test]
+    fn wrapper_specials() {
+        let n = 16;
+        let e = GoldenEngine;
+        let one = Posit::one(n);
+        assert!(e.divide(one, Posit::zero(n)).result.is_nar());
+        assert!(e.divide(Posit::nar(n), one).result.is_nar());
+        assert!(e.divide(Posit::zero(n), one).result.is_zero());
+        assert_eq!(e.divide(Posit::zero(n), Posit::zero(n)).result, Posit::nar(n));
+        assert_eq!(e.divide(one, Posit::zero(n)).cycles, SPECIAL_CYCLES);
+    }
+
+    #[test]
+    fn wrapper_matches_golden_divide_p8_exhaustive() {
+        let n = 8;
+        let e = GoldenEngine;
+        for xb in 0..=crate::posit::mask(n) {
+            for db in 0..=crate::posit::mask(n) {
+                let x = Posit::from_bits(n, xb);
+                let d = Posit::from_bits(n, db);
+                assert_eq!(
+                    e.divide(x, d).result,
+                    crate::division::golden::divide(x, d).result,
+                    "{x:?}/{d:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn signs_and_exponents() {
+        let n = 32;
+        let e = GoldenEngine;
+        let cases: [(f64, f64); 8] = [
+            (355.0, 113.0),
+            (-355.0, 113.0),
+            (355.0, -113.0),
+            (-355.0, -113.0),
+            (1.0, 3.0),
+            (1e6, 1e-6),
+            (6.25e-2, 5.0e3),
+            (2.0, 2.0),
+        ];
+        for (xv, dv) in cases {
+            let x = Posit::from_f64(n, xv);
+            let d = Posit::from_f64(n, dv);
+            let q = e.divide(x, d).result;
+            // correct rounding is checked exhaustively elsewhere; here we
+            // sanity-check the exponent/sign plumbing: the result must be
+            // within 1 ulp of the f64 quotient rounded to posit (relative
+            // accuracy shrinks with long regimes, e.g. 1e6/1e-6).
+            let want = Posit::from_f64(n, xv / dv);
+            assert!(q.ulp_distance(want) <= 1, "{xv}/{dv} -> {} want {}", q.to_f64(), want.to_f64());
+            assert_eq!(q.is_negative(), (xv / dv) < 0.0);
+        }
+    }
+}

@@ -1,0 +1,288 @@
+//! Digit-recurrence posit division — the paper's contribution.
+//!
+//! Every algorithm of the paper's Table IV is implemented as a bit-exact,
+//! datapath-level engine that steps the same registers the hardware holds
+//! (residual in two's-complement or carry-save form, quotient in signed-
+//! digit, conventional or on-the-fly converted form) and therefore produces
+//! the same digit sequence, the same cycle counts (Table II) and the same
+//! final posit as the RTL the paper synthesizes.
+//!
+//! | engine | paper name | radix | residual | quotient conversion | termination |
+//! |--------|------------|-------|----------|---------------------|-------------|
+//! | [`nrd::Nrd`]              | NRD           | 2 | non-redundant | sign-digit accumulate | CPA |
+//! | [`srt2::Srt2`]            | SRT           | 2 | non-redundant | P−N subtract | CPA |
+//! | [`srt2_cs::Srt2Cs`]       | SRT CS        | 2 | carry-save | P−N subtract | CPA |
+//! | [`srt2_cs::Srt2Cs`]+OF    | SRT CS OF     | 2 | carry-save | on-the-fly | CPA sign |
+//! | [`srt2_cs::Srt2Cs`]+OF+FR | SRT CS OF FR  | 2 | carry-save | on-the-fly | lookahead |
+//! | [`srt4_cs::Srt4Cs`] (±OF/FR) | SRT CS (OF, FR) | 4 | carry-save | table SEL Eq.(28) | as above |
+//! | [`srt4_scaled::Srt4Scaled`]  | radix-4 + scaling | 4 | carry-save | SEL Eq.(29) | as above |
+//! | [`newton::Newton`]        | (multiplicative baseline, §I) | — | — | — | remainder fix-up |
+//!
+//! The shared wrapper ([`exec`]) handles everything around the fraction
+//! recurrence: special cases, the sign/exponent path of Eqs. (7)–(9),
+//! normalization, and the regime-aware rounding of §III-F.
+
+pub mod carry_save;
+pub mod exec;
+pub mod golden;
+pub mod newton;
+pub mod nrd;
+pub mod otf;
+pub mod scaling;
+pub mod selection;
+pub mod sqrt;
+pub mod srt2;
+pub mod srt2_cs;
+pub mod srt4_cs;
+pub mod srt4_scaled;
+
+use crate::posit::Posit;
+
+/// The division algorithm variants evaluated by the paper (Table IV), plus
+/// the two baselines used in its related-work comparisons.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Algorithm {
+    /// Non-restoring division, radix-2 (Algorithm 1) — the paper's baseline.
+    Nrd,
+    /// NRD with the two's-complement decoding of [14] (ASAP'23): signed
+    /// significands cost one extra iteration. Comparison target C1.
+    NrdAsap23,
+    /// SRT radix-2, non-redundant residual, digit set {-1,0,1}, Eq. (26).
+    Srt2,
+    /// SRT radix-2, carry-save residual, Eq. (27).
+    Srt2Cs,
+    /// + on-the-fly quotient conversion (Eqs. (18)–(19)).
+    Srt2CsOf,
+    /// + fast sign/zero detection of the final residual.
+    Srt2CsOfFr,
+    /// SRT radix-4, carry-save residual, digit set {-2..2}, SEL Eq. (28).
+    Srt4Cs,
+    Srt4CsOf,
+    Srt4CsOfFr,
+    /// SRT radix-4 with operand scaling (Table I), SEL Eq. (29).
+    Srt4Scaled,
+    /// Newton–Raphson multiplicative divider (PACoGen-style baseline).
+    Newton,
+}
+
+impl Algorithm {
+    /// All variants, in the paper's presentation order.
+    pub const ALL: [Algorithm; 11] = [
+        Algorithm::Nrd,
+        Algorithm::NrdAsap23,
+        Algorithm::Srt2,
+        Algorithm::Srt2Cs,
+        Algorithm::Srt2CsOf,
+        Algorithm::Srt2CsOfFr,
+        Algorithm::Srt4Cs,
+        Algorithm::Srt4CsOf,
+        Algorithm::Srt4CsOfFr,
+        Algorithm::Srt4Scaled,
+        Algorithm::Newton,
+    ];
+
+    /// The digit-recurrence designs of Table IV (what Figs. 4–9 sweep).
+    pub const TABLE_IV: [Algorithm; 9] = [
+        Algorithm::Nrd,
+        Algorithm::Srt2,
+        Algorithm::Srt2Cs,
+        Algorithm::Srt2CsOf,
+        Algorithm::Srt2CsOfFr,
+        Algorithm::Srt4Cs,
+        Algorithm::Srt4CsOf,
+        Algorithm::Srt4CsOfFr,
+        Algorithm::Srt4Scaled,
+    ];
+
+    /// Radix of the recurrence (None for the multiplicative baseline).
+    pub fn radix(self) -> Option<u32> {
+        match self {
+            Algorithm::Nrd
+            | Algorithm::NrdAsap23
+            | Algorithm::Srt2
+            | Algorithm::Srt2Cs
+            | Algorithm::Srt2CsOf
+            | Algorithm::Srt2CsOfFr => Some(2),
+            Algorithm::Srt4Cs
+            | Algorithm::Srt4CsOf
+            | Algorithm::Srt4CsOfFr
+            | Algorithm::Srt4Scaled => Some(4),
+            Algorithm::Newton => None,
+        }
+    }
+
+    pub fn uses_carry_save(self) -> bool {
+        !matches!(
+            self,
+            Algorithm::Nrd | Algorithm::NrdAsap23 | Algorithm::Srt2 | Algorithm::Newton
+        )
+    }
+
+    pub fn uses_otf(self) -> bool {
+        matches!(
+            self,
+            Algorithm::Srt2CsOf
+                | Algorithm::Srt2CsOfFr
+                | Algorithm::Srt4CsOf
+                | Algorithm::Srt4CsOfFr
+                | Algorithm::Srt4Scaled
+        )
+    }
+
+    pub fn uses_fast_remainder(self) -> bool {
+        matches!(self, Algorithm::Srt2CsOfFr | Algorithm::Srt4CsOfFr | Algorithm::Srt4Scaled)
+    }
+
+    pub fn uses_scaling(self) -> bool {
+        matches!(self, Algorithm::Srt4Scaled)
+    }
+
+    /// Short name as used in the paper's figures.
+    pub fn label(self) -> &'static str {
+        match self {
+            Algorithm::Nrd => "NRD",
+            Algorithm::NrdAsap23 => "NRD [14]",
+            Algorithm::Srt2 => "SRT r2",
+            Algorithm::Srt2Cs => "SRT r2 CS",
+            Algorithm::Srt2CsOf => "SRT r2 CS OF",
+            Algorithm::Srt2CsOfFr => "SRT r2 CS OF FR",
+            Algorithm::Srt4Cs => "SRT r4 CS",
+            Algorithm::Srt4CsOf => "SRT r4 CS OF",
+            Algorithm::Srt4CsOfFr => "SRT r4 CS OF FR",
+            Algorithm::Srt4Scaled => "SRT r4 scaled",
+            Algorithm::Newton => "Newton-Raphson",
+        }
+    }
+
+    /// Instantiate the engine for this algorithm.
+    pub fn engine(self) -> Box<dyn DivEngine + Send + Sync> {
+        match self {
+            Algorithm::Nrd => Box::new(nrd::Nrd::new()),
+            Algorithm::NrdAsap23 => Box::new(nrd::Nrd::asap23()),
+            Algorithm::Srt2 => Box::new(srt2::Srt2::new()),
+            Algorithm::Srt2Cs => Box::new(srt2_cs::Srt2Cs::plain()),
+            Algorithm::Srt2CsOf => Box::new(srt2_cs::Srt2Cs::with_otf()),
+            Algorithm::Srt2CsOfFr => Box::new(srt2_cs::Srt2Cs::with_otf_fr()),
+            Algorithm::Srt4Cs => Box::new(srt4_cs::Srt4Cs::plain()),
+            Algorithm::Srt4CsOf => Box::new(srt4_cs::Srt4Cs::with_otf()),
+            Algorithm::Srt4CsOfFr => Box::new(srt4_cs::Srt4Cs::with_otf_fr()),
+            Algorithm::Srt4Scaled => Box::new(srt4_scaled::Srt4Scaled::new()),
+            Algorithm::Newton => Box::new(newton::Newton::new()),
+        }
+    }
+}
+
+/// Number of digit-recurrence iterations for a Posit⟨n,2⟩ at a given radix
+/// (paper Eq. (31) with h from Eq. (30)). Matches Table II:
+/// r2 → n−2 (14/30/62), r4 → ⌈(n−1)/2⌉ (8/16/32).
+pub fn iterations(n: u32, radix: u32) -> u32 {
+    let h = match radix {
+        2 => n - 2, // h = n − 1 − ⌊ρ⌋ with ρ = 1
+        4 => n - 1, // ρ = 2/3 < 1
+        r => panic!("unsupported radix {r}"),
+    };
+    h.div_ceil(radix.ilog2())
+}
+
+/// Pipelined latency in cycles (paper §III-E3): one cycle per iteration
+/// plus decode, termination and encode; +1 when operand scaling is used.
+pub fn latency_cycles(n: u32, alg: Algorithm) -> u32 {
+    match alg {
+        Algorithm::Newton => newton::Newton::new().cycles(n),
+        Algorithm::NrdAsap23 => iterations(n, 2) + 1 + 3,
+        a => iterations(n, a.radix().unwrap()) + 3 + if a.uses_scaling() { 1 } else { 0 },
+    }
+}
+
+/// Result of the fraction recurrence: the quotient of two significands in
+/// [1,2), delivered as a fixed-point value `q = mag / 2^frac_bits ∈ (1/2,2)`
+/// plus the "remainder non-zero" sticky condition and cycle metadata.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FracQuotient {
+    /// Quotient magnitude; value = mag / 2^frac_bits ∈ (1/2, 2).
+    pub mag: u128,
+    /// Position of the binary point in `mag`.
+    pub frac_bits: u32,
+    /// True iff the final remainder was non-zero (the rounding sticky bit).
+    pub sticky: bool,
+    /// Digit-recurrence iterations executed (Table II column).
+    pub iterations: u32,
+}
+
+/// A completed posit division with execution metadata.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Division {
+    pub result: Posit,
+    /// Recurrence iterations (0 for special-case fast paths).
+    pub iterations: u32,
+    /// Total pipeline cycles per §III-E3.
+    pub cycles: u32,
+}
+
+/// A posit division engine.
+///
+/// `fraction_divide` is the per-algorithm datapath core (operating on
+/// significands); `divide` wraps it with the common posit front/back end
+/// (implemented once in [`exec`] and shared by every engine — exactly like
+/// the hardware, where decode/encode blocks are common to all variants).
+pub trait DivEngine {
+    /// Engine name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Which Table IV variant this is.
+    fn algorithm(&self) -> Algorithm;
+
+    /// Divide two significands `x_sig, d_sig ∈ [2^F, 2^(F+1))` (posit
+    /// significands in [1,2) with `F = frac_bits(n)`), returning the exact
+    /// truncated quotient and sticky. Must equal [`golden::frac_divide`]
+    /// bit-for-bit.
+    fn fraction_divide(&self, n: u32, x_sig: u64, d_sig: u64) -> FracQuotient;
+
+    /// Full posit division (specials, exponents, normalize, round).
+    fn divide(&self, x: Posit, d: Posit) -> Division {
+        exec::divide_with(self, x, d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iteration_counts_match_table2() {
+        // Paper Table II.
+        assert_eq!(iterations(16, 2), 14);
+        assert_eq!(iterations(32, 2), 30);
+        assert_eq!(iterations(64, 2), 62);
+        assert_eq!(iterations(16, 4), 8);
+        assert_eq!(iterations(32, 4), 16);
+        assert_eq!(iterations(64, 4), 32);
+    }
+
+    #[test]
+    fn latency_matches_table2() {
+        assert_eq!(latency_cycles(16, Algorithm::Srt2Cs), 17);
+        assert_eq!(latency_cycles(32, Algorithm::Srt2Cs), 33);
+        assert_eq!(latency_cycles(64, Algorithm::Srt2Cs), 65);
+        assert_eq!(latency_cycles(16, Algorithm::Srt4Cs), 11);
+        assert_eq!(latency_cycles(32, Algorithm::Srt4Cs), 19);
+        assert_eq!(latency_cycles(64, Algorithm::Srt4Cs), 35);
+        // scaling costs one extra cycle
+        assert_eq!(latency_cycles(16, Algorithm::Srt4Scaled), 12);
+        // [14]'s decode costs one extra iteration
+        assert_eq!(latency_cycles(16, Algorithm::NrdAsap23), 18);
+    }
+
+    #[test]
+    fn algorithm_flags_match_table4() {
+        use Algorithm::*;
+        assert!(!Nrd.uses_carry_save() && !Nrd.uses_otf() && !Nrd.uses_fast_remainder());
+        assert!(!Srt2.uses_carry_save());
+        assert!(Srt2Cs.uses_carry_save() && !Srt2Cs.uses_otf());
+        assert!(Srt2CsOf.uses_otf() && !Srt2CsOf.uses_fast_remainder());
+        assert!(Srt2CsOfFr.uses_fast_remainder());
+        assert!(Srt4Scaled.uses_scaling());
+        assert_eq!(Srt4Cs.radix(), Some(4));
+        assert_eq!(Newton.radix(), None);
+    }
+}

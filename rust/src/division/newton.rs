@@ -1,0 +1,189 @@
+//! Newton–Raphson multiplicative divider — the baseline the paper's §I/§II
+//! position digit recurrence against (PACoGen [3] and [10] use this
+//! scheme). Quadratic convergence: each step doubles the accurate bits but
+//! costs two full-width multiplications; [16]'s finding (digit recurrence
+//! is more energy-efficient) is reproduced by the hardware model.
+//!
+//! The implementation is exact: after the NR iterations produce an
+//! approximate reciprocal, a remainder-based fix-up step delivers the
+//! correctly truncated quotient and sticky, so the engine is bit-compatible
+//! with the golden model (as a real divider must be).
+
+use super::{Algorithm, DivEngine, FracQuotient};
+use crate::posit::frac_bits;
+
+/// Bits of the seed reciprocal lookup table (indexed by the divisor's top
+/// fraction bits, PACoGen-style).
+const LUT_INDEX_BITS: u32 = 7;
+const LUT_VALUE_BITS: u32 = 8;
+
+/// Newton–Raphson divider.
+pub struct Newton {
+    /// Seed table: approximate 1/d for d ∈ [1,2), 8-bit output.
+    lut: Vec<u32>,
+}
+
+impl Newton {
+    pub fn new() -> Self {
+        // seed[i] ≈ 2^LUT_VALUE_BITS / midpoint of [1 + i/128, 1 + (i+1)/128)
+        let entries = 1usize << LUT_INDEX_BITS;
+        let mut lut = Vec::with_capacity(entries);
+        for i in 0..entries as u64 {
+            // midpoint m = 1 + (2i+1)/256; y = round(256/m) ∈ (128, 256]
+            let num = 256u64 << (LUT_VALUE_BITS + 1); // 2·256·2^8
+            let den = 256 + 2 * i + 1;
+            lut.push((((num / den) + 1) / 2) as u32);
+        }
+        Newton { lut }
+    }
+
+    /// NR steps needed to reach F+4 accurate bits from the 8-bit seed.
+    /// (Takes `&self` so callers hold an instantiated engine; the count
+    /// depends only on the format.)
+    pub fn nr_steps(&self, n: u32) -> u32 {
+        let target = frac_bits(n) + 4;
+        let mut bits = LUT_VALUE_BITS - 1; // seed accuracy ≈ 7 bits
+        let mut steps = 0;
+        while bits < target {
+            bits *= 2;
+            steps += 1;
+        }
+        steps
+    }
+
+    /// Cycle model: decode(1) + LUT(1) + 2 mults per NR step + final
+    /// multiply(2) + remainder fix-up(1) + round/encode(1).
+    pub fn cycles(&self, n: u32) -> u32 {
+        2 + 2 * self.nr_steps(n) + 4
+    }
+}
+
+impl Default for Newton {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DivEngine for Newton {
+    fn name(&self) -> &'static str {
+        "Newton-Raphson"
+    }
+
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::Newton
+    }
+
+    fn fraction_divide(&self, n: u32, x_sig: u64, d_sig: u64) -> FracQuotient {
+        let f = frac_bits(n);
+        debug_assert!(x_sig >> f == 1 && d_sig >> f == 1);
+        // Working precision for the reciprocal: P fractional bits.
+        let p = f + 8;
+        // Seed from the divisor's top fraction bits (d ∈ [1,2)).
+        let idx = if f >= LUT_INDEX_BITS {
+            (d_sig >> (f - LUT_INDEX_BITS)) & ((1 << LUT_INDEX_BITS) - 1)
+        } else {
+            (d_sig << (LUT_INDEX_BITS - f)) & ((1 << LUT_INDEX_BITS) - 1)
+        } as usize;
+        // y ≈ 1/d ∈ (1/2, 1] in Q(p): seed has 8 bits.
+        let mut y: u128 = (self.lut[idx] as u128) << (p - LUT_VALUE_BITS);
+        let d_q = (d_sig as u128) << (p - f); // d in Q(p), ∈ [2^p, 2^(p+1))
+
+        let steps = self.nr_steps(n);
+        for _ in 0..steps {
+            // y' = y·(2 − d·y): all in Q(p). Products can exceed 128 bits
+            // for n = 64, so use the 256-bit multiply-shift.
+            let dy = mulshift(d_q, y, p); // Q(p), ≈ 1
+            let two_minus = (2u128 << p).wrapping_sub(dy);
+            y = mulshift(y, two_minus, p);
+        }
+
+        // Candidate quotient with `prec = n` fraction bits (like golden).
+        let prec = n;
+        // q ≈ x·y: x in Q(f) → x·y in Q(f+p) → shift to Q(prec).
+        let mut q = ((x_sig as u128) * y) >> (f + p - prec);
+        // Exact remainder fix-up: r = x·2^prec − q·d (in units of d's Q(f)).
+        let num = (x_sig as u128) << prec;
+        let mut r = num as i128 - (q * d_sig as u128) as i128;
+        let mut fixups = 0;
+        while r < 0 {
+            q -= 1;
+            r += d_sig as i128;
+            fixups += 1;
+            assert!(fixups < 8, "NR approximation too coarse");
+        }
+        while r >= d_sig as i128 {
+            q += 1;
+            r -= d_sig as i128;
+            fixups += 1;
+            assert!(fixups < 8, "NR approximation too coarse");
+        }
+        FracQuotient { mag: q, frac_bits: prec, sticky: r != 0, iterations: steps }
+    }
+}
+
+/// `(a · b) >> s` with a full 256-bit intermediate product.
+fn mulshift(a: u128, b: u128, s: u32) -> u128 {
+    debug_assert!(s < 128);
+    let (a_hi, a_lo) = ((a >> 64) as u64 as u128, a as u64 as u128);
+    let (b_hi, b_lo) = ((b >> 64) as u64 as u128, b as u64 as u128);
+    let ll = a_lo * b_lo;
+    let lh = a_lo * b_hi;
+    let hl = a_hi * b_lo;
+    let hh = a_hi * b_hi;
+    // assemble: product = hh·2^128 + (lh+hl)·2^64 + ll
+    let mid = lh.wrapping_add(hl);
+    let mid_carry = (mid < lh) as u128; // into 2^128
+    let lo = ll.wrapping_add(mid << 64);
+    let lo_carry = (lo < ll) as u128;
+    let hi = hh + (mid >> 64) + (mid_carry << 64) + lo_carry;
+    debug_assert!(hi >> s == 0 || s == 0, "mulshift overflow: result exceeds 128 bits");
+    if s == 0 {
+        lo
+    } else {
+        (lo >> s) | (hi << (128 - s))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::division::golden;
+    use crate::posit::mask;
+
+    #[test]
+    fn nr_step_counts() {
+        let e = Newton::new();
+        assert_eq!(e.nr_steps(16), 2); // 7 -> 14 -> 28 ≥ 15
+        assert_eq!(e.nr_steps(32), 3); // ≥ 31
+        assert_eq!(e.nr_steps(64), 4); // ≥ 63
+    }
+
+    #[test]
+    fn newton_equals_golden_random_all_widths() {
+        let mut rng = crate::testkit::Rng::seeded(0x400);
+        let e = Newton::new();
+        for &n in &[8u32, 10, 16, 24, 32, 48, 64] {
+            let f = frac_bits(n);
+            for _ in 0..4000 {
+                let x = (1 << f) | (rng.next_u64() & mask(f));
+                let d = (1 << f) | (rng.next_u64() & mask(f));
+                let q = e.fraction_divide(n, x, d);
+                let g = golden::frac_divide(n, x, d);
+                assert_eq!((q.mag, q.sticky), (g.mag, g.sticky), "n={n} x={x:#x} d={d:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn newton_full_divide_p8_exhaustive() {
+        let e = Newton::new();
+        let n = 8;
+        for xb in 0..=mask(n) {
+            for db in 0..=mask(n) {
+                let x = crate::posit::Posit::from_bits(n, xb);
+                let d = crate::posit::Posit::from_bits(n, db);
+                assert_eq!(e.divide(x, d).result, golden::divide(x, d).result, "{x:?}/{d:?}");
+            }
+        }
+    }
+}

@@ -1,0 +1,138 @@
+//! On-the-fly conversion of the signed-digit quotient (§III-B3).
+//!
+//! Keeps two conventional registers while digits arrive:
+//! `Q(i)` (Eq. (16)) and its decremented form `QD(i) = Q(i) − r^−i`
+//! (Eq. (17)), updated by *concatenation only* (Eqs. (18)–(19)) — no carry
+//! propagation. At termination the negative-remainder correction is free:
+//! select `QD` instead of `Q`.
+
+/// On-the-fly converter for radix `r = 2^log2r`, digits in `[-a, a]`.
+#[derive(Clone, Copy, Debug)]
+pub struct Otf {
+    q: u128,
+    qd: u128,
+    log2r: u32,
+    digits: u32,
+}
+
+impl Otf {
+    /// `Q(0) = QD(0) = 0` (paper: QD(0) is only consumed after the first
+    /// non-zero digit, so its initial value never reaches the output).
+    pub fn new(log2r: u32) -> Self {
+        debug_assert!(log2r == 1 || log2r == 2);
+        Otf { q: 0, qd: 0, log2r, digits: 0 }
+    }
+
+    /// Consume the next quotient digit `q_{i+1} ∈ [-(r-1), r-1]`.
+    ///
+    /// Eq. (18): `Q(i+1) = Q(i)‖q⁺` or `QD(i)‖(r−|q|)`;
+    /// Eq. (19): `QD(i+1) = Q(i)‖(q−1)` or `QD(i)‖((r−1)−|q|)`.
+    #[inline]
+    pub fn push(&mut self, digit: i32) {
+        let r = 1i32 << self.log2r;
+        debug_assert!(digit.abs() < r, "digit {digit} out of radix-{r} range");
+        let (q_new, qd_new) = if digit >= 0 {
+            (
+                (self.q << self.log2r) | digit as u128,
+                if digit > 0 {
+                    (self.q << self.log2r) | (digit - 1) as u128
+                } else {
+                    (self.qd << self.log2r) | (r - 1) as u128
+                },
+            )
+        } else {
+            (
+                (self.qd << self.log2r) | (r - digit.abs()) as u128,
+                (self.qd << self.log2r) | ((r - 1) - digit.abs()) as u128,
+            )
+        };
+        self.q = q_new;
+        self.qd = qd_new;
+        self.digits += 1;
+    }
+
+    /// Number of radix-r digits consumed so far.
+    #[inline]
+    pub fn len_bits(&self) -> u32 {
+        self.digits * self.log2r
+    }
+
+    /// Final converted quotient: `Q` if the remainder is ≥ 0, else the
+    /// pre-decremented `QD` (the §III-F correction step, for free).
+    #[inline]
+    pub fn result(&self, negative_remainder: bool) -> u128 {
+        if negative_remainder {
+            self.qd
+        } else {
+            self.q
+        }
+    }
+
+    /// Current Q register (for tests).
+    #[inline]
+    pub fn q(&self) -> u128 {
+        self.q
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Rng;
+
+    /// Reference: accumulate digits arithmetically, Q(i) = Σ q_j r^{i-j}.
+    fn accumulate(log2r: u32, digits: &[i32]) -> i128 {
+        let mut acc: i128 = 0;
+        for &d in digits {
+            acc = (acc << log2r) + d as i128;
+        }
+        acc
+    }
+
+    #[test]
+    fn otf_equals_arithmetic_accumulation() {
+        let mut rng = Rng::seeded(0x07F);
+        for &log2r in &[1u32, 2] {
+            let _r = 1i64 << log2r;
+            let a = if log2r == 1 { 1 } else { 2 }; // digit sets {-1..1}, {-2..2}
+            for _ in 0..20_000 {
+                let len = rng.range_inclusive(1, 60) as usize;
+                let mut digits = Vec::with_capacity(len);
+                // First digit positive so the running value stays >= 1 ulp
+                // (as in division, where q(i) > 0 after the first non-zero
+                // digit); OTF registers hold non-negative patterns.
+                digits.push(rng.range_i64(1, a) as i32);
+                for _ in 1..len {
+                    digits.push(rng.range_i64(-a, a) as i32);
+                }
+                let mut otf = Otf::new(log2r);
+                for &d in &digits {
+                    otf.push(d);
+                }
+                let acc = accumulate(log2r, &digits);
+                assert!(acc > 0, "test construction keeps value positive");
+                assert_eq!(otf.result(false), acc as u128, "Q digits={digits:?}");
+                assert_eq!(otf.result(true), (acc - 1) as u128, "QD digits={digits:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn qd_is_q_minus_one_ulp_at_every_step() {
+        let mut rng = Rng::seeded(0x7F2);
+        for _ in 0..5_000 {
+            let mut otf = Otf::new(2);
+            let mut digits = vec![rng.range_i64(1, 2) as i32];
+            otf.push(digits[0]);
+            for _ in 0..30 {
+                let d = rng.range_i64(-2, 2) as i32;
+                digits.push(d);
+                otf.push(d);
+                let acc = accumulate(2, &digits);
+                if acc > 0 {
+                    assert_eq!(otf.result(true), (acc - 1) as u128);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,357 @@
+//! Quotient-digit selection functions (§III-D).
+//!
+//! All selections operate on *truncated* residual estimates, in the exact
+//! bit positions the paper states:
+//!
+//! * radix-2, non-redundant (Eq. (26)): shifted residual truncated to one
+//!   fractional bit (units of 1/2) — constants ±1/2.
+//! * radix-2, carry-save (Eq. (27)): each CS word truncated to 3 integer +
+//!   1 fractional bit, added (4-bit adder) — estimate error < 2·2^−1.
+//! * radix-4, carry-save (Eq. (28)): divisor truncated to 4 fractional
+//!   bits (8 intervals of [1/2,1)), estimate to 4 fractional bits (units
+//!   of 1/16); the `m_k(d̂)` constants are *derived* at construction from
+//!   the exact containment conditions of Ercegovac & Lang and verified
+//!   feasible — see [`Srt4Table::derive`].
+//! * radix-4 scaled (Eq. (29)): divisor-independent constants on a 6-bit
+//!   estimate (3 integer + 3 fractional, units of 1/8).
+//!
+//! Digit-set redundancy: ρ = a/(r−1) (Eq. (12)); radix-2 uses a=1 (ρ=1),
+//! radix-4 uses the minimally-redundant a=2 (ρ=2/3) as the paper chooses.
+
+/// Eq. (26): radix-2, non-redundant residual. `t` = shifted residual
+/// truncated to 1 fractional bit, i.e. `t = ⌊2w(i) · 2⌋` in units of 1/2.
+#[inline]
+pub fn sel_srt2_nonredundant(t: i64) -> i32 {
+    if t >= 1 {
+        // 2w(i) ≥ 1/2
+        1
+    } else if t >= -1 {
+        // −1/2 ≤ 2w(i) < 1/2
+        0
+    } else {
+        -1
+    }
+}
+
+/// Eq. (27): radix-2, carry-save residual. `t` = sum of the two CS words
+/// each truncated to 1 fractional bit (units of 1/2; estimate error < 1).
+#[inline]
+pub fn sel_srt2_cs(t: i64) -> i32 {
+    if t >= 0 {
+        1
+    } else if t == -1 {
+        // t = −1/2
+        0
+    } else {
+        // −5/2 < 2w(i) < −1
+        -1
+    }
+}
+
+/// Eq. (29): radix-4 with scaled operands (divisor ∈ [1−1/64, 1+1/8]).
+/// `t` = CS estimate truncated to 3 fractional bits (units of 1/8).
+#[inline]
+pub fn sel_srt4_scaled(t: i64) -> i32 {
+    if t >= 12 {
+        // ≥ 3/2
+        2
+    } else if t >= 4 {
+        // ≥ 1/2
+        1
+    } else if t >= -4 {
+        // ≥ −1/2
+        0
+    } else if t >= -13 {
+        // ≥ −13/8
+        -1
+    } else {
+        -2
+    }
+}
+
+/// Radix-4, a=2 selection table (Eq. (28)): thresholds `m_k(d̂)` for
+/// k ∈ {−1, 0, 1, 2}, in units of 1/16, one row per divisor interval
+/// `d ∈ [i/16, (i+1)/16)`, i = 8..15. Digit −2 is chosen below `m_{−1}`.
+#[derive(Clone, Debug)]
+pub struct Srt4Table {
+    /// `m[i-8] = [m_{-1}, m_0, m_1, m_2]` in sixteenths.
+    pub m: [[i32; 4]; 8],
+}
+
+/// ρ numerator/denominator for a=2, r=4: ρ = 2/3.
+const RHO_NUM: i64 = 2;
+const RHO_DEN: i64 = 3;
+
+impl Srt4Table {
+    /// Derive feasible selection constants from the containment conditions.
+    ///
+    /// For each divisor interval `[d_lo, d_hi] = [i, i+1]/16` and digit k,
+    /// the threshold `m_k` (units 1/16) must satisfy:
+    ///
+    /// * containment-from-below: `m_k/16 ≥ L_k(d) = (k−ρ)d` for all d in
+    ///   the interval, and
+    /// * containment-from-above of the digit-(k−1) region:
+    ///   `(m_k + 1)/16 ≤ U_{k−1}(d) = (k−1+ρ)d` for all d — the `+1`
+    ///   absorbs the carry-save estimate error (< 2/16) minus the estimate
+    ///   granularity (1/16): a residual with estimate `t ≤ m_k − 1` has
+    ///   true value `y < (m_k + 1)/16`.
+    ///
+    /// The derivation uses exact integer arithmetic (everything is a
+    /// multiple of 1/48) and panics if any interval is infeasible — i.e.
+    /// it *proves* the P-D diagram feasibility the paper relies on.
+    pub fn derive() -> Srt4Table {
+        let mut m = [[0i32; 4]; 8];
+        for i in 8..16i64 {
+            for (slot, k) in (-1i64..=2).enumerate() {
+                // L_k(d)·48 = (3k−2)·d16·3 /3… work in units of 1/48:
+                // L_k(d) = (k − 2/3)·(d16/16) → ·48 = (3k−2)·d16.
+                let lnum = 3 * k - RHO_NUM; // (3k−2), since ρ=2/3
+                let l_at = |d16: i64| lnum * d16; // in 1/48 units... (·RHO_DEN/16 scale)
+                let lmax = l_at(i).max(l_at(i + 1));
+                // lower bound in 1/16 units: m_k ≥ lmax/3 → ceil
+                let lb = div_ceil_i64(lmax, RHO_DEN);
+
+                // U_{k−1}(d)·48 = (3(k−1)+2)·d16 = (3k−1)·d16.
+                let unum = 3 * k - 1;
+                let u_at = |d16: i64| unum * d16;
+                let umin = u_at(i).min(u_at(i + 1));
+                // (m_k + 1)/16 ≤ umin/48 ⇔ 3(m_k+1) ≤ umin ⇔
+                // m_k ≤ ⌊(umin − 3)/3⌋.
+                let ub = div_floor_i64(umin - RHO_DEN, RHO_DEN);
+
+                assert!(
+                    lb <= ub,
+                    "SRT-4 selection infeasible: interval {i}/16, digit {k}: [{lb},{ub}]"
+                );
+                // Pick the smallest feasible threshold (any feasible value
+                // is correct; smaller thresholds bias toward larger digits).
+                m[(i - 8) as usize][slot] = lb as i32;
+            }
+            // Thresholds must be strictly increasing for max-select.
+            let row = m[(i - 8) as usize];
+            assert!(row[0] < row[1] && row[1] < row[2] && row[2] < row[3], "non-monotone {row:?}");
+        }
+        Srt4Table { m }
+    }
+
+    /// Select digit for divisor interval index `dhat ∈ [8,15]` (the 4-bit
+    /// truncation of d ∈ [1/2,1)) and residual estimate `t` in 1/16 units.
+    #[inline]
+    pub fn select(&self, dhat: u32, t: i64) -> i32 {
+        debug_assert!((8..16).contains(&dhat));
+        let row = &self.m[dhat as usize - 8];
+        if t >= row[3] as i64 {
+            2
+        } else if t >= row[2] as i64 {
+            1
+        } else if t >= row[1] as i64 {
+            0
+        } else if t >= row[0] as i64 {
+            -1
+        } else {
+            -2
+        }
+    }
+}
+
+/// Generalized radix-4 threshold derivation for digit set [-a, a]
+/// (ρ = a/3): returns, per divisor interval i ∈ [8,15], the thresholds
+/// m_k for k ∈ [-a+1, a] in 1/16 units, or None if some interval is
+/// infeasible at the 4-bit estimate granularity. Used by the a=2 vs a=3
+/// ablation (the paper picks a=2; a=3 trades easier selection for a 3d
+/// multiple generator).
+pub fn derive_radix4_thresholds(a: i64) -> Option<Vec<Vec<i32>>> {
+    assert!((2..=3).contains(&a));
+    let rho_num = a; // ρ = a/3
+    let mut rows = Vec::new();
+    for i in 8..16i64 {
+        let mut row = Vec::new();
+        let mut prev = i64::MIN;
+        for k in (-a + 1)..=a {
+            let lnum = 3 * k - rho_num;
+            let lmax = (lnum * i).max(lnum * (i + 1));
+            let lb = div_ceil_i64(lmax, 3);
+            let unum = 3 * (k - 1) + rho_num;
+            let umin = (unum * i).min(unum * (i + 1));
+            let ub = div_floor_i64(umin - 3, 3);
+            if lb > ub || lb <= prev {
+                return None;
+            }
+            prev = lb;
+            row.push(lb as i32);
+        }
+        rows.push(row);
+    }
+    Some(rows)
+}
+
+/// Global table (derived once; the hardware holds it as a small PLA).
+pub fn srt4_table() -> &'static Srt4Table {
+    use std::sync::OnceLock;
+    static TABLE: OnceLock<Srt4Table> = OnceLock::new();
+    TABLE.get_or_init(Srt4Table::derive)
+}
+
+#[inline]
+fn div_ceil_i64(a: i64, b: i64) -> i64 {
+    debug_assert!(b > 0);
+    if a >= 0 {
+        (a + b - 1) / b
+    } else {
+        a / b
+    }
+}
+
+#[inline]
+fn div_floor_i64(a: i64, b: i64) -> i64 {
+    debug_assert!(b > 0);
+    if a >= 0 {
+        a / b
+    } else {
+        -((-a + b - 1) / b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn srt2_nonredundant_matches_eq26() {
+        // t in units of 1/2 (floor-truncated 2w).
+        assert_eq!(sel_srt2_nonredundant(3), 1); // 2w in [3/2,2)
+        assert_eq!(sel_srt2_nonredundant(1), 1); // [1/2,1)
+        assert_eq!(sel_srt2_nonredundant(0), 0); // [0,1/2)
+        assert_eq!(sel_srt2_nonredundant(-1), 0); // [-1/2,0)
+        assert_eq!(sel_srt2_nonredundant(-2), -1); // [-1,-1/2)
+        assert_eq!(sel_srt2_nonredundant(-4), -1);
+    }
+
+    #[test]
+    fn srt2_cs_matches_eq27() {
+        assert_eq!(sel_srt2_cs(3), 1);
+        assert_eq!(sel_srt2_cs(0), 1);
+        assert_eq!(sel_srt2_cs(-1), 0);
+        assert_eq!(sel_srt2_cs(-2), -1);
+        assert_eq!(sel_srt2_cs(-5), -1);
+    }
+
+    #[test]
+    fn srt4_scaled_matches_eq29() {
+        assert_eq!(sel_srt4_scaled(24), 2); // 3
+        assert_eq!(sel_srt4_scaled(12), 2); // 3/2
+        assert_eq!(sel_srt4_scaled(11), 1); // 11/8
+        assert_eq!(sel_srt4_scaled(4), 1); // 1/2
+        assert_eq!(sel_srt4_scaled(3), 0); // 3/8
+        assert_eq!(sel_srt4_scaled(-4), 0); // -1/2
+        assert_eq!(sel_srt4_scaled(-5), -1); // -5/8
+        assert_eq!(sel_srt4_scaled(-13), -1); // -13/8
+        assert_eq!(sel_srt4_scaled(-14), -2); // -7/4
+        assert_eq!(sel_srt4_scaled(-26), -2); // -13/4
+    }
+
+    #[test]
+    fn srt4_table_is_feasible_and_sane() {
+        let t = srt4_table();
+        // Spot-check against the classic Ercegovac–Lang shape: m_2 for the
+        // first interval (d ∈ [1/2, 9/16)) is 12/16 = 3/4.
+        assert_eq!(t.m[0][3], 12);
+        // Rows are monotone in d for positive digits: larger divisors push
+        // positive thresholds up.
+        for k in 0..4 {
+            for i in 1..8 {
+                if t.m[i][k] < t.m[i - 1][k] {
+                    // thresholds may plateau but for m_2 must not decrease
+                    assert!(k != 3, "m_2 decreased: {:?}", t.m);
+                }
+            }
+        }
+    }
+
+    /// Exhaustive verification of the derived radix-4 table against the
+    /// exact containment condition — the "P-D diagram" check. For every
+    /// divisor on a fine grid and every reachable residual y = 4w(i) with
+    /// |w(i)| ≤ ρd, the digit k chosen from the truncated CS estimate must
+    /// keep |y − k·d| ≤ ρd.
+    #[test]
+    fn srt4_table_pd_diagram_exhaustive() {
+        let table = srt4_table();
+        // work in units of 1/3840 = 1/(16·240): d grid step 1/240 keeps
+        // everything integral: d = j/240, y values on 1/256 grid scaled.
+        // Simpler: rational check with i128: d_num/d_den, y_num/y_den.
+        let yden = 1i128 << 10; // y grid 1/1024
+        for d1920 in 960..1920i128 {
+            // d = d1920/1920 ∈ [1/2, 1)
+            let dhat = (d1920 * 16 / 1920) as u32; // 4-bit truncation
+            // y ∈ [−8/3 d, 8/3 d]: iterate y on the 1/1024 grid
+            let ymax = 8 * d1920 * yden / (3 * 1920); // floor of 8/3 d · yden
+            let mut y = -ymax;
+            while y <= ymax {
+                // CS truncated estimate: the pair of words can place the
+                // estimate anywhere in (y·16/yden − 2, y·16/yden]: check the
+                // worst cases t = ⌈16y/yden⌉−2 … ⌊16y/yden⌋.
+                let tfloor = div_floor_i64((y * 16) as i64, yden as i64);
+                for t in (tfloor - 1)..=tfloor {
+                    // estimate t reachable iff y − t/16 ∈ [0, 2/16)
+                    // i.e. t ≤ 16y/yden < t+2
+                    let lhs = t as i128 * yden;
+                    if !(lhs <= 16 * y && 16 * y < lhs + 2 * yden) {
+                        continue;
+                    }
+                    let k = table.select(dhat, t) as i128;
+                    // containment: |y − k·d| ≤ ρ·d ⇔
+                    // |y·3·1920 − k·d1920·3·yden| ≤ 2·d1920·yden
+                    let lhs2 = (3 * y * 1920 - 3 * k * d1920 * yden).abs();
+                    assert!(
+                        lhs2 <= 2 * d1920 * yden,
+                        "containment violated: d={d1920}/1920 y={y}/{yden} t={t} k={k}"
+                    );
+                }
+                y += 1;
+            }
+        }
+    }
+
+    #[test]
+    fn div_helpers() {
+        assert_eq!(div_ceil_i64(7, 3), 3);
+        assert_eq!(div_ceil_i64(-7, 3), -2);
+        assert_eq!(div_ceil_i64(6, 3), 2);
+        assert_eq!(div_floor_i64(7, 3), 2);
+        assert_eq!(div_floor_i64(-7, 3), -3);
+        assert_eq!(div_floor_i64(-6, 3), -2);
+    }
+}
+
+#[cfg(test)]
+mod dump_table {
+    #[test]
+    #[ignore]
+    fn print_table() {
+        let t = super::srt4_table();
+        for row in &t.m {
+            println!("{row:?}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod ablation_tests {
+    use super::*;
+
+    #[test]
+    fn generalized_derivation_matches_table_for_a2() {
+        let rows = derive_radix4_thresholds(2).expect("a=2 feasible");
+        let t = srt4_table();
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.as_slice(), &t.m[i], "interval {}", i + 8);
+        }
+    }
+
+    #[test]
+    fn a3_is_also_feasible_with_wider_digit_set() {
+        // maximum redundancy ρ=1: feasible, 6 thresholds per interval
+        let rows = derive_radix4_thresholds(3).expect("a=3 feasible");
+        assert_eq!(rows[0].len(), 6);
+    }
+}

@@ -1,0 +1,272 @@
+//! Digit-recurrence posit square root — the extension feature.
+//!
+//! The paper's related work ([11], [12]) pairs division with square root
+//! in one unit (the recurrences share the residual datapath), and the
+//! authors' companion paper [13] is a posit sqrt unit; this module
+//! provides the matching capability: a bit-serial digit-recurrence square
+//! root on posit significands plus an exact golden reference, with the
+//! same correctness discipline as the dividers (bit-exact vs golden,
+//! exhaustive at Posit8, exact-rational nearest-value verification).
+//!
+//! Exponent path: `v = 2^T · m`, `m ∈ [1,2)`. With `q = ⌊T/2⌋` and
+//! `a = m · 2^(T mod 2) ∈ [1,4)`, `√v = 2^q · √a` and `√a ∈ [1,2)` — the
+//! posit regime/exponent split then happens in the shared encoder.
+//! Negative values and NaR return NaR; zero returns zero.
+
+use crate::posit::{frac_bits, round::encode_round, Posit, Unpacked};
+
+/// Exact integer square root (golden): `⌊√A⌋` for u128.
+pub fn isqrt_u128(a: u128) -> u128 {
+    if a < 2 {
+        return a;
+    }
+    // Newton on integers, seeded from the float estimate.
+    let mut x = ((a as f64).sqrt() as u128).max(1);
+    loop {
+        let y = (x + a / x) >> 1;
+        if y >= x {
+            break;
+        }
+        x = y;
+    }
+    // floor fix-up (float seed can be off by one either way)
+    while (x + 1) * (x + 1) <= a {
+        x += 1;
+    }
+    while x * x > a {
+        x -= 1;
+    }
+    x
+}
+
+/// Result of a posit square root.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SqrtResult {
+    pub result: Posit,
+    /// Digit-recurrence iterations (one result bit per iteration).
+    pub iterations: u32,
+}
+
+/// Common wrapper: specials + exponent path + encode. `frac_sqrt` maps the
+/// radicand `A = a·2^(2P)` to `(⌊√A⌋, sticky)` with P = F+2.
+fn sqrt_with(v: Posit, frac_sqrt: impl Fn(u128, u32) -> (u128, bool, u32)) -> SqrtResult {
+    let n = v.width();
+    match v.unpack() {
+        Unpacked::NaR => return SqrtResult { result: Posit::nar(n), iterations: 0 },
+        Unpacked::Zero => return SqrtResult { result: Posit::zero(n), iterations: 0 },
+        Unpacked::Real(d) if d.sign => {
+            // √negative = NaR
+            return SqrtResult { result: Posit::nar(n), iterations: 0 };
+        }
+        Unpacked::Real(d) => {
+            let f = frac_bits(n);
+            let p = f + 2; // result precision: F fraction + guard + round
+            let t = d.scale;
+            let q = t >> 1; // ⌊T/2⌋ (arithmetic shift)
+            let odd = (t & 1) as u32;
+            // A = a · 2^(2P), a = m·2^odd ∈ [1,4): exact integer radicand
+            let a = (d.sig as u128) << (2 * p + odd - f);
+            let (s, sticky, iterations) = frac_sqrt(a, p);
+            debug_assert!(s >> p == 1, "√a must be in [1,2)");
+            SqrtResult { result: encode_round(n, false, q, s, p, sticky), iterations }
+        }
+    }
+}
+
+/// Golden posit square root (exact integer isqrt + one rounding).
+pub fn golden_sqrt(v: Posit) -> SqrtResult {
+    sqrt_with(v, |a, _p| {
+        let s = isqrt_u128(a);
+        (s, s * s != a, 0)
+    })
+}
+
+/// Digit-recurrence square root engine (radix-2, one result bit per
+/// iteration — the classic non-restoring schoolbook recurrence on the
+/// residual `w(j) = A − S(j)²` with partial result `S(j)`).
+pub struct SqrtEngine;
+
+impl SqrtEngine {
+    pub fn new() -> Self {
+        SqrtEngine
+    }
+
+    /// Posit square root, bit-exact with [`golden_sqrt`].
+    pub fn sqrt(&self, v: Posit) -> SqrtResult {
+        sqrt_with(v, |a, p| {
+            // Compute ⌊√A⌋ for A ∈ [2^(2p), 2^(2p+2)) one bit per step:
+            // try-bit from MSB down, keep the square ≤ A invariant — the
+            // software form of the non-restoring S(j)/w(j) recurrence.
+            let mut s: u128 = 0;
+            let mut rem: u128 = 0; // w(j) = A − S(j)², maintained incrementally
+            let mut iterations = 0;
+            // consume A two bits at a time, MSB first (digit pairs)
+            let total_bits = 2 * p + 2;
+            for j in (0..total_bits / 2).rev() {
+                iterations += 1;
+                // bring down the next two radicand bits
+                rem = (rem << 2) | ((a >> (2 * j)) & 0b11);
+                let trial = (s << 2) | 1; // 2S(j)·2 + 1, the subtract term
+                s <<= 1;
+                if rem >= trial {
+                    rem -= trial;
+                    s |= 1;
+                }
+            }
+            (s, rem != 0, iterations)
+        })
+    }
+
+    /// Iterations for a Posit⟨n,2⟩ sqrt: one per result bit, P+1 = n−2.
+    pub fn iterations(&self, n: u32) -> u32 {
+        frac_bits(n) + 3
+    }
+}
+
+impl Default for SqrtEngine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::posit::mask;
+    use crate::testkit::Rng;
+
+    #[test]
+    fn isqrt_exact() {
+        let mut rng = Rng::seeded(0x50);
+        for _ in 0..100_000 {
+            let a = (rng.next_u64() as u128) << rng.range_inclusive(0, 40);
+            let s = isqrt_u128(a);
+            assert!(s * s <= a && (s + 1) * (s + 1) > a, "a={a}");
+        }
+        for a in 0..2000u128 {
+            let s = isqrt_u128(a);
+            assert!(s * s <= a && (s + 1) * (s + 1) > a);
+        }
+    }
+
+    #[test]
+    fn engine_equals_golden_exhaustive_p8_p10() {
+        let e = SqrtEngine::new();
+        for n in [8u32, 10] {
+            for bits in 0..=mask(n) {
+                let v = Posit::from_bits(n, bits);
+                assert_eq!(e.sqrt(v).result, golden_sqrt(v).result, "n={n} {v:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn engine_equals_golden_random_wide() {
+        let e = SqrtEngine::new();
+        let mut rng = Rng::seeded(0x5017);
+        for &n in &[16u32, 32, 64] {
+            for _ in 0..20_000 {
+                let v = Posit::from_bits(n, rng.next_u64() & mask(n));
+                assert_eq!(e.sqrt(v).result, golden_sqrt(v).result, "n={n} {v:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn specials_and_negatives() {
+        let e = SqrtEngine::new();
+        for n in [8u32, 16, 32] {
+            assert!(e.sqrt(Posit::nar(n)).result.is_nar());
+            assert!(e.sqrt(Posit::zero(n)).result.is_zero());
+            assert!(e.sqrt(Posit::one(n).neg()).result.is_nar());
+            assert_eq!(e.sqrt(Posit::one(n)).result, Posit::one(n));
+        }
+    }
+
+    #[test]
+    fn known_values() {
+        let e = SqrtEngine::new();
+        let n = 32;
+        for (v, want) in [(4.0, 2.0), (9.0, 3.0), (2.25, 1.5), (1e4, 1e2), (0.25, 0.5)] {
+            let r = e.sqrt(Posit::from_f64(n, v)).result;
+            assert_eq!(r.to_f64(), want, "sqrt({v})");
+        }
+        // irrational: within 1 ulp of the f64-rounded value
+        let r = e.sqrt(Posit::from_f64(n, 2.0)).result;
+        let want = Posit::from_f64(n, 2.0f64.sqrt());
+        assert!(r.ulp_distance(want) <= 1);
+    }
+
+    /// Independent nearest-value verification: the returned posit r must
+    /// satisfy mid_lo² ≤ v < mid_hi² at the pattern-space midpoints —
+    /// exact integer comparisons only.
+    #[test]
+    fn nearest_value_verification_p16_random() {
+        let e = SqrtEngine::new();
+        let mut rng = Rng::seeded(0x9E);
+        let n = 16;
+        let f = frac_bits(n);
+        for _ in 0..40_000 {
+            let v = Posit::from_bits(n, rng.next_u64() & mask(n));
+            if v.is_nar() || v.is_zero() || v.is_negative() {
+                continue;
+            }
+            let r = e.sqrt(v).result;
+            let dv = v.decode();
+            // compare v vs mid² exactly: v = sig·2^(scale−f);
+            // mid = msig·2^(mscale−mf) (width n+1 posit).
+            let cmp_v_vs_sq = |mid: Posit| -> core::cmp::Ordering {
+                let dm = mid.decode();
+                let mf = frac_bits(n + 1) as i32;
+                // v vs mid²  ⇔  sig·2^(scale−f) vs msig²·2^(2(mscale−mf))
+                let e1 = dv.scale - f as i32;
+                let e2 = 2 * (dm.scale - mf);
+                let lhs = dv.sig as u128;
+                let rhs = (dm.sig as u128) * (dm.sig as u128);
+                let sh = e1 - e2;
+                if sh >= 0 {
+                    (lhs << sh.min(100) as u32).cmp(&rhs)
+                } else {
+                    lhs.cmp(&(rhs << (-sh).min(50) as u32))
+                }
+            };
+            // upper midpoint (skip at maxpos saturation)
+            if r != Posit::maxpos(n) {
+                let mid_hi = Posit::from_bits(n + 1, (r.to_bits() << 1) | 1);
+                assert_ne!(
+                    cmp_v_vs_sq(mid_hi),
+                    core::cmp::Ordering::Greater,
+                    "{v:?}: √ rounds above {r:?}"
+                );
+            }
+            if r != Posit::minpos(n) {
+                let lo = r.next_down();
+                let mid_lo = Posit::from_bits(n + 1, (lo.to_bits() << 1) | 1);
+                assert_ne!(
+                    cmp_v_vs_sq(mid_lo),
+                    core::cmp::Ordering::Less,
+                    "{v:?}: √ rounds below {r:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sqrt_squared_roundtrip() {
+        let e = SqrtEngine::new();
+        let mut rng = Rng::seeded(0x2705);
+        for _ in 0..20_000 {
+            let v = Posit::from_bits(32, rng.next_u64() & mask(32)).abs();
+            if v.is_nar() || v.is_zero() {
+                continue;
+            }
+            let r = e.sqrt(v).result;
+            let back = r.mul(r);
+            let vv = v.to_f64();
+            if vv > 1e-30 && vv < 1e30 {
+                let rel = (back.to_f64() - vv).abs() / vv;
+                assert!(rel < 1e-6, "{v:?} -> {r:?} -> {back:?}");
+            }
+        }
+    }
+}

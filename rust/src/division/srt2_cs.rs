@@ -1,0 +1,268 @@
+//! SRT radix-2 with carry-save residual (Table IV rows "SRT CS",
+//! "SRT CS OF", "SRT CS OF FR").
+//!
+//! The residual is a sum/carry pair updated by a single 3:2 compressor per
+//! iteration (§III-B1); the quotient digit comes from a 4-bit estimate of
+//! the shifted pair (Eq. (27)); optional on-the-fly conversion (§III-B3)
+//! and fast final sign/zero detection (§III-B2) model the remaining two
+//! optimizations. All three configurations produce bit-identical results —
+//! they differ only in hardware cost, which [`crate::hardware`] accounts.
+
+use super::carry_save::CsPair;
+use super::otf::Otf;
+use super::selection::sel_srt2_cs;
+use super::{iterations, Algorithm, DivEngine, FracQuotient};
+use crate::posit::frac_bits;
+
+/// SRT radix-2, carry-save residual, with optional OF / FR optimizations.
+pub struct Srt2Cs {
+    use_otf: bool,
+    use_fr: bool,
+    /// Estimate slice width per word: 4 bits (3 integer + 1 fractional,
+    /// what [15] proves convergent — the default) or 3 bits (2 integer +
+    /// 1 fractional, the [36] empirical claim §III-D2 mentions). The
+    /// 3-bit variant is validated against the golden model by the
+    /// `estimate_bits_ablation` test.
+    est_bits: u32,
+}
+
+impl Srt2Cs {
+    pub fn plain() -> Self {
+        Srt2Cs { use_otf: false, use_fr: false, est_bits: 4 }
+    }
+    pub fn with_otf() -> Self {
+        Srt2Cs { use_otf: true, use_fr: false, est_bits: 4 }
+    }
+    pub fn with_otf_fr() -> Self {
+        Srt2Cs { use_otf: true, use_fr: true, est_bits: 4 }
+    }
+    /// The [36] variant: 3-bit estimate slices.
+    pub fn with_narrow_estimate() -> Self {
+        Srt2Cs { use_otf: true, use_fr: true, est_bits: 3 }
+    }
+}
+
+impl DivEngine for Srt2Cs {
+    fn name(&self) -> &'static str {
+        match (self.use_otf, self.use_fr) {
+            (false, _) => "SRT r2 CS",
+            (true, false) => "SRT r2 CS OF",
+            (true, true) => "SRT r2 CS OF FR",
+        }
+    }
+
+    fn algorithm(&self) -> Algorithm {
+        match (self.use_otf, self.use_fr) {
+            (false, _) => Algorithm::Srt2Cs,
+            (true, false) => Algorithm::Srt2CsOf,
+            (true, true) => Algorithm::Srt2CsOfFr,
+        }
+    }
+
+    fn fraction_divide(&self, n: u32, x_sig: u64, d_sig: u64) -> FracQuotient {
+        let f = frac_bits(n);
+        debug_assert!(x_sig >> f == 1 && d_sig >> f == 1);
+        let it = iterations(n, 2);
+
+        // FW = F+2 fractional bits; datapath width adds sign + 3 integer
+        // bits of headroom for the shifted CS words.
+        let fw = f + 2;
+        let width = fw + 4;
+        let d_fp = (d_sig as u128) << 1;
+        let mut w = CsPair::from_value(x_sig as i128, width); // ws(0)=x/2, wc(0)=0
+        let mut q_acc: i128 = 0;
+        let mut otf = Otf::new(1);
+
+        for _ in 0..it {
+            let shifted = w.shl(1);
+            // Eq. (27): each CS word truncated to 1 fractional bit (the
+            // hardware adds 4-bit slices; t is provably in [-5,4] so the
+            // 4-bit two's-complement add cannot wrap).
+            // estimate slices: est_bits per word, wrapping like the
+            // hardware's narrow adder
+            let t_full = shifted.estimate(fw - 1);
+            let t = if self.est_bits >= 5 {
+                t_full
+            } else {
+                // re-wrap to the narrower slice (2 integer + 1 fractional
+                // for the [36] 3-bit variant)
+                let m = (1i64 << self.est_bits) - 1;
+                let sign = 1i64 << (self.est_bits - 1);
+                ((t_full & m) ^ sign) - sign
+            };
+            debug_assert!(
+                self.est_bits < 4 || (-8..8).contains(&t_full),
+                "estimate overflows 4-bit slice"
+            );
+            let digit = sel_srt2_cs(t);
+            // w' = 2w − digit·d as one 3:2 compression. Subtraction adds
+            // the one's complement with a carry-in on the free LSB.
+            w = match digit {
+                1 => shifted.csa(!d_fp, true),
+                -1 => shifted.csa(d_fp, false),
+                _ => shifted,
+            };
+            if self.use_otf {
+                otf.push(digit);
+            } else {
+                q_acc = 2 * q_acc + digit as i128;
+            }
+            // ρ = 1 bound on the true residual value — guaranteed only for
+            // the [15]-proven 4-bit selection; the [36] 3-bit ablation
+            // variant violates it by design (see `estimate_ablation`).
+            debug_assert!(
+                self.est_bits < 4 || w.resolve().abs() <= d_fp as i128,
+                "SRT2-CS residual out of bound"
+            );
+        }
+
+        // Termination: sign and zero of the final CS residual. The FR
+        // variant uses the lookahead networks; the plain one models the
+        // slow CPA conversion (identical values, different hardware cost).
+        let (neg, rem_zero) = if self.use_fr {
+            let neg = w.sign_lookahead();
+            let zero = if neg {
+                // corrected remainder w + d: 3-input zero lookahead
+                w.is_zero_with_addend(d_fp)
+            } else {
+                w.is_zero_lookahead()
+            };
+            (neg, zero)
+        } else {
+            let r = w.resolve();
+            let rem = if r < 0 { r + d_fp as i128 } else { r };
+            (r < 0, rem == 0)
+        };
+
+        let mut mag = if self.use_otf {
+            otf.result(neg)
+        } else {
+            (q_acc - neg as i128) as u128
+        };
+        let mut sticky = !rem_zero;
+        // ρ=1 boundary: w(It) = +d means the true quotient is exactly one
+        // ulp above the accumulated digits (cannot happen with |w|<d).
+        if !neg && !rem_zero {
+            // detect w == d via zero of (w − d): reuse the lookahead
+            let wmd = w.csa(!d_fp, true);
+            if wmd.is_zero_lookahead() {
+                mag += 1;
+                sticky = false;
+            }
+        }
+        FracQuotient { mag, frac_bits: it - 1, sticky, iterations: it }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::division::golden;
+    use crate::posit::mask;
+
+    fn engines() -> [Srt2Cs; 3] {
+        [Srt2Cs::plain(), Srt2Cs::with_otf(), Srt2Cs::with_otf_fr()]
+    }
+
+    #[test]
+    fn srt2cs_equals_golden_random_all_widths() {
+        let mut rng = crate::testkit::Rng::seeded(0xC5C5);
+        for e in engines() {
+            for &n in &[8u32, 10, 16, 24, 32, 48, 64] {
+                let f = frac_bits(n);
+                for _ in 0..3000 {
+                    let x = (1 << f) | (rng.next_u64() & mask(f));
+                    let d = (1 << f) | (rng.next_u64() & mask(f));
+                    let q = e.fraction_divide(n, x, d);
+                    let (g, gs) = golden::frac_divide(n, x, d).refine_to(q.frac_bits);
+                    assert_eq!(
+                        (q.mag, q.sticky),
+                        (g, gs),
+                        "{} n={n} x={x:#x} d={d:#x}",
+                        e.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_variants_bit_identical() {
+        let mut rng = crate::testkit::Rng::seeded(0x1DE7);
+        let [plain, of, offr] = engines();
+        for _ in 0..20_000 {
+            let n = 16;
+            let f = frac_bits(n);
+            let x = (1 << f) | (rng.next_u64() & mask(f));
+            let d = (1 << f) | (rng.next_u64() & mask(f));
+            let a = plain.fraction_divide(n, x, d);
+            let b = of.fraction_divide(n, x, d);
+            let c = offr.fraction_divide(n, x, d);
+            assert_eq!(a, b);
+            assert_eq!(b, c);
+        }
+    }
+
+    #[test]
+    fn srt2cs_full_divide_p8_exhaustive() {
+        for e in engines() {
+            let n = 8;
+            for xb in 0..=mask(n) {
+                for db in 0..=mask(n) {
+                    let x = crate::posit::Posit::from_bits(n, xb);
+                    let d = crate::posit::Posit::from_bits(n, db);
+                    assert_eq!(
+                        e.divide(x, d).result,
+                        golden::divide(x, d).result,
+                        "{} {x:?}/{d:?}",
+                        e.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod estimate_ablation {
+    use super::*;
+    use crate::division::golden;
+    use crate::posit::mask;
+
+    /// §III-D2 cites [36]'s *empirical* claim that "three bits (two
+    /// integer, one fractional) from the carry-save shifted residual are
+    /// good enough". Ablation finding: in this datapath the claim holds
+    /// exhaustively at Posit8, but at Posit16 the estimate value t = −5/2
+    /// (which a 3-bit two's-complement slice aliases to +3/2) IS reachable
+    /// and flips a digit — concrete counterexample below. The paper's
+    /// default 4-bit selection ([15], what our P-D analysis supports) is
+    /// therefore the one all engines use; `with_narrow_estimate` exists to
+    /// reproduce this finding.
+    #[test]
+    fn estimate_bits_ablation() {
+        let e3 = Srt2Cs::with_narrow_estimate();
+        // (a) the empirical claim holds at Posit8 (exhaustive)
+        let n = 8;
+        for xb in 0..=mask(n) {
+            for db in 0..=mask(n) {
+                let x = crate::posit::Posit::from_bits(n, xb);
+                let d = crate::posit::Posit::from_bits(n, db);
+                assert_eq!(e3.divide(x, d).result, golden::divide(x, d).result, "{x:?}/{d:?}");
+            }
+        }
+        // (b) ...but NOT at Posit16: t = −5 in halves occurs and aliases
+        let n = 16;
+        let (x, d) = (0xe0f_u64 | (1 << 11), 0xdfc | (1 << 11));
+        let (x, d) = (x & mask(12), d & mask(12)); // significands w/ hidden 1
+        let q3 = e3.fraction_divide(n, x, d);
+        let (g, gs) = golden::frac_divide(n, x, d).refine_to(q3.frac_bits);
+        assert_ne!(
+            (q3.mag, q3.sticky),
+            (g, gs),
+            "counterexample no longer diverges — [36] claim would hold"
+        );
+        // the 4-bit default handles the same operands correctly
+        let q4 = Srt2Cs::with_otf_fr().fraction_divide(n, x, d);
+        assert_eq!((q4.mag, q4.sticky), (g, gs));
+    }
+}

@@ -1,0 +1,334 @@
+//! SRT radix-4 with carry-save residual — the paper's headline contribution
+//! (first radix-4 digit-recurrence posit divider).
+//!
+//! Minimally-redundant digit set {−2,…,2} (a = 2, ρ = 2/3): divisor
+//! multiples are {±d, ±2d} (a shift — no 3d generation, the reason the
+//! paper picks a=2 over a=3). Quotient-digit selection follows Eq. (28):
+//! a 4-bit truncation of the divisor picks a row of `m_k` constants
+//! ([`crate::division::selection::Srt4Table`]) compared against a 7-bit
+//! carry-save estimate of the shifted residual. Halves the iteration count
+//! of every radix-2 variant (Table II).
+
+use super::carry_save::{CsPair, CsPair64};
+use super::otf::Otf;
+use super::selection::srt4_table;
+use super::{iterations, Algorithm, DivEngine, FracQuotient};
+use crate::posit::frac_bits;
+
+/// SRT radix-4, carry-save residual, with optional OF / FR optimizations.
+pub struct Srt4Cs {
+    use_otf: bool,
+    use_fr: bool,
+}
+
+impl Srt4Cs {
+    pub fn plain() -> Self {
+        Srt4Cs { use_otf: false, use_fr: false }
+    }
+    pub fn with_otf() -> Self {
+        Srt4Cs { use_otf: true, use_fr: false }
+    }
+    pub fn with_otf_fr() -> Self {
+        Srt4Cs { use_otf: true, use_fr: true }
+    }
+}
+
+impl DivEngine for Srt4Cs {
+    fn name(&self) -> &'static str {
+        match (self.use_otf, self.use_fr) {
+            (false, _) => "SRT r4 CS",
+            (true, false) => "SRT r4 CS OF",
+            (true, true) => "SRT r4 CS OF FR",
+        }
+    }
+
+    fn algorithm(&self) -> Algorithm {
+        match (self.use_otf, self.use_fr) {
+            (false, _) => Algorithm::Srt4Cs,
+            (true, false) => Algorithm::Srt4CsOf,
+            (true, true) => Algorithm::Srt4CsOfFr,
+        }
+    }
+
+    fn fraction_divide(&self, n: u32, x_sig: u64, d_sig: u64) -> FracQuotient {
+        let f = frac_bits(n);
+        assert!(n >= 8, "radix-4 engines require n >= 8 (4-bit divisor truncation)");
+        debug_assert!(x_sig >> f == 1 && d_sig >> f == 1);
+        let it = iterations(n, 4);
+
+        // [1/2,1) convention; FW = F+3 fractional bits so that
+        // w(0) = x/4 = x_sig exactly; sign + 3 integer bits of headroom
+        // (|4w| < 8/3): total datapath FW+4 — the paper's
+        // n−2+log2(r)−⌊ρ⌋ plus the sign-magnitude convention's offset.
+        let fw = f + 3;
+        let width = fw + 4;
+        // Hot path: the whole datapath fits one machine word for n ≤ 57
+        // (§Perf: ~1.7x over the u128 reference path; bit-identical, see
+        // narrow_path_equals_wide_path).
+        if width <= 64 {
+            self.frac_divide_narrow(n, x_sig, d_sig, fw, width, it)
+        } else {
+            self.frac_divide_wide(n, x_sig, d_sig, fw, width, it)
+        }
+    }
+}
+
+impl Srt4Cs {
+    /// Reference (u128) datapath — kept for the §Perf ablation and for
+    /// widths whose datapath exceeds one machine word.
+    #[doc(hidden)]
+    pub fn frac_divide_wide_for_bench(&self, n: u32, x_sig: u64, d_sig: u64) -> FracQuotient {
+        let f = frac_bits(n);
+        let fw = f + 3;
+        self.frac_divide_wide(n, x_sig, d_sig, fw, fw + 4, iterations(n, 4))
+    }
+
+    fn frac_divide_wide(
+        &self,
+        n: u32,
+        x_sig: u64,
+        d_sig: u64,
+        fw: u32,
+        width: u32,
+        it: u32,
+    ) -> FracQuotient {
+        let f = frac_bits(n);
+        let table = srt4_table();
+        let d_fp = (d_sig as u128) << 2;
+        // Eq. (28) divisor truncation: 4 fractional bits of d ∈ [1/2,1).
+        let dhat = (d_sig >> (f - 3)) as u32;
+        debug_assert!((8..16).contains(&dhat));
+
+        let mut w = CsPair::from_value(x_sig as i128, width);
+        let mut q_acc: i128 = 0;
+        let mut otf = Otf::new(2);
+
+        for _ in 0..it {
+            let shifted = w.shl(2);
+            // 7-bit estimate: each word truncated to 4 fractional bits.
+            let t = shifted.estimate(fw - 4);
+            debug_assert!((-64..64).contains(&t), "estimate {t} overflows 7-bit slice");
+            let digit = table.select(dhat, t);
+            w = match digit {
+                2 => shifted.csa(!(d_fp << 1), true),
+                1 => shifted.csa(!d_fp, true),
+                -1 => shifted.csa(d_fp, false),
+                -2 => shifted.csa(d_fp << 1, false),
+                _ => shifted,
+            };
+            if self.use_otf {
+                otf.push(digit);
+            } else {
+                q_acc = 4 * q_acc + digit as i128;
+            }
+            // ρ = 2/3 bound: 3|w| ≤ 2d.
+            debug_assert!(
+                3 * w.resolve().abs() <= 2 * d_fp as i128,
+                "SRT4-CS residual out of bound"
+            );
+        }
+
+        let (neg, rem_zero) = if self.use_fr {
+            let neg = w.sign_lookahead();
+            let zero =
+                if neg { w.is_zero_with_addend(d_fp) } else { w.is_zero_lookahead() };
+            (neg, zero)
+        } else {
+            let r = w.resolve();
+            let rem = if r < 0 { r + d_fp as i128 } else { r };
+            (r < 0, rem == 0)
+        };
+
+        let mag = if self.use_otf {
+            otf.result(neg)
+        } else {
+            (q_acc - neg as i128) as u128
+        };
+        // q_total = 4·q(It) = mag·2^−(2It−2) ∈ (1/2, 2).
+        FracQuotient {
+            mag,
+            frac_bits: 2 * it - 2,
+            sticky: !rem_zero,
+            iterations: it,
+        }
+    }
+
+    /// Machine-word datapath — bit-identical to the wide path (§Perf).
+    ///
+    /// Fully branchless inner loop: the quotient digit is data-dependent
+    /// and mispredicts badly as a 5-way branch, so the divisor-multiple
+    /// selection, the CSA subtraction and the on-the-fly conversion are
+    /// all computed with masks and conditional moves.
+    fn frac_divide_narrow(
+        &self,
+        n: u32,
+        x_sig: u64,
+        d_sig: u64,
+        fw: u32,
+        width: u32,
+        it: u32,
+    ) -> FracQuotient {
+        let f = frac_bits(n);
+        let table = srt4_table();
+        let d_fp = d_sig << 2;
+        let dhat = (d_sig >> (f - 3)) as u32;
+        debug_assert!((8..16).contains(&dhat));
+        let row = &table.m[dhat as usize - 8];
+        let (m_n1, m_0, m_1, m_2) =
+            (row[0] as i64, row[1] as i64, row[2] as i64, row[3] as i64);
+
+        let m = super::carry_save::wmask64(width);
+        let drop = fw - 4;
+        let slice_bits = width - drop; // 8-bit slice; sign-extend constant
+        let slice_sign = 1u64 << (slice_bits - 1);
+        let slice_mask = (1u64 << slice_bits) - 1;
+
+        let (mut ws, mut wc) = (x_sig & m, 0u64);
+        let (mut q, mut qd) = (0u64, 0u64);
+        let mut q_acc: i64 = 0;
+
+        for _ in 0..it {
+            let sws = (ws << 2) & m;
+            let swc = (wc << 2) & m;
+            // 7-bit slice estimate (wrapping slice add + sign extension)
+            let sum = (sws >> drop).wrapping_add(swc >> drop) & slice_mask;
+            let t = (sum ^ slice_sign) as i64 - slice_sign as i64;
+            // digit = -2 + #(thresholds <= t): branchless comparisons
+            let digit = (t >= m_n1) as i32 + (t >= m_0) as i32 + (t >= m_1) as i32
+                + (t >= m_2) as i32
+                - 2;
+            // multiple magnitude: 0, d, or 2d — all mask arithmetic
+            let ad = digit.unsigned_abs() as u64; // 0, 1, 2
+            let nonzero = 0u64.wrapping_sub((ad != 0) as u64);
+            let mag = (d_fp << (ad >> 1)) & nonzero;
+            // subtract positive multiples: one's complement + carry-in
+            let negm = 0u64.wrapping_sub((digit > 0) as u64);
+            let addend = (mag ^ negm) & m;
+            let cin = (digit > 0) as u64;
+            // 3:2 compression
+            let x1 = sws ^ swc ^ addend;
+            let maj = (sws & swc) | (sws & addend) | (swc & addend);
+            ws = x1 & m;
+            wc = ((maj << 1) | cin) & m;
+            if self.use_otf {
+                // Eqs. (18)-(19), branchless: both concatenation sources
+                // are selected by sign tests the compiler turns into cmovs
+                let base_q = if digit >= 0 { q } else { qd };
+                let base_qd = if digit > 0 { q } else { qd };
+                q = (base_q << 2) | (digit & 3) as u64;
+                qd = (base_qd << 2) | ((digit - 1) & 3) as u64;
+            } else {
+                q_acc = 4 * q_acc + digit as i64;
+            }
+        }
+
+        let w = CsPair64 { s: ws, c: wc, w: width };
+        let (neg, rem_zero) = if self.use_fr {
+            let neg = w.sign_lookahead();
+            let zero =
+                if neg { w.is_zero_with_addend(d_fp) } else { w.is_zero_lookahead() };
+            (neg, zero)
+        } else {
+            let r = w.resolve();
+            let rem = if r < 0 { r + d_fp as i64 } else { r };
+            (r < 0, rem == 0)
+        };
+
+        let mag = if self.use_otf {
+            (if neg { qd } else { q }) as u128
+        } else {
+            (q_acc - neg as i64) as u128
+        };
+        FracQuotient { mag, frac_bits: 2 * it - 2, sticky: !rem_zero, iterations: it }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::division::golden;
+    use crate::posit::mask;
+
+    fn engines() -> [Srt4Cs; 3] {
+        [Srt4Cs::plain(), Srt4Cs::with_otf(), Srt4Cs::with_otf_fr()]
+    }
+
+    #[test]
+    fn srt4cs_equals_golden_random_all_widths() {
+        let mut rng = crate::testkit::Rng::seeded(0x47C5);
+        for e in engines() {
+            for &n in &[8u32, 10, 16, 24, 32, 48, 64] {
+                let f = frac_bits(n);
+                for _ in 0..3000 {
+                    let x = (1 << f) | (rng.next_u64() & mask(f));
+                    let d = (1 << f) | (rng.next_u64() & mask(f));
+                    let q = e.fraction_divide(n, x, d);
+                    let (g, gs) = golden::frac_divide(n, x, d).refine_to(q.frac_bits);
+                    assert_eq!(
+                        (q.mag, q.sticky),
+                        (g, gs),
+                        "{} n={n} x={x:#x} d={d:#x}",
+                        e.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn srt4cs_full_divide_p8_exhaustive() {
+        for e in engines() {
+            let n = 8;
+            for xb in 0..=mask(n) {
+                for db in 0..=mask(n) {
+                    let x = crate::posit::Posit::from_bits(n, xb);
+                    let d = crate::posit::Posit::from_bits(n, db);
+                    assert_eq!(
+                        e.divide(x, d).result,
+                        golden::divide(x, d).result,
+                        "{} {x:?}/{d:?}",
+                        e.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn srt4_halves_iterations() {
+        let e4 = Srt4Cs::plain();
+        let f = frac_bits(32);
+        let q = e4.fraction_divide(32, 1 << f, (1 << f) | 1234567);
+        assert_eq!(q.iterations, 16); // Table II
+    }
+}
+
+#[cfg(test)]
+mod narrow_tests {
+    use super::*;
+    use crate::posit::mask;
+
+    #[test]
+    fn narrow_path_equals_wide_path() {
+        let mut rng = crate::testkit::Rng::seeded(0x6464);
+        for e in [Srt4Cs::plain(), Srt4Cs::with_otf(), Srt4Cs::with_otf_fr()] {
+            for &n in &[8u32, 16, 32, 48] {
+                let f = frac_bits(n);
+                let fw = f + 3;
+                let width = fw + 4;
+                assert!(width <= 64, "test formats must use the narrow path");
+                let it = iterations(n, 4);
+                for _ in 0..5000 {
+                    let x = (1 << f) | (rng.next_u64() & mask(f));
+                    let d = (1 << f) | (rng.next_u64() & mask(f));
+                    assert_eq!(
+                        e.frac_divide_narrow(n, x, d, fw, width, it),
+                        e.frac_divide_wide(n, x, d, fw, width, it),
+                        "{} n={n} x={x:#x} d={d:#x}",
+                        e.name()
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,160 @@
+//! SRT radix-4 with operand scaling (§III-B4, Table I, Eq. (29)).
+//!
+//! Both operands are pre-multiplied by the Table I factor `M ≈ 1/d`
+//! (a shift-add, one extra cycle), bringing the divisor into
+//! `[1 − 1/64, 1 + 1/8]` so the quotient-digit selection becomes
+//! divisor-independent: five constants on a 6-bit estimate (Eq. (29))
+//! instead of the 8-row `m_k(d̂)` table. The quotient is unchanged
+//! (`Mx/Md = x/d`); the residual datapath carries three extra fractional
+//! bits for the exact scaled operands.
+//!
+//! This engine always includes the CS + OF + FR optimizations (the paper
+//! evaluates scaling as an addition on top of the optimized radix-4 unit).
+
+use super::carry_save::CsPair;
+use super::otf::Otf;
+use super::scaling::{scale, table_index};
+use super::selection::sel_srt4_scaled;
+use super::{iterations, Algorithm, DivEngine, FracQuotient};
+use crate::posit::frac_bits;
+
+/// Radix-4 divider with operand scaling.
+pub struct Srt4Scaled;
+
+impl Srt4Scaled {
+    pub fn new() -> Self {
+        Srt4Scaled
+    }
+}
+
+impl Default for Srt4Scaled {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DivEngine for Srt4Scaled {
+    fn name(&self) -> &'static str {
+        "SRT r4 scaled"
+    }
+
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::Srt4Scaled
+    }
+
+    fn fraction_divide(&self, n: u32, x_sig: u64, d_sig: u64) -> FracQuotient {
+        let f = frac_bits(n);
+        assert!(n >= 8, "scaled radix-4 requires n >= 8 (3 divisor fraction bits)");
+        debug_assert!(x_sig >> f == 1 && d_sig >> f == 1);
+        let it = iterations(n, 4);
+
+        // FW = F+6 fractional bits: F+1 significand bits ([1/2,1)
+        // convention) + 3 for the exact ×M shift-add + 2 for the ÷4
+        // initialization. Headroom: sign + 3 integer bits.
+        let fw = f + 6;
+        let width = fw + 4;
+
+        // Scaling step (the +1 cycle): idx from the 3 fraction bits of d.
+        let idx = table_index(d_sig as u128, f + 1);
+        let zd = scale((d_sig as u128) << 5, idx); // M·d, exact in FW units
+        let zx = scale((x_sig as u128) << 5, idx); // M·x
+        debug_assert!(zx & 0b11 == 0, "M·x has two spare LSBs (multiple of 4)");
+
+        // Scaled-divisor guarantee of [33],[34]: M·d ∈ [1 − 1/64, 1 + 1/8].
+        debug_assert!(
+            zd >= (63u128 << (fw - 6)) && zd <= (9u128 << (fw - 3)),
+            "scaled divisor out of [63/64, 9/8]"
+        );
+
+        let mut w = CsPair::from_value((zx >> 2) as i128, width); // w(0) = Mx/4
+        let mut otf = Otf::new(2);
+
+        for _ in 0..it {
+            let shifted = w.shl(2);
+            // Eq. (29): 6-bit estimate — 3 integer + 3 fractional bits.
+            let t = shifted.estimate(fw - 3);
+            debug_assert!((-32..32).contains(&t), "estimate {t} overflows 6-bit slice");
+            let digit = sel_srt4_scaled(t);
+            w = match digit {
+                2 => shifted.csa(!(zd << 1), true),
+                1 => shifted.csa(!zd, true),
+                -1 => shifted.csa(zd, false),
+                -2 => shifted.csa(zd << 1, false),
+                _ => shifted,
+            };
+            otf.push(digit);
+            // ρ = 2/3 bound w.r.t. the *scaled* divisor.
+            debug_assert!(
+                3 * w.resolve().unsigned_abs() <= 2 * zd,
+                "scaled residual out of bound"
+            );
+        }
+
+        // FR termination on the scaled remainder (zero iff true remainder
+        // is zero: M > 0 and the scaling is exact).
+        let neg = w.sign_lookahead();
+        let rem_zero = if neg { w.is_zero_with_addend(zd) } else { w.is_zero_lookahead() };
+
+        FracQuotient {
+            mag: otf.result(neg),
+            frac_bits: 2 * it - 2,
+            sticky: !rem_zero,
+            iterations: it,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::division::golden;
+    use crate::posit::mask;
+
+    #[test]
+    fn scaled_equals_golden_random_all_widths() {
+        let mut rng = crate::testkit::Rng::seeded(0x5CA1ED);
+        let e = Srt4Scaled::new();
+        for &n in &[8u32, 10, 16, 24, 32, 48, 64] {
+            let f = frac_bits(n);
+            for _ in 0..4000 {
+                let x = (1 << f) | (rng.next_u64() & mask(f));
+                let d = (1 << f) | (rng.next_u64() & mask(f));
+                let q = e.fraction_divide(n, x, d);
+                let (g, gs) = golden::frac_divide(n, x, d).refine_to(q.frac_bits);
+                assert_eq!((q.mag, q.sticky), (g, gs), "n={n} x={x:#x} d={d:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn scaled_full_divide_p8_exhaustive() {
+        let e = Srt4Scaled::new();
+        let n = 8;
+        for xb in 0..=mask(n) {
+            for db in 0..=mask(n) {
+                let x = crate::posit::Posit::from_bits(n, xb);
+                let d = crate::posit::Posit::from_bits(n, db);
+                assert_eq!(e.divide(x, d).result, golden::divide(x, d).result, "{x:?}/{d:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn scaled_matches_unscaled_radix4() {
+        // Same quotients as the unscaled radix-4 engine (both are exact).
+        let mut rng = crate::testkit::Rng::seeded(0x5C2);
+        let a = Srt4Scaled::new();
+        let b = crate::division::srt4_cs::Srt4Cs::with_otf_fr();
+        for _ in 0..10_000 {
+            let n = 32;
+            let f = frac_bits(n);
+            let x = (1 << f) | (rng.next_u64() & mask(f));
+            let d = (1 << f) | (rng.next_u64() & mask(f));
+            assert_eq!(
+                a.fraction_divide(n, x, d),
+                b.fraction_divide(n, x, d),
+                "x={x:#x} d={d:#x}"
+            );
+        }
+    }
+}

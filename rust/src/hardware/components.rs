@@ -1,0 +1,229 @@
+//! Unit-gate component library.
+//!
+//! Each function returns the [`Cost`] (area in gate-equivalents, delay in
+//! unit-gate τ) of a datapath component at a given bit width, using the
+//! classic unit-gate conventions (FA: 7 GE / 4τ, 2-input gate: 1 GE / 1τ,
+//! XOR: 2.2 GE / 2τ, DFF: 5.5 GE) plus log-depth models for prefix adders,
+//! shifters and counters. [`designs`](super::designs) composes these into
+//! the paper's divider variants.
+
+/// Area (GE) and critical-path delay (τ) of a component.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Cost {
+    pub area: f64,
+    pub delay: f64,
+}
+
+impl Cost {
+    pub const ZERO: Cost = Cost { area: 0.0, delay: 0.0 };
+
+    pub fn new(area: f64, delay: f64) -> Cost {
+        Cost { area, delay }
+    }
+
+    /// Serial composition: areas add, delays add.
+    pub fn then(self, next: Cost) -> Cost {
+        Cost { area: self.area + next.area, delay: self.delay + next.delay }
+    }
+
+    /// Parallel composition: areas add, delay is the max.
+    pub fn beside(self, other: Cost) -> Cost {
+        Cost { area: self.area + other.area, delay: self.delay.max(other.delay) }
+    }
+
+    /// Replicate `k` instances in parallel (same path depth).
+    pub fn times(self, k: f64) -> Cost {
+        Cost { area: self.area * k, delay: self.delay }
+    }
+
+    /// Area only (off the critical path).
+    pub fn area_only(self) -> Cost {
+        Cost { area: self.area, delay: 0.0 }
+    }
+}
+
+#[inline]
+fn lg(w: u32) -> f64 {
+    (w.max(2) as f64).log2().ceil()
+}
+
+/// 3:2 carry-save adder row (one FA per bit).
+pub fn csa(w: u32) -> Cost {
+    Cost::new(7.0 * w as f64, 4.0)
+}
+
+/// Parallel-prefix (Kogge-Stone-class) carry-propagate adder — what a
+/// timing-driven synthesis run instantiates.
+pub fn cpa_prefix(w: u32) -> Cost {
+    let wf = w as f64;
+    Cost::new(3.0 * wf + 2.5 * wf * lg(w), 2.0 * lg(w) + 4.0)
+}
+
+/// Ripple-carry adder — what an area-optimizing run with *no timing
+/// constraint* instantiates (the paper's combinational synthesis mode).
+pub fn cpa_ripple(w: u32) -> Cost {
+    Cost::new(7.0 * w as f64, 2.0 * w as f64 + 2.0)
+}
+
+/// Adder selection mirroring the synthesis mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdderStyle {
+    /// Min-area mapping (combinational, unconstrained): ripple carry.
+    AreaOptimized,
+    /// Timing-driven mapping (pipelined @1.5 GHz): parallel prefix.
+    TimingDriven,
+}
+
+/// Carry-propagate adder in the given style.
+pub fn cpa(style: AdderStyle, w: u32) -> Cost {
+    match style {
+        AdderStyle::AreaOptimized => cpa_ripple(w),
+        AdderStyle::TimingDriven => cpa_prefix(w),
+    }
+}
+
+/// Short carry-select adder for selection-function estimates (w ≤ 8):
+/// shallow and cheap because both carry polarities are precomputed.
+pub fn est_adder(w: u32) -> Cost {
+    debug_assert!(w <= 8);
+    Cost::new(10.0 * w as f64, 4.0 + w as f64 / 2.0)
+}
+
+/// 2:1 multiplexer row.
+pub fn mux2(w: u32) -> Cost {
+    Cost::new(3.0 * w as f64, 2.0)
+}
+
+/// 4:1 one-hot multiplexer row (AOI implementation).
+pub fn mux4(w: u32) -> Cost {
+    Cost::new(8.0 * w as f64, 3.0)
+}
+
+/// Conditional inverter row (XOR with a control line).
+pub fn xor_row(w: u32) -> Cost {
+    Cost::new(2.2 * w as f64, 2.0)
+}
+
+/// Register (DFF) row — area only; the sequencing overhead lives in
+/// `Tech::reg_overhead_tau`.
+pub fn reg(w: u32) -> Cost {
+    Cost::new(5.5 * w as f64, 0.0)
+}
+
+/// Leading-zero counter (for posit regime decode / normalization).
+pub fn lzc(w: u32) -> Cost {
+    Cost::new(2.0 * w as f64 + 0.5 * w as f64 * lg(w), 2.0 * lg(w) + 2.0)
+}
+
+/// Logarithmic barrel shifter.
+pub fn shifter(w: u32) -> Cost {
+    Cost::new(3.0 * w as f64 * lg(w), 2.0 * lg(w))
+}
+
+/// Zero-detect over a conventional word (NOR reduction tree).
+pub fn zero_tree(w: u32) -> Cost {
+    Cost::new(1.2 * w as f64, lg(w) + 1.0)
+}
+
+/// §III-B2 sign+zero lookahead network over a carry-save pair: an XOR/OR
+/// preprocessing row feeding a pruned prefix tree (carries only, no sum
+/// muxes) — faster and smaller than resolving with a full CPA + zero tree.
+pub fn cs_sign_zero_lookahead(w: u32) -> Cost {
+    let wf = w as f64;
+    Cost::new(4.5 * wf + 1.2 * wf * lg(w), 2.0 * lg(w) + 2.0)
+}
+
+/// Selection-function logic (after the estimate adder).
+pub mod sel {
+    use super::Cost;
+
+    /// Eq. (26)/(27): a handful of gates on ≤4 bits.
+    pub fn radix2() -> Cost {
+        Cost::new(10.0, 2.0)
+    }
+
+    /// Eq. (28): the 8×4 `m_k(d̂)` threshold PLA + comparators.
+    pub fn radix4_table() -> Cost {
+        Cost::new(170.0, 4.0)
+    }
+
+    /// Eq. (29): five fixed thresholds on 6 bits.
+    pub fn radix4_const() -> Cost {
+        Cost::new(35.0, 2.0)
+    }
+
+    /// Table I scaling-factor selection (3 bits → 2 shift amounts).
+    pub fn scaling_factor() -> Cost {
+        Cost::new(25.0, 2.0)
+    }
+}
+
+/// Array multiplier with a CSA reduction tree and prefix final adder
+/// (for the Newton–Raphson baseline).
+pub fn multiplier(w: u32) -> Cost {
+    let wf = w as f64;
+    // partial products w², reduction ~log3/2 depth, final CPA 2w bits
+    let tree_levels = (wf.log2() / (1.5f64).log2()).ceil();
+    Cost::new(1.5 * wf * wf + 7.0 * wf * (wf - 2.0).max(1.0), 4.0 * tree_levels)
+        .then(cpa_prefix(2 * w))
+}
+
+/// Reciprocal seed lookup table (2^idx × out bits, as synthesized logic).
+pub fn lut(index_bits: u32, out_bits: u32) -> Cost {
+    let words = (1u64 << index_bits) as f64;
+    Cost::new(0.4 * words * out_bits as f64, 2.0 * index_bits as f64 / 2.0 + 2.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn composition_laws() {
+        let a = Cost::new(10.0, 5.0);
+        let b = Cost::new(20.0, 3.0);
+        assert_eq!(a.then(b), Cost::new(30.0, 8.0));
+        assert_eq!(a.beside(b), Cost::new(30.0, 5.0));
+        assert_eq!(a.times(3.0), Cost::new(30.0, 5.0));
+    }
+
+    #[test]
+    fn adder_scaling_is_logarithmic() {
+        // prefix adder: doubling width adds a constant ~2τ.
+        let d32 = cpa_prefix(32).delay;
+        let d64 = cpa_prefix(64).delay;
+        assert!((d64 - d32 - 2.0).abs() < 1e-9);
+        // area grows superlinearly
+        assert!(cpa_prefix(64).area > 2.0 * cpa_prefix(32).area * 0.9);
+    }
+
+    #[test]
+    fn csa_depth_is_constant() {
+        assert_eq!(csa(16).delay, csa(128).delay);
+    }
+
+    #[test]
+    fn lookahead_cheaper_than_resolve() {
+        // FR's termination advantage: lookahead sign/zero vs full CPA +
+        // zero tree, at every paper width's datapath.
+        for w in [18u32, 34, 66] {
+            let fr = cs_sign_zero_lookahead(w);
+            let slow = cpa_prefix(w).then(zero_tree(w));
+            assert!(fr.delay < slow.delay, "w={w}");
+            assert!(fr.area < slow.area, "w={w}");
+        }
+    }
+
+    #[test]
+    fn estimate_adders_shallow() {
+        // The whole point of truncated estimates: far shallower than the
+        // full-width CPA they replace.
+        assert!(est_adder(4).delay < cpa_prefix(34).delay / 2.0);
+        assert!(est_adder(7).delay < cpa_prefix(34).delay);
+    }
+
+    #[test]
+    fn multiplier_dominates_adders() {
+        assert!(multiplier(28).area > 10.0 * cpa_prefix(28).area);
+    }
+}

@@ -1,0 +1,292 @@
+//! Elaboration of every Table IV divider design into component netlists.
+//!
+//! Each design is described by its pipeline *stages* (decode, optional
+//! scaling, the recurrence slice, termination, encode) built from
+//! [`components`](super::components). [`synth`](super::synth) then costs a
+//! design either **combinationally** (slices replicated `It` times, no
+//! registers, delays chained) or **pipelined** (one slice + state
+//! registers per stage boundary, one iteration per cycle at the 1.5 GHz
+//! target — the paper's two evaluation modes).
+
+use super::components::{self as c, sel, AdderStyle, Cost};
+use crate::division::{iterations, latency_cycles, Algorithm};
+use crate::posit::frac_bits;
+
+/// Widths of the recurrence datapath for a given algorithm/format —
+/// consistent with the engines' fixed-point layouts (§III-E1).
+pub fn residual_width(alg: Algorithm, n: u32) -> u32 {
+    let f = frac_bits(n);
+    match alg.radix() {
+        Some(2) => f + 2 + 4,                       // FW = F+2, sign + 3 integer bits
+        Some(4) if alg.uses_scaling() => f + 6 + 4, // FW = F+6
+        Some(4) => f + 3 + 4,                       // FW = F+3
+        Some(r) => panic!("unsupported radix {r}"),
+        None => f + 9,                              // Newton: Q(f+8) reciprocal path
+    }
+}
+
+/// Quotient length h (Eq. (30)).
+pub fn quotient_bits(alg: Algorithm, n: u32) -> u32 {
+    match alg.radix() {
+        Some(2) => n - 2,
+        Some(4) => n - 1,
+        Some(r) => panic!("unsupported radix {r}"),
+        None => n,
+    }
+}
+
+/// Divisor-multiple generation {0, ±d}: conditional invert + zero mask.
+fn multiple_gen_r2(w: u32) -> Cost {
+    c::xor_row(w).then(Cost::new(1.0 * w as f64, 1.0))
+}
+
+/// Divisor-multiple generation {0, ±d, ±2d}: 2:1 shift mux + invert + mask.
+fn multiple_gen_r4(w: u32) -> Cost {
+    c::mux2(w).then(c::xor_row(w)).then(Cost::new(1.0 * w as f64, 1.0))
+}
+
+/// A fully-elaborated design, stage by stage.
+#[derive(Clone, Debug)]
+pub struct Design {
+    pub alg: Algorithm,
+    pub n: u32,
+    /// Posit field extraction: sign handling, regime LZC, fraction align.
+    pub decode: Cost,
+    /// Operand pre-scaling stage (Table I), if any.
+    pub scaling: Option<Cost>,
+    /// One digit-recurrence iteration (selection + multiple gen + update +
+    /// quotient path update).
+    pub slice: Cost,
+    /// Iteration count (Table II).
+    pub iterations: u32,
+    /// Recurrence state carried between iterations (bits to register in
+    /// the pipelined mapping): residual (1 or 2 words) + quotient regs.
+    pub state_bits: u32,
+    /// Sign/zero of final residual, correction, sticky.
+    pub termination: Cost,
+    /// Normalization, regime/exponent assembly, rounding, two's comp.
+    pub encode: Cost,
+    /// Pipelined latency in cycles (§III-E3).
+    pub cycles: u32,
+}
+
+/// Elaborate `alg` at width `n` with the timing-driven mapping (the
+/// pipelined synthesis mode).
+pub fn elaborate(alg: Algorithm, n: u32) -> Design {
+    elaborate_styled(alg, n, AdderStyle::TimingDriven)
+}
+
+/// Elaborate `alg` at width `n`, choosing adder structures per the
+/// synthesis mode (area-optimized ripple vs timing-driven prefix — what an
+/// unconstrained vs 1.5 GHz-constrained DC run instantiates).
+pub fn elaborate_styled(alg: Algorithm, n: u32, style: AdderStyle) -> Design {
+    let f = frac_bits(n);
+    let w = residual_width(alg, n);
+    let h = quotient_bits(alg, n);
+    let cpa = |w: u32| c::cpa(style, w);
+
+    // ---- shared front/back end (Fig. 2) ----
+    // decode: regime LZC on the conditionally-inverted word (the +1 of the
+    // two's complement is a cheap parallel fix-up) + fraction alignment
+    // shift, both operands in parallel; scale subtraction (Eq. 7) is a
+    // narrow adder off the critical path.
+    let one_decode = c::xor_row(n)
+        .then(c::lzc(n))
+        .then(c::shifter(n))
+        .then(Cost::new(2.0 * n as f64, 4.0)); // +1 fix-up / hidden bit
+    let decode = one_decode.beside(one_decode).then(cpa(12).area_only());
+
+    // encode: normalization shift + regime/exponent assembly + a compound
+    // round-increment/negate adder (one CPA + selection) + saturation.
+    let encode = c::shifter(n)
+        .then(Cost::new(2.0 * n as f64, 3.0)) // regime assembly muxes
+        .then(cpa(n)) // compound rounding/negation increment
+        .then(c::xor_row(n))
+        .then(Cost::new(1.5 * n as f64, 2.0)); // saturation / special mux
+
+    // ---- per-variant recurrence slice ----
+    let (slice, state_bits, uses_cs) = match alg {
+        Algorithm::Nrd | Algorithm::NrdAsap23 => {
+            // digit ∈ {−1,1}: ±d is a conditional invert (+ carry-in);
+            // sign comes free from the previous CPA's MSB.
+            let s = c::xor_row(w).then(cpa(w));
+            (s, w + h, false)
+        }
+        Algorithm::Srt2 => {
+            // Eq. (26) on 2 MSBs + {0,±d} gen (invert + zero-AND) + CPA
+            let s = sel::radix2().then(multiple_gen_r2(w)).then(cpa(w));
+            (s, w + 2 * h, false)
+        }
+        Algorithm::Srt2Cs | Algorithm::Srt2CsOf | Algorithm::Srt2CsOfFr => {
+            // 4-bit estimate adder + Eq. (27) + {0,±d} gen + CSA; the
+            // second residual word costs wiring/buffering, not logic.
+            let s = c::est_adder(4)
+                .then(sel::radix2())
+                .then(multiple_gen_r2(w))
+                .then(c::csa(w))
+                .beside(Cost::new(1.5 * w as f64, 0.0)); // 2nd-word routing
+            (s, 2 * w + 2 * h, true)
+        }
+        Algorithm::Srt4Cs | Algorithm::Srt4CsOf | Algorithm::Srt4CsOfFr => {
+            // 7-bit estimate adder + m_k(d̂) table + {0,±d,±2d} gen + CSA
+            let s = c::est_adder(7)
+                .then(sel::radix4_table())
+                .then(multiple_gen_r4(w))
+                .then(c::csa(w))
+                .beside(Cost::new(1.5 * w as f64, 0.0));
+            (s, 2 * w + 2 * h, true)
+        }
+        Algorithm::Srt4Scaled => {
+            // 6-bit estimate + Eq. (29) constants + {0,±d,±2d} gen + CSA
+            let s = c::est_adder(6)
+                .then(sel::radix4_const())
+                .then(multiple_gen_r4(w))
+                .then(c::csa(w))
+                .beside(Cost::new(1.5 * w as f64, 0.0));
+            (s, 2 * w + 2 * h, true)
+        }
+        Algorithm::Newton => {
+            // one NR step = two multiplications (modelled as the slice;
+            // iterations = NR steps, each 2 cycles in the cycle model)
+            let mul = c::multiplier((f + 8).min(64));
+            (mul.then(mul), 2 * (f + 9), false)
+        }
+    };
+
+    // On-the-fly conversion adds the Q/QD concatenation muxes to the slice
+    // (two muxes of average width h/2, driven by the digit — a wide fanout
+    // that costs a few τ, which is the "slight delay increase" the paper
+    // observes on the radix-2 combinational designs where the recurrence
+    // slice itself is very shallow).
+    let slice = if alg.uses_otf() {
+        slice
+            .beside(Cost::new(3.0 * h as f64 + 12.0, 0.0)) // Q/QD muxes
+            .then(Cost::new(0.0, 2.0)) // digit fanout + select buffering
+    } else {
+        slice
+    };
+
+    // ---- scaling stage (Table I): select M, then one CSA level + CPA for
+    // each operand (shift-add; exact, 3 extra fraction bits), plus the
+    // buffering needed to broadcast the scaled divisor to the recurrence
+    // and termination datapaths — which is why this stage ends up the
+    // longest path of the pipelined scaled design (§IV).
+    let scaling = alg.uses_scaling().then(|| {
+        sel::scaling_factor()
+            .then(c::csa(w).beside(c::csa(w)))
+            .then(cpa(w).beside(cpa(w)))
+            .then(c::mux2(w).beside(c::mux2(w)))
+            .then(Cost::new(3.0 * w as f64, 10.0)) // broadcast buffering
+    });
+
+    // ---- termination (§III-F): final sign + zero (sticky) + correction ----
+    let termination = if alg == Algorithm::Newton {
+        // final q = x·y multiply, exact remainder q·d (second multiplier
+        // reused), fix-up compare + sticky
+        c::multiplier((f + 8).min(64)).then(cpa(w)).then(c::zero_tree(w))
+    } else if uses_cs {
+        if alg.uses_fast_remainder() {
+            // lookahead sign + zero networks; correction via OTF select
+            c::cs_sign_zero_lookahead(w).then(c::mux2(h))
+        } else if alg.uses_otf() {
+            // resolve with CPA (sign + zero tree); correction via OTF select
+            cpa(w).then(c::zero_tree(w)).then(c::mux2(h))
+        } else {
+            // residual resolve (sign + sticky zero) in parallel with the
+            // signed-digit conversion subtract P−N (a compound adder
+            // producing q and q−1); the sign then selects — the two CPAs
+            // are independent, so the path is their max, not their sum.
+            cpa(w)
+                .then(c::zero_tree(w))
+                .beside(cpa(h).then(c::mux2(h)))
+        }
+    } else {
+        // non-redundant residual: sign is free; zero tree + quotient
+        // conversion/decrement CPA
+        c::zero_tree(w).then(cpa(h))
+    };
+
+    Design {
+        alg,
+        n,
+        decode,
+        scaling,
+        slice,
+        iterations: match alg {
+            Algorithm::Newton => crate::division::newton::Newton::new().nr_steps(n),
+            Algorithm::NrdAsap23 => iterations(n, 2) + 1,
+            a => iterations(n, a.radix().unwrap()),
+        },
+        state_bits,
+        termination,
+        encode,
+        cycles: latency_cycles(n, alg),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn widths_match_engine_layouts() {
+        // r2: FW+4 = F+6; r4: F+7; scaled: F+10 — the same layouts the
+        // bit-exact engines use.
+        assert_eq!(residual_width(Algorithm::Srt2Cs, 32), 27 + 6);
+        assert_eq!(residual_width(Algorithm::Srt4Cs, 32), 27 + 7);
+        assert_eq!(residual_width(Algorithm::Srt4Scaled, 32), 27 + 10);
+    }
+
+    #[test]
+    fn cs_slice_shallower_than_cpa_slice() {
+        // The §III-B1 claim: CS iteration beats the CPA iteration at every
+        // format, and the gap grows with n.
+        for n in [16u32, 32, 64] {
+            let plain = elaborate(Algorithm::Srt2, n).slice.delay;
+            let cs = elaborate(Algorithm::Srt2Cs, n).slice.delay;
+            assert!(cs < plain, "n={n}: {cs} !< {plain}");
+        }
+        let gap16 = elaborate(Algorithm::Srt2, 16).slice.delay
+            - elaborate(Algorithm::Srt2Cs, 16).slice.delay;
+        let gap64 = elaborate(Algorithm::Srt2, 64).slice.delay
+            - elaborate(Algorithm::Srt2Cs, 64).slice.delay;
+        assert!(gap64 > gap16);
+    }
+
+    #[test]
+    fn radix4_slice_deeper_but_half_iterations() {
+        for n in [16u32, 32, 64] {
+            let r2 = elaborate(Algorithm::Srt2Cs, n);
+            let r4 = elaborate(Algorithm::Srt4Cs, n);
+            assert!(r4.slice.delay > r2.slice.delay);
+            assert!(r4.iterations * 2 <= r2.iterations + 2);
+            // total recurrence delay still favors radix-4
+            assert!(
+                r4.slice.delay * (r4.iterations as f64)
+                    < r2.slice.delay * (r2.iterations as f64)
+            );
+        }
+    }
+
+    #[test]
+    fn fr_termination_shallower() {
+        for n in [16u32, 32, 64] {
+            let of = elaborate(Algorithm::Srt4CsOf, n);
+            let fr = elaborate(Algorithm::Srt4CsOfFr, n);
+            assert!(fr.termination.delay < of.termination.delay, "n={n}");
+        }
+    }
+
+    #[test]
+    fn scaled_selection_cheaper_slice() {
+        // apples to apples: the scaled engine includes OF, so compare
+        // against the OF radix-4 variant.
+        for n in [16u32, 32, 64] {
+            let t = elaborate(Algorithm::Srt4CsOfFr, n);
+            let s = elaborate(Algorithm::Srt4Scaled, n);
+            assert!(s.slice.delay < t.slice.delay, "n={n}");
+            assert!(s.slice.area < t.slice.area, "n={n}");
+            assert!(s.scaling.is_some() && t.scaling.is_none());
+        }
+    }
+}

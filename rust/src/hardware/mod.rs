@@ -1,0 +1,22 @@
+//! Hardware cost model — the synthesis substrate (see DESIGN.md
+//! §Substitutions: this stands in for Synopsys DC + a 28 nm TSMC library).
+//!
+//! * [`tech`] — unit-gate ↔ 28 nm physical calibration.
+//! * [`components`] — gate-level cost/delay of datapath building blocks.
+//! * [`designs`] — elaboration of every Table IV divider into stages.
+//! * [`synth`] — combinational & pipelined evaluation (area / delay /
+//!   power / energy), regenerating Figs. 4–9.
+//! * [`pipeline_sim`] — cycle-accurate simulator of the pipelined units
+//!   (dynamic validation of the Table II latencies and II=1 throughput).
+//! * [`report`] — text/CSV rendering of the paper's tables and figures.
+
+pub mod components;
+pub mod designs;
+pub mod pipeline_sim;
+pub mod report;
+pub mod synth;
+pub mod tech;
+
+pub use components::Cost;
+pub use synth::{combinational, pipelined, Mode, SynthReport};
+pub use tech::{Tech, TSMC28};

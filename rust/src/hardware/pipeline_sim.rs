@@ -1,0 +1,172 @@
+//! Cycle-accurate simulator of the pipelined divider units.
+//!
+//! The synthesis model (`synth::pipelined`) prices the unrolled pipeline
+//! statically; this simulator *executes* it: a division enters the decode
+//! stage, advances one stage per cycle through (scaling,) It iteration
+//! stages, termination and encode, with initiation interval 1. It
+//! validates dynamically what the paper's Table II states statically —
+//! per-division latency — and answers the questions a deployment cares
+//! about: throughput at full occupancy and latency under bursty arrivals.
+
+use crate::division::{latency_cycles, Algorithm};
+
+/// One simulated in-flight division.
+#[derive(Clone, Copy, Debug)]
+struct InFlight {
+    id: u64,
+    issued_cycle: u64,
+    stages_left: u32,
+}
+
+/// Statistics from a simulation run.
+#[derive(Clone, Debug, Default)]
+pub struct SimStats {
+    pub completed: u64,
+    pub cycles: u64,
+    pub stalled_cycles: u64,
+    pub min_latency: u64,
+    pub max_latency: u64,
+    pub sum_latency: u64,
+    /// Mean number of occupied stages per cycle.
+    pub mean_occupancy: f64,
+}
+
+impl SimStats {
+    pub fn mean_latency(&self) -> f64 {
+        self.sum_latency as f64 / self.completed.max(1) as f64
+    }
+    pub fn throughput(&self) -> f64 {
+        self.completed as f64 / self.cycles.max(1) as f64
+    }
+}
+
+/// The pipelined divider: a shift-register of stage occupancy. One new
+/// division may be accepted per cycle (II = 1).
+pub struct PipelineSim {
+    pub alg: Algorithm,
+    pub n: u32,
+    depth: u32,
+    in_flight: Vec<InFlight>,
+    next_id: u64,
+    cycle: u64,
+    occupancy_acc: u64,
+    stats: SimStats,
+}
+
+impl PipelineSim {
+    pub fn new(alg: Algorithm, n: u32) -> Self {
+        let depth = latency_cycles(n, alg);
+        PipelineSim {
+            alg,
+            n,
+            depth,
+            in_flight: Vec::with_capacity(depth as usize),
+            next_id: 0,
+            cycle: 0,
+            occupancy_acc: 0,
+            stats: SimStats { min_latency: u64::MAX, ..Default::default() },
+        }
+    }
+
+    /// Pipeline depth in stages (= Table II latency in cycles).
+    pub fn depth(&self) -> u32 {
+        self.depth
+    }
+
+    /// Advance one clock. `issue` = a new division arrives this cycle.
+    /// Returns the ids completing this cycle.
+    pub fn tick(&mut self, issue: bool) -> Vec<u64> {
+        self.cycle += 1;
+        let mut done = Vec::new();
+        for f in &mut self.in_flight {
+            f.stages_left -= 1;
+            if f.stages_left == 0 {
+                let lat = self.cycle - f.issued_cycle;
+                self.stats.completed += 1;
+                self.stats.sum_latency += lat;
+                self.stats.min_latency = self.stats.min_latency.min(lat);
+                self.stats.max_latency = self.stats.max_latency.max(lat);
+                done.push(f.id);
+            }
+        }
+        self.in_flight.retain(|f| f.stages_left > 0);
+        if issue {
+            // II = 1: the decode stage is free every cycle by construction
+            self.in_flight.push(InFlight {
+                id: self.next_id,
+                issued_cycle: self.cycle,
+                stages_left: self.depth,
+            });
+            self.next_id += 1;
+        } else {
+            self.stats.stalled_cycles += 1;
+        }
+        self.occupancy_acc += self.in_flight.len() as u64;
+        done
+    }
+
+    /// Run a closed workload of `count` divisions arriving per `gap`
+    /// pattern (gap = 0 ⇒ back-to-back) and drain.
+    pub fn run(mut self, count: u64, gap: u64) -> SimStats {
+        let mut issued = 0;
+        let mut since = gap; // issue immediately
+        while self.stats.completed < count {
+            let issue = issued < count && since >= gap;
+            if issue {
+                issued += 1;
+                since = 0;
+            } else {
+                since += 1;
+            }
+            self.tick(issue);
+        }
+        let mut s = self.stats.clone();
+        s.cycles = self.cycle;
+        s.mean_occupancy = self.occupancy_acc as f64 / self.cycle.max(1) as f64;
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_equals_table2_depth() {
+        for n in [16u32, 32, 64] {
+            for alg in [Algorithm::Srt2Cs, Algorithm::Srt4Cs, Algorithm::Srt4Scaled] {
+                let stats = PipelineSim::new(alg, n).run(100, 0);
+                assert_eq!(stats.min_latency, latency_cycles(n, alg) as u64, "{alg:?} n={n}");
+                assert_eq!(stats.max_latency, stats.min_latency, "II=1: constant latency");
+            }
+        }
+    }
+
+    #[test]
+    fn back_to_back_throughput_approaches_one_per_cycle() {
+        let stats = PipelineSim::new(Algorithm::Srt4CsOfFr, 32).run(10_000, 0);
+        assert!(stats.throughput() > 0.99, "got {}", stats.throughput());
+        // steady-state occupancy ≈ depth
+        assert!(stats.mean_occupancy > 0.95 * latency_cycles(32, Algorithm::Srt4CsOfFr) as f64);
+    }
+
+    #[test]
+    fn sparse_arrivals_keep_latency_but_cut_throughput() {
+        let gap = 10;
+        let stats = PipelineSim::new(Algorithm::Srt2Cs, 16).run(1_000, gap);
+        assert_eq!(stats.min_latency, 17); // Table II
+        assert!(stats.throughput() < 0.12);
+    }
+
+    /// The paper's energy argument, dynamically: at equal clock and equal
+    /// request rate, radix-4 holds ~half the in-flight state of radix-2 —
+    /// fewer live registers ⇒ proportional dynamic-energy cut.
+    #[test]
+    fn radix4_halves_in_flight_state() {
+        let r2 = PipelineSim::new(Algorithm::Srt2Cs, 32).run(20_000, 0);
+        let r4 = PipelineSim::new(Algorithm::Srt4Cs, 32).run(20_000, 0);
+        let ratio = r4.mean_occupancy / r2.mean_occupancy;
+        assert!((0.5..0.65).contains(&ratio), "occupancy ratio {ratio}");
+        assert!(r4.mean_latency() < 0.6 * r2.mean_latency());
+    }
+}

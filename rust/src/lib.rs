@@ -1,0 +1,53 @@
+//! # posit-div — Digit-Recurrence Posit Division
+//!
+//! A full reproduction of *"Digit-Recurrence Posit Division"* (Murillo,
+//! Villalba-Moreno, Del Barrio, Botella — CS.AR 2025): radix-2 and radix-4
+//! SRT-family division units for posit arithmetic, together with every
+//! substrate the paper's evaluation depends on:
+//!
+//! * [`posit`] — a complete Posit⟨n, es=2⟩ arithmetic library (decode,
+//!   encode, correct rounding, conversions, add/sub/mul) for 4 ≤ n ≤ 64.
+//! * [`division`] — the paper's contribution: bit-exact, datapath-level
+//!   digit-recurrence dividers (NRD, SRT, SRT-CS, SRT-CS-OF, SRT-CS-OF-FR;
+//!   radix 2 and radix 4, with and without operand scaling), plus a
+//!   Newton–Raphson multiplicative baseline, an exact golden reference,
+//!   and a digit-recurrence square-root extension ([`division::sqrt`]).
+//! * [`hardware`] — a unit-gate 28 nm synthesis cost model that elaborates
+//!   each divider design into a component netlist and regenerates the
+//!   paper's area/delay/power/energy figures (Figs. 4–9) and latency
+//!   tables (Table II).
+//! * [`coordinator`] — the L3 service: a dynamic batcher + worker pool
+//!   that serves division requests from either the native Rust engines or
+//!   an AOT-compiled JAX/Pallas kernel through PJRT ([`runtime`]).
+//! * [`bench`] / [`testkit`] — self-contained micro-benchmark and
+//!   property-testing harnesses (criterion / proptest are unavailable in
+//!   the offline build environment).
+//!
+//! ## Quickstart
+//!
+//! (`no_run`: doctest binaries don't inherit the workspace rpath to
+//! `libxla_extension.so`; `examples/quickstart.rs` runs the same code.)
+//!
+//! ```no_run
+//! use posit_div::posit::Posit;
+//! use posit_div::division::{DivEngine, Algorithm};
+//!
+//! let x = Posit::from_f64(32, 355.0);
+//! let d = Posit::from_f64(32, 113.0);
+//! let engine = Algorithm::Srt4Cs.engine();
+//! let q = engine.divide(x, d).result;
+//! assert!((q.to_f64() - 355.0 / 113.0).abs() < 1e-6);
+//! ```
+
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod division;
+pub mod hardware;
+pub mod posit;
+pub mod runtime;
+pub mod testkit;
+pub mod workload;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

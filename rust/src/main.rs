@@ -1,0 +1,156 @@
+//! `posit-div` — command-line front end for the digit-recurrence posit
+//! division framework.
+//!
+//! Subcommands:
+//!   synth [--csv] [--n 16|32|64] [--mode comb|pipe]   synthesis model (Figs. 4-9)
+//!   table2                                            iteration/latency table
+//!   divide <x> <d> [--n N] [--alg NAME] [--bits]      one division, all metadata
+//!   verify [--n N] [--cases N]                        engines vs golden cross-check
+//!   serve [--n N] [--backend native|pjrt] [--requests N] [--batch N] [--threads N]
+//!   engines                                           list algorithm variants
+use std::time::Instant;
+
+use posit_div::cli::Args;
+use posit_div::coordinator::{Backend, BatchPolicy, DivisionService, ServiceConfig};
+use posit_div::division::{golden, Algorithm};
+use posit_div::hardware::{report, Mode, TSMC28};
+use posit_div::posit::Posit;
+use posit_div::workload::{self, Workload};
+
+fn alg_by_name(name: &str) -> Option<Algorithm> {
+    Algorithm::ALL.iter().copied().find(|a| {
+        a.label().eq_ignore_ascii_case(name)
+            || a.label().replace(' ', "-").eq_ignore_ascii_case(name)
+            || format!("{a:?}").eq_ignore_ascii_case(name)
+    })
+}
+
+fn main() {
+    let args = Args::parse();
+    match args.subcommand.as_deref() {
+        Some("synth") => cmd_synth(&args),
+        Some("table2") => print!("{}", report::render_table2()),
+        Some("divide") => cmd_divide(&args),
+        Some("verify") => cmd_verify(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("engines") => {
+            for a in Algorithm::ALL {
+                println!("{:<18} radix={:?}", a.label(), a.radix());
+            }
+        }
+        _ => {
+            eprintln!("usage: posit-div <synth|table2|divide|verify|serve|engines> [flags]");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_synth(args: &Args) {
+    let csv = args.has("csv");
+    let modes: Vec<Mode> = match args.flag("mode") {
+        Some("comb") => vec![Mode::Combinational],
+        Some("pipe") => vec![Mode::Pipelined],
+        _ => vec![Mode::Combinational, Mode::Pipelined],
+    };
+    let formats: Vec<u32> = match args.flag("n") {
+        Some(n) => vec![n.parse().expect("--n")],
+        None => report::FORMATS.to_vec(),
+    };
+    for mode in modes {
+        for &n in &formats {
+            if csv {
+                print!("{}", report::sweep_csv(n, mode, &TSMC28));
+            } else {
+                println!("{}", report::render_figure(n, mode, &TSMC28));
+            }
+        }
+    }
+    if !csv {
+        print!("{}", report::render_asap23(&TSMC28));
+    }
+}
+
+fn cmd_divide(args: &Args) {
+    let n: u32 = args.get("n", 32);
+    let alg = alg_by_name(args.flag("alg").unwrap_or("Srt4CsOfFr")).unwrap_or_else(|| {
+        eprintln!("unknown algorithm (try `posit-div engines`)");
+        std::process::exit(2);
+    });
+    if args.positional.len() != 2 {
+        eprintln!("usage: posit-div divide <x> <d> [--n N] [--alg NAME] [--bits]");
+        std::process::exit(2);
+    }
+    let parse = |s: &str| -> Posit {
+        if args.has("bits") {
+            let raw = s.trim_start_matches("0x");
+            Posit::from_bits(n, u64::from_str_radix(raw, 16).expect("hex pattern"))
+        } else {
+            Posit::from_f64(n, s.parse().expect("number"))
+        }
+    };
+    let (x, d) = (parse(&args.positional[0]), parse(&args.positional[1]));
+    let div = alg.engine().divide(x, d);
+    println!(
+        "Posit{n} {} / {} = {}  (bits {:#x}, {} iterations, {} cycles, alg {})",
+        x, d, div.result, div.result.to_bits(), div.iterations, div.cycles, alg.label()
+    );
+}
+
+fn cmd_verify(args: &Args) {
+    let n: u32 = args.get("n", 16);
+    let cases: u64 = args.get("cases", 100_000);
+    let mut w = workload::Uniform::new(n, 0xF00D);
+    let engines: Vec<_> = Algorithm::ALL.iter().map(|a| (a.label(), a.engine())).collect();
+    let t0 = Instant::now();
+    for i in 0..cases {
+        let (x, d) = w.next_pair();
+        let want = golden::divide(x, d).result;
+        for (name, e) in &engines {
+            let got = e.divide(x, d).result;
+            assert_eq!(got, want, "{name} diverges at case {i}: {x:?}/{d:?}");
+        }
+    }
+    println!(
+        "verified {} engines x {} cases on Posit{} against the golden model in {:?} - all bit-exact",
+        engines.len(), cases, n, t0.elapsed()
+    );
+}
+
+fn cmd_serve(args: &Args) {
+    let n: u32 = args.get("n", 16);
+    let requests: usize = args.get("requests", 100_000);
+    let batch: usize = args.get("batch", 256);
+    let threads: usize = args.get("threads", 4);
+    let backend = match args.flag("backend").unwrap_or("native") {
+        "pjrt" => Backend::Pjrt { artifacts_dir: "artifacts".into() },
+        _ => Backend::Native { alg: Algorithm::Srt4CsOfFr, threads },
+    };
+    let svc = DivisionService::start(ServiceConfig {
+        n,
+        backend,
+        policy: BatchPolicy { max_batch: batch, max_wait: std::time::Duration::from_micros(200) },
+    })
+    .expect("service start");
+
+    let mut w = workload::DspTrace::new(n, 0x5E12);
+    let pairs = workload::take(&mut w, requests);
+    let t0 = Instant::now();
+    let results = svc.divide_many(&pairs);
+    let wall = t0.elapsed();
+
+    // verify a sample against the golden model
+    for (i, &(x, d)) in pairs.iter().enumerate().step_by(101) {
+        assert_eq!(results[i], golden::divide(x, d).result, "{x:?}/{d:?}");
+    }
+    let m = svc.metrics();
+    println!("served {requests} Posit{n} divisions in {wall:?}");
+    println!("  throughput: {:.0} div/s", requests as f64 / wall.as_secs_f64());
+    println!("  request latency: {}", m.request_latency.summary());
+    println!("  batch latency:   {}", m.batch_latency.summary());
+    println!(
+        "  batches: {} (mean fill {:.1}%)",
+        m.batches.load(std::sync::atomic::Ordering::Relaxed),
+        100.0 * m.mean_batch_fill(batch)
+    );
+    svc.shutdown();
+}

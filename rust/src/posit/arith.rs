@@ -1,0 +1,221 @@
+//! Posit addition, subtraction and multiplication.
+//!
+//! Division is *not* here — it is the paper's subject and lives in
+//! [`crate::division`] with one engine per algorithm variant. Add/mul are
+//! needed by the DSP example workloads and by the Newton–Raphson baseline
+//! divider (which iterates multiplications).
+//!
+//! Both operations follow the standard hardware recipe: decode, exact wide
+//! integer arithmetic with guard bits + sticky, single pattern-space
+//! rounding via [`crate::posit::round::encode_round`].
+
+use super::{frac_bits, round::encode_round, Posit, Unpacked};
+
+/// Guard bits carried through alignment in addition (guard/round + sticky).
+const G: u32 = 3;
+
+impl Posit {
+    /// Correctly-rounded posit multiplication.
+    pub fn mul(self, rhs: Posit) -> Posit {
+        assert_eq!(self.n, rhs.n, "width mismatch");
+        let n = self.n;
+        let (a, b) = match (self.unpack(), rhs.unpack()) {
+            (Unpacked::NaR, _) | (_, Unpacked::NaR) => return Posit::nar(n),
+            (Unpacked::Zero, _) | (_, Unpacked::Zero) => return Posit::zero(n),
+            (Unpacked::Real(a), Unpacked::Real(b)) => (a, b),
+        };
+        let fb = frac_bits(n);
+        let prod = (a.sig as u128) * (b.sig as u128); // value = prod / 2^(2fb) in [1,4)
+        let sign = a.sign ^ b.sign;
+        let scale = a.scale + b.scale;
+        if prod >> (2 * fb + 1) != 0 {
+            // in [2,4): one more fraction bit, scale up by one.
+            encode_round(n, sign, scale + 1, prod, 2 * fb + 1, false)
+        } else {
+            encode_round(n, sign, scale, prod, 2 * fb, false)
+        }
+    }
+
+    /// Correctly-rounded posit addition.
+    pub fn add(self, rhs: Posit) -> Posit {
+        assert_eq!(self.n, rhs.n, "width mismatch");
+        let n = self.n;
+        let (a, b) = match (self.unpack(), rhs.unpack()) {
+            (Unpacked::NaR, _) | (_, Unpacked::NaR) => return Posit::nar(n),
+            (Unpacked::Zero, _) => return rhs,
+            (_, Unpacked::Zero) => return self,
+            (Unpacked::Real(a), Unpacked::Real(b)) => (a, b),
+        };
+        let fb = frac_bits(n);
+
+        // Order by scale so `hi` dominates; align `lo` down with sticky.
+        let (hi, lo) = if a.scale >= b.scale { (a, b) } else { (b, a) };
+        let shift = (hi.scale - lo.scale) as u32;
+
+        let hi_mag = (hi.sig as i128) << G;
+        let (lo_mag, dropped) = if shift >= fb + 1 + G {
+            (0i128, true) // lo entirely below the guard bits
+        } else {
+            let full = (lo.sig as i128) << G;
+            let kept = full >> shift;
+            (kept, full & ((1i128 << shift) - 1) != 0)
+        };
+        let subtracting = hi.sign != lo.sign;
+        // When subtracting, dropped bits mean the true |lo| is *larger* than
+        // its truncation: bump the truncated magnitude so the remainder sign
+        // stays positive and sticky represents a positive deficit.
+        let lo_adj = if subtracting && dropped { lo_mag + 1 } else { lo_mag };
+
+        let hi_signed = if hi.sign { -hi_mag } else { hi_mag };
+        let lo_signed = if lo.sign { -lo_adj } else { lo_adj };
+        let sum = hi_signed + lo_signed;
+
+        if sum == 0 {
+            // Exact cancellation of the kept bits. `dropped` here is
+            // defensive (provably unreachable: the G guard zeros of `full`
+            // keep `lo_adj < hi_mag` whenever bits were dropped) — if it
+            // ever fired the true value would be a sub-ulp residue with
+            // hi's sign, which posit rounds to ±minpos, never to zero.
+            if dropped {
+                let m = Posit::minpos(n);
+                return if hi.sign { m.neg() } else { m };
+            }
+            return Posit::zero(n);
+        }
+        let sign = sum < 0;
+        let mag = sum.unsigned_abs();
+        // Fraction point currently at fb + G bits below the top of hi.sig's
+        // hidden 1; renormalize to the actual MSB.
+        let msb = 127 - mag.leading_zeros();
+        let scale = hi.scale + msb as i32 - (fb + G) as i32;
+        encode_round(n, sign, scale, mag, msb, dropped)
+    }
+
+    /// Correctly-rounded posit subtraction.
+    #[inline]
+    pub fn sub(self, rhs: Posit) -> Posit {
+        self.add(rhs.neg())
+    }
+
+    /// Fused-style helper `self*a + b` built from mul+add (NOT a quire —
+    /// two roundings). Used by example workloads only.
+    #[inline]
+    pub fn mul_add(self, a: Posit, b: Posit) -> Posit {
+        self.mul(a).add(b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::posit::mask;
+
+    /// f64 is exact for posit8 operands and their sums/products, so
+    /// from_f64(exact) is the correctly rounded reference.
+    #[test]
+    fn add_exhaustive_posit8() {
+        let n = 8;
+        for xa in 0..=mask(n) {
+            let pa = Posit::from_bits(n, xa);
+            for xb in 0..=mask(n) {
+                let pb = Posit::from_bits(n, xb);
+                let got = pa.add(pb);
+                if pa.is_nar() || pb.is_nar() {
+                    assert!(got.is_nar());
+                    continue;
+                }
+                let want = Posit::from_f64(n, pa.to_f64() + pb.to_f64());
+                assert_eq!(got, want, "{pa:?} + {pb:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn mul_exhaustive_posit8() {
+        let n = 8;
+        for xa in 0..=mask(n) {
+            let pa = Posit::from_bits(n, xa);
+            for xb in 0..=mask(n) {
+                let pb = Posit::from_bits(n, xb);
+                let got = pa.mul(pb);
+                if pa.is_nar() || pb.is_nar() {
+                    assert!(got.is_nar());
+                    continue;
+                }
+                let want = Posit::from_f64(n, pa.to_f64() * pb.to_f64());
+                assert_eq!(got, want, "{pa:?} * {pb:?}");
+            }
+        }
+    }
+
+    /// Exact i128 reference for posit16 addition (sig ≤ 12 bits, scale span
+    /// ≤ 112 ⇒ fits i128), checked on a random sample.
+    #[test]
+    fn add_random_posit16_exact_reference() {
+        let n = 16;
+        let mut rng = crate::testkit::Rng::seeded(0xADD16);
+        for _ in 0..200_000 {
+            let pa = Posit::from_bits(n, rng.next_u64() & mask(n));
+            let pb = Posit::from_bits(n, rng.next_u64() & mask(n));
+            if pa.is_nar() || pb.is_nar() || pa.is_zero() || pb.is_zero() {
+                continue;
+            }
+            let (a, b) = (pa.decode(), pb.decode());
+            let fb = crate::posit::frac_bits(n);
+            // exact signed fixed-point sum at scale min(sa,sb)-fb
+            let base = a.scale.min(b.scale);
+            let av = (a.sig as i128) << (a.scale - base) as u32;
+            let bv = (b.sig as i128) << (b.scale - base) as u32;
+            let sum = if a.sign { -av } else { av } + if b.sign { -bv } else { bv };
+            let want = if sum == 0 {
+                Posit::zero(n)
+            } else {
+                let mag = sum.unsigned_abs();
+                let msb = 127 - mag.leading_zeros();
+                crate::posit::round::encode_round(
+                    n,
+                    sum < 0,
+                    base + msb as i32 - fb as i32,
+                    mag,
+                    msb,
+                    false,
+                )
+            };
+            assert_eq!(pa.add(pb), want, "{pa:?} + {pb:?}");
+        }
+    }
+
+    #[test]
+    fn algebraic_identities_random_p32() {
+        let n = 32;
+        let mut rng = crate::testkit::Rng::seeded(0xA1DE);
+        for _ in 0..50_000 {
+            let pa = Posit::from_bits(n, rng.next_u64() & mask(n));
+            let pb = Posit::from_bits(n, rng.next_u64() & mask(n));
+            if pa.is_nar() || pb.is_nar() {
+                continue;
+            }
+            // commutativity (bit-exact)
+            assert_eq!(pa.add(pb), pb.add(pa));
+            assert_eq!(pa.mul(pb), pb.mul(pa));
+            // identity / absorbing elements
+            assert_eq!(pa.add(Posit::zero(n)), pa);
+            assert_eq!(pa.mul(Posit::one(n)), pa);
+            // x - x = 0 exactly
+            assert!(pa.sub(pa).is_zero());
+            // negation distributes
+            assert_eq!(pa.neg().add(pb.neg()), pa.add(pb).neg());
+        }
+    }
+
+    #[test]
+    fn no_overflow_to_nar() {
+        let n = 16;
+        let m = Posit::maxpos(n);
+        assert_eq!(m.add(m), m); // saturates, never NaR
+        assert_eq!(m.mul(m), m);
+        assert_eq!(m.neg().mul(m), m.neg());
+        let tiny = Posit::minpos(n);
+        assert_eq!(tiny.mul(tiny), tiny); // underflow saturates at minpos
+    }
+}

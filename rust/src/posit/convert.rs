@@ -1,0 +1,130 @@
+//! `f64` ↔ posit conversion.
+//!
+//! `from_f64` is correctly rounded (the f64 is exact input; the posit
+//! rounding happens once, in pattern space). `to_f64` is exact for n ≤ 32
+//! (≤ 27 fraction bits always fit f64's 52); for n up to 64 it incurs one
+//! f64 rounding — fine for display, while exact checks in the test-suite go
+//! through integer/rational paths instead.
+
+use super::{frac_bits, round::encode_round, Posit, Unpacked};
+
+impl Posit {
+    /// Convert an `f64` to the nearest Posit⟨n,2⟩.
+    ///
+    /// NaN and ±∞ map to NaR; ±0.0 maps to zero (posits have a single zero).
+    pub fn from_f64(n: u32, v: f64) -> Posit {
+        if v == 0.0 {
+            return Posit::zero(n);
+        }
+        if !v.is_finite() {
+            return Posit::nar(n);
+        }
+        let bits = v.to_bits();
+        let sign = bits >> 63 == 1;
+        let biased = ((bits >> 52) & 0x7ff) as i32;
+        let mant = bits & ((1u64 << 52) - 1);
+        let (scale, sig, sfb) = if biased != 0 {
+            // Normal: 1.mant * 2^(biased-1023)
+            (biased - 1023, (1u64 << 52) | mant, 52u32)
+        } else {
+            // Subnormal: mant * 2^-1074, normalize to hidden-1 form.
+            let hb = 63 - mant.leading_zeros(); // position of top set bit
+            (hb as i32 - 1074, mant, hb)
+        };
+        encode_round(n, sign, scale, sig as u128, sfb, false)
+    }
+
+    /// Convert to `f64`. NaR maps to NaN.
+    pub fn to_f64(self) -> f64 {
+        match self.unpack() {
+            Unpacked::Zero => 0.0,
+            Unpacked::NaR => f64::NAN,
+            Unpacked::Real(d) => {
+                let fb = frac_bits(self.n);
+                let mag = d.sig as f64 * ((d.scale - fb as i32) as f64).exp2();
+                if d.sign {
+                    -mag
+                } else {
+                    mag
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::posit::mask;
+
+    #[test]
+    fn roundtrip_exhaustive_p8_p10_p12() {
+        // f64 holds every posit≤32 exactly, so to_f64 -> from_f64 must be
+        // the identity on every real pattern.
+        for n in [8u32, 10, 12, 16] {
+            for bits in 0..=mask(n) {
+                let p = Posit::from_bits(n, bits);
+                if p.is_nar() {
+                    continue;
+                }
+                let back = Posit::from_f64(n, p.to_f64());
+                assert_eq!(back, p, "n={n} bits={bits:#x} v={}", p.to_f64());
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_random_p32() {
+        let mut rng = crate::testkit::Rng::seeded(0xC0417);
+        for _ in 0..100_000 {
+            let bits = rng.next_u64() & mask(32);
+            let p = Posit::from_bits(32, bits);
+            if p.is_nar() {
+                continue;
+            }
+            assert_eq!(Posit::from_f64(32, p.to_f64()), p);
+        }
+    }
+
+    #[test]
+    fn specials() {
+        assert!(Posit::from_f64(16, f64::NAN).is_nar());
+        assert!(Posit::from_f64(16, f64::INFINITY).is_nar());
+        assert!(Posit::from_f64(16, f64::NEG_INFINITY).is_nar());
+        assert!(Posit::from_f64(16, 0.0).is_zero());
+        assert!(Posit::from_f64(16, -0.0).is_zero());
+        assert!(Posit::nar(16).to_f64().is_nan());
+    }
+
+    #[test]
+    fn known_values() {
+        assert_eq!(Posit::from_f64(32, 1.0), Posit::one(32));
+        assert_eq!(Posit::from_f64(8, 1.0).to_bits(), 0b0100_0000);
+        assert_eq!(Posit::from_f64(8, -1.0).to_bits(), 0b1100_0000);
+        assert_eq!(Posit::from_f64(8, 0.5).to_bits(), 0b0011_1000);
+        assert_eq!(Posit::from_f64(16, 1.0e30), Posit::maxpos(16)); // saturate
+        assert_eq!(Posit::from_f64(16, 1.0e-30), Posit::minpos(16));
+        assert_eq!(Posit::from_f64(16, -1.0e30), Posit::maxpos(16).neg());
+    }
+
+    #[test]
+    fn subnormal_f64_input() {
+        // A subnormal f64 is far below minpos for n<=32 -> minpos.
+        let sub = f64::from_bits(1); // 2^-1074
+        assert_eq!(Posit::from_f64(16, sub), Posit::minpos(16));
+        assert_eq!(Posit::from_f64(16, -sub), Posit::minpos(16).neg());
+        // For n=64, minpos = 2^-248, still above any subnormal.
+        assert_eq!(Posit::from_f64(64, sub), Posit::minpos(64));
+    }
+
+    #[test]
+    fn rounding_to_nearest() {
+        // Posit8 around 1.0: representable neighbors are 1.0 and 1.125.
+        assert_eq!(Posit::from_f64(8, 1.05).to_f64(), 1.0);
+        assert_eq!(Posit::from_f64(8, 1.07).to_f64(), 1.125);
+        // Exactly halfway: 1.0625 -> ties to even pattern (1.0 has even lsb).
+        assert_eq!(Posit::from_f64(8, 1.0625).to_f64(), 1.0);
+        // Halfway between 1.125 (odd pattern) and 1.25: rounds up to even.
+        assert_eq!(Posit::from_f64(8, 1.1875).to_f64(), 1.25);
+    }
+}

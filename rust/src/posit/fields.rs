@@ -1,0 +1,214 @@
+//! Field extraction (decode) of posit patterns — Fig. 1 / Eq. (2) of the
+//! paper.
+//!
+//! Decoding follows the *sign-magnitude* convention the paper adopts for
+//! division (§III-C): a negative posit is two's-complemented first, then the
+//! magnitude is decoded. (The alternative two's-complement decode of [14]
+//! yields signed significands in [-2,-1)∪[1,2) and costs the recurrence an
+//! extra iteration — implemented separately in `division::nrd` for the
+//! comparison benchmark.)
+
+use super::{frac_bits, mask, Posit, ES};
+
+/// A decoded (non-special) posit: `(-1)^sign · 2^scale · sig/2^FB` with
+/// `sig` normalized to `FB = frac_bits(n)` fraction bits plus the hidden 1,
+/// i.e. `sig ∈ [2^FB, 2^(FB+1))` representing a significand in [1, 2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Decoded {
+    pub sign: bool,
+    /// Combined scale `4k + e`.
+    pub scale: i32,
+    /// Significand `1.f` as an integer with `frac_bits(n)` fraction bits.
+    pub sig: u64,
+    /// Width of the posit this came from.
+    pub n: u32,
+}
+
+impl Decoded {
+    /// Regime value `k = ⌊scale/4⌋` (arithmetic shift).
+    #[inline]
+    pub fn regime(&self) -> i32 {
+        self.scale >> ES
+    }
+
+    /// Exponent field `e = scale mod 4`.
+    #[inline]
+    pub fn exponent(&self) -> u32 {
+        (self.scale & ((1 << ES) - 1)) as u32
+    }
+
+    /// Fraction bits (below the hidden one).
+    #[inline]
+    pub fn fraction(&self) -> u64 {
+        self.sig & mask(frac_bits(self.n))
+    }
+
+    /// Significand as a float in [1, 2).
+    #[inline]
+    pub fn sig_f64(&self) -> f64 {
+        self.sig as f64 / (1u64 << frac_bits(self.n)) as f64
+    }
+}
+
+/// Result of decoding: either a special value or fields.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Unpacked {
+    Zero,
+    NaR,
+    Real(Decoded),
+}
+
+impl Posit {
+    /// Full decode with special-case detection.
+    pub fn unpack(self) -> Unpacked {
+        if self.is_zero() {
+            Unpacked::Zero
+        } else if self.is_nar() {
+            Unpacked::NaR
+        } else {
+            Unpacked::Real(self.decode())
+        }
+    }
+
+    /// Decode a non-special posit into sign/scale/significand.
+    ///
+    /// Panics on zero/NaR (callers handle specials first — exactly like the
+    /// hardware, where the special detector runs in parallel with decode).
+    pub fn decode(self) -> Decoded {
+        assert!(!self.is_zero() && !self.is_nar(), "decode of special value");
+        let n = self.width();
+        let sign = self.sign_bit();
+        // Sign-magnitude: two's complement negative patterns first
+        // (branchless: xor with the extended sign + add the sign bit).
+        let ext = 0u64.wrapping_sub(sign as u64);
+        let magnitude = ((self.to_bits() ^ ext).wrapping_add(sign as u64)) & mask(n);
+
+        // Body: the n-1 bits below the sign, left-aligned into a u64 so the
+        // run-length count is width-independent.
+        let body = (magnitude & mask(n - 1)) << (64 - (n - 1));
+        let r0 = body >> 63 != 0;
+        // Length of the run of identical leading bits (branchless invert).
+        let run = (body ^ 0u64.wrapping_sub(r0 as u64)).leading_zeros().min(n - 1);
+        let k: i32 = if r0 { run as i32 - 1 } else { -(run as i32) };
+
+        // Bits past the run and its terminator (the terminator may be
+        // missing when the run reaches the end of the word, e.g. maxpos).
+        let consumed = (run + 1).min(n - 1);
+        let rem = n - 1 - consumed; // bits available for exponent+fraction
+        let tail = if rem == 0 { 0 } else { (body << consumed) >> (64 - rem) };
+
+        // Exponent: up to ES bits from the top of the tail; if truncated,
+        // the available bits are the MSBs of e (missing LSBs are zero).
+        let eb = rem.min(ES);
+        let e = if eb == 0 { 0 } else { (tail >> (rem - eb)) << (ES - eb) } as u32;
+
+        // Fraction: whatever is left, aligned up to the worst-case width.
+        let fb = rem - eb;
+        let frac = (tail & mask(fb)) << (frac_bits(n) - fb);
+
+        Decoded { sign, scale: 4 * k + e as i32, sig: (1u64 << frac_bits(n)) | frac, n }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dec(n: u32, bits: u64) -> Decoded {
+        Posit::from_bits(n, bits).decode()
+    }
+
+    #[test]
+    fn decode_one() {
+        for n in [6u32, 8, 10, 16, 32, 64] {
+            let d = dec(n, 1u64 << (n - 2));
+            assert_eq!(d.scale, 0);
+            assert_eq!(d.sig, 1u64 << frac_bits(n));
+            assert!(!d.sign);
+        }
+    }
+
+    #[test]
+    fn decode_maxpos_minpos() {
+        for n in [8u32, 16, 32, 64] {
+            let mx = dec(n, mask(n - 1));
+            assert_eq!(mx.scale, 4 * (n as i32 - 2), "maxpos scale n={n}");
+            assert_eq!(mx.sig, 1u64 << frac_bits(n));
+            let mn = dec(n, 1);
+            assert_eq!(mn.scale, -4 * (n as i32 - 2), "minpos scale n={n}");
+            assert_eq!(mn.sig, 1u64 << frac_bits(n));
+        }
+    }
+
+    #[test]
+    fn decode_posit8_examples() {
+        // Posit⟨8,2⟩: 0b01000001 = 1 + 1/4? body=1000001: regime=10 (k=0),
+        // e=00, frac=001 of 3 bits -> sig = 1 + 1/8.
+        let d = dec(8, 0b0100_0001);
+        assert_eq!(d.scale, 0);
+        assert_eq!(d.sig_f64(), 1.125);
+        // 0b00110000: regime 01 (k=-1), e=10, f=000 -> 2^(-4+2)=0.25
+        let d = dec(8, 0b0011_0000);
+        assert_eq!(d.scale, -2);
+        assert_eq!(d.sig_f64(), 1.0);
+    }
+
+    #[test]
+    fn decode_negative_two() {
+        // -2.0 in posit: 2.0 = 0b0100..0 with e=1? scale(2.0)=1:
+        // pattern: sign 0, regime 10 (k=0), e=01, frac 0.
+        for n in [8u32, 16, 32] {
+            let two = Posit::from_bits(n, 0b01001 << (n - 5));
+            assert_eq!(two.to_f64(), 2.0);
+            let m2 = two.neg();
+            let d = m2.decode();
+            assert!(d.sign);
+            assert_eq!(d.scale, 1);
+            assert_eq!(d.sig, 1 << frac_bits(n));
+        }
+    }
+
+    #[test]
+    fn truncated_exponent_bits_are_msbs() {
+        // n=8, pattern 0b0000_0101: body 0000101 -> run of 4 zeros, k=-4,
+        // terminator 1, rem=2 bits "01" -> e = 0b01 << 0? eb=2 -> e=1.
+        let d = dec(8, 0b0000_0101);
+        assert_eq!(d.scale, -16 + 1);
+        // n=8, 0b0000_0011: run of 5 zeros, k=-5, rem=1 bit "1" -> e=0b10=2.
+        let d = dec(8, 0b0000_0011);
+        assert_eq!(d.scale, -20 + 2);
+    }
+
+    #[test]
+    fn decode_encode_roundtrip_exhaustive_small() {
+        // Every real pattern decodes and re-encodes to itself (n = 6..12).
+        for n in [6u32, 8, 10, 12] {
+            for bits in 0..=mask(n) {
+                let p = Posit::from_bits(n, bits);
+                if p.is_zero() || p.is_nar() {
+                    continue;
+                }
+                let d = p.decode();
+                let back = crate::posit::round::encode_exact(n, d.sign, d.scale, d.sig);
+                assert_eq!(back, p, "n={n} bits={bits:#b} decoded={d:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn decode_encode_roundtrip_random_wide() {
+        let mut rng = crate::testkit::Rng::seeded(0xDEC0DE);
+        for n in [16u32, 24, 32, 48, 64] {
+            for _ in 0..20_000 {
+                let bits = rng.next_u64() & mask(n);
+                let p = Posit::from_bits(n, bits);
+                if p.is_zero() || p.is_nar() {
+                    continue;
+                }
+                let d = p.decode();
+                let back = crate::posit::round::encode_exact(n, d.sign, d.scale, d.sig);
+                assert_eq!(back, p, "n={n} bits={bits:#x}");
+            }
+        }
+    }
+}

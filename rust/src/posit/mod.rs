@@ -1,0 +1,320 @@
+//! Posit⟨n, es=2⟩ arithmetic (2022 Posit Standard), for 4 ≤ n ≤ 64.
+//!
+//! The paper (and the 2022 standard) fix `es = 2`; the total width `n` is a
+//! runtime parameter so a single implementation covers Posit8 … Posit64 as
+//! well as odd widths such as the Posit10 used by the paper's Table III
+//! worked examples.
+//!
+//! A posit bit pattern is an `n`-bit two's-complement integer stored in the
+//! low bits of a `u64`. Two patterns are special: `0…0` is zero and `10…0`
+//! is NaR (Not a Real). Every other pattern encodes
+//! `(-1)^s · 2^(4k+e) · (1+f)` per Eq. (2) of the paper, where `k` is the
+//! run-length-encoded regime, `e` the 2-bit exponent and `f` the fraction.
+//!
+//! Modules:
+//! * [`fields`] — decoding into sign/scale/significand ([`Decoded`]).
+//! * [`round`] — encoding with the standard's round-to-nearest-even on the
+//!   bit pattern (guard/sticky), saturating at `maxpos`/`minpos`.
+//! * [`convert`] — correctly-rounded `f64` ↔ posit conversion.
+//! * [`arith`] — add/sub/mul (needed by the DSP examples and the
+//!   Newton–Raphson baseline divider).
+
+pub mod arith;
+pub mod convert;
+pub mod fields;
+pub mod round;
+
+pub use fields::{Decoded, Unpacked};
+
+/// Exponent field width fixed by the 2022 Posit Standard (and the paper).
+pub const ES: u32 = 2;
+
+/// Minimum / maximum supported posit width.
+pub const MIN_N: u32 = 4;
+pub const MAX_N: u32 = 64;
+
+/// A posit number: an `n`-bit pattern in the low bits of `bits`.
+///
+/// Invariants: `MIN_N <= n <= MAX_N` and `bits` has no bits set at or above
+/// position `n`.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Posit {
+    bits: u64,
+    n: u32,
+}
+
+/// Bit mask with the low `n` bits set.
+#[inline]
+pub const fn mask(n: u32) -> u64 {
+    if n >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << n) - 1
+    }
+}
+
+/// Worst-case number of fraction bits of a Posit⟨n,2⟩: `n - 5`
+/// (sign + 2-bit minimum regime + 2-bit exponent), clamped at zero for tiny
+/// widths. All significands in this crate are normalized to this width.
+#[inline]
+pub const fn frac_bits(n: u32) -> u32 {
+    if n > 5 {
+        n - 5
+    } else {
+        0
+    }
+}
+
+/// Number of significand bits (hidden 1 + fraction): `n - 4` for n > 5.
+#[inline]
+pub const fn sig_bits(n: u32) -> u32 {
+    frac_bits(n) + 1
+}
+
+/// Maximum scale (4k+e) of a Posit⟨n,2⟩: `4(n-2) + 3`… the largest finite
+/// posit is `maxpos = 2^(4(n-2))` (k = n-2, no exponent bits ⇒ e = 0), so
+/// the maximum *representable* scale is `4(n-2)`.
+#[inline]
+pub const fn max_scale(n: u32) -> i32 {
+    4 * (n as i32 - 2)
+}
+
+impl Posit {
+    /// Construct from a raw `n`-bit pattern (low bits of `bits`).
+    ///
+    /// Panics if `n` is out of range; high garbage bits are masked off.
+    #[inline]
+    pub fn from_bits(n: u32, bits: u64) -> Self {
+        assert!(
+            (MIN_N..=MAX_N).contains(&n),
+            "posit width {n} out of supported range [{MIN_N},{MAX_N}]"
+        );
+        Posit { bits: bits & mask(n), n }
+    }
+
+    /// The raw `n`-bit pattern.
+    #[inline]
+    pub fn to_bits(self) -> u64 {
+        self.bits
+    }
+
+    /// Total width in bits.
+    #[inline]
+    pub fn width(self) -> u32 {
+        self.n
+    }
+
+    /// The zero posit (pattern `0…0`).
+    #[inline]
+    pub fn zero(n: u32) -> Self {
+        Posit::from_bits(n, 0)
+    }
+
+    /// NaR — Not a Real (pattern `10…0`).
+    #[inline]
+    pub fn nar(n: u32) -> Self {
+        Posit::from_bits(n, 1u64 << (n - 1))
+    }
+
+    /// Largest positive posit `maxpos = 2^(4(n-2))` (pattern `01…1`).
+    #[inline]
+    pub fn maxpos(n: u32) -> Self {
+        Posit::from_bits(n, mask(n - 1))
+    }
+
+    /// Smallest positive posit `minpos = 2^(-4(n-2))` (pattern `0…01`).
+    #[inline]
+    pub fn minpos(n: u32) -> Self {
+        Posit::from_bits(n, 1)
+    }
+
+    /// The posit encoding 1.0 (pattern `010…0`).
+    #[inline]
+    pub fn one(n: u32) -> Self {
+        Posit::from_bits(n, 1u64 << (n - 2))
+    }
+
+    #[inline]
+    pub fn is_zero(self) -> bool {
+        self.bits == 0
+    }
+
+    #[inline]
+    pub fn is_nar(self) -> bool {
+        self.bits == 1u64 << (self.n - 1)
+    }
+
+    /// Sign bit of the pattern (true ⇒ negative for non-special values).
+    #[inline]
+    pub fn sign_bit(self) -> bool {
+        (self.bits >> (self.n - 1)) & 1 == 1
+    }
+
+    /// True for strictly negative real values (NaR and zero excluded).
+    #[inline]
+    pub fn is_negative(self) -> bool {
+        self.sign_bit() && !self.is_nar()
+    }
+
+    /// Arithmetic negation: exact for every posit (two's complement of the
+    /// pattern). `-0 = 0`, `-NaR = NaR`.
+    #[inline]
+    pub fn neg(self) -> Self {
+        Posit::from_bits(self.n, self.bits.wrapping_neg() & mask(self.n))
+    }
+
+    /// Absolute value.
+    #[inline]
+    pub fn abs(self) -> Self {
+        if self.is_negative() {
+            self.neg()
+        } else {
+            self
+        }
+    }
+
+    /// The pattern interpreted as a sign-extended signed integer. Posit
+    /// ordering coincides with this integer ordering (NaR smallest) — the
+    /// property the paper highlights as removing comparator hardware.
+    #[inline]
+    pub fn to_signed(self) -> i64 {
+        let shift = 64 - self.n;
+        ((self.bits << shift) as i64) >> shift
+    }
+
+    /// Total order: NaR < negative reals < 0 < positive reals.
+    #[inline]
+    pub fn total_cmp(self, other: Posit) -> core::cmp::Ordering {
+        assert_eq!(self.n, other.n, "comparing posits of different widths");
+        self.to_signed().cmp(&other.to_signed())
+    }
+
+    /// Next representable posit up (pattern + 1), saturating at maxpos.
+    #[inline]
+    pub fn next_up(self) -> Self {
+        if self.bits == mask(self.n - 1) {
+            return self; // maxpos: never step onto NaR
+        }
+        Posit::from_bits(self.n, self.bits.wrapping_add(1) & mask(self.n))
+    }
+
+    /// Next representable posit down (pattern − 1), saturating past NaR.
+    #[inline]
+    pub fn next_down(self) -> Self {
+        let nar = 1u64 << (self.n - 1);
+        if self.bits == nar.wrapping_add(1) & mask(self.n) {
+            return self;
+        }
+        Posit::from_bits(self.n, self.bits.wrapping_sub(1) & mask(self.n))
+    }
+
+    /// Units-in-last-place distance between two posits of the same width
+    /// (patterns are monotone in value, so this is meaningful).
+    #[inline]
+    pub fn ulp_distance(self, other: Posit) -> u64 {
+        assert_eq!(self.n, other.n);
+        (self.to_signed() - other.to_signed()).unsigned_abs()
+    }
+}
+
+impl core::fmt::Debug for Posit {
+    fn fmt(&self, f: &mut core::fmt::Formatter<'_>) -> core::fmt::Result {
+        if self.is_nar() {
+            write!(f, "Posit{}(NaR)", self.n)
+        } else {
+            write!(
+                f,
+                "Posit{}({:#0width$b} = {})",
+                self.n,
+                self.bits,
+                self.to_f64(),
+                width = self.n as usize + 2
+            )
+        }
+    }
+}
+
+impl core::fmt::Display for Posit {
+    fn fmt(&self, f: &mut core::fmt::Formatter<'_>) -> core::fmt::Result {
+        if self.is_nar() {
+            write!(f, "NaR")
+        } else {
+            write!(f, "{}", self.to_f64())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn special_patterns() {
+        for n in [4u32, 8, 10, 16, 32, 64] {
+            assert!(Posit::zero(n).is_zero());
+            assert!(Posit::nar(n).is_nar());
+            assert!(!Posit::zero(n).is_nar());
+            assert!(!Posit::nar(n).is_zero());
+            assert_eq!(Posit::one(n).to_f64(), 1.0);
+            assert_eq!(Posit::one(n).neg().to_f64(), -1.0);
+        }
+    }
+
+    #[test]
+    fn neg_is_involution() {
+        let n = 16;
+        for bits in 0..=mask(n) {
+            let p = Posit::from_bits(n, bits);
+            assert_eq!(p.neg().neg(), p, "bits={bits:#x}");
+        }
+    }
+
+    #[test]
+    fn nar_and_zero_are_self_negations() {
+        for n in [8u32, 16, 32, 64] {
+            assert_eq!(Posit::nar(n).neg(), Posit::nar(n));
+            assert_eq!(Posit::zero(n).neg(), Posit::zero(n));
+        }
+    }
+
+    #[test]
+    fn ordering_matches_value_ordering_posit8() {
+        // Exhaustive over Posit8: integer order must equal value order.
+        let n = 8;
+        let mut last: Option<(i64, f64)> = None;
+        // iterate patterns in signed order: NaR .. maxpos
+        for signed in -(1i64 << (n - 1))..=(mask(n - 1) as i64) {
+            let p = Posit::from_bits(n, (signed as u64) & mask(n));
+            if p.is_nar() {
+                continue;
+            }
+            let v = p.to_f64();
+            if let Some((ls, lv)) = last {
+                assert!(lv < v, "order violation at signed {ls} -> {signed}: {lv} !< {v}");
+            }
+            last = Some((signed, v));
+        }
+    }
+
+    #[test]
+    fn next_up_saturates() {
+        let n = 16;
+        assert_eq!(Posit::maxpos(n).next_up(), Posit::maxpos(n));
+        let minneg = Posit::from_bits(n, (1u64 << (n - 1)) + 1); // most negative real
+        assert_eq!(minneg.next_down(), minneg);
+    }
+
+    #[test]
+    fn maxpos_minpos_values() {
+        assert_eq!(Posit::maxpos(8).to_f64(), (2.0f64).powi(24));
+        assert_eq!(Posit::minpos(8).to_f64(), (2.0f64).powi(-24));
+        assert_eq!(Posit::maxpos(16).to_f64(), (2.0f64).powi(56));
+        assert_eq!(Posit::minpos(16).to_f64(), (2.0f64).powi(-56));
+    }
+
+    #[test]
+    #[should_panic]
+    fn width_out_of_range_panics() {
+        let _ = Posit::from_bits(3, 0);
+    }
+}

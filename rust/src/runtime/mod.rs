@@ -1,0 +1,171 @@
+//! PJRT runtime: load and execute the AOT-compiled division graphs.
+//!
+//! `make artifacts` (the only step that runs Python) lowers the L2 JAX
+//! graph to HLO *text* under `artifacts/`; this module loads those files
+//! through the `xla` crate (`PjRtClient::cpu` → `HloModuleProto::
+//! from_text_file` → compile → execute), caching one compiled executable
+//! per (format, batch) variant. After that, division requests run entirely
+//! in-process with Python nowhere on the path.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::posit::{mask, Posit};
+
+/// One AOT-compiled variant: `div_p{n}_b{batch}.hlo.txt`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Variant {
+    pub n: u32,
+    pub batch: usize,
+    pub path: PathBuf,
+}
+
+/// Parse `div_p{n}_b{batch}.hlo.txt` names (manifest-free discovery, so a
+/// partially-written manifest can never wedge the service).
+pub fn parse_artifact_name(name: &str) -> Option<(u32, usize)> {
+    let rest = name.strip_prefix("div_p")?.strip_suffix(".hlo.txt")?;
+    let (n, b) = rest.split_once("_b")?;
+    Some((n.parse().ok()?, b.parse().ok()?))
+}
+
+/// Discover artifacts in a directory.
+pub fn discover(dir: &Path) -> Result<Vec<Variant>> {
+    let mut out = Vec::new();
+    for entry in std::fs::read_dir(dir)
+        .with_context(|| format!("artifact dir {dir:?} (run `make artifacts`)"))?
+    {
+        let entry = entry?;
+        let name = entry.file_name();
+        if let Some((n, batch)) = parse_artifact_name(&name.to_string_lossy()) {
+            out.push(Variant { n, batch, path: entry.path() });
+        }
+    }
+    out.sort_by_key(|v| (v.n, v.batch));
+    if out.is_empty() {
+        bail!("no artifacts found in {dir:?} (run `make artifacts`)");
+    }
+    Ok(out)
+}
+
+/// The PJRT execution runtime.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    variants: Vec<Variant>,
+    compiled: std::sync::Mutex<HashMap<(u32, usize), std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// CPU PJRT client over the artifacts in `dir`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let variants = discover(dir.as_ref())?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+        Ok(Runtime { client, variants, compiled: std::sync::Mutex::new(HashMap::new()) })
+    }
+
+    /// Formats available in the artifact set.
+    pub fn formats(&self) -> Vec<u32> {
+        let mut ns: Vec<u32> = self.variants.iter().map(|v| v.n).collect();
+        ns.dedup();
+        ns
+    }
+
+    /// Pick the smallest variant of format `n` with batch ≥ `len`
+    /// (falling back to the largest available — callers then chunk).
+    pub fn variant_for(&self, n: u32, len: usize) -> Result<&Variant> {
+        let mut candidates: Vec<&Variant> =
+            self.variants.iter().filter(|v| v.n == n).collect();
+        if candidates.is_empty() {
+            bail!("no artifact for Posit{n} (have {:?})", self.formats());
+        }
+        candidates.sort_by_key(|v| v.batch);
+        Ok(candidates
+            .iter()
+            .find(|v| v.batch >= len)
+            .unwrap_or_else(|| candidates.last().unwrap()))
+    }
+
+    fn executable(&self, v: &Variant) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        let key = (v.n, v.batch);
+        if let Some(exe) = self.compiled.lock().unwrap().get(&key) {
+            return Ok(exe.clone());
+        }
+        // compile outside the lock (slow), insert after
+        let proto = xla::HloModuleProto::from_text_file(
+            v.path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {:?}: {e:?}", v.path))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(
+            self.client.compile(&comp).map_err(|e| anyhow!("compile {:?}: {e:?}", v.path))?,
+        );
+        self.compiled.lock().unwrap().entry(key).or_insert_with(|| exe.clone());
+        Ok(exe)
+    }
+
+    /// Warm the compile cache for every variant of format `n`.
+    pub fn warmup(&self, n: u32) -> Result<()> {
+        for v in self.variants.clone().iter().filter(|v| v.n == n) {
+            self.executable(v)?;
+        }
+        Ok(())
+    }
+
+    /// Execute one batched division of n-bit patterns. Inputs shorter than
+    /// the variant batch are padded (with 1.0/1.0) and truncated on return;
+    /// longer inputs are chunked.
+    pub fn divide_bits(&self, n: u32, x: &[u64], d: &[u64]) -> Result<Vec<u64>> {
+        assert_eq!(x.len(), d.len());
+        let v = self.variant_for(n, x.len())?.clone();
+        let exe = self.executable(&v)?;
+        let mut out = Vec::with_capacity(x.len());
+        let one = 1i64 << (n - 2);
+        for (cx, cd) in x.chunks(v.batch).zip(d.chunks(v.batch)) {
+            let mut xv: Vec<i64> = cx.iter().map(|&b| (b & mask(n)) as i64).collect();
+            let mut dv: Vec<i64> = cd.iter().map(|&b| (b & mask(n)) as i64).collect();
+            xv.resize(v.batch, one);
+            dv.resize(v.batch, one);
+            let xl = xla::Literal::vec1(&xv);
+            let dl = xla::Literal::vec1(&dv);
+            let result = exe
+                .execute::<xla::Literal>(&[xl, dl])
+                .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetch: {e:?}"))?;
+            let tuple = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+            let q: Vec<i64> = tuple.to_vec().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+            out.extend(q[..cx.len()].iter().map(|&b| b as u64 & mask(n)));
+        }
+        Ok(out)
+    }
+
+    /// Typed wrapper over [`Runtime::divide_bits`].
+    pub fn divide(&self, x: &[Posit], d: &[Posit]) -> Result<Vec<Posit>> {
+        let n = x.first().map(|p| p.width()).unwrap_or(16);
+        let xb: Vec<u64> = x.iter().map(|p| p.to_bits()).collect();
+        let db: Vec<u64> = d.iter().map(|p| p.to_bits()).collect();
+        Ok(self
+            .divide_bits(n, &xb, &db)?
+            .into_iter()
+            .map(|b| Posit::from_bits(n, b))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_name_parsing() {
+        assert_eq!(parse_artifact_name("div_p16_b256.hlo.txt"), Some((16, 256)));
+        assert_eq!(parse_artifact_name("div_p32_b1024.hlo.txt"), Some((32, 1024)));
+        assert_eq!(parse_artifact_name("manifest.json"), None);
+        assert_eq!(parse_artifact_name("div_p16.hlo.txt"), None);
+        assert_eq!(parse_artifact_name("div_pXX_bYY.hlo.txt"), None);
+    }
+
+    // Integration tests that need built artifacts live in
+    // rust/tests/pjrt_integration.rs (they require `make artifacts`).
+}

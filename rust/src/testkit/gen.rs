@@ -1,0 +1,125 @@
+//! Posit-aware generators and shrinkers for property tests.
+
+use super::Rng;
+use crate::posit::{mask, Posit};
+
+/// A random bit pattern of width `n` (may be zero or NaR).
+pub fn any_posit(rng: &mut Rng, n: u32) -> Posit {
+    Posit::from_bits(n, rng.next_u64() & mask(n))
+}
+
+/// A random *real* posit (excludes NaR; may be zero).
+pub fn real_posit(rng: &mut Rng, n: u32) -> Posit {
+    loop {
+        let p = any_posit(rng, n);
+        if !p.is_nar() {
+            return p;
+        }
+    }
+}
+
+/// A random non-zero, non-NaR posit.
+pub fn nonzero_posit(rng: &mut Rng, n: u32) -> Posit {
+    loop {
+        let p = any_posit(rng, n);
+        if !p.is_nar() && !p.is_zero() {
+            return p;
+        }
+    }
+}
+
+/// A posit biased toward "interesting" patterns: specials, extremes,
+/// boundary regimes, then uniform fill.
+pub fn tricky_posit(rng: &mut Rng, n: u32) -> Posit {
+    match rng.below(10) {
+        0 => Posit::zero(n),
+        1 => Posit::nar(n),
+        2 => Posit::one(n),
+        3 => Posit::one(n).neg(),
+        4 => Posit::maxpos(n),
+        5 => Posit::minpos(n),
+        6 => Posit::maxpos(n).neg(),
+        7 => Posit::minpos(n).neg(),
+        // near-1 values: long fraction, regime 10
+        8 => {
+            let frac = rng.next_u64() & mask(crate::posit::frac_bits(n));
+            Posit::from_bits(n, (0b10 << (n - 3)) >> 1 | frac)
+        }
+        _ => any_posit(rng, n),
+    }
+}
+
+/// A dividend/divisor pair with both operands real and divisor non-zero —
+/// the domain of the fraction recurrence.
+pub fn division_operands(rng: &mut Rng, n: u32) -> (Posit, Posit) {
+    (real_posit(rng, n), nonzero_posit(rng, n))
+}
+
+/// Shrinker for posit patterns: toward zero / one / shorter patterns.
+pub fn shrink_posit(p: &Posit) -> Vec<Posit> {
+    let n = p.width();
+    let bits = p.to_bits();
+    let mut out = Vec::new();
+    for cand in [0u64, 1 << (n - 2), bits >> 1, bits & (bits - 1).max(0)] {
+        let c = Posit::from_bits(n, cand);
+        if c != *p {
+            out.push(c);
+        }
+    }
+    out
+}
+
+/// Shrinker for operand pairs (shrinks one side at a time).
+pub fn shrink_pair(pair: &(Posit, Posit)) -> Vec<(Posit, Posit)> {
+    let mut out = Vec::new();
+    for a in shrink_posit(&pair.0) {
+        out.push((a, pair.1));
+    }
+    for b in shrink_posit(&pair.1) {
+        if !b.is_zero() {
+            out.push((pair.0, b));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generators_respect_constraints() {
+        let mut rng = Rng::seeded(99);
+        for _ in 0..2000 {
+            let n = *rng.choose(&[8u32, 16, 32, 64]);
+            assert!(!real_posit(&mut rng, n).is_nar());
+            let nz = nonzero_posit(&mut rng, n);
+            assert!(!nz.is_nar() && !nz.is_zero());
+            let (_, d) = division_operands(&mut rng, n);
+            assert!(!d.is_zero() && !d.is_nar());
+        }
+    }
+
+    #[test]
+    fn tricky_hits_specials() {
+        let mut rng = Rng::seeded(1);
+        let mut saw_nar = false;
+        let mut saw_zero = false;
+        let mut saw_maxpos = false;
+        for _ in 0..200 {
+            let p = tricky_posit(&mut rng, 16);
+            saw_nar |= p.is_nar();
+            saw_zero |= p.is_zero();
+            saw_maxpos |= p == Posit::maxpos(16);
+        }
+        assert!(saw_nar && saw_zero && saw_maxpos);
+    }
+
+    #[test]
+    fn shrinkers_move_toward_simpler() {
+        let p = Posit::from_bits(16, 0x5A5A);
+        for c in shrink_posit(&p) {
+            assert_ne!(c, p);
+        }
+    }
+}

@@ -1,0 +1,240 @@
+//! Property-based testing substrate.
+//!
+//! The offline crate set has no `proptest`/`quickcheck`, so this module
+//! provides the pieces the test-suite needs: a fast deterministic PRNG
+//! ([`Rng`], SplitMix64), a `forall` runner with greedy shrinking
+//! ([`forall`]), and posit-aware generators ([`gen`]).
+
+pub mod gen;
+
+/// SplitMix64 PRNG — tiny, fast, full-period, deterministic across
+/// platforms. Good enough statistical quality for test-case generation and
+/// benchmark workloads (not for cryptography).
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    /// Create a generator from a seed. Equal seeds ⇒ equal streams.
+    pub fn seeded(seed: u64) -> Self {
+        Rng { state: seed }
+    }
+
+    /// Next raw 64-bit value.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, n)` (n > 0), by rejection to avoid modulo bias.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0);
+        let zone = u64::MAX - (u64::MAX % n);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return v % n;
+            }
+        }
+    }
+
+    /// Uniform in `[lo, hi]` inclusive.
+    #[inline]
+    pub fn range_inclusive(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi);
+        if lo == 0 && hi == u64::MAX {
+            return self.next_u64();
+        }
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Uniform in `[lo, hi]` inclusive over signed values.
+    #[inline]
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        lo.wrapping_add(self.below((hi.wrapping_sub(lo) as u64).wrapping_add(1).max(1)) as i64)
+    }
+
+    #[inline]
+    pub fn chance(&mut self, p_num: u64, p_den: u64) -> bool {
+        self.below(p_den) < p_num
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn f64_unit(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Pick one element of a non-empty slice.
+    #[inline]
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.below(items.len() as u64) as usize]
+    }
+
+    /// Split off an independent generator (for parallel workers).
+    pub fn fork(&mut self) -> Rng {
+        Rng::seeded(self.next_u64() ^ 0xA076_1D64_78BD_642F)
+    }
+}
+
+/// Configuration for [`forall`].
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 1000, seed: 0x5EED_0000_0000_0001, max_shrink_steps: 2000 }
+    }
+}
+
+impl Config {
+    pub fn cases(n: usize) -> Self {
+        Config { cases: n, ..Default::default() }
+    }
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+/// Run `prop` over `cfg.cases` generated inputs; on failure, greedily
+/// shrink using `shrink` (candidate producer) and panic with the minimal
+/// failing input and the seed to reproduce.
+pub fn forall<T, G, S, P>(cfg: Config, generate: G, shrink: S, prop: P)
+where
+    T: Clone + core::fmt::Debug,
+    G: Fn(&mut Rng) -> T,
+    S: Fn(&T) -> Vec<T>,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::seeded(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = generate(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // Greedy shrink: repeatedly take the first failing candidate.
+            let mut best = input.clone();
+            let mut best_msg = msg;
+            let mut steps = 0;
+            'outer: while steps < cfg.max_shrink_steps {
+                for cand in shrink(&best) {
+                    steps += 1;
+                    if steps >= cfg.max_shrink_steps {
+                        break 'outer;
+                    }
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break; // no candidate fails: local minimum
+            }
+            panic!(
+                "property failed (case {case}/{}, seed {:#x}):\n  input (shrunk): {best:?}\n  original: {input:?}\n  error: {best_msg}",
+                cfg.cases, cfg.seed
+            );
+        }
+    }
+}
+
+/// `forall` without shrinking.
+pub fn forall_ns<T, G, P>(cfg: Config, generate: G, prop: P)
+where
+    T: Clone + core::fmt::Debug,
+    G: Fn(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    forall(cfg, generate, |_| Vec::new(), prop);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::seeded(42);
+        let mut b = Rng::seeded(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut rng = Rng::seeded(7);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = rng.below(10) as usize;
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all buckets hit");
+    }
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall_ns(Config::cases(100), |r| r.next_u32(), |_| Ok(()));
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failure() {
+        forall_ns(Config::cases(100), |r| r.below(10), |&v| {
+            if v < 9 {
+                Ok(())
+            } else {
+                Err("too big".into())
+            }
+        });
+    }
+
+    #[test]
+    fn shrinking_finds_minimum() {
+        // Property: v < 57. Shrinker: halve. Minimal failing value under
+        // halving from any failing v is 57..=..., greedy shrink should
+        // reach something < 114.
+        let result = std::panic::catch_unwind(|| {
+            forall(
+                Config::cases(1000),
+                |r| r.below(10_000),
+                |&v| {
+                    let mut c = Vec::new();
+                    if v > 0 {
+                        c.push(v / 2);
+                        c.push(v - 1);
+                    }
+                    c
+                },
+                |&v| if v < 57 { Ok(()) } else { Err(format!("{v} >= 57")) },
+            )
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("(shrunk): 57"), "greedy shrink reached 57: {msg}");
+    }
+
+    #[test]
+    fn f64_unit_in_range() {
+        let mut rng = Rng::seeded(3);
+        for _ in 0..1000 {
+            let v = rng.f64_unit();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+}

@@ -1,0 +1,159 @@
+//! Workload generators shared by the examples, benches and the e2e driver.
+
+use crate::posit::{mask, Posit};
+use crate::testkit::Rng;
+
+/// A stream of division operand pairs of a fixed posit width.
+pub trait Workload {
+    fn next_pair(&mut self) -> (Posit, Posit);
+    fn name(&self) -> &'static str;
+}
+
+/// Uniform random bit patterns (the synthesis-style stimulus): every
+/// operand pattern equally likely, including extremes; divisor zero and
+/// NaR excluded (special-path rates are measured separately).
+pub struct Uniform {
+    pub n: u32,
+    rng: Rng,
+}
+
+impl Uniform {
+    pub fn new(n: u32, seed: u64) -> Self {
+        Uniform { n, rng: Rng::seeded(seed) }
+    }
+}
+
+impl Workload for Uniform {
+    fn next_pair(&mut self) -> (Posit, Posit) {
+        let x = Posit::from_bits(self.n, self.rng.next_u64() & mask(self.n));
+        let d = loop {
+            let d = Posit::from_bits(self.n, self.rng.next_u64() & mask(self.n));
+            if !d.is_zero() && !d.is_nar() {
+                break d;
+            }
+        };
+        (if x.is_nar() { Posit::one(self.n) } else { x }, d)
+    }
+
+    fn name(&self) -> &'static str {
+        "uniform"
+    }
+}
+
+/// DSP-style operands: magnitudes concentrated around 1 (the regime where
+/// posits are dense), as produced by normalized signal-processing kernels
+/// — the workload the paper's introduction motivates.
+pub struct DspTrace {
+    pub n: u32,
+    rng: Rng,
+}
+
+impl DspTrace {
+    pub fn new(n: u32, seed: u64) -> Self {
+        DspTrace { n, rng: Rng::seeded(seed) }
+    }
+    fn sample(&mut self) -> Posit {
+        // log2-uniform in [2^-8, 2^8), random sign, dense fraction
+        let scale = self.rng.range_i64(-8, 8) as f64;
+        let frac = 1.0 + self.rng.f64_unit();
+        let v = frac * scale.exp2();
+        let v = if self.rng.chance(1, 2) { -v } else { v };
+        Posit::from_f64(self.n, v)
+    }
+}
+
+impl Workload for DspTrace {
+    fn next_pair(&mut self) -> (Posit, Posit) {
+        let x = self.sample();
+        let mut d = self.sample();
+        while d.is_zero() {
+            d = self.sample();
+        }
+        (x, d)
+    }
+
+    fn name(&self) -> &'static str {
+        "dsp-trace"
+    }
+}
+
+/// Mixed traffic including special cases (zero dividends, zero divisors,
+/// NaR) at a configurable per-mille rate — exercises the fast path.
+pub struct MixedSpecials {
+    pub n: u32,
+    pub special_per_mille: u64,
+    rng: Rng,
+}
+
+impl MixedSpecials {
+    pub fn new(n: u32, special_per_mille: u64, seed: u64) -> Self {
+        MixedSpecials { n, special_per_mille, rng: Rng::seeded(seed) }
+    }
+}
+
+impl Workload for MixedSpecials {
+    fn next_pair(&mut self) -> (Posit, Posit) {
+        if self.rng.chance(self.special_per_mille, 1000) {
+            match self.rng.below(3) {
+                0 => (Posit::zero(self.n), Posit::one(self.n)),
+                1 => (Posit::one(self.n), Posit::zero(self.n)),
+                _ => (Posit::nar(self.n), Posit::one(self.n)),
+            }
+        } else {
+            let x = Posit::from_bits(self.n, self.rng.next_u64() & mask(self.n));
+            let d = Posit::from_bits(self.n, (self.rng.next_u64() & mask(self.n)) | 1);
+            (x, d)
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "mixed-specials"
+    }
+}
+
+/// Collect `count` pairs from a workload.
+pub fn take(w: &mut dyn Workload, count: usize) -> Vec<(Posit, Posit)> {
+    (0..count).map(|_| w.next_pair()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_never_yields_invalid_divisor() {
+        let mut w = Uniform::new(16, 1);
+        for _ in 0..5000 {
+            let (x, d) = w.next_pair();
+            assert!(!d.is_zero() && !d.is_nar());
+            assert!(!x.is_nar());
+        }
+    }
+
+    #[test]
+    fn dsp_trace_is_centered() {
+        let mut w = DspTrace::new(32, 2);
+        let mut in_band = 0;
+        for _ in 0..2000 {
+            let (x, _) = w.next_pair();
+            let v = x.to_f64().abs();
+            if (2.0f64.powi(-10)..2.0f64.powi(10)).contains(&v) {
+                in_band += 1;
+            }
+        }
+        assert!(in_band > 1900, "{in_band}");
+    }
+
+    #[test]
+    fn mixed_specials_rate() {
+        let mut w = MixedSpecials::new(16, 100, 3);
+        let mut specials = 0;
+        for _ in 0..10_000 {
+            let (x, d) = w.next_pair();
+            if x.is_zero() || x.is_nar() || d.is_zero() {
+                specials += 1;
+            }
+        }
+        assert!((700..1300).contains(&specials), "{specials}");
+    }
+}

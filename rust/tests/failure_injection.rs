@@ -1,0 +1,74 @@
+//! Failure injection: the service and runtime must fail loudly at startup
+//! on bad artifacts and keep serving through client-side misbehavior.
+
+use std::time::Duration;
+
+use posit_div::coordinator::{Backend, BatchPolicy, DivisionService, ServiceConfig};
+use posit_div::division::Algorithm;
+use posit_div::posit::Posit;
+use posit_div::runtime::Runtime;
+
+#[test]
+fn runtime_missing_dir_errors() {
+    let err = match Runtime::load("/nonexistent/artifacts") {
+        Err(e) => e,
+        Ok(_) => panic!("must fail"),
+    };
+    assert!(format!("{err:#}").contains("artifact"), "{err:#}");
+}
+
+#[test]
+fn runtime_empty_dir_errors() {
+    let dir = std::env::temp_dir().join("posit-div-empty-artifacts");
+    let _ = std::fs::create_dir_all(&dir);
+    let err = match Runtime::load(&dir) {
+        Err(e) => e,
+        Ok(_) => panic!("must fail"),
+    };
+    assert!(format!("{err:#}").contains("no artifacts"), "{err:#}");
+}
+
+#[test]
+fn service_startup_fails_on_corrupt_artifact() {
+    let dir = std::env::temp_dir().join("posit-div-corrupt-artifacts");
+    let _ = std::fs::create_dir_all(&dir);
+    std::fs::write(dir.join("div_p16_b256.hlo.txt"), "this is not HLO").unwrap();
+    let res = DivisionService::start(ServiceConfig {
+        n: 16,
+        backend: Backend::Pjrt { artifacts_dir: dir.clone() },
+        policy: BatchPolicy::default(),
+    });
+    assert!(res.is_err(), "corrupt artifact must fail startup");
+}
+
+#[test]
+fn service_survives_dropped_response_receivers() {
+    let svc = DivisionService::start(ServiceConfig {
+        n: 16,
+        backend: Backend::Native { alg: Algorithm::Srt2Cs, threads: 2 },
+        policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(50) },
+    })
+    .unwrap();
+    // submit and immediately drop receivers: the leader must not panic
+    for _ in 0..100 {
+        drop(svc.submit(Posit::one(16), Posit::one(16)));
+    }
+    // service still works afterwards
+    assert_eq!(svc.divide(Posit::one(16), Posit::one(16)), Posit::one(16));
+    svc.shutdown();
+}
+
+#[test]
+fn service_width_mismatch_panics_on_submit() {
+    let svc = DivisionService::start(ServiceConfig {
+        n: 16,
+        backend: Backend::Native { alg: Algorithm::Srt2Cs, threads: 1 },
+        policy: BatchPolicy::default(),
+    })
+    .unwrap();
+    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        svc.submit(Posit::one(32), Posit::one(32))
+    }));
+    assert!(res.is_err());
+    svc.shutdown();
+}

@@ -1,0 +1,47 @@
+//! End-to-end integration: the AOT-compiled JAX/Pallas graph executed via
+//! PJRT from Rust must agree bit-for-bit with the native Rust golden model.
+//! Requires `make artifacts`.
+
+use posit_div::division::golden;
+use posit_div::posit::{mask, Posit};
+use posit_div::runtime::Runtime;
+use posit_div::testkit::Rng;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[test]
+fn pjrt_graph_matches_rust_golden() {
+    let rt = Runtime::load(artifacts_dir()).expect("run `make artifacts` first");
+    let mut rng = Rng::seeded(0x9187);
+    for &n in &[16u32, 32] {
+        for round in 0..4 {
+            let len = [256usize, 100, 1024, 2500][round];
+            let x: Vec<u64> = (0..len).map(|_| rng.next_u64() & mask(n)).collect();
+            let d: Vec<u64> = (0..len).map(|_| rng.next_u64() & mask(n)).collect();
+            let got = rt.divide_bits(n, &x, &d).unwrap();
+            for i in 0..len {
+                let want = golden::divide(
+                    Posit::from_bits(n, x[i]),
+                    Posit::from_bits(n, d[i]),
+                )
+                .result
+                .to_bits();
+                assert_eq!(got[i], want, "n={n} x={:#x} d={:#x}", x[i], d[i]);
+            }
+        }
+    }
+}
+
+#[test]
+fn pjrt_specials() {
+    let rt = Runtime::load(artifacts_dir()).expect("run `make artifacts` first");
+    let n = 16;
+    let nar = 1u64 << (n - 1);
+    let one = 1u64 << (n - 2);
+    let x = vec![0, 0, nar, one, one];
+    let d = vec![one, 0, one, nar, 0];
+    let q = rt.divide_bits(n, &x, &d).unwrap();
+    assert_eq!(q, vec![0, nar, nar, nar, nar]);
+}

@@ -1,0 +1,160 @@
+//! Property-based integration tests over the full division pipeline,
+//! including the strongest check in the suite: round-to-nearest
+//! correctness verified by exact rational comparison against
+//! pattern-space midpoints (independent of the encode path).
+
+use posit_div::division::{golden, Algorithm, DivEngine};
+use posit_div::posit::Posit;
+use posit_div::testkit::{self, gen, Config};
+
+#[test]
+fn golden_is_correctly_rounded_p16_random() {
+    // verify_nearest does an exact rational nearest-posit check.
+    testkit::forall(
+        Config::cases(20_000).with_seed(0x4EA1),
+        |rng| gen::division_operands(rng, 16),
+        gen::shrink_pair,
+        |&(x, d)| {
+            if x.is_zero() {
+                return Ok(());
+            }
+            let q = golden::divide(x, d).result;
+            golden::verify_nearest(x, d, q);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn division_identities() {
+    let engine = Algorithm::Srt4CsOfFr.engine();
+    testkit::forall(
+        Config::cases(20_000),
+        |rng| {
+            let n = *rng.choose(&[8u32, 16, 32]);
+            gen::division_operands(rng, n)
+        },
+        gen::shrink_pair,
+        |&(x, d)| {
+            let n = x.width();
+            // x / 1 = x
+            if engine.divide(x, Posit::one(n)).result != x {
+                return Err("x/1 != x".into());
+            }
+            // x / x = 1 for nonzero x
+            if !x.is_zero() && engine.divide(x, x).result != Posit::one(n) {
+                return Err("x/x != 1".into());
+            }
+            // (-x)/d = -(x/d) — negation is exact in posits
+            let q = engine.divide(x, d).result;
+            if engine.divide(x.neg(), d).result != q.neg() {
+                return Err("(-x)/d != -(x/d)".into());
+            }
+            if engine.divide(x, d.neg()).result != q.neg() {
+                return Err("x/(-d) != -(x/d)".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn division_by_powers_of_two_is_exact_shift() {
+    // x / 2^k only changes the scale: exact unless it saturates.
+    let engine = Algorithm::Srt2Cs.engine();
+    testkit::forall(
+        Config::cases(5_000),
+        |rng| {
+            let x = gen::nonzero_posit(rng, 16);
+            let k = rng.range_i64(-8, 8);
+            (x, k)
+        },
+        |_| Vec::new(),
+        |&(x, k)| {
+            let n = 16;
+            let d = Posit::from_f64(n, (k as f64).exp2());
+            let q = engine.divide(x, d).result;
+            let want = golden::divide(x, d).result;
+            if q != want {
+                return Err(format!("mismatch for 2^{k}"));
+            }
+            // and the value matches the f64 shift when in range
+            let expect = x.to_f64() / (k as f64).exp2();
+            let via = Posit::from_f64(n, expect);
+            if via != q {
+                return Err(format!("2^{k} shift not exact: {} vs {}", q, via));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn nar_and_zero_propagation_all_engines() {
+    for alg in Algorithm::ALL {
+        let e = alg.engine();
+        for n in [8u32, 16, 32] {
+            let one = Posit::one(n);
+            assert!(e.divide(one, Posit::zero(n)).result.is_nar(), "{alg:?}");
+            assert!(e.divide(Posit::nar(n), one).result.is_nar(), "{alg:?}");
+            assert!(e.divide(one, Posit::nar(n)).result.is_nar(), "{alg:?}");
+            assert!(e.divide(Posit::zero(n), one).result.is_zero(), "{alg:?}");
+            assert!(e.divide(Posit::zero(n), Posit::zero(n)).result.is_nar(), "{alg:?}");
+        }
+    }
+}
+
+#[test]
+fn quotient_monotonicity_in_dividend() {
+    // for fixed positive divisor, x1 <= x2 => x1/d <= x2/d (posit order)
+    let engine = Algorithm::Srt4CsOfFr.engine();
+    testkit::forall_ns(Config::cases(10_000), |rng| {
+        let d = gen::nonzero_posit(rng, 16).abs();
+        let a = gen::real_posit(rng, 16);
+        let b = gen::real_posit(rng, 16);
+        (a, b, d)
+    }, |&(a, b, d)| {
+        let (lo, hi) = if a.total_cmp(b).is_le() { (a, b) } else { (b, a) };
+        let qlo = engine.divide(lo, d).result;
+        let qhi = engine.divide(hi, d).result;
+        if qlo.total_cmp(qhi).is_gt() {
+            return Err(format!("monotonicity violated: {lo:?}/{d:?} > {hi:?}/{d:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn multiplication_division_roundtrip_within_ulp() {
+    // (x/d)*d is within 1 ulp of x when no saturation occurred (two
+    // roundings) — a sanity link between the arithmetic and division.
+    let engine = Algorithm::Srt4CsOfFr.engine();
+    testkit::forall_ns(Config::cases(10_000), |rng| {
+        let x = gen::nonzero_posit(rng, 32);
+        let d = gen::nonzero_posit(rng, 32);
+        (x, d)
+    }, |&(x, d)| {
+        let n = 32;
+        let q = engine.divide(x, d).result;
+        if q == Posit::maxpos(n) || q == Posit::maxpos(n).neg()
+            || q == Posit::minpos(n) || q == Posit::minpos(n).neg()
+        {
+            return Ok(()); // saturated
+        }
+        // restrict to the band where q keeps most fraction bits: outside
+        // it, the quotient's long regime makes the round-trip legitimately
+        // coarse in x's (denser) ulp scale.
+        let qv = q.to_f64().abs();
+        if !(2.0f64.powi(-16)..2.0f64.powi(16)).contains(&qv) {
+            return Ok(());
+        }
+        let back = q.mul(d);
+        let dist = back.ulp_distance(x);
+        // two nearest-roundings: within a couple of ulp except at regime
+        // boundaries where ulp sizes jump
+        if dist > 8 {
+            return Err(format!("(x/d)*d drifted {dist} ulp: {x:?} {d:?}"));
+        }
+        Ok(())
+    });
+}
