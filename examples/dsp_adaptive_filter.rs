@@ -14,7 +14,7 @@
 //! cargo run --release --example dsp_adaptive_filter
 //! ```
 
-use posit_div::division::{Algorithm, DivEngine};
+use posit_div::division::{Algorithm, DivEngine, Divider};
 use posit_div::posit::Posit;
 use posit_div::testkit::Rng;
 
@@ -95,8 +95,10 @@ fn main() {
             Algorithm::Srt4Scaled,
             Algorithm::Newton,
         ] {
-            let engine = alg.engine();
-            let (mse, cycles) = nlms(n, engine.as_ref(), 0xD5B);
+            // one reusable context per engine — `Divider` is itself a
+            // `DivEngine`, so it drops straight into the filter loop
+            let ctx = Divider::new(n, alg).expect("standard width");
+            let (mse, cycles) = nlms(n, &ctx, 0xD5B);
             let note = match baseline_cycles {
                 None => {
                     baseline_cycles = Some(cycles);
@@ -104,7 +106,7 @@ fn main() {
                 }
                 Some(b) => format!("{:.2}x fewer cycles", b as f64 / cycles as f64),
             };
-            println!("{:<18} {:>14.3e} {:>16} {:>22}", engine.name(), mse, cycles, note);
+            println!("{:<18} {:>14.3e} {:>16} {:>22}", ctx.name(), mse, cycles, note);
         }
         println!("(identical MSE across engines = bit-exact divisions; only latency differs)");
     }

@@ -1,9 +1,13 @@
+//! Perf probe: scalar vs batch hot-path timings for the optimized radix-4
+//! engine, plus the u128-vs-u64 fraction-recurrence ablation tracked in
+//! EXPERIMENTS.md §Perf.
+
 use posit_div::division::srt4_cs::Srt4Cs;
-use posit_div::division::{Algorithm, DivEngine};
-use posit_div::posit::frac_bits;
-use posit_div::posit::{mask, Posit};
+use posit_div::division::{Algorithm, DivEngine, Divider};
+use posit_div::posit::{frac_bits, mask, Posit};
 use posit_div::testkit::Rng;
 use std::time::Instant;
+
 fn main() {
     let mut rng = Rng::seeded(1);
     for n in [16u32, 32] {
@@ -11,16 +15,33 @@ fn main() {
             (Posit::from_bits(n, rng.next_u64() & mask(n)),
              Posit::from_bits(n, (rng.next_u64() & mask(n)) | 1))
         }).collect();
-        let e = Algorithm::Srt4CsOfFr.engine();
+        let ctx = Divider::new(n, Algorithm::Srt4CsOfFr).expect("width");
         // warm
-        for &(x, d) in &pairs { std::hint::black_box(e.divide(x, d).result); }
+        for &(x, d) in &pairs {
+            std::hint::black_box(ctx.divide(x, d).expect("width").result);
+        }
         let mut best = f64::MAX;
         for _ in 0..40 {
             let t0 = Instant::now();
-            for &(x, d) in &pairs { std::hint::black_box(e.divide(x, d).result); }
+            for &(x, d) in &pairs {
+                std::hint::black_box(ctx.divide(x, d).expect("width").result);
+            }
             best = best.min(t0.elapsed().as_secs_f64() / pairs.len() as f64);
         }
-        println!("Posit{n} srt4csoffr: {:.0} ns/div ({:.2} Mdiv/s)", best * 1e9, 1e-6 / best);
+        println!("Posit{n} srt4csoffr scalar: {:.0} ns/div ({:.2} Mdiv/s)", best * 1e9, 1e-6 / best);
+
+        // batch path over the same working set (the coordinator's loop)
+        let xs: Vec<u64> = pairs.iter().map(|p| p.0.to_bits()).collect();
+        let ds: Vec<u64> = pairs.iter().map(|p| p.1.to_bits()).collect();
+        let mut out = vec![0u64; xs.len()];
+        let mut best_b = f64::MAX;
+        for _ in 0..40 {
+            let t0 = Instant::now();
+            ctx.divide_batch(&xs, &ds, &mut out).expect("equal lengths");
+            std::hint::black_box(&out);
+            best_b = best_b.min(t0.elapsed().as_secs_f64() / xs.len() as f64);
+        }
+        println!("Posit{n} srt4csoffr batch : {:.0} ns/div ({:.2} Mdiv/s)", best_b * 1e9, 1e-6 / best_b);
 
         // u128 reference recurrence (the pre-optimization path), fraction
         // stage only, for the §Perf before/after ablation

@@ -1,21 +1,38 @@
-//! Quickstart: the public API in two minutes.
+//! Quickstart: the public API in two minutes — the same tour as the
+//! `lib.rs` crate docs, runnable:
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
-use posit_div::division::{golden, Algorithm, DivEngine};
-use posit_div::posit::Posit;
+use posit_div::prelude::*;
 
-fn main() {
-    // --- posits -----------------------------------------------------------
-    let n = 32; // Posit⟨32,2⟩, the 2022-standard es=2
-    let x = Posit::from_f64(n, 355.0);
-    let d = Posit::from_f64(n, 113.0);
+fn main() -> Result<()> {
+    // --- typed posits ------------------------------------------------------
+    // P8/P16/P32/P64 are the 2022-standard formats (es = 2) as types:
+    // operators, constants, ordered comparisons, rounded conversions.
+    let x = P32::round_from(355.0);
+    let d = P32::round_from(113.0);
     println!("x = {x:?}");
     println!("d = {d:?}");
 
-    // --- division through any of the paper's engines ----------------------
+    // division routes through the paper's optimized SRT r4 CS OF FR engine
+    let q = x / d;
+    println!("355/113 = {} (2 ulp from π)", q.to_f64());
+    assert!(P32::MIN_POSITIVE < q && q < P32::MAXPOS);
+
+    // arithmetic + constants
+    let a = P16::round_from(0.3);
+    let b = P16::round_from(0.6);
+    println!("\nPosit16: 0.3 + 0.6 = {}", a + b);
+    println!("Posit16: 0.3 * 0.6 = {}", a * b);
+    // specials: a single NaR, saturation instead of overflow
+    assert!((P16::ONE / P16::ZERO).is_nar());
+    assert_eq!(P16::MAXPOS + P16::MAXPOS, P16::MAXPOS);
+
+    // --- division contexts: any Table IV engine, built once ----------------
+    let xp = x.as_posit();
+    let dp = d.as_posit();
     for alg in [
         Algorithm::Nrd,        // Algorithm 1 baseline
         Algorithm::Srt2Cs,     // radix-2 SRT, carry-save residual
@@ -23,32 +40,35 @@ fn main() {
         Algorithm::Srt4Scaled, // radix-4 with Table I operand scaling
         Algorithm::Newton,     // the multiplicative baseline
     ] {
-        let engine = alg.engine();
-        let div = engine.divide(x, d);
+        let ctx = Divider::new(32, alg)?; // reusable, no per-call allocation
+        let div = ctx.divide(xp, dp)?;
         println!(
             "{:<18} -> {:<22} {:>2} iterations, {:>2} cycles",
-            engine.name(),
+            ctx.name(),
             div.result.to_f64(),
             div.iterations,
             div.cycles
         );
+        // every engine is bit-identical to the operator result:
+        assert_eq!(div.result.to_bits(), q.to_bits());
     }
 
-    // every engine is bit-identical to the exact golden model:
-    let want = golden::divide(x, d).result;
-    assert!(Algorithm::ALL.iter().all(|a| a.engine().divide(x, d).result == want));
-    println!("all engines agree bit-exactly: 355/113 = {} (2 ulp from π)", want.to_f64());
+    // --- batch-first division ---------------------------------------------
+    // The same loop the coordinator's native backend and the benches run.
+    let ctx = Divider::standard(32)?;
+    let xs = vec![xp.to_bits(); 8];
+    let ds = vec![dp.to_bits(); 8];
+    let mut out = vec![0u64; 8];
+    ctx.divide_batch(&xs, &ds, &mut out)?;
+    assert!(out.iter().all(|&bits| bits == q.to_bits()));
+    println!("\nbatch of {} divisions: all bit-identical to the scalar path", out.len());
 
-    // --- posit arithmetic basics ------------------------------------------
-    let a = Posit::from_f64(16, 0.3);
-    let b = Posit::from_f64(16, 0.6);
-    println!("\nPosit16: 0.3 + 0.6 = {}", a.add(b));
-    println!("Posit16: 0.3 * 0.6 = {}", a.mul(b));
-    println!("Posit16 has {} fraction bits at 1.0; maxpos = {:e}",
-        posit_div::posit::frac_bits(16), Posit::maxpos(16).to_f64());
-
-    // specials: a single NaR, no overflow
-    assert!(Posit::from_f64(16, f64::NAN).is_nar());
-    assert_eq!(Posit::maxpos(16).add(Posit::maxpos(16)), Posit::maxpos(16));
-    println!("posit saturates instead of overflowing; NaR is the only special");
+    // --- typed errors ------------------------------------------------------
+    assert_eq!(Divider::new(3, Algorithm::Nrd).err(), Some(PositError::WidthOutOfRange { n: 3 }));
+    assert_eq!(
+        ctx.divide(Posit::from_f64(16, 1.0), Posit::from_f64(16, 2.0)).unwrap_err(),
+        PositError::WidthMismatch { expected: 32, got: 16 }
+    );
+    println!("width/shape misuse is a typed PositError, not a panic");
+    Ok(())
 }

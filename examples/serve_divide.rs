@@ -4,12 +4,13 @@
 //!   L3 Rust coordinator (router + dynamic batcher + metrics)
 //!     -> PJRT backend: the AOT-compiled L2 JAX graph containing the
 //!        L1 Pallas radix-4 SRT kernel (artifacts/, built once by
-//!        `make artifacts`; Python is NOT running now)
-//!     -> native backend: the bit-exact Rust engines (for comparison)
+//!        `make artifacts`; needs the `xla` feature — skipped otherwise)
+//!     -> native backend: the bit-exact Rust engines behind one pre-built
+//!        `Divider` (for comparison)
 //!
 //! Serves a DSP-trace workload on Posit16 and Posit32 through both
-//! backends, verifies every response against the exact golden model, and
-//! reports throughput and latency.
+//! backends via the typed `Client` handle, verifies every response
+//! against the exact golden model, and reports throughput and latency.
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example serve_divide
@@ -18,8 +19,8 @@
 use std::sync::atomic::Ordering;
 use std::time::{Duration, Instant};
 
-use posit_div::coordinator::{Backend, BatchPolicy, DivisionService, ServiceConfig};
-use posit_div::division::{golden, Algorithm};
+use posit_div::division::golden;
+use posit_div::prelude::*;
 use posit_div::workload::{self, Workload};
 
 const REQUESTS: usize = 50_000;
@@ -29,16 +30,21 @@ fn run(n: u32, backend: Backend, label: &str) {
     let svc = match DivisionService::start(ServiceConfig { n, backend, policy }) {
         Ok(svc) => svc,
         Err(e) => {
-            eprintln!("[skip] {label} Posit{n}: {e:#} (run `make artifacts`)");
+            eprintln!("[skip] {label} Posit{n}: {e}");
             return;
         }
     };
+    let client = svc.client();
 
     let mut wl = workload::DspTrace::new(n, 0xE2E0 + n as u64);
     let pairs = workload::take(&mut wl, REQUESTS);
 
     let t0 = Instant::now();
-    let results = svc.divide_many(&pairs);
+    let results = client
+        .submit_batch(&pairs)
+        .expect("service running")
+        .wait()
+        .expect("service running");
     let wall = t0.elapsed();
 
     // full verification against the exact golden model
@@ -48,7 +54,7 @@ fn run(n: u32, backend: Backend, label: &str) {
         checked += 1;
     }
 
-    let m = svc.metrics();
+    let m = client.metrics();
     println!("\n[{label}] Posit{n}: {REQUESTS} requests in {wall:.2?}");
     println!("  throughput     : {:>12.0} div/s", REQUESTS as f64 / wall.as_secs_f64());
     println!("  batch latency  : {}", m.batch_latency.summary());
@@ -66,7 +72,7 @@ fn main() {
     for n in [16u32, 32] {
         run(
             n,
-            Backend::Native { alg: Algorithm::Srt4CsOfFr, threads: 4 },
+            Backend::Native { alg: Algorithm::DEFAULT, threads: 4 },
             "native rust engine (SRT r4 CS OF FR)",
         );
         run(

@@ -2,10 +2,10 @@
 //! division — the [16] energy-efficiency claim the paper builds on, from
 //! the hardware model, plus measured software throughput.
 
-use posit_div::bench::{bench_batched, Config, Runner};
-use posit_div::division::Algorithm;
+use posit_div::bench::{bench_batched, black_box, Config, Runner};
+use posit_div::division::{Algorithm, DivEngine, Divider};
 use posit_div::hardware::{combinational, pipelined, TSMC28};
-use posit_div::posit::{mask, Posit};
+use posit_div::posit::mask;
 use posit_div::testkit::Rng;
 
 fn main() {
@@ -40,24 +40,18 @@ fn main() {
     let mut runner = Runner::new("software throughput");
     let mut rng = Rng::seeded(16);
     for n in [16u32, 32, 64] {
-        let pairs: Vec<(Posit, Posit)> = (0..256)
-            .map(|_| {
-                (
-                    Posit::from_bits(n, rng.next_u64() & mask(n)),
-                    Posit::from_bits(n, (rng.next_u64() & mask(n)) | 1),
-                )
-            })
-            .collect();
+        let xs: Vec<u64> = (0..256).map(|_| rng.next_u64() & mask(n)).collect();
+        let ds: Vec<u64> = (0..256).map(|_| (rng.next_u64() & mask(n)) | 1).collect();
+        let mut out = vec![0u64; xs.len()];
         for alg in [Algorithm::Srt4CsOfFr, Algorithm::Newton] {
-            let e = alg.engine();
+            let ctx = Divider::new(n, alg).expect("width");
             runner.add(bench_batched(
-                &format!("Posit{n} {}", e.name()),
+                &format!("Posit{n} {}", ctx.name()),
                 Config::default(),
-                pairs.len() as u64,
+                xs.len() as u64,
                 || {
-                    for &(x, d) in &pairs {
-                        posit_div::bench::black_box(e.divide(x, d).result);
-                    }
+                    ctx.divide_batch(&xs, &ds, &mut out).expect("equal lengths");
+                    black_box(&out);
                 },
             ));
         }

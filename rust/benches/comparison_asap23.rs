@@ -2,10 +2,10 @@
 //! hardware-model deltas plus measured software-engine latency deltas
 //! (the extra iteration of [14] is real and measurable).
 
-use posit_div::bench::{bench_batched, Config};
-use posit_div::division::Algorithm;
+use posit_div::bench::{bench_batched, black_box, Config};
+use posit_div::division::{Algorithm, Divider};
 use posit_div::hardware::{report, TSMC28};
-use posit_div::posit::{mask, Posit};
+use posit_div::posit::mask;
 use posit_div::testkit::Rng;
 
 fn main() {
@@ -15,20 +15,14 @@ fn main() {
 
     let mut rng = Rng::seeded(14);
     for n in [16u32, 32, 64] {
-        let pairs: Vec<(Posit, Posit)> = (0..256)
-            .map(|_| {
-                (
-                    Posit::from_bits(n, rng.next_u64() & mask(n)),
-                    Posit::from_bits(n, (rng.next_u64() & mask(n)) | 1),
-                )
-            })
-            .collect();
+        let xs: Vec<u64> = (0..256).map(|_| rng.next_u64() & mask(n)).collect();
+        let ds: Vec<u64> = (0..256).map(|_| (rng.next_u64() & mask(n)) | 1).collect();
         let time = |alg: Algorithm| {
-            let e = alg.engine();
-            bench_batched(alg.label(), Config::default(), pairs.len() as u64, || {
-                for &(x, d) in &pairs {
-                    posit_div::bench::black_box(e.divide(x, d).result);
-                }
+            let ctx = Divider::new(n, alg).expect("width");
+            let mut out = vec![0u64; xs.len()];
+            bench_batched(alg.label(), Config::default(), xs.len() as u64, || {
+                ctx.divide_batch(&xs, &ds, &mut out).expect("equal lengths");
+                black_box(&out);
             })
             .per_op
         };

@@ -1,6 +1,6 @@
 //! End-to-end service bench: coordinator throughput across batch sizes and
-//! backends (native engines vs the AOT PJRT graph). Requires
-//! `make artifacts` for the PJRT rows (skipped otherwise).
+//! backends (native engines vs the AOT PJRT graph). PJRT rows need
+//! `make artifacts` and a build with the `xla` feature (skipped otherwise).
 
 use std::time::Duration;
 
@@ -22,10 +22,11 @@ fn run(n: u32, backend: Backend, label: &str, batch: usize) {
             return;
         }
     };
+    let client = svc.client();
     let mut wl = workload::Uniform::new(n, batch as u64);
     let pairs = workload::take(&mut wl, REQUESTS);
     let t0 = std::time::Instant::now();
-    let _ = svc.divide_many(&pairs);
+    let _ = client.divide_batch(&pairs).expect("service running");
     let wall = t0.elapsed();
     let m = svc.metrics();
     println!(
@@ -42,8 +43,8 @@ fn main() {
         for batch in [64usize, 256, 1024] {
             run(
                 n,
-                Backend::Native { alg: Algorithm::Srt4CsOfFr, threads: 4 },
-                &format!("native srt4 (4 threads)"),
+                Backend::Native { alg: Algorithm::DEFAULT, threads: 4 },
+                "native srt4 (4 threads)",
                 batch,
             );
         }

@@ -2,8 +2,8 @@
 //! from the executing engines (not just the formula), plus wall-clock
 //! division rates per radix.
 
-use posit_div::bench::{bench_batched, Config, Runner};
-use posit_div::division::{iterations, latency_cycles, Algorithm, DivEngine};
+use posit_div::bench::{bench_batched, black_box, Config, Runner};
+use posit_div::division::{iterations, latency_cycles, Algorithm, DivEngine, Divider};
 use posit_div::posit::{mask, Posit};
 use posit_div::testkit::Rng;
 
@@ -18,10 +18,14 @@ fn main() {
         let x = Posit::from_bits(n, rng.next_u64() & mask(n));
         let d = Posit::from_bits(n, (rng.next_u64() & mask(n)) | 1);
         let (x, d) = (x.abs().next_up(), d.abs().next_up()); // avoid specials
-        let r2 = Algorithm::Srt2Cs.engine().divide(x, d);
-        let r4 = Algorithm::Srt4Cs.engine().divide(x, d);
+        let ctx_r2 = Divider::new(n, Algorithm::Srt2Cs).expect("width");
+        let ctx_r4 = Divider::new(n, Algorithm::Srt4Cs).expect("width");
+        let r2 = ctx_r2.divide(x, d).expect("width matches");
+        let r4 = ctx_r4.divide(x, d).expect("width matches");
         assert_eq!(r2.iterations, iterations(n, 2));
         assert_eq!(r4.iterations, iterations(n, 4));
+        assert_eq!(r2.iterations, ctx_r2.iterations()); // cached in the context
+        assert_eq!(r4.iterations, ctx_r4.iterations());
         assert_eq!(r2.cycles, latency_cycles(n, Algorithm::Srt2Cs));
         assert_eq!(r4.cycles, latency_cycles(n, Algorithm::Srt4Cs));
         println!(
@@ -36,23 +40,17 @@ fn main() {
     let mut rng = Rng::seeded(42);
     for n in [16u32, 32, 64] {
         for alg in [Algorithm::Srt2Cs, Algorithm::Srt4Cs] {
-            let engine = alg.engine();
-            let pairs: Vec<(Posit, Posit)> = (0..256)
-                .map(|_| {
-                    (
-                        Posit::from_bits(n, rng.next_u64() & mask(n)),
-                        Posit::from_bits(n, (rng.next_u64() & mask(n)) | 1),
-                    )
-                })
-                .collect();
+            let ctx = Divider::new(n, alg).expect("width");
+            let xs: Vec<u64> = (0..256).map(|_| rng.next_u64() & mask(n)).collect();
+            let ds: Vec<u64> = (0..256).map(|_| (rng.next_u64() & mask(n)) | 1).collect();
+            let mut out = vec![0u64; xs.len()];
             let m = bench_batched(
-                &format!("Posit{n} {}", engine.name()),
+                &format!("Posit{n} {}", ctx.name()),
                 Config::default(),
-                pairs.len() as u64,
+                xs.len() as u64,
                 || {
-                    for &(x, d) in &pairs {
-                        posit_div::bench::black_box(engine.divide(x, d).result);
-                    }
+                    ctx.divide_batch(&xs, &ds, &mut out).expect("equal lengths");
+                    black_box(&out);
                 },
             );
             runner.add(m);

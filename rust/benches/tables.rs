@@ -1,7 +1,7 @@
 //! Bench target covering Tables I and III: live recomputation of the
 //! scaling-factor table and the termination/rounding worked examples.
 
-use posit_div::division::{scaling, Algorithm, DivEngine};
+use posit_div::division::{scaling, Algorithm, Divider};
 use posit_div::posit::Posit;
 
 fn main() {
@@ -18,11 +18,12 @@ fn main() {
     }
 
     println!("\nTable III (Posit10 termination/rounding examples):");
-    let engine = Algorithm::Srt4CsOfFr.engine();
+    // Posit10 — the runtime-n Divider covers the paper's odd widths too.
+    let ctx = Divider::new(10, Algorithm::Srt4CsOfFr).expect("width");
     let x = Posit::from_bits(10, 0b0011010111);
     for (d_bits, expect) in [(0b0001001100u64, 0b0110011111u64), (0b0000100110, 0b0111010000)] {
         let d = Posit::from_bits(10, d_bits);
-        let q = engine.divide(x, d).result;
+        let q = ctx.divide(x, d).expect("width matches").result;
         println!(
             "  X=0011010111 D={:010b} -> Q={:010b} (paper {:010b}) {}",
             d_bits,

@@ -1,8 +1,26 @@
 //! Minimal command-line argument parser (clap is unavailable offline).
 //!
 //! Grammar: `prog <subcommand> [positional...] [--flag[=| ]value] [--switch]`.
+//!
+//! A `--flag` consumes the next token as its value when that token is not
+//! itself a flag — where "not a flag" means it doesn't start with `-`,
+//! *or* it parses as a (possibly negative) number, so `--offset -3` and
+//! `--scale -1.5` work while `--csv -x` leaves `-x` alone (it becomes a
+//! positional, available for downstream diagnostics).
 
 use std::collections::HashMap;
+
+/// Can `tok` serve as the value of a preceding `--flag`?
+fn looks_like_value(tok: &str) -> bool {
+    if tok.starts_with("--") {
+        return false;
+    }
+    match tok.strip_prefix('-') {
+        // `-1`, `-1.5e3` are negative-number values; `-x`, `-` are not.
+        Some(rest) => rest.parse::<f64>().is_ok(),
+        None => true,
+    }
+}
 
 /// Parsed command line.
 #[derive(Debug, Default, Clone)]
@@ -21,7 +39,7 @@ impl Args {
             if let Some(name) = tok.strip_prefix("--") {
                 if let Some((k, v)) = name.split_once('=') {
                     args.flags.insert(k.to_string(), v.to_string());
-                } else if it.peek().map(|p| !p.starts_with("--")).unwrap_or(false) {
+                } else if it.peek().is_some_and(|p| looks_like_value(p)) {
                     let v = it.next().unwrap();
                     args.flags.insert(name.to_string(), v);
                 } else {
@@ -97,5 +115,33 @@ mod tests {
     fn typed_defaults() {
         let a = parse("x");
         assert_eq!(a.get("missing", 7u64), 7);
+    }
+
+    #[test]
+    fn negative_number_values() {
+        let a = parse("sweep --offset -3 --scale -1.5 --csv");
+        assert_eq!(a.get("offset", 0i64), -3);
+        assert_eq!(a.get("scale", 0.0f64), -1.5);
+        assert!(a.has("csv"));
+        assert!(a.positional.is_empty());
+    }
+
+    #[test]
+    fn switch_before_dash_token_stays_a_switch() {
+        // `-x` is not a number, so `--verbose` must not swallow it.
+        let a = parse("run --verbose -x after");
+        assert_eq!(a.flag("verbose"), Some("true"));
+        assert_eq!(a.positional, vec!["-x", "after"]);
+        // a lone `-` is conventionally a positional (stdin), not a value
+        let a = parse("run --verbose -");
+        assert_eq!(a.flag("verbose"), Some("true"));
+        assert_eq!(a.positional, vec!["-"]);
+    }
+
+    #[test]
+    fn negative_value_then_positional() {
+        let a = parse("divide --n 16 -2.5 0.5");
+        assert_eq!(a.get("n", 0u32), 16);
+        assert_eq!(a.positional, vec!["-2.5", "0.5"]);
     }
 }

@@ -3,10 +3,14 @@
 //! The paper's contribution is the arithmetic unit, so the coordinator is
 //! the thin-but-real driver the architecture calls for: a leader thread
 //! owns a dynamic [`batcher`] (size + deadline policy) and a backend —
-//! either the native bit-exact Rust engines spread over a worker [`pool`],
-//! or the AOT-compiled JAX/Pallas graph executed through PJRT
-//! ([`crate::runtime`]). Clients submit `(x, d)` pairs and block on (or
-//! poll) a response channel; [`metrics`] tracks request/batch latency.
+//! either the native bit-exact Rust engines (one pre-built
+//! [`crate::division::Divider`], batch spread over scoped workers), or
+//! the AOT-compiled JAX/Pallas graph executed through PJRT
+//! ([`crate::runtime`]). Clients talk to the service through the typed
+//! [`Client`] handle: `submit`/`submit_batch` return [`Pending`]/
+//! [`BatchHandle`] futures-by-hand that resolve to typed results — the
+//! raw mpsc plumbing is no longer part of the public surface.
+//! [`metrics`] tracks request/batch latency.
 //!
 //! Python never runs here: the PJRT backend executes the pre-compiled
 //! HLO artifact in-process.
@@ -17,17 +21,16 @@ pub mod pool;
 
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Weak};
 use std::thread::JoinHandle;
 use std::time::Instant;
-
-use anyhow::Result;
 
 pub use batcher::BatchPolicy;
 pub use metrics::{Histogram, Metrics};
 pub use pool::Pool;
 
-use crate::division::{Algorithm, DivEngine};
+use crate::division::{Algorithm, Divider};
+use crate::error::{PositError, Result};
 use crate::posit::Posit;
 use crate::runtime::Runtime;
 
@@ -52,7 +55,7 @@ impl Default for ServiceConfig {
     fn default() -> Self {
         ServiceConfig {
             n: 32,
-            backend: Backend::Native { alg: Algorithm::Srt4CsOfFr, threads: 4 },
+            backend: Backend::Native { alg: Algorithm::DEFAULT, threads: 4 },
             policy: BatchPolicy::default(),
         }
     }
@@ -65,10 +68,127 @@ struct Request {
     respond: Sender<u64>,
 }
 
+/// An in-flight division submitted through a [`Client`].
+pub struct Pending {
+    n: u32,
+    rx: Receiver<u64>,
+}
+
+impl Pending {
+    /// Block until the service responds.
+    pub fn wait(self) -> Result<Posit> {
+        let bits = self.rx.recv().map_err(|_| PositError::ServiceStopped)?;
+        Ok(Posit::from_bits(self.n, bits))
+    }
+}
+
+/// A set of in-flight divisions; results come back in submission order.
+pub struct BatchHandle {
+    n: u32,
+    rxs: Vec<Receiver<u64>>,
+}
+
+impl BatchHandle {
+    /// Block until every response arrives.
+    pub fn wait(self) -> Result<Vec<Posit>> {
+        let n = self.n;
+        self.rxs
+            .into_iter()
+            .map(|rx| {
+                rx.recv()
+                    .map(|bits| Posit::from_bits(n, bits))
+                    .map_err(|_| PositError::ServiceStopped)
+            })
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.rxs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rxs.is_empty()
+    }
+}
+
+/// A cheap, cloneable handle for submitting divisions to a running
+/// [`DivisionService`]. Holding a `Client` does not keep the service
+/// alive: once the service shuts down, submissions return
+/// [`PositError::ServiceStopped`] (already-queued requests still drain).
+#[derive(Clone)]
+pub struct Client {
+    n: u32,
+    tx: Weak<Sender<Request>>,
+    metrics: Arc<Metrics>,
+}
+
+impl Client {
+    /// Posit width served.
+    pub fn width(&self) -> u32 {
+        self.n
+    }
+
+    fn sender(&self) -> Result<Arc<Sender<Request>>> {
+        self.tx.upgrade().ok_or(PositError::ServiceStopped)
+    }
+
+    fn check_width(&self, p: Posit) -> Result<()> {
+        if p.width() != self.n {
+            return Err(PositError::WidthMismatch { expected: self.n, got: p.width() });
+        }
+        Ok(())
+    }
+
+    /// Submit one division; returns immediately with a [`Pending`].
+    pub fn submit(&self, x: Posit, d: Posit) -> Result<Pending> {
+        self.check_width(x)?;
+        self.check_width(d)?;
+        let tx = self.sender()?;
+        let (rtx, rrx) = channel();
+        tx.send(Request { x: x.to_bits(), d: d.to_bits(), enqueued: Instant::now(), respond: rtx })
+            .map_err(|_| PositError::ServiceStopped)?;
+        Ok(Pending { n: self.n, rx: rrx })
+    }
+
+    /// Submit many divisions; returns immediately with a [`BatchHandle`]
+    /// whose results preserve submission order.
+    pub fn submit_batch(&self, pairs: &[(Posit, Posit)]) -> Result<BatchHandle> {
+        for &(x, d) in pairs {
+            self.check_width(x)?;
+            self.check_width(d)?;
+        }
+        let tx = self.sender()?;
+        let now = Instant::now();
+        let mut rxs = Vec::with_capacity(pairs.len());
+        for &(x, d) in pairs {
+            let (rtx, rrx) = channel();
+            tx.send(Request { x: x.to_bits(), d: d.to_bits(), enqueued: now, respond: rtx })
+                .map_err(|_| PositError::ServiceStopped)?;
+            rxs.push(rrx);
+        }
+        Ok(BatchHandle { n: self.n, rxs })
+    }
+
+    /// Blocking division.
+    pub fn divide(&self, x: Posit, d: Posit) -> Result<Posit> {
+        self.submit(x, d)?.wait()
+    }
+
+    /// Blocking batch division (keeps ordering).
+    pub fn divide_batch(&self, pairs: &[(Posit, Posit)]) -> Result<Vec<Posit>> {
+        self.submit_batch(pairs)?.wait()
+    }
+
+    /// Service metrics (shared with every other client).
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+}
+
 /// A handle to a running division service.
 pub struct DivisionService {
     n: u32,
-    tx: Option<Sender<Request>>,
+    tx: Option<Arc<Sender<Request>>>,
     metrics: Arc<Metrics>,
     leader: Option<JoinHandle<()>>,
 }
@@ -82,7 +202,7 @@ impl DivisionService {
         let n = cfg.n;
 
         enum Exec {
-            Native { engine: Box<dyn DivEngine + Send + Sync>, pool_threads: usize },
+            Native { divider: Divider, threads: usize },
             Pjrt(Runtime),
         }
 
@@ -96,9 +216,13 @@ impl DivisionService {
             .name("posit-div-leader".into())
             .spawn(move || {
                 let exec = match &backend {
-                    Backend::Native { alg, threads } => {
-                        Exec::Native { engine: alg.engine(), pool_threads: *threads }
-                    }
+                    Backend::Native { alg, threads } => match Divider::new(n, *alg) {
+                        Ok(divider) => Exec::Native { divider, threads: *threads },
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(e));
+                            return;
+                        }
+                    },
                     Backend::Pjrt { artifacts_dir } => {
                         match Runtime::load(artifacts_dir)
                             .and_then(|rt| rt.warmup(n).map(|()| rt))
@@ -114,45 +238,25 @@ impl DivisionService {
                 let _ = ready_tx.send(Ok(()));
                 while let Some(batch) = batcher::collect_batch(&rx, policy) {
                     let t0 = Instant::now();
+                    let x: Vec<u64> = batch.iter().map(|r| r.x).collect();
+                    let d: Vec<u64> = batch.iter().map(|r| r.d).collect();
                     let results: Vec<u64> = match &exec {
-                        Exec::Native { engine, pool_threads } => {
-                            let chunk =
-                                batch.len().div_ceil((*pool_threads).max(1)).max(1);
-                            let pairs: Vec<(u64, u64)> =
-                                batch.iter().map(|r| (r.x, r.d)).collect();
-                            let mut out = vec![0u64; pairs.len()];
-                            std::thread::scope(|s| {
-                                for (inp, outp) in
-                                    pairs.chunks(chunk).zip(out.chunks_mut(chunk))
-                                {
-                                    s.spawn(|| {
-                                        for (i, o) in inp.iter().zip(outp.iter_mut()) {
-                                            *o = engine
-                                                .divide(
-                                                    Posit::from_bits(n, i.0),
-                                                    Posit::from_bits(n, i.1),
-                                                )
-                                                .result
-                                                .to_bits();
-                                        }
-                                    });
-                                }
-                            });
+                        Exec::Native { divider, threads } => {
+                            let mut out = vec![0u64; x.len()];
+                            divider
+                                .divide_batch_parallel(&x, &d, &mut out, *threads)
+                                .expect("batch slices are same-length by construction");
                             out
                         }
-                        Exec::Pjrt(rt) => {
-                            let x: Vec<u64> = batch.iter().map(|r| r.x).collect();
-                            let d: Vec<u64> = batch.iter().map(|r| r.d).collect();
-                            match rt.divide_bits(n, &x, &d) {
-                                Ok(q) => q,
-                                Err(e) => {
-                                    // fail the whole batch as NaR and keep
-                                    // serving (errors are per-batch)
-                                    eprintln!("pjrt batch failed: {e:#}");
-                                    vec![1u64 << (n - 1); batch.len()]
-                                }
+                        Exec::Pjrt(rt) => match rt.divide_bits(n, &x, &d) {
+                            Ok(q) => q,
+                            Err(e) => {
+                                // fail the whole batch as NaR and keep
+                                // serving (errors are per-batch)
+                                eprintln!("pjrt batch failed: {e}");
+                                vec![1u64 << (n - 1); batch.len()]
                             }
-                        }
+                        },
                     };
                     m.batch_latency.record(t0.elapsed());
                     m.batches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
@@ -166,10 +270,19 @@ impl DivisionService {
                         let _ = req.respond.send(q); // receiver may have gone
                     }
                 }
-            })?;
+            })
+            .map_err(|e| PositError::Execution { detail: format!("spawn leader: {e}") })?;
 
-        ready_rx.recv().expect("leader thread died during startup")?;
-        Ok(DivisionService { n, tx: Some(tx), metrics, leader: Some(leader) })
+        match ready_rx.recv() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => return Err(e),
+            Err(_) => {
+                return Err(PositError::Execution {
+                    detail: "leader thread died during startup".into(),
+                })
+            }
+        }
+        Ok(DivisionService { n, tx: Some(Arc::new(tx)), metrics, leader: Some(leader) })
     }
 
     /// Posit width served.
@@ -177,38 +290,29 @@ impl DivisionService {
         self.n
     }
 
-    /// Submit a division; returns the response channel immediately.
-    pub fn submit(&self, x: Posit, d: Posit) -> Receiver<u64> {
-        assert_eq!(x.width(), self.n);
-        let (rtx, rrx) = channel();
-        self.tx
-            .as_ref()
-            .unwrap()
-            .send(Request { x: x.to_bits(), d: d.to_bits(), enqueued: Instant::now(), respond: rtx })
-            .expect("service stopped");
-        rrx
+    /// A cloneable submission handle.
+    pub fn client(&self) -> Client {
+        let tx = self.tx.as_ref().expect("service running");
+        Client { n: self.n, tx: Arc::downgrade(tx), metrics: self.metrics.clone() }
     }
 
-    /// Blocking division.
-    pub fn divide(&self, x: Posit, d: Posit) -> Posit {
-        let bits = self.submit(x, d).recv().expect("service stopped");
-        Posit::from_bits(self.n, bits)
+    /// Blocking division (convenience over [`DivisionService::client`]).
+    pub fn divide(&self, x: Posit, d: Posit) -> Result<Posit> {
+        self.client().divide(x, d)
     }
 
     /// Submit many and wait for all (keeps ordering).
-    pub fn divide_many(&self, pairs: &[(Posit, Posit)]) -> Vec<Posit> {
-        let rxs: Vec<Receiver<u64>> =
-            pairs.iter().map(|&(x, d)| self.submit(x, d)).collect();
-        rxs.into_iter()
-            .map(|r| Posit::from_bits(self.n, r.recv().expect("service stopped")))
-            .collect()
+    pub fn divide_many(&self, pairs: &[(Posit, Posit)]) -> Result<Vec<Posit>> {
+        self.client().divide_batch(pairs)
     }
 
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
     }
 
-    /// Stop accepting requests and join the leader.
+    /// Stop accepting requests and join the leader. Queued requests are
+    /// drained first; clients outliving the service get
+    /// [`PositError::ServiceStopped`] on new submissions.
     pub fn shutdown(mut self) {
         self.tx.take();
         if let Some(h) = self.leader.take() {
@@ -236,7 +340,7 @@ mod tests {
     fn native_cfg(n: u32) -> ServiceConfig {
         ServiceConfig {
             n,
-            backend: Backend::Native { alg: Algorithm::Srt4CsOfFr, threads: 2 },
+            backend: Backend::Native { alg: Algorithm::DEFAULT, threads: 2 },
             policy: BatchPolicy { max_batch: 64, max_wait: std::time::Duration::from_micros(100) },
         }
     }
@@ -253,7 +357,7 @@ mod tests {
                 )
             })
             .collect();
-        let got = svc.divide_many(&pairs);
+        let got = svc.divide_many(&pairs).unwrap();
         for (i, &(x, d)) in pairs.iter().enumerate() {
             assert_eq!(got[i], golden::divide(x, d).result, "{x:?}/{d:?}");
         }
@@ -265,24 +369,25 @@ mod tests {
     fn service_handles_specials() {
         let svc = DivisionService::start(native_cfg(16)).unwrap();
         let n = 16;
-        assert!(svc.divide(Posit::one(n), Posit::zero(n)).is_nar());
-        assert!(svc.divide(Posit::zero(n), Posit::one(n)).is_zero());
-        assert!(svc.divide(Posit::nar(n), Posit::one(n)).is_nar());
+        let c = svc.client();
+        assert!(c.divide(Posit::one(n), Posit::zero(n)).unwrap().is_nar());
+        assert!(c.divide(Posit::zero(n), Posit::one(n)).unwrap().is_zero());
+        assert!(c.divide(Posit::nar(n), Posit::one(n)).unwrap().is_nar());
         svc.shutdown();
     }
 
     #[test]
     fn concurrent_clients() {
-        let svc = std::sync::Arc::new(DivisionService::start(native_cfg(32)).unwrap());
+        let svc = DivisionService::start(native_cfg(32)).unwrap();
         std::thread::scope(|s| {
             for t in 0..8 {
-                let svc = svc.clone();
+                let client = svc.client();
                 s.spawn(move || {
                     let mut rng = Rng::seeded(t);
                     for _ in 0..200 {
                         let x = Posit::from_bits(32, rng.next_u64() & mask(32));
                         let d = Posit::from_bits(32, rng.next_u64() & mask(32));
-                        let q = svc.divide(x, d);
+                        let q = client.divide(x, d).unwrap();
                         assert_eq!(q, golden::divide(x, d).result);
                     }
                 });
@@ -292,10 +397,56 @@ mod tests {
     }
 
     #[test]
-    fn shutdown_drains() {
+    fn shutdown_drains_queued_requests() {
         let svc = DivisionService::start(native_cfg(16)).unwrap();
-        let rx = svc.submit(Posit::one(16), Posit::one(16));
+        let pending = svc.client().submit(Posit::one(16), Posit::one(16)).unwrap();
         svc.shutdown();
-        assert_eq!(rx.recv().unwrap(), Posit::one(16).to_bits());
+        assert_eq!(pending.wait().unwrap(), Posit::one(16));
+    }
+
+    #[test]
+    fn client_after_shutdown_is_typed_error() {
+        let svc = DivisionService::start(native_cfg(16)).unwrap();
+        let client = svc.client();
+        svc.shutdown();
+        assert_eq!(
+            client.submit(Posit::one(16), Posit::one(16)).err(),
+            Some(PositError::ServiceStopped)
+        );
+        assert_eq!(
+            client.divide_batch(&[(Posit::one(16), Posit::one(16))]).err(),
+            Some(PositError::ServiceStopped)
+        );
+    }
+
+    #[test]
+    fn width_mismatch_is_typed_error() {
+        let svc = DivisionService::start(native_cfg(16)).unwrap();
+        let client = svc.client();
+        assert_eq!(
+            client.submit(Posit::one(32), Posit::one(32)).err(),
+            Some(PositError::WidthMismatch { expected: 16, got: 32 })
+        );
+        // a bad pair anywhere in a batch rejects the whole batch up front
+        let pairs = [(Posit::one(16), Posit::one(16)), (Posit::one(8), Posit::one(8))];
+        assert_eq!(
+            client.submit_batch(&pairs).err(),
+            Some(PositError::WidthMismatch { expected: 16, got: 8 })
+        );
+        svc.shutdown();
+    }
+
+    #[test]
+    fn submit_batch_preserves_order() {
+        let svc = DivisionService::start(native_cfg(16)).unwrap();
+        let client = svc.client();
+        let pairs: Vec<(Posit, Posit)> = (1..=64u64)
+            .map(|k| (Posit::from_f64(16, k as f64), Posit::one(16)))
+            .collect();
+        let got = client.submit_batch(&pairs).unwrap().wait().unwrap();
+        for (k, q) in (1..=64u64).zip(&got) {
+            assert_eq!(q.to_f64(), k as f64);
+        }
+        svc.shutdown();
     }
 }

@@ -1,0 +1,331 @@
+//! Reusable, zero-alloc division contexts.
+//!
+//! [`Algorithm::engine`] boxes a fresh `dyn DivEngine` on every call —
+//! fine for one-off experiments, wrong for a hot serving path. A
+//! [`Divider`] is constructed **once** per (width, algorithm), holds the
+//! concrete engine inline (enum dispatch, no heap indirection on the call
+//! path), and caches the width-derived state the wrapper would otherwise
+//! recompute: iteration count, pipelined latency, the operand mask, and —
+//! for the Newton baseline — the seed-reciprocal table, its only
+//! allocation, paid at construction.
+//!
+//! The batch entry point [`Divider::divide_batch`] is the single code
+//! path shared by the coordinator's native worker pool, the benches and
+//! the examples, so every layer measures the same loop.
+
+use super::{
+    exec, iterations, latency_cycles, newton::Newton, nrd::Nrd, srt2::Srt2, srt2_cs::Srt2Cs,
+    srt4_cs::Srt4Cs, srt4_scaled::Srt4Scaled, Algorithm, DivEngine, Division, FracQuotient,
+};
+use crate::error::{PositError, Result};
+use crate::posit::{mask, Posit, MAX_N, MIN_N};
+
+/// Concrete engine storage: static dispatch, no `Box`.
+enum EngineAny {
+    Nrd(Nrd),
+    Srt2(Srt2),
+    Srt2Cs(Srt2Cs),
+    Srt4Cs(Srt4Cs),
+    Srt4Scaled(Srt4Scaled),
+    Newton(Newton),
+}
+
+/// A reusable division context for one posit width and one algorithm.
+///
+/// ```
+/// use posit_div::division::{Algorithm, Divider};
+/// use posit_div::posit::Posit;
+///
+/// let div = Divider::new(32, Algorithm::Srt4CsOfFr)?;
+/// let q = div.divide(Posit::from_f64(32, 355.0), Posit::from_f64(32, 113.0))?;
+/// assert!((q.result.to_f64() - 355.0 / 113.0).abs() < 1e-6);
+/// # Ok::<(), posit_div::PositError>(())
+/// ```
+pub struct Divider {
+    n: u32,
+    alg: Algorithm,
+    engine: EngineAny,
+    iterations: u32,
+    cycles: u32,
+    mask: u64,
+}
+
+impl Divider {
+    /// Build a context for `Posit<n, 2>` division with `alg`.
+    ///
+    /// All width-derived state (iterations, latency, Newton seed table)
+    /// is computed here, once.
+    pub fn new(n: u32, alg: Algorithm) -> Result<Divider> {
+        if !(MIN_N..=MAX_N).contains(&n) {
+            return Err(PositError::WidthOutOfRange { n });
+        }
+        let engine = match alg {
+            Algorithm::Nrd => EngineAny::Nrd(Nrd::new()),
+            Algorithm::NrdAsap23 => EngineAny::Nrd(Nrd::asap23()),
+            Algorithm::Srt2 => EngineAny::Srt2(Srt2::new()),
+            Algorithm::Srt2Cs => EngineAny::Srt2Cs(Srt2Cs::plain()),
+            Algorithm::Srt2CsOf => EngineAny::Srt2Cs(Srt2Cs::with_otf()),
+            Algorithm::Srt2CsOfFr => EngineAny::Srt2Cs(Srt2Cs::with_otf_fr()),
+            Algorithm::Srt4Cs => EngineAny::Srt4Cs(Srt4Cs::plain()),
+            Algorithm::Srt4CsOf => EngineAny::Srt4Cs(Srt4Cs::with_otf()),
+            Algorithm::Srt4CsOfFr => EngineAny::Srt4Cs(Srt4Cs::with_otf_fr()),
+            Algorithm::Srt4Scaled => EngineAny::Srt4Scaled(Srt4Scaled::new()),
+            Algorithm::Newton => EngineAny::Newton(Newton::new()),
+        };
+        let iters = match alg.radix() {
+            Some(r) => iterations(n, r),
+            None => 0,
+        };
+        // `latency_cycles` would build a throwaway Newton (and its seed
+        // LUT) just to ask for the cycle count — use the engine we
+        // already hold instead.
+        let cycles = match &engine {
+            EngineAny::Newton(e) => e.cycles(n),
+            _ => latency_cycles(n, alg),
+        };
+        Ok(Divider { n, alg, engine, iterations: iters, cycles, mask: mask(n) })
+    }
+
+    /// The default serving context: the paper's optimized radix-4 unit.
+    pub fn standard(n: u32) -> Result<Divider> {
+        Divider::new(n, Algorithm::DEFAULT)
+    }
+
+    /// Posit width this context divides.
+    #[inline]
+    pub fn width(&self) -> u32 {
+        self.n
+    }
+
+    /// The algorithm variant.
+    #[inline]
+    pub fn algorithm(&self) -> Algorithm {
+        self.alg
+    }
+
+    /// Cached recurrence iteration count (0 for the Newton baseline, whose
+    /// step count is data-independent but reported per division).
+    #[inline]
+    pub fn iterations(&self) -> u32 {
+        self.iterations
+    }
+
+    /// Cached pipelined latency in cycles (paper §III-E3).
+    #[inline]
+    pub fn latency_cycles(&self) -> u32 {
+        self.cycles
+    }
+
+    /// One full posit division with metadata. Errors on operand width
+    /// mismatch instead of panicking.
+    #[inline]
+    pub fn divide(&self, x: Posit, d: Posit) -> Result<Division> {
+        if x.width() != self.n {
+            return Err(PositError::WidthMismatch { expected: self.n, got: x.width() });
+        }
+        if d.width() != self.n {
+            return Err(PositError::WidthMismatch { expected: self.n, got: d.width() });
+        }
+        Ok(exec::divide_with(self, x, d))
+    }
+
+    /// Divide two raw `n`-bit patterns (high garbage bits are masked off —
+    /// the same contract as the PJRT graph). This is the batch-path inner
+    /// loop.
+    #[inline]
+    pub fn divide_bits(&self, x: u64, d: u64) -> u64 {
+        let x = Posit::from_bits(self.n, x & self.mask);
+        let d = Posit::from_bits(self.n, d & self.mask);
+        exec::divide_with(self, x, d).result.to_bits()
+    }
+
+    /// Batch-first division over raw bit patterns: `out[i] = xs[i] / ds[i]`.
+    ///
+    /// Bit-identical to calling [`Divider::divide`] element-wise; the
+    /// coordinator's native backend, the benches and the examples all go
+    /// through this one loop.
+    pub fn divide_batch(&self, xs: &[u64], ds: &[u64], out: &mut [u64]) -> Result<()> {
+        if xs.len() != ds.len() || xs.len() != out.len() {
+            return Err(PositError::BatchShapeMismatch {
+                xs: xs.len(),
+                ds: ds.len(),
+                out: out.len(),
+            });
+        }
+        for ((x, d), o) in xs.iter().zip(ds.iter()).zip(out.iter_mut()) {
+            *o = self.divide_bits(*x, *d);
+        }
+        Ok(())
+    }
+
+    /// [`Divider::divide_batch`] spread over `threads` scoped workers
+    /// (contiguous chunks, results written in place — ordering preserved),
+    /// matching the coordinator's previous always-parallel behavior.
+    pub fn divide_batch_parallel(
+        &self,
+        xs: &[u64],
+        ds: &[u64],
+        out: &mut [u64],
+        threads: usize,
+    ) -> Result<()> {
+        if xs.len() != ds.len() || xs.len() != out.len() {
+            return Err(PositError::BatchShapeMismatch {
+                xs: xs.len(),
+                ds: ds.len(),
+                out: out.len(),
+            });
+        }
+        let threads = threads.max(1);
+        if threads == 1 || xs.len() <= 1 {
+            return self.divide_batch(xs, ds, out);
+        }
+        let chunk = xs.len().div_ceil(threads).max(1);
+        std::thread::scope(|s| {
+            for ((cx, cd), co) in
+                xs.chunks(chunk).zip(ds.chunks(chunk)).zip(out.chunks_mut(chunk))
+            {
+                s.spawn(move || {
+                    self.divide_batch(cx, cd, co).expect("equal chunk lengths");
+                });
+            }
+        });
+        Ok(())
+    }
+}
+
+impl core::fmt::Debug for Divider {
+    fn fmt(&self, f: &mut core::fmt::Formatter<'_>) -> core::fmt::Result {
+        f.debug_struct("Divider")
+            .field("n", &self.n)
+            .field("algorithm", &self.alg)
+            .field("iterations", &self.iterations)
+            .field("latency_cycles", &self.cycles)
+            .finish()
+    }
+}
+
+/// A `Divider` is itself a [`DivEngine`], so it drops into every API that
+/// takes one (the DSP example, the cross-check harnesses) with static
+/// dispatch inside.
+impl DivEngine for Divider {
+    fn name(&self) -> &'static str {
+        match &self.engine {
+            EngineAny::Nrd(e) => e.name(),
+            EngineAny::Srt2(e) => e.name(),
+            EngineAny::Srt2Cs(e) => e.name(),
+            EngineAny::Srt4Cs(e) => e.name(),
+            EngineAny::Srt4Scaled(e) => e.name(),
+            EngineAny::Newton(e) => e.name(),
+        }
+    }
+
+    fn algorithm(&self) -> Algorithm {
+        self.alg
+    }
+
+    fn fraction_divide(&self, n: u32, x_sig: u64, d_sig: u64) -> FracQuotient {
+        match &self.engine {
+            EngineAny::Nrd(e) => e.fraction_divide(n, x_sig, d_sig),
+            EngineAny::Srt2(e) => e.fraction_divide(n, x_sig, d_sig),
+            EngineAny::Srt2Cs(e) => e.fraction_divide(n, x_sig, d_sig),
+            EngineAny::Srt4Cs(e) => e.fraction_divide(n, x_sig, d_sig),
+            EngineAny::Srt4Scaled(e) => e.fraction_divide(n, x_sig, d_sig),
+            EngineAny::Newton(e) => e.fraction_divide(n, x_sig, d_sig),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::division::golden;
+    use crate::testkit::Rng;
+
+    #[test]
+    fn rejects_bad_width() {
+        assert_eq!(
+            Divider::new(3, Algorithm::Nrd).err(),
+            Some(PositError::WidthOutOfRange { n: 3 })
+        );
+        assert_eq!(
+            Divider::new(65, Algorithm::Nrd).err(),
+            Some(PositError::WidthOutOfRange { n: 65 })
+        );
+        assert!(Divider::new(4, Algorithm::Nrd).is_ok());
+        assert!(Divider::new(64, Algorithm::Srt4CsOfFr).is_ok());
+    }
+
+    #[test]
+    fn rejects_width_mismatch() {
+        let div = Divider::new(16, Algorithm::Srt2Cs).unwrap();
+        let err = div.divide(Posit::one(32), Posit::one(32)).unwrap_err();
+        assert_eq!(err, PositError::WidthMismatch { expected: 16, got: 32 });
+        let err = div.divide(Posit::one(16), Posit::one(8)).unwrap_err();
+        assert_eq!(err, PositError::WidthMismatch { expected: 16, got: 8 });
+    }
+
+    #[test]
+    fn rejects_batch_shape_mismatch() {
+        let div = Divider::new(16, Algorithm::Srt2Cs).unwrap();
+        let mut out = [0u64; 2];
+        let err = div.divide_batch(&[1, 2, 3], &[1, 2, 3], &mut out).unwrap_err();
+        assert_eq!(err, PositError::BatchShapeMismatch { xs: 3, ds: 3, out: 2 });
+        let err = div.divide_batch(&[1, 2], &[1], &mut out).unwrap_err();
+        assert_eq!(err, PositError::BatchShapeMismatch { xs: 2, ds: 1, out: 2 });
+    }
+
+    #[test]
+    fn caches_match_free_functions() {
+        for n in [8u32, 16, 32, 64] {
+            for alg in Algorithm::TABLE_IV {
+                let div = Divider::new(n, alg).unwrap();
+                assert_eq!(div.iterations(), iterations(n, alg.radix().unwrap()));
+                assert_eq!(div.latency_cycles(), latency_cycles(n, alg));
+                assert_eq!(div.width(), n);
+                assert_eq!(div.algorithm(), alg);
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_and_batch_agree_with_golden() {
+        let mut rng = Rng::seeded(0xD1F);
+        for n in [8u32, 16, 32] {
+            let div = Divider::standard(n).unwrap();
+            let xs: Vec<u64> = (0..200).map(|_| rng.next_u64()).collect();
+            let ds: Vec<u64> = (0..200).map(|_| rng.next_u64()).collect();
+            let mut out = vec![0u64; xs.len()];
+            div.divide_batch(&xs, &ds, &mut out).unwrap();
+            for i in 0..xs.len() {
+                let x = Posit::from_bits(n, xs[i] & mask(n));
+                let d = Posit::from_bits(n, ds[i] & mask(n));
+                let want = golden::divide(x, d).result.to_bits();
+                assert_eq!(out[i], want, "batch n={n} i={i}");
+                assert_eq!(div.divide(x, d).unwrap().result.to_bits(), want, "scalar n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_batch_is_bit_identical() {
+        let mut rng = Rng::seeded(0x9A);
+        let div = Divider::standard(16).unwrap();
+        let xs: Vec<u64> = (0..1000).map(|_| rng.next_u64()).collect();
+        let ds: Vec<u64> = (0..1000).map(|_| rng.next_u64()).collect();
+        let mut serial = vec![0u64; xs.len()];
+        let mut parallel = vec![0u64; xs.len()];
+        div.divide_batch(&xs, &ds, &mut serial).unwrap();
+        div.divide_batch_parallel(&xs, &ds, &mut parallel, 4).unwrap();
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn divider_is_a_div_engine() {
+        let div = Divider::new(16, Algorithm::Srt4CsOfFr).unwrap();
+        let e: &dyn DivEngine = &div;
+        assert_eq!(e.name(), "SRT r4 CS OF FR");
+        assert_eq!(e.algorithm(), Algorithm::Srt4CsOfFr);
+        let d = e.divide(Posit::one(16), Posit::one(16));
+        assert_eq!(d.result, Posit::one(16));
+    }
+}

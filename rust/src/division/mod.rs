@@ -23,6 +23,7 @@
 //! normalization, and the regime-aware rounding of §III-F.
 
 pub mod carry_save;
+pub mod divider;
 pub mod exec;
 pub mod golden;
 pub mod newton;
@@ -37,6 +38,8 @@ pub mod srt4_cs;
 pub mod srt4_scaled;
 
 use crate::posit::Posit;
+
+pub use divider::Divider;
 
 /// The division algorithm variants evaluated by the paper (Table IV), plus
 /// the two baselines used in its related-work comparisons.
@@ -66,6 +69,10 @@ pub enum Algorithm {
 }
 
 impl Algorithm {
+    /// The default serving algorithm: the paper's optimized radix-4 unit
+    /// (what the typed-posit `Div` operator and `Divider::standard` use).
+    pub const DEFAULT: Algorithm = Algorithm::Srt4CsOfFr;
+
     /// All variants, in the paper's presentation order.
     pub const ALL: [Algorithm; 11] = [
         Algorithm::Nrd,
@@ -154,7 +161,11 @@ impl Algorithm {
         }
     }
 
-    /// Instantiate the engine for this algorithm.
+    /// Instantiate a boxed engine for this algorithm.
+    ///
+    /// Deprecated: this heap-allocates on every call. Build a reusable
+    /// [`Divider`] once and call `divide`/`divide_batch` on it instead.
+    #[deprecated(since = "0.2.0", note = "use `Divider::new(n, alg)` — no per-call Box")]
     pub fn engine(self) -> Box<dyn DivEngine + Send + Sync> {
         match self {
             Algorithm::Nrd => Box::new(nrd::Nrd::new()),

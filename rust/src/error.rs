@@ -1,0 +1,83 @@
+//! Typed errors for the public library surface.
+//!
+//! The crate used to panic on width/argument failures and leak `anyhow`
+//! errors from the runtime and the coordinator. Every fallible public
+//! entry point now returns [`PositError`]; panics remain only for internal
+//! invariants (e.g. [`crate::posit::Posit::from_bits`] documents its
+//! width assertion, mirroring the hardware's "illegal configuration"
+//! contract).
+
+/// Crate-wide result alias over [`PositError`].
+pub type Result<T> = core::result::Result<T, PositError>;
+
+/// Everything that can go wrong at the library surface.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PositError {
+    /// Requested posit width outside the supported `[MIN_N, MAX_N]` range.
+    WidthOutOfRange { n: u32 },
+    /// Two operands (or an operand and a context) disagree on width.
+    WidthMismatch { expected: u32, got: u32 },
+    /// Batch slices passed to `divide_batch` have inconsistent lengths.
+    BatchShapeMismatch { xs: usize, ds: usize, out: usize },
+    /// A requested execution backend cannot run in this build/environment
+    /// (e.g. the PJRT runtime without the `xla` feature).
+    BackendUnavailable { reason: String },
+    /// AOT artifact discovery or loading failed.
+    Artifacts { detail: String },
+    /// A backend accepted work but failed while executing it.
+    Execution { detail: String },
+    /// The division service has shut down (or its leader thread is gone).
+    ServiceStopped,
+}
+
+impl core::fmt::Display for PositError {
+    fn fmt(&self, f: &mut core::fmt::Formatter<'_>) -> core::fmt::Result {
+        match self {
+            PositError::WidthOutOfRange { n } => write!(
+                f,
+                "posit width {n} out of supported range [{},{}]",
+                crate::posit::MIN_N,
+                crate::posit::MAX_N
+            ),
+            PositError::WidthMismatch { expected, got } => {
+                write!(f, "posit width mismatch: expected Posit{expected}, got Posit{got}")
+            }
+            PositError::BatchShapeMismatch { xs, ds, out } => write!(
+                f,
+                "batch shape mismatch: xs.len()={xs}, ds.len()={ds}, out.len()={out}"
+            ),
+            PositError::BackendUnavailable { reason } => {
+                write!(f, "backend unavailable: {reason}")
+            }
+            PositError::Artifacts { detail } => write!(f, "{detail}"),
+            PositError::Execution { detail } => write!(f, "execution failed: {detail}"),
+            PositError::ServiceStopped => write!(f, "division service stopped"),
+        }
+    }
+}
+
+impl std::error::Error for PositError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_informative() {
+        assert!(PositError::WidthOutOfRange { n: 3 }.to_string().contains("width 3"));
+        assert!(PositError::WidthMismatch { expected: 16, got: 32 }
+            .to_string()
+            .contains("Posit16"));
+        let e = PositError::BatchShapeMismatch { xs: 1, ds: 2, out: 3 };
+        assert!(e.to_string().contains("xs.len()=1"));
+        assert!(PositError::Artifacts { detail: "no artifacts found".into() }
+            .to_string()
+            .contains("no artifacts"));
+    }
+
+    #[test]
+    fn is_std_error() {
+        fn takes_error(_: &dyn std::error::Error) {}
+        takes_error(&PositError::ServiceStopped);
+    }
+}

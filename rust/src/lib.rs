@@ -1,4 +1,4 @@
-//! # posit-div — Digit-Recurrence Posit Division
+//! # posit_div — Digit-Recurrence Posit Division
 //!
 //! A full reproduction of *"Digit-Recurrence Posit Division"* (Murillo,
 //! Villalba-Moreno, Del Barrio, Botella — CS.AR 2025): radix-2 and radix-4
@@ -6,48 +6,70 @@
 //! substrate the paper's evaluation depends on:
 //!
 //! * [`posit`] — a complete Posit⟨n, es=2⟩ arithmetic library (decode,
-//!   encode, correct rounding, conversions, add/sub/mul) for 4 ≤ n ≤ 64.
+//!   encode, correct rounding, conversions, add/sub/mul) for 4 ≤ n ≤ 64,
+//!   plus the width-typed [`posit::typed`] wrappers `P8`/`P16`/`P32`/`P64`
+//!   with operators and constants.
 //! * [`division`] — the paper's contribution: bit-exact, datapath-level
 //!   digit-recurrence dividers (NRD, SRT, SRT-CS, SRT-CS-OF, SRT-CS-OF-FR;
 //!   radix 2 and radix 4, with and without operand scaling), plus a
 //!   Newton–Raphson multiplicative baseline, an exact golden reference,
-//!   and a digit-recurrence square-root extension ([`division::sqrt`]).
+//!   a digit-recurrence square-root extension ([`division::sqrt`]) — and
+//!   [`division::Divider`], the reusable zero-alloc context every hot
+//!   path goes through.
 //! * [`hardware`] — a unit-gate 28 nm synthesis cost model that elaborates
 //!   each divider design into a component netlist and regenerates the
 //!   paper's area/delay/power/energy figures (Figs. 4–9) and latency
 //!   tables (Table II).
 //! * [`coordinator`] — the L3 service: a dynamic batcher + worker pool
 //!   that serves division requests from either the native Rust engines or
-//!   an AOT-compiled JAX/Pallas kernel through PJRT ([`runtime`]).
+//!   an AOT-compiled JAX/Pallas kernel through PJRT ([`runtime`]); clients
+//!   talk to it through the typed [`coordinator::Client`] handle.
+//! * [`error`] — the typed [`PositError`] every fallible public entry
+//!   point returns (no panicking library surface, no `anyhow` leakage).
 //! * [`bench`] / [`testkit`] — self-contained micro-benchmark and
 //!   property-testing harnesses (criterion / proptest are unavailable in
 //!   the offline build environment).
 //!
 //! ## Quickstart
 //!
-//! (`no_run`: doctest binaries don't inherit the workspace rpath to
-//! `libxla_extension.so`; `examples/quickstart.rs` runs the same code.)
-//!
-//! ```no_run
-//! use posit_div::posit::Posit;
-//! use posit_div::division::{DivEngine, Algorithm};
-//!
-//! let x = Posit::from_f64(32, 355.0);
-//! let d = Posit::from_f64(32, 113.0);
-//! let engine = Algorithm::Srt4Cs.engine();
-//! let q = engine.divide(x, d).result;
-//! assert!((q.to_f64() - 355.0 / 113.0).abs() < 1e-6);
 //! ```
+//! use posit_div::prelude::*;
+//!
+//! // Typed posits: constants, operators, rounded conversions. Division
+//! // routes through the paper's optimized SRT r4 CS OF FR engine.
+//! let q = P32::round_from(355.0) / P32::round_from(113.0);
+//! assert!((q.to_f64() - 355.0 / 113.0).abs() < 1e-6);
+//! assert!(P32::MIN_POSITIVE < q && q < P32::MAXPOS);
+//!
+//! // A reusable division context: built once, no allocation per call,
+//! // scalar and batch entry points, any Table IV algorithm.
+//! let div = Divider::new(32, Algorithm::Srt4Cs)?;
+//! let d = div.divide(Posit::from_f64(32, 355.0), Posit::from_f64(32, 113.0))?;
+//! assert_eq!(d.result.to_bits(), q.to_bits()); // engines are bit-identical
+//!
+//! // Batch-first path over raw bit patterns — the same loop the
+//! // coordinator's native backend and the benches run.
+//! let xs = vec![Posit::from_f64(32, 2.0).to_bits(); 8];
+//! let ds = vec![Posit::from_f64(32, 4.0).to_bits(); 8];
+//! let mut out = vec![0u64; 8];
+//! div.divide_batch(&xs, &ds, &mut out)?;
+//! assert!(out.iter().all(|&b| Posit::from_bits(32, b).to_f64() == 0.5));
+//! # Ok::<(), posit_div::PositError>(())
+//! ```
+//!
+//! For a running service (dynamic batching, worker pool, metrics), see
+//! [`coordinator::DivisionService`] and `examples/serve_divide.rs`.
 
 pub mod bench;
 pub mod cli;
 pub mod coordinator;
 pub mod division;
+pub mod error;
 pub mod hardware;
 pub mod posit;
+pub mod prelude;
 pub mod runtime;
 pub mod testkit;
 pub mod workload;
 
-/// Crate-wide result alias.
-pub type Result<T> = anyhow::Result<T>;
+pub use error::{PositError, Result};

@@ -1,21 +1,24 @@
 //! `posit-div` — command-line front end for the digit-recurrence posit
 //! division framework.
-//!
-//! Subcommands:
-//!   synth [--csv] [--n 16|32|64] [--mode comb|pipe]   synthesis model (Figs. 4-9)
-//!   table2                                            iteration/latency table
-//!   divide <x> <d> [--n N] [--alg NAME] [--bits]      one division, all metadata
-//!   verify [--n N] [--cases N]                        engines vs golden cross-check
-//!   serve [--n N] [--backend native|pjrt] [--requests N] [--batch N] [--threads N]
-//!   engines                                           list algorithm variants
+
 use std::time::Instant;
 
 use posit_div::cli::Args;
 use posit_div::coordinator::{Backend, BatchPolicy, DivisionService, ServiceConfig};
-use posit_div::division::{golden, Algorithm};
+use posit_div::division::{golden, Algorithm, DivEngine, Divider};
 use posit_div::hardware::{report, Mode, TSMC28};
 use posit_div::posit::Posit;
 use posit_div::workload::{self, Workload};
+
+const USAGE: &str = "usage: posit-div <subcommand> [flags]
+
+subcommands:
+  synth [--csv] [--n 16|32|64] [--mode comb|pipe]   synthesis model (Figs. 4-9)
+  table2                                            iteration/latency table
+  divide <x> <d> [--n N] [--alg NAME] [--bits]      one division, all metadata
+  verify [--n N] [--cases N]                        engines vs golden cross-check
+  serve [--n N] [--backend native|pjrt] [--requests N] [--batch N] [--threads N]
+  engines                                           list algorithm variants";
 
 fn alg_by_name(name: &str) -> Option<Algorithm> {
     Algorithm::ALL.iter().copied().find(|a| {
@@ -38,8 +41,12 @@ fn main() {
                 println!("{:<18} radix={:?}", a.label(), a.radix());
             }
         }
-        _ => {
-            eprintln!("usage: posit-div <synth|table2|divide|verify|serve|engines> [flags]");
+        Some(unknown) => {
+            eprintln!("unknown subcommand {unknown:?}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+        None => {
+            eprintln!("{USAGE}");
             std::process::exit(2);
         }
     }
@@ -89,7 +96,11 @@ fn cmd_divide(args: &Args) {
         }
     };
     let (x, d) = (parse(&args.positional[0]), parse(&args.positional[1]));
-    let div = alg.engine().divide(x, d);
+    let ctx = Divider::new(n, alg).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    let div = ctx.divide(x, d).expect("operands constructed at the context width");
     println!(
         "Posit{n} {} / {} = {}  (bits {:#x}, {} iterations, {} cycles, alg {})",
         x, d, div.result, div.result.to_bits(), div.iterations, div.cycles, alg.label()
@@ -100,19 +111,27 @@ fn cmd_verify(args: &Args) {
     let n: u32 = args.get("n", 16);
     let cases: u64 = args.get("cases", 100_000);
     let mut w = workload::Uniform::new(n, 0xF00D);
-    let engines: Vec<_> = Algorithm::ALL.iter().map(|a| (a.label(), a.engine())).collect();
+    let dividers: Vec<Divider> = Algorithm::ALL
+        .iter()
+        .map(|&a| {
+            Divider::new(n, a).unwrap_or_else(|e| {
+                eprintln!("{e}");
+                std::process::exit(2);
+            })
+        })
+        .collect();
     let t0 = Instant::now();
     for i in 0..cases {
         let (x, d) = w.next_pair();
         let want = golden::divide(x, d).result;
-        for (name, e) in &engines {
-            let got = e.divide(x, d).result;
-            assert_eq!(got, want, "{name} diverges at case {i}: {x:?}/{d:?}");
+        for ctx in &dividers {
+            let got = ctx.divide(x, d).expect("workload width matches").result;
+            assert_eq!(got, want, "{} diverges at case {i}: {x:?}/{d:?}", ctx.name());
         }
     }
     println!(
         "verified {} engines x {} cases on Posit{} against the golden model in {:?} - all bit-exact",
-        engines.len(), cases, n, t0.elapsed()
+        dividers.len(), cases, n, t0.elapsed()
     );
 }
 
@@ -123,19 +142,23 @@ fn cmd_serve(args: &Args) {
     let threads: usize = args.get("threads", 4);
     let backend = match args.flag("backend").unwrap_or("native") {
         "pjrt" => Backend::Pjrt { artifacts_dir: "artifacts".into() },
-        _ => Backend::Native { alg: Algorithm::Srt4CsOfFr, threads },
+        _ => Backend::Native { alg: Algorithm::DEFAULT, threads },
     };
     let svc = DivisionService::start(ServiceConfig {
         n,
         backend,
         policy: BatchPolicy { max_batch: batch, max_wait: std::time::Duration::from_micros(200) },
     })
-    .expect("service start");
+    .unwrap_or_else(|e| {
+        eprintln!("service start failed: {e}");
+        std::process::exit(1);
+    });
 
+    let client = svc.client();
     let mut w = workload::DspTrace::new(n, 0x5E12);
     let pairs = workload::take(&mut w, requests);
     let t0 = Instant::now();
-    let results = svc.divide_many(&pairs);
+    let results = client.divide_batch(&pairs).expect("service running");
     let wall = t0.elapsed();
 
     // verify a sample against the golden model

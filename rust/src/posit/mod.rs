@@ -23,8 +23,10 @@ pub mod arith;
 pub mod convert;
 pub mod fields;
 pub mod round;
+pub mod typed;
 
 pub use fields::{Decoded, Unpacked};
+pub use typed::{RoundFrom, RoundInto, P16, P32, P64, P8};
 
 /// Exponent field width fixed by the 2022 Posit Standard (and the paper).
 pub const ES: u32 = 2;
@@ -71,9 +73,12 @@ pub const fn sig_bits(n: u32) -> u32 {
     frac_bits(n) + 1
 }
 
-/// Maximum scale (4k+e) of a Posit⟨n,2⟩: `4(n-2) + 3`… the largest finite
-/// posit is `maxpos = 2^(4(n-2))` (k = n-2, no exponent bits ⇒ e = 0), so
-/// the maximum *representable* scale is `4(n-2)`.
+/// Maximum representable scale (4k+e) of a Posit⟨n,2⟩: `4(n-2)`.
+///
+/// The largest finite posit is `maxpos = 2^(4(n-2))`: its regime run
+/// consumes all n−1 bits after the sign (k = n−2), leaving no exponent
+/// bits, so e = 0 and the scale is exactly `4(n-2)` — not `4(n-2)+3`,
+/// which a regime/exponent field count alone would suggest.
 #[inline]
 pub const fn max_scale(n: u32) -> i32 {
     4 * (n as i32 - 2)
@@ -316,5 +321,19 @@ mod tests {
     #[should_panic]
     fn width_out_of_range_panics() {
         let _ = Posit::from_bits(3, 0);
+    }
+
+    #[test]
+    fn max_scale_matches_maxpos_decode() {
+        // Pin the doc contract: max_scale(n) is exactly the decoded scale
+        // of maxpos (and minpos mirrors it), for every standard width.
+        for n in [8u32, 16, 32, 64] {
+            assert_eq!(max_scale(n), 4 * (n as i32 - 2));
+            assert_eq!(Posit::maxpos(n).decode().scale, max_scale(n));
+            assert_eq!(Posit::minpos(n).decode().scale, -max_scale(n));
+        }
+        // and the value itself where f64 is exact (sig = 1.0 always is)
+        assert_eq!(Posit::maxpos(8).to_f64(), (2.0f64).powi(max_scale(8)));
+        assert_eq!(Posit::maxpos(64).to_f64(), (2.0f64).powi(max_scale(64)));
     }
 }

@@ -1,0 +1,431 @@
+//! Width-typed posits: `P8` / `P16` / `P32` / `P64`.
+//!
+//! [`super::Posit`] carries its width `n` at runtime, which is what the
+//! dividers and the hardware model want (one implementation covers every
+//! 4 ≤ n ≤ 64, including the paper's Posit10 worked examples). Application
+//! code, however, wants the standard formats as *types*: operators,
+//! constants, ordered comparisons and rounded conversions, with width
+//! mismatches impossible by construction. These newtypes provide exactly
+//! that, in the style of the `fast_posit` crate:
+//!
+//! ```
+//! use posit_div::prelude::*;
+//!
+//! let q = P32::round_from(355.0) / P32::round_from(113.0);
+//! assert!((q.to_f64() - 355.0 / 113.0).abs() < 1e-6);
+//! assert!(P16::MIN_POSITIVE < P16::ONE && P16::ONE < P16::MAXPOS);
+//! let x: P16 = 2.5f64.round_into();
+//! assert_eq!((x + P16::ONE).to_f64(), 3.5);
+//! ```
+//!
+//! The `Div` operator routes through the paper's optimized engine
+//! ([`Algorithm::DEFAULT`], SRT r4 CS OF FR); every engine is bit-exact,
+//! so the choice affects only metadata, never results. For batch work or
+//! a different algorithm, drop down to [`crate::division::Divider`].
+
+use core::cmp::Ordering;
+use core::ops::{Add, AddAssign, Div, DivAssign, Mul, MulAssign, Neg, Sub, SubAssign};
+
+use super::{mask, Posit};
+use crate::division::{exec, srt4_cs::Srt4Cs, Algorithm};
+use crate::error::{PositError, Result};
+
+/// Correctly-rounded conversion *into* `Self` (posit analogue of `From`;
+/// lossy by rounding, never by surprise).
+pub trait RoundFrom<T> {
+    fn round_from(value: T) -> Self;
+}
+
+/// Correctly-rounded conversion *out of* `Self` — blanket-implemented
+/// from [`RoundFrom`], mirroring `From`/`Into`.
+pub trait RoundInto<U> {
+    fn round_into(self) -> U;
+}
+
+impl<T, U: RoundFrom<T>> RoundInto<U> for T {
+    fn round_into(self) -> U {
+        U::round_from(self)
+    }
+}
+
+macro_rules! typed_posit {
+    ($(#[$doc:meta])* $name:ident, $n:literal) => {
+        $(#[$doc])*
+        #[derive(Clone, Copy, PartialEq, Eq, Hash)]
+        pub struct $name(Posit);
+
+        impl $name {
+            /// Total width in bits (es = 2 per the 2022 standard).
+            pub const N: u32 = $n;
+            /// The zero posit (pattern `0…0`).
+            pub const ZERO: $name = $name(Posit { bits: 0, n: $n });
+            /// NaR — Not a Real (pattern `10…0`).
+            pub const NAR: $name = $name(Posit { bits: 1u64 << ($n - 1), n: $n });
+            /// The posit encoding 1.0.
+            pub const ONE: $name = $name(Posit { bits: 1u64 << ($n - 2), n: $n });
+            /// Smallest positive posit `minpos = 2^(-4(n-2))`.
+            pub const MIN_POSITIVE: $name = $name(Posit { bits: 1, n: $n });
+            /// Largest finite posit `maxpos = 2^(4(n-2))`.
+            pub const MAXPOS: $name = $name(Posit { bits: mask($n - 1), n: $n });
+
+            /// From a raw `n`-bit pattern (high garbage bits masked off).
+            #[inline]
+            pub fn from_bits(bits: u64) -> $name {
+                $name(Posit::from_bits($n, bits))
+            }
+
+            /// The raw `n`-bit pattern.
+            #[inline]
+            pub fn to_bits(self) -> u64 {
+                self.0.to_bits()
+            }
+
+            /// Wrap a runtime-width [`Posit`]; errors unless its width is `N`.
+            #[inline]
+            pub fn from_posit(p: Posit) -> Result<$name> {
+                if p.width() != $n {
+                    return Err(PositError::WidthMismatch { expected: $n, got: p.width() });
+                }
+                Ok($name(p))
+            }
+
+            /// The underlying runtime-width [`Posit`].
+            #[inline]
+            pub fn as_posit(self) -> Posit {
+                self.0
+            }
+
+            /// Convert to `f64` (exact for n ≤ 32; one rounding for P64).
+            #[inline]
+            pub fn to_f64(self) -> f64 {
+                self.0.to_f64()
+            }
+
+            #[inline]
+            pub fn is_zero(self) -> bool {
+                self.0.is_zero()
+            }
+
+            #[inline]
+            pub fn is_nar(self) -> bool {
+                self.0.is_nar()
+            }
+
+            #[inline]
+            pub fn is_negative(self) -> bool {
+                self.0.is_negative()
+            }
+
+            /// Absolute value (exact).
+            #[inline]
+            pub fn abs(self) -> $name {
+                $name(self.0.abs())
+            }
+
+            /// Next representable posit up, saturating at maxpos.
+            #[inline]
+            pub fn next_up(self) -> $name {
+                $name(self.0.next_up())
+            }
+
+            /// Next representable posit down, saturating past NaR.
+            #[inline]
+            pub fn next_down(self) -> $name {
+                $name(self.0.next_down())
+            }
+        }
+
+        impl From<$name> for Posit {
+            #[inline]
+            fn from(p: $name) -> Posit {
+                p.0
+            }
+        }
+
+        impl Default for $name {
+            #[inline]
+            fn default() -> $name {
+                $name::ZERO
+            }
+        }
+
+        impl RoundFrom<f64> for $name {
+            #[inline]
+            fn round_from(v: f64) -> $name {
+                $name(Posit::from_f64($n, v))
+            }
+        }
+
+        impl RoundFrom<f32> for $name {
+            #[inline]
+            fn round_from(v: f32) -> $name {
+                $name(Posit::from_f64($n, v as f64))
+            }
+        }
+
+        impl RoundFrom<$name> for f64 {
+            #[inline]
+            fn round_from(p: $name) -> f64 {
+                p.to_f64()
+            }
+        }
+
+        impl RoundFrom<$name> for f32 {
+            /// Goes through `f64`: exact-then-round for n ≤ 32; for P64
+            /// the intermediate rounding can double-round (≤ 1 ulp off
+            /// the correctly rounded f32 in rare midpoint cases).
+            #[inline]
+            fn round_from(p: $name) -> f32 {
+                p.to_f64() as f32
+            }
+        }
+
+        typed_posit!(@int $name: i8 i16 i32 u8 u16 u32);
+
+        impl RoundFrom<i64> for $name {
+            /// Correctly rounded for `|v| ≤ 2^53` (goes through `f64`).
+            #[inline]
+            fn round_from(v: i64) -> $name {
+                $name(Posit::from_f64($n, v as f64))
+            }
+        }
+
+        impl RoundFrom<u64> for $name {
+            /// Correctly rounded for `v ≤ 2^53` (goes through `f64`).
+            #[inline]
+            fn round_from(v: u64) -> $name {
+                $name(Posit::from_f64($n, v as f64))
+            }
+        }
+
+        impl Add for $name {
+            type Output = $name;
+            #[inline]
+            fn add(self, rhs: $name) -> $name {
+                $name(Posit::add(self.0, rhs.0))
+            }
+        }
+
+        impl Sub for $name {
+            type Output = $name;
+            #[inline]
+            fn sub(self, rhs: $name) -> $name {
+                $name(Posit::sub(self.0, rhs.0))
+            }
+        }
+
+        impl Mul for $name {
+            type Output = $name;
+            #[inline]
+            fn mul(self, rhs: $name) -> $name {
+                $name(Posit::mul(self.0, rhs.0))
+            }
+        }
+
+        impl Div for $name {
+            type Output = $name;
+            /// Correctly-rounded division through the default digit-
+            /// recurrence engine ([`Algorithm::DEFAULT`], SRT r4 CS OF
+            /// FR — keep the two in sync). `x/0 = NaR`.
+            ///
+            /// The engine is a two-flag struct built on the stack; no
+            /// width checks are needed (both operands are `$name`) and
+            /// nothing allocates, so the operator carries no per-call
+            /// setup beyond what a prebuilt [`crate::division::Divider`]
+            /// would do.
+            #[inline]
+            fn div(self, rhs: $name) -> $name {
+                debug_assert_eq!(Algorithm::DEFAULT, Algorithm::Srt4CsOfFr);
+                $name(exec::divide_with(&Srt4Cs::with_otf_fr(), self.0, rhs.0).result)
+            }
+        }
+
+        impl Neg for $name {
+            type Output = $name;
+            #[inline]
+            fn neg(self) -> $name {
+                $name(self.0.neg())
+            }
+        }
+
+        impl AddAssign for $name {
+            #[inline]
+            fn add_assign(&mut self, rhs: $name) {
+                *self = *self + rhs;
+            }
+        }
+
+        impl SubAssign for $name {
+            #[inline]
+            fn sub_assign(&mut self, rhs: $name) {
+                *self = *self - rhs;
+            }
+        }
+
+        impl MulAssign for $name {
+            #[inline]
+            fn mul_assign(&mut self, rhs: $name) {
+                *self = *self * rhs;
+            }
+        }
+
+        impl DivAssign for $name {
+            #[inline]
+            fn div_assign(&mut self, rhs: $name) {
+                *self = *self / rhs;
+            }
+        }
+
+        impl Ord for $name {
+            /// Total order: NaR < negative reals < 0 < positive reals —
+            /// the posit pattern order the paper highlights as removing
+            /// comparator hardware.
+            #[inline]
+            fn cmp(&self, other: &$name) -> Ordering {
+                self.0.total_cmp(other.0)
+            }
+        }
+
+        impl PartialOrd for $name {
+            #[inline]
+            fn partial_cmp(&self, other: &$name) -> Option<Ordering> {
+                Some(self.cmp(other))
+            }
+        }
+
+        impl core::fmt::Display for $name {
+            fn fmt(&self, f: &mut core::fmt::Formatter<'_>) -> core::fmt::Result {
+                core::fmt::Display::fmt(&self.0, f)
+            }
+        }
+
+        impl core::fmt::Debug for $name {
+            fn fmt(&self, f: &mut core::fmt::Formatter<'_>) -> core::fmt::Result {
+                core::fmt::Debug::fmt(&self.0, f)
+            }
+        }
+    };
+
+    // Exactly-representable integer sources (fit f64's 53-bit mantissa).
+    (@int $name:ident: $($int:ty)*) => {
+        $(
+            impl RoundFrom<$int> for $name {
+                #[inline]
+                fn round_from(v: $int) -> $name {
+                    $name(Posit::from_f64(<$name>::N, v as f64))
+                }
+            }
+        )*
+    };
+}
+
+typed_posit!(
+    /// Standard 8-bit posit, `Posit⟨8,2⟩`.
+    P8,
+    8
+);
+typed_posit!(
+    /// Standard 16-bit posit, `Posit⟨16,2⟩`.
+    P16,
+    16
+);
+typed_posit!(
+    /// Standard 32-bit posit, `Posit⟨32,2⟩`.
+    P32,
+    32
+);
+typed_posit!(
+    /// Standard 64-bit posit, `Posit⟨64,2⟩`.
+    P64,
+    64
+);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constants_match_runtime_constructors() {
+        assert_eq!(P8::ZERO.as_posit(), Posit::zero(8));
+        assert_eq!(P8::NAR.as_posit(), Posit::nar(8));
+        assert_eq!(P8::ONE.as_posit(), Posit::one(8));
+        assert_eq!(P8::MIN_POSITIVE.as_posit(), Posit::minpos(8));
+        assert_eq!(P8::MAXPOS.as_posit(), Posit::maxpos(8));
+        assert_eq!(P16::NAR.as_posit(), Posit::nar(16));
+        assert_eq!(P32::MAXPOS.as_posit(), Posit::maxpos(32));
+        assert_eq!(P64::ONE.as_posit(), Posit::one(64));
+        assert_eq!(P64::MIN_POSITIVE.as_posit(), Posit::minpos(64));
+        assert_eq!(P64::NAR.as_posit(), Posit::nar(64));
+    }
+
+    #[test]
+    fn operators_delegate_to_posit_arith() {
+        let a = P16::round_from(0.3);
+        let b = P16::round_from(0.6);
+        assert_eq!((a + b).as_posit(), a.as_posit().add(b.as_posit()));
+        assert_eq!((a - b).as_posit(), a.as_posit().sub(b.as_posit()));
+        assert_eq!((a * b).as_posit(), a.as_posit().mul(b.as_posit()));
+        assert_eq!((-a).as_posit(), a.as_posit().neg());
+        let q = a / b;
+        let want = crate::division::golden::divide(a.as_posit(), b.as_posit()).result;
+        assert_eq!(q.as_posit(), want);
+    }
+
+    #[test]
+    fn assign_operators() {
+        let mut x = P32::round_from(10.0);
+        x += P32::ONE;
+        assert_eq!(x.to_f64(), 11.0);
+        x -= P32::ONE;
+        assert_eq!(x.to_f64(), 10.0);
+        x *= P32::round_from(2.0);
+        assert_eq!(x.to_f64(), 20.0);
+        x /= P32::round_from(4.0);
+        assert_eq!(x.to_f64(), 5.0);
+    }
+
+    #[test]
+    fn division_specials() {
+        assert!((P16::ONE / P16::ZERO).is_nar());
+        assert!((P16::NAR / P16::ONE).is_nar());
+        assert!((P16::ZERO / P16::ONE).is_zero());
+    }
+
+    #[test]
+    fn ordering_is_total_posit_order() {
+        assert!(P16::NAR < -P16::MAXPOS);
+        assert!(-P16::ONE < P16::ZERO);
+        assert!(P16::ZERO < P16::MIN_POSITIVE);
+        assert!(P16::MIN_POSITIVE < P16::ONE);
+        assert!(P16::ONE < P16::MAXPOS);
+        let mut v = vec![P8::MAXPOS, P8::ZERO, P8::NAR, P8::ONE];
+        v.sort();
+        assert_eq!(v, vec![P8::NAR, P8::ZERO, P8::ONE, P8::MAXPOS]);
+    }
+
+    #[test]
+    fn from_posit_checks_width() {
+        assert!(P16::from_posit(Posit::one(16)).is_ok());
+        assert_eq!(
+            P16::from_posit(Posit::one(32)).unwrap_err(),
+            PositError::WidthMismatch { expected: 16, got: 32 }
+        );
+    }
+
+    #[test]
+    fn round_from_integers() {
+        assert_eq!(P32::round_from(42i32).to_f64(), 42.0);
+        assert_eq!(P32::round_from(-7i64).to_f64(), -7.0);
+        assert_eq!(P16::round_from(255u8).to_f64(), 255.0);
+        assert_eq!(P8::round_from(3u64).to_f64(), 3.0);
+        let f: f64 = P32::round_from(1.5).round_into();
+        assert_eq!(f, 1.5);
+    }
+
+    #[test]
+    fn display_and_debug() {
+        assert_eq!(P16::NAR.to_string(), "NaR");
+        assert_eq!(P16::ONE.to_string(), "1");
+        assert!(format!("{:?}", P16::ONE).starts_with("Posit16"));
+    }
+}

@@ -1,0 +1,23 @@
+//! One-stop import for the public API.
+//!
+//! ```
+//! use posit_div::prelude::*;
+//!
+//! // typed posits with operators
+//! let q = P32::round_from(355.0) / P32::round_from(113.0);
+//! assert!((q.to_f64() - 355.0 / 113.0).abs() < 1e-6);
+//!
+//! // a reusable, zero-alloc division context with a batch-first API
+//! let div = Divider::new(16, Algorithm::Srt4Cs)?;
+//! let mut out = [0u64; 2];
+//! div.divide_batch(&[P16::ONE.to_bits(); 2], &[P16::ONE.to_bits(); 2], &mut out)?;
+//! assert_eq!(out, [P16::ONE.to_bits(); 2]);
+//! # Ok::<(), posit_div::PositError>(())
+//! ```
+
+pub use crate::coordinator::{
+    Backend, BatchHandle, BatchPolicy, Client, DivisionService, Pending, ServiceConfig,
+};
+pub use crate::division::{Algorithm, DivEngine, Divider, Division};
+pub use crate::error::{PositError, Result};
+pub use crate::posit::{Posit, RoundFrom, RoundInto, P16, P32, P64, P8};

@@ -6,13 +6,22 @@
 //! from_text_file` → compile → execute), caching one compiled executable
 //! per (format, batch) variant. After that, division requests run entirely
 //! in-process with Python nowhere on the path.
+//!
+//! ## The `xla` feature
+//!
+//! The PJRT client lives behind `#[cfg(feature = "xla")]`. The feature is
+//! **off by default** because the offline build environment has neither
+//! the `xla` crate nor `libxla_extension.so`; enabling it requires
+//! supplying the crate (vendored or `[patch]`-ed) in addition to
+//! `--features xla`. Without it, artifact *discovery* still works (it is
+//! pure std), but [`Runtime::load`] returns
+//! [`PositError::BackendUnavailable`] so callers — the coordinator, the
+//! e2e bench, the integration tests — degrade gracefully to the native
+//! engines.
 
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
-
-use crate::posit::{mask, Posit};
+use crate::error::{PositError, Result};
 
 /// One AOT-compiled variant: `div_p{n}_b{batch}.hlo.txt`.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -32,11 +41,14 @@ pub fn parse_artifact_name(name: &str) -> Option<(u32, usize)> {
 
 /// Discover artifacts in a directory.
 pub fn discover(dir: &Path) -> Result<Vec<Variant>> {
+    let entries = std::fs::read_dir(dir).map_err(|e| PositError::Artifacts {
+        detail: format!("artifact dir {dir:?} (run `make artifacts`): {e}"),
+    })?;
     let mut out = Vec::new();
-    for entry in std::fs::read_dir(dir)
-        .with_context(|| format!("artifact dir {dir:?} (run `make artifacts`)"))?
-    {
-        let entry = entry?;
+    for entry in entries {
+        let entry = entry.map_err(|e| PositError::Artifacts {
+            detail: format!("reading artifact dir {dir:?}: {e}"),
+        })?;
         let name = entry.file_name();
         if let Some((n, batch)) = parse_artifact_name(&name.to_string_lossy()) {
             out.push(Variant { n, batch, path: entry.path() });
@@ -44,24 +56,178 @@ pub fn discover(dir: &Path) -> Result<Vec<Variant>> {
     }
     out.sort_by_key(|v| (v.n, v.batch));
     if out.is_empty() {
-        bail!("no artifacts found in {dir:?} (run `make artifacts`)");
+        return Err(PositError::Artifacts {
+            detail: format!("no artifacts found in {dir:?} (run `make artifacts`)"),
+        });
     }
     Ok(out)
 }
 
-/// The PJRT execution runtime.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    variants: Vec<Variant>,
-    compiled: std::sync::Mutex<HashMap<(u32, usize), std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+/// Pick the smallest variant of format `n` with batch ≥ `len` (falling
+/// back to the largest available — callers then chunk).
+fn select_variant<'a>(variants: &'a [Variant], n: u32, len: usize) -> Result<&'a Variant> {
+    let mut candidates: Vec<&Variant> = variants.iter().filter(|v| v.n == n).collect();
+    if candidates.is_empty() {
+        let mut formats: Vec<u32> = variants.iter().map(|v| v.n).collect();
+        formats.dedup();
+        return Err(PositError::Artifacts {
+            detail: format!("no artifact for Posit{n} (have {formats:?})"),
+        });
+    }
+    candidates.sort_by_key(|v| v.batch);
+    Ok(candidates.iter().find(|v| v.batch >= len).unwrap_or_else(|| {
+        candidates.last().expect("candidates is non-empty")
+    }))
 }
 
+#[cfg(feature = "xla")]
+mod pjrt {
+    use std::collections::HashMap;
+    use std::path::Path;
+    use std::sync::{Arc, Mutex};
+
+    use super::{discover, select_variant, Variant};
+    use crate::error::{PositError, Result};
+    use crate::posit::{mask, Posit};
+
+    fn exec_err(detail: String) -> PositError {
+        PositError::Execution { detail }
+    }
+
+    /// The PJRT execution runtime.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        variants: Vec<Variant>,
+        compiled: Mutex<HashMap<(u32, usize), Arc<xla::PjRtLoadedExecutable>>>,
+    }
+
+    impl Runtime {
+        /// CPU PJRT client over the artifacts in `dir`.
+        pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+            let variants = discover(dir.as_ref())?;
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| exec_err(format!("PJRT client: {e:?}")))?;
+            Ok(Runtime { client, variants, compiled: Mutex::new(HashMap::new()) })
+        }
+
+        /// Formats available in the artifact set.
+        pub fn formats(&self) -> Vec<u32> {
+            let mut ns: Vec<u32> = self.variants.iter().map(|v| v.n).collect();
+            ns.dedup();
+            ns
+        }
+
+        /// Pick the best variant for a (format, batch-length) request.
+        pub fn variant_for(&self, n: u32, len: usize) -> Result<&Variant> {
+            select_variant(&self.variants, n, len)
+        }
+
+        fn executable(&self, v: &Variant) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+            let key = (v.n, v.batch);
+            if let Some(exe) = self.compiled.lock().unwrap().get(&key) {
+                return Ok(exe.clone());
+            }
+            // compile outside the lock (slow), insert after
+            let proto = xla::HloModuleProto::from_text_file(
+                v.path.to_str().ok_or_else(|| exec_err("non-utf8 path".into()))?,
+            )
+            .map_err(|e| exec_err(format!("parse {:?}: {e:?}", v.path)))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = Arc::new(
+                self.client
+                    .compile(&comp)
+                    .map_err(|e| exec_err(format!("compile {:?}: {e:?}", v.path)))?,
+            );
+            self.compiled.lock().unwrap().entry(key).or_insert_with(|| exe.clone());
+            Ok(exe)
+        }
+
+        /// Warm the compile cache for every variant of format `n`.
+        pub fn warmup(&self, n: u32) -> Result<()> {
+            for v in self.variants.clone().iter().filter(|v| v.n == n) {
+                self.executable(v)?;
+            }
+            Ok(())
+        }
+
+        /// Execute one batched division of n-bit patterns. Inputs shorter
+        /// than the variant batch are padded (with 1.0/1.0) and truncated
+        /// on return; longer inputs are chunked.
+        pub fn divide_bits(&self, n: u32, x: &[u64], d: &[u64]) -> Result<Vec<u64>> {
+            if x.len() != d.len() {
+                return Err(PositError::BatchShapeMismatch {
+                    xs: x.len(),
+                    ds: d.len(),
+                    out: x.len(),
+                });
+            }
+            let v = self.variant_for(n, x.len())?.clone();
+            let exe = self.executable(&v)?;
+            let mut out = Vec::with_capacity(x.len());
+            let one = 1i64 << (n - 2);
+            for (cx, cd) in x.chunks(v.batch).zip(d.chunks(v.batch)) {
+                let mut xv: Vec<i64> = cx.iter().map(|&b| (b & mask(n)) as i64).collect();
+                let mut dv: Vec<i64> = cd.iter().map(|&b| (b & mask(n)) as i64).collect();
+                xv.resize(v.batch, one);
+                dv.resize(v.batch, one);
+                let xl = xla::Literal::vec1(&xv);
+                let dl = xla::Literal::vec1(&dv);
+                let result = exe
+                    .execute::<xla::Literal>(&[xl, dl])
+                    .map_err(|e| exec_err(format!("execute: {e:?}")))?[0][0]
+                    .to_literal_sync()
+                    .map_err(|e| exec_err(format!("fetch: {e:?}")))?;
+                let tuple =
+                    result.to_tuple1().map_err(|e| exec_err(format!("untuple: {e:?}")))?;
+                let q: Vec<i64> =
+                    tuple.to_vec().map_err(|e| exec_err(format!("to_vec: {e:?}")))?;
+                out.extend(q[..cx.len()].iter().map(|&b| b as u64 & mask(n)));
+            }
+            Ok(out)
+        }
+
+        /// Typed wrapper over [`Runtime::divide_bits`].
+        pub fn divide(&self, x: &[Posit], d: &[Posit]) -> Result<Vec<Posit>> {
+            let n = x.first().map(|p| p.width()).unwrap_or(16);
+            let xb: Vec<u64> = x.iter().map(|p| p.to_bits()).collect();
+            let db: Vec<u64> = d.iter().map(|p| p.to_bits()).collect();
+            Ok(self
+                .divide_bits(n, &xb, &db)?
+                .into_iter()
+                .map(|b| Posit::from_bits(n, b))
+                .collect())
+        }
+    }
+}
+
+#[cfg(feature = "xla")]
+pub use pjrt::Runtime;
+
+/// Stub runtime compiled when the `xla` feature is off: artifact
+/// discovery still runs (and still reports artifact problems precisely),
+/// but loading always ends in [`PositError::BackendUnavailable`], so this
+/// type is never actually constructed.
+#[cfg(not(feature = "xla"))]
+pub struct Runtime {
+    variants: Vec<Variant>,
+}
+
+#[cfg(not(feature = "xla"))]
 impl Runtime {
-    /// CPU PJRT client over the artifacts in `dir`.
+    fn unavailable() -> PositError {
+        PositError::BackendUnavailable {
+            reason: "PJRT runtime requires the `xla` feature (and the vendored xla crate); \
+                     rebuild with `--features xla` or use the native backend"
+                .to_string(),
+        }
+    }
+
+    /// Discover artifacts, then report that no PJRT client exists in this
+    /// build. Artifact errors (missing dir, empty dir) surface first so
+    /// misconfiguration is still diagnosed exactly.
     pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
-        let variants = discover(dir.as_ref())?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
-        Ok(Runtime { client, variants, compiled: std::sync::Mutex::new(HashMap::new()) })
+        let _variants = discover(dir.as_ref())?;
+        Err(Self::unavailable())
     }
 
     /// Formats available in the artifact set.
@@ -71,85 +237,25 @@ impl Runtime {
         ns
     }
 
-    /// Pick the smallest variant of format `n` with batch ≥ `len`
-    /// (falling back to the largest available — callers then chunk).
+    /// Pick the best variant for a (format, batch-length) request.
     pub fn variant_for(&self, n: u32, len: usize) -> Result<&Variant> {
-        let mut candidates: Vec<&Variant> =
-            self.variants.iter().filter(|v| v.n == n).collect();
-        if candidates.is_empty() {
-            bail!("no artifact for Posit{n} (have {:?})", self.formats());
-        }
-        candidates.sort_by_key(|v| v.batch);
-        Ok(candidates
-            .iter()
-            .find(|v| v.batch >= len)
-            .unwrap_or_else(|| candidates.last().unwrap()))
+        select_variant(&self.variants, n, len)
     }
 
-    fn executable(&self, v: &Variant) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
-        let key = (v.n, v.batch);
-        if let Some(exe) = self.compiled.lock().unwrap().get(&key) {
-            return Ok(exe.clone());
-        }
-        // compile outside the lock (slow), insert after
-        let proto = xla::HloModuleProto::from_text_file(
-            v.path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .map_err(|e| anyhow!("parse {:?}: {e:?}", v.path))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = std::sync::Arc::new(
-            self.client.compile(&comp).map_err(|e| anyhow!("compile {:?}: {e:?}", v.path))?,
-        );
-        self.compiled.lock().unwrap().entry(key).or_insert_with(|| exe.clone());
-        Ok(exe)
+    pub fn warmup(&self, _n: u32) -> Result<()> {
+        Err(Self::unavailable())
     }
 
-    /// Warm the compile cache for every variant of format `n`.
-    pub fn warmup(&self, n: u32) -> Result<()> {
-        for v in self.variants.clone().iter().filter(|v| v.n == n) {
-            self.executable(v)?;
-        }
-        Ok(())
+    pub fn divide_bits(&self, _n: u32, _x: &[u64], _d: &[u64]) -> Result<Vec<u64>> {
+        Err(Self::unavailable())
     }
 
-    /// Execute one batched division of n-bit patterns. Inputs shorter than
-    /// the variant batch are padded (with 1.0/1.0) and truncated on return;
-    /// longer inputs are chunked.
-    pub fn divide_bits(&self, n: u32, x: &[u64], d: &[u64]) -> Result<Vec<u64>> {
-        assert_eq!(x.len(), d.len());
-        let v = self.variant_for(n, x.len())?.clone();
-        let exe = self.executable(&v)?;
-        let mut out = Vec::with_capacity(x.len());
-        let one = 1i64 << (n - 2);
-        for (cx, cd) in x.chunks(v.batch).zip(d.chunks(v.batch)) {
-            let mut xv: Vec<i64> = cx.iter().map(|&b| (b & mask(n)) as i64).collect();
-            let mut dv: Vec<i64> = cd.iter().map(|&b| (b & mask(n)) as i64).collect();
-            xv.resize(v.batch, one);
-            dv.resize(v.batch, one);
-            let xl = xla::Literal::vec1(&xv);
-            let dl = xla::Literal::vec1(&dv);
-            let result = exe
-                .execute::<xla::Literal>(&[xl, dl])
-                .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
-                .to_literal_sync()
-                .map_err(|e| anyhow!("fetch: {e:?}"))?;
-            let tuple = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
-            let q: Vec<i64> = tuple.to_vec().map_err(|e| anyhow!("to_vec: {e:?}"))?;
-            out.extend(q[..cx.len()].iter().map(|&b| b as u64 & mask(n)));
-        }
-        Ok(out)
-    }
-
-    /// Typed wrapper over [`Runtime::divide_bits`].
-    pub fn divide(&self, x: &[Posit], d: &[Posit]) -> Result<Vec<Posit>> {
-        let n = x.first().map(|p| p.width()).unwrap_or(16);
-        let xb: Vec<u64> = x.iter().map(|p| p.to_bits()).collect();
-        let db: Vec<u64> = d.iter().map(|p| p.to_bits()).collect();
-        Ok(self
-            .divide_bits(n, &xb, &db)?
-            .into_iter()
-            .map(|b| Posit::from_bits(n, b))
-            .collect())
+    pub fn divide(
+        &self,
+        _x: &[crate::posit::Posit],
+        _d: &[crate::posit::Posit],
+    ) -> Result<Vec<crate::posit::Posit>> {
+        Err(Self::unavailable())
     }
 }
 
@@ -166,6 +272,21 @@ mod tests {
         assert_eq!(parse_artifact_name("div_pXX_bYY.hlo.txt"), None);
     }
 
+    #[test]
+    fn select_variant_prefers_smallest_fitting_batch() {
+        let v = |n, batch| Variant { n, batch, path: PathBuf::new() };
+        let variants = vec![v(16, 256), v(16, 1024), v(32, 256)];
+        assert_eq!(select_variant(&variants, 16, 100).unwrap().batch, 256);
+        assert_eq!(select_variant(&variants, 16, 300).unwrap().batch, 1024);
+        // nothing big enough: fall back to the largest, callers chunk
+        assert_eq!(select_variant(&variants, 16, 5000).unwrap().batch, 1024);
+        assert!(matches!(
+            select_variant(&variants, 64, 1),
+            Err(PositError::Artifacts { .. })
+        ));
+    }
+
     // Integration tests that need built artifacts live in
-    // rust/tests/pjrt_integration.rs (they require `make artifacts`).
+    // rust/tests/pjrt_integration.rs (they require `make artifacts` and
+    // the `xla` feature).
 }

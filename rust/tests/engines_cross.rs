@@ -2,26 +2,30 @@
 //! agree with the exact golden model — exhaustively at Posit8, on dense
 //! divisor sweeps at Posit16, and on random samples at every width up to
 //! Posit64 (where f64-based references can no longer help).
+//!
+//! All engines run through pre-built [`Divider`] contexts — the same
+//! zero-alloc path the coordinator and the benches use.
 
-use posit_div::division::{golden, Algorithm, DivEngine};
+use posit_div::division::{golden, Algorithm, DivEngine, Divider};
 use posit_div::posit::{mask, Posit};
 use posit_div::testkit::Rng;
 
-fn engines() -> Vec<(String, Box<dyn DivEngine + Send + Sync>)> {
-    Algorithm::ALL.iter().map(|a| (a.label().to_string(), a.engine())).collect()
+fn dividers(n: u32) -> Vec<Divider> {
+    Algorithm::ALL.iter().map(|&a| Divider::new(n, a).expect("valid width")).collect()
 }
 
 #[test]
 fn all_engines_exhaustive_posit8() {
     let n = 8;
-    let engines = engines();
+    let dividers = dividers(n);
     for xb in 0..=mask(n) {
         for db in 0..=mask(n) {
             let x = Posit::from_bits(n, xb);
             let d = Posit::from_bits(n, db);
             let want = golden::divide(x, d).result;
-            for (name, e) in &engines {
-                assert_eq!(e.divide(x, d).result, want, "{name}: {x:?}/{d:?}");
+            for ctx in &dividers {
+                let got = ctx.divide(x, d).expect("width matches").result;
+                assert_eq!(got, want, "{}: {x:?}/{d:?}", ctx.name());
             }
         }
     }
@@ -31,7 +35,7 @@ fn all_engines_exhaustive_posit8() {
 fn all_engines_dense_divisor_sweep_posit16() {
     // fixed interesting dividends x all divisors (2^16 each)
     let n = 16;
-    let engines = engines();
+    let dividers = dividers(n);
     let xs = [
         Posit::one(n),
         Posit::from_f64(n, 1.0 + 2.0f64.powi(-11)), // longest fraction
@@ -43,8 +47,9 @@ fn all_engines_dense_divisor_sweep_posit16() {
         for db in 0..=mask(n) {
             let d = Posit::from_bits(n, db);
             let want = golden::divide(x, d).result;
-            for (name, e) in &engines {
-                assert_eq!(e.divide(x, d).result, want, "{name}: {x:?}/{d:?}");
+            for ctx in &dividers {
+                let got = ctx.divide(x, d).expect("width matches").result;
+                assert_eq!(got, want, "{}: {x:?}/{d:?}", ctx.name());
             }
         }
     }
@@ -52,15 +57,16 @@ fn all_engines_dense_divisor_sweep_posit16() {
 
 #[test]
 fn all_engines_random_all_widths() {
-    let engines = engines();
     let mut rng = Rng::seeded(0xAC70);
     for &n in &[10u32, 16, 24, 32, 48, 64] {
+        let dividers = dividers(n);
         for _ in 0..4_000 {
             let x = Posit::from_bits(n, rng.next_u64() & mask(n));
             let d = Posit::from_bits(n, rng.next_u64() & mask(n));
             let want = golden::divide(x, d).result;
-            for (name, e) in &engines {
-                assert_eq!(e.divide(x, d).result, want, "{name}: n={n} {x:?}/{d:?}");
+            for ctx in &dividers {
+                let got = ctx.divide(x, d).expect("width matches").result;
+                assert_eq!(got, want, "{}: n={n} {x:?}/{d:?}", ctx.name());
             }
         }
     }
@@ -71,12 +77,14 @@ fn iteration_and_cycle_metadata_consistent() {
     let mut rng = Rng::seeded(7);
     for &n in &[16u32, 32, 64] {
         for alg in Algorithm::TABLE_IV {
-            let e = alg.engine();
+            let ctx = Divider::new(n, alg).expect("valid width");
             let x = Posit::from_bits(n, (rng.next_u64() & mask(n)) | 1).abs();
             let d = Posit::from_bits(n, (rng.next_u64() & mask(n)) | 1).abs();
-            let div = e.divide(x, d);
+            let div = ctx.divide(x, d).expect("width matches");
             assert_eq!(div.iterations, posit_div::division::iterations(n, alg.radix().unwrap()));
+            assert_eq!(div.iterations, ctx.iterations());
             assert_eq!(div.cycles, posit_div::division::latency_cycles(n, alg));
+            assert_eq!(div.cycles, ctx.latency_cycles());
         }
     }
 }

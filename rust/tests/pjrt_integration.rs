@@ -1,19 +1,38 @@
 //! End-to-end integration: the AOT-compiled JAX/Pallas graph executed via
 //! PJRT from Rust must agree bit-for-bit with the native Rust golden model.
-//! Requires `make artifacts`.
+//!
+//! Requires `make artifacts` **and** a build with the `xla` feature;
+//! otherwise these tests skip gracefully (the stub runtime reports
+//! `BackendUnavailable`, a missing artifact dir reports `Artifacts`).
 
 use posit_div::division::golden;
 use posit_div::posit::{mask, Posit};
 use posit_div::runtime::Runtime;
 use posit_div::testkit::Rng;
+use posit_div::PositError;
 
 fn artifacts_dir() -> std::path::PathBuf {
     std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
+/// Load the runtime or skip the test with a note. Only *environmental*
+/// conditions skip — artifacts not built yet, or a build without the
+/// `xla` feature. Anything else (e.g. a PJRT client/compile failure with
+/// artifacts present) is a real regression and must fail the test.
+fn load_or_skip() -> Option<Runtime> {
+    match Runtime::load(artifacts_dir()) {
+        Ok(rt) => Some(rt),
+        Err(e @ (PositError::Artifacts { .. } | PositError::BackendUnavailable { .. })) => {
+            eprintln!("skipping PJRT integration test: {e}");
+            None
+        }
+        Err(e) => panic!("PJRT runtime failed to load with artifacts present: {e}"),
+    }
+}
+
 #[test]
 fn pjrt_graph_matches_rust_golden() {
-    let rt = Runtime::load(artifacts_dir()).expect("run `make artifacts` first");
+    let Some(rt) = load_or_skip() else { return };
     let mut rng = Rng::seeded(0x9187);
     for &n in &[16u32, 32] {
         for round in 0..4 {
@@ -36,7 +55,7 @@ fn pjrt_graph_matches_rust_golden() {
 
 #[test]
 fn pjrt_specials() {
-    let rt = Runtime::load(artifacts_dir()).expect("run `make artifacts` first");
+    let Some(rt) = load_or_skip() else { return };
     let n = 16;
     let nar = 1u64 << (n - 1);
     let one = 1u64 << (n - 2);

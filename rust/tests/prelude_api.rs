@@ -1,0 +1,160 @@
+//! Integration coverage for the redesigned public surface: the `prelude`
+//! import, typed posits (round-trip conversions, operators, ordering),
+//! the zero-alloc `Divider`, and the golden cross-check that the batch
+//! path is bit-identical to the scalar path for every Table IV algorithm.
+
+use posit_div::division::golden;
+use posit_div::posit::mask;
+use posit_div::prelude::*;
+use posit_div::testkit::{self, gen, Config, Rng};
+
+#[test]
+fn snippets_style_usage_compiles_and_is_accurate() {
+    // the acceptance-criterion one-liner
+    let q = P32::round_from(355.0) / P32::round_from(113.0);
+    assert!((q.to_f64() - 355.0 / 113.0).abs() < 1e-6);
+
+    // constants, comparisons, conversions
+    assert!(P16::MIN_POSITIVE < P16::ONE && P16::ONE < P16::MAXPOS);
+    let x: P16 = 2.5f64.round_into();
+    assert_eq!((x + P16::ONE).to_f64(), 3.5);
+    assert_eq!(P8::ONE.to_bits(), 0b0100_0000);
+}
+
+#[test]
+fn typed_roundtrip_via_f64_p8_p16_p32() {
+    // f64 holds every posit ≤ 32 exactly: to_f64 → round_from must be the
+    // identity on every non-NaR pattern.
+    let mut rng = Rng::seeded(0xF64);
+    for _ in 0..20_000 {
+        let p8 = P8::from_bits(rng.next_u64() & mask(8));
+        if !p8.is_nar() {
+            assert_eq!(P8::round_from(p8.to_f64()), p8, "{p8:?}");
+        }
+        let p16 = P16::from_bits(rng.next_u64() & mask(16));
+        if !p16.is_nar() {
+            assert_eq!(P16::round_from(p16.to_f64()), p16, "{p16:?}");
+        }
+        let p32 = P32::from_bits(rng.next_u64() & mask(32));
+        if !p32.is_nar() {
+            assert_eq!(P32::round_from(p32.to_f64()), p32, "{p32:?}");
+        }
+    }
+}
+
+#[test]
+fn typed_p64_bits_roundtrip_and_order() {
+    // P64's to_f64 is lossy (59 > 52 significand bits), so pin the
+    // bit-level API and the ordering instead.
+    let mut rng = Rng::seeded(0x64);
+    let mut bits: Vec<u64> = (0..1000).map(|_| rng.next_u64()).collect();
+    // posit order == sign-extended integer order of the pattern
+    bits.sort_by_key(|&b| b as i64);
+    let mut prev: Option<P64> = None;
+    for &b in &bits {
+        let p = P64::from_bits(b);
+        assert_eq!(p.to_bits(), b);
+        if let Some(q) = prev {
+            assert!(q <= p, "typed order must match pattern order");
+        }
+        prev = Some(p);
+    }
+    // and the f64 path is still a *rounding* (total order preserved)
+    assert!(P64::round_from(1.5) < P64::round_from(2.5));
+    assert_eq!(P64::round_from(1.0), P64::ONE);
+}
+
+#[test]
+fn typed_operators_match_runtime_posit_ops() {
+    // operators on P16 must be bit-identical to the runtime-width calls
+    testkit::forall_ns(
+        Config::cases(10_000).with_seed(0x0905),
+        |rng| (gen::real_posit(rng, 16), gen::real_posit(rng, 16)),
+        |&(a, b)| {
+            let (ta, tb) = (P16::from_posit(a).unwrap(), P16::from_posit(b).unwrap());
+            if (ta + tb).as_posit() != a.add(b) {
+                return Err("add mismatch".into());
+            }
+            if (ta - tb).as_posit() != a.sub(b) {
+                return Err("sub mismatch".into());
+            }
+            if (ta * tb).as_posit() != a.mul(b) {
+                return Err("mul mismatch".into());
+            }
+            if (-ta).as_posit() != a.neg() {
+                return Err("neg mismatch".into());
+            }
+            if !b.is_zero() {
+                let want = golden::divide(a, b).result;
+                if (ta / tb).as_posit() != want {
+                    return Err("div mismatch vs golden".into());
+                }
+            }
+            // ordering agrees with total_cmp
+            if (ta < tb) != a.total_cmp(b).is_lt() {
+                return Err("ordering mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn divide_batch_matches_scalar_and_golden_all_table_iv() {
+    // The acceptance criterion: divide_batch agrees element-for-element
+    // with golden-backed scalar divide across all Table IV variants.
+    let mut rng = Rng::seeded(0xBA7C);
+    for n in [8u32, 16, 32, 64] {
+        let xs: Vec<u64> = (0..300).map(|_| rng.next_u64() & mask(n)).collect();
+        let ds: Vec<u64> = (0..300).map(|_| rng.next_u64() & mask(n)).collect();
+        for alg in Algorithm::TABLE_IV {
+            let ctx = Divider::new(n, alg).expect("valid width");
+            let mut out = vec![0u64; xs.len()];
+            ctx.divide_batch(&xs, &ds, &mut out).expect("equal lengths");
+            for (i, ((&xb, &db), &got)) in
+                xs.iter().zip(ds.iter()).zip(out.iter()).enumerate()
+            {
+                let x = Posit::from_bits(n, xb);
+                let d = Posit::from_bits(n, db);
+                let scalar = ctx.divide(x, d).expect("width matches").result.to_bits();
+                let want = golden::divide(x, d).result.to_bits();
+                assert_eq!(got, scalar, "{} batch!=scalar n={n} i={i}", alg.label());
+                assert_eq!(got, want, "{} batch!=golden n={n} i={i}", alg.label());
+            }
+        }
+    }
+}
+
+#[test]
+fn divide_batch_parallel_matches_serial_all_table_iv() {
+    let mut rng = Rng::seeded(0x9A12);
+    let n = 16;
+    let xs: Vec<u64> = (0..777).map(|_| rng.next_u64() & mask(n)).collect();
+    let ds: Vec<u64> = (0..777).map(|_| rng.next_u64() & mask(n)).collect();
+    for alg in Algorithm::TABLE_IV {
+        let ctx = Divider::new(n, alg).expect("valid width");
+        let mut serial = vec![0u64; xs.len()];
+        let mut par = vec![0u64; xs.len()];
+        ctx.divide_batch(&xs, &ds, &mut serial).expect("equal lengths");
+        ctx.divide_batch_parallel(&xs, &ds, &mut par, 3).expect("equal lengths");
+        assert_eq!(serial, par, "{}", alg.label());
+    }
+}
+
+#[test]
+fn typed_errors_on_the_public_surface() {
+    assert_eq!(Divider::new(2, Algorithm::Nrd).err(), Some(PositError::WidthOutOfRange { n: 2 }));
+    let ctx = Divider::new(16, Algorithm::Nrd).unwrap();
+    assert_eq!(
+        ctx.divide(Posit::from_f64(32, 1.0), Posit::from_f64(32, 2.0)).err(),
+        Some(PositError::WidthMismatch { expected: 16, got: 32 })
+    );
+    let mut out = vec![0u64; 3];
+    assert_eq!(
+        ctx.divide_batch(&[1, 2], &[3, 4], &mut out).err(),
+        Some(PositError::BatchShapeMismatch { xs: 2, ds: 2, out: 3 })
+    );
+    // errors render for humans
+    let msg = PositError::WidthMismatch { expected: 16, got: 32 }.to_string();
+    assert!(msg.contains("Posit16") && msg.contains("Posit32"));
+}

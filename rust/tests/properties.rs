@@ -3,7 +3,7 @@
 //! correctness verified by exact rational comparison against
 //! pattern-space midpoints (independent of the encode path).
 
-use posit_div::division::{golden, Algorithm, DivEngine};
+use posit_div::division::{golden, Algorithm, Divider};
 use posit_div::posit::Posit;
 use posit_div::testkit::{self, gen, Config};
 
@@ -27,30 +27,36 @@ fn golden_is_correctly_rounded_p16_random() {
 
 #[test]
 fn division_identities() {
-    let engine = Algorithm::Srt4CsOfFr.engine();
+    // one pre-built context per width, like a real caller would hold
+    let ctxs: Vec<Divider> = [8u32, 16, 32]
+        .iter()
+        .map(|&n| Divider::new(n, Algorithm::DEFAULT).expect("valid width"))
+        .collect();
     testkit::forall(
         Config::cases(20_000),
         |rng| {
-            let n = *rng.choose(&[8u32, 16, 32]);
-            gen::division_operands(rng, n)
+            let i = *rng.choose(&[0usize, 1, 2]);
+            gen::division_operands(rng, [8u32, 16, 32][i])
         },
         gen::shrink_pair,
         |&(x, d)| {
             let n = x.width();
+            let ctx = ctxs.iter().find(|c| c.width() == n).expect("width covered");
+            let div = |a: Posit, b: Posit| ctx.divide(a, b).expect("width matches").result;
             // x / 1 = x
-            if engine.divide(x, Posit::one(n)).result != x {
+            if div(x, Posit::one(n)) != x {
                 return Err("x/1 != x".into());
             }
             // x / x = 1 for nonzero x
-            if !x.is_zero() && engine.divide(x, x).result != Posit::one(n) {
+            if !x.is_zero() && div(x, x) != Posit::one(n) {
                 return Err("x/x != 1".into());
             }
             // (-x)/d = -(x/d) — negation is exact in posits
-            let q = engine.divide(x, d).result;
-            if engine.divide(x.neg(), d).result != q.neg() {
+            let q = div(x, d);
+            if div(x.neg(), d) != q.neg() {
                 return Err("(-x)/d != -(x/d)".into());
             }
-            if engine.divide(x, d.neg()).result != q.neg() {
+            if div(x, d.neg()) != q.neg() {
                 return Err("x/(-d) != -(x/d)".into());
             }
             Ok(())
@@ -61,7 +67,7 @@ fn division_identities() {
 #[test]
 fn division_by_powers_of_two_is_exact_shift() {
     // x / 2^k only changes the scale: exact unless it saturates.
-    let engine = Algorithm::Srt2Cs.engine();
+    let ctx = Divider::new(16, Algorithm::Srt2Cs).expect("valid width");
     testkit::forall(
         Config::cases(5_000),
         |rng| {
@@ -73,7 +79,7 @@ fn division_by_powers_of_two_is_exact_shift() {
         |&(x, k)| {
             let n = 16;
             let d = Posit::from_f64(n, (k as f64).exp2());
-            let q = engine.divide(x, d).result;
+            let q = ctx.divide(x, d).expect("width matches").result;
             let want = golden::divide(x, d).result;
             if q != want {
                 return Err(format!("mismatch for 2^{k}"));
@@ -92,14 +98,15 @@ fn division_by_powers_of_two_is_exact_shift() {
 #[test]
 fn nar_and_zero_propagation_all_engines() {
     for alg in Algorithm::ALL {
-        let e = alg.engine();
         for n in [8u32, 16, 32] {
+            let ctx = Divider::new(n, alg).expect("valid width");
+            let div = |a: Posit, b: Posit| ctx.divide(a, b).expect("width matches").result;
             let one = Posit::one(n);
-            assert!(e.divide(one, Posit::zero(n)).result.is_nar(), "{alg:?}");
-            assert!(e.divide(Posit::nar(n), one).result.is_nar(), "{alg:?}");
-            assert!(e.divide(one, Posit::nar(n)).result.is_nar(), "{alg:?}");
-            assert!(e.divide(Posit::zero(n), one).result.is_zero(), "{alg:?}");
-            assert!(e.divide(Posit::zero(n), Posit::zero(n)).result.is_nar(), "{alg:?}");
+            assert!(div(one, Posit::zero(n)).is_nar(), "{alg:?}");
+            assert!(div(Posit::nar(n), one).is_nar(), "{alg:?}");
+            assert!(div(one, Posit::nar(n)).is_nar(), "{alg:?}");
+            assert!(div(Posit::zero(n), one).is_zero(), "{alg:?}");
+            assert!(div(Posit::zero(n), Posit::zero(n)).is_nar(), "{alg:?}");
         }
     }
 }
@@ -107,7 +114,7 @@ fn nar_and_zero_propagation_all_engines() {
 #[test]
 fn quotient_monotonicity_in_dividend() {
     // for fixed positive divisor, x1 <= x2 => x1/d <= x2/d (posit order)
-    let engine = Algorithm::Srt4CsOfFr.engine();
+    let ctx = Divider::new(16, Algorithm::DEFAULT).expect("valid width");
     testkit::forall_ns(Config::cases(10_000), |rng| {
         let d = gen::nonzero_posit(rng, 16).abs();
         let a = gen::real_posit(rng, 16);
@@ -115,8 +122,8 @@ fn quotient_monotonicity_in_dividend() {
         (a, b, d)
     }, |&(a, b, d)| {
         let (lo, hi) = if a.total_cmp(b).is_le() { (a, b) } else { (b, a) };
-        let qlo = engine.divide(lo, d).result;
-        let qhi = engine.divide(hi, d).result;
+        let qlo = ctx.divide(lo, d).expect("width matches").result;
+        let qhi = ctx.divide(hi, d).expect("width matches").result;
         if qlo.total_cmp(qhi).is_gt() {
             return Err(format!("monotonicity violated: {lo:?}/{d:?} > {hi:?}/{d:?}"));
         }
@@ -128,14 +135,14 @@ fn quotient_monotonicity_in_dividend() {
 fn multiplication_division_roundtrip_within_ulp() {
     // (x/d)*d is within 1 ulp of x when no saturation occurred (two
     // roundings) — a sanity link between the arithmetic and division.
-    let engine = Algorithm::Srt4CsOfFr.engine();
+    let ctx = Divider::new(32, Algorithm::DEFAULT).expect("valid width");
     testkit::forall_ns(Config::cases(10_000), |rng| {
         let x = gen::nonzero_posit(rng, 32);
         let d = gen::nonzero_posit(rng, 32);
         (x, d)
     }, |&(x, d)| {
         let n = 32;
-        let q = engine.divide(x, d).result;
+        let q = ctx.divide(x, d).expect("width matches").result;
         if q == Posit::maxpos(n) || q == Posit::maxpos(n).neg()
             || q == Posit::minpos(n) || q == Posit::minpos(n).neg()
         {

@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# Tier-1 verification plus lint gate. Run from anywhere in the repo.
+#
+#   scripts/verify.sh          # build + tests + clippy
+#   SKIP_CLIPPY=1 scripts/verify.sh   # tier-1 only (e.g. toolchains
+#                                     # without a clippy component)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== build every target (benches/examples compile too) =="
+cargo build --release --all-targets
+
+echo "== tier-1: cargo test -q =="
+cargo test -q
+
+if [ "${SKIP_CLIPPY:-0}" != "1" ]; then
+    if command -v cargo-clippy >/dev/null 2>&1 || cargo clippy --version >/dev/null 2>&1; then
+        echo "== clippy -D warnings (lib + bin: the redesigned surface) =="
+        cargo clippy --lib --bins -- -D warnings
+    else
+        echo "== clippy not installed; skipping lint gate =="
+    fi
+fi
+
+echo "verify.sh: all green"
