@@ -1,42 +1,9 @@
-//! Ablation: radix-4 digit set a=2 (ρ=2/3, the paper's choice) vs a=3
-//! (ρ=1, maximum redundancy). a=3 simplifies selection (wider containment
-//! bands) but requires generating the 3d divisor multiple — an extra adder
-//! on the multiple path. The derivation proves both feasible and shows
-//! the table sizes; the slice-cost model quantifies the trade.
-
-use posit_div::division::selection::derive_radix4_thresholds;
-use posit_div::hardware::components as c;
-use posit_div::hardware::Cost;
+//! Radix-4 digit-set ablation: a=2 (the paper's choice) vs a=3 —
+//! thin shim over [`posit_div::bench::suites`], where the suite body
+//! lives so the same code runs under `cargo bench --bench ablation_digitset`
+//! and `posit-div bench ablation_digitset` (flags: `--json`, `--baseline`,
+//! `--write-baseline`, `--quick`/`--full`, `--threshold`, `--advisory`).
 
 fn main() {
-    for a in [2i64, 3] {
-        match derive_radix4_thresholds(a) {
-            Some(rows) => {
-                println!("a={a} (ρ={a}/3): feasible; thresholds per interval = {}", rows[0].len());
-                for (i, row) in rows.iter().enumerate() {
-                    println!("  d∈[{}/16,{}/16): {row:?} (1/16 units)", i + 8, i + 9);
-                }
-            }
-            None => println!("a={a}: infeasible at 4-bit estimate granularity"),
-        }
-    }
-
-    // Hardware trade at the iteration slice (w = 34-bit Posit32 datapath):
-    let w = 34;
-    let a2_slice = c::est_adder(7)
-        .then(c::sel::radix4_table())
-        .then(c::mux4(w))
-        .then(c::csa(w));
-    // a=3: one fewer comparator level in selection, but a 3d generator
-    // (d + 2d via an extra CSA level) and a wider multiple mux.
-    let a3_slice = c::est_adder(7)
-        .then(Cost::new(120.0, 3.0)) // simpler selection PLA
-        .then(c::csa(w)) // 3d = d + 2d
-        .then(c::mux4(w).then(c::mux2(w))) // 7-way multiple select
-        .then(c::csa(w));
-    println!("\nslice cost @w={w}: a=2 area {:.0} GE delay {:.0}τ | a=3 area {:.0} GE delay {:.0}τ",
-        a2_slice.area, a2_slice.delay, a3_slice.area, a3_slice.delay);
-    println!("-> a=2 wins on the slice ({}τ shallower, {:.0} GE smaller): the paper's choice",
-        a3_slice.delay - a2_slice.delay, a3_slice.area - a2_slice.area);
-    assert!(a2_slice.delay < a3_slice.delay && a2_slice.area < a3_slice.area);
+    posit_div::bench::harness::bench_main("ablation_digitset");
 }

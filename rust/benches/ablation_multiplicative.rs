@@ -1,60 +1,9 @@
-//! Ablation C2: digit recurrence vs multiplicative (Newton–Raphson)
-//! division — the [16] energy-efficiency claim the paper builds on, from
-//! the hardware model, plus measured software throughput.
-
-use posit_div::bench::{bench_batched, black_box, Config, Runner};
-use posit_div::division::{Algorithm, DivEngine, Divider};
-use posit_div::hardware::{combinational, pipelined, TSMC28};
-use posit_div::posit::mask;
-use posit_div::testkit::Rng;
+//! Digit recurrence vs multiplicative (Newton-Raphson) division —
+//! thin shim over [`posit_div::bench::suites`], where the suite body
+//! lives so the same code runs under `cargo bench --bench ablation_multiplicative`
+//! and `posit-div bench ablation_multiplicative` (flags: `--json`, `--baseline`,
+//! `--write-baseline`, `--quick`/`--full`, `--threshold`, `--advisory`).
 
 fn main() {
-    println!("digit recurrence (SRT r4 CS OF FR) vs multiplicative (Newton-Raphson)\n");
-    println!(
-        "{:<8} {:<14} {:>12} {:>10} {:>12} {:>12}",
-        "format", "design", "area[µm²]", "delay[ns]", "power[mW]", "energy[pJ]"
-    );
-    for n in [16u32, 32, 64] {
-        for (label, alg) in
-            [("SRT r4", Algorithm::Srt4CsOfFr), ("Newton", Algorithm::Newton)]
-        {
-            let c = combinational(alg, n, &TSMC28);
-            println!(
-                "Posit{:<3} {:<14} {:>12.0} {:>10.2} {:>12.3} {:>12.2}",
-                n, format!("{label} comb"), c.area_um2, c.delay_ns, c.power_mw, c.energy_pj
-            );
-            let p = pipelined(alg, n, &TSMC28);
-            println!(
-                "Posit{:<3} {:<14} {:>12.0} {:>10.2} {:>12.3} {:>12.2}{}",
-                n,
-                format!("{label} pipe"),
-                p.area_um2,
-                p.delay_ns,
-                p.power_mw,
-                p.energy_pj,
-                if p.timing_met { "" } else { " (!timing)" }
-            );
-        }
-    }
-
-    let mut runner = Runner::new("software throughput");
-    let mut rng = Rng::seeded(16);
-    for n in [16u32, 32, 64] {
-        let xs: Vec<u64> = (0..256).map(|_| rng.next_u64() & mask(n)).collect();
-        let ds: Vec<u64> = (0..256).map(|_| (rng.next_u64() & mask(n)) | 1).collect();
-        let mut out = vec![0u64; xs.len()];
-        for alg in [Algorithm::Srt4CsOfFr, Algorithm::Newton] {
-            let ctx = Divider::new(n, alg).expect("width");
-            runner.add(bench_batched(
-                &format!("Posit{n} {}", ctx.name()),
-                Config::default(),
-                xs.len() as u64,
-                || {
-                    ctx.divide_batch(&xs, &ds, &mut out).expect("equal lengths");
-                    black_box(&out);
-                },
-            ));
-        }
-    }
-    runner.finish();
+    posit_div::bench::harness::bench_main("ablation_multiplicative");
 }

@@ -1,38 +1,9 @@
-//! Bench: the §IV comparison against [14] (ASAP'23 two's-complement NRD):
-//! hardware-model deltas plus measured software-engine latency deltas
-//! (the extra iteration of [14] is real and measurable).
-
-use posit_div::bench::{bench_batched, black_box, Config};
-use posit_div::division::{Algorithm, Divider};
-use posit_div::hardware::{report, TSMC28};
-use posit_div::posit::mask;
-use posit_div::testkit::Rng;
+//! §IV comparison against the ASAP'23 two's-complement NRD —
+//! thin shim over [`posit_div::bench::suites`], where the suite body
+//! lives so the same code runs under `cargo bench --bench comparison_asap23`
+//! and `posit-div bench comparison_asap23` (flags: `--json`, `--baseline`,
+//! `--write-baseline`, `--quick`/`--full`, `--threshold`, `--advisory`).
 
 fn main() {
-    print!("{}", report::render_asap23(&TSMC28));
-    println!("\npaper reference points: NRD ≈ -7% area, -4.2%..-21.5% delay;");
-    println!("SRT-CS delay -40.6/-62.1/-75.6%, area +16.8/13.8/12%, energy -50.2/-70.9/-81.4%\n");
-
-    let mut rng = Rng::seeded(14);
-    for n in [16u32, 32, 64] {
-        let xs: Vec<u64> = (0..256).map(|_| rng.next_u64() & mask(n)).collect();
-        let ds: Vec<u64> = (0..256).map(|_| (rng.next_u64() & mask(n)) | 1).collect();
-        let time = |alg: Algorithm| {
-            let ctx = Divider::new(n, alg).expect("width");
-            let mut out = vec![0u64; xs.len()];
-            bench_batched(alg.label(), Config::default(), xs.len() as u64, || {
-                ctx.divide_batch(&xs, &ds, &mut out).expect("equal lengths");
-                black_box(&out);
-            })
-            .per_op
-        };
-        let ours = time(Algorithm::Nrd);
-        let theirs = time(Algorithm::NrdAsap23);
-        println!(
-            "Posit{n}: NRD {:?}/div vs NRD[14] {:?}/div ({:+.1}% software latency)",
-            ours,
-            theirs,
-            (ours.as_secs_f64() / theirs.as_secs_f64() - 1.0) * 100.0
-        );
-    }
+    posit_div::bench::harness::bench_main("comparison_asap23");
 }

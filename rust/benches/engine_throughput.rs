@@ -1,57 +1,9 @@
 //! Measured software throughput of every division engine at every format —
-//! the L3 perf baseline tracked in EXPERIMENTS.md §Perf.
-//!
-//! Two paths per (format, algorithm), both through a pre-built zero-alloc
-//! [`Divider`] (no per-call `Box<dyn DivEngine>` on the hot loop):
-//!   * scalar: `Divider::divide` per pair,
-//!   * batch:  `Divider::divide_batch` over the whole working set — the
-//!     exact loop the coordinator's native backend runs.
-
-use posit_div::bench::{bench_batched, black_box, Config, Runner};
-use posit_div::division::{Algorithm, DivEngine, Divider};
-use posit_div::posit::{mask, Posit};
-use posit_div::testkit::Rng;
+//! thin shim over [`posit_div::bench::suites`], where the suite body
+//! lives so the same code runs under `cargo bench --bench engine_throughput`
+//! and `posit-div bench engine_throughput` (flags: `--json`, `--baseline`,
+//! `--write-baseline`, `--quick`/`--full`, `--threshold`, `--advisory`).
 
 fn main() {
-    let mut runner = Runner::new("engine throughput (div/s), 256-pair working set");
-    let mut rng = Rng::seeded(0xB21C);
-    for n in [8u32, 16, 32, 64] {
-        let pairs: Vec<(Posit, Posit)> = (0..256)
-            .map(|_| {
-                (
-                    Posit::from_bits(n, rng.next_u64() & mask(n)),
-                    Posit::from_bits(n, (rng.next_u64() & mask(n)) | 1),
-                )
-            })
-            .collect();
-        let xs: Vec<u64> = pairs.iter().map(|p| p.0.to_bits()).collect();
-        let ds: Vec<u64> = pairs.iter().map(|p| p.1.to_bits()).collect();
-        let mut out = vec![0u64; xs.len()];
-        for alg in Algorithm::ALL {
-            if alg.radix() == Some(4) && n < 8 {
-                continue;
-            }
-            let ctx = Divider::new(n, alg).expect("standard width");
-            runner.add(bench_batched(
-                &format!("Posit{n:<2} {} scalar", ctx.name()),
-                Config::default(),
-                pairs.len() as u64,
-                || {
-                    for &(x, d) in &pairs {
-                        black_box(ctx.divide(x, d).expect("width matches").result);
-                    }
-                },
-            ));
-            runner.add(bench_batched(
-                &format!("Posit{n:<2} {} batch", ctx.name()),
-                Config::default(),
-                xs.len() as u64,
-                || {
-                    ctx.divide_batch(&xs, &ds, &mut out).expect("equal lengths");
-                    black_box(&out);
-                },
-            ));
-        }
-    }
-    runner.finish();
+    posit_div::bench::harness::bench_main("engine_throughput");
 }

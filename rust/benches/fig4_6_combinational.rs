@@ -1,15 +1,9 @@
-//! Bench: Figs. 4–6 — combinational synthesis sweeps (area / delay /
-//! power / energy) for all Table IV designs at Posit16/32/64, from the
-//! 28 nm unit-gate model.
-
-use posit_div::hardware::{report, Mode, TSMC28};
+//! Figs. 4-6: combinational synthesis sweeps for all Table IV designs —
+//! thin shim over [`posit_div::bench::suites`], where the suite body
+//! lives so the same code runs under `cargo bench --bench fig4_6_combinational`
+//! and `posit-div bench fig4_6_combinational` (flags: `--json`, `--baseline`,
+//! `--write-baseline`, `--quick`/`--full`, `--threshold`, `--advisory`).
 
 fn main() {
-    for n in report::FORMATS {
-        println!("{}", report::render_figure(n, Mode::Combinational, &TSMC28));
-    }
-    println!("CSV:\n");
-    for n in report::FORMATS {
-        print!("{}", report::sweep_csv(n, Mode::Combinational, &TSMC28));
-    }
+    posit_div::bench::harness::bench_main("fig4_6_combinational");
 }

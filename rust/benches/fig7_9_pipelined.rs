@@ -1,26 +1,9 @@
-//! Bench: Figs. 7–9 — pipelined synthesis sweeps at the paper's 1.5 GHz
-//! target for all Table IV designs at Posit16/32/64.
-
-use posit_div::hardware::{report, synth, Mode, TSMC28};
-use posit_div::division::Algorithm;
+//! Figs. 7-9: pipelined synthesis sweeps at the paper's 1.5 GHz target —
+//! thin shim over [`posit_div::bench::suites`], where the suite body
+//! lives so the same code runs under `cargo bench --bench fig7_9_pipelined`
+//! and `posit-div bench fig7_9_pipelined` (flags: `--json`, `--baseline`,
+//! `--write-baseline`, `--quick`/`--full`, `--threshold`, `--advisory`).
 
 fn main() {
-    for n in report::FORMATS {
-        println!("{}", report::render_figure(n, Mode::Pipelined, &TSMC28));
-    }
-    // critical-path attribution (the §IV observation)
-    println!("critical stages @1.5GHz:");
-    for n in report::FORMATS {
-        for alg in Algorithm::TABLE_IV {
-            let r = synth::pipelined(alg, n, &TSMC28);
-            println!(
-                "  Posit{:<3} {:<18} critical={:<12} cycle={:.3}ns timing_met={}",
-                n, alg.label(), r.critical_stage, r.delay_ns, r.timing_met
-            );
-        }
-    }
-    println!("\nCSV:\n");
-    for n in report::FORMATS {
-        print!("{}", report::sweep_csv(n, Mode::Pipelined, &TSMC28));
-    }
+    posit_div::bench::harness::bench_main("fig7_9_pipelined");
 }

@@ -1,55 +1,9 @@
-//! End-to-end service bench: coordinator throughput across batch sizes and
-//! backends (native engines vs the AOT PJRT graph). PJRT rows need
-//! `make artifacts` and a build with the `xla` feature (skipped otherwise).
-
-use std::time::Duration;
-
-use posit_div::coordinator::{Backend, BatchPolicy, DivisionService, ServiceConfig};
-use posit_div::division::Algorithm;
-use posit_div::workload::{self, Workload};
-
-const REQUESTS: usize = 30_000;
-
-fn run(n: u32, backend: Backend, label: &str, batch: usize) {
-    let svc = match DivisionService::start(ServiceConfig {
-        n,
-        backend,
-        policy: BatchPolicy { max_batch: batch, max_wait: Duration::from_micros(200) },
-    }) {
-        Ok(s) => s,
-        Err(e) => {
-            println!("{label:<28} batch={batch:<5} SKIP ({e})");
-            return;
-        }
-    };
-    let client = svc.client();
-    let mut wl = workload::Uniform::new(n, batch as u64);
-    let pairs = workload::take(&mut wl, REQUESTS);
-    let t0 = std::time::Instant::now();
-    let _ = client.divide_batch(&pairs).expect("service running");
-    let wall = t0.elapsed();
-    let m = svc.metrics();
-    println!(
-        "{label:<28} batch={batch:<5} {:>10.0} div/s   batch_lat {}",
-        REQUESTS as f64 / wall.as_secs_f64(),
-        m.batch_latency.summary()
-    );
-    svc.shutdown();
-}
+//! End-to-end coordinator throughput across batch sizes and backends —
+//! thin shim over [`posit_div::bench::suites`], where the suite body
+//! lives so the same code runs under `cargo bench --bench service_e2e`
+//! and `posit-div bench service_e2e` (flags: `--json`, `--baseline`,
+//! `--write-baseline`, `--quick`/`--full`, `--threshold`, `--advisory`).
 
 fn main() {
-    for n in [16u32, 32] {
-        println!("\n=== Posit{n}, {REQUESTS} requests ===");
-        for batch in [64usize, 256, 1024] {
-            run(
-                n,
-                Backend::Native { alg: Algorithm::DEFAULT, threads: 4 },
-                "native srt4 (4 threads)",
-                batch,
-            );
-        }
-        for batch in [256usize, 1024] {
-            run(n, Backend::Pjrt { artifacts_dir: "artifacts".into() }, "pjrt jax/pallas", batch);
-        }
-    }
+    posit_div::bench::harness::bench_main("service_e2e");
 }

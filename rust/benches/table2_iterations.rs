@@ -1,60 +1,9 @@
-//! Bench: Table II — iteration counts and pipelined latency, *measured*
-//! from the executing engines (not just the formula), plus wall-clock
-//! division rates per radix.
-
-use posit_div::bench::{bench_batched, black_box, Config, Runner};
-use posit_div::division::{iterations, latency_cycles, Algorithm, DivEngine, Divider};
-use posit_div::posit::{mask, Posit};
-use posit_div::testkit::Rng;
+//! Table II iteration/latency checks plus per-radix division rates —
+//! thin shim over [`posit_div::bench::suites`], where the suite body
+//! lives so the same code runs under `cargo bench --bench table2_iterations`
+//! and `posit-div bench table2_iterations` (flags: `--json`, `--baseline`,
+//! `--write-baseline`, `--quick`/`--full`, `--threshold`, `--advisory`).
 
 fn main() {
-    println!("Table II — iterations and latency (measured from engines)");
-    println!(
-        "{:<8} {:>9} {:>11} {:>9} {:>11}",
-        "format", "r2 iters", "r2 latency", "r4 iters", "r4 latency"
-    );
-    for n in [16u32, 32, 64] {
-        let mut rng = Rng::seeded(n as u64);
-        let x = Posit::from_bits(n, rng.next_u64() & mask(n));
-        let d = Posit::from_bits(n, (rng.next_u64() & mask(n)) | 1);
-        let (x, d) = (x.abs().next_up(), d.abs().next_up()); // avoid specials
-        let ctx_r2 = Divider::new(n, Algorithm::Srt2Cs).expect("width");
-        let ctx_r4 = Divider::new(n, Algorithm::Srt4Cs).expect("width");
-        let r2 = ctx_r2.divide(x, d).expect("width matches");
-        let r4 = ctx_r4.divide(x, d).expect("width matches");
-        assert_eq!(r2.iterations, iterations(n, 2));
-        assert_eq!(r4.iterations, iterations(n, 4));
-        assert_eq!(r2.iterations, ctx_r2.iterations()); // cached in the context
-        assert_eq!(r4.iterations, ctx_r4.iterations());
-        assert_eq!(r2.cycles, latency_cycles(n, Algorithm::Srt2Cs));
-        assert_eq!(r4.cycles, latency_cycles(n, Algorithm::Srt4Cs));
-        println!(
-            "Posit{:<4} {:>8} {:>11} {:>9} {:>11}",
-            n, r2.iterations, r2.cycles, r4.iterations, r4.cycles
-        );
-    }
-
-    // Wall-clock counterpart: the software engines' division rate tracks
-    // the iteration count.
-    let mut runner = Runner::new("software division rate (iterations dominate)");
-    let mut rng = Rng::seeded(42);
-    for n in [16u32, 32, 64] {
-        for alg in [Algorithm::Srt2Cs, Algorithm::Srt4Cs] {
-            let ctx = Divider::new(n, alg).expect("width");
-            let xs: Vec<u64> = (0..256).map(|_| rng.next_u64() & mask(n)).collect();
-            let ds: Vec<u64> = (0..256).map(|_| (rng.next_u64() & mask(n)) | 1).collect();
-            let mut out = vec![0u64; xs.len()];
-            let m = bench_batched(
-                &format!("Posit{n} {}", ctx.name()),
-                Config::default(),
-                xs.len() as u64,
-                || {
-                    ctx.divide_batch(&xs, &ds, &mut out).expect("equal lengths");
-                    black_box(&out);
-                },
-            );
-            runner.add(m);
-        }
-    }
-    runner.finish();
+    posit_div::bench::harness::bench_main("table2_iterations");
 }

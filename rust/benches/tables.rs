@@ -1,36 +1,9 @@
-//! Bench target covering Tables I and III: live recomputation of the
-//! scaling-factor table and the termination/rounding worked examples.
-
-use posit_div::division::{scaling, Algorithm, Divider};
-use posit_div::posit::Posit;
+//! Tables I and III: scaling factors and Posit10 worked examples —
+//! thin shim over [`posit_div::bench::suites`], where the suite body
+//! lives so the same code runs under `cargo bench --bench tables`
+//! and `posit-div bench tables` (flags: `--json`, `--baseline`,
+//! `--write-baseline`, `--quick`/`--full`, `--threshold`, `--advisory`).
 
 fn main() {
-    println!("Table I (scaling factors, radix-4 a=2):");
-    for idx in 0..8 {
-        let (s1, s2) = scaling::COMPONENTS[idx];
-        println!(
-            "  d=0.1{:03b}xxx  M={:<6} components: 1 + 1/{}{}",
-            idx,
-            scaling::M8[idx] as f64 / 8.0,
-            1u32 << s1,
-            if s2 != 0 { format!(" + 1/{}", 1u32 << s2) } else { String::new() }
-        );
-    }
-
-    println!("\nTable III (Posit10 termination/rounding examples):");
-    // Posit10 — the runtime-n Divider covers the paper's odd widths too.
-    let ctx = Divider::new(10, Algorithm::Srt4CsOfFr).expect("width");
-    let x = Posit::from_bits(10, 0b0011010111);
-    for (d_bits, expect) in [(0b0001001100u64, 0b0110011111u64), (0b0000100110, 0b0111010000)] {
-        let d = Posit::from_bits(10, d_bits);
-        let q = ctx.divide(x, d).expect("width matches").result;
-        println!(
-            "  X=0011010111 D={:010b} -> Q={:010b} (paper {:010b}) {}",
-            d_bits,
-            q.to_bits(),
-            expect,
-            if q.to_bits() == expect { "MATCH" } else { "MISMATCH" }
-        );
-        assert_eq!(q.to_bits(), expect);
-    }
+    posit_div::bench::harness::bench_main("tables");
 }

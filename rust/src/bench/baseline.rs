@@ -1,0 +1,194 @@
+//! Baseline comparison and the regression gate.
+//!
+//! A baseline is just a committed [`Report`] (conventionally
+//! `BENCH_<suite>.json` at the repo root). Comparison joins rows by
+//! measurement name, computes the throughput delta for every common row,
+//! and fails any row whose ops/sec dropped more than the threshold. Rows
+//! present on only one side are reported but never fail the gate — suite
+//! row sets may grow across PRs without invalidating old baselines.
+
+use super::report::Report;
+
+/// One compared row.
+#[derive(Clone, Debug)]
+pub struct RowDelta {
+    pub name: String,
+    pub base_ops: f64,
+    pub new_ops: f64,
+    /// Throughput change in percent (negative = slower than baseline).
+    pub delta_pct: f64,
+    pub regressed: bool,
+}
+
+/// Result of comparing a fresh report against a baseline.
+#[derive(Clone, Debug)]
+pub struct Comparison {
+    pub threshold_pct: f64,
+    /// Rows present in both reports, in the new report's order.
+    pub rows: Vec<RowDelta>,
+    /// Row names only in the new report.
+    pub added: Vec<String>,
+    /// Row names only in the baseline.
+    pub removed: Vec<String>,
+    /// The baseline was recorded without a trustworthy measurement
+    /// environment; callers should downgrade the gate to advisory.
+    pub baseline_provisional: bool,
+}
+
+impl Comparison {
+    /// Join `new` against `baseline` with a regression threshold in
+    /// percent (e.g. 15.0 fails rows that lost >15% ops/sec).
+    pub fn compare(baseline: &Report, new: &Report, threshold_pct: f64) -> Comparison {
+        let mut rows = Vec::new();
+        let mut added = Vec::new();
+        for e in &new.measurements {
+            match baseline.measurements.iter().find(|b| b.name == e.name) {
+                Some(b) => {
+                    let delta_pct = (e.ops_per_sec / b.ops_per_sec - 1.0) * 100.0;
+                    rows.push(RowDelta {
+                        name: e.name.clone(),
+                        base_ops: b.ops_per_sec,
+                        new_ops: e.ops_per_sec,
+                        delta_pct,
+                        regressed: delta_pct < -threshold_pct,
+                    });
+                }
+                None => added.push(e.name.clone()),
+            }
+        }
+        let removed = baseline
+            .measurements
+            .iter()
+            .filter(|b| !new.measurements.iter().any(|e| e.name == b.name))
+            .map(|b| b.name.clone())
+            .collect();
+        Comparison {
+            threshold_pct,
+            rows,
+            added,
+            removed,
+            baseline_provisional: baseline.provisional,
+        }
+    }
+
+    pub fn regressions(&self) -> usize {
+        self.rows.iter().filter(|r| r.regressed).count()
+    }
+
+    /// True iff no compared row regressed past the threshold.
+    pub fn passed(&self) -> bool {
+        self.regressions() == 0
+    }
+
+    /// Render the per-row delta table plus the verdict line.
+    pub fn render(&self, baseline_label: &str) -> String {
+        let mut out = format!(
+            "\n== baseline comparison vs {} (fail below -{:.1}%) ==\n",
+            baseline_label, self.threshold_pct
+        );
+        out.push_str(&format!(
+            "{:<44} {:>16} {:>16} {:>9}\n",
+            "row", "baseline op/s", "current op/s", "delta"
+        ));
+        for r in &self.rows {
+            out.push_str(&format!(
+                "{:<44} {:>16.0} {:>16.0} {:>8.1}%{}\n",
+                r.name,
+                r.base_ops,
+                r.new_ops,
+                r.delta_pct,
+                if r.regressed { "  REGRESSION" } else { "" }
+            ));
+        }
+        if !self.added.is_empty() {
+            out.push_str(&format!("new rows without a baseline: {}\n", self.added.len()));
+        }
+        if !self.removed.is_empty() {
+            out.push_str(&format!(
+                "baseline rows missing from this run: {}\n",
+                self.removed.len()
+            ));
+        }
+        if self.baseline_provisional {
+            out.push_str("note: baseline is PROVISIONAL — gate is advisory until refreshed\n");
+        }
+        out.push_str(&format!(
+            "verdict: {} ({} regression(s) in {} compared row(s))\n",
+            if self.passed() { "PASS" } else { "FAIL" },
+            self.regressions(),
+            self.rows.len()
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::report::Entry;
+    use crate::bench::{Config, Measurement, Profile};
+    use std::time::Duration;
+
+    fn row(name: &str, ops: f64) -> Entry {
+        let m = Measurement {
+            name: name.into(),
+            per_op: Duration::from_secs_f64(1.0 / ops),
+            ops_per_sec: ops,
+            samples: 3,
+            iters_per_sample: 10,
+        };
+        Entry::from_measurement(&m)
+    }
+
+    fn report(rows: Vec<Entry>) -> Report {
+        Report::new("t", Profile::Quick, Config::quick(), rows)
+    }
+
+    #[test]
+    fn within_threshold_passes() {
+        let base = report(vec![row("a", 1000.0), row("b", 2000.0)]);
+        let new = report(vec![row("a", 900.0), row("b", 2400.0)]);
+        let cmp = Comparison::compare(&base, &new, 15.0);
+        assert!(cmp.passed());
+        assert_eq!(cmp.rows.len(), 2);
+        assert!((cmp.rows[0].delta_pct - -10.0).abs() < 1e-9);
+        assert!((cmp.rows[1].delta_pct - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn drop_past_threshold_fails() {
+        let base = report(vec![row("a", 1000.0)]);
+        let new = report(vec![row("a", 800.0)]);
+        let cmp = Comparison::compare(&base, &new, 15.0);
+        assert_eq!(cmp.regressions(), 1);
+        assert!(!cmp.passed());
+        assert!(cmp.render("BENCH_t.json").contains("REGRESSION"));
+        assert!(cmp.render("BENCH_t.json").contains("FAIL"));
+        // a looser threshold tolerates the same drop
+        assert!(Comparison::compare(&base, &new, 25.0).passed());
+    }
+
+    #[test]
+    fn added_and_removed_rows_never_fail() {
+        let base = report(vec![row("old", 1000.0), row("both", 1000.0)]);
+        let new = report(vec![row("both", 1000.0), row("fresh", 50.0)]);
+        let cmp = Comparison::compare(&base, &new, 15.0);
+        assert!(cmp.passed());
+        assert_eq!(cmp.added, vec!["fresh".to_string()]);
+        assert_eq!(cmp.removed, vec!["old".to_string()]);
+        let text = cmp.render("BENCH_t.json");
+        assert!(text.contains("new rows"));
+        assert!(text.contains("missing from this run"));
+    }
+
+    #[test]
+    fn provisional_baseline_is_flagged() {
+        let mut base = report(vec![row("a", 1000.0)]);
+        base.provisional = true;
+        let new = report(vec![row("a", 100.0)]);
+        let cmp = Comparison::compare(&base, &new, 15.0);
+        assert!(cmp.baseline_provisional);
+        assert!(!cmp.passed()); // still reports FAIL; the gate decides advisory
+        assert!(cmp.render("x").contains("PROVISIONAL"));
+    }
+}

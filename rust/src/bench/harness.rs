@@ -1,0 +1,269 @@
+//! Shared entry point for every `harness = false` bench target and for
+//! the `posit-div bench` subcommand: flag parsing, profile selection,
+//! structured-report emission, baseline comparison and the regression
+//! gate. One suite body in [`super::suites`] therefore runs identically
+//! under `cargo bench --bench <suite> -- <flags>` and
+//! `posit-div bench <suite> <flags>`.
+//!
+//! Flags:
+//!
+//! * `--profile quick|full` — timing profile (default: `$POSIT_BENCH_PROFILE`,
+//!   then `full`). `--quick` / `--full` are shorthands. Profiles change
+//!   only timing budgets, never the row set, so any profile can be
+//!   compared against any baseline.
+//! * `--json <path>` — also write the structured report to `<path>`.
+//! * `--baseline <path>` — compare against this report instead of the
+//!   default `BENCH_<suite>.json`.
+//! * `--write-baseline` — record the run as the new baseline and exit.
+//! * `--threshold <pct>` — regression threshold on ops/sec (default 15,
+//!   or `$POSIT_BENCH_THRESHOLD`).
+//! * `--advisory` — print the verdict but always exit 0 (also
+//!   `$POSIT_BENCH_ADVISORY=1`; forced when the baseline is provisional).
+
+use std::path::{Path, PathBuf};
+
+use super::baseline::Comparison;
+use super::report::Report;
+use super::{suites, Config, Profile, Runner};
+use crate::cli::Args;
+
+/// Parsed bench-harness options for one suite run.
+pub struct BenchCli {
+    pub suite: &'static str,
+    pub profile: Profile,
+    /// Timing configuration derived from the profile.
+    pub cfg: Config,
+    json_out: Option<PathBuf>,
+    baseline: Option<PathBuf>,
+    write_baseline: bool,
+    threshold_pct: f64,
+    advisory: bool,
+}
+
+fn env_flag(name: &str) -> bool {
+    std::env::var(name).is_ok_and(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+}
+
+impl BenchCli {
+    pub fn from_args(suite: &'static str, args: &Args) -> BenchCli {
+        let profile = if args.has("full") {
+            Profile::Full
+        } else if args.has("quick") {
+            Profile::Quick
+        } else if let Some(p) = args.flag("profile") {
+            Profile::parse(p).unwrap_or_else(|| {
+                eprintln!("invalid --profile {p:?} (expected quick|full)");
+                std::process::exit(2);
+            })
+        } else {
+            Profile::from_env().unwrap_or(Profile::Full)
+        };
+        let default_threshold = std::env::var("POSIT_BENCH_THRESHOLD")
+            .ok()
+            .and_then(|v| v.parse::<f64>().ok())
+            .unwrap_or(15.0);
+        BenchCli {
+            suite,
+            profile,
+            cfg: profile.config(),
+            json_out: args.flag("json").map(PathBuf::from),
+            baseline: args.flag("baseline").map(PathBuf::from),
+            write_baseline: args.has("write-baseline"),
+            threshold_pct: args.get("threshold", default_threshold),
+            advisory: args.has("advisory") || env_flag("POSIT_BENCH_ADVISORY"),
+        }
+    }
+
+    /// Where the baseline for this suite lives. Without `--baseline`,
+    /// `BENCH_<suite>.json` is resolved against the enclosing cargo
+    /// project, not the bare cwd — `cargo bench`/`cargo run` preserve the
+    /// invoker's directory, and a subdirectory run must neither skip the
+    /// gate nor write a stray baseline.
+    pub fn baseline_path(&self) -> PathBuf {
+        if let Some(explicit) = &self.baseline {
+            return explicit.clone();
+        }
+        let file = format!("BENCH_{}.json", self.suite);
+        let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+        loop {
+            if dir.join(&file).exists() || dir.join("Cargo.toml").exists() {
+                return dir.join(file);
+            }
+            if !dir.pop() {
+                return PathBuf::from(file);
+            }
+        }
+    }
+
+    /// Post-run bookkeeping: JSON emission, baseline write/compare, gate.
+    /// Returns the process exit code.
+    pub fn finish(&self, runner: &Runner) -> i32 {
+        let report = Report::new(self.suite, self.profile, self.cfg, runner.entries().to_vec());
+        // Fail at the source, not when a later run trips over the saved
+        // file: names are the baseline join key, so a duplicate here
+        // would poison every subsequent load of this report.
+        let mut seen = std::collections::HashSet::new();
+        if let Some(dup) = report.measurements.iter().find(|e| !seen.insert(e.name.as_str())) {
+            eprintln!(
+                "suite {:?} registered duplicate row name {:?} — fix the suite",
+                self.suite, dup.name
+            );
+            return 1;
+        }
+        if let Some(path) = &self.json_out {
+            match report.save(path) {
+                Ok(()) => println!("report written: {}", path.display()),
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 1;
+                }
+            }
+        }
+        let path = self.baseline_path();
+        if self.write_baseline {
+            return match report.save(&path) {
+                Ok(()) => {
+                    println!("baseline written: {}", path.display());
+                    0
+                }
+                Err(e) => {
+                    eprintln!("{e}");
+                    1
+                }
+            };
+        }
+        if !path.exists() {
+            println!(
+                "no baseline at {} (record one with --write-baseline)",
+                path.display()
+            );
+            return 0;
+        }
+        let base = match Report::load(&path) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("baseline invalid: {e}");
+                return 1;
+            }
+        };
+        if base.suite != report.suite {
+            eprintln!(
+                "baseline {} is for suite {:?}, not {:?}",
+                path.display(),
+                base.suite,
+                report.suite
+            );
+            return 1;
+        }
+        let cmp = Comparison::compare(&base, &report, self.threshold_pct);
+        print!("{}", cmp.render(&path.display().to_string()));
+        if cmp.passed() {
+            0
+        } else if self.advisory || cmp.baseline_provisional {
+            println!("regression gate: advisory — not failing this run");
+            0
+        } else {
+            1
+        }
+    }
+}
+
+/// Run one named suite with flags from `args`; returns the exit code.
+/// Shared by the `bench` subcommand and [`bench_main`].
+pub fn run_suite(name: &str, args: &Args) -> i32 {
+    let Some(suite) = suites::find(name) else {
+        eprintln!("unknown bench suite {name:?}\n{}", suites::render_list());
+        return 2;
+    };
+    let cli = BenchCli::from_args(suite.name, args);
+    let mut runner = Runner::new(suite.title);
+    (suite.run)(&cli, &mut runner);
+    runner.finish();
+    cli.finish(&runner)
+}
+
+/// `main` for the thin `rust/benches/*.rs` shims: parse the process
+/// arguments (dropping the `--bench` marker `cargo bench` appends), run
+/// the suite, exit with the gate's code.
+pub fn bench_main(suite: &str) -> ! {
+    let args = Args::parse_from(std::env::args().skip(1).filter(|a| a != "--bench"));
+    std::process::exit(run_suite(suite, &args));
+}
+
+/// Validate a report file on disk; returns the exit code. Used by the
+/// `posit-div bench validate <path>` schema gate in CI.
+pub fn validate_report(path: &Path) -> i32 {
+    match Report::load(path) {
+        Ok(rep) => {
+            println!(
+                "{}: valid {} report — suite {}, profile {}, rev {}, {} measurement(s){}",
+                path.display(),
+                super::report::SCHEMA,
+                rep.suite,
+                rep.profile,
+                rep.git_rev,
+                rep.measurements.len(),
+                if rep.provisional { " (provisional)" } else { "" }
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("schema-invalid report: {e}");
+            1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn profile_flag_resolution() {
+        let c = BenchCli::from_args("t", &args("--quick"));
+        assert_eq!(c.profile, Profile::Quick);
+        let c = BenchCli::from_args("t", &args("--profile quick"));
+        assert_eq!(c.profile, Profile::Quick);
+        let c = BenchCli::from_args("t", &args("--profile full"));
+        assert_eq!(c.profile, Profile::Full);
+        // explicit shorthand wins over the flag
+        let c = BenchCli::from_args("t", &args("--full --profile quick"));
+        assert_eq!(c.profile, Profile::Full);
+    }
+
+    #[test]
+    fn baseline_path_defaults_to_suite_name_at_project_root() {
+        let c = BenchCli::from_args("engine_throughput", &args(""));
+        let path = c.baseline_path();
+        assert!(path.ends_with("BENCH_engine_throughput.json"), "{path:?}");
+        // resolved against the cargo project, not a bare relative path
+        assert!(path.parent().is_some_and(|d| d.join("Cargo.toml").exists()), "{path:?}");
+        let c = BenchCli::from_args("engine_throughput", &args("--baseline other.json"));
+        assert_eq!(c.baseline_path(), PathBuf::from("other.json"));
+    }
+
+    #[test]
+    fn threshold_and_modes() {
+        let c = BenchCli::from_args("t", &args("--threshold 30 --advisory --json out.json"));
+        assert!((c.threshold_pct - 30.0).abs() < 1e-12);
+        assert!(c.advisory);
+        assert_eq!(c.json_out, Some(PathBuf::from("out.json")));
+        assert!(!c.write_baseline);
+        let c = BenchCli::from_args("t", &args("--write-baseline"));
+        assert!(c.write_baseline);
+    }
+
+    #[test]
+    fn unknown_suite_exits_2() {
+        assert_eq!(run_suite("no_such_suite", &args("")), 2);
+    }
+
+    #[test]
+    fn validate_rejects_missing_file() {
+        assert_eq!(validate_report(Path::new("/nonexistent/BENCH_x.json")), 1);
+    }
+}

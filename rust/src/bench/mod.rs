@@ -1,10 +1,31 @@
-//! Micro-benchmark substrate (criterion is unavailable offline).
+//! Benchmark subsystem (criterion is unavailable offline).
 //!
-//! Adaptive-iteration timing with warmup, outlier-robust statistics
-//! (median of sample means), and an aligned-table reporter. Used by every
-//! `cargo bench` target (all declared `harness = false`).
+//! Layers, bottom up:
+//!
+//! * the micro-bench substrate — adaptive-iteration timing with warmup,
+//!   outlier-robust statistics (median of sample means: [`bench`],
+//!   [`bench_batched`], [`Config`]) and the aligned-table [`Runner`];
+//! * [`report`] — the structured report model (suite, git rev, config,
+//!   per-measurement rows) with hand-rolled JSON ser/de ([`json`]) and
+//!   schema validation;
+//! * [`baseline`] — load/compare against a committed `BENCH_<suite>.json`
+//!   with a configurable regression threshold;
+//! * [`suites`] — the bodies of all nine `harness = false` bench targets;
+//! * [`harness`] — the shared flag-parsing/gating entry point used by the
+//!   bench shims and the `posit-div bench` subcommand.
+//!
+//! The workflow (profiles, baseline refresh, CI gating) is documented in
+//! EXPERIMENTS.md §Perf.
+
+pub mod baseline;
+pub mod harness;
+pub mod json;
+pub mod report;
+pub mod suites;
 
 use std::time::{Duration, Instant};
+
+use report::Entry;
 
 /// One benchmark measurement.
 #[derive(Clone, Debug)]
@@ -47,6 +68,45 @@ impl Config {
     }
 }
 
+/// Timing profile: `Full` is the default measurement-grade configuration,
+/// `Quick` the CI-smoke configuration. Selected per run via `--profile`
+/// (or `--quick`/`--full`), falling back to `$POSIT_BENCH_PROFILE`.
+/// Profiles shrink timing budgets and workload sizes, never row sets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Profile {
+    Quick,
+    Full,
+}
+
+impl Profile {
+    pub fn parse(s: &str) -> Option<Profile> {
+        match s.to_ascii_lowercase().as_str() {
+            "quick" => Some(Profile::Quick),
+            "full" => Some(Profile::Full),
+            _ => None,
+        }
+    }
+
+    /// `$POSIT_BENCH_PROFILE`, if set and valid.
+    pub fn from_env() -> Option<Profile> {
+        std::env::var("POSIT_BENCH_PROFILE").ok().and_then(|v| Profile::parse(&v))
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Profile::Quick => "quick",
+            Profile::Full => "full",
+        }
+    }
+
+    pub fn config(self) -> Config {
+        match self {
+            Profile::Quick => Config::quick(),
+            Profile::Full => Config::default(),
+        }
+    }
+}
+
 /// Time `op` (which performs `batch` logical operations per call).
 pub fn bench_batched<F: FnMut()>(name: &str, cfg: Config, batch: u64, mut op: F) -> Measurement {
     // Warmup + calibration: how many calls fit in sample_time?
@@ -83,21 +143,45 @@ pub fn bench<F: FnMut()>(name: &str, cfg: Config, op: F) -> Measurement {
     bench_batched(name, cfg, 1, op)
 }
 
-/// Collects measurements and renders an aligned report.
+/// Collects rows and renders an aligned report; [`Runner::entries`] feeds
+/// the structured [`report::Report`].
 #[derive(Default)]
 pub struct Runner {
-    pub rows: Vec<Measurement>,
     title: String,
+    entries: Vec<Entry>,
 }
 
 impl Runner {
     pub fn new(title: &str) -> Runner {
-        Runner { rows: Vec::new(), title: title.to_string() }
+        Runner { title: title.to_string(), entries: Vec::new() }
     }
 
-    pub fn add(&mut self, m: Measurement) {
+    fn announce(m: &Measurement) {
         println!("  measured {:<40} {:>12.2?}/op {:>14.0} op/s", m.name, m.per_op, m.ops_per_sec);
-        self.rows.push(m);
+    }
+
+    /// Register an untagged measurement (no width/algorithm/path metadata).
+    pub fn add(&mut self, m: Measurement) {
+        Self::announce(&m);
+        self.entries.push(Entry::from_measurement(&m));
+    }
+
+    /// Register a measurement with report metadata attached.
+    pub fn add_tagged(
+        &mut self,
+        m: Measurement,
+        width: Option<u32>,
+        algorithm: Option<&str>,
+        path: &str,
+    ) {
+        Self::announce(&m);
+        self.entries.push(Entry::tagged(&m, width, algorithm, path));
+    }
+
+    /// Register a pre-built row (service and hardware-model suites build
+    /// rows directly; they print their own tables, so this is silent).
+    pub fn add_entry(&mut self, e: Entry) {
+        self.entries.push(e);
     }
 
     pub fn run<F: FnMut()>(&mut self, name: &str, cfg: Config, op: F) {
@@ -105,12 +189,22 @@ impl Runner {
         self.add(m);
     }
 
+    /// Rows registered so far, in registration order.
+    pub fn entries(&self) -> &[Entry] {
+        &self.entries
+    }
+
     pub fn report(&self) -> String {
-        let mut out = format!("\n== {} ==\n{:<42} {:>14} {:>16}\n", self.title, "benchmark", "time/op", "ops/s");
-        for m in &self.rows {
+        let mut out = format!(
+            "\n== {} ==\n{:<42} {:>14} {:>16}\n",
+            self.title, "benchmark", "time/op", "ops/s"
+        );
+        for e in &self.entries {
             out.push_str(&format!(
                 "{:<42} {:>14.2?} {:>16.0}\n",
-                m.name, m.per_op, m.ops_per_sec
+                e.name,
+                Duration::from_secs_f64(e.per_op_ns * 1e-9),
+                e.ops_per_sec
             ));
         }
         out
@@ -171,5 +265,34 @@ mod tests {
             iters_per_sample: 1,
         });
         assert!(r.report().contains("x"));
+    }
+
+    #[test]
+    fn tagged_rows_carry_metadata() {
+        let mut r = Runner::new("t");
+        let m = Measurement {
+            name: "Posit16 NRD batch".into(),
+            per_op: Duration::from_nanos(250),
+            ops_per_sec: 4e6,
+            samples: 3,
+            iters_per_sample: 100,
+        };
+        r.add_tagged(m.clone(), Some(16), Some("NRD"), "batch");
+        r.add(m);
+        assert_eq!(r.entries().len(), 2);
+        assert_eq!(r.entries()[0].width, Some(16));
+        assert_eq!(r.entries()[0].algorithm.as_deref(), Some("NRD"));
+        assert_eq!(r.entries()[1].width, None);
+        // per_op_ns is derived from the Duration
+        assert!((r.entries()[0].per_op_ns - 250.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn profile_parsing_and_configs() {
+        assert_eq!(Profile::parse("quick"), Some(Profile::Quick));
+        assert_eq!(Profile::parse("FULL"), Some(Profile::Full));
+        assert_eq!(Profile::parse("warp"), None);
+        assert_eq!(Profile::Quick.name(), "quick");
+        assert!(Profile::Quick.config().samples <= Profile::Full.config().samples);
     }
 }

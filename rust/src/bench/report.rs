@@ -1,0 +1,402 @@
+//! The structured bench-report model: what a suite measured, where it
+//! ran, and under which profile — serialized as stable, diffable JSON so
+//! baselines can be committed (`BENCH_<suite>.json`) and regressions
+//! gated in CI. See EXPERIMENTS.md §Perf for the workflow.
+//!
+//! Schema `posit-div/bench-report/v1`:
+//!
+//! ```json
+//! {
+//!   "schema": "posit-div/bench-report/v1",
+//!   "suite": "engine_throughput",
+//!   "git_rev": "d198d87c1a2b",
+//!   "profile": "quick",
+//!   "provisional": false,
+//!   "note": "",
+//!   "config": { "warmup_ms": 30, "sample_time_ms": 30, "samples": 3 },
+//!   "measurements": [
+//!     {
+//!       "name": "Posit16 SRT r4 CS OF FR batch",
+//!       "width": 16,
+//!       "algorithm": "SRT r4 CS OF FR",
+//!       "path": "batch",
+//!       "per_op_ns": 171.4,
+//!       "ops_per_sec": 5834208,
+//!       "samples": 3,
+//!       "iters_per_sample": 683
+//!     }
+//!   ]
+//! }
+//! ```
+//!
+//! `width`/`algorithm`/`path` are `null` when a row has no natural value
+//! for them (e.g. a selection-table derivation). `per_op_ns` is wall time
+//! for measured rows and modeled latency for `hw-*` rows. Measurement
+//! names are unique within a report — they are the join key for baseline
+//! comparison ([`super::baseline`]).
+
+use std::path::Path;
+
+use super::json::Json;
+use super::{Config, Measurement, Profile};
+
+/// Schema identifier embedded in (and required of) every report.
+pub const SCHEMA: &str = "posit-div/bench-report/v1";
+
+/// One report row. See the module docs for field semantics.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Entry {
+    pub name: String,
+    pub width: Option<u32>,
+    pub algorithm: Option<String>,
+    pub path: Option<String>,
+    pub per_op_ns: f64,
+    pub ops_per_sec: f64,
+    pub samples: u64,
+    pub iters_per_sample: u64,
+}
+
+impl Entry {
+    /// An untagged row straight from a [`Measurement`].
+    pub fn from_measurement(m: &Measurement) -> Entry {
+        Entry {
+            name: m.name.clone(),
+            width: None,
+            algorithm: None,
+            path: None,
+            per_op_ns: m.per_op.as_secs_f64() * 1e9,
+            ops_per_sec: m.ops_per_sec,
+            samples: m.samples as u64,
+            iters_per_sample: m.iters_per_sample,
+        }
+    }
+
+    /// A row with format/algorithm/path metadata attached.
+    pub fn tagged(
+        m: &Measurement,
+        width: Option<u32>,
+        algorithm: Option<&str>,
+        path: &str,
+    ) -> Entry {
+        Entry {
+            width,
+            algorithm: algorithm.map(str::to_string),
+            path: Some(path.to_string()),
+            ..Entry::from_measurement(m)
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let opt_num = |v: Option<u32>| v.map_or(Json::Null, |x| Json::Num(x as f64));
+        let opt_str = |v: &Option<String>| v.as_ref().map_or(Json::Null, |s| Json::Str(s.clone()));
+        Json::Obj(vec![
+            ("name".into(), Json::Str(self.name.clone())),
+            ("width".into(), opt_num(self.width)),
+            ("algorithm".into(), opt_str(&self.algorithm)),
+            ("path".into(), opt_str(&self.path)),
+            ("per_op_ns".into(), Json::Num(self.per_op_ns)),
+            ("ops_per_sec".into(), Json::Num(self.ops_per_sec)),
+            ("samples".into(), Json::Num(self.samples as f64)),
+            ("iters_per_sample".into(), Json::Num(self.iters_per_sample as f64)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<Entry, String> {
+        let name = v
+            .get("name")
+            .and_then(Json::as_str)
+            .filter(|s| !s.is_empty())
+            .ok_or("name: required non-empty string")?
+            .to_string();
+        let width = match v.get("width") {
+            None | Some(Json::Null) => None,
+            Some(w) => Some(
+                w.as_u64()
+                    .map(|x| x as u32)
+                    .filter(|x| (crate::posit::MIN_N..=crate::posit::MAX_N).contains(x))
+                    .ok_or("width: must be an integer posit width or null")?,
+            ),
+        };
+        let opt_str = |key: &str| -> Result<Option<String>, String> {
+            match v.get(key) {
+                None | Some(Json::Null) => Ok(None),
+                Some(s) => Ok(Some(
+                    s.as_str().ok_or(format!("{key}: must be a string or null"))?.to_string(),
+                )),
+            }
+        };
+        let pos_num = |key: &str| -> Result<f64, String> {
+            v.get(key)
+                .and_then(Json::as_f64)
+                .filter(|x| x.is_finite() && *x > 0.0)
+                .ok_or(format!("{key}: required positive finite number"))
+        };
+        let count = |key: &str| -> Result<u64, String> {
+            v.get(key)
+                .and_then(Json::as_u64)
+                .filter(|x| *x >= 1)
+                .ok_or(format!("{key}: required integer >= 1"))
+        };
+        Ok(Entry {
+            name,
+            width,
+            algorithm: opt_str("algorithm")?,
+            path: opt_str("path")?,
+            per_op_ns: pos_num("per_op_ns")?,
+            ops_per_sec: pos_num("ops_per_sec")?,
+            samples: count("samples")?,
+            iters_per_sample: count("iters_per_sample")?,
+        })
+    }
+}
+
+/// Timing configuration as recorded in a report.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ReportConfig {
+    pub warmup_ms: f64,
+    pub sample_time_ms: f64,
+    pub samples: u64,
+}
+
+impl From<Config> for ReportConfig {
+    fn from(cfg: Config) -> ReportConfig {
+        ReportConfig {
+            warmup_ms: cfg.warmup.as_secs_f64() * 1e3,
+            sample_time_ms: cfg.sample_time.as_secs_f64() * 1e3,
+            samples: cfg.samples as u64,
+        }
+    }
+}
+
+/// A complete suite report (the unit that `--json` writes, baselines
+/// store, and CI uploads as an artifact).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Report {
+    pub suite: String,
+    pub git_rev: String,
+    pub profile: String,
+    /// True for baselines recorded without a trustworthy measurement
+    /// environment; the regression gate downgrades to advisory against
+    /// them.
+    pub provisional: bool,
+    pub note: String,
+    pub config: ReportConfig,
+    pub measurements: Vec<Entry>,
+}
+
+impl Report {
+    /// Assemble a report for a finished suite run.
+    pub fn new(suite: &str, profile: Profile, cfg: Config, measurements: Vec<Entry>) -> Report {
+        Report {
+            suite: suite.to_string(),
+            git_rev: current_git_rev(),
+            profile: profile.name().to_string(),
+            provisional: false,
+            note: String::new(),
+            config: ReportConfig::from(cfg),
+            measurements,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("schema".into(), Json::Str(SCHEMA.into())),
+            ("suite".into(), Json::Str(self.suite.clone())),
+            ("git_rev".into(), Json::Str(self.git_rev.clone())),
+            ("profile".into(), Json::Str(self.profile.clone())),
+            ("provisional".into(), Json::Bool(self.provisional)),
+            ("note".into(), Json::Str(self.note.clone())),
+            (
+                "config".into(),
+                Json::Obj(vec![
+                    ("warmup_ms".into(), Json::Num(self.config.warmup_ms)),
+                    ("sample_time_ms".into(), Json::Num(self.config.sample_time_ms)),
+                    ("samples".into(), Json::Num(self.config.samples as f64)),
+                ]),
+            ),
+            (
+                "measurements".into(),
+                Json::Arr(self.measurements.iter().map(Entry::to_json).collect()),
+            ),
+        ])
+    }
+
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_pretty()
+    }
+
+    /// Parse and schema-validate a report value. Every deviation from the
+    /// schema is an error, including duplicate measurement names (they
+    /// would break baseline matching).
+    pub fn from_json(v: &Json) -> Result<Report, String> {
+        let schema = v.get("schema").and_then(Json::as_str).ok_or("schema: required string")?;
+        if schema != SCHEMA {
+            return Err(format!("schema: got {schema:?}, want {SCHEMA:?}"));
+        }
+        let suite = v
+            .get("suite")
+            .and_then(Json::as_str)
+            .filter(|s| !s.is_empty())
+            .ok_or("suite: required non-empty string")?
+            .to_string();
+        let git_rev =
+            v.get("git_rev").and_then(Json::as_str).ok_or("git_rev: required string")?.to_string();
+        let profile = v
+            .get("profile")
+            .and_then(Json::as_str)
+            .filter(|p| Profile::parse(p).is_some())
+            .ok_or("profile: required, one of \"quick\"/\"full\"")?
+            .to_string();
+        let provisional = match v.get("provisional") {
+            None => false,
+            Some(p) => p.as_bool().ok_or("provisional: must be a bool")?,
+        };
+        let note = match v.get("note") {
+            None => String::new(),
+            Some(s) => s.as_str().ok_or("note: must be a string")?.to_string(),
+        };
+        let cfg = v.get("config").ok_or("config: required object")?;
+        let cfg_num = |key: &str| -> Result<f64, String> {
+            cfg.get(key)
+                .and_then(Json::as_f64)
+                .filter(|x| x.is_finite() && *x >= 0.0)
+                .ok_or(format!("config.{key}: required non-negative number"))
+        };
+        let config = ReportConfig {
+            warmup_ms: cfg_num("warmup_ms")?,
+            sample_time_ms: cfg_num("sample_time_ms")?,
+            samples: cfg
+                .get("samples")
+                .and_then(Json::as_u64)
+                .ok_or("config.samples: required integer")?,
+        };
+        let rows = v
+            .get("measurements")
+            .and_then(Json::as_arr)
+            .ok_or("measurements: required array")?;
+        let mut measurements = Vec::with_capacity(rows.len());
+        let mut seen = std::collections::HashSet::new();
+        for (i, row) in rows.iter().enumerate() {
+            let e = Entry::from_json(row).map_err(|err| format!("measurements[{i}]: {err}"))?;
+            if !seen.insert(e.name.clone()) {
+                return Err(format!("measurements[{i}]: duplicate name {:?}", e.name));
+            }
+            measurements.push(e);
+        }
+        Ok(Report { suite, git_rev, profile, provisional, note, config, measurements })
+    }
+
+    /// Load and validate a report file.
+    pub fn load(path: &Path) -> Result<Report, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        let v = Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+        Report::from_json(&v).map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    /// Write the report as pretty JSON.
+    pub fn save(&self, path: &Path) -> Result<(), String> {
+        std::fs::write(path, self.to_json_string())
+            .map_err(|e| format!("{}: {e}", path.display()))
+    }
+}
+
+/// Current commit id for report provenance: `$GITHUB_SHA` in CI, `git
+/// rev-parse` locally, `"unknown"` without either.
+pub fn current_git_rev() -> String {
+    if let Ok(sha) = std::env::var("GITHUB_SHA") {
+        let sha = sha.trim().to_string();
+        if sha.len() >= 12 && sha.is_ascii() {
+            return sha[..12].to_string();
+        }
+        if !sha.is_empty() {
+            return sha;
+        }
+    }
+    match std::process::Command::new("git").args(["rev-parse", "--short=12", "HEAD"]).output() {
+        Ok(out) if out.status.success() => {
+            String::from_utf8_lossy(&out.stdout).trim().to_string()
+        }
+        _ => "unknown".to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn sample_report() -> Report {
+        let m = Measurement {
+            name: "Posit16 SRT r4 CS OF FR batch".into(),
+            per_op: Duration::from_nanos(171),
+            ops_per_sec: 5.84e6,
+            samples: 3,
+            iters_per_sample: 683,
+        };
+        let rows = vec![
+            Entry::tagged(&m, Some(16), Some("SRT r4 CS OF FR"), "batch"),
+            Entry {
+                name: "derive_radix4_thresholds a=2".into(),
+                ..Entry::from_measurement(&m)
+            },
+        ];
+        Report::new("engine_throughput", Profile::Quick, Config::quick(), rows)
+    }
+
+    #[test]
+    fn round_trips_through_json() {
+        let rep = sample_report();
+        let text = rep.to_json_string();
+        let back = Report::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, rep);
+        assert_eq!(back.measurements[0].width, Some(16));
+        assert_eq!(back.measurements[0].path.as_deref(), Some("batch"));
+        assert_eq!(back.measurements[1].width, None);
+    }
+
+    #[test]
+    fn validation_rejects_schema_violations() {
+        let rep = sample_report();
+        let mutate = |f: &dyn Fn(&mut Report)| {
+            let mut r = rep.clone();
+            f(&mut r);
+            let v = Json::parse(&r.to_json_string()).unwrap();
+            Report::from_json(&v)
+        };
+        assert!(mutate(&|r| r.suite.clear()).is_err());
+        assert!(mutate(&|r| r.measurements[0].name.clear()).is_err());
+        assert!(mutate(&|r| r.measurements[0].per_op_ns = -1.0).is_err());
+        assert!(mutate(&|r| r.measurements[0].width = Some(3)).is_err());
+        assert!(mutate(&|r| r.profile = "warp".into()).is_err());
+        // duplicate names break baseline matching
+        let dup = mutate(&|r| {
+            let row = r.measurements[0].clone();
+            r.measurements.push(row);
+        });
+        assert!(dup.unwrap_err().contains("duplicate"));
+    }
+
+    #[test]
+    fn wrong_schema_id_is_rejected() {
+        let v = Json::parse(r#"{"schema": "posit-div/bench-report/v0"}"#).unwrap();
+        let err = Report::from_json(&v).unwrap_err();
+        assert!(err.contains("schema"), "{err}");
+    }
+
+    #[test]
+    fn save_and_load() {
+        let rep = sample_report();
+        let dir = std::env::temp_dir().join(format!("posit_bench_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_roundtrip.json");
+        rep.save(&path).unwrap();
+        assert_eq!(Report::load(&path).unwrap(), rep);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn git_rev_is_nonempty() {
+        assert!(!current_git_rev().is_empty());
+    }
+}

@@ -28,7 +28,10 @@
 //!   point returns (no panicking library surface, no `anyhow` leakage).
 //! * [`bench`] / [`testkit`] — self-contained micro-benchmark and
 //!   property-testing harnesses (criterion / proptest are unavailable in
-//!   the offline build environment).
+//!   the offline build environment). The bench side is a full subsystem:
+//!   structured JSON reports, committed `BENCH_<suite>.json` baselines,
+//!   and a threshold-based regression gate shared by all nine bench
+//!   targets and the `posit-div bench` subcommand (EXPERIMENTS.md §Perf).
 //!
 //! ## Quickstart
 //!

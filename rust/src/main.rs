@@ -3,6 +3,7 @@
 
 use std::time::Instant;
 
+use posit_div::bench::{harness, suites};
 use posit_div::cli::Args;
 use posit_div::coordinator::{Backend, BatchPolicy, DivisionService, ServiceConfig};
 use posit_div::division::{golden, Algorithm, DivEngine, Divider};
@@ -18,7 +19,11 @@ subcommands:
   divide <x> <d> [--n N] [--alg NAME] [--bits]      one division, all metadata
   verify [--n N] [--cases N]                        engines vs golden cross-check
   serve [--n N] [--backend native|pjrt] [--requests N] [--batch N] [--threads N]
-  engines                                           list algorithm variants";
+  engines                                           list algorithm variants
+  bench <suite> [--json P] [--baseline P] [--write-baseline] [--quick|--full]
+        [--threshold PCT] [--advisory]              run a bench suite + regression gate
+  bench list                                        list bench suites
+  bench validate <report.json>                      schema-check a bench report";
 
 fn alg_by_name(name: &str) -> Option<Algorithm> {
     Algorithm::ALL.iter().copied().find(|a| {
@@ -36,6 +41,7 @@ fn main() {
         Some("divide") => cmd_divide(&args),
         Some("verify") => cmd_verify(&args),
         Some("serve") => cmd_serve(&args),
+        Some("bench") => cmd_bench(&args),
         Some("engines") => {
             for a in Algorithm::ALL {
                 println!("{:<18} radix={:?}", a.label(), a.radix());
@@ -133,6 +139,50 @@ fn cmd_verify(args: &Args) {
         "verified {} engines x {} cases on Posit{} against the golden model in {:?} - all bit-exact",
         dividers.len(), cases, n, t0.elapsed()
     );
+}
+
+fn cmd_bench(args: &Args) {
+    // Every flag the bench harness understands; used to detect a suite
+    // name swallowed by the greedy flag grammar.
+    const BENCH_FLAGS: [&str; 8] = [
+        "quick", "full", "advisory", "write-baseline", "json", "baseline", "profile", "threshold",
+    ];
+    let code = match args.positional.first().map(String::as_str) {
+        None => {
+            // Flags without a suite name mean the grammar likely swallowed
+            // it (`bench --quick engine_throughput` parses as
+            // quick="engine_throughput", `bench --json engine_throughput`
+            // as json="engine_throughput"): refuse rather than silently
+            // listing suites with exit 0, which would green a CI step
+            // that never benchmarked anything.
+            match BENCH_FLAGS.iter().find(|f| args.has(f)) {
+                Some(sw) => {
+                    eprintln!(
+                        "no suite named but `--{sw}` given — a flag may have swallowed the \
+                         suite name; put the suite first: `posit-div bench <suite> --{sw} ...`"
+                    );
+                    2
+                }
+                None => {
+                    print!("{}", suites::render_list());
+                    0
+                }
+            }
+        }
+        Some("list") => {
+            print!("{}", suites::render_list());
+            0
+        }
+        Some("validate") => match args.positional.get(1) {
+            Some(path) => harness::validate_report(std::path::Path::new(path)),
+            None => {
+                eprintln!("usage: posit-div bench validate <report.json>");
+                2
+            }
+        },
+        Some(name) => harness::run_suite(name, args),
+    };
+    std::process::exit(code);
 }
 
 fn cmd_serve(args: &Args) {

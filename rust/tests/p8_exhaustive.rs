@@ -1,0 +1,62 @@
+//! Exhaustive Posit8 division gate for the default serving engine
+//! (SRT r4 CS OF FR): every one of the 256×256 bit-pattern pairs is
+//! checked against the exact golden model, both at the full-division
+//! level and at the fraction-recurrence level (`golden::frac_divide`).
+//!
+//! `#[ignore]`d for local `cargo test` (the tier-1 suite already covers
+//! Posit8 exhaustively across all engines in `engines_cross.rs`); CI runs
+//! it explicitly with `cargo test --test p8_exhaustive -- --ignored` so
+//! the default engine's datapath is gated on every push.
+
+use posit_div::division::{golden, Algorithm, DivEngine, Divider};
+use posit_div::posit::{mask, Posit, Unpacked};
+
+#[test]
+#[ignore = "exhaustive CI gate; run with `cargo test --test p8_exhaustive -- --ignored`"]
+fn p8_default_engine_matches_golden_on_all_pattern_pairs() {
+    let n = 8;
+    let div = Divider::new(n, Algorithm::DEFAULT).expect("standard width");
+    assert_eq!(div.algorithm(), Algorithm::Srt4CsOfFr, "default engine changed; update gate");
+    for xb in 0..=mask(n) {
+        let x = Posit::from_bits(n, xb);
+        for db in 0..=mask(n) {
+            let d = Posit::from_bits(n, db);
+            let want = golden::divide(x, d).result;
+            let got = div.divide(x, d).expect("width matches").result;
+            assert_eq!(
+                got, want,
+                "{}: {x:?}/{d:?} -> {got:?}, golden {want:?}",
+                div.name()
+            );
+        }
+    }
+}
+
+#[test]
+#[ignore = "exhaustive CI gate; run with `cargo test --test p8_exhaustive -- --ignored`"]
+fn p8_fraction_recurrence_matches_frac_divide_on_all_real_pairs() {
+    let n = 8;
+    let div = Divider::new(n, Algorithm::DEFAULT).expect("standard width");
+    for xb in 0..=mask(n) {
+        let x = Posit::from_bits(n, xb);
+        for db in 0..=mask(n) {
+            let d = Posit::from_bits(n, db);
+            let (Unpacked::Real(a), Unpacked::Real(b)) = (x.unpack(), d.unpack()) else {
+                continue; // specials never reach the fraction datapath
+            };
+            let want = golden::frac_divide(n, a.sig, b.sig);
+            let got = div.fraction_divide(n, a.sig, b.sig);
+            // Engines may carry more or fewer fraction bits than the
+            // golden's fixed n; compare at the coarser precision with
+            // dropped bits folded into sticky.
+            let fb = got.frac_bits.min(want.frac_bits);
+            assert_eq!(
+                got.refine_to(fb),
+                want.refine_to(fb),
+                "sig {:#x}/{:#x} (from {x:?}/{d:?}): engine {got:?}, golden {want:?}",
+                a.sig,
+                b.sig
+            );
+        }
+    }
+}

@@ -1,9 +1,10 @@
 #!/usr/bin/env bash
-# Tier-1 verification plus lint gate. Run from anywhere in the repo.
+# Tier-1 verification plus lint gates. Run from anywhere in the repo.
 #
-#   scripts/verify.sh          # build + tests + clippy
-#   SKIP_CLIPPY=1 scripts/verify.sh   # tier-1 only (e.g. toolchains
-#                                     # without a clippy component)
+#   scripts/verify.sh               # build + tests + clippy + fmt
+#   SKIP_CLIPPY=1 scripts/verify.sh # skip the clippy gate (e.g. toolchains
+#                                   # without a clippy component)
+#   SKIP_FMT=1 scripts/verify.sh    # skip the rustfmt gate
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -15,6 +16,15 @@ cargo build --release --all-targets
 
 echo "== tier-1: cargo test -q =="
 cargo test -q
+
+if [ "${SKIP_FMT:-0}" != "1" ]; then
+    if cargo fmt --version >/dev/null 2>&1; then
+        echo "== cargo fmt --check =="
+        cargo fmt --all -- --check
+    else
+        echo "== rustfmt not installed; skipping format gate =="
+    fi
+fi
 
 if [ "${SKIP_CLIPPY:-0}" != "1" ]; then
     if command -v cargo-clippy >/dev/null 2>&1 || cargo clippy --version >/dev/null 2>&1; then
