@@ -14,9 +14,10 @@
 //! cargo run --release --example dsp_adaptive_filter
 //! ```
 
-use posit_div::division::{Algorithm, DivEngine, Divider};
+use posit_div::division::{Algorithm, DivEngine};
 use posit_div::posit::Posit;
 use posit_div::testkit::Rng;
+use posit_div::unit::{Op, Unit};
 
 const TAPS: usize = 8;
 const SAMPLES: usize = 4000;
@@ -95,10 +96,12 @@ fn main() {
             Algorithm::Srt4Scaled,
             Algorithm::Newton,
         ] {
-            // one reusable context per engine — `Divider` is itself a
-            // `DivEngine`, so it drops straight into the filter loop
-            let ctx = Divider::new(n, alg).expect("standard width");
-            let (mse, cycles) = nlms(n, &ctx, 0xD5B);
+            // one reusable unit per engine — a division `Unit` exposes
+            // its engine as a `DivEngine`, so it drops straight into the
+            // filter loop
+            let ctx = Unit::new(n, Op::Div { alg }).expect("standard width");
+            let engine = ctx.as_div_engine().expect("division unit");
+            let (mse, cycles) = nlms(n, engine, 0xD5B);
             let note = match baseline_cycles {
                 None => {
                     baseline_cycles = Some(cycles);
@@ -106,7 +109,7 @@ fn main() {
                 }
                 Some(b) => format!("{:.2}x fewer cycles", b as f64 / cycles as f64),
             };
-            println!("{:<18} {:>14.3e} {:>16} {:>22}", ctx.name(), mse, cycles, note);
+            println!("{:<18} {:>14.3e} {:>16} {:>22}", ctx.engine_name(), mse, cycles, note);
         }
         println!("(identical MSE across engines = bit-exact divisions; only latency differs)");
     }

@@ -3,9 +3,10 @@
 //! EXPERIMENTS.md §Perf.
 
 use posit_div::division::srt4_cs::Srt4Cs;
-use posit_div::division::{Algorithm, DivEngine, Divider};
+use posit_div::division::{Algorithm, DivEngine};
 use posit_div::posit::{frac_bits, mask, Posit};
 use posit_div::testkit::Rng;
+use posit_div::unit::{Op, Unit};
 use std::time::Instant;
 
 fn main() {
@@ -15,16 +16,16 @@ fn main() {
             (Posit::from_bits(n, rng.next_u64() & mask(n)),
              Posit::from_bits(n, (rng.next_u64() & mask(n)) | 1))
         }).collect();
-        let ctx = Divider::new(n, Algorithm::Srt4CsOfFr).expect("width");
+        let ctx = Unit::new(n, Op::Div { alg: Algorithm::Srt4CsOfFr }).expect("width");
         // warm
         for &(x, d) in &pairs {
-            std::hint::black_box(ctx.divide(x, d).expect("width").result);
+            std::hint::black_box(ctx.run(&[x, d]).expect("width").result);
         }
         let mut best = f64::MAX;
         for _ in 0..40 {
             let t0 = Instant::now();
             for &(x, d) in &pairs {
-                std::hint::black_box(ctx.divide(x, d).expect("width").result);
+                std::hint::black_box(ctx.run(&[x, d]).expect("width").result);
             }
             best = best.min(t0.elapsed().as_secs_f64() / pairs.len() as f64);
         }
@@ -37,7 +38,7 @@ fn main() {
         let mut best_b = f64::MAX;
         for _ in 0..40 {
             let t0 = Instant::now();
-            ctx.divide_batch(&xs, &ds, &mut out).expect("equal lengths");
+            ctx.run_batch(&xs, &ds, &[], &mut out).expect("equal lanes");
             std::hint::black_box(&out);
             best_b = best_b.min(t0.elapsed().as_secs_f64() / xs.len() as f64);
         }

@@ -16,10 +16,12 @@ fn main() -> Result<()> {
     println!("x = {x:?}");
     println!("d = {d:?}");
 
-    // division routes through the paper's optimized SRT r4 CS OF FR engine
+    // division routes through the paper's optimized SRT r4 CS OF FR engine,
+    // sqrt through the companion digit-recurrence square root
     let q = x / d;
     println!("355/113 = {} (2 ulp from π)", q.to_f64());
     assert!(P32::MIN_POSITIVE < q && q < P32::MAXPOS);
+    assert_eq!(P32::round_from(2.25).sqrt().to_f64(), 1.5);
 
     // arithmetic + constants
     let a = P16::round_from(0.3);
@@ -28,9 +30,12 @@ fn main() -> Result<()> {
     println!("Posit16: 0.3 * 0.6 = {}", a * b);
     // specials: a single NaR, saturation instead of overflow
     assert!((P16::ONE / P16::ZERO).is_nar());
+    assert!((-P16::ONE).sqrt().is_nar());
     assert_eq!(P16::MAXPOS + P16::MAXPOS, P16::MAXPOS);
 
-    // --- division contexts: any Table IV engine, built once ----------------
+    // --- units: one context per (width, op), built once --------------------
+    // Division accepts any Table IV engine; every engine is bit-exact, so
+    // the choice affects only the latency metadata.
     let xp = x.as_posit();
     let dp = d.as_posit();
     for alg in [
@@ -40,11 +45,11 @@ fn main() -> Result<()> {
         Algorithm::Srt4Scaled, // radix-4 with Table I operand scaling
         Algorithm::Newton,     // the multiplicative baseline
     ] {
-        let ctx = Divider::new(32, alg)?; // reusable, no per-call allocation
-        let div = ctx.divide(xp, dp)?;
+        let unit = Unit::new(32, Op::Div { alg })?; // reusable, no per-call allocation
+        let div = unit.run(&[xp, dp])?;
         println!(
             "{:<18} -> {:<22} {:>2} iterations, {:>2} cycles",
-            ctx.name(),
+            unit.engine_name(),
             div.result.to_f64(),
             div.iterations,
             div.cycles
@@ -53,22 +58,42 @@ fn main() -> Result<()> {
         assert_eq!(div.result.to_bits(), q.to_bits());
     }
 
-    // --- batch-first division ---------------------------------------------
+    // ... and the same surface serves every other op.
+    let sqrt = Unit::new(32, Op::Sqrt)?;
+    let r = sqrt.run(&[xp])?;
+    println!(
+        "\n{:<18} -> sqrt(355) = {} in {} iterations",
+        sqrt.engine_name(),
+        r.result.to_f64(),
+        r.iterations
+    );
+    let fma = Unit::new(32, Op::MulAdd)?;
+    assert_eq!(fma.run(&[xp, dp, dp])?.result, xp.mul(dp).add(dp));
+
+    // --- batch-first execution ---------------------------------------------
     // The same loop the coordinator's native backend and the benches run.
-    let ctx = Divider::standard(32)?;
+    // Binary ops take lanes (a, b); unary ops only a — pass `&[]` for the
+    // lanes the op doesn't use.
+    let div = Unit::new(32, Op::DIV)?;
     let xs = vec![xp.to_bits(); 8];
     let ds = vec![dp.to_bits(); 8];
     let mut out = vec![0u64; 8];
-    ctx.divide_batch(&xs, &ds, &mut out)?;
+    div.run_batch(&xs, &ds, &[], &mut out)?;
     assert!(out.iter().all(|&bits| bits == q.to_bits()));
-    println!("\nbatch of {} divisions: all bit-identical to the scalar path", out.len());
+    sqrt.run_batch(&xs, &[], &[], &mut out)?;
+    assert!(out.iter().all(|&bits| bits == r.result.to_bits()));
+    println!("\nbatch of {} ops per unit: all bit-identical to the scalar path", out.len());
 
     // --- typed errors ------------------------------------------------------
-    assert_eq!(Divider::new(3, Algorithm::Nrd).err(), Some(PositError::WidthOutOfRange { n: 3 }));
+    assert_eq!(Unit::new(3, Op::DIV).err(), Some(PositError::WidthOutOfRange { n: 3 }));
     assert_eq!(
-        ctx.divide(Posit::from_f64(16, 1.0), Posit::from_f64(16, 2.0)).unwrap_err(),
+        div.run(&[Posit::from_f64(16, 1.0), Posit::from_f64(16, 2.0)]).unwrap_err(),
         PositError::WidthMismatch { expected: 32, got: 16 }
     );
-    println!("width/shape misuse is a typed PositError, not a panic");
+    assert_eq!(
+        sqrt.run(&[xp, dp]).unwrap_err(),
+        PositError::ArityMismatch { op: "sqrt", expected: 1, got: 2 }
+    );
+    println!("width/arity/shape misuse is a typed PositError, not a panic");
     Ok(())
 }

@@ -1,16 +1,17 @@
 //! End-to-end driver (the EXPERIMENTS.md §E2E run): the full three-layer
-//! stack serving batched division requests.
+//! stack serving batched posit-unit requests.
 //!
 //!   L3 Rust coordinator (router + dynamic batcher + metrics)
 //!     -> PJRT backend: the AOT-compiled L2 JAX graph containing the
 //!        L1 Pallas radix-4 SRT kernel (artifacts/, built once by
 //!        `make artifacts`; needs the `xla` feature — skipped otherwise)
-//!     -> native backend: the bit-exact Rust engines behind one pre-built
-//!        `Divider` (for comparison)
+//!     -> native backend: the bit-exact Rust engines behind cached per-op
+//!        `Unit` contexts (division, sqrt, mul, add/sub, mul-add)
 //!
-//! Serves a DSP-trace workload on Posit16 and Posit32 through both
-//! backends via the typed `Client` handle, verifies every response
-//! against the exact golden model, and reports throughput and latency.
+//! Serves a DSP-trace division workload on Posit16 and Posit32 through
+//! both backends via the typed `Client` handle, then a mixed op-tagged
+//! stream through the native backend, verifies every response against
+//! the exact references, and reports throughput and latency.
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example serve_divide
@@ -21,7 +22,7 @@ use std::time::{Duration, Instant};
 
 use posit_div::division::golden;
 use posit_div::prelude::*;
-use posit_div::workload::{self, Workload};
+use posit_div::workload::{self, OpMix, Workload};
 
 const REQUESTS: usize = 50_000;
 
@@ -67,8 +68,42 @@ fn run(n: u32, backend: Backend, label: &str) {
     svc.shutdown();
 }
 
+/// Mixed op-tagged traffic through the native backend: the service groups
+/// each dynamic batch per op and runs every group on its cached unit.
+fn run_mixed(n: u32) {
+    let policy = BatchPolicy { max_batch: 1024, max_wait: Duration::from_micros(200) };
+    let backend = Backend::Native { alg: Algorithm::DEFAULT, threads: 4 };
+    let svc = DivisionService::start(ServiceConfig { n, backend, policy })
+        .expect("native backend always starts");
+    let client = svc.client();
+
+    let mut wl = workload::MixedOps::new(n, OpMix::DEFAULT, 0xE2E0 + n as u64);
+    let reqs = workload::take_requests(&mut wl, REQUESTS);
+
+    let t0 = Instant::now();
+    let results = client
+        .submit_ops(&reqs)
+        .expect("service running")
+        .wait()
+        .expect("service running");
+    let wall = t0.elapsed();
+
+    // full verification against the exact golden references
+    for (i, req) in reqs.iter().enumerate() {
+        assert_eq!(results[i], req.golden(), "mixed {} i={i}", req.op);
+    }
+
+    let m = client.metrics();
+    println!("\n[native mixed ops] Posit{n}: {REQUESTS} requests in {wall:.2?}");
+    println!("  throughput     : {:>12.0} op/s", REQUESTS as f64 / wall.as_secs_f64());
+    println!("  batch latency  : {}", m.batch_latency.summary());
+    println!("  ops            : {}", m.ops.summary());
+    println!("  verified       : {REQUESTS}/{REQUESTS} bit-exact vs exact references");
+    svc.shutdown();
+}
+
 fn main() {
-    println!("=== end-to-end: three-layer posit division service ===");
+    println!("=== end-to-end: three-layer posit unit service ===");
     for n in [16u32, 32] {
         run(
             n,
@@ -80,6 +115,7 @@ fn main() {
             Backend::Pjrt { artifacts_dir: "artifacts".into() },
             "PJRT: AOT JAX/Pallas kernel",
         );
+        run_mixed(n);
     }
-    println!("\nall served responses verified bit-exact against the golden model");
+    println!("\nall served responses verified bit-exact against the exact references");
 }

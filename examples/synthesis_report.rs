@@ -7,9 +7,10 @@
 //! cargo run --release --example synthesis_report [-- --csv]
 //! ```
 
-use posit_div::division::{scaling, Algorithm, Divider};
+use posit_div::division::{scaling, Algorithm};
 use posit_div::hardware::{report, Mode, TSMC28};
 use posit_div::posit::Posit;
+use posit_div::unit::{Op, Unit};
 
 fn table1() -> String {
     let mut out = String::from(
@@ -36,12 +37,12 @@ fn table1() -> String {
 fn table3() -> String {
     // The two worked Posit10 examples of §III-F, recomputed by the actual
     // radix-4 engine.
-    let ctx = Divider::new(10, Algorithm::Srt4CsOfFr).expect("width");
+    let ctx = Unit::new(10, Op::Div { alg: Algorithm::Srt4CsOfFr }).expect("width");
     let x = Posit::from_bits(10, 0b0011010111);
     let d1 = Posit::from_bits(10, 0b0001001100);
     let d2 = Posit::from_bits(10, 0b0000100110);
-    let q1 = ctx.divide(x, d1).expect("width matches").result;
-    let q2 = ctx.divide(x, d2).expect("width matches").result;
+    let q1 = ctx.run(&[x, d1]).expect("width matches").result;
+    let q2 = ctx.run(&[x, d2]).expect("width matches").result;
     format!(
         "Table III — termination & rounding examples (Posit10)\n\
          X = 0011010111, D1 = 0001001100 -> Q = {:010b} (paper: 0110011111)\n\

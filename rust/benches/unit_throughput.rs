@@ -1,0 +1,10 @@
+//! Batch throughput of the operation-generic unit (every `Op` × width,
+//! plus mixed-op coordinator rows) — thin shim over
+//! [`posit_div::bench::suites`], where the suite body lives so the same
+//! code runs under `cargo bench --bench unit_throughput` and
+//! `posit-div bench unit_throughput` (flags: `--json`, `--baseline`,
+//! `--write-baseline`, `--quick`/`--full`, `--threshold`, `--advisory`).
+
+fn main() {
+    posit_div::bench::harness::bench_main("unit_throughput");
+}

@@ -10,7 +10,7 @@
 //!   schema validation;
 //! * [`baseline`] — load/compare against a committed `BENCH_<suite>.json`
 //!   with a configurable regression threshold;
-//! * [`suites`] — the bodies of all nine `harness = false` bench targets;
+//! * [`suites`] — the bodies of all ten `harness = false` bench targets;
 //! * [`harness`] — the shared flag-parsing/gating entry point used by the
 //!   bench shims and the `posit-div bench` subcommand.
 //!

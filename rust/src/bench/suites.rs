@@ -16,12 +16,13 @@ use super::report::Entry;
 use super::{bench, bench_batched, black_box, Measurement, Profile, Runner};
 use crate::coordinator::{Backend, BatchPolicy, DivisionService, ServiceConfig};
 use crate::division::selection::derive_radix4_thresholds;
-use crate::division::{golden, iterations, latency_cycles, scaling, Algorithm, DivEngine, Divider};
+use crate::division::{golden, iterations, latency_cycles, scaling, Algorithm};
 use crate::hardware::components as hc;
 use crate::hardware::report as hw_report;
 use crate::hardware::{combinational, pipelined, synth, Cost, Mode, TSMC28};
 use crate::posit::{mask, Posit};
 use crate::testkit::Rng;
+use crate::unit::{Op, Unit};
 use crate::workload;
 
 /// One registered suite.
@@ -43,6 +44,12 @@ pub const SUITES: &[Suite] = &[
         title: "engine throughput (div/s), 256-pair working set",
         about: "scalar vs batch software throughput, every engine x width",
         run: engine_throughput,
+    },
+    Suite {
+        name: "unit_throughput",
+        title: "operation-generic unit throughput (op/s), 256-element working set",
+        about: "batch op/s for every unit op x width + mixed-op service rows",
+        run: unit_throughput,
     },
     Suite {
         name: "table2_iterations",
@@ -113,10 +120,10 @@ pub fn render_list() -> String {
 /// the L3 perf baseline tracked in EXPERIMENTS.md §Perf.
 ///
 /// Two paths per (format, algorithm), both through a pre-built zero-alloc
-/// [`Divider`] (no per-call `Box<dyn DivEngine>` on the hot loop):
-///   * scalar: `Divider::divide` per pair,
-///   * batch:  `Divider::divide_batch` over the whole working set — the
-///     exact loop the coordinator's native backend runs.
+/// [`Unit`] (no per-call `Box<dyn DivEngine>` on the hot loop):
+///   * scalar: `Unit::run` per pair,
+///   * batch:  `Unit::run_batch` over the whole working set — the exact
+///     loop the coordinator's native backend runs.
 fn engine_throughput(cli: &BenchCli, r: &mut Runner) {
     let mut rng = Rng::seeded(0xB21C);
     for n in [8u32, 16, 32, 64] {
@@ -132,30 +139,123 @@ fn engine_throughput(cli: &BenchCli, r: &mut Runner) {
         let ds: Vec<u64> = pairs.iter().map(|p| p.1.to_bits()).collect();
         let mut out = vec![0u64; xs.len()];
         for alg in Algorithm::ALL {
-            let ctx = Divider::new(n, alg).expect("standard width");
+            let ctx = Unit::new(n, Op::Div { alg }).expect("standard width");
             let m = bench_batched(
-                &format!("Posit{n} {} scalar", ctx.name()),
+                &format!("Posit{n} {} scalar", ctx.engine_name()),
                 cli.cfg,
                 pairs.len() as u64,
                 || {
                     for &(x, d) in &pairs {
-                        black_box(ctx.divide(x, d).expect("width matches").result);
+                        black_box(ctx.run(&[x, d]).expect("width matches").result);
                     }
                 },
             );
             r.add_tagged(m, Some(n), Some(alg.label()), "scalar");
             let m = bench_batched(
-                &format!("Posit{n} {} batch", ctx.name()),
+                &format!("Posit{n} {} batch", ctx.engine_name()),
                 cli.cfg,
                 xs.len() as u64,
                 || {
-                    ctx.divide_batch(&xs, &ds, &mut out).expect("equal lengths");
+                    ctx.run_batch(&xs, &ds, &[], &mut out).expect("equal lanes");
                     black_box(&out);
                 },
             );
             r.add_tagged(m, Some(n), Some(alg.label()), "batch");
         }
     }
+}
+
+/// The operation-generic counterpart of [`engine_throughput`]: batch
+/// throughput of every [`Op`] (division at the default engine) at
+/// Posit16/32 through the same [`Unit::run_batch`] loop, plus one
+/// mixed-op coordinator row per width (the service groups each dynamic
+/// batch per op and runs every group on its cached unit).
+fn unit_throughput(cli: &BenchCli, r: &mut Runner) {
+    let mut rng = Rng::seeded(0x0127);
+    for n in [16u32, 32] {
+        let a: Vec<u64> = (0..256).map(|_| rng.next_u64() & mask(n)).collect();
+        let b: Vec<u64> = (0..256).map(|_| (rng.next_u64() & mask(n)) | 1).collect();
+        let c: Vec<u64> = (0..256).map(|_| rng.next_u64() & mask(n)).collect();
+        // Non-negative radicands for the sqrt row: with raw patterns half
+        // the inputs would take the NaR fast path and the row would
+        // overstate datapath throughput ~2x (the divisor lane is
+        // sanitized with `| 1` for the same reason).
+        let radicands: Vec<u64> = a.iter().map(|&v| v & !(1u64 << (n - 1))).collect();
+        let mut out = vec![0u64; a.len()];
+        for op in Op::DEFAULTS {
+            let unit = Unit::new(n, op).expect("standard width");
+            let la: &[u64] = if op == Op::Sqrt { &radicands } else { &a };
+            let (lb, lc): (&[u64], &[u64]) = match op.arity() {
+                1 => (&[], &[]),
+                2 => (&b, &[]),
+                _ => (&b, &c),
+            };
+            let m = bench_batched(
+                &format!("Posit{n} {} batch", op.name()),
+                cli.cfg,
+                la.len() as u64,
+                || {
+                    unit.run_batch(la, lb, lc, &mut out).expect("equal lanes");
+                    black_box(&out);
+                },
+            );
+            let label = op.label();
+            r.add_tagged(m, Some(n), Some(label.as_str()), "batch");
+        }
+    }
+
+    let requests = match cli.profile {
+        Profile::Quick => 6_000,
+        Profile::Full => 30_000,
+    };
+    for n in [16u32, 32] {
+        if let Some(e) = mixed_service_run(n, requests) {
+            r.add_entry(e);
+        }
+    }
+}
+
+/// One mixed-op service run on the native backend; returns the report row.
+fn mixed_service_run(n: u32, requests: usize) -> Option<Entry> {
+    let svc = match DivisionService::start(ServiceConfig {
+        n,
+        backend: Backend::Native { alg: Algorithm::DEFAULT, threads: 4 },
+        policy: BatchPolicy { max_batch: 256, max_wait: Duration::from_micros(200) },
+    }) {
+        Ok(s) => s,
+        Err(e) => {
+            println!("Posit{n} mixed-ops service SKIP ({e})");
+            return None;
+        }
+    };
+    let client = svc.client();
+    let mut wl = workload::MixedOps::new(n, workload::OpMix::DEFAULT, 0xD17 + n as u64);
+    let reqs = workload::take_requests(&mut wl, requests);
+    let t0 = std::time::Instant::now();
+    let results = client.submit_ops(&reqs).expect("service running").wait().expect("running");
+    let wall = t0.elapsed();
+
+    // verify a sample against the exact golden references
+    for (i, req) in reqs.iter().enumerate().step_by(101) {
+        assert_eq!(results[i], req.golden(), "{} sample {i}", req.op);
+    }
+    let m = svc.metrics();
+    println!(
+        "Posit{n} mixed-ops service batch=256 {:>10.0} op/s   ops: {}",
+        requests as f64 / wall.as_secs_f64(),
+        m.ops.summary()
+    );
+    svc.shutdown();
+    Some(Entry {
+        name: format!("Posit{n} mixed-ops service batch=256"),
+        width: Some(n),
+        algorithm: None,
+        path: Some("service".to_string()),
+        per_op_ns: wall.as_secs_f64() * 1e9 / requests as f64,
+        ops_per_sec: requests as f64 / wall.as_secs_f64(),
+        samples: 1,
+        iters_per_sample: requests as u64,
+    })
 }
 
 /// Table II — iteration counts and pipelined latency, *measured* from the
@@ -172,10 +272,10 @@ fn table2_iterations(cli: &BenchCli, r: &mut Runner) {
         let x = Posit::from_bits(n, rng.next_u64() & mask(n));
         let d = Posit::from_bits(n, (rng.next_u64() & mask(n)) | 1);
         let (x, d) = (x.abs().next_up(), d.abs().next_up()); // avoid specials
-        let ctx_r2 = Divider::new(n, Algorithm::Srt2Cs).expect("width");
-        let ctx_r4 = Divider::new(n, Algorithm::Srt4Cs).expect("width");
-        let r2 = ctx_r2.divide(x, d).expect("width matches");
-        let r4 = ctx_r4.divide(x, d).expect("width matches");
+        let ctx_r2 = Unit::new(n, Op::Div { alg: Algorithm::Srt2Cs }).expect("width");
+        let ctx_r4 = Unit::new(n, Op::Div { alg: Algorithm::Srt4Cs }).expect("width");
+        let r2 = ctx_r2.run(&[x, d]).expect("width matches");
+        let r4 = ctx_r4.run(&[x, d]).expect("width matches");
         assert_eq!(r2.iterations, iterations(n, 2));
         assert_eq!(r4.iterations, iterations(n, 4));
         assert_eq!(r2.iterations, ctx_r2.iterations()); // cached in the context
@@ -193,16 +293,16 @@ fn table2_iterations(cli: &BenchCli, r: &mut Runner) {
     let mut rng = Rng::seeded(42);
     for n in [16u32, 32, 64] {
         for alg in [Algorithm::Srt2Cs, Algorithm::Srt4Cs] {
-            let ctx = Divider::new(n, alg).expect("width");
+            let ctx = Unit::new(n, Op::Div { alg }).expect("width");
             let xs: Vec<u64> = (0..256).map(|_| rng.next_u64() & mask(n)).collect();
             let ds: Vec<u64> = (0..256).map(|_| (rng.next_u64() & mask(n)) | 1).collect();
             let mut out = vec![0u64; xs.len()];
             let m = bench_batched(
-                &format!("Posit{n} {}", ctx.name()),
+                &format!("Posit{n} {}", ctx.engine_name()),
                 cli.cfg,
                 xs.len() as u64,
                 || {
-                    ctx.divide_batch(&xs, &ds, &mut out).expect("equal lengths");
+                    ctx.run_batch(&xs, &ds, &[], &mut out).expect("equal lanes");
                     black_box(&out);
                 },
             );
@@ -227,12 +327,12 @@ fn tables(cli: &BenchCli, r: &mut Runner) {
     }
 
     println!("\nTable III (Posit10 termination/rounding examples):");
-    // Posit10 — the runtime-n Divider covers the paper's odd widths too.
-    let ctx = Divider::new(10, Algorithm::Srt4CsOfFr).expect("width");
+    // Posit10 — the runtime-n Unit covers the paper's odd widths too.
+    let ctx = Unit::new(10, Op::Div { alg: Algorithm::Srt4CsOfFr }).expect("width");
     let x = Posit::from_bits(10, 0b0011010111);
     for (d_bits, expect) in [(0b0001001100u64, 0b0110011111u64), (0b0000100110, 0b0111010000)] {
         let d = Posit::from_bits(10, d_bits);
-        let q = ctx.divide(x, d).expect("width matches").result;
+        let q = ctx.run(&[x, d]).expect("width matches").result;
         println!(
             "  X=0011010111 D={:010b} -> Q={:010b} (paper {:010b}) {}",
             d_bits,
@@ -242,7 +342,7 @@ fn tables(cli: &BenchCli, r: &mut Runner) {
         );
         assert_eq!(q.to_bits(), expect);
         let m = bench(&format!("Posit10 worked example D={d_bits:010b}"), cli.cfg, || {
-            black_box(ctx.divide(x, d).expect("width matches").result);
+            black_box(ctx.run(&[x, d]).expect("width matches").result);
         });
         r.add_tagged(m, Some(10), Some(Algorithm::Srt4CsOfFr.label()), "scalar");
     }
@@ -261,14 +361,14 @@ fn comparison_asap23(cli: &BenchCli, r: &mut Runner) {
         let xs: Vec<u64> = (0..256).map(|_| rng.next_u64() & mask(n)).collect();
         let ds: Vec<u64> = (0..256).map(|_| (rng.next_u64() & mask(n)) | 1).collect();
         let time = |alg: Algorithm| -> Measurement {
-            let ctx = Divider::new(n, alg).expect("width");
+            let ctx = Unit::new(n, Op::Div { alg }).expect("width");
             let mut out = vec![0u64; xs.len()];
             bench_batched(
-                &format!("Posit{n} {} batch", ctx.name()),
+                &format!("Posit{n} {} batch", ctx.engine_name()),
                 cli.cfg,
                 xs.len() as u64,
                 || {
-                    ctx.divide_batch(&xs, &ds, &mut out).expect("equal lengths");
+                    ctx.run_batch(&xs, &ds, &[], &mut out).expect("equal lanes");
                     black_box(&out);
                 },
             )
@@ -376,13 +476,13 @@ fn ablation_multiplicative(cli: &BenchCli, r: &mut Runner) {
         let ds: Vec<u64> = (0..256).map(|_| (rng.next_u64() & mask(n)) | 1).collect();
         let mut out = vec![0u64; xs.len()];
         for alg in [Algorithm::Srt4CsOfFr, Algorithm::Newton] {
-            let ctx = Divider::new(n, alg).expect("width");
+            let ctx = Unit::new(n, Op::Div { alg }).expect("width");
             let m = bench_batched(
-                &format!("Posit{n} {}", ctx.name()),
+                &format!("Posit{n} {}", ctx.engine_name()),
                 cli.cfg,
                 xs.len() as u64,
                 || {
-                    ctx.divide_batch(&xs, &ds, &mut out).expect("equal lengths");
+                    ctx.run_batch(&xs, &ds, &[], &mut out).expect("equal lanes");
                     black_box(&out);
                 },
             );
@@ -540,7 +640,7 @@ mod tests {
 
     #[test]
     fn registry_is_complete_and_unique() {
-        assert_eq!(SUITES.len(), 9);
+        assert_eq!(SUITES.len(), 10);
         for (i, s) in SUITES.iter().enumerate() {
             assert!(find(s.name).is_some());
             assert!(!s.about.is_empty() && !s.title.is_empty());

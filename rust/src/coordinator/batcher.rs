@@ -1,6 +1,8 @@
-//! Dynamic batcher: collects division requests into batches bounded by
+//! Dynamic batcher: collects op-tagged requests into batches bounded by
 //! size and age — the standard serving-system policy (first request in a
 //! batch waits at most `max_wait`; a full batch flushes immediately).
+//! Mixed-op batches are then split per operation with [`group_indices`]
+//! so each group runs through its own execution unit.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
@@ -40,6 +42,26 @@ pub fn collect_batch<T>(rx: &Receiver<T>, policy: BatchPolicy) -> Option<Vec<T>>
     Some(batch)
 }
 
+/// Split a batch into per-key index groups, preserving first-seen key
+/// order and, within each group, submission order. Linear scan over the
+/// (small) set of distinct keys — a mixed batch has at most a handful of
+/// operations.
+pub fn group_indices<T, K, F>(items: &[T], key: F) -> Vec<(K, Vec<usize>)>
+where
+    K: PartialEq + Copy,
+    F: Fn(&T) -> K,
+{
+    let mut groups: Vec<(K, Vec<usize>)> = Vec::new();
+    for (i, item) in items.iter().enumerate() {
+        let k = key(item);
+        match groups.iter_mut().find(|(g, _)| *g == k) {
+            Some((_, idxs)) => idxs.push(i),
+            None => groups.push((k, vec![i])),
+        }
+    }
+    groups
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -69,6 +91,18 @@ mod tests {
         let e = t0.elapsed();
         assert!(e >= Duration::from_millis(15), "waited for the deadline: {e:?}");
         drop(tx);
+    }
+
+    #[test]
+    fn group_indices_preserves_orders() {
+        let items = ["a", "b", "a", "c", "b", "a"];
+        let groups = group_indices(&items, |s| *s);
+        assert_eq!(
+            groups,
+            vec![("a", vec![0, 2, 5]), ("b", vec![1, 4]), ("c", vec![3])]
+        );
+        let empty: [&str; 0] = [];
+        assert!(group_indices(&empty, |s| *s).is_empty());
     }
 
     #[test]

@@ -4,6 +4,8 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
+use crate::unit::Op;
+
 /// Power-of-two-bucketed latency histogram, lock-free on the record path.
 /// Bucket i counts samples in [2^i, 2^(i+1)) nanoseconds, i < 48.
 pub struct Histogram {
@@ -81,6 +83,51 @@ impl Histogram {
     }
 }
 
+/// Per-operation-kind request counters (division counts one bucket
+/// regardless of algorithm).
+#[derive(Default)]
+pub struct OpCounters {
+    pub div: AtomicU64,
+    pub sqrt: AtomicU64,
+    pub mul: AtomicU64,
+    pub add: AtomicU64,
+    pub sub: AtomicU64,
+    pub mul_add: AtomicU64,
+}
+
+impl OpCounters {
+    fn counter(&self, op: Op) -> &AtomicU64 {
+        match op {
+            Op::Div { .. } => &self.div,
+            Op::Sqrt => &self.sqrt,
+            Op::Mul => &self.mul,
+            Op::Add => &self.add,
+            Op::Sub => &self.sub,
+            Op::MulAdd => &self.mul_add,
+        }
+    }
+
+    pub fn record(&self, op: Op) {
+        self.counter(op).fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn get(&self, op: Op) -> u64 {
+        self.counter(op).load(Ordering::Relaxed)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "div={} sqrt={} mul={} add={} sub={} mul_add={}",
+            self.div.load(Ordering::Relaxed),
+            self.sqrt.load(Ordering::Relaxed),
+            self.mul.load(Ordering::Relaxed),
+            self.add.load(Ordering::Relaxed),
+            self.sub.load(Ordering::Relaxed),
+            self.mul_add.load(Ordering::Relaxed),
+        )
+    }
+}
+
 /// Aggregated service counters.
 #[derive(Default)]
 pub struct Metrics {
@@ -91,6 +138,8 @@ pub struct Metrics {
     pub requests: AtomicU64,
     pub batches: AtomicU64,
     pub special_results: AtomicU64,
+    /// Requests served, split by operation kind.
+    pub ops: OpCounters,
 }
 
 impl Metrics {
@@ -121,6 +170,21 @@ mod tests {
     fn histogram_empty() {
         let h = Histogram::new();
         assert_eq!(h.quantile(0.99), Duration::ZERO);
+    }
+
+    #[test]
+    fn op_counters_bucket_by_kind() {
+        let c = OpCounters::default();
+        c.record(Op::DIV);
+        c.record(Op::Div { alg: crate::division::Algorithm::Nrd });
+        c.record(Op::Sqrt);
+        c.record(Op::MulAdd);
+        assert_eq!(c.get(Op::DIV), 2, "division buckets ignore the algorithm");
+        assert_eq!(c.get(Op::Sqrt), 1);
+        assert_eq!(c.get(Op::Mul), 0);
+        assert_eq!(c.get(Op::MulAdd), 1);
+        let s = c.summary();
+        assert!(s.contains("div=2") && s.contains("mul_add=1"), "{s}");
     }
 
     #[test]

@@ -1,16 +1,23 @@
-//! L3 coordinator: a batched posit-division service.
+//! L3 coordinator: a batched posit functional-unit service.
 //!
 //! The paper's contribution is the arithmetic unit, so the coordinator is
 //! the thin-but-real driver the architecture calls for: a leader thread
-//! owns a dynamic [`batcher`] (size + deadline policy) and a backend —
-//! either the native bit-exact Rust engines (one pre-built
-//! [`crate::division::Divider`], batch spread over scoped workers), or
-//! the AOT-compiled JAX/Pallas graph executed through PJRT
-//! ([`crate::runtime`]). Clients talk to the service through the typed
-//! [`Client`] handle: `submit`/`submit_batch` return [`Pending`]/
-//! [`BatchHandle`] futures-by-hand that resolve to typed results — the
-//! raw mpsc plumbing is no longer part of the public surface.
-//! [`metrics`] tracks request/batch latency.
+//! owns a dynamic [`batcher`] (size + deadline policy) and a backend, and
+//! serves **op-tagged** requests ([`crate::unit::OpRequest`]: division by
+//! any Table IV engine, square root, mul, add/sub, mul-add). Mixed
+//! batches are split per operation ([`batcher::group_indices`]) and each
+//! group runs through a cached per-op [`crate::unit::Unit`] — the native
+//! backend spreads every group over scoped workers, while the PJRT
+//! backend executes division groups on the AOT-compiled JAX/Pallas graph
+//! ([`crate::runtime`]) and falls back to the native units for the other
+//! operations.
+//!
+//! Clients talk to the service through the typed [`Client`] handle:
+//! `submit_op`/`submit_ops` (and the division conveniences
+//! `submit`/`submit_batch`) return [`Pending`]/[`BatchHandle`]
+//! futures-by-hand that resolve to typed results — the raw mpsc plumbing
+//! is not part of the public surface. [`metrics`] tracks request/batch
+//! latency and per-op counts.
 //!
 //! Python never runs here: the PJRT backend executes the pre-compiled
 //! HLO artifact in-process.
@@ -19,6 +26,7 @@ pub mod batcher;
 pub mod metrics;
 pub mod pool;
 
+use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Weak};
@@ -26,21 +34,36 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 pub use batcher::BatchPolicy;
-pub use metrics::{Histogram, Metrics};
+pub use metrics::{Histogram, Metrics, OpCounters};
 pub use pool::Pool;
 
-use crate::division::{Algorithm, Divider};
+use crate::division::Algorithm;
 use crate::error::{PositError, Result};
-use crate::posit::Posit;
+use crate::posit::{Posit, MAX_N, MIN_N};
 use crate::runtime::Runtime;
+use crate::unit::{Op, OpRequest, Unit};
 
 /// Which execution engine serves the batches.
 #[derive(Clone, Debug)]
 pub enum Backend {
-    /// Bit-exact Rust digit-recurrence engines, `threads`-way parallel.
+    /// Bit-exact Rust engines, `threads`-way parallel per op group. `alg`
+    /// is the division algorithm used for requests submitted through the
+    /// division conveniences (`submit`/`divide`); explicit
+    /// `Op::Div { alg }` requests pick their own engine.
     Native { alg: Algorithm, threads: usize },
-    /// AOT-compiled JAX/Pallas graph via PJRT (artifacts from `make artifacts`).
+    /// AOT-compiled JAX/Pallas graph via PJRT (artifacts from `make
+    /// artifacts`) for division; other ops fall back to the native units.
     Pjrt { artifacts_dir: PathBuf },
+}
+
+impl Backend {
+    /// The division op used by the legacy division entry points.
+    fn default_div(&self) -> Op {
+        match self {
+            Backend::Native { alg, .. } => Op::Div { alg: *alg },
+            Backend::Pjrt { .. } => Op::DIV,
+        }
+    }
 }
 
 /// Service configuration.
@@ -62,13 +85,15 @@ impl Default for ServiceConfig {
 }
 
 struct Request {
-    x: u64,
-    d: u64,
+    op: Op,
+    a: u64,
+    b: u64,
+    c: u64,
     enqueued: Instant,
     respond: Sender<u64>,
 }
 
-/// An in-flight division submitted through a [`Client`].
+/// An in-flight operation submitted through a [`Client`].
 pub struct Pending {
     n: u32,
     rx: Receiver<u64>,
@@ -82,7 +107,7 @@ impl Pending {
     }
 }
 
-/// A set of in-flight divisions; results come back in submission order.
+/// A set of in-flight operations; results come back in submission order.
 pub struct BatchHandle {
     n: u32,
     rxs: Vec<Receiver<u64>>,
@@ -111,13 +136,14 @@ impl BatchHandle {
     }
 }
 
-/// A cheap, cloneable handle for submitting divisions to a running
+/// A cheap, cloneable handle for submitting operations to a running
 /// [`DivisionService`]. Holding a `Client` does not keep the service
 /// alive: once the service shuts down, submissions return
 /// [`PositError::ServiceStopped`] (already-queued requests still drain).
 #[derive(Clone)]
 pub struct Client {
     n: u32,
+    div_op: Op,
     tx: Weak<Sender<Request>>,
     metrics: Arc<Metrics>,
 }
@@ -139,34 +165,65 @@ impl Client {
         Ok(())
     }
 
-    /// Submit one division; returns immediately with a [`Pending`].
-    pub fn submit(&self, x: Posit, d: Posit) -> Result<Pending> {
-        self.check_width(x)?;
-        self.check_width(d)?;
-        let tx = self.sender()?;
+    fn check_request(&self, req: &OpRequest) -> Result<()> {
+        for &p in req.operands() {
+            self.check_width(p)?;
+        }
+        Ok(())
+    }
+
+    fn enqueue(&self, tx: &Sender<Request>, req: OpRequest, enqueued: Instant) -> Result<Pending> {
         let (rtx, rrx) = channel();
-        tx.send(Request { x: x.to_bits(), d: d.to_bits(), enqueued: Instant::now(), respond: rtx })
+        let [a, b, c] = req.bits();
+        tx.send(Request { op: req.op, a, b, c, enqueued, respond: rtx })
             .map_err(|_| PositError::ServiceStopped)?;
         Ok(Pending { n: self.n, rx: rrx })
+    }
+
+    /// Submit one op-tagged request; returns immediately with a
+    /// [`Pending`].
+    pub fn submit_op(&self, req: OpRequest) -> Result<Pending> {
+        self.check_request(&req)?;
+        let tx = self.sender()?;
+        self.enqueue(&tx, req, Instant::now())
+    }
+
+    /// Submit many op-tagged requests (any mix of operations); returns
+    /// immediately with a [`BatchHandle`] whose results preserve
+    /// submission order. A bad request anywhere rejects the whole batch
+    /// up front — nothing is enqueued.
+    pub fn submit_ops(&self, reqs: &[OpRequest]) -> Result<BatchHandle> {
+        for req in reqs {
+            self.check_request(req)?;
+        }
+        let tx = self.sender()?;
+        let now = Instant::now();
+        let mut rxs = Vec::with_capacity(reqs.len());
+        for &req in reqs {
+            rxs.push(self.enqueue(&tx, req, now)?.rx);
+        }
+        Ok(BatchHandle { n: self.n, rxs })
+    }
+
+    /// Blocking op-tagged request.
+    pub fn run_op(&self, req: OpRequest) -> Result<Posit> {
+        self.submit_op(req)?.wait()
+    }
+
+    /// Submit one division (the service's default engine); returns
+    /// immediately with a [`Pending`].
+    pub fn submit(&self, x: Posit, d: Posit) -> Result<Pending> {
+        self.submit_op(OpRequest::new(self.div_op, &[x, d])?)
     }
 
     /// Submit many divisions; returns immediately with a [`BatchHandle`]
     /// whose results preserve submission order.
     pub fn submit_batch(&self, pairs: &[(Posit, Posit)]) -> Result<BatchHandle> {
-        for &(x, d) in pairs {
-            self.check_width(x)?;
-            self.check_width(d)?;
-        }
-        let tx = self.sender()?;
-        let now = Instant::now();
-        let mut rxs = Vec::with_capacity(pairs.len());
-        for &(x, d) in pairs {
-            let (rtx, rrx) = channel();
-            tx.send(Request { x: x.to_bits(), d: d.to_bits(), enqueued: now, respond: rtx })
-                .map_err(|_| PositError::ServiceStopped)?;
-            rxs.push(rrx);
-        }
-        Ok(BatchHandle { n: self.n, rxs })
+        let reqs: Vec<OpRequest> = pairs
+            .iter()
+            .map(|&(x, d)| OpRequest::new(self.div_op, &[x, d]))
+            .collect::<Result<_>>()?;
+        self.submit_ops(&reqs)
     }
 
     /// Blocking division.
@@ -185,26 +242,63 @@ impl Client {
     }
 }
 
-/// A handle to a running division service.
+/// The native execution state: one cached [`Unit`] per op, built lazily
+/// as traffic arrives (the width is validated at service start, so
+/// construction cannot fail afterwards).
+struct NativeUnits {
+    n: u32,
+    threads: usize,
+    units: HashMap<Op, Unit>,
+}
+
+impl NativeUnits {
+    fn new(n: u32, threads: usize) -> NativeUnits {
+        NativeUnits { n, threads, units: HashMap::new() }
+    }
+
+    fn run(&mut self, op: Op, a: &[u64], b: &[u64], c: &[u64], out: &mut [u64]) {
+        let (n, threads) = (self.n, self.threads);
+        self.units
+            .entry(op)
+            .or_insert_with(|| Unit::new(n, op).expect("width validated at service start"))
+            .run_batch_parallel(a, b, c, out, threads)
+            .expect("lanes are same-length by construction");
+    }
+}
+
+enum Exec {
+    Native(NativeUnits),
+    /// PJRT serves division on the AOT graph; everything else falls back
+    /// to the native units (the graph is division-only).
+    Pjrt { rt: Runtime, native: NativeUnits },
+}
+
+/// A handle to a running posit-unit service. (The name predates the
+/// operation-generic redesign; it serves every [`Op`], not just
+/// division.)
 pub struct DivisionService {
     n: u32,
+    div_op: Op,
     tx: Option<Arc<Sender<Request>>>,
     metrics: Arc<Metrics>,
     leader: Option<JoinHandle<()>>,
 }
 
+/// Alias matching what the service actually is since the op-generic
+/// redesign.
+pub type UnitService = DivisionService;
+
 impl DivisionService {
     /// Start the leader thread (and backend) for `cfg`.
     pub fn start(cfg: ServiceConfig) -> Result<DivisionService> {
+        if !(MIN_N..=MAX_N).contains(&cfg.n) {
+            return Err(PositError::WidthOutOfRange { n: cfg.n });
+        }
         let (tx, rx) = channel::<Request>();
         let metrics = Arc::new(Metrics::default());
         let m = metrics.clone();
         let n = cfg.n;
-
-        enum Exec {
-            Native { divider: Divider, threads: usize },
-            Pjrt(Runtime),
-        }
+        let div_op = cfg.backend.default_div();
 
         // The PJRT client is thread-affine (Rc internally), so the backend
         // is constructed *inside* the leader thread; a ready-channel
@@ -215,19 +309,20 @@ impl DivisionService {
         let leader = std::thread::Builder::new()
             .name("posit-div-leader".into())
             .spawn(move || {
-                let exec = match &backend {
-                    Backend::Native { alg, threads } => match Divider::new(n, *alg) {
-                        Ok(divider) => Exec::Native { divider, threads: *threads },
-                        Err(e) => {
-                            let _ = ready_tx.send(Err(e));
-                            return;
-                        }
-                    },
+                let mut exec = match &backend {
+                    Backend::Native { alg, threads } => {
+                        let mut native = NativeUnits::new(n, *threads);
+                        // pre-build the default division unit (pays the
+                        // Newton LUT etc. before traffic arrives)
+                        let mut warm = [0u64; 0];
+                        native.run(Op::Div { alg: *alg }, &[], &[], &[], &mut warm);
+                        Exec::Native(native)
+                    }
                     Backend::Pjrt { artifacts_dir } => {
                         match Runtime::load(artifacts_dir)
                             .and_then(|rt| rt.warmup(n).map(|()| rt))
                         {
-                            Ok(rt) => Exec::Pjrt(rt),
+                            Ok(rt) => Exec::Pjrt { rt, native: NativeUnits::new(n, 1) },
                             Err(e) => {
                                 let _ = ready_tx.send(Err(e));
                                 return;
@@ -238,26 +333,42 @@ impl DivisionService {
                 let _ = ready_tx.send(Ok(()));
                 while let Some(batch) = batcher::collect_batch(&rx, policy) {
                     let t0 = Instant::now();
-                    let x: Vec<u64> = batch.iter().map(|r| r.x).collect();
-                    let d: Vec<u64> = batch.iter().map(|r| r.d).collect();
-                    let results: Vec<u64> = match &exec {
-                        Exec::Native { divider, threads } => {
-                            let mut out = vec![0u64; x.len()];
-                            divider
-                                .divide_batch_parallel(&x, &d, &mut out, *threads)
-                                .expect("batch slices are same-length by construction");
-                            out
-                        }
-                        Exec::Pjrt(rt) => match rt.divide_bits(n, &x, &d) {
-                            Ok(q) => q,
-                            Err(e) => {
-                                // fail the whole batch as NaR and keep
-                                // serving (errors are per-batch)
-                                eprintln!("pjrt batch failed: {e}");
-                                vec![1u64 << (n - 1); batch.len()]
+                    let mut results = vec![0u64; batch.len()];
+                    for (op, idxs) in batcher::group_indices(&batch, |r| r.op) {
+                        let gather = |lane: fn(&Request) -> u64, used: bool| -> Vec<u64> {
+                            if used {
+                                idxs.iter().map(|&i| lane(&batch[i])).collect()
+                            } else {
+                                Vec::new()
                             }
-                        },
-                    };
+                        };
+                        let a = gather(|r| r.a, true);
+                        let b = gather(|r| r.b, op.arity() >= 2);
+                        let c = gather(|r| r.c, op.arity() >= 3);
+                        let mut out = vec![0u64; idxs.len()];
+                        match &mut exec {
+                            Exec::Native(native) => native.run(op, &a, &b, &c, &mut out),
+                            Exec::Pjrt { rt, native } => {
+                                if matches!(op, Op::Div { .. }) {
+                                    match rt.divide_bits(n, &a, &b) {
+                                        Ok(q) => out = q,
+                                        Err(e) => {
+                                            // fail the whole group as NaR
+                                            // and keep serving (errors are
+                                            // per-group)
+                                            eprintln!("pjrt batch failed: {e}");
+                                            out = vec![1u64 << (n - 1); idxs.len()];
+                                        }
+                                    }
+                                } else {
+                                    native.run(op, &a, &b, &c, &mut out);
+                                }
+                            }
+                        }
+                        for (&i, q) in idxs.iter().zip(out) {
+                            results[i] = q;
+                        }
+                    }
                     m.batch_latency.record(t0.elapsed());
                     m.batches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                     for (req, q) in batch.into_iter().zip(results) {
@@ -266,6 +377,7 @@ impl DivisionService {
                                 .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                         }
                         m.requests.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        m.ops.record(req.op);
                         m.request_latency.record(req.enqueued.elapsed());
                         let _ = req.respond.send(q); // receiver may have gone
                     }
@@ -282,7 +394,7 @@ impl DivisionService {
                 })
             }
         }
-        Ok(DivisionService { n, tx: Some(Arc::new(tx)), metrics, leader: Some(leader) })
+        Ok(DivisionService { n, div_op, tx: Some(Arc::new(tx)), metrics, leader: Some(leader) })
     }
 
     /// Posit width served.
@@ -293,7 +405,12 @@ impl DivisionService {
     /// A cloneable submission handle.
     pub fn client(&self) -> Client {
         let tx = self.tx.as_ref().expect("service running");
-        Client { n: self.n, tx: Arc::downgrade(tx), metrics: self.metrics.clone() }
+        Client {
+            n: self.n,
+            div_op: self.div_op,
+            tx: Arc::downgrade(tx),
+            metrics: self.metrics.clone(),
+        }
     }
 
     /// Blocking division (convenience over [`DivisionService::client`]).
@@ -336,6 +453,7 @@ mod tests {
     use crate::division::golden;
     use crate::posit::mask;
     use crate::testkit::Rng;
+    use crate::workload;
 
     fn native_cfg(n: u32) -> ServiceConfig {
         ServiceConfig {
@@ -417,6 +535,10 @@ mod tests {
             client.divide_batch(&[(Posit::one(16), Posit::one(16))]).err(),
             Some(PositError::ServiceStopped)
         );
+        assert_eq!(
+            client.submit_op(OpRequest::sqrt(Posit::one(16))).err(),
+            Some(PositError::ServiceStopped)
+        );
     }
 
     #[test]
@@ -433,6 +555,10 @@ mod tests {
             client.submit_batch(&pairs).err(),
             Some(PositError::WidthMismatch { expected: 16, got: 8 })
         );
+        assert_eq!(
+            client.submit_op(OpRequest::sqrt(Posit::one(32))).err(),
+            Some(PositError::WidthMismatch { expected: 16, got: 32 })
+        );
         svc.shutdown();
     }
 
@@ -447,6 +573,52 @@ mod tests {
         for (k, q) in (1..=64u64).zip(&got) {
             assert_eq!(q.to_f64(), k as f64);
         }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn every_op_served_end_to_end() {
+        let n = 16;
+        let svc = DivisionService::start(native_cfg(n)).unwrap();
+        let client = svc.client();
+        let two = Posit::from_f64(n, 2.0);
+        let three = Posit::from_f64(n, 3.0);
+        let nine = Posit::from_f64(n, 9.0);
+        assert_eq!(client.run_op(OpRequest::div(nine, three)).unwrap(), three);
+        assert_eq!(client.run_op(OpRequest::sqrt(nine)).unwrap(), three);
+        assert_eq!(client.run_op(OpRequest::mul(two, three)).unwrap().to_f64(), 6.0);
+        assert_eq!(client.run_op(OpRequest::add(two, three)).unwrap().to_f64(), 5.0);
+        assert_eq!(client.run_op(OpRequest::sub(two, three)).unwrap().to_f64(), -1.0);
+        assert_eq!(client.run_op(OpRequest::mul_add(two, three, nine)).unwrap().to_f64(), 15.0);
+        // explicit per-algorithm division routes through its own unit
+        assert_eq!(
+            client
+                .run_op(OpRequest::div_with(Algorithm::Nrd, nine, three))
+                .unwrap(),
+            three
+        );
+        let m = svc.metrics();
+        assert_eq!(m.ops.get(Op::DIV), 2);
+        assert_eq!(m.ops.get(Op::Sqrt), 1);
+        assert_eq!(m.ops.get(Op::MulAdd), 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn mixed_op_batches_route_per_op() {
+        let n = 16;
+        let svc = DivisionService::start(native_cfg(n)).unwrap();
+        let client = svc.client();
+        let mut wl = workload::MixedOps::new(n, workload::OpMix::DEFAULT, 0xA11);
+        let reqs = workload::take_requests(&mut wl, 400);
+        let results = client.submit_ops(&reqs).unwrap().wait().unwrap();
+        for (i, req) in reqs.iter().enumerate() {
+            assert_eq!(results[i], req.golden(), "{} i={i}", req.op);
+        }
+        let m = svc.metrics();
+        let total: u64 = Op::DEFAULTS.iter().map(|&op| m.ops.get(op)).sum();
+        assert_eq!(total, 400, "per-op counters must cover every request");
+        assert!(m.ops.get(Op::Sqrt) > 0, "mixed stream must contain sqrt traffic");
         svc.shutdown();
     }
 }

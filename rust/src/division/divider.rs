@@ -1,89 +1,47 @@
-//! Reusable, zero-alloc division contexts.
+//! The legacy division-only context — now a thin wrapper over the
+//! operation-generic [`Unit`](crate::unit::Unit).
 //!
-//! [`Algorithm::engine`] boxes a fresh `dyn DivEngine` on every call —
-//! fine for one-off experiments, wrong for a hot serving path. A
-//! [`Divider`] is constructed **once** per (width, algorithm), holds the
-//! concrete engine inline (enum dispatch, no heap indirection on the call
-//! path), and caches the width-derived state the wrapper would otherwise
-//! recompute: iteration count, pipelined latency, the operand mask, and —
-//! for the Newton baseline — the seed-reciprocal table, its only
-//! allocation, paid at construction.
-//!
-//! The batch entry point [`Divider::divide_batch`] is the single code
-//! path shared by the coordinator's native worker pool, the benches and
-//! the examples, so every layer measures the same loop.
+//! [`Divider`] was the crate's original zero-alloc hot-path context,
+//! hard-wired to division. The execution surface has since been
+//! generalized: [`crate::unit::Unit`] serves every op (`Div`, `Sqrt`,
+//! `Mul`, `Add`, `Sub`, `MulAdd`) through the same batch-first entry
+//! points, and a `Unit` built with [`crate::unit::Op::Div`] is exactly
+//! what a `Divider` used to be — same engines, same caches, bit-identical
+//! results. `Divider` remains as a deprecated alias so existing callers
+//! keep compiling; new code should construct a `Unit`.
 
-use super::{
-    exec, iterations, latency_cycles, newton::Newton, nrd::Nrd, srt2::Srt2, srt2_cs::Srt2Cs,
-    srt4_cs::Srt4Cs, srt4_scaled::Srt4Scaled, Algorithm, DivEngine, Division, FracQuotient,
-};
-use crate::error::{PositError, Result};
-use crate::posit::{mask, Posit, MAX_N, MIN_N};
-
-/// Concrete engine storage: static dispatch, no `Box`.
-enum EngineAny {
-    Nrd(Nrd),
-    Srt2(Srt2),
-    Srt2Cs(Srt2Cs),
-    Srt4Cs(Srt4Cs),
-    Srt4Scaled(Srt4Scaled),
-    Newton(Newton),
-}
+use super::{Algorithm, DivEngine, Division, FracQuotient};
+use crate::error::Result;
+use crate::posit::Posit;
+use crate::unit::{Op, Unit};
 
 /// A reusable division context for one posit width and one algorithm.
+///
+/// Deprecated: this is now a thin wrapper over a [`Unit`] with
+/// [`Op::Div`]; build that directly for new code (it also serves sqrt,
+/// mul, add/sub and mul-add through the same batch-first surface).
 ///
 /// ```
 /// use posit_div::division::{Algorithm, Divider};
 /// use posit_div::posit::Posit;
 ///
+/// # #[allow(deprecated)]
 /// let div = Divider::new(32, Algorithm::Srt4CsOfFr)?;
 /// let q = div.divide(Posit::from_f64(32, 355.0), Posit::from_f64(32, 113.0))?;
 /// assert!((q.result.to_f64() - 355.0 / 113.0).abs() < 1e-6);
 /// # Ok::<(), posit_div::PositError>(())
 /// ```
-pub struct Divider {
-    n: u32,
-    alg: Algorithm,
-    engine: EngineAny,
-    iterations: u32,
-    cycles: u32,
-    mask: u64,
-}
+#[deprecated(
+    since = "0.3.0",
+    note = "use `Unit::new(n, Op::Div { alg })` — the operation-generic context"
+)]
+pub struct Divider(Unit);
 
+#[allow(deprecated)]
 impl Divider {
     /// Build a context for `Posit<n, 2>` division with `alg`.
-    ///
-    /// All width-derived state (iterations, latency, Newton seed table)
-    /// is computed here, once.
     pub fn new(n: u32, alg: Algorithm) -> Result<Divider> {
-        if !(MIN_N..=MAX_N).contains(&n) {
-            return Err(PositError::WidthOutOfRange { n });
-        }
-        let engine = match alg {
-            Algorithm::Nrd => EngineAny::Nrd(Nrd::new()),
-            Algorithm::NrdAsap23 => EngineAny::Nrd(Nrd::asap23()),
-            Algorithm::Srt2 => EngineAny::Srt2(Srt2::new()),
-            Algorithm::Srt2Cs => EngineAny::Srt2Cs(Srt2Cs::plain()),
-            Algorithm::Srt2CsOf => EngineAny::Srt2Cs(Srt2Cs::with_otf()),
-            Algorithm::Srt2CsOfFr => EngineAny::Srt2Cs(Srt2Cs::with_otf_fr()),
-            Algorithm::Srt4Cs => EngineAny::Srt4Cs(Srt4Cs::plain()),
-            Algorithm::Srt4CsOf => EngineAny::Srt4Cs(Srt4Cs::with_otf()),
-            Algorithm::Srt4CsOfFr => EngineAny::Srt4Cs(Srt4Cs::with_otf_fr()),
-            Algorithm::Srt4Scaled => EngineAny::Srt4Scaled(Srt4Scaled::new()),
-            Algorithm::Newton => EngineAny::Newton(Newton::new()),
-        };
-        let iters = match alg.radix() {
-            Some(r) => iterations(n, r),
-            None => 0,
-        };
-        // `latency_cycles` would build a throwaway Newton (and its seed
-        // LUT) just to ask for the cycle count — use the engine we
-        // already hold instead.
-        let cycles = match &engine {
-            EngineAny::Newton(e) => e.cycles(n),
-            _ => latency_cycles(n, alg),
-        };
-        Ok(Divider { n, alg, engine, iterations: iters, cycles, mask: mask(n) })
+        Ok(Divider(Unit::new(n, Op::Div { alg })?))
     }
 
     /// The default serving context: the paper's optimized radix-4 unit.
@@ -94,73 +52,52 @@ impl Divider {
     /// Posit width this context divides.
     #[inline]
     pub fn width(&self) -> u32 {
-        self.n
+        self.0.width()
     }
 
     /// The algorithm variant.
     #[inline]
     pub fn algorithm(&self) -> Algorithm {
-        self.alg
+        self.0.algorithm().expect("a Divider always wraps a division unit")
     }
 
-    /// Cached recurrence iteration count (0 for the Newton baseline, whose
-    /// step count is data-independent but reported per division).
+    /// Cached recurrence iteration count (0 for the Newton baseline).
     #[inline]
     pub fn iterations(&self) -> u32 {
-        self.iterations
+        self.0.iterations()
     }
 
     /// Cached pipelined latency in cycles (paper §III-E3).
     #[inline]
     pub fn latency_cycles(&self) -> u32 {
-        self.cycles
+        self.0.latency_cycles()
+    }
+
+    /// The wrapped operation-generic context.
+    #[inline]
+    pub fn as_unit(&self) -> &Unit {
+        &self.0
     }
 
     /// One full posit division with metadata. Errors on operand width
     /// mismatch instead of panicking.
     #[inline]
     pub fn divide(&self, x: Posit, d: Posit) -> Result<Division> {
-        if x.width() != self.n {
-            return Err(PositError::WidthMismatch { expected: self.n, got: x.width() });
-        }
-        if d.width() != self.n {
-            return Err(PositError::WidthMismatch { expected: self.n, got: d.width() });
-        }
-        Ok(exec::divide_with(self, x, d))
+        self.0.run(&[x, d])
     }
 
-    /// Divide two raw `n`-bit patterns (high garbage bits are masked off —
-    /// the same contract as the PJRT graph). This is the batch-path inner
-    /// loop.
+    /// Divide two raw `n`-bit patterns (high garbage bits are masked off).
     #[inline]
     pub fn divide_bits(&self, x: u64, d: u64) -> u64 {
-        let x = Posit::from_bits(self.n, x & self.mask);
-        let d = Posit::from_bits(self.n, d & self.mask);
-        exec::divide_with(self, x, d).result.to_bits()
+        self.0.run_bits(x, d, 0)
     }
 
     /// Batch-first division over raw bit patterns: `out[i] = xs[i] / ds[i]`.
-    ///
-    /// Bit-identical to calling [`Divider::divide`] element-wise; the
-    /// coordinator's native backend, the benches and the examples all go
-    /// through this one loop.
     pub fn divide_batch(&self, xs: &[u64], ds: &[u64], out: &mut [u64]) -> Result<()> {
-        if xs.len() != ds.len() || xs.len() != out.len() {
-            return Err(PositError::BatchShapeMismatch {
-                xs: xs.len(),
-                ds: ds.len(),
-                out: out.len(),
-            });
-        }
-        for ((x, d), o) in xs.iter().zip(ds.iter()).zip(out.iter_mut()) {
-            *o = self.divide_bits(*x, *d);
-        }
-        Ok(())
+        self.0.run_batch(xs, ds, &[], out)
     }
 
-    /// [`Divider::divide_batch`] spread over `threads` scoped workers
-    /// (contiguous chunks, results written in place — ordering preserved),
-    /// matching the coordinator's previous always-parallel behavior.
+    /// [`Divider::divide_batch`] spread over `threads` scoped workers.
     pub fn divide_batch_parallel(
         &self,
         xs: &[u64],
@@ -168,77 +105,49 @@ impl Divider {
         out: &mut [u64],
         threads: usize,
     ) -> Result<()> {
-        if xs.len() != ds.len() || xs.len() != out.len() {
-            return Err(PositError::BatchShapeMismatch {
-                xs: xs.len(),
-                ds: ds.len(),
-                out: out.len(),
-            });
-        }
-        let threads = threads.max(1);
-        if threads == 1 || xs.len() <= 1 {
-            return self.divide_batch(xs, ds, out);
-        }
-        let chunk = xs.len().div_ceil(threads).max(1);
-        std::thread::scope(|s| {
-            for ((cx, cd), co) in
-                xs.chunks(chunk).zip(ds.chunks(chunk)).zip(out.chunks_mut(chunk))
-            {
-                s.spawn(move || {
-                    self.divide_batch(cx, cd, co).expect("equal chunk lengths");
-                });
-            }
-        });
-        Ok(())
+        self.0.run_batch_parallel(xs, ds, &[], out, threads)
     }
 }
 
+#[allow(deprecated)]
 impl core::fmt::Debug for Divider {
     fn fmt(&self, f: &mut core::fmt::Formatter<'_>) -> core::fmt::Result {
         f.debug_struct("Divider")
-            .field("n", &self.n)
-            .field("algorithm", &self.alg)
-            .field("iterations", &self.iterations)
-            .field("latency_cycles", &self.cycles)
+            .field("n", &self.width())
+            .field("algorithm", &self.algorithm())
+            .field("iterations", &self.iterations())
+            .field("latency_cycles", &self.latency_cycles())
             .finish()
     }
 }
 
 /// A `Divider` is itself a [`DivEngine`], so it drops into every API that
-/// takes one (the DSP example, the cross-check harnesses) with static
-/// dispatch inside.
+/// takes one with static dispatch inside.
+#[allow(deprecated)]
 impl DivEngine for Divider {
     fn name(&self) -> &'static str {
-        match &self.engine {
-            EngineAny::Nrd(e) => e.name(),
-            EngineAny::Srt2(e) => e.name(),
-            EngineAny::Srt2Cs(e) => e.name(),
-            EngineAny::Srt4Cs(e) => e.name(),
-            EngineAny::Srt4Scaled(e) => e.name(),
-            EngineAny::Newton(e) => e.name(),
-        }
+        self.0.engine_name()
     }
 
     fn algorithm(&self) -> Algorithm {
-        self.alg
+        Divider::algorithm(self)
     }
 
     fn fraction_divide(&self, n: u32, x_sig: u64, d_sig: u64) -> FracQuotient {
-        match &self.engine {
-            EngineAny::Nrd(e) => e.fraction_divide(n, x_sig, d_sig),
-            EngineAny::Srt2(e) => e.fraction_divide(n, x_sig, d_sig),
-            EngineAny::Srt2Cs(e) => e.fraction_divide(n, x_sig, d_sig),
-            EngineAny::Srt4Cs(e) => e.fraction_divide(n, x_sig, d_sig),
-            EngineAny::Srt4Scaled(e) => e.fraction_divide(n, x_sig, d_sig),
-            EngineAny::Newton(e) => e.fraction_divide(n, x_sig, d_sig),
-        }
+        self.0
+            .as_div_engine()
+            .expect("a Divider always wraps a division unit")
+            .fraction_divide(n, x_sig, d_sig)
     }
 }
 
+#[allow(deprecated)]
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::division::golden;
+    use crate::division::{golden, iterations, latency_cycles};
+    use crate::error::PositError;
+    use crate::posit::mask;
     use crate::testkit::Rng;
 
     #[test]
@@ -327,5 +236,20 @@ mod tests {
         assert_eq!(e.algorithm(), Algorithm::Srt4CsOfFr);
         let d = e.divide(Posit::one(16), Posit::one(16));
         assert_eq!(d.result, Posit::one(16));
+    }
+
+    #[test]
+    fn wrapper_is_bit_identical_to_the_unit() {
+        let mut rng = Rng::seeded(0x1DE);
+        let n = 16;
+        for alg in Algorithm::TABLE_IV {
+            let div = Divider::new(n, alg).unwrap();
+            let unit = Unit::new(n, Op::Div { alg }).unwrap();
+            for _ in 0..500 {
+                let (x, d) = (rng.next_u64(), rng.next_u64());
+                assert_eq!(div.divide_bits(x, d), unit.run_bits(x, d, 0), "{}", alg.label());
+            }
+            assert_eq!(div.as_unit().op(), Op::Div { alg });
+        }
     }
 }

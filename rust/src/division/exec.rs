@@ -16,7 +16,9 @@ use super::{latency_cycles, DivEngine, Division};
 use crate::posit::{round::encode_round, Posit, Unpacked};
 
 /// Cycles consumed by the special-case fast path (decode + detect + encode).
-const SPECIAL_CYCLES: u32 = 3;
+/// Shared with [`crate::unit`], whose single-pass arithmetic ops model
+/// their latency as this cost plus datapath stages.
+pub const SPECIAL_CYCLES: u32 = 3;
 
 /// Run a full posit division through `engine`'s fraction datapath.
 pub fn divide_with<E: DivEngine + ?Sized>(engine: &E, x: Posit, d: Posit) -> Division {

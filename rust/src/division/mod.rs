@@ -39,6 +39,7 @@ pub mod srt4_scaled;
 
 use crate::posit::Posit;
 
+#[allow(deprecated)]
 pub use divider::Divider;
 
 /// The division algorithm variants evaluated by the paper (Table IV), plus
@@ -158,27 +159,6 @@ impl Algorithm {
             Algorithm::Srt4CsOfFr => "SRT r4 CS OF FR",
             Algorithm::Srt4Scaled => "SRT r4 scaled",
             Algorithm::Newton => "Newton-Raphson",
-        }
-    }
-
-    /// Instantiate a boxed engine for this algorithm.
-    ///
-    /// Deprecated: this heap-allocates on every call. Build a reusable
-    /// [`Divider`] once and call `divide`/`divide_batch` on it instead.
-    #[deprecated(since = "0.2.0", note = "use `Divider::new(n, alg)` — no per-call Box")]
-    pub fn engine(self) -> Box<dyn DivEngine + Send + Sync> {
-        match self {
-            Algorithm::Nrd => Box::new(nrd::Nrd::new()),
-            Algorithm::NrdAsap23 => Box::new(nrd::Nrd::asap23()),
-            Algorithm::Srt2 => Box::new(srt2::Srt2::new()),
-            Algorithm::Srt2Cs => Box::new(srt2_cs::Srt2Cs::plain()),
-            Algorithm::Srt2CsOf => Box::new(srt2_cs::Srt2Cs::with_otf()),
-            Algorithm::Srt2CsOfFr => Box::new(srt2_cs::Srt2Cs::with_otf_fr()),
-            Algorithm::Srt4Cs => Box::new(srt4_cs::Srt4Cs::plain()),
-            Algorithm::Srt4CsOf => Box::new(srt4_cs::Srt4Cs::with_otf()),
-            Algorithm::Srt4CsOfFr => Box::new(srt4_cs::Srt4Cs::with_otf_fr()),
-            Algorithm::Srt4Scaled => Box::new(srt4_scaled::Srt4Scaled::new()),
-            Algorithm::Newton => Box::new(newton::Newton::new()),
         }
     }
 }

@@ -17,8 +17,15 @@ pub enum PositError {
     WidthOutOfRange { n: u32 },
     /// Two operands (or an operand and a context) disagree on width.
     WidthMismatch { expected: u32, got: u32 },
-    /// Batch slices passed to `divide_batch` have inconsistent lengths.
+    /// Batch slices passed to `divide_batch`/`run_batch` have
+    /// inconsistent lengths (lanes `a`/`b` map to the `xs`/`ds` fields).
     BatchShapeMismatch { xs: usize, ds: usize, out: usize },
+    /// An extra batch operand lane (e.g. lane `c` of `MulAdd`) has the
+    /// wrong length.
+    BatchLaneMismatch { lane: &'static str, expected: usize, got: usize },
+    /// An operation received the wrong number of operands (e.g. `Sqrt` is
+    /// unary, `MulAdd` ternary).
+    ArityMismatch { op: &'static str, expected: usize, got: usize },
     /// A requested execution backend cannot run in this build/environment
     /// (e.g. the PJRT runtime without the `xla` feature).
     BackendUnavailable { reason: String },
@@ -46,6 +53,13 @@ impl core::fmt::Display for PositError {
                 f,
                 "batch shape mismatch: xs.len()={xs}, ds.len()={ds}, out.len()={out}"
             ),
+            PositError::BatchLaneMismatch { lane, expected, got } => write!(
+                f,
+                "batch lane mismatch: lane {lane} has length {got}, expected {expected}"
+            ),
+            PositError::ArityMismatch { op, expected, got } => {
+                write!(f, "op {op} takes {expected} operand(s), got {got}")
+            }
             PositError::BackendUnavailable { reason } => {
                 write!(f, "backend unavailable: {reason}")
             }
@@ -70,6 +84,10 @@ mod tests {
             .contains("Posit16"));
         let e = PositError::BatchShapeMismatch { xs: 1, ds: 2, out: 3 };
         assert!(e.to_string().contains("xs.len()=1"));
+        let e = PositError::ArityMismatch { op: "sqrt", expected: 1, got: 2 };
+        assert!(e.to_string().contains("sqrt") && e.to_string().contains("1"));
+        let e = PositError::BatchLaneMismatch { lane: "c", expected: 4, got: 2 };
+        assert!(e.to_string().contains("lane c"));
         assert!(PositError::Artifacts { detail: "no artifacts found".into() }
             .to_string()
             .contains("no artifacts"));

@@ -2,27 +2,34 @@
 //!
 //! A full reproduction of *"Digit-Recurrence Posit Division"* (Murillo,
 //! Villalba-Moreno, Del Barrio, Botella — CS.AR 2025): radix-2 and radix-4
-//! SRT-family division units for posit arithmetic, together with every
-//! substrate the paper's evaluation depends on:
+//! SRT-family division units for posit arithmetic, grown into an
+//! operation-generic posit functional unit, together with every substrate
+//! the paper's evaluation depends on:
 //!
 //! * [`posit`] — a complete Posit⟨n, es=2⟩ arithmetic library (decode,
 //!   encode, correct rounding, conversions, add/sub/mul) for 4 ≤ n ≤ 64,
 //!   plus the width-typed [`posit::typed`] wrappers `P8`/`P16`/`P32`/`P64`
-//!   with operators and constants.
+//!   with operators, constants and `sqrt()`.
 //! * [`division`] — the paper's contribution: bit-exact, datapath-level
 //!   digit-recurrence dividers (NRD, SRT, SRT-CS, SRT-CS-OF, SRT-CS-OF-FR;
 //!   radix 2 and radix 4, with and without operand scaling), plus a
-//!   Newton–Raphson multiplicative baseline, an exact golden reference,
-//!   a digit-recurrence square-root extension ([`division::sqrt`]) — and
-//!   [`division::Divider`], the reusable zero-alloc context every hot
-//!   path goes through.
+//!   Newton–Raphson multiplicative baseline, an exact golden reference and
+//!   a digit-recurrence square root ([`division::sqrt`]).
+//! * [`unit`] — the execution surface: [`unit::Op`] tags a request
+//!   (`Div { alg }`, `Sqrt`, `Mul`, `Add`, `Sub`, `MulAdd`) and
+//!   [`unit::Unit`] is the reusable zero-alloc context — built once per
+//!   `(width, op)` — whose `run`/`run_batch`/`run_batch_parallel` entry
+//!   points are the one hot path shared by the coordinator, the benches
+//!   and the examples. (The old division-only `Divider` survives as a
+//!   deprecated wrapper.)
 //! * [`hardware`] — a unit-gate 28 nm synthesis cost model that elaborates
 //!   each divider design into a component netlist and regenerates the
 //!   paper's area/delay/power/energy figures (Figs. 4–9) and latency
 //!   tables (Table II).
 //! * [`coordinator`] — the L3 service: a dynamic batcher + worker pool
-//!   that serves division requests from either the native Rust engines or
-//!   an AOT-compiled JAX/Pallas kernel through PJRT ([`runtime`]); clients
+//!   serving **mixed op-tagged traffic** (grouped per op, each group on
+//!   its cached unit) from either the native Rust engines or an
+//!   AOT-compiled JAX/Pallas kernel through PJRT ([`runtime`]); clients
 //!   talk to it through the typed [`coordinator::Client`] handle.
 //! * [`error`] — the typed [`PositError`] every fallible public entry
 //!   point returns (no panicking library surface, no `anyhow` leakage).
@@ -30,7 +37,7 @@
 //!   property-testing harnesses (criterion / proptest are unavailable in
 //!   the offline build environment). The bench side is a full subsystem:
 //!   structured JSON reports, committed `BENCH_<suite>.json` baselines,
-//!   and a threshold-based regression gate shared by all nine bench
+//!   and a threshold-based regression gate shared by all ten bench
 //!   targets and the `posit-div bench` subcommand (EXPERIMENTS.md §Perf).
 //!
 //! ## Quickstart
@@ -39,29 +46,39 @@
 //! use posit_div::prelude::*;
 //!
 //! // Typed posits: constants, operators, rounded conversions. Division
-//! // routes through the paper's optimized SRT r4 CS OF FR engine.
+//! // routes through the paper's optimized SRT r4 CS OF FR engine, sqrt
+//! // through the companion digit-recurrence square root.
 //! let q = P32::round_from(355.0) / P32::round_from(113.0);
 //! assert!((q.to_f64() - 355.0 / 113.0).abs() < 1e-6);
-//! assert!(P32::MIN_POSITIVE < q && q < P32::MAXPOS);
+//! assert_eq!(P32::round_from(2.25).sqrt().to_f64(), 1.5);
 //!
-//! // A reusable division context: built once, no allocation per call,
-//! // scalar and batch entry points, any Table IV algorithm.
-//! let div = Divider::new(32, Algorithm::Srt4Cs)?;
-//! let d = div.divide(Posit::from_f64(32, 355.0), Posit::from_f64(32, 113.0))?;
-//! assert_eq!(d.result.to_bits(), q.to_bits()); // engines are bit-identical
+//! // One reusable unit per (width, op): built once, no allocation per
+//! // call, scalar and batch entry points. Division accepts any Table IV
+//! // algorithm — every engine is bit-exact.
+//! let div = Unit::new(32, Op::Div { alg: Algorithm::Srt4Cs })?;
+//! let d = div.run(&[Posit::from_f64(32, 355.0), Posit::from_f64(32, 113.0)])?;
+//! assert_eq!(d.result.to_bits(), q.to_bits());
 //!
 //! // Batch-first path over raw bit patterns — the same loop the
-//! // coordinator's native backend and the benches run.
-//! let xs = vec![Posit::from_f64(32, 2.0).to_bits(); 8];
-//! let ds = vec![Posit::from_f64(32, 4.0).to_bits(); 8];
+//! // coordinator's native backend and the benches run. Unary ops take
+//! // one lane; pass `&[]` for the rest.
+//! let sqrt = Unit::new(32, Op::Sqrt)?;
+//! let vs = vec![Posit::from_f64(32, 2.25).to_bits(); 8];
 //! let mut out = vec![0u64; 8];
-//! div.divide_batch(&xs, &ds, &mut out)?;
-//! assert!(out.iter().all(|&b| Posit::from_bits(32, b).to_f64() == 0.5));
+//! sqrt.run_batch(&vs, &[], &[], &mut out)?;
+//! assert!(out.iter().all(|&b| Posit::from_bits(32, b).to_f64() == 1.5));
+//!
+//! // Misuse is a typed error, not a panic.
+//! assert!(matches!(
+//!     sqrt.run(&[Posit::from_f64(32, 1.0), Posit::from_f64(32, 2.0)]),
+//!     Err(PositError::ArityMismatch { expected: 1, got: 2, .. })
+//! ));
 //! # Ok::<(), posit_div::PositError>(())
 //! ```
 //!
-//! For a running service (dynamic batching, worker pool, metrics), see
-//! [`coordinator::DivisionService`] and `examples/serve_divide.rs`.
+//! For a running service (dynamic batching, mixed-op routing, worker
+//! pool, metrics), see [`coordinator::DivisionService`] and
+//! `examples/serve_divide.rs`.
 
 pub mod bench;
 pub mod cli;
@@ -73,6 +90,7 @@ pub mod posit;
 pub mod prelude;
 pub mod runtime;
 pub mod testkit;
+pub mod unit;
 pub mod workload;
 
 pub use error::{PositError, Result};

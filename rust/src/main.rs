@@ -1,15 +1,16 @@
 //! `posit-div` — command-line front end for the digit-recurrence posit
-//! division framework.
+//! division framework and its operation-generic unit.
 
 use std::time::Instant;
 
 use posit_div::bench::{harness, suites};
 use posit_div::cli::Args;
 use posit_div::coordinator::{Backend, BatchPolicy, DivisionService, ServiceConfig};
-use posit_div::division::{golden, Algorithm, DivEngine, Divider};
+use posit_div::division::{golden, Algorithm};
 use posit_div::hardware::{report, Mode, TSMC28};
 use posit_div::posit::Posit;
-use posit_div::workload::{self, Workload};
+use posit_div::unit::{Op, Unit};
+use posit_div::workload::{self, OpMix, Workload};
 
 const USAGE: &str = "usage: posit-div <subcommand> [flags]
 
@@ -17,8 +18,10 @@ subcommands:
   synth [--csv] [--n 16|32|64] [--mode comb|pipe]   synthesis model (Figs. 4-9)
   table2                                            iteration/latency table
   divide <x> <d> [--n N] [--alg NAME] [--bits]      one division, all metadata
+  sqrt <v> [--n N] [--bits]                         one square root, all metadata
   verify [--n N] [--cases N]                        engines vs golden cross-check
   serve [--n N] [--backend native|pjrt] [--requests N] [--batch N] [--threads N]
+        [--mix div:6,sqrt:2,mul:4,...]              serve division or mixed-op traffic
   engines                                           list algorithm variants
   bench <suite> [--json P] [--baseline P] [--write-baseline] [--quick|--full]
         [--threshold PCT] [--advisory]              run a bench suite + regression gate
@@ -39,6 +42,7 @@ fn main() {
         Some("synth") => cmd_synth(&args),
         Some("table2") => print!("{}", report::render_table2()),
         Some("divide") => cmd_divide(&args),
+        Some("sqrt") => cmd_sqrt(&args),
         Some("verify") => cmd_verify(&args),
         Some("serve") => cmd_serve(&args),
         Some("bench") => cmd_bench(&args),
@@ -83,6 +87,17 @@ fn cmd_synth(args: &Args) {
     }
 }
 
+/// Parse a positional operand: decimal, or a raw hex pattern with
+/// `--bits`.
+fn parse_operand(args: &Args, n: u32, s: &str) -> Posit {
+    if args.has("bits") {
+        let raw = s.trim_start_matches("0x");
+        Posit::from_bits(n, u64::from_str_radix(raw, 16).expect("hex pattern"))
+    } else {
+        Posit::from_f64(n, s.parse().expect("number"))
+    }
+}
+
 fn cmd_divide(args: &Args) {
     let n: u32 = args.get("n", 32);
     let alg = alg_by_name(args.flag("alg").unwrap_or("Srt4CsOfFr")).unwrap_or_else(|| {
@@ -93,23 +108,34 @@ fn cmd_divide(args: &Args) {
         eprintln!("usage: posit-div divide <x> <d> [--n N] [--alg NAME] [--bits]");
         std::process::exit(2);
     }
-    let parse = |s: &str| -> Posit {
-        if args.has("bits") {
-            let raw = s.trim_start_matches("0x");
-            Posit::from_bits(n, u64::from_str_radix(raw, 16).expect("hex pattern"))
-        } else {
-            Posit::from_f64(n, s.parse().expect("number"))
-        }
-    };
-    let (x, d) = (parse(&args.positional[0]), parse(&args.positional[1]));
-    let ctx = Divider::new(n, alg).unwrap_or_else(|e| {
+    let x = parse_operand(args, n, &args.positional[0]);
+    let d = parse_operand(args, n, &args.positional[1]);
+    let unit = Unit::new(n, Op::Div { alg }).unwrap_or_else(|e| {
         eprintln!("{e}");
         std::process::exit(2);
     });
-    let div = ctx.divide(x, d).expect("operands constructed at the context width");
+    let div = unit.run(&[x, d]).expect("operands constructed at the context width");
     println!(
         "Posit{n} {} / {} = {}  (bits {:#x}, {} iterations, {} cycles, alg {})",
         x, d, div.result, div.result.to_bits(), div.iterations, div.cycles, alg.label()
+    );
+}
+
+fn cmd_sqrt(args: &Args) {
+    let n: u32 = args.get("n", 32);
+    if args.positional.len() != 1 {
+        eprintln!("usage: posit-div sqrt <v> [--n N] [--bits]");
+        std::process::exit(2);
+    }
+    let v = parse_operand(args, n, &args.positional[0]);
+    let unit = Unit::new(n, Op::Sqrt).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    let r = unit.run(&[v]).expect("operand constructed at the context width");
+    println!(
+        "Posit{n} sqrt({}) = {}  (bits {:#x}, {} iterations, {} cycles, engine {})",
+        v, r.result, r.result.to_bits(), r.iterations, r.cycles, unit.engine_name()
     );
 }
 
@@ -117,10 +143,10 @@ fn cmd_verify(args: &Args) {
     let n: u32 = args.get("n", 16);
     let cases: u64 = args.get("cases", 100_000);
     let mut w = workload::Uniform::new(n, 0xF00D);
-    let dividers: Vec<Divider> = Algorithm::ALL
+    let units: Vec<Unit> = Algorithm::ALL
         .iter()
-        .map(|&a| {
-            Divider::new(n, a).unwrap_or_else(|e| {
+        .map(|&alg| {
+            Unit::new(n, Op::Div { alg }).unwrap_or_else(|e| {
                 eprintln!("{e}");
                 std::process::exit(2);
             })
@@ -130,14 +156,14 @@ fn cmd_verify(args: &Args) {
     for i in 0..cases {
         let (x, d) = w.next_pair();
         let want = golden::divide(x, d).result;
-        for ctx in &dividers {
-            let got = ctx.divide(x, d).expect("workload width matches").result;
-            assert_eq!(got, want, "{} diverges at case {i}: {x:?}/{d:?}", ctx.name());
+        for unit in &units {
+            let got = unit.run(&[x, d]).expect("workload width matches").result;
+            assert_eq!(got, want, "{} diverges at case {i}: {x:?}/{d:?}", unit.engine_name());
         }
     }
     println!(
         "verified {} engines x {} cases on Posit{} against the golden model in {:?} - all bit-exact",
-        dividers.len(), cases, n, t0.elapsed()
+        units.len(), cases, n, t0.elapsed()
     );
 }
 
@@ -190,6 +216,12 @@ fn cmd_serve(args: &Args) {
     let requests: usize = args.get("requests", 100_000);
     let batch: usize = args.get("batch", 256);
     let threads: usize = args.get("threads", 4);
+    let mix = args.flag("mix").map(|s| {
+        OpMix::parse(s).unwrap_or_else(|| {
+            eprintln!("invalid --mix {s:?} (expected e.g. div:6,sqrt:2,mul:4)");
+            std::process::exit(2);
+        })
+    });
     let backend = match args.flag("backend").unwrap_or("native") {
         "pjrt" => Backend::Pjrt { artifacts_dir: "artifacts".into() },
         _ => Backend::Native { alg: Algorithm::DEFAULT, threads },
@@ -205,19 +237,32 @@ fn cmd_serve(args: &Args) {
     });
 
     let client = svc.client();
-    let mut w = workload::DspTrace::new(n, 0x5E12);
-    let pairs = workload::take(&mut w, requests);
-    let t0 = Instant::now();
-    let results = client.divide_batch(&pairs).expect("service running");
-    let wall = t0.elapsed();
-
-    // verify a sample against the golden model
-    for (i, &(x, d)) in pairs.iter().enumerate().step_by(101) {
-        assert_eq!(results[i], golden::divide(x, d).result, "{x:?}/{d:?}");
-    }
+    let (wall, what) = if let Some(mix) = mix {
+        let mut w = workload::MixedOps::new(n, mix, 0x5E12);
+        let reqs = workload::take_requests(&mut w, requests);
+        let t0 = Instant::now();
+        let results = client.submit_ops(&reqs).expect("service running").wait().expect("running");
+        let wall = t0.elapsed();
+        // verify a sample against the exact golden references
+        for (i, req) in reqs.iter().enumerate().step_by(101) {
+            assert_eq!(results[i], req.golden(), "{} sample {i}", req.op);
+        }
+        (wall, "mixed ops")
+    } else {
+        let mut w = workload::DspTrace::new(n, 0x5E12);
+        let pairs = workload::take(&mut w, requests);
+        let t0 = Instant::now();
+        let results = client.divide_batch(&pairs).expect("service running");
+        let wall = t0.elapsed();
+        // verify a sample against the golden model
+        for (i, &(x, d)) in pairs.iter().enumerate().step_by(101) {
+            assert_eq!(results[i], golden::divide(x, d).result, "{x:?}/{d:?}");
+        }
+        (wall, "divisions")
+    };
     let m = svc.metrics();
-    println!("served {requests} Posit{n} divisions in {wall:?}");
-    println!("  throughput: {:.0} div/s", requests as f64 / wall.as_secs_f64());
+    println!("served {requests} Posit{n} {what} in {wall:?}");
+    println!("  throughput: {:.0} op/s", requests as f64 / wall.as_secs_f64());
     println!("  request latency: {}", m.request_latency.summary());
     println!("  batch latency:   {}", m.batch_latency.summary());
     println!(
@@ -225,5 +270,6 @@ fn cmd_serve(args: &Args) {
         m.batches.load(std::sync::atomic::Ordering::Relaxed),
         100.0 * m.mean_batch_fill(batch)
     );
+    println!("  ops: {}", m.ops.summary());
     svc.shutdown();
 }

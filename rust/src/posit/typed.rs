@@ -122,6 +122,17 @@ macro_rules! typed_posit {
                 $name(self.0.abs())
             }
 
+            /// Correctly-rounded square root through the digit-recurrence
+            /// engine ([`crate::division::sqrt::SqrtEngine`], bit-exact
+            /// with the exact-rational golden model). Negative values and
+            /// NaR return NaR; the engine is a zero-sized stack value, so
+            /// the method carries no per-call setup beyond what a prebuilt
+            /// [`crate::unit::Unit`] with `Op::Sqrt` would do.
+            #[inline]
+            pub fn sqrt(self) -> $name {
+                $name(crate::division::sqrt::SqrtEngine::new().sqrt(self.0).result)
+            }
+
             /// Next representable posit up, saturating at maxpos.
             #[inline]
             pub fn next_up(self) -> $name {
@@ -231,8 +242,8 @@ macro_rules! typed_posit {
             /// The engine is a two-flag struct built on the stack; no
             /// width checks are needed (both operands are `$name`) and
             /// nothing allocates, so the operator carries no per-call
-            /// setup beyond what a prebuilt [`crate::division::Divider`]
-            /// would do.
+            /// setup beyond what a prebuilt [`crate::unit::Unit`] would
+            /// do.
             #[inline]
             fn div(self, rhs: $name) -> $name {
                 debug_assert_eq!(Algorithm::DEFAULT, Algorithm::Srt4CsOfFr);
@@ -382,6 +393,20 @@ mod tests {
         assert_eq!(x.to_f64(), 20.0);
         x /= P32::round_from(4.0);
         assert_eq!(x.to_f64(), 5.0);
+    }
+
+    #[test]
+    fn typed_sqrt_matches_golden() {
+        use crate::division::sqrt::golden_sqrt;
+        assert_eq!(P16::round_from(2.25).sqrt().to_f64(), 1.5);
+        assert_eq!(P32::round_from(9.0).sqrt().to_f64(), 3.0);
+        assert!((-P16::ONE).sqrt().is_nar());
+        assert!(P8::NAR.sqrt().is_nar());
+        assert!(P64::ZERO.sqrt().is_zero());
+        for bits in 0..=crate::posit::mask(8) {
+            let p = P8::from_bits(bits);
+            assert_eq!(p.sqrt().as_posit(), golden_sqrt(p.as_posit()).result, "{p:?}");
+        }
     }
 
     #[test]

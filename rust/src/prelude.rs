@@ -3,21 +3,28 @@
 //! ```
 //! use posit_div::prelude::*;
 //!
-//! // typed posits with operators
+//! // typed posits with operators (division and sqrt route through the
+//! // paper's digit-recurrence engines)
 //! let q = P32::round_from(355.0) / P32::round_from(113.0);
 //! assert!((q.to_f64() - 355.0 / 113.0).abs() < 1e-6);
+//! assert_eq!(P32::round_from(9.0).sqrt().to_f64(), 3.0);
 //!
-//! // a reusable, zero-alloc division context with a batch-first API
-//! let div = Divider::new(16, Algorithm::Srt4Cs)?;
+//! // an operation-generic, zero-alloc unit with a batch-first API
+//! let sqrt = Unit::new(16, Op::Sqrt)?;
 //! let mut out = [0u64; 2];
-//! div.divide_batch(&[P16::ONE.to_bits(); 2], &[P16::ONE.to_bits(); 2], &mut out)?;
-//! assert_eq!(out, [P16::ONE.to_bits(); 2]);
+//! sqrt.run_batch(&[P16::round_from(9.0).to_bits(); 2], &[], &[], &mut out)?;
+//! assert_eq!(out, [P16::round_from(3.0).to_bits(); 2]);
 //! # Ok::<(), posit_div::PositError>(())
 //! ```
 
 pub use crate::coordinator::{
     Backend, BatchHandle, BatchPolicy, Client, DivisionService, Pending, ServiceConfig,
+    UnitService,
 };
-pub use crate::division::{Algorithm, DivEngine, Divider, Division};
+#[allow(deprecated)]
+pub use crate::division::Divider;
+pub use crate::division::sqrt::{golden_sqrt, SqrtEngine, SqrtResult};
+pub use crate::division::{Algorithm, DivEngine, Division};
 pub use crate::error::{PositError, Result};
 pub use crate::posit::{Posit, RoundFrom, RoundInto, P16, P32, P64, P8};
+pub use crate::unit::{Op, OpRequest, Unit};

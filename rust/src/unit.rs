@@ -1,0 +1,794 @@
+//! Operation-generic posit functional unit — the single batch-first
+//! execution surface for every operation this crate implements.
+//!
+//! The paper's related work ([11], [12] and the authors' companion sqrt
+//! paper [13]) pairs division with square root in one digit-recurrence
+//! unit, and vector-unit designs (FPPU, PVU) go further: one posit
+//! functional unit serving a stream of op-tagged requests. This module is
+//! that surface in software:
+//!
+//! * [`Op`] — the request model: `Div { alg }`, `Sqrt`, `Mul`, `Add`,
+//!   `Sub`, `MulAdd`.
+//! * [`OpRequest`] — one op plus its operands (arity 1–3), the unit of
+//!   traffic for the coordinator and the mixed workloads.
+//! * [`Unit`] — a reusable, zero-alloc execution context for one
+//!   `(width, op)` pair. Built once, it owns the concrete engine state
+//!   (enum dispatch, no heap indirection on the call path) and the
+//!   width-derived caches, and exposes [`Unit::run`], [`Unit::run_batch`]
+//!   and [`Unit::run_batch_parallel`] as the one hot path shared by the
+//!   coordinator's native backend, the benches and the examples.
+//!
+//! Division semantics are bit-identical to the former division-only
+//! context (`Divider`, now a thin deprecated wrapper over a `Unit` with
+//! `Op::Div`): the same per-algorithm engines run behind the same shared
+//! [`exec`] front/back end.
+
+use std::fmt;
+
+use crate::division::sqrt::{golden_sqrt, SqrtEngine};
+use crate::division::{
+    exec, golden, iterations, latency_cycles, newton::Newton, nrd::Nrd, srt2::Srt2,
+    srt2_cs::Srt2Cs, srt4_cs::Srt4Cs, srt4_scaled::Srt4Scaled, Algorithm, DivEngine, Division,
+    FracQuotient,
+};
+use crate::error::{PositError, Result};
+use crate::posit::{mask, Posit, MAX_N, MIN_N};
+
+/// Modeled pipeline cycles for the single-pass arithmetic ops: the
+/// decode/detect/encode cost of the special path ([`exec::SPECIAL_CYCLES`])
+/// plus one datapath stage.
+const ARITH_CYCLES: u32 = exec::SPECIAL_CYCLES + 1;
+
+/// The operations a [`Unit`] can serve.
+///
+/// Operand convention (`a`, `b`, `c` are the request lanes, in order):
+///
+/// | op | result | arity |
+/// |----|--------|-------|
+/// | `Div { alg }` | `a / b` via the chosen Table IV engine | 2 |
+/// | `Sqrt` | `√a` (negative → NaR) | 1 |
+/// | `Mul` | `a · b` | 2 |
+/// | `Add` | `a + b` | 2 |
+/// | `Sub` | `a − b` | 2 |
+/// | `MulAdd` | `a · b + c` (mul+add, two roundings — not a quire) | 3 |
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Op {
+    /// Division through one of the paper's engines.
+    Div { alg: Algorithm },
+    /// Digit-recurrence square root (radix-2).
+    Sqrt,
+    /// Correctly-rounded multiplication.
+    Mul,
+    /// Correctly-rounded addition.
+    Add,
+    /// Correctly-rounded subtraction.
+    Sub,
+    /// Fused-style `a·b + c` built from mul+add (two roundings).
+    MulAdd,
+}
+
+impl Op {
+    /// Division with the paper's default serving engine
+    /// ([`Algorithm::DEFAULT`], SRT r4 CS OF FR).
+    pub const DIV: Op = Op::Div { alg: Algorithm::DEFAULT };
+
+    /// One representative of every operation kind (division at the
+    /// default algorithm) — what "every op" sweeps iterate.
+    pub const DEFAULTS: [Op; 6] = [Op::DIV, Op::Sqrt, Op::Mul, Op::Add, Op::Sub, Op::MulAdd];
+
+    /// Number of operands the op consumes.
+    #[inline]
+    pub fn arity(self) -> usize {
+        match self {
+            Op::Sqrt => 1,
+            Op::MulAdd => 3,
+            _ => 2,
+        }
+    }
+
+    /// Stable short name of the operation kind (ignores the division
+    /// algorithm): `div`, `sqrt`, `mul`, `add`, `sub`, `mul_add`.
+    pub fn name(self) -> &'static str {
+        match self {
+            Op::Div { .. } => "div",
+            Op::Sqrt => "sqrt",
+            Op::Mul => "mul",
+            Op::Add => "add",
+            Op::Sub => "sub",
+            Op::MulAdd => "mul_add",
+        }
+    }
+
+    /// Full label including the division algorithm, for reports.
+    pub fn label(self) -> String {
+        match self {
+            Op::Div { alg } => format!("div[{}]", alg.label()),
+            other => other.name().to_string(),
+        }
+    }
+}
+
+impl fmt::Display for Op {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Op::Div { alg } => write!(f, "div[{}]", alg.label()),
+            other => f.write_str(other.name()),
+        }
+    }
+}
+
+/// One op-tagged scalar request: the operation plus its operands. The
+/// traffic unit of the coordinator ([`crate::coordinator::Client`]) and
+/// the mixed workloads ([`crate::workload::MixedOps`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OpRequest {
+    pub op: Op,
+    /// Fixed three slots; only the first [`Op::arity`] are meaningful
+    /// (the rest are zero posits of the same width).
+    operands: [Posit; 3],
+}
+
+impl OpRequest {
+    /// Build a request, checking arity and that all operands share one
+    /// width.
+    pub fn new(op: Op, operands: &[Posit]) -> Result<OpRequest> {
+        if operands.len() != op.arity() {
+            return Err(PositError::ArityMismatch {
+                op: op.name(),
+                expected: op.arity(),
+                got: operands.len(),
+            });
+        }
+        let w = operands[0].width();
+        for p in operands {
+            if p.width() != w {
+                return Err(PositError::WidthMismatch { expected: w, got: p.width() });
+            }
+        }
+        let mut slots = [Posit::zero(w); 3];
+        slots[..operands.len()].copy_from_slice(operands);
+        Ok(OpRequest { op, operands: slots })
+    }
+
+    fn unary(op: Op, a: Posit) -> OpRequest {
+        OpRequest { op, operands: [a, Posit::zero(a.width()), Posit::zero(a.width())] }
+    }
+
+    fn binary(op: Op, a: Posit, b: Posit) -> OpRequest {
+        debug_assert_eq!(a.width(), b.width(), "mixed-width {op:?} request");
+        OpRequest { op, operands: [a, b, Posit::zero(a.width())] }
+    }
+
+    /// `x / d` with the default engine.
+    pub fn div(x: Posit, d: Posit) -> OpRequest {
+        Self::binary(Op::DIV, x, d)
+    }
+
+    /// `x / d` with a specific Table IV engine.
+    pub fn div_with(alg: Algorithm, x: Posit, d: Posit) -> OpRequest {
+        Self::binary(Op::Div { alg }, x, d)
+    }
+
+    /// `√v`.
+    pub fn sqrt(v: Posit) -> OpRequest {
+        Self::unary(Op::Sqrt, v)
+    }
+
+    /// `a · b`.
+    pub fn mul(a: Posit, b: Posit) -> OpRequest {
+        Self::binary(Op::Mul, a, b)
+    }
+
+    /// `a + b`.
+    pub fn add(a: Posit, b: Posit) -> OpRequest {
+        Self::binary(Op::Add, a, b)
+    }
+
+    /// `a − b`.
+    pub fn sub(a: Posit, b: Posit) -> OpRequest {
+        Self::binary(Op::Sub, a, b)
+    }
+
+    /// `a · b + c`.
+    pub fn mul_add(a: Posit, b: Posit, c: Posit) -> OpRequest {
+        debug_assert_eq!(a.width(), b.width(), "mixed-width MulAdd request");
+        debug_assert_eq!(a.width(), c.width(), "mixed-width MulAdd request");
+        OpRequest { op: Op::MulAdd, operands: [a, b, c] }
+    }
+
+    /// The meaningful operands (first `arity` slots).
+    #[inline]
+    pub fn operands(&self) -> &[Posit] {
+        &self.operands[..self.op.arity()]
+    }
+
+    /// Posit width of the request's first operand. [`OpRequest::new`]
+    /// rejects mixed-width operand sets (the named constructors
+    /// `debug_assert` it), and [`Unit::run`] / the coordinator re-check
+    /// every operand against the serving width, so a mixed-width request
+    /// surfaces as a typed [`PositError::WidthMismatch`] at execution.
+    #[inline]
+    pub fn width(&self) -> u32 {
+        self.operands[0].width()
+    }
+
+    /// All three operand slots as raw bit patterns (unused slots are 0).
+    #[inline]
+    pub fn bits(&self) -> [u64; 3] {
+        [self.operands[0].to_bits(), self.operands[1].to_bits(), self.operands[2].to_bits()]
+    }
+
+    /// The exact expected result for this request, from the crate's
+    /// golden references: the exact-rational division/sqrt models,
+    /// the correctly-rounded arithmetic library for the rest. The one
+    /// verification table shared by the serve drivers, the bench suites
+    /// and the tests — independent of the [`Unit`] execution path.
+    pub fn golden(&self) -> Posit {
+        let ops = self.operands();
+        match self.op {
+            Op::Div { .. } => golden::divide(ops[0], ops[1]).result,
+            Op::Sqrt => golden_sqrt(ops[0]).result,
+            Op::Mul => ops[0].mul(ops[1]),
+            Op::Add => ops[0].add(ops[1]),
+            Op::Sub => ops[0].sub(ops[1]),
+            Op::MulAdd => ops[0].mul_add(ops[1], ops[2]),
+        }
+    }
+}
+
+/// Concrete division-engine storage: static dispatch, no `Box`.
+pub(crate) enum EngineAny {
+    Nrd(Nrd),
+    Srt2(Srt2),
+    Srt2Cs(Srt2Cs),
+    Srt4Cs(Srt4Cs),
+    Srt4Scaled(Srt4Scaled),
+    Newton(Newton),
+}
+
+impl EngineAny {
+    fn for_algorithm(alg: Algorithm) -> EngineAny {
+        match alg {
+            Algorithm::Nrd => EngineAny::Nrd(Nrd::new()),
+            Algorithm::NrdAsap23 => EngineAny::Nrd(Nrd::asap23()),
+            Algorithm::Srt2 => EngineAny::Srt2(Srt2::new()),
+            Algorithm::Srt2Cs => EngineAny::Srt2Cs(Srt2Cs::plain()),
+            Algorithm::Srt2CsOf => EngineAny::Srt2Cs(Srt2Cs::with_otf()),
+            Algorithm::Srt2CsOfFr => EngineAny::Srt2Cs(Srt2Cs::with_otf_fr()),
+            Algorithm::Srt4Cs => EngineAny::Srt4Cs(Srt4Cs::plain()),
+            Algorithm::Srt4CsOf => EngineAny::Srt4Cs(Srt4Cs::with_otf()),
+            Algorithm::Srt4CsOfFr => EngineAny::Srt4Cs(Srt4Cs::with_otf_fr()),
+            Algorithm::Srt4Scaled => EngineAny::Srt4Scaled(Srt4Scaled::new()),
+            Algorithm::Newton => EngineAny::Newton(Newton::new()),
+        }
+    }
+}
+
+/// `EngineAny` is itself a [`DivEngine`] (static dispatch inside), so the
+/// shared [`exec`] wrapper and every API taking a `&dyn DivEngine` accept
+/// it directly.
+impl DivEngine for EngineAny {
+    fn name(&self) -> &'static str {
+        match self {
+            EngineAny::Nrd(e) => e.name(),
+            EngineAny::Srt2(e) => e.name(),
+            EngineAny::Srt2Cs(e) => e.name(),
+            EngineAny::Srt4Cs(e) => e.name(),
+            EngineAny::Srt4Scaled(e) => e.name(),
+            EngineAny::Newton(e) => e.name(),
+        }
+    }
+
+    fn algorithm(&self) -> Algorithm {
+        match self {
+            EngineAny::Nrd(e) => e.algorithm(),
+            EngineAny::Srt2(e) => e.algorithm(),
+            EngineAny::Srt2Cs(e) => e.algorithm(),
+            EngineAny::Srt4Cs(e) => e.algorithm(),
+            EngineAny::Srt4Scaled(e) => e.algorithm(),
+            EngineAny::Newton(e) => e.algorithm(),
+        }
+    }
+
+    fn fraction_divide(&self, n: u32, x_sig: u64, d_sig: u64) -> FracQuotient {
+        match self {
+            EngineAny::Nrd(e) => e.fraction_divide(n, x_sig, d_sig),
+            EngineAny::Srt2(e) => e.fraction_divide(n, x_sig, d_sig),
+            EngineAny::Srt2Cs(e) => e.fraction_divide(n, x_sig, d_sig),
+            EngineAny::Srt4Cs(e) => e.fraction_divide(n, x_sig, d_sig),
+            EngineAny::Srt4Scaled(e) => e.fraction_divide(n, x_sig, d_sig),
+            EngineAny::Newton(e) => e.fraction_divide(n, x_sig, d_sig),
+        }
+    }
+}
+
+/// Per-op engine state held by a [`Unit`].
+enum Core {
+    Div { engine: EngineAny },
+    Sqrt { engine: SqrtEngine },
+    Mul,
+    Add,
+    Sub,
+    MulAdd,
+}
+
+/// A reusable execution context for one posit width and one [`Op`].
+///
+/// All width-derived state (iteration count, latency model, operand mask,
+/// and — for the Newton division baseline — its seed-reciprocal table, the
+/// only allocation) is computed once at construction; the run entry points
+/// allocate nothing.
+///
+/// ```
+/// use posit_div::posit::Posit;
+/// use posit_div::unit::{Op, Unit};
+///
+/// let div = Unit::new(32, Op::DIV)?;
+/// let q = div.run(&[Posit::from_f64(32, 355.0), Posit::from_f64(32, 113.0)])?;
+/// assert!((q.result.to_f64() - 355.0 / 113.0).abs() < 1e-6);
+///
+/// let sqrt = Unit::new(32, Op::Sqrt)?;
+/// let r = sqrt.run(&[Posit::from_f64(32, 9.0)])?;
+/// assert_eq!(r.result.to_f64(), 3.0);
+/// # Ok::<(), posit_div::PositError>(())
+/// ```
+pub struct Unit {
+    n: u32,
+    op: Op,
+    core: Core,
+    iterations: u32,
+    cycles: u32,
+    mask: u64,
+}
+
+impl Unit {
+    /// Build a context for `Posit<n, 2>` serving `op`. All width-derived
+    /// state is computed here, once.
+    pub fn new(n: u32, op: Op) -> Result<Unit> {
+        if !(MIN_N..=MAX_N).contains(&n) {
+            return Err(PositError::WidthOutOfRange { n });
+        }
+        let (core, iters, cycles) = match op {
+            Op::Div { alg } => {
+                let engine = EngineAny::for_algorithm(alg);
+                let iters = match alg.radix() {
+                    Some(r) => iterations(n, r),
+                    None => 0,
+                };
+                // `latency_cycles` would build a throwaway Newton (and its
+                // seed LUT) just to ask for the cycle count — use the
+                // engine we already hold instead.
+                let cycles = match &engine {
+                    EngineAny::Newton(e) => e.cycles(n),
+                    _ => latency_cycles(n, alg),
+                };
+                (Core::Div { engine }, iters, cycles)
+            }
+            Op::Sqrt => {
+                let engine = SqrtEngine::new();
+                let iters = engine.iterations(n);
+                (Core::Sqrt { engine }, iters, iters + exec::SPECIAL_CYCLES)
+            }
+            Op::Mul => (Core::Mul, 0, ARITH_CYCLES),
+            Op::Add => (Core::Add, 0, ARITH_CYCLES),
+            Op::Sub => (Core::Sub, 0, ARITH_CYCLES),
+            Op::MulAdd => (Core::MulAdd, 0, ARITH_CYCLES + 1),
+        };
+        Ok(Unit { n, op, core, iterations: iters, cycles, mask: mask(n) })
+    }
+
+    /// Posit width this context serves.
+    #[inline]
+    pub fn width(&self) -> u32 {
+        self.n
+    }
+
+    /// The operation this context serves.
+    #[inline]
+    pub fn op(&self) -> Op {
+        self.op
+    }
+
+    /// Number of operands per request ([`Op::arity`]).
+    #[inline]
+    pub fn arity(&self) -> usize {
+        self.op.arity()
+    }
+
+    /// The division algorithm, for `Op::Div` units.
+    #[inline]
+    pub fn algorithm(&self) -> Option<Algorithm> {
+        match &self.core {
+            Core::Div { engine } => Some(engine.algorithm()),
+            _ => None,
+        }
+    }
+
+    /// Engine name for reports: the Table IV label for division units
+    /// (`"SRT r4 CS OF FR"`, …), the op name otherwise.
+    pub fn engine_name(&self) -> &'static str {
+        match &self.core {
+            Core::Div { engine } => engine.name(),
+            Core::Sqrt { .. } => "sqrt r2",
+            Core::Mul => "mul",
+            Core::Add => "add",
+            Core::Sub => "sub",
+            Core::MulAdd => "mul+add",
+        }
+    }
+
+    /// The division engine of an `Op::Div` unit as a [`DivEngine`], so it
+    /// drops into every API that takes one (the DSP example, the
+    /// cross-check harnesses) with static dispatch inside. `None` for
+    /// non-division units.
+    pub fn as_div_engine(&self) -> Option<&(dyn DivEngine + Send + Sync)> {
+        match &self.core {
+            Core::Div { engine } => Some(engine),
+            _ => None,
+        }
+    }
+
+    /// Cached recurrence iteration count per operation: Table II for
+    /// division (0 for the Newton baseline), one per result bit for sqrt,
+    /// 0 for the single-pass arithmetic ops.
+    #[inline]
+    pub fn iterations(&self) -> u32 {
+        self.iterations
+    }
+
+    /// Cached pipelined latency model in cycles (paper §III-E3 for
+    /// division; iterations + decode/encode for sqrt; a single datapath
+    /// stage for mul/add/sub).
+    #[inline]
+    pub fn latency_cycles(&self) -> u32 {
+        self.cycles
+    }
+
+    /// One scalar operation with metadata. `operands.len()` must equal
+    /// [`Unit::arity`] and every operand must be at the context width;
+    /// both misuses are typed errors, not panics.
+    pub fn run(&self, operands: &[Posit]) -> Result<Division> {
+        if operands.len() != self.op.arity() {
+            return Err(PositError::ArityMismatch {
+                op: self.op.name(),
+                expected: self.op.arity(),
+                got: operands.len(),
+            });
+        }
+        for p in operands {
+            if p.width() != self.n {
+                return Err(PositError::WidthMismatch { expected: self.n, got: p.width() });
+            }
+        }
+        Ok(match &self.core {
+            Core::Div { engine } => exec::divide_with(engine, operands[0], operands[1]),
+            Core::Sqrt { engine } => {
+                let r = engine.sqrt(operands[0]);
+                Division {
+                    result: r.result,
+                    iterations: r.iterations,
+                    cycles: if r.iterations == 0 { exec::SPECIAL_CYCLES } else { self.cycles },
+                }
+            }
+            Core::Mul => self.arith_division(operands[0].mul(operands[1])),
+            Core::Add => self.arith_division(operands[0].add(operands[1])),
+            Core::Sub => self.arith_division(operands[0].sub(operands[1])),
+            Core::MulAdd => self.arith_division(operands[0].mul_add(operands[1], operands[2])),
+        })
+    }
+
+    #[inline]
+    fn arith_division(&self, result: Posit) -> Division {
+        Division { result, iterations: 0, cycles: self.cycles }
+    }
+
+    /// One operation over raw `n`-bit patterns (high garbage bits are
+    /// masked off — the same contract as the PJRT graph). Lanes beyond the
+    /// op's arity are ignored. This is the batch-path inner loop.
+    #[inline]
+    pub fn run_bits(&self, a: u64, b: u64, c: u64) -> u64 {
+        let p = |bits: u64| Posit::from_bits(self.n, bits & self.mask);
+        match &self.core {
+            Core::Div { engine } => exec::divide_with(engine, p(a), p(b)).result.to_bits(),
+            Core::Sqrt { engine } => engine.sqrt(p(a)).result.to_bits(),
+            Core::Mul => p(a).mul(p(b)).to_bits(),
+            Core::Add => p(a).add(p(b)).to_bits(),
+            Core::Sub => p(a).sub(p(b)).to_bits(),
+            Core::MulAdd => p(a).mul_add(p(b), p(c)).to_bits(),
+        }
+    }
+
+    /// Lanes the op uses must match `out`'s length; unused lanes may be
+    /// empty (or padded to the same length). Lane `a`/`b` violations
+    /// report [`PositError::BatchShapeMismatch`] (lanes map to the old
+    /// `xs`/`ds` fields), lane `c` [`PositError::BatchLaneMismatch`].
+    fn check_lanes(&self, a: &[u64], b: &[u64], c: &[u64], len: usize) -> Result<()> {
+        let arity = self.op.arity();
+        let bad = |lane: &[u64], used: bool| {
+            if used {
+                lane.len() != len
+            } else {
+                !lane.is_empty() && lane.len() != len
+            }
+        };
+        if bad(a, true) || bad(b, arity >= 2) {
+            return Err(PositError::BatchShapeMismatch { xs: a.len(), ds: b.len(), out: len });
+        }
+        if bad(c, arity >= 3) {
+            return Err(PositError::BatchLaneMismatch { lane: "c", expected: len, got: c.len() });
+        }
+        Ok(())
+    }
+
+    /// Batch-first execution over raw bit patterns:
+    /// `out[i] = op(a[i], b[i], c[i])`, taking only the lanes the op uses
+    /// (pass `&[]` for the rest). Bit-identical to calling [`Unit::run`]
+    /// element-wise; the coordinator's native backend, the benches and the
+    /// examples all go through this one loop.
+    pub fn run_batch(&self, a: &[u64], b: &[u64], c: &[u64], out: &mut [u64]) -> Result<()> {
+        self.check_lanes(a, b, c, out.len())?;
+        match self.op.arity() {
+            1 => {
+                for (&x, o) in a.iter().zip(out.iter_mut()) {
+                    *o = self.run_bits(x, 0, 0);
+                }
+            }
+            2 => {
+                for ((&x, &y), o) in a.iter().zip(b.iter()).zip(out.iter_mut()) {
+                    *o = self.run_bits(x, y, 0);
+                }
+            }
+            _ => {
+                for (((&x, &y), &z), o) in
+                    a.iter().zip(b.iter()).zip(c.iter()).zip(out.iter_mut())
+                {
+                    *o = self.run_bits(x, y, z);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// [`Unit::run_batch`] spread over `threads` scoped workers
+    /// (contiguous chunks, results written in place — ordering preserved).
+    pub fn run_batch_parallel(
+        &self,
+        a: &[u64],
+        b: &[u64],
+        c: &[u64],
+        out: &mut [u64],
+        threads: usize,
+    ) -> Result<()> {
+        self.check_lanes(a, b, c, out.len())?;
+        let threads = threads.max(1);
+        if threads == 1 || out.len() <= 1 {
+            return self.run_batch(a, b, c, out);
+        }
+        let chunk = out.len().div_ceil(threads).max(1);
+        std::thread::scope(|s| {
+            let mut start = 0usize;
+            for co in out.chunks_mut(chunk) {
+                let end = start + co.len();
+                let ca = &a[start..end];
+                let cb = if b.is_empty() { b } else { &b[start..end] };
+                let cc = if c.is_empty() { c } else { &c[start..end] };
+                s.spawn(move || {
+                    self.run_batch(ca, cb, cc, co).expect("equal chunk lanes");
+                });
+                start = end;
+            }
+        });
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Unit {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Unit")
+            .field("n", &self.n)
+            .field("op", &self.op)
+            .field("engine", &self.engine_name())
+            .field("iterations", &self.iterations)
+            .field("latency_cycles", &self.cycles)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Rng;
+
+    #[test]
+    fn op_metadata() {
+        assert_eq!(Op::Sqrt.arity(), 1);
+        assert_eq!(Op::DIV.arity(), 2);
+        assert_eq!(Op::MulAdd.arity(), 3);
+        assert_eq!(Op::DIV.name(), "div");
+        assert_eq!(Op::MulAdd.name(), "mul_add");
+        assert_eq!(Op::DIV.label(), "div[SRT r4 CS OF FR]");
+        assert_eq!(Op::Sqrt.label(), "sqrt");
+        assert_eq!(Op::Sqrt.to_string(), "sqrt");
+        assert_eq!(Op::DEFAULTS.len(), 6);
+    }
+
+    #[test]
+    fn rejects_bad_width() {
+        assert_eq!(Unit::new(3, Op::DIV).err(), Some(PositError::WidthOutOfRange { n: 3 }));
+        assert_eq!(Unit::new(65, Op::Sqrt).err(), Some(PositError::WidthOutOfRange { n: 65 }));
+        assert!(Unit::new(4, Op::Mul).is_ok());
+        assert!(Unit::new(64, Op::DIV).is_ok());
+    }
+
+    #[test]
+    fn rejects_arity_and_width_misuse() {
+        let unit = Unit::new(16, Op::Sqrt).unwrap();
+        assert_eq!(
+            unit.run(&[Posit::one(16), Posit::one(16)]).err(),
+            Some(PositError::ArityMismatch { op: "sqrt", expected: 1, got: 2 })
+        );
+        assert_eq!(
+            unit.run(&[Posit::one(32)]).err(),
+            Some(PositError::WidthMismatch { expected: 16, got: 32 })
+        );
+        let div = Unit::new(16, Op::DIV).unwrap();
+        assert_eq!(
+            div.run(&[Posit::one(16)]).err(),
+            Some(PositError::ArityMismatch { op: "div", expected: 2, got: 1 })
+        );
+    }
+
+    #[test]
+    fn rejects_batch_lane_mismatch() {
+        let div = Unit::new(16, Op::DIV).unwrap();
+        let mut out = [0u64; 2];
+        assert_eq!(
+            div.run_batch(&[1, 2, 3], &[1, 2, 3], &[], &mut out).err(),
+            Some(PositError::BatchShapeMismatch { xs: 3, ds: 3, out: 2 })
+        );
+        assert_eq!(
+            div.run_batch(&[1, 2], &[1], &[], &mut out).err(),
+            Some(PositError::BatchShapeMismatch { xs: 2, ds: 1, out: 2 })
+        );
+        let fma = Unit::new(16, Op::MulAdd).unwrap();
+        assert_eq!(
+            fma.run_batch(&[1, 2], &[1, 2], &[1], &mut out).err(),
+            Some(PositError::BatchLaneMismatch { lane: "c", expected: 2, got: 1 })
+        );
+        let sqrt = Unit::new(16, Op::Sqrt).unwrap();
+        // unused lanes may be empty or padded to the batch length
+        assert!(sqrt.run_batch(&[1, 2], &[], &[], &mut out).is_ok());
+        assert!(sqrt.run_batch(&[1, 2], &[0, 0], &[0, 0], &mut out).is_ok());
+        assert_eq!(
+            sqrt.run_batch(&[1, 2], &[0], &[], &mut out).err(),
+            Some(PositError::BatchShapeMismatch { xs: 2, ds: 1, out: 2 })
+        );
+    }
+
+    #[test]
+    fn every_op_batch_matches_scalar_references() {
+        let mut rng = Rng::seeded(0x017);
+        for n in [8u32, 16, 32] {
+            let a: Vec<u64> = (0..200).map(|_| rng.next_u64() & mask(n)).collect();
+            let b: Vec<u64> = (0..200).map(|_| rng.next_u64() & mask(n)).collect();
+            let c: Vec<u64> = (0..200).map(|_| rng.next_u64() & mask(n)).collect();
+            for op in Op::DEFAULTS {
+                let unit = Unit::new(n, op).unwrap();
+                let (lb, lc): (&[u64], &[u64]) = match op.arity() {
+                    1 => (&[], &[]),
+                    2 => (&b, &[]),
+                    _ => (&b, &c),
+                };
+                let mut out = vec![0u64; a.len()];
+                unit.run_batch(&a, lb, lc, &mut out).unwrap();
+                for i in 0..a.len() {
+                    let pa = Posit::from_bits(n, a[i]);
+                    let pb = Posit::from_bits(n, b[i]);
+                    let pc = Posit::from_bits(n, c[i]);
+                    let want = match op {
+                        Op::Div { .. } => golden::divide(pa, pb).result,
+                        Op::Sqrt => golden_sqrt(pa).result,
+                        Op::Mul => pa.mul(pb),
+                        Op::Add => pa.add(pb),
+                        Op::Sub => pa.sub(pb),
+                        Op::MulAdd => pa.mul_add(pb, pc),
+                    };
+                    assert_eq!(out[i], want.to_bits(), "{op} n={n} i={i}");
+                    let operands: Vec<Posit> =
+                        [pa, pb, pc].into_iter().take(op.arity()).collect();
+                    let scalar = unit.run(&operands).unwrap();
+                    assert_eq!(scalar.result.to_bits(), want.to_bits(), "{op} scalar n={n}");
+                    // the shared reference helper agrees with this test's
+                    // independent per-op table
+                    let req = OpRequest::new(op, &operands).unwrap();
+                    assert_eq!(req.golden(), want, "{op} golden() n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_batch_is_bit_identical_for_every_op() {
+        let mut rng = Rng::seeded(0x9B);
+        let n = 16;
+        let a: Vec<u64> = (0..777).map(|_| rng.next_u64() & mask(n)).collect();
+        let b: Vec<u64> = (0..777).map(|_| rng.next_u64() & mask(n)).collect();
+        let c: Vec<u64> = (0..777).map(|_| rng.next_u64() & mask(n)).collect();
+        for op in Op::DEFAULTS {
+            let unit = Unit::new(n, op).unwrap();
+            let (lb, lc): (&[u64], &[u64]) = match op.arity() {
+                1 => (&[], &[]),
+                2 => (&b, &[]),
+                _ => (&b, &c),
+            };
+            let mut serial = vec![0u64; a.len()];
+            let mut parallel = vec![0u64; a.len()];
+            unit.run_batch(&a, lb, lc, &mut serial).unwrap();
+            unit.run_batch_parallel(&a, lb, lc, &mut parallel, 4).unwrap();
+            assert_eq!(serial, parallel, "{op}");
+        }
+    }
+
+    #[test]
+    fn division_metadata_matches_free_functions() {
+        for n in [8u32, 16, 32, 64] {
+            for alg in Algorithm::TABLE_IV {
+                let unit = Unit::new(n, Op::Div { alg }).unwrap();
+                assert_eq!(unit.iterations(), iterations(n, alg.radix().unwrap()));
+                assert_eq!(unit.latency_cycles(), latency_cycles(n, alg));
+                assert_eq!(unit.width(), n);
+                assert_eq!(unit.algorithm(), Some(alg));
+                assert_eq!(unit.op(), Op::Div { alg });
+            }
+        }
+        let sqrt = Unit::new(16, Op::Sqrt).unwrap();
+        assert_eq!(sqrt.iterations(), SqrtEngine::new().iterations(16));
+        assert_eq!(sqrt.latency_cycles(), sqrt.iterations() + exec::SPECIAL_CYCLES);
+        assert_eq!(sqrt.algorithm(), None);
+        assert!(sqrt.as_div_engine().is_none());
+    }
+
+    #[test]
+    fn sqrt_metadata_and_specials() {
+        let unit = Unit::new(16, Op::Sqrt).unwrap();
+        let real = unit.run(&[Posit::from_f64(16, 2.25)]).unwrap();
+        assert_eq!(real.result.to_f64(), 1.5);
+        assert_eq!(real.iterations, unit.iterations());
+        assert_eq!(real.cycles, unit.latency_cycles());
+        let nar = unit.run(&[Posit::one(16).neg()]).unwrap();
+        assert!(nar.result.is_nar());
+        assert_eq!(nar.iterations, 0);
+        assert_eq!(nar.cycles, exec::SPECIAL_CYCLES);
+    }
+
+    #[test]
+    fn div_unit_is_a_div_engine() {
+        let unit = Unit::new(16, Op::Div { alg: Algorithm::Srt4CsOfFr }).unwrap();
+        let e = unit.as_div_engine().expect("division unit");
+        assert_eq!(e.name(), "SRT r4 CS OF FR");
+        assert_eq!(e.algorithm(), Algorithm::Srt4CsOfFr);
+        assert_eq!(e.divide(Posit::one(16), Posit::one(16)).result, Posit::one(16));
+        assert_eq!(unit.engine_name(), "SRT r4 CS OF FR");
+    }
+
+    #[test]
+    fn op_request_model() {
+        let r = OpRequest::div(Posit::one(16), Posit::one(16));
+        assert_eq!(r.op, Op::DIV);
+        assert_eq!(r.operands().len(), 2);
+        assert_eq!(r.width(), 16);
+        assert_eq!(r.bits(), [Posit::one(16).to_bits(), Posit::one(16).to_bits(), 0]);
+        let s = OpRequest::sqrt(Posit::from_f64(32, 2.0));
+        assert_eq!(s.operands().len(), 1);
+        assert_eq!(
+            OpRequest::new(Op::Sqrt, &[Posit::one(16), Posit::one(16)]).err(),
+            Some(PositError::ArityMismatch { op: "sqrt", expected: 1, got: 2 })
+        );
+        assert_eq!(
+            OpRequest::new(Op::Mul, &[Posit::one(16), Posit::one(32)]).err(),
+            Some(PositError::WidthMismatch { expected: 16, got: 32 })
+        );
+        let ok = OpRequest::new(Op::MulAdd, &[Posit::one(8); 3]).unwrap();
+        assert_eq!(ok.operands(), &[Posit::one(8); 3]);
+    }
+}

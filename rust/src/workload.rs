@@ -1,7 +1,10 @@
-//! Workload generators shared by the examples, benches and the e2e driver.
+//! Workload generators shared by the examples, benches and the e2e driver:
+//! division-pair streams ([`Workload`]) and op-tagged mixed streams
+//! ([`MixedOps`]) for the operation-generic unit service.
 
 use crate::posit::{mask, Posit};
 use crate::testkit::Rng;
+use crate::unit::{Op, OpRequest};
 
 /// A stream of division operand pairs of a fixed posit width.
 pub trait Workload {
@@ -116,6 +119,151 @@ pub fn take(w: &mut dyn Workload, count: usize) -> Vec<(Posit, Posit)> {
     (0..count).map(|_| w.next_pair()).collect()
 }
 
+/// Relative weights of each operation in a mixed stream (division runs
+/// the default engine). All-zero weights degenerate to division-only.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OpMix {
+    pub div: u32,
+    pub sqrt: u32,
+    pub mul: u32,
+    pub add: u32,
+    pub sub: u32,
+    pub mul_add: u32,
+}
+
+impl OpMix {
+    /// A DSP-flavored default: division-heavy with an arithmetic
+    /// background and some sqrt (normalization) traffic.
+    pub const DEFAULT: OpMix = OpMix { div: 6, sqrt: 2, mul: 4, add: 4, sub: 2, mul_add: 2 };
+
+    /// Pure division traffic (the pre-redesign workload).
+    pub const DIV_ONLY: OpMix = OpMix { div: 1, sqrt: 0, mul: 0, add: 0, sub: 0, mul_add: 0 };
+
+    pub fn total(&self) -> u32 {
+        self.div + self.sqrt + self.mul + self.add + self.sub + self.mul_add
+    }
+
+    /// Parse a `name:weight` list, e.g. `div:6,sqrt:2,mul:4` (ops not
+    /// named get weight 0; `mul_add`/`muladd`/`fma` are synonyms).
+    /// Returns `None` on unknown names, bad weights or an all-zero mix.
+    pub fn parse(s: &str) -> Option<OpMix> {
+        let mut mix = OpMix { div: 0, sqrt: 0, mul: 0, add: 0, sub: 0, mul_add: 0 };
+        for part in s.split(',') {
+            let (name, weight) = part.split_once(':')?;
+            let weight: u32 = weight.trim().parse().ok()?;
+            match name.trim() {
+                "div" => mix.div = weight,
+                "sqrt" => mix.sqrt = weight,
+                "mul" => mix.mul = weight,
+                "add" => mix.add = weight,
+                "sub" => mix.sub = weight,
+                "mul_add" | "muladd" | "fma" => mix.mul_add = weight,
+                _ => return None,
+            }
+        }
+        if mix.total() == 0 {
+            return None;
+        }
+        Some(mix)
+    }
+
+    /// Sample an op according to the weights.
+    fn pick(&self, rng: &mut Rng) -> Op {
+        let total = self.total() as u64;
+        if total == 0 {
+            return Op::DIV;
+        }
+        let mut r = rng.below(total);
+        for (weight, op) in [
+            (self.div, Op::DIV),
+            (self.sqrt, Op::Sqrt),
+            (self.mul, Op::Mul),
+            (self.add, Op::Add),
+            (self.sub, Op::Sub),
+            (self.mul_add, Op::MulAdd),
+        ] {
+            if r < weight as u64 {
+                return op;
+            }
+            r -= weight as u64;
+        }
+        Op::DIV
+    }
+}
+
+/// Op-tagged mixed traffic for the unit service: uniform random real
+/// operands with per-op sanitization (no NaR inputs, nonzero divisors,
+/// non-negative radicands) so the stream measures the datapaths rather
+/// than the special-case fast path.
+pub struct MixedOps {
+    pub n: u32,
+    pub mix: OpMix,
+    rng: Rng,
+}
+
+impl MixedOps {
+    pub fn new(n: u32, mix: OpMix, seed: u64) -> Self {
+        MixedOps { n, mix, rng: Rng::seeded(seed) }
+    }
+
+    fn real(&mut self) -> Posit {
+        loop {
+            let p = Posit::from_bits(self.n, self.rng.next_u64() & mask(self.n));
+            if !p.is_nar() {
+                return p;
+            }
+        }
+    }
+
+    fn nonzero(&mut self) -> Posit {
+        loop {
+            let p = self.real();
+            if !p.is_zero() {
+                return p;
+            }
+        }
+    }
+
+    /// The next op-tagged request of the stream.
+    pub fn next_request(&mut self) -> OpRequest {
+        match self.mix.pick(&mut self.rng) {
+            Op::Div { alg } => {
+                let (x, d) = (self.real(), self.nonzero());
+                OpRequest::div_with(alg, x, d)
+            }
+            Op::Sqrt => {
+                let v = self.real().abs();
+                OpRequest::sqrt(v)
+            }
+            Op::Mul => {
+                let (a, b) = (self.real(), self.real());
+                OpRequest::mul(a, b)
+            }
+            Op::Add => {
+                let (a, b) = (self.real(), self.real());
+                OpRequest::add(a, b)
+            }
+            Op::Sub => {
+                let (a, b) = (self.real(), self.real());
+                OpRequest::sub(a, b)
+            }
+            Op::MulAdd => {
+                let (a, b, c) = (self.real(), self.real(), self.real());
+                OpRequest::mul_add(a, b, c)
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        "mixed-ops"
+    }
+}
+
+/// Collect `count` requests from a mixed stream.
+pub fn take_requests(w: &mut MixedOps, count: usize) -> Vec<OpRequest> {
+    (0..count).map(|_| w.next_request()).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -142,6 +290,57 @@ mod tests {
             }
         }
         assert!(in_band > 1900, "{in_band}");
+    }
+
+    #[test]
+    fn op_mix_parse() {
+        let m = OpMix::parse("div:6,sqrt:2,mul:4").unwrap();
+        assert_eq!(m, OpMix { div: 6, sqrt: 2, mul: 4, add: 0, sub: 0, mul_add: 0 });
+        assert_eq!(OpMix::parse("fma:3").unwrap().mul_add, 3);
+        assert!(OpMix::parse("frobnicate:1").is_none());
+        assert!(OpMix::parse("div:x").is_none());
+        assert!(OpMix::parse("div:0").is_none(), "all-zero mixes are rejected");
+        assert!(OpMix::parse("div").is_none(), "missing weight");
+    }
+
+    #[test]
+    fn mixed_ops_stream_is_sane() {
+        let mut w = MixedOps::new(16, OpMix::DEFAULT, 0x55);
+        let mut sqrt_seen = 0u32;
+        let mut fma_seen = 0u32;
+        for _ in 0..4000 {
+            let req = w.next_request();
+            assert_eq!(req.width(), 16);
+            assert_eq!(req.operands().len(), req.op.arity());
+            for p in req.operands() {
+                assert!(!p.is_nar(), "{:?}", req.op);
+            }
+            match req.op {
+                Op::Div { .. } => assert!(!req.operands()[1].is_zero()),
+                Op::Sqrt => {
+                    assert!(!req.operands()[0].is_negative());
+                    sqrt_seen += 1;
+                }
+                Op::MulAdd => fma_seen += 1,
+                _ => {}
+            }
+        }
+        // with weights 2/20 and 2/20, both must show up in 4000 draws
+        assert!(sqrt_seen > 100, "{sqrt_seen}");
+        assert!(fma_seen > 100, "{fma_seen}");
+    }
+
+    #[test]
+    fn mixed_ops_respects_degenerate_mixes() {
+        let mut w = MixedOps::new(16, OpMix::DIV_ONLY, 1);
+        for _ in 0..200 {
+            assert!(matches!(w.next_request().op, Op::Div { .. }));
+        }
+        let only_sqrt = OpMix { div: 0, sqrt: 5, mul: 0, add: 0, sub: 0, mul_add: 0 };
+        let mut w = MixedOps::new(16, only_sqrt, 2);
+        for _ in 0..200 {
+            assert_eq!(w.next_request().op, Op::Sqrt);
+        }
     }
 
     #[test]

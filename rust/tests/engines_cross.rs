@@ -4,7 +4,10 @@
 //! Posit64 (where f64-based references can no longer help).
 //!
 //! All engines run through pre-built [`Divider`] contexts — the same
-//! zero-alloc path the coordinator and the benches use.
+//! zero-alloc path the coordinator and the benches use (and, since the
+//! op-generic redesign, a compatibility pin on the deprecated wrapper).
+
+#![allow(deprecated)]
 
 use posit_div::division::{golden, Algorithm, DivEngine, Divider};
 use posit_div::posit::{mask, Posit};

@@ -1,15 +1,24 @@
-//! Exhaustive Posit8 division gate for the default serving engine
-//! (SRT r4 CS OF FR): every one of the 256×256 bit-pattern pairs is
-//! checked against the exact golden model, both at the full-division
-//! level and at the fraction-recurrence level (`golden::frac_divide`).
+//! Exhaustive Posit8 gates for the serving datapaths: every one of the
+//! 256×256 bit-pattern pairs through the default division engine
+//! (SRT r4 CS OF FR) against the exact golden model — at the
+//! full-division level and at the fraction-recurrence level
+//! (`golden::frac_divide`) — plus every one of the 256 patterns through
+//! the sqrt unit against the exact-rational golden (`golden_sqrt`).
 //!
 //! `#[ignore]`d for local `cargo test` (the tier-1 suite already covers
-//! Posit8 exhaustively across all engines in `engines_cross.rs`); CI runs
-//! it explicitly with `cargo test --test p8_exhaustive -- --ignored` so
-//! the default engine's datapath is gated on every push.
+//! Posit8 exhaustively across all engines in `engines_cross.rs` and the
+//! sqrt engine in its module tests); CI runs them explicitly with
+//! `cargo test --test p8_exhaustive -- --ignored` so the serving
+//! datapaths are gated on every push.
 
+// The division gates deliberately run through the deprecated `Divider`
+// wrapper so the legacy entry point stays pinned bit-exact.
+#![allow(deprecated)]
+
+use posit_div::division::sqrt::golden_sqrt;
 use posit_div::division::{golden, Algorithm, DivEngine, Divider};
 use posit_div::posit::{mask, Posit, Unpacked};
+use posit_div::unit::{Op, Unit};
 
 #[test]
 #[ignore = "exhaustive CI gate; run with `cargo test --test p8_exhaustive -- --ignored`"]
@@ -28,6 +37,31 @@ fn p8_default_engine_matches_golden_on_all_pattern_pairs() {
                 "{}: {x:?}/{d:?} -> {got:?}, golden {want:?}",
                 div.name()
             );
+        }
+    }
+}
+
+#[test]
+#[ignore = "exhaustive CI gate; run with `cargo test --test p8_exhaustive -- --ignored`"]
+fn p8_sqrt_unit_matches_exact_rational_golden_on_all_patterns() {
+    let n = 8;
+    let unit = Unit::new(n, Op::Sqrt).expect("standard width");
+    for vb in 0..=mask(n) {
+        let v = Posit::from_bits(n, vb);
+        // `golden_sqrt` is the exact reference: integer ⌊√·⌋ on the full
+        // radicand plus a single pattern-space rounding.
+        let want = golden_sqrt(v);
+        let got = unit.run(&[v]).expect("width matches");
+        assert_eq!(
+            got.result, want.result,
+            "sqrt unit: {v:?} -> {:?}, golden {:?}",
+            got.result, want.result
+        );
+        // the unit reports real digit-recurrence work for real inputs
+        if !v.is_nar() && !v.is_zero() && !v.is_negative() {
+            assert_eq!(got.iterations, unit.iterations(), "{v:?}");
+        } else {
+            assert_eq!(got.iterations, 0, "{v:?} takes the special fast path");
         }
     }
 }

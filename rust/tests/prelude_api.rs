@@ -3,6 +3,10 @@
 //! the zero-alloc `Divider`, and the golden cross-check that the batch
 //! path is bit-identical to the scalar path for every Table IV algorithm.
 
+// This suite deliberately exercises the deprecated `Divider` wrapper to
+// pin its compatibility contract.
+#![allow(deprecated)]
+
 use posit_div::division::golden;
 use posit_div::posit::mask;
 use posit_div::prelude::*;

@@ -1,11 +1,17 @@
 //! Property-based integration tests over the full division pipeline,
 //! including the strongest check in the suite: round-to-nearest
 //! correctness verified by exact rational comparison against
-//! pattern-space midpoints (independent of the encode path).
+//! pattern-space midpoints (independent of the encode path) — plus
+//! correctly-rounded references for the arithmetic ops the
+//! operation-generic unit serves (mul/add/sub at n ∈ {8, 16, 32}).
+
+// Division properties run through the deprecated `Divider` wrapper on
+// purpose — they pin the legacy context's behavior.
+#![allow(deprecated)]
 
 use posit_div::division::{golden, Algorithm, Divider};
-use posit_div::posit::Posit;
-use posit_div::testkit::{self, gen, Config};
+use posit_div::posit::{frac_bits, mask, round::encode_round, Posit};
+use posit_div::testkit::{self, gen, Config, Rng};
 
 #[test]
 fn golden_is_correctly_rounded_p16_random() {
@@ -93,6 +99,114 @@ fn division_by_powers_of_two_is_exact_shift() {
             Ok(())
         },
     );
+}
+
+/// Exact multiplication reference, independent of `arith.rs`'s
+/// normalization branches: full-width significand product, one
+/// pattern-space rounding through the shared encoder.
+fn exact_mul_reference(n: u32, pa: Posit, pb: Posit) -> Posit {
+    let (a, b) = (pa.decode(), pb.decode());
+    let fb = frac_bits(n) as i32;
+    let prod = (a.sig as u128) * (b.sig as u128);
+    let msb = 127 - prod.leading_zeros();
+    encode_round(n, a.sign ^ b.sign, a.scale + b.scale + msb as i32 - 2 * fb, prod, msb, false)
+}
+
+/// Exact addition reference: signed fixed-point sum at the smaller
+/// operand's scale. `None` when the scale span exceeds the i128 headroom
+/// — the caller then asserts full absorption (the tiny operand is far
+/// below half an ulp of the big one, so the sum must round to the big
+/// operand exactly).
+fn exact_add_reference(n: u32, pa: Posit, pb: Posit) -> Option<Posit> {
+    let (a, b) = (pa.decode(), pb.decode());
+    let fb = frac_bits(n) as i32;
+    let base = a.scale.min(b.scale);
+    if a.scale.max(b.scale) - base > 96 {
+        return None; // sig (≤ 29 bits at n=32) + span must stay below 127
+    }
+    let av = (a.sig as i128) << (a.scale - base) as u32;
+    let bv = (b.sig as i128) << (b.scale - base) as u32;
+    let sum = if a.sign { -av } else { av } + if b.sign { -bv } else { bv };
+    Some(if sum == 0 {
+        Posit::zero(n)
+    } else {
+        let mag = sum.unsigned_abs();
+        let msb = 127 - mag.leading_zeros();
+        encode_round(n, sum < 0, base + msb as i32 - fb, mag, msb, false)
+    })
+}
+
+#[test]
+fn mul_add_sub_match_correctly_rounded_f64_reference_p8_p16() {
+    // Why f64 is a correctly rounded reference here: p8/p16 significands
+    // carry ≤ 4/12 bits, so every product (≤ 24 significant bits) is
+    // exact in f64, and for sums either the two operands overlap within
+    // f64's 53-bit window (exact sum, including every tie: a half-ulp
+    // offset adds one significant bit, not fifty) or the small operand
+    // sits ≥ 2^28 below half an ulp of the big one, where both the exact
+    // sum and the f64-rounded sum round to the same posit.
+    for n in [8u32, 16] {
+        let mut rng = Rng::seeded(0xF0 + n as u64);
+        for _ in 0..60_000 {
+            let pa = Posit::from_bits(n, rng.next_u64() & mask(n));
+            let pb = Posit::from_bits(n, rng.next_u64() & mask(n));
+            if pa.is_nar() || pb.is_nar() {
+                assert!(pa.mul(pb).is_nar() && pa.add(pb).is_nar() && pa.sub(pb).is_nar());
+                continue;
+            }
+            let (af, bf) = (pa.to_f64(), pb.to_f64());
+            assert_eq!(pa.mul(pb), Posit::from_f64(n, af * bf), "{pa:?} * {pb:?}");
+            assert_eq!(pa.add(pb), Posit::from_f64(n, af + bf), "{pa:?} + {pb:?}");
+            assert_eq!(pa.sub(pb), Posit::from_f64(n, af - bf), "{pa:?} - {pb:?}");
+        }
+    }
+}
+
+#[test]
+fn mul_matches_exact_integer_reference_p16_p32() {
+    // At n = 32 the 56-bit significand product no longer fits f64, so the
+    // bit-exact check runs against the exact integer reference; the f64
+    // product must still land within 1 ulp (double rounding).
+    for n in [16u32, 32] {
+        let mut rng = Rng::seeded(0x3216 + n as u64);
+        for _ in 0..40_000 {
+            let pa = Posit::from_bits(n, rng.next_u64() & mask(n));
+            let pb = Posit::from_bits(n, rng.next_u64() & mask(n));
+            if pa.is_nar() || pb.is_nar() || pa.is_zero() || pb.is_zero() {
+                continue;
+            }
+            let got = pa.mul(pb);
+            assert_eq!(got, exact_mul_reference(n, pa, pb), "{pa:?} * {pb:?}");
+            let via_f64 = Posit::from_f64(n, pa.to_f64() * pb.to_f64());
+            assert!(got.ulp_distance(via_f64) <= 1, "{pa:?} * {pb:?} f64 drift");
+        }
+    }
+}
+
+#[test]
+fn add_sub_match_exact_integer_reference_p32() {
+    let n = 32;
+    let mut rng = Rng::seeded(0xADD32);
+    for _ in 0..60_000 {
+        let pa = Posit::from_bits(n, rng.next_u64() & mask(n));
+        let pb = Posit::from_bits(n, rng.next_u64() & mask(n));
+        if pa.is_nar() || pb.is_nar() || pa.is_zero() || pb.is_zero() {
+            continue;
+        }
+        for (got, rhs) in [(pa.add(pb), pb), (pa.sub(pb), pb.neg())] {
+            match exact_add_reference(n, pa, rhs) {
+                Some(want) => assert_eq!(got, want, "{pa:?} (+) {rhs:?}"),
+                None => {
+                    // span > 96: the small operand is ≥ 2^67 below half an
+                    // ulp of the big one — the exact sum rounds to the big
+                    // operand unchanged.
+                    let hi =
+                        if pa.decode().scale >= rhs.decode().scale { pa } else { rhs };
+                    assert_eq!(got, hi, "{pa:?} (+) {rhs:?} must absorb");
+                }
+            }
+        }
+    }
 }
 
 #[test]

@@ -1,0 +1,179 @@
+//! Integration coverage for the operation-generic execution surface:
+//! every [`Op`] end-to-end through [`Unit::run_batch`] *and* the
+//! coordinator [`Client`], division bit-identical to the legacy
+//! `Divider` wrapper, and the typed/arity error contract.
+
+use posit_div::posit::mask;
+use posit_div::prelude::*;
+use posit_div::testkit::Rng;
+use posit_div::workload::{self, OpMix};
+
+/// Raw lanes for a batch of `count` random patterns at width `n`.
+fn lanes(rng: &mut Rng, n: u32, count: usize) -> (Vec<u64>, Vec<u64>, Vec<u64>) {
+    let mut lane = |_: u32| (0..count).map(|_| rng.next_u64() & mask(n)).collect::<Vec<u64>>();
+    (lane(0), lane(1), lane(2))
+}
+
+#[test]
+fn every_op_round_trips_through_run_batch() {
+    let mut rng = Rng::seeded(0xAB1);
+    for n in [8u32, 16, 32, 64] {
+        let (a, b, c) = lanes(&mut rng, n, 250);
+        for op in Op::DEFAULTS {
+            let unit = Unit::new(n, op).expect("valid width");
+            let (lb, lc): (&[u64], &[u64]) = match op.arity() {
+                1 => (&[], &[]),
+                2 => (&b, &[]),
+                _ => (&b, &c),
+            };
+            let mut out = vec![0u64; a.len()];
+            unit.run_batch(&a, lb, lc, &mut out).expect("equal lanes");
+            let mut parallel = vec![0u64; a.len()];
+            unit.run_batch_parallel(&a, lb, lc, &mut parallel, 3).expect("equal lanes");
+            assert_eq!(out, parallel, "{op} n={n} parallel != serial");
+            for i in 0..a.len() {
+                let operands: Vec<Posit> = [a[i], b[i], c[i]]
+                    .iter()
+                    .take(op.arity())
+                    .map(|&bits| Posit::from_bits(n, bits))
+                    .collect();
+                let req = OpRequest::new(op, &operands).expect("arity matches");
+                // `OpRequest::golden` is the shared exact-reference table
+                // (pinned against an independent per-op table in the
+                // unit module's own tests)
+                let want = req.golden();
+                assert_eq!(out[i], want.to_bits(), "{op} n={n} i={i} batch != reference");
+                let scalar = unit.run(&operands).expect("width matches");
+                assert_eq!(scalar.result.to_bits(), want.to_bits(), "{op} n={n} i={i} scalar");
+            }
+        }
+    }
+}
+
+#[test]
+#[allow(deprecated)]
+fn unit_division_is_bit_identical_to_divider() {
+    let mut rng = Rng::seeded(0xD1D);
+    for n in [8u32, 16, 32] {
+        let (xs, ds, _) = lanes(&mut rng, n, 300);
+        for alg in Algorithm::TABLE_IV {
+            let unit = Unit::new(n, Op::Div { alg }).expect("valid width");
+            let div = Divider::new(n, alg).expect("valid width");
+            let mut unit_out = vec![0u64; xs.len()];
+            let mut div_out = vec![0u64; xs.len()];
+            unit.run_batch(&xs, &ds, &[], &mut unit_out).expect("equal lanes");
+            div.divide_batch(&xs, &ds, &mut div_out).expect("equal lengths");
+            assert_eq!(unit_out, div_out, "{} n={n}", alg.label());
+            // scalar metadata parity too
+            let x = Posit::from_bits(n, xs[0]);
+            let d = Posit::from_bits(n, ds[0]);
+            let a = unit.run(&[x, d]).expect("width matches");
+            let b = div.divide(x, d).expect("width matches");
+            assert_eq!((a.result, a.iterations, a.cycles), (b.result, b.iterations, b.cycles));
+        }
+    }
+}
+
+#[test]
+fn typed_sqrt_and_prelude_exports() {
+    // P8..P64 sqrt routes through the same engine the unit serves.
+    let engine = SqrtEngine::new();
+    let mut rng = Rng::seeded(0x50);
+    for _ in 0..2000 {
+        let p16 = P16::from_bits(rng.next_u64() & mask(16));
+        assert_eq!(p16.sqrt().as_posit(), engine.sqrt(p16.as_posit()).result);
+        let p64 = P64::from_bits(rng.next_u64());
+        assert_eq!(p64.sqrt().as_posit(), engine.sqrt(p64.as_posit()).result);
+    }
+    assert_eq!(P32::round_from(2.25).sqrt(), P32::round_from(1.5));
+    assert!(P8::round_from(-4.0).sqrt().is_nar());
+    // golden_sqrt and SqrtResult are reachable from the prelude
+    let r: SqrtResult = golden_sqrt(Posit::from_f64(16, 4.0));
+    assert_eq!(r.result.to_f64(), 2.0);
+}
+
+#[test]
+fn arity_width_and_lane_errors_are_typed() {
+    let sqrt = Unit::new(16, Op::Sqrt).expect("valid width");
+    assert_eq!(
+        sqrt.run(&[Posit::one(16), Posit::one(16)]).err(),
+        Some(PositError::ArityMismatch { op: "sqrt", expected: 1, got: 2 })
+    );
+    assert_eq!(
+        sqrt.run(&[Posit::one(32)]).err(),
+        Some(PositError::WidthMismatch { expected: 16, got: 32 })
+    );
+    let fma = Unit::new(16, Op::MulAdd).expect("valid width");
+    let mut out = [0u64; 2];
+    assert_eq!(
+        fma.run_batch(&[1, 2], &[3, 4], &[5], &mut out).err(),
+        Some(PositError::BatchLaneMismatch { lane: "c", expected: 2, got: 1 })
+    );
+    let div = Unit::new(16, Op::DIV).expect("valid width");
+    assert_eq!(
+        div.run_batch(&[1, 2, 3], &[1, 2, 3], &[], &mut out).err(),
+        Some(PositError::BatchShapeMismatch { xs: 3, ds: 3, out: 2 })
+    );
+    assert_eq!(Unit::new(3, Op::Sqrt).err(), Some(PositError::WidthOutOfRange { n: 3 }));
+}
+
+#[test]
+fn client_serves_every_op_and_counts_it() {
+    let svc = DivisionService::start(ServiceConfig {
+        n: 16,
+        backend: Backend::Native { alg: Algorithm::DEFAULT, threads: 2 },
+        policy: BatchPolicy { max_batch: 64, max_wait: std::time::Duration::from_micros(100) },
+    })
+    .expect("native service starts");
+    let client = svc.client();
+    let mut rng = Rng::seeded(0xC11E);
+    let mut reqs = Vec::new();
+    for _ in 0..60 {
+        let real = |rng: &mut Rng| loop {
+            let p = Posit::from_bits(16, rng.next_u64() & mask(16));
+            if !p.is_nar() {
+                return p;
+            }
+        };
+        let (x, y, z) = (real(&mut rng), real(&mut rng), real(&mut rng));
+        reqs.push(OpRequest::div(x, y));
+        reqs.push(OpRequest::div_with(Algorithm::Srt2Cs, x, y));
+        reqs.push(OpRequest::sqrt(x.abs()));
+        reqs.push(OpRequest::mul(x, y));
+        reqs.push(OpRequest::add(x, y));
+        reqs.push(OpRequest::sub(x, y));
+        reqs.push(OpRequest::mul_add(x, y, z));
+    }
+    let results = client.submit_ops(&reqs).expect("service running").wait().expect("running");
+    assert_eq!(results.len(), reqs.len());
+    for (i, req) in reqs.iter().enumerate() {
+        assert_eq!(results[i], req.golden(), "{} i={i}", req.op);
+    }
+    let m = svc.metrics();
+    assert_eq!(m.ops.get(Op::DIV), 120, "both div algorithms share the div bucket");
+    assert_eq!(m.ops.get(Op::Sqrt), 60);
+    assert_eq!(m.ops.get(Op::Mul), 60);
+    assert_eq!(m.ops.get(Op::Add), 60);
+    assert_eq!(m.ops.get(Op::Sub), 60);
+    assert_eq!(m.ops.get(Op::MulAdd), 60);
+    svc.shutdown();
+}
+
+#[test]
+fn mixed_workload_through_client_matches_references() {
+    let n = 32;
+    let svc = DivisionService::start(ServiceConfig {
+        n,
+        backend: Backend::Native { alg: Algorithm::DEFAULT, threads: 4 },
+        policy: BatchPolicy::default(),
+    })
+    .expect("native service starts");
+    let client = svc.client();
+    let mut wl = workload::MixedOps::new(n, OpMix::DEFAULT, 0x314);
+    let reqs = workload::take_requests(&mut wl, 500);
+    let results = client.submit_ops(&reqs).expect("service running").wait().expect("running");
+    for (i, req) in reqs.iter().enumerate() {
+        assert_eq!(results[i], req.golden(), "{} i={i}", req.op);
+    }
+    svc.shutdown();
+}

@@ -1,10 +1,11 @@
 #!/usr/bin/env bash
 # Tier-1 verification plus lint gates. Run from anywhere in the repo.
 #
-#   scripts/verify.sh               # build + tests + clippy + fmt
+#   scripts/verify.sh               # build + tests + clippy + fmt + doc
 #   SKIP_CLIPPY=1 scripts/verify.sh # skip the clippy gate (e.g. toolchains
 #                                   # without a clippy component)
 #   SKIP_FMT=1 scripts/verify.sh    # skip the rustfmt gate
+#   SKIP_DOC=1 scripts/verify.sh    # skip the warn-free rustdoc gate
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -33,6 +34,11 @@ if [ "${SKIP_CLIPPY:-0}" != "1" ]; then
     else
         echo "== clippy not installed; skipping lint gate =="
     fi
+fi
+
+if [ "${SKIP_DOC:-0}" != "1" ]; then
+    echo "== cargo doc --no-deps (RUSTDOCFLAGS=-D warnings) =="
+    RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 fi
 
 echo "verify.sh: all green"
