@@ -6,7 +6,7 @@ use posit_div::division::srt4_cs::Srt4Cs;
 use posit_div::division::{Algorithm, DivEngine};
 use posit_div::posit::{frac_bits, mask, Posit};
 use posit_div::testkit::Rng;
-use posit_div::unit::{Op, Unit};
+use posit_div::unit::{ExecTier, Op, Unit};
 use std::time::Instant;
 
 fn main() {
@@ -16,7 +16,9 @@ fn main() {
             (Posit::from_bits(n, rng.next_u64() & mask(n)),
              Posit::from_bits(n, (rng.next_u64() & mask(n)) | 1))
         }).collect();
-        let ctx = Unit::new(n, Op::Div { alg: Algorithm::Srt4CsOfFr }).expect("width");
+        // datapath-pinned: this probe times the engine itself
+        let ctx = Unit::with_tier(n, Op::Div { alg: Algorithm::Srt4CsOfFr }, ExecTier::Datapath)
+            .expect("width");
         // warm
         for &(x, d) in &pairs {
             std::hint::black_box(ctx.run(&[x, d]).expect("width").result);
@@ -43,6 +45,19 @@ fn main() {
             best_b = best_b.min(t0.elapsed().as_secs_f64() / xs.len() as f64);
         }
         println!("Posit{n} srt4csoffr batch : {:.0} ns/div ({:.2} Mdiv/s)", best_b * 1e9, 1e-6 / best_b);
+
+        // fast-tier batch over the same working set (what the serving
+        // default `Auto` actually runs)
+        let fast = Unit::with_tier(n, Op::Div { alg: Algorithm::Srt4CsOfFr }, ExecTier::Fast)
+            .expect("width");
+        let mut best_f = f64::MAX;
+        for _ in 0..40 {
+            let t0 = Instant::now();
+            fast.run_batch(&xs, &ds, &[], &mut out).expect("equal lanes");
+            std::hint::black_box(&out);
+            best_f = best_f.min(t0.elapsed().as_secs_f64() / xs.len() as f64);
+        }
+        println!("Posit{n} fast-tier  batch : {:.0} ns/div ({:.2} Mdiv/s)", best_f * 1e9, 1e-6 / best_f);
 
         // u128 reference recurrence (the pre-optimization path), fraction
         // stage only, for the §Perf before/after ablation

@@ -28,7 +28,8 @@ const REQUESTS: usize = 50_000;
 
 fn run(n: u32, backend: Backend, label: &str) {
     let policy = BatchPolicy { max_batch: 1024, max_wait: Duration::from_micros(200) };
-    let svc = match DivisionService::start(ServiceConfig { n, backend, policy }) {
+    let cfg = ServiceConfig { n, backend, policy, tier: ExecTier::Auto };
+    let svc = match DivisionService::start(cfg) {
         Ok(svc) => svc,
         Err(e) => {
             eprintln!("[skip] {label} Posit{n}: {e}");
@@ -73,8 +74,8 @@ fn run(n: u32, backend: Backend, label: &str) {
 fn run_mixed(n: u32) {
     let policy = BatchPolicy { max_batch: 1024, max_wait: Duration::from_micros(200) };
     let backend = Backend::Native { alg: Algorithm::DEFAULT, threads: 4 };
-    let svc = DivisionService::start(ServiceConfig { n, backend, policy })
-        .expect("native backend always starts");
+    let cfg = ServiceConfig { n, backend, policy, tier: ExecTier::Auto };
+    let svc = DivisionService::start(cfg).expect("native backend always starts");
     let client = svc.client();
 
     let mut wl = workload::MixedOps::new(n, OpMix::DEFAULT, 0xE2E0 + n as u64);

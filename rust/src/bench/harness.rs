@@ -26,6 +26,7 @@ use super::baseline::Comparison;
 use super::report::Report;
 use super::{suites, Config, Profile, Runner};
 use crate::cli::Args;
+use crate::unit::ExecTier;
 
 /// Parsed bench-harness options for one suite run.
 pub struct BenchCli {
@@ -33,6 +34,12 @@ pub struct BenchCli {
     pub profile: Profile,
     /// Timing configuration derived from the profile.
     pub cfg: Config,
+    /// `--tier fast|datapath|auto` — restricts tier-aware suites
+    /// (`unit_throughput`) to one execution tier. `None`/`auto` runs the
+    /// full tier-tagged row set; note that unlike profiles, an explicit
+    /// single-tier run *does* shrink the row set (the baseline compare
+    /// treats the missing rows as removed, which never fails).
+    pub tier: Option<ExecTier>,
     json_out: Option<PathBuf>,
     baseline: Option<PathBuf>,
     write_baseline: bool,
@@ -66,6 +73,12 @@ impl BenchCli {
             suite,
             profile,
             cfg: profile.config(),
+            tier: args.flag("tier").map(|t| {
+                ExecTier::parse(t).unwrap_or_else(|| {
+                    eprintln!("invalid --tier {t:?} (expected fast|datapath|auto)");
+                    std::process::exit(2);
+                })
+            }),
             json_out: args.flag("json").map(PathBuf::from),
             baseline: args.flag("baseline").map(PathBuf::from),
             write_baseline: args.has("write-baseline"),
@@ -176,6 +189,17 @@ pub fn run_suite(name: &str, args: &Args) -> i32 {
         return 2;
     };
     let cli = BenchCli::from_args(suite.name, args);
+    if cli.tier.is_some() && !suite.tier_aware {
+        // Refuse rather than mislabel: the per-engine suites pin the
+        // Datapath tier by design, so honoring `--tier fast` silently
+        // would record datapath numbers under a fast-tier run.
+        eprintln!(
+            "suite {:?} is not tier-aware (it pins the Datapath tier by design); \
+             drop --tier, or use `unit_throughput` for the tier comparison",
+            suite.name
+        );
+        return 2;
+    }
     let mut runner = Runner::new(suite.title);
     (suite.run)(&cli, &mut runner);
     runner.finish();
@@ -258,8 +282,26 @@ mod tests {
     }
 
     #[test]
+    fn tier_flag_resolution() {
+        assert_eq!(BenchCli::from_args("t", &args("")).tier, None);
+        assert_eq!(BenchCli::from_args("t", &args("--tier fast")).tier, Some(ExecTier::Fast));
+        assert_eq!(
+            BenchCli::from_args("t", &args("--tier datapath")).tier,
+            Some(ExecTier::Datapath)
+        );
+        assert_eq!(BenchCli::from_args("t", &args("--tier auto")).tier, Some(ExecTier::Auto));
+    }
+
+    #[test]
     fn unknown_suite_exits_2() {
         assert_eq!(run_suite("no_such_suite", &args("")), 2);
+    }
+
+    #[test]
+    fn tier_flag_on_datapath_pinned_suite_is_refused() {
+        // engine_throughput pins the Datapath tier; honoring --tier
+        // silently would mislabel the measurements.
+        assert_eq!(run_suite("engine_throughput", &args("--tier fast")), 2);
     }
 
     #[test]

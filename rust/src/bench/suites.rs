@@ -22,7 +22,7 @@ use crate::hardware::report as hw_report;
 use crate::hardware::{combinational, pipelined, synth, Cost, Mode, TSMC28};
 use crate::posit::{mask, Posit};
 use crate::testkit::Rng;
-use crate::unit::{Op, Unit};
+use crate::unit::{ExecTier, Op, Unit};
 use crate::workload;
 
 /// One registered suite.
@@ -34,6 +34,10 @@ pub struct Suite {
     pub title: &'static str,
     /// One-line description for listings.
     pub about: &'static str,
+    /// Whether the suite honors `--tier` (the per-engine suites pin the
+    /// Datapath tier by design; the harness warns if `--tier` is passed
+    /// to one of those, so a run is never mislabeled).
+    pub tier_aware: bool,
     pub run: fn(&BenchCli, &mut Runner),
 }
 
@@ -43,60 +47,70 @@ pub const SUITES: &[Suite] = &[
         name: "engine_throughput",
         title: "engine throughput (div/s), 256-pair working set",
         about: "scalar vs batch software throughput, every engine x width",
+        tier_aware: false,
         run: engine_throughput,
     },
     Suite {
         name: "unit_throughput",
         title: "operation-generic unit throughput (op/s), 256-element working set",
         about: "batch op/s for every unit op x width + mixed-op service rows",
+        tier_aware: true,
         run: unit_throughput,
     },
     Suite {
         name: "table2_iterations",
         title: "software division rate (iterations dominate)",
         about: "Table II iteration/latency checks + per-radix division rates",
+        tier_aware: false,
         run: table2_iterations,
     },
     Suite {
         name: "tables",
         title: "Tables I & III worked examples",
         about: "scaling-factor table + Posit10 termination/rounding examples",
+        tier_aware: false,
         run: tables,
     },
     Suite {
         name: "comparison_asap23",
         title: "NRD vs NRD [14] (ASAP'23) software latency",
         about: "hardware-model and measured deltas vs the ASAP'23 divider",
+        tier_aware: false,
         run: comparison_asap23,
     },
     Suite {
         name: "ablation_digitset",
         title: "radix-4 digit-set ablation (a=2 vs a=3)",
         about: "digit-set trade study + selection-threshold derivation timing",
+        tier_aware: false,
         run: ablation_digitset,
     },
     Suite {
         name: "ablation_multiplicative",
         title: "digit recurrence vs Newton-Raphson",
         about: "energy/throughput of SRT r4 against the multiplicative baseline",
+        tier_aware: false,
         run: ablation_multiplicative,
     },
     Suite {
         name: "fig4_6_combinational",
         title: "Figs. 4-6 combinational synthesis model",
         about: "area/delay/power/energy sweeps, modeled per-division latency",
+        tier_aware: false,
         run: fig4_6_combinational,
     },
     Suite {
         name: "fig7_9_pipelined",
         title: "Figs. 7-9 pipelined synthesis model @1.5GHz",
         about: "pipelined sweeps + critical-path attribution",
+        tier_aware: false,
         run: fig7_9_pipelined,
     },
     Suite {
         name: "service_e2e",
         title: "end-to-end service throughput",
         about: "coordinator div/s across batch sizes and backends",
+        tier_aware: false,
         run: service_e2e,
     },
 ];
@@ -120,10 +134,13 @@ pub fn render_list() -> String {
 /// the L3 perf baseline tracked in EXPERIMENTS.md §Perf.
 ///
 /// Two paths per (format, algorithm), both through a pre-built zero-alloc
-/// [`Unit`] (no per-call `Box<dyn DivEngine>` on the hot loop):
+/// [`Unit`] pinned to the **Datapath tier** (this suite measures the
+/// paper's engines themselves; the fast-vs-datapath serving comparison
+/// lives in `unit_throughput`):
 ///   * scalar: `Unit::run` per pair,
 ///   * batch:  `Unit::run_batch` over the whole working set — the exact
-///     loop the coordinator's native backend runs.
+///     loop the coordinator's native backend runs when pinned to the
+///     datapath.
 fn engine_throughput(cli: &BenchCli, r: &mut Runner) {
     let mut rng = Rng::seeded(0xB21C);
     for n in [8u32, 16, 32, 64] {
@@ -139,7 +156,8 @@ fn engine_throughput(cli: &BenchCli, r: &mut Runner) {
         let ds: Vec<u64> = pairs.iter().map(|p| p.1.to_bits()).collect();
         let mut out = vec![0u64; xs.len()];
         for alg in Algorithm::ALL {
-            let ctx = Unit::new(n, Op::Div { alg }).expect("standard width");
+            let ctx =
+                Unit::with_tier(n, Op::Div { alg }, ExecTier::Datapath).expect("standard width");
             let m = bench_batched(
                 &format!("Posit{n} {} scalar", ctx.engine_name()),
                 cli.cfg,
@@ -165,12 +183,25 @@ fn engine_throughput(cli: &BenchCli, r: &mut Runner) {
     }
 }
 
+/// The execution tiers a tier-aware suite sweeps for this run:
+/// both by default, one under an explicit `--tier fast|datapath`.
+fn tiers_under_test(cli: &BenchCli) -> &'static [ExecTier] {
+    match cli.tier {
+        Some(ExecTier::Fast) => &[ExecTier::Fast],
+        Some(ExecTier::Datapath) => &[ExecTier::Datapath],
+        _ => &[ExecTier::Fast, ExecTier::Datapath],
+    }
+}
+
 /// The operation-generic counterpart of [`engine_throughput`]: batch
 /// throughput of every [`Op`] (division at the default engine) at
-/// Posit16/32 through the same [`Unit::run_batch`] loop, plus one
-/// mixed-op coordinator row per width (the service groups each dynamic
-/// batch per op and runs every group on its cached unit).
+/// Posit16/32 through the same [`Unit::run_batch`] loop, **tier-tagged**
+/// — each op measured on both the Fast kernels and the cycle-accurate
+/// Datapath (restrict with `--tier`) — plus one mixed-op coordinator row
+/// per (width, tier) (the service groups each dynamic batch per op and
+/// runs every group on its cached unit at the configured tier).
 fn unit_throughput(cli: &BenchCli, r: &mut Runner) {
+    let tiers = tiers_under_test(cli);
     let mut rng = Rng::seeded(0x0127);
     for n in [16u32, 32] {
         let a: Vec<u64> = (0..256).map(|_| rng.next_u64() & mask(n)).collect();
@@ -183,24 +214,31 @@ fn unit_throughput(cli: &BenchCli, r: &mut Runner) {
         let radicands: Vec<u64> = a.iter().map(|&v| v & !(1u64 << (n - 1))).collect();
         let mut out = vec![0u64; a.len()];
         for op in Op::DEFAULTS {
-            let unit = Unit::new(n, op).expect("standard width");
-            let la: &[u64] = if op == Op::Sqrt { &radicands } else { &a };
-            let (lb, lc): (&[u64], &[u64]) = match op.arity() {
-                1 => (&[], &[]),
-                2 => (&b, &[]),
-                _ => (&b, &c),
-            };
-            let m = bench_batched(
-                &format!("Posit{n} {} batch", op.name()),
-                cli.cfg,
-                la.len() as u64,
-                || {
-                    unit.run_batch(la, lb, lc, &mut out).expect("equal lanes");
-                    black_box(&out);
-                },
-            );
-            let label = op.label();
-            r.add_tagged(m, Some(n), Some(label.as_str()), "batch");
+            for &tier in tiers {
+                let unit = Unit::with_tier(n, op, tier).expect("standard width");
+                let la: &[u64] = if op == Op::Sqrt { &radicands } else { &a };
+                let (lb, lc): (&[u64], &[u64]) = match op.arity() {
+                    1 => (&[], &[]),
+                    2 => (&b, &[]),
+                    _ => (&b, &c),
+                };
+                let m = bench_batched(
+                    &format!("Posit{n} {} batch {}", op.name(), tier.name()),
+                    cli.cfg,
+                    la.len() as u64,
+                    || {
+                        unit.run_batch(la, lb, lc, &mut out).expect("equal lanes");
+                        black_box(&out);
+                    },
+                );
+                let label = op.label();
+                r.add_tagged(
+                    m,
+                    Some(n),
+                    Some(label.as_str()),
+                    &format!("batch:{}", tier.name()),
+                );
+            }
         }
     }
 
@@ -209,18 +247,22 @@ fn unit_throughput(cli: &BenchCli, r: &mut Runner) {
         Profile::Full => 30_000,
     };
     for n in [16u32, 32] {
-        if let Some(e) = mixed_service_run(n, requests) {
-            r.add_entry(e);
+        for &tier in tiers {
+            if let Some(e) = mixed_service_run(n, requests, tier) {
+                r.add_entry(e);
+            }
         }
     }
 }
 
-/// One mixed-op service run on the native backend; returns the report row.
-fn mixed_service_run(n: u32, requests: usize) -> Option<Entry> {
+/// One mixed-op service run on the native backend at `tier`; returns the
+/// report row.
+fn mixed_service_run(n: u32, requests: usize, tier: ExecTier) -> Option<Entry> {
     let svc = match DivisionService::start(ServiceConfig {
         n,
         backend: Backend::Native { alg: Algorithm::DEFAULT, threads: 4 },
         policy: BatchPolicy { max_batch: 256, max_wait: Duration::from_micros(200) },
+        tier,
     }) {
         Ok(s) => s,
         Err(e) => {
@@ -241,16 +283,18 @@ fn mixed_service_run(n: u32, requests: usize) -> Option<Entry> {
     }
     let m = svc.metrics();
     println!(
-        "Posit{n} mixed-ops service batch=256 {:>10.0} op/s   ops: {}",
+        "Posit{n} mixed-ops service batch=256 {} {:>10.0} op/s   ops: {}   tiers: {}",
+        tier.name(),
         requests as f64 / wall.as_secs_f64(),
-        m.ops.summary()
+        m.ops.summary(),
+        m.tiers.summary()
     );
     svc.shutdown();
     Some(Entry {
-        name: format!("Posit{n} mixed-ops service batch=256"),
+        name: format!("Posit{n} mixed-ops service batch=256 {}", tier.name()),
         width: Some(n),
         algorithm: None,
-        path: Some("service".to_string()),
+        path: Some(format!("service:{}", tier.name())),
         per_op_ns: wall.as_secs_f64() * 1e9 / requests as f64,
         ops_per_sec: requests as f64 / wall.as_secs_f64(),
         samples: 1,
@@ -289,11 +333,11 @@ fn table2_iterations(cli: &BenchCli, r: &mut Runner) {
     }
 
     // Wall-clock counterpart: the software engines' division rate tracks
-    // the iteration count.
+    // the iteration count (datapath tier — this measures the engines).
     let mut rng = Rng::seeded(42);
     for n in [16u32, 32, 64] {
         for alg in [Algorithm::Srt2Cs, Algorithm::Srt4Cs] {
-            let ctx = Unit::new(n, Op::Div { alg }).expect("width");
+            let ctx = Unit::with_tier(n, Op::Div { alg }, ExecTier::Datapath).expect("width");
             let xs: Vec<u64> = (0..256).map(|_| rng.next_u64() & mask(n)).collect();
             let ds: Vec<u64> = (0..256).map(|_| (rng.next_u64() & mask(n)) | 1).collect();
             let mut out = vec![0u64; xs.len()];
@@ -361,7 +405,7 @@ fn comparison_asap23(cli: &BenchCli, r: &mut Runner) {
         let xs: Vec<u64> = (0..256).map(|_| rng.next_u64() & mask(n)).collect();
         let ds: Vec<u64> = (0..256).map(|_| (rng.next_u64() & mask(n)) | 1).collect();
         let time = |alg: Algorithm| -> Measurement {
-            let ctx = Unit::new(n, Op::Div { alg }).expect("width");
+            let ctx = Unit::with_tier(n, Op::Div { alg }, ExecTier::Datapath).expect("width");
             let mut out = vec![0u64; xs.len()];
             bench_batched(
                 &format!("Posit{n} {} batch", ctx.engine_name()),
@@ -476,7 +520,7 @@ fn ablation_multiplicative(cli: &BenchCli, r: &mut Runner) {
         let ds: Vec<u64> = (0..256).map(|_| (rng.next_u64() & mask(n)) | 1).collect();
         let mut out = vec![0u64; xs.len()];
         for alg in [Algorithm::Srt4CsOfFr, Algorithm::Newton] {
-            let ctx = Unit::new(n, Op::Div { alg }).expect("width");
+            let ctx = Unit::with_tier(n, Op::Div { alg }, ExecTier::Datapath).expect("width");
             let m = bench_batched(
                 &format!("Posit{n} {}", ctx.engine_name()),
                 cli.cfg,
@@ -560,6 +604,7 @@ fn service_run(
         n,
         backend,
         policy: BatchPolicy { max_batch: batch, max_wait: Duration::from_micros(200) },
+        tier: ExecTier::Auto,
     }) {
         Ok(s) => s,
         Err(e) => {

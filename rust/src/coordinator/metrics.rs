@@ -4,7 +4,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
-use crate::unit::Op;
+use crate::unit::{ExecTier, Op};
 
 /// Power-of-two-bucketed latency histogram, lock-free on the record path.
 /// Bucket i counts samples in [2^i, 2^(i+1)) nanoseconds, i < 48.
@@ -128,6 +128,49 @@ impl OpCounters {
     }
 }
 
+/// Requests served per execution tier: the fast kernels, the
+/// cycle-accurate datapath engines, or the PJRT graph.
+#[derive(Default)]
+pub struct TierCounters {
+    pub fast: AtomicU64,
+    pub datapath: AtomicU64,
+    pub pjrt: AtomicU64,
+}
+
+impl TierCounters {
+    /// Record `count` requests served by a *resolved* native tier
+    /// (`Auto` is resolved by the unit before it gets here).
+    pub fn record(&self, tier: ExecTier, count: u64) {
+        debug_assert_ne!(tier, ExecTier::Auto, "record the resolved tier");
+        match tier {
+            ExecTier::Fast | ExecTier::Auto => self.fast.fetch_add(count, Ordering::Relaxed),
+            ExecTier::Datapath => self.datapath.fetch_add(count, Ordering::Relaxed),
+        };
+    }
+
+    /// Record `count` requests served by the PJRT graph.
+    pub fn record_pjrt(&self, count: u64) {
+        self.pjrt.fetch_add(count, Ordering::Relaxed);
+    }
+
+    /// Requests served by a native tier (`Auto` reads the fast counter).
+    pub fn get(&self, tier: ExecTier) -> u64 {
+        match tier {
+            ExecTier::Fast | ExecTier::Auto => self.fast.load(Ordering::Relaxed),
+            ExecTier::Datapath => self.datapath.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "fast={} datapath={} pjrt={}",
+            self.fast.load(Ordering::Relaxed),
+            self.datapath.load(Ordering::Relaxed),
+            self.pjrt.load(Ordering::Relaxed),
+        )
+    }
+}
+
 /// Aggregated service counters.
 #[derive(Default)]
 pub struct Metrics {
@@ -140,6 +183,8 @@ pub struct Metrics {
     pub special_results: AtomicU64,
     /// Requests served, split by operation kind.
     pub ops: OpCounters,
+    /// Requests served, split by execution tier.
+    pub tiers: TierCounters,
 }
 
 impl Metrics {
@@ -185,6 +230,19 @@ mod tests {
         assert_eq!(c.get(Op::MulAdd), 1);
         let s = c.summary();
         assert!(s.contains("div=2") && s.contains("mul_add=1"), "{s}");
+    }
+
+    #[test]
+    fn tier_counters_bucket_and_summarize() {
+        let t = TierCounters::default();
+        t.record(ExecTier::Fast, 100);
+        t.record(ExecTier::Datapath, 7);
+        t.record_pjrt(3);
+        assert_eq!(t.get(ExecTier::Fast), 100);
+        assert_eq!(t.get(ExecTier::Datapath), 7);
+        assert_eq!(t.pjrt.load(Ordering::Relaxed), 3);
+        let s = t.summary();
+        assert!(s.contains("fast=100") && s.contains("datapath=7") && s.contains("pjrt=3"), "{s}");
     }
 
     #[test]

@@ -6,11 +6,14 @@
 //! serves **op-tagged** requests ([`crate::unit::OpRequest`]: division by
 //! any Table IV engine, square root, mul, add/sub, mul-add). Mixed
 //! batches are split per operation ([`batcher::group_indices`]) and each
-//! group runs through a cached per-op [`crate::unit::Unit`] — the native
-//! backend spreads every group over scoped workers, while the PJRT
-//! backend executes division groups on the AOT-compiled JAX/Pallas graph
-//! ([`crate::runtime`]) and falls back to the native units for the other
-//! operations.
+//! group runs through a cached per-op [`crate::unit::Unit`] at the
+//! configured [`crate::unit::ExecTier`] — the native backend spreads
+//! every group over the shared crate-level worker pool
+//! ([`crate::pool::global`]; no per-batch thread spawning), while the
+//! PJRT backend executes division groups on the AOT-compiled JAX/Pallas
+//! graph ([`crate::runtime`]) and falls back to the native units for the
+//! other operations. [`metrics`] counts how many requests each tier
+//! served.
 //!
 //! Clients talk to the service through the typed [`Client`] handle:
 //! `submit_op`/`submit_ops` (and the division conveniences
@@ -24,7 +27,6 @@
 
 pub mod batcher;
 pub mod metrics;
-pub mod pool;
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -34,14 +36,17 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 pub use batcher::BatchPolicy;
-pub use metrics::{Histogram, Metrics, OpCounters};
-pub use pool::Pool;
+pub use metrics::{Histogram, Metrics, OpCounters, TierCounters};
+// The worker pool is a crate-level module now ([`crate::pool`]), shared
+// by every parallel batch path; these re-exports keep the old
+// `coordinator::{pool, Pool}` paths working.
+pub use crate::pool::{self, Pool};
 
 use crate::division::Algorithm;
 use crate::error::{PositError, Result};
 use crate::posit::{Posit, MAX_N, MIN_N};
 use crate::runtime::Runtime;
-use crate::unit::{Op, OpRequest, Unit};
+use crate::unit::{ExecTier, Op, OpRequest, Unit};
 
 /// Which execution engine serves the batches.
 #[derive(Clone, Debug)]
@@ -72,6 +77,11 @@ pub struct ServiceConfig {
     pub n: u32,
     pub backend: Backend,
     pub policy: BatchPolicy,
+    /// Execution tier for the native units (the PJRT graph, when used for
+    /// division groups, is its own path). The default `Auto` serves batch
+    /// traffic from the Fast kernels; pin `Datapath` to serve from the
+    /// cycle-accurate engines.
+    pub tier: ExecTier,
 }
 
 impl Default for ServiceConfig {
@@ -80,6 +90,7 @@ impl Default for ServiceConfig {
             n: 32,
             backend: Backend::Native { alg: Algorithm::DEFAULT, threads: 4 },
             policy: BatchPolicy::default(),
+            tier: ExecTier::Auto,
         }
     }
 }
@@ -248,21 +259,28 @@ impl Client {
 struct NativeUnits {
     n: u32,
     threads: usize,
+    tier: ExecTier,
     units: HashMap<Op, Unit>,
 }
 
 impl NativeUnits {
-    fn new(n: u32, threads: usize) -> NativeUnits {
-        NativeUnits { n, threads, units: HashMap::new() }
+    fn new(n: u32, threads: usize, tier: ExecTier) -> NativeUnits {
+        NativeUnits { n, threads, tier, units: HashMap::new() }
     }
 
-    fn run(&mut self, op: Op, a: &[u64], b: &[u64], c: &[u64], out: &mut [u64]) {
-        let (n, threads) = (self.n, self.threads);
-        self.units
+    /// Execute one op group (spread over the shared crate pool) and
+    /// report which tier served it.
+    fn run(&mut self, op: Op, a: &[u64], b: &[u64], c: &[u64], out: &mut [u64]) -> ExecTier {
+        let (n, threads, tier) = (self.n, self.threads, self.tier);
+        let unit = self
+            .units
             .entry(op)
-            .or_insert_with(|| Unit::new(n, op).expect("width validated at service start"))
-            .run_batch_parallel(a, b, c, out, threads)
+            .or_insert_with(|| {
+                Unit::with_tier(n, op, tier).expect("width validated at service start")
+            });
+        unit.run_batch_parallel(a, b, c, out, threads)
             .expect("lanes are same-length by construction");
+        unit.batch_tier()
     }
 }
 
@@ -306,12 +324,13 @@ impl DivisionService {
         let backend = cfg.backend.clone();
         let (ready_tx, ready_rx) = channel::<Result<()>>();
         let policy = cfg.policy;
+        let tier = cfg.tier;
         let leader = std::thread::Builder::new()
             .name("posit-div-leader".into())
             .spawn(move || {
                 let mut exec = match &backend {
                     Backend::Native { alg, threads } => {
-                        let mut native = NativeUnits::new(n, *threads);
+                        let mut native = NativeUnits::new(n, *threads, tier);
                         // pre-build the default division unit (pays the
                         // Newton LUT etc. before traffic arrives)
                         let mut warm = [0u64; 0];
@@ -322,7 +341,7 @@ impl DivisionService {
                         match Runtime::load(artifacts_dir)
                             .and_then(|rt| rt.warmup(n).map(|()| rt))
                         {
-                            Ok(rt) => Exec::Pjrt { rt, native: NativeUnits::new(n, 1) },
+                            Ok(rt) => Exec::Pjrt { rt, native: NativeUnits::new(n, 1, tier) },
                             Err(e) => {
                                 let _ = ready_tx.send(Err(e));
                                 return;
@@ -347,7 +366,10 @@ impl DivisionService {
                         let c = gather(|r| r.c, op.arity() >= 3);
                         let mut out = vec![0u64; idxs.len()];
                         match &mut exec {
-                            Exec::Native(native) => native.run(op, &a, &b, &c, &mut out),
+                            Exec::Native(native) => {
+                                let served = native.run(op, &a, &b, &c, &mut out);
+                                m.tiers.record(served, idxs.len() as u64);
+                            }
                             Exec::Pjrt { rt, native } => {
                                 if matches!(op, Op::Div { .. }) {
                                     match rt.divide_bits(n, &a, &b) {
@@ -360,8 +382,10 @@ impl DivisionService {
                                             out = vec![1u64 << (n - 1); idxs.len()];
                                         }
                                     }
+                                    m.tiers.record_pjrt(idxs.len() as u64);
                                 } else {
-                                    native.run(op, &a, &b, &c, &mut out);
+                                    let served = native.run(op, &a, &b, &c, &mut out);
+                                    m.tiers.record(served, idxs.len() as u64);
                                 }
                             }
                         }
@@ -460,6 +484,7 @@ mod tests {
             n,
             backend: Backend::Native { alg: Algorithm::DEFAULT, threads: 2 },
             policy: BatchPolicy { max_batch: 64, max_wait: std::time::Duration::from_micros(100) },
+            tier: ExecTier::Auto,
         }
     }
 
@@ -601,6 +626,32 @@ mod tests {
         assert_eq!(m.ops.get(Op::DIV), 2);
         assert_eq!(m.ops.get(Op::Sqrt), 1);
         assert_eq!(m.ops.get(Op::MulAdd), 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn tier_config_routes_and_counts() {
+        // Auto (default): requests served by the fast tier.
+        let svc = DivisionService::start(native_cfg(16)).unwrap();
+        let client = svc.client();
+        let pairs: Vec<(Posit, Posit)> = (1..=32u64)
+            .map(|k| (Posit::from_f64(16, k as f64), Posit::from_f64(16, 3.0)))
+            .collect();
+        let fast_out = client.divide_batch(&pairs).unwrap();
+        let m = svc.metrics();
+        assert_eq!(m.tiers.get(ExecTier::Fast), 32);
+        assert_eq!(m.tiers.get(ExecTier::Datapath), 0);
+        svc.shutdown();
+
+        // Pinned Datapath: same results, counted on the other tier.
+        let cfg = ServiceConfig { tier: ExecTier::Datapath, ..native_cfg(16) };
+        let svc = DivisionService::start(cfg).unwrap();
+        let dp_out = svc.divide_many(&pairs).unwrap();
+        assert_eq!(fast_out, dp_out, "tiers must be bit-identical end to end");
+        let m = svc.metrics();
+        assert_eq!(m.tiers.get(ExecTier::Datapath), 32);
+        assert_eq!(m.tiers.get(ExecTier::Fast), 0);
+        assert!(m.tiers.summary().contains("datapath=32"), "{}", m.tiers.summary());
         svc.shutdown();
     }
 

@@ -97,7 +97,8 @@ impl Divider {
         self.0.run_batch(xs, ds, &[], out)
     }
 
-    /// [`Divider::divide_batch`] spread over `threads` scoped workers.
+    /// [`Divider::divide_batch`] split into `threads` chunks on the
+    /// shared crate-level worker pool.
     pub fn divide_batch_parallel(
         &self,
         xs: &[u64],

@@ -1,0 +1,492 @@
+//! Fast-tier kernels: width-specialized, branch-light serving datapaths.
+//!
+//! The Table IV engines ([`crate::division`]) are deliberately
+//! cycle-accurate — they step the same carry-save/OTF registers as the
+//! RTL, which makes them a perfect golden model and a slow serving path:
+//! every lane pays a dynamic-width decode plus an 8–62-iteration branchy
+//! recurrence loop. This module is the production counterpart (what FPPU
+//! and PVU do in silicon as a pipelined vector datapath): it computes the
+//! *same* truncated quotient/root + sticky via direct fixed-point `u128`
+//! arithmetic — one hardware-style long division or integer square root
+//! per lane instead of per-iteration state emulation — and feeds the same
+//! [`encode_round`] the engines use, so the result is bit-identical by
+//! construction (and by test: the tier-equivalence sweeps and the
+//! exhaustive Posit8 gates).
+//!
+//! Two layers:
+//!
+//! * scalar lane kernels ([`FastKernel::op_bits`]) — special-pattern
+//!   resolution plus a real-lane kernel per op kind;
+//! * batch kernels ([`FastKernel::run_batch`]) — a lane-splitting
+//!   pre-pass resolves special patterns in bulk, then the kernel loop
+//!   runs the remaining real lanes. The loop is monomorphized per
+//!   `(width, op)` for n ∈ {8, 16, 32, 64} (const generics — the
+//!   decode/encode and the fixed-point arithmetic all const-fold on `n`),
+//!   with a dynamic-width fallback for the odd widths (Posit10, …).
+
+use crate::posit::{frac_bits, mask, round::encode_round, Posit};
+
+use super::sqrt::isqrt_u128;
+
+/// The operation kinds the fast tier serves. Division collapses to a
+/// single kernel: every Table IV engine is correctly rounded, so the fast
+/// quotient is bit-identical regardless of the algorithm a unit was
+/// configured with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    /// `a / b` (one kernel for every division algorithm).
+    Div,
+    /// `√a`.
+    Sqrt,
+    /// `a · b`.
+    Mul,
+    /// `a + b`.
+    Add,
+    /// `a − b`.
+    Sub,
+    /// `a · b + c` (mul+add, two roundings).
+    MulAdd,
+}
+
+impl Kind {
+    /// Inverse of the `as u8` discriminant used for const-generic
+    /// monomorphization ([`select`]).
+    const fn from_u8(k: u8) -> Kind {
+        match k {
+            0 => Kind::Div,
+            1 => Kind::Sqrt,
+            2 => Kind::Mul,
+            3 => Kind::Add,
+            4 => Kind::Sub,
+            _ => Kind::MulAdd,
+        }
+    }
+}
+
+/// Resolve the decode-time special patterns (zero, NaR, negative
+/// radicand, zero addend) for one lane: `Some(result)` when the lane
+/// never reaches the arithmetic kernel, `None` for real lanes. Operands
+/// must already be masked to `n` bits.
+#[inline(always)]
+fn special(n: u32, kind: Kind, a: u64, b: u64, c: u64) -> Option<u64> {
+    let nar = 1u64 << (n - 1);
+    match kind {
+        Kind::Div => {
+            if a == nar || b == nar || b == 0 {
+                Some(nar)
+            } else if a == 0 {
+                Some(0)
+            } else {
+                None
+            }
+        }
+        Kind::Sqrt => {
+            // NaR, and every negative real (sign bit set), map to NaR.
+            if (a >> (n - 1)) & 1 == 1 {
+                Some(nar)
+            } else if a == 0 {
+                Some(0)
+            } else {
+                None
+            }
+        }
+        Kind::Mul => {
+            if a == nar || b == nar {
+                Some(nar)
+            } else if a == 0 || b == 0 {
+                Some(0)
+            } else {
+                None
+            }
+        }
+        Kind::Add | Kind::Sub => {
+            if a == nar || b == nar {
+                Some(nar)
+            } else if b == 0 {
+                Some(a)
+            } else if a == 0 {
+                // 0 + b = b; 0 − b = −b (negation is exact: two's
+                // complement of the pattern).
+                Some(if kind == Kind::Sub { b.wrapping_neg() & mask(n) } else { b })
+            } else {
+                None
+            }
+        }
+        Kind::MulAdd => {
+            if a == nar || b == nar || c == nar {
+                Some(nar)
+            } else if a == 0 || b == 0 {
+                // exact-zero product: a·b + c = c
+                Some(c)
+            } else {
+                None
+            }
+        }
+    }
+}
+
+/// Division kernel for real (non-special) lanes: decode, one fixed-point
+/// `u128` long division at `n` fraction bits with the remainder folded
+/// into sticky — the same quotient normal form as
+/// [`crate::division::golden::frac_divide`] — then the shared
+/// regime-aware rounding.
+#[inline(always)]
+fn div_real(n: u32, xb: u64, db: u64) -> u64 {
+    let a = Posit::from_bits(n, xb).decode();
+    let b = Posit::from_bits(n, db).decode();
+    let num = (a.sig as u128) << n;
+    let den = b.sig as u128;
+    let q = num / den;
+    let sticky = num % den != 0;
+    let t = a.scale - b.scale;
+    // Normalize q ∈ (1/2, 2) to [1, 2).
+    let (scale, sfb) = if q >> n != 0 { (t, n) } else { (t - 1, n - 1) };
+    encode_round(n, a.sign ^ b.sign, scale, q, sfb, sticky).to_bits()
+}
+
+/// Square-root kernel for real positive lanes: exact integer `⌊√·⌋` on
+/// the full-precision radicand (same exponent path and normal form as
+/// [`crate::division::sqrt::golden_sqrt`]) plus one rounding.
+#[inline(always)]
+fn sqrt_real(n: u32, vb: u64) -> u64 {
+    let d = Posit::from_bits(n, vb).decode();
+    let f = frac_bits(n);
+    let p = f + 2; // result precision: F fraction + guard + round
+    let q = d.scale >> 1; // ⌊T/2⌋ (arithmetic shift)
+    let odd = (d.scale & 1) as u32;
+    let a = (d.sig as u128) << (2 * p + odd - f);
+    let s = isqrt_u128(a);
+    encode_round(n, false, q, s, p, s * s != a).to_bits()
+}
+
+/// Real-lane kernel dispatch. The single-pass arithmetic ops reuse the
+/// posit library routines (already one decode + exact wide integer op +
+/// one rounding); division and sqrt replace the recurrence engines.
+#[inline(always)]
+fn real_lane(n: u32, kind: Kind, a: u64, b: u64, c: u64) -> u64 {
+    let p = |bits: u64| Posit::from_bits(n, bits);
+    match kind {
+        Kind::Div => div_real(n, a, b),
+        Kind::Sqrt => sqrt_real(n, a),
+        Kind::Mul => p(a).mul(p(b)).to_bits(),
+        Kind::Add => p(a).add(p(b)).to_bits(),
+        Kind::Sub => p(a).sub(p(b)).to_bits(),
+        Kind::MulAdd => p(a).mul_add(p(b), p(c)).to_bits(),
+    }
+}
+
+/// The shared batch body: lane-splitting pre-pass, then the kernel loop.
+///
+/// The pre-pass resolves special patterns in bulk and collects the
+/// real-lane indices; the index vector is only materialized once the
+/// first special shows up, so special-free batches (the serving common
+/// case) stay allocation-free and run the dense kernel loop.
+///
+/// Callers pass `n`/`kind` as constants through the monomorphized
+/// wrappers ([`select`]) so the masks, shifts and op dispatch const-fold.
+#[inline(always)]
+fn batch_generic(n: u32, kind: Kind, a: &[u64], b: &[u64], c: &[u64], out: &mut [u64]) {
+    let m = mask(n);
+    let len = out.len();
+    debug_assert_eq!(a.len(), len, "lane a pre-validated by the caller");
+    let get = |lane: &[u64], i: usize| if lane.is_empty() { 0 } else { lane[i] & m };
+
+    // Pre-pass: specials resolved in bulk, real lanes collected.
+    let mut real: Vec<u32> = Vec::new();
+    let mut any_special = false;
+    for i in 0..len {
+        let (x, y, z) = (a[i] & m, get(b, i), get(c, i));
+        match special(n, kind, x, y, z) {
+            Some(r) => {
+                if !any_special {
+                    any_special = true;
+                    real.reserve(len);
+                    real.extend(0..i as u32);
+                }
+                out[i] = r;
+            }
+            None if any_special => real.push(i as u32),
+            None => {}
+        }
+    }
+
+    // Kernel loop over the real lanes.
+    if !any_special {
+        for i in 0..len {
+            out[i] = real_lane(n, kind, a[i] & m, get(b, i), get(c, i));
+        }
+    } else {
+        for &i in &real {
+            let i = i as usize;
+            out[i] = real_lane(n, kind, a[i] & m, get(b, i), get(c, i));
+        }
+    }
+}
+
+/// Batch kernel entry type: `(n, kind, a, b, c, out)`. The width and op
+/// kind are carried for the dynamic fallback; monomorphized entries
+/// ignore them in favor of their const parameters.
+type BatchFn = fn(u32, Kind, &[u64], &[u64], &[u64], &mut [u64]);
+
+/// Width- and op-monomorphized batch kernel.
+fn batch_mono<const N: u32, const K: u8>(
+    _n: u32,
+    _kind: Kind,
+    a: &[u64],
+    b: &[u64],
+    c: &[u64],
+    out: &mut [u64],
+) {
+    batch_generic(N, Kind::from_u8(K), a, b, c, out)
+}
+
+/// Dynamic-width fallback for the odd widths (Posit10, Posit24, …).
+fn batch_dyn(n: u32, kind: Kind, a: &[u64], b: &[u64], c: &[u64], out: &mut [u64]) {
+    batch_generic(n, kind, a, b, c, out)
+}
+
+/// Pick the batch kernel for `(n, kind)`: a fully monomorphized instance
+/// for the standard widths, the dynamic fallback otherwise.
+fn select(n: u32, kind: Kind) -> BatchFn {
+    fn per_kind<const N: u32>(kind: Kind) -> BatchFn {
+        match kind {
+            Kind::Div => batch_mono::<N, 0>,
+            Kind::Sqrt => batch_mono::<N, 1>,
+            Kind::Mul => batch_mono::<N, 2>,
+            Kind::Add => batch_mono::<N, 3>,
+            Kind::Sub => batch_mono::<N, 4>,
+            Kind::MulAdd => batch_mono::<N, 5>,
+        }
+    }
+    match n {
+        8 => per_kind::<8>(kind),
+        16 => per_kind::<16>(kind),
+        32 => per_kind::<32>(kind),
+        64 => per_kind::<64>(kind),
+        _ => batch_dyn,
+    }
+}
+
+/// A fast-tier execution kernel for one `(width, op kind)` pair: the
+/// batch entry point resolved once at construction (monomorphized for
+/// the standard widths), plus the scalar lane kernels. Held by
+/// [`crate::unit::Unit`] and served whenever the unit's
+/// [`crate::unit::ExecTier`] resolves to `Fast`.
+pub struct FastKernel {
+    n: u32,
+    kind: Kind,
+    batch: BatchFn,
+}
+
+impl FastKernel {
+    /// Build the kernel for `Posit<n, 2>` lanes of `kind`. The width must
+    /// already be validated (the unit constructor does).
+    pub fn new(n: u32, kind: Kind) -> FastKernel {
+        debug_assert!((crate::posit::MIN_N..=crate::posit::MAX_N).contains(&n));
+        FastKernel { n, kind, batch: select(n, kind) }
+    }
+
+    /// The op kind this kernel serves.
+    #[inline]
+    pub fn kind(&self) -> Kind {
+        self.kind
+    }
+
+    /// Resolve the special-pattern fast path for one request, if it
+    /// applies (high garbage bits are masked off). `None` means the lane
+    /// is real and goes to the arithmetic kernel.
+    #[inline]
+    pub fn classify(&self, a: u64, b: u64, c: u64) -> Option<u64> {
+        let m = mask(self.n);
+        special(self.n, self.kind, a & m, b & m, c & m)
+    }
+
+    /// One scalar operation over raw `n`-bit patterns (high garbage bits
+    /// are masked off — the same contract as the datapath tier's
+    /// bit-level entry point).
+    #[inline]
+    pub fn op_bits(&self, a: u64, b: u64, c: u64) -> u64 {
+        let m = mask(self.n);
+        let (a, b, c) = (a & m, b & m, c & m);
+        match special(self.n, self.kind, a, b, c) {
+            Some(r) => r,
+            None => real_lane(self.n, self.kind, a, b, c),
+        }
+    }
+
+    /// The arithmetic kernel for one real lane (high garbage bits are
+    /// masked off). The operands must not hit the special table
+    /// ([`FastKernel::classify`] returned `None`) — callers that already
+    /// classified use this to avoid re-running the special detection.
+    #[inline]
+    pub fn real_bits(&self, a: u64, b: u64, c: u64) -> u64 {
+        let m = mask(self.n);
+        debug_assert!(special(self.n, self.kind, a & m, b & m, c & m).is_none());
+        real_lane(self.n, self.kind, a & m, b & m, c & m)
+    }
+
+    /// Batch execution: `out[i] = op(a[i], b[i], c[i])` with unused lanes
+    /// empty or padded. Lane lengths must be pre-validated by the caller
+    /// (the unit's shared lane check does).
+    #[inline]
+    pub fn run_batch(&self, a: &[u64], b: &[u64], c: &[u64], out: &mut [u64]) {
+        (self.batch)(self.n, self.kind, a, b, c, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::division::golden;
+    use crate::division::sqrt::golden_sqrt;
+    use crate::testkit::Rng;
+
+    const KINDS: [Kind; 6] =
+        [Kind::Div, Kind::Sqrt, Kind::Mul, Kind::Add, Kind::Sub, Kind::MulAdd];
+
+    /// The exact reference for one lane, via the independent golden
+    /// models and the posit arithmetic library.
+    fn reference(n: u32, kind: Kind, a: u64, b: u64, c: u64) -> u64 {
+        let p = |bits: u64| Posit::from_bits(n, bits);
+        match kind {
+            Kind::Div => golden::divide(p(a), p(b)).result.to_bits(),
+            Kind::Sqrt => golden_sqrt(p(a)).result.to_bits(),
+            Kind::Mul => p(a).mul(p(b)).to_bits(),
+            Kind::Add => p(a).add(p(b)).to_bits(),
+            Kind::Sub => p(a).sub(p(b)).to_bits(),
+            Kind::MulAdd => p(a).mul_add(p(b), p(c)).to_bits(),
+        }
+    }
+
+    #[test]
+    fn scalar_kernels_match_golden_references_random() {
+        let mut rng = Rng::seeded(0xFA57);
+        // standard widths (monomorphized) and odd widths (dynamic)
+        for n in [8u32, 10, 16, 24, 32, 48, 64] {
+            for kind in KINDS {
+                let k = FastKernel::new(n, kind);
+                for _ in 0..2000 {
+                    let (a, b, c) = (rng.next_u64(), rng.next_u64(), rng.next_u64());
+                    assert_eq!(
+                        k.op_bits(a, b, c),
+                        reference(n, kind, a & mask(n), b & mask(n), c & mask(n)),
+                        "{kind:?} n={n} a={a:#x} b={b:#x} c={c:#x}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn classify_matches_full_routines_exhaustively_p8() {
+        // Wherever the pre-pass claims a special, the resolved result
+        // must equal the full routine's; where it does not, the operands
+        // must be safe for the real-lane kernels (decode cannot panic).
+        let n = 8;
+        for kind in KINDS {
+            let k = FastKernel::new(n, kind);
+            // lane c only matters for MulAdd: exercise it on a directed
+            // set there (3D exhaustive is needlessly large)
+            let c_set: &[u64] = if kind == Kind::MulAdd {
+                &[0, 1 << 7, 1 << 6, 0x7F]
+            } else {
+                &[0]
+            };
+            for a in 0..=mask(n) {
+                for b in 0..=mask(n) {
+                    for &c in c_set {
+                        let want = reference(n, kind, a, b, c);
+                        if let Some(r) = k.classify(a, b, c) {
+                            assert_eq!(r, want, "{kind:?} {a:#x} {b:#x} {c:#x} (classify)");
+                        }
+                        assert_eq!(k.op_bits(a, b, c), want, "{kind:?} {a:#x} {b:#x} {c:#x}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batch_equals_scalar_with_and_without_specials() {
+        let mut rng = Rng::seeded(0xBA7C);
+        for n in [8u32, 10, 16, 32, 64] {
+            for kind in KINDS {
+                let k = FastKernel::new(n, kind);
+                // mixed batch: random lanes with specials sprinkled in
+                let lane = |rng: &mut Rng, sprinkle: bool| -> Vec<u64> {
+                    (0..257)
+                        .map(|i| {
+                            if sprinkle && i % 17 == 0 {
+                                [0u64, 1 << (n - 1)][i / 17 % 2]
+                            } else {
+                                rng.next_u64() & mask(n)
+                            }
+                        })
+                        .collect()
+                };
+                for sprinkle in [false, true] {
+                    let a = lane(&mut rng, sprinkle);
+                    let b = lane(&mut rng, sprinkle);
+                    let c = lane(&mut rng, false);
+                    let mut out = vec![0u64; a.len()];
+                    k.run_batch(&a, &b, &c, &mut out);
+                    for i in 0..a.len() {
+                        assert_eq!(
+                            out[i],
+                            k.op_bits(a[i], b[i], c[i]),
+                            "{kind:?} n={n} i={i} sprinkle={sprinkle}"
+                        );
+                    }
+                }
+                // empty unused lanes (unary/binary shapes)
+                let a = lane(&mut rng, true);
+                let mut out = vec![0u64; a.len()];
+                match kind {
+                    Kind::Sqrt => {
+                        k.run_batch(&a, &[], &[], &mut out);
+                        for i in 0..a.len() {
+                            assert_eq!(out[i], k.op_bits(a[i], 0, 0), "{kind:?} n={n} i={i}");
+                        }
+                    }
+                    Kind::MulAdd => {}
+                    _ => {
+                        let b = lane(&mut rng, true);
+                        k.run_batch(&a, &b, &[], &mut out);
+                        for i in 0..a.len() {
+                            assert_eq!(out[i], k.op_bits(a[i], b[i], 0), "{kind:?} n={n} i={i}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn monomorphized_and_dynamic_kernels_agree() {
+        // The dynamic fallback is the same generic body; pin that the
+        // function-pointer selection cannot diverge from it.
+        let mut rng = Rng::seeded(0x3030);
+        for n in [8u32, 16, 32, 64] {
+            for kind in KINDS {
+                let mono = select(n, kind);
+                let a: Vec<u64> = (0..128).map(|_| rng.next_u64() & mask(n)).collect();
+                let b: Vec<u64> = (0..128).map(|_| rng.next_u64() & mask(n)).collect();
+                let c: Vec<u64> = (0..128).map(|_| rng.next_u64() & mask(n)).collect();
+                let mut got = vec![0u64; a.len()];
+                let mut want = vec![0u64; a.len()];
+                mono(n, kind, &a, &b, &c, &mut got);
+                batch_dyn(n, kind, &a, &b, &c, &mut want);
+                assert_eq!(got, want, "{kind:?} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn high_garbage_bits_are_masked() {
+        let k = FastKernel::new(16, Kind::Div);
+        let one = Posit::one(16).to_bits();
+        let garbage = 0xABCD_0000_0000_0000u64;
+        assert_eq!(k.op_bits(one | garbage, one | garbage, 0), one);
+        assert_eq!(k.classify(garbage, one, 0), Some(0), "masked x is zero");
+    }
+}

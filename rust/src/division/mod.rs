@@ -21,10 +21,16 @@
 //! The shared wrapper ([`exec`]) handles everything around the fraction
 //! recurrence: special cases, the sign/exponent path of Eqs. (7)–(9),
 //! normalization, and the regime-aware rounding of §III-F.
+//!
+//! [`fastpath`] is the serving counterpart: width-monomorphized,
+//! branch-light kernels that compute the same truncated quotient + sticky
+//! by direct fixed-point `u128` arithmetic, bit-identical to every engine
+//! above. [`crate::unit::ExecTier`] picks between the two.
 
 pub mod carry_save;
 pub mod divider;
 pub mod exec;
+pub mod fastpath;
 pub mod golden;
 pub mod newton;
 pub mod nrd;

@@ -20,8 +20,16 @@
 //!   [`unit::Unit`] is the reusable zero-alloc context — built once per
 //!   `(width, op)` — whose `run`/`run_batch`/`run_batch_parallel` entry
 //!   points are the one hot path shared by the coordinator, the benches
-//!   and the examples. (The old division-only `Divider` survives as a
-//!   deprecated wrapper.)
+//!   and the examples. Execution is **tiered** ([`unit::ExecTier`]): the
+//!   cycle-accurate engines form the Datapath tier, the
+//!   width-monomorphized direct kernels of [`division::fastpath`] the
+//!   Fast tier — bit-identical, differing only in speed and in whether
+//!   cycle metadata is stepped or modeled; `Auto` (the default) serves
+//!   batches fast and metadata exactly. (The old division-only `Divider`
+//!   survives as a deprecated wrapper.)
+//! * [`pool`] — the crate-level worker pool: one persistent set of
+//!   workers ([`pool::global`]) behind every parallel batch path, instead
+//!   of per-call scoped thread spawning.
 //! * [`hardware`] — a unit-gate 28 nm synthesis cost model that elaborates
 //!   each divider design into a component netlist and regenerates the
 //!   paper's area/delay/power/energy figures (Figs. 4–9) and latency
@@ -86,6 +94,7 @@ pub mod coordinator;
 pub mod division;
 pub mod error;
 pub mod hardware;
+pub mod pool;
 pub mod posit;
 pub mod prelude;
 pub mod runtime;

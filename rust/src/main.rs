@@ -9,7 +9,7 @@ use posit_div::coordinator::{Backend, BatchPolicy, DivisionService, ServiceConfi
 use posit_div::division::{golden, Algorithm};
 use posit_div::hardware::{report, Mode, TSMC28};
 use posit_div::posit::Posit;
-use posit_div::unit::{Op, Unit};
+use posit_div::unit::{ExecTier, Op, Unit};
 use posit_div::workload::{self, OpMix, Workload};
 
 const USAGE: &str = "usage: posit-div <subcommand> [flags]
@@ -17,14 +17,15 @@ const USAGE: &str = "usage: posit-div <subcommand> [flags]
 subcommands:
   synth [--csv] [--n 16|32|64] [--mode comb|pipe]   synthesis model (Figs. 4-9)
   table2                                            iteration/latency table
-  divide <x> <d> [--n N] [--alg NAME] [--bits]      one division, all metadata
-  sqrt <v> [--n N] [--bits]                         one square root, all metadata
-  verify [--n N] [--cases N]                        engines vs golden cross-check
+  divide <x> <d> [--n N] [--alg NAME] [--bits] [--tier fast|datapath|auto]
+                                                    one division, all metadata
+  sqrt <v> [--n N] [--bits] [--tier T]              one square root, all metadata
+  verify [--n N] [--cases N]                        engines + fast tier vs golden cross-check
   serve [--n N] [--backend native|pjrt] [--requests N] [--batch N] [--threads N]
-        [--mix div:6,sqrt:2,mul:4,...]              serve division or mixed-op traffic
+        [--mix div:6,sqrt:2,mul:4,...] [--tier T]   serve division or mixed-op traffic
   engines                                           list algorithm variants
   bench <suite> [--json P] [--baseline P] [--write-baseline] [--quick|--full]
-        [--threshold PCT] [--advisory]              run a bench suite + regression gate
+        [--threshold PCT] [--advisory] [--tier T]   run a bench suite + regression gate
   bench list                                        list bench suites
   bench validate <report.json>                      schema-check a bench report";
 
@@ -34,6 +35,17 @@ fn alg_by_name(name: &str) -> Option<Algorithm> {
             || a.label().replace(' ', "-").eq_ignore_ascii_case(name)
             || format!("{a:?}").eq_ignore_ascii_case(name)
     })
+}
+
+/// `--tier fast|datapath|auto` (default auto).
+fn tier_flag(args: &Args) -> ExecTier {
+    match args.flag("tier") {
+        None => ExecTier::Auto,
+        Some(s) => ExecTier::parse(s).unwrap_or_else(|| {
+            eprintln!("invalid --tier {s:?} (expected fast|datapath|auto)");
+            std::process::exit(2);
+        }),
+    }
 }
 
 fn main() {
@@ -110,14 +122,22 @@ fn cmd_divide(args: &Args) {
     }
     let x = parse_operand(args, n, &args.positional[0]);
     let d = parse_operand(args, n, &args.positional[1]);
-    let unit = Unit::new(n, Op::Div { alg }).unwrap_or_else(|e| {
+    let tier = tier_flag(args);
+    let unit = Unit::with_tier(n, Op::Div { alg }, tier).unwrap_or_else(|e| {
         eprintln!("{e}");
         std::process::exit(2);
     });
     let div = unit.run(&[x, d]).expect("operands constructed at the context width");
     println!(
-        "Posit{n} {} / {} = {}  (bits {:#x}, {} iterations, {} cycles, alg {})",
-        x, d, div.result, div.result.to_bits(), div.iterations, div.cycles, alg.label()
+        "Posit{n} {} / {} = {}  (bits {:#x}, {} iterations, {} cycles, alg {}, tier {})",
+        x,
+        d,
+        div.result,
+        div.result.to_bits(),
+        div.iterations,
+        div.cycles,
+        alg.label(),
+        unit.scalar_tier()
     );
 }
 
@@ -128,14 +148,20 @@ fn cmd_sqrt(args: &Args) {
         std::process::exit(2);
     }
     let v = parse_operand(args, n, &args.positional[0]);
-    let unit = Unit::new(n, Op::Sqrt).unwrap_or_else(|e| {
+    let unit = Unit::with_tier(n, Op::Sqrt, tier_flag(args)).unwrap_or_else(|e| {
         eprintln!("{e}");
         std::process::exit(2);
     });
     let r = unit.run(&[v]).expect("operand constructed at the context width");
     println!(
-        "Posit{n} sqrt({}) = {}  (bits {:#x}, {} iterations, {} cycles, engine {})",
-        v, r.result, r.result.to_bits(), r.iterations, r.cycles, unit.engine_name()
+        "Posit{n} sqrt({}) = {}  (bits {:#x}, {} iterations, {} cycles, engine {}, tier {})",
+        v,
+        r.result,
+        r.result.to_bits(),
+        r.iterations,
+        r.cycles,
+        unit.engine_name(),
+        unit.scalar_tier()
     );
 }
 
@@ -146,12 +172,13 @@ fn cmd_verify(args: &Args) {
     let units: Vec<Unit> = Algorithm::ALL
         .iter()
         .map(|&alg| {
-            Unit::new(n, Op::Div { alg }).unwrap_or_else(|e| {
+            Unit::with_tier(n, Op::Div { alg }, ExecTier::Datapath).unwrap_or_else(|e| {
                 eprintln!("{e}");
                 std::process::exit(2);
             })
         })
         .collect();
+    let fast = Unit::with_tier(n, Op::DIV, ExecTier::Fast).expect("width validated above");
     let t0 = Instant::now();
     for i in 0..cases {
         let (x, d) = w.next_pair();
@@ -160,18 +187,25 @@ fn cmd_verify(args: &Args) {
             let got = unit.run(&[x, d]).expect("workload width matches").result;
             assert_eq!(got, want, "{} diverges at case {i}: {x:?}/{d:?}", unit.engine_name());
         }
+        let got = fast.run_bits(x.to_bits(), d.to_bits(), 0);
+        assert_eq!(got, want.to_bits(), "fast tier diverges at case {i}: {x:?}/{d:?}");
     }
     println!(
-        "verified {} engines x {} cases on Posit{} against the golden model in {:?} - all bit-exact",
-        units.len(), cases, n, t0.elapsed()
+        "verified {} engines + the fast tier x {} cases on Posit{} against the golden model \
+         in {:?} - all bit-exact",
+        units.len(),
+        cases,
+        n,
+        t0.elapsed()
     );
 }
 
 fn cmd_bench(args: &Args) {
     // Every flag the bench harness understands; used to detect a suite
     // name swallowed by the greedy flag grammar.
-    const BENCH_FLAGS: [&str; 8] = [
+    const BENCH_FLAGS: [&str; 9] = [
         "quick", "full", "advisory", "write-baseline", "json", "baseline", "profile", "threshold",
+        "tier",
     ];
     let code = match args.positional.first().map(String::as_str) {
         None => {
@@ -230,6 +264,7 @@ fn cmd_serve(args: &Args) {
         n,
         backend,
         policy: BatchPolicy { max_batch: batch, max_wait: std::time::Duration::from_micros(200) },
+        tier: tier_flag(args),
     })
     .unwrap_or_else(|e| {
         eprintln!("service start failed: {e}");
@@ -271,5 +306,6 @@ fn cmd_serve(args: &Args) {
         100.0 * m.mean_batch_fill(batch)
     );
     println!("  ops: {}", m.ops.summary());
+    println!("  tiers: {}", m.tiers.summary());
     svc.shutdown();
 }

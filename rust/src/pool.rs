@@ -1,0 +1,343 @@
+//! Crate-level fixed worker pool — the one pool every parallel batch
+//! path shares (no tokio/rayon offline).
+//!
+//! The pool used to live under the coordinator and, worse, every
+//! `run_batch_parallel` call spawned a fresh set of `thread::scope`
+//! workers: one OS thread spawn + join per chunk per batch, paid again on
+//! every dynamic batch the service executed. It is now a crate-level
+//! module with a lazily-initialized process-wide instance
+//! ([`global`]); [`crate::unit::Unit::run_batch_parallel`], the
+//! coordinator's native backend and the bench suites all reuse the same
+//! persistent workers.
+//!
+//! Borrowed (non-`'static`) work runs through [`Pool::run_scoped`], which
+//! blocks until every submitted job has finished — the submitting thread
+//! helps drain the queue while it waits, so nested `run_scoped` calls
+//! from inside a pool job cannot deadlock.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Countdown latch: [`Pool::run_scoped`] blocks on it until every
+/// submitted job has finished (or unwound).
+struct Latch {
+    remaining: Mutex<usize>,
+    done: Condvar,
+}
+
+impl Latch {
+    fn new(count: usize) -> Latch {
+        Latch { remaining: Mutex::new(count), done: Condvar::new() }
+    }
+
+    fn complete_one(&self) {
+        let mut r = self.remaining.lock().unwrap();
+        *r -= 1;
+        if *r == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        *self.remaining.lock().unwrap() == 0
+    }
+
+    /// Wait for completion, bounded so the waiter can go back to helping
+    /// drain the queue.
+    fn wait_timeout(&self, d: Duration) {
+        let g = self.remaining.lock().unwrap();
+        if *g > 0 {
+            drop(self.done.wait_timeout(g, d).unwrap());
+        }
+    }
+}
+
+/// Fixed worker pool over a shared injector queue. Dropping it joins all
+/// workers. Panics inside jobs are contained: they never kill a worker
+/// (`execute` jobs have their panic swallowed; `run_scoped` re-raises it
+/// on the submitting thread).
+pub struct Pool {
+    tx: Option<Sender<Job>>,
+    rx: Arc<Mutex<Receiver<Job>>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Pool {
+    /// Spawn a pool with `threads` workers (at least one).
+    pub fn new(threads: usize) -> Pool {
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..threads.max(1))
+            .map(|i| {
+                let rx = rx.clone();
+                std::thread::Builder::new()
+                    .name(format!("posit-div-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            // contain panics so one bad job cannot
+                            // silently shrink the pool
+                            Ok(job) => drop(catch_unwind(AssertUnwindSafe(job))),
+                            Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        Pool { tx: Some(tx), rx, workers }
+    }
+
+    /// Number of workers.
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a fire-and-forget `'static` job.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        self.tx.as_ref().unwrap().send(Box::new(job)).expect("pool closed");
+    }
+
+    /// Run a set of borrowed jobs on the persistent workers and block
+    /// until all of them have finished. The submitting thread helps drain
+    /// the queue while waiting (so it stays productive, and nested
+    /// `run_scoped` calls from inside a pool job cannot deadlock). If any
+    /// job panicked, the panic is re-raised here after all jobs settle.
+    pub fn run_scoped<'env>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'env>>) {
+        if jobs.is_empty() {
+            return;
+        }
+        if jobs.len() == 1 {
+            // nothing to overlap with: run inline, no cross-thread cost
+            for job in jobs {
+                job();
+            }
+            return;
+        }
+        let latch = Arc::new(Latch::new(jobs.len()));
+        let panicked = Arc::new(AtomicBool::new(false));
+        for job in jobs {
+            // SAFETY: this function does not return until `latch` reports
+            // every wrapped job has completed (or unwound), so the `'env`
+            // borrows captured by `job` strictly outlive its execution.
+            let job: Job = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Job>(job)
+            };
+            let latch = latch.clone();
+            let panicked = panicked.clone();
+            self.execute(move || {
+                if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                    panicked.store(true, Ordering::Relaxed);
+                }
+                latch.complete_one();
+            });
+        }
+        loop {
+            if latch.is_done() {
+                break;
+            }
+            // help: steal queued work (ours or anyone's) while waiting
+            let job = { self.rx.lock().unwrap().try_recv() };
+            match job {
+                Ok(job) => drop(catch_unwind(AssertUnwindSafe(job))),
+                Err(_) => latch.wait_timeout(Duration::from_micros(200)),
+            }
+        }
+        if panicked.load(Ordering::Relaxed) {
+            panic!("pool job panicked");
+        }
+    }
+
+    /// Run `f` over chunks of `items` on the pool's workers, writing
+    /// results in order; blocks until done. No `Default`/`Clone` bound:
+    /// results are written directly into the output's spare capacity.
+    pub fn map_chunks<T, R, F>(&self, items: &[T], chunk: usize, f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(&T) -> R + Sync,
+    {
+        let len = items.len();
+        let chunk = chunk.max(1);
+        let mut out: Vec<R> = Vec::with_capacity(len);
+        let spare = &mut out.spare_capacity_mut()[..len];
+        let f = &f;
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = items
+            .chunks(chunk)
+            .zip(spare.chunks_mut(chunk))
+            .map(|(inp, outp)| {
+                Box::new(move || {
+                    for (i, o) in inp.iter().zip(outp.iter_mut()) {
+                        o.write(f(i));
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        self.run_scoped(jobs);
+        // SAFETY: run_scoped returned without panicking, so every one of
+        // the `len` slots was initialized by exactly one job. (If a job
+        // panics, run_scoped panics and `out` drops at length 0 — the
+        // already-written elements leak rather than double-drop.)
+        unsafe { out.set_len(len) };
+        out
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        self.tx.take(); // close the channel
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Default worker count for the shared pool: the machine's available
+/// parallelism, capped at 16 (the batch kernels saturate memory bandwidth
+/// long before that).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+}
+
+/// The process-wide shared pool, created on first use. Every parallel
+/// batch path in the crate (unit, coordinator, benches) submits here
+/// instead of spawning scoped threads per call.
+pub fn global() -> &'static Pool {
+    static GLOBAL: OnceLock<Pool> = OnceLock::new();
+    GLOBAL.get_or_init(|| Pool::new(default_threads()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = Pool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        let (tx, rx) = channel();
+        for _ in 0..100 {
+            let c = counter.clone();
+            let tx = tx.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                tx.send(()).unwrap();
+            });
+        }
+        for _ in 0..100 {
+            rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn map_chunks_preserves_order() {
+        let pool = Pool::new(3);
+        let items: Vec<u64> = (0..1000).collect();
+        let out = pool.map_chunks(&items, 64, |&x| x * 2);
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    /// The result type needs neither `Default` nor `Clone` anymore.
+    #[test]
+    fn map_chunks_without_default_or_clone() {
+        struct NoDefault(u64);
+        let pool = Pool::new(2);
+        let items: Vec<u64> = (0..301).collect();
+        let out = pool.map_chunks(&items, 10, |&x| NoDefault(x + 1));
+        assert_eq!(out.len(), 301);
+        for (i, r) in out.iter().enumerate() {
+            assert_eq!(r.0, i as u64 + 1);
+        }
+        // empty input: no jobs, empty output
+        let empty: Vec<u64> = Vec::new();
+        assert!(pool.map_chunks(&empty, 8, |&x| NoDefault(x)).is_empty());
+    }
+
+    #[test]
+    fn run_scoped_sees_borrowed_state() {
+        let pool = Pool::new(4);
+        let data: Vec<u64> = (0..64).collect();
+        let mut out = vec![0u64; 64];
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = data
+            .chunks(16)
+            .zip(out.chunks_mut(16))
+            .map(|(inp, outp)| {
+                Box::new(move || {
+                    for (i, o) in inp.iter().zip(outp.iter_mut()) {
+                        *o = i * 3;
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_scoped(jobs);
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i as u64 * 3);
+        }
+    }
+
+    #[test]
+    fn nested_run_scoped_does_not_deadlock() {
+        // A job running on a worker submits its own scoped batch to the
+        // same (fully busy) pool: the waiters help drain, so this
+        // completes instead of deadlocking.
+        let pool = Arc::new(Pool::new(2));
+        let total = Arc::new(AtomicU64::new(0));
+        let outer: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+            .map(|_| {
+                let pool = pool.clone();
+                let total = total.clone();
+                Box::new(move || {
+                    let inner: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+                        .map(|_| {
+                            let total = total.clone();
+                            Box::new(move || {
+                                total.fetch_add(1, Ordering::SeqCst);
+                            }) as Box<dyn FnOnce() + Send + '_>
+                        })
+                        .collect();
+                    pool.run_scoped(inner);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_scoped(outer);
+        assert_eq!(total.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "pool job panicked")]
+    fn run_scoped_propagates_job_panics() {
+        let pool = Pool::new(2);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..3)
+            .map(|i| {
+                Box::new(move || {
+                    if i == 1 {
+                        panic!("boom");
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_scoped(jobs);
+    }
+
+    #[test]
+    fn drop_joins_cleanly() {
+        let pool = Pool::new(2);
+        pool.execute(|| std::thread::sleep(std::time::Duration::from_millis(10)));
+        drop(pool); // must not hang or panic
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_sized() {
+        let a = global() as *const Pool;
+        let b = global() as *const Pool;
+        assert_eq!(a, b);
+        assert!(global().threads() >= 1 && global().threads() <= 16);
+    }
+}

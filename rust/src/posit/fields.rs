@@ -60,6 +60,12 @@ pub enum Unpacked {
 
 impl Posit {
     /// Full decode with special-case detection.
+    ///
+    /// `#[inline]` (like [`Posit::decode`] and the encoder) so the
+    /// width-monomorphized fast-tier kernels
+    /// ([`crate::division::fastpath`]) can const-fold the shift/mask
+    /// arithmetic on `n`.
+    #[inline]
     pub fn unpack(self) -> Unpacked {
         if self.is_zero() {
             Unpacked::Zero
@@ -74,6 +80,7 @@ impl Posit {
     ///
     /// Panics on zero/NaR (callers handle specials first — exactly like the
     /// hardware, where the special detector runs in parallel with decode).
+    #[inline]
     pub fn decode(self) -> Decoded {
         assert!(!self.is_zero() && !self.is_nar(), "decode of special value");
         let n = self.width();

@@ -15,6 +15,10 @@ use super::{mask, Posit, ES};
 /// i.e. a normalized significand in [1,2)) into a Posit⟨n,2⟩ with
 /// round-to-nearest-even. `sticky` ORs in any discarded lower bits (e.g. the
 /// non-zero-remainder condition of a division).
+///
+/// `#[inline]` so the width-monomorphized fast-tier kernels
+/// ([`crate::division::fastpath`]) can const-fold on `n`.
+#[inline]
 pub fn encode_round(n: u32, sign: bool, scale: i32, sig: u128, sfb: u32, sticky: bool) -> Posit {
     debug_assert!(sfb < 127, "significand too wide");
     debug_assert!(sig >> sfb == 1, "significand not normalized to [1,2): sig={sig:#x} sfb={sfb}");

@@ -26,5 +26,6 @@ pub use crate::division::Divider;
 pub use crate::division::sqrt::{golden_sqrt, SqrtEngine, SqrtResult};
 pub use crate::division::{Algorithm, DivEngine, Division};
 pub use crate::error::{PositError, Result};
+pub use crate::pool::Pool;
 pub use crate::posit::{Posit, RoundFrom, RoundInto, P16, P32, P64, P8};
-pub use crate::unit::{Op, OpRequest, Unit};
+pub use crate::unit::{ExecTier, Op, OpRequest, Unit};

@@ -22,9 +22,18 @@
 //! context (`Divider`, now a thin deprecated wrapper over a `Unit` with
 //! `Op::Div`): the same per-algorithm engines run behind the same shared
 //! [`exec`] front/back end.
+//!
+//! Execution is **tiered** ([`ExecTier`]): the paper-faithful
+//! cycle-accurate engines form the *Datapath* tier, and the
+//! width-specialized direct kernels of [`crate::division::fastpath`] form
+//! the *Fast* tier — bit-identical by construction and by test
+//! (tier-equivalence sweeps, exhaustive at Posit8). The default `Auto`
+//! tier serves batch/bit-level traffic from the Fast kernels and switches
+//! to the Datapath whenever cycle metadata is requested ([`Unit::run`]).
 
 use std::fmt;
 
+use crate::division::fastpath::{self, FastKernel};
 use crate::division::sqrt::{golden_sqrt, SqrtEngine};
 use crate::division::{
     exec, golden, iterations, latency_cycles, newton::Newton, nrd::Nrd, srt2::Srt2,
@@ -38,6 +47,61 @@ use crate::posit::{mask, Posit, MAX_N, MIN_N};
 /// decode/detect/encode cost of the special path ([`exec::SPECIAL_CYCLES`])
 /// plus one datapath stage.
 const ARITH_CYCLES: u32 = exec::SPECIAL_CYCLES + 1;
+
+/// Which execution tier serves a [`Unit`]'s requests.
+///
+/// Both tiers are bit-identical for every operation and every division
+/// algorithm (verified by the tier-equivalence sweeps and the exhaustive
+/// Posit8 gates); they differ in *how* the result is produced and in what
+/// the execution metadata means.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum ExecTier {
+    /// The paper-faithful cycle-accurate engines: per-iteration
+    /// carry-save/OTF state emulation, exact `iterations`/`cycles`
+    /// metadata straight from the recurrence. The golden serving path for
+    /// verification, ablations and anything that asks "what would the
+    /// hardware do".
+    Datapath,
+    /// The width-specialized direct kernels
+    /// ([`crate::division::fastpath`]): one fixed-point `u128` division /
+    /// integer square root / native integer op per lane, monomorphized
+    /// over n ∈ {8, 16, 32, 64} with a dynamic-width fallback. Scalar
+    /// metadata is *modeled* from the unit's cached per-format counts
+    /// (identical to what the datapath reports, without stepping it).
+    Fast,
+    /// The serving default: Fast for the batch/bit-level entry points
+    /// ([`Unit::run_batch`], [`Unit::run_bits`]), Datapath whenever cycle
+    /// metadata is requested ([`Unit::run`]).
+    #[default]
+    Auto,
+}
+
+impl ExecTier {
+    /// Parse a CLI-style tier name (`fast`, `datapath`, `auto`).
+    pub fn parse(s: &str) -> Option<ExecTier> {
+        match s.to_ascii_lowercase().as_str() {
+            "datapath" => Some(ExecTier::Datapath),
+            "fast" => Some(ExecTier::Fast),
+            "auto" => Some(ExecTier::Auto),
+            _ => None,
+        }
+    }
+
+    /// Stable lowercase name (`datapath`, `fast`, `auto`).
+    pub fn name(self) -> &'static str {
+        match self {
+            ExecTier::Datapath => "datapath",
+            ExecTier::Fast => "fast",
+            ExecTier::Auto => "auto",
+        }
+    }
+}
+
+impl fmt::Display for ExecTier {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
 
 /// The operations a [`Unit`] can serve.
 ///
@@ -104,6 +168,19 @@ impl Op {
         match self {
             Op::Div { alg } => format!("div[{}]", alg.label()),
             other => other.name().to_string(),
+        }
+    }
+
+    /// The fast-tier kernel kind serving this op (the division algorithm
+    /// is irrelevant there: every engine is correctly rounded).
+    fn fast_kind(self) -> fastpath::Kind {
+        match self {
+            Op::Div { .. } => fastpath::Kind::Div,
+            Op::Sqrt => fastpath::Kind::Sqrt,
+            Op::Mul => fastpath::Kind::Mul,
+            Op::Add => fastpath::Kind::Add,
+            Op::Sub => fastpath::Kind::Sub,
+            Op::MulAdd => fastpath::Kind::MulAdd,
         }
     }
 }
@@ -336,19 +413,32 @@ pub struct Unit {
     n: u32,
     op: Op,
     core: Core,
+    tier: ExecTier,
+    fast: FastKernel,
     iterations: u32,
+    /// Iterations a *real* (non-special) lane reports — what the datapath
+    /// engine would count. Equal to `iterations` except for the Newton
+    /// baseline (whose public count is 0 but whose engine reports its NR
+    /// step count); used by the fast tier's modeled scalar metadata.
+    real_iters: u32,
     cycles: u32,
     mask: u64,
 }
 
 impl Unit {
-    /// Build a context for `Posit<n, 2>` serving `op`. All width-derived
-    /// state is computed here, once.
+    /// Build a context for `Posit<n, 2>` serving `op` at the default
+    /// [`ExecTier::Auto`]. All width-derived state is computed here, once.
     pub fn new(n: u32, op: Op) -> Result<Unit> {
+        Unit::with_tier(n, op, ExecTier::Auto)
+    }
+
+    /// Build a context for `Posit<n, 2>` serving `op` from a specific
+    /// execution tier.
+    pub fn with_tier(n: u32, op: Op, tier: ExecTier) -> Result<Unit> {
         if !(MIN_N..=MAX_N).contains(&n) {
             return Err(PositError::WidthOutOfRange { n });
         }
-        let (core, iters, cycles) = match op {
+        let (core, iters, real_iters, cycles) = match op {
             Op::Div { alg } => {
                 let engine = EngineAny::for_algorithm(alg);
                 let iters = match alg.radix() {
@@ -358,23 +448,64 @@ impl Unit {
                 // `latency_cycles` would build a throwaway Newton (and its
                 // seed LUT) just to ask for the cycle count — use the
                 // engine we already hold instead.
-                let cycles = match &engine {
-                    EngineAny::Newton(e) => e.cycles(n),
-                    _ => latency_cycles(n, alg),
+                let (real_iters, cycles) = match &engine {
+                    EngineAny::Newton(e) => (e.nr_steps(n), e.cycles(n)),
+                    // the [14] decode costs the recurrence one extra
+                    // iteration beyond the Table II count
+                    _ => (
+                        iters + (alg == Algorithm::NrdAsap23) as u32,
+                        latency_cycles(n, alg),
+                    ),
                 };
-                (Core::Div { engine }, iters, cycles)
+                (Core::Div { engine }, iters, real_iters, cycles)
             }
             Op::Sqrt => {
                 let engine = SqrtEngine::new();
                 let iters = engine.iterations(n);
-                (Core::Sqrt { engine }, iters, iters + exec::SPECIAL_CYCLES)
+                (Core::Sqrt { engine }, iters, iters, iters + exec::SPECIAL_CYCLES)
             }
-            Op::Mul => (Core::Mul, 0, ARITH_CYCLES),
-            Op::Add => (Core::Add, 0, ARITH_CYCLES),
-            Op::Sub => (Core::Sub, 0, ARITH_CYCLES),
-            Op::MulAdd => (Core::MulAdd, 0, ARITH_CYCLES + 1),
+            Op::Mul => (Core::Mul, 0, 0, ARITH_CYCLES),
+            Op::Add => (Core::Add, 0, 0, ARITH_CYCLES),
+            Op::Sub => (Core::Sub, 0, 0, ARITH_CYCLES),
+            Op::MulAdd => (Core::MulAdd, 0, 0, ARITH_CYCLES + 1),
         };
-        Ok(Unit { n, op, core, iterations: iters, cycles, mask: mask(n) })
+        Ok(Unit {
+            n,
+            op,
+            core,
+            tier,
+            fast: FastKernel::new(n, op.fast_kind()),
+            iterations: iters,
+            real_iters,
+            cycles,
+            mask: mask(n),
+        })
+    }
+
+    /// The configured execution tier.
+    #[inline]
+    pub fn tier(&self) -> ExecTier {
+        self.tier
+    }
+
+    /// The tier that actually serves the batch/bit-level entry points
+    /// (`Auto` resolves to `Fast`): never `Auto`.
+    #[inline]
+    pub fn batch_tier(&self) -> ExecTier {
+        match self.tier {
+            ExecTier::Datapath => ExecTier::Datapath,
+            _ => ExecTier::Fast,
+        }
+    }
+
+    /// The tier that serves metadata-bearing scalar calls ([`Unit::run`];
+    /// `Auto` resolves to `Datapath`): never `Auto`.
+    #[inline]
+    pub fn scalar_tier(&self) -> ExecTier {
+        match self.tier {
+            ExecTier::Fast => ExecTier::Fast,
+            _ => ExecTier::Datapath,
+        }
     }
 
     /// Posit width this context serves.
@@ -447,6 +578,12 @@ impl Unit {
     /// One scalar operation with metadata. `operands.len()` must equal
     /// [`Unit::arity`] and every operand must be at the context width;
     /// both misuses are typed errors, not panics.
+    ///
+    /// Under [`ExecTier::Auto`] this entry point runs the Datapath tier
+    /// (cycle metadata is being requested). Under an explicit
+    /// [`ExecTier::Fast`] the result comes from the fast kernel and the
+    /// metadata is modeled from the cached per-format counts — the same
+    /// values the datapath reports, without stepping it.
     pub fn run(&self, operands: &[Posit]) -> Result<Division> {
         if operands.len() != self.op.arity() {
             return Err(PositError::ArityMismatch {
@@ -459,6 +596,9 @@ impl Unit {
             if p.width() != self.n {
                 return Err(PositError::WidthMismatch { expected: self.n, got: p.width() });
             }
+        }
+        if self.scalar_tier() == ExecTier::Fast {
+            return Ok(self.fast_run(operands));
         }
         Ok(match &self.core {
             Core::Div { engine } => exec::divide_with(engine, operands[0], operands[1]),
@@ -477,6 +617,27 @@ impl Unit {
         })
     }
 
+    /// Fast-tier scalar execution with modeled metadata (bit-identical to
+    /// what the datapath tier reports for the same request).
+    fn fast_run(&self, operands: &[Posit]) -> Division {
+        let lane = |i: usize| operands.get(i).map_or(0, |p| p.to_bits());
+        let (a, b, c) = (lane(0), lane(1), lane(2));
+        let special = self.fast.classify(a, b, c);
+        let bits = special.unwrap_or_else(|| self.fast.real_bits(a, b, c));
+        let result = Posit::from_bits(self.n, bits);
+        match self.op {
+            // recurrence ops: specials skip the datapath entirely
+            Op::Div { .. } | Op::Sqrt if special.is_some() => {
+                Division { result, iterations: 0, cycles: exec::SPECIAL_CYCLES }
+            }
+            Op::Div { .. } | Op::Sqrt => {
+                Division { result, iterations: self.real_iters, cycles: self.cycles }
+            }
+            // single-pass arithmetic ops model one flat latency
+            _ => self.arith_division(result),
+        }
+    }
+
     #[inline]
     fn arith_division(&self, result: Posit) -> Division {
         Division { result, iterations: 0, cycles: self.cycles }
@@ -484,9 +645,20 @@ impl Unit {
 
     /// One operation over raw `n`-bit patterns (high garbage bits are
     /// masked off — the same contract as the PJRT graph). Lanes beyond the
-    /// op's arity are ignored. This is the batch-path inner loop.
+    /// op's arity are ignored. This is the batch-path inner loop; it runs
+    /// on [`Unit::batch_tier`] (the Fast kernels unless the unit was
+    /// pinned to `Datapath`).
     #[inline]
     pub fn run_bits(&self, a: u64, b: u64, c: u64) -> u64 {
+        if self.batch_tier() == ExecTier::Fast {
+            return self.fast.op_bits(a, b, c);
+        }
+        self.datapath_bits(a, b, c)
+    }
+
+    /// Datapath-tier bit-level execution (the cycle-accurate engines).
+    #[inline]
+    fn datapath_bits(&self, a: u64, b: u64, c: u64) -> u64 {
         let p = |bits: u64| Posit::from_bits(self.n, bits & self.mask);
         match &self.core {
             Core::Div { engine } => exec::divide_with(engine, p(a), p(b)).result.to_bits(),
@@ -525,32 +697,44 @@ impl Unit {
     /// (pass `&[]` for the rest). Bit-identical to calling [`Unit::run`]
     /// element-wise; the coordinator's native backend, the benches and the
     /// examples all go through this one loop.
+    ///
+    /// Runs on [`Unit::batch_tier`]: under `Auto`/`Fast` the batch decode
+    /// is hoisted into a lane-splitting pre-pass (special patterns
+    /// resolved in bulk, real lanes through the width-monomorphized
+    /// kernel loop); under `Datapath` every lane steps the cycle-accurate
+    /// engine.
     pub fn run_batch(&self, a: &[u64], b: &[u64], c: &[u64], out: &mut [u64]) -> Result<()> {
         self.check_lanes(a, b, c, out.len())?;
+        if self.batch_tier() == ExecTier::Fast {
+            self.fast.run_batch(a, b, c, out);
+            return Ok(());
+        }
         match self.op.arity() {
             1 => {
                 for (&x, o) in a.iter().zip(out.iter_mut()) {
-                    *o = self.run_bits(x, 0, 0);
+                    *o = self.datapath_bits(x, 0, 0);
                 }
             }
             2 => {
                 for ((&x, &y), o) in a.iter().zip(b.iter()).zip(out.iter_mut()) {
-                    *o = self.run_bits(x, y, 0);
+                    *o = self.datapath_bits(x, y, 0);
                 }
             }
             _ => {
                 for (((&x, &y), &z), o) in
                     a.iter().zip(b.iter()).zip(c.iter()).zip(out.iter_mut())
                 {
-                    *o = self.run_bits(x, y, z);
+                    *o = self.datapath_bits(x, y, z);
                 }
             }
         }
         Ok(())
     }
 
-    /// [`Unit::run_batch`] spread over `threads` scoped workers
-    /// (contiguous chunks, results written in place — ordering preserved).
+    /// [`Unit::run_batch`] split into `threads` contiguous chunks and
+    /// spread over the shared crate-level worker pool
+    /// ([`crate::pool::global`] — persistent workers, no per-call thread
+    /// spawning); results are written in place, ordering preserved.
     pub fn run_batch_parallel(
         &self,
         a: &[u64],
@@ -565,19 +749,19 @@ impl Unit {
             return self.run_batch(a, b, c, out);
         }
         let chunk = out.len().div_ceil(threads).max(1);
-        std::thread::scope(|s| {
-            let mut start = 0usize;
-            for co in out.chunks_mut(chunk) {
-                let end = start + co.len();
-                let ca = &a[start..end];
-                let cb = if b.is_empty() { b } else { &b[start..end] };
-                let cc = if c.is_empty() { c } else { &c[start..end] };
-                s.spawn(move || {
-                    self.run_batch(ca, cb, cc, co).expect("equal chunk lanes");
-                });
-                start = end;
-            }
-        });
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(threads);
+        let mut start = 0usize;
+        for co in out.chunks_mut(chunk) {
+            let end = start + co.len();
+            let ca = &a[start..end];
+            let cb = if b.is_empty() { b } else { &b[start..end] };
+            let cc = if c.is_empty() { c } else { &c[start..end] };
+            jobs.push(Box::new(move || {
+                self.run_batch(ca, cb, cc, co).expect("equal chunk lanes");
+            }));
+            start = end;
+        }
+        crate::pool::global().run_scoped(jobs);
         Ok(())
     }
 }
@@ -587,6 +771,7 @@ impl fmt::Debug for Unit {
         f.debug_struct("Unit")
             .field("n", &self.n)
             .field("op", &self.op)
+            .field("tier", &self.tier)
             .field("engine", &self.engine_name())
             .field("iterations", &self.iterations)
             .field("latency_cycles", &self.cycles)
@@ -769,6 +954,79 @@ mod tests {
         assert_eq!(e.algorithm(), Algorithm::Srt4CsOfFr);
         assert_eq!(e.divide(Posit::one(16), Posit::one(16)).result, Posit::one(16));
         assert_eq!(unit.engine_name(), "SRT r4 CS OF FR");
+    }
+
+    #[test]
+    fn exec_tier_parse_and_names() {
+        assert_eq!(ExecTier::parse("fast"), Some(ExecTier::Fast));
+        assert_eq!(ExecTier::parse("DATAPATH"), Some(ExecTier::Datapath));
+        assert_eq!(ExecTier::parse("Auto"), Some(ExecTier::Auto));
+        assert_eq!(ExecTier::parse("warp"), None);
+        assert_eq!(ExecTier::Fast.name(), "fast");
+        assert_eq!(ExecTier::Datapath.to_string(), "datapath");
+        assert_eq!(ExecTier::default(), ExecTier::Auto);
+    }
+
+    #[test]
+    fn auto_tier_resolution() {
+        let unit = Unit::new(16, Op::DIV).unwrap();
+        assert_eq!(unit.tier(), ExecTier::Auto);
+        assert_eq!(unit.batch_tier(), ExecTier::Fast);
+        assert_eq!(unit.scalar_tier(), ExecTier::Datapath);
+        let fast = Unit::with_tier(16, Op::DIV, ExecTier::Fast).unwrap();
+        assert_eq!((fast.batch_tier(), fast.scalar_tier()), (ExecTier::Fast, ExecTier::Fast));
+        let dp = Unit::with_tier(16, Op::DIV, ExecTier::Datapath).unwrap();
+        assert_eq!((dp.batch_tier(), dp.scalar_tier()), (ExecTier::Datapath, ExecTier::Datapath));
+        assert_eq!(
+            Unit::with_tier(3, Op::DIV, ExecTier::Fast).err(),
+            Some(PositError::WidthOutOfRange { n: 3 })
+        );
+    }
+
+    #[test]
+    fn fast_scalar_metadata_matches_datapath() {
+        let mut rng = Rng::seeded(0x7137);
+        let ops = [
+            Op::DIV,
+            Op::Div { alg: Algorithm::Nrd },
+            Op::Div { alg: Algorithm::NrdAsap23 },
+            Op::Div { alg: Algorithm::Newton },
+            Op::Sqrt,
+            Op::Mul,
+            Op::Add,
+            Op::Sub,
+            Op::MulAdd,
+        ];
+        for n in [8u32, 16, 32] {
+            for op in ops {
+                let fast = Unit::with_tier(n, op, ExecTier::Fast).unwrap();
+                let dp = Unit::with_tier(n, op, ExecTier::Datapath).unwrap();
+                let mut cases: Vec<Vec<Posit>> = (0..60)
+                    .map(|_| {
+                        (0..op.arity())
+                            .map(|_| Posit::from_bits(n, rng.next_u64() & mask(n)))
+                            .collect()
+                    })
+                    .collect();
+                // directed specials in every operand slot
+                for s in [Posit::zero(n), Posit::nar(n), Posit::one(n).neg()] {
+                    for slot in 0..op.arity() {
+                        let mut ops_v = vec![Posit::one(n); op.arity()];
+                        ops_v[slot] = s;
+                        cases.push(ops_v);
+                    }
+                }
+                for operands in cases {
+                    let f = fast.run(&operands).unwrap();
+                    let d = dp.run(&operands).unwrap();
+                    assert_eq!(
+                        (f.result, f.iterations, f.cycles),
+                        (d.result, d.iterations, d.cycles),
+                        "{op} n={n} operands={operands:?}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -8,6 +8,7 @@ use posit_div::coordinator::{Backend, BatchPolicy, DivisionService, ServiceConfi
 use posit_div::division::Algorithm;
 use posit_div::posit::Posit;
 use posit_div::runtime::Runtime;
+use posit_div::unit::ExecTier;
 use posit_div::PositError;
 
 #[test]
@@ -44,6 +45,7 @@ fn service_startup_fails_on_unusable_pjrt_backend() {
         n: 16,
         backend: Backend::Pjrt { artifacts_dir: dir.clone() },
         policy: BatchPolicy::default(),
+        tier: ExecTier::Auto,
     });
     match res {
         Err(PositError::Execution { .. }) | Err(PositError::BackendUnavailable { .. }) => {}
@@ -57,6 +59,7 @@ fn service_start_rejects_bad_width() {
         n: 3,
         backend: Backend::Native { alg: Algorithm::Srt2Cs, threads: 1 },
         policy: BatchPolicy::default(),
+        tier: ExecTier::Auto,
     });
     assert_eq!(res.err(), Some(PositError::WidthOutOfRange { n: 3 }));
 }
@@ -67,6 +70,7 @@ fn service_survives_dropped_response_receivers() {
         n: 16,
         backend: Backend::Native { alg: Algorithm::Srt2Cs, threads: 2 },
         policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(50) },
+        tier: ExecTier::Auto,
     })
     .unwrap();
     let client = svc.client();
@@ -86,6 +90,7 @@ fn service_width_mismatch_is_typed_error_not_panic() {
         n: 16,
         backend: Backend::Native { alg: Algorithm::Srt2Cs, threads: 1 },
         policy: BatchPolicy::default(),
+        tier: ExecTier::Auto,
     })
     .unwrap();
     let client = svc.client();

@@ -3,7 +3,9 @@
 //! (SRT r4 CS OF FR) against the exact golden model — at the
 //! full-division level and at the fraction-recurrence level
 //! (`golden::frac_divide`) — plus every one of the 256 patterns through
-//! the sqrt unit against the exact-rational golden (`golden_sqrt`).
+//! the sqrt unit against the exact-rational golden (`golden_sqrt`), and
+//! the whole pattern space again through the **Fast tier**'s
+//! width-monomorphized kernels (the serving default under `Auto`).
 //!
 //! `#[ignore]`d for local `cargo test` (the tier-1 suite already covers
 //! Posit8 exhaustively across all engines in `engines_cross.rs` and the
@@ -18,7 +20,7 @@
 use posit_div::division::sqrt::golden_sqrt;
 use posit_div::division::{golden, Algorithm, DivEngine, Divider};
 use posit_div::posit::{mask, Posit, Unpacked};
-use posit_div::unit::{Op, Unit};
+use posit_div::unit::{ExecTier, Op, Unit};
 
 #[test]
 #[ignore = "exhaustive CI gate; run with `cargo test --test p8_exhaustive -- --ignored`"]
@@ -62,6 +64,74 @@ fn p8_sqrt_unit_matches_exact_rational_golden_on_all_patterns() {
             assert_eq!(got.iterations, unit.iterations(), "{v:?}");
         } else {
             assert_eq!(got.iterations, 0, "{v:?} takes the special fast path");
+        }
+    }
+}
+
+/// Exhaustive Fast-tier gate: every Posit8 pattern pair through the
+/// width-monomorphized fast kernels — division and the binary arithmetic
+/// ops against the exact references, sqrt over all 256 patterns, and
+/// mul-add with a directed third lane. The serving default (`Auto`)
+/// resolves batch traffic to exactly these kernels.
+#[test]
+#[ignore = "exhaustive CI gate; run with `cargo test --test p8_exhaustive -- --ignored`"]
+fn p8_fast_tier_matches_exact_references_on_all_pattern_pairs() {
+    let n = 8;
+    let p = |bits: u64| Posit::from_bits(n, bits);
+    let units: Vec<Unit> = [Op::DIV, Op::Mul, Op::Add, Op::Sub, Op::MulAdd, Op::Sqrt]
+        .into_iter()
+        .map(|op| Unit::with_tier(n, op, ExecTier::Fast).expect("standard width"))
+        .collect();
+    let c_directed = [0u64, 1 << (n - 1), 1 << (n - 2), mask(n - 1)];
+    for a in 0..=mask(n) {
+        for b in 0..=mask(n) {
+            for unit in &units {
+                match unit.op() {
+                    Op::Div { .. } => {
+                        let want = golden::divide(p(a), p(b)).result.to_bits();
+                        assert_eq!(unit.run_bits(a, b, 0), want, "div {a:#x}/{b:#x}");
+                    }
+                    Op::Mul => {
+                        assert_eq!(
+                            unit.run_bits(a, b, 0),
+                            p(a).mul(p(b)).to_bits(),
+                            "mul {a:#x}*{b:#x}"
+                        );
+                    }
+                    Op::Add => {
+                        assert_eq!(
+                            unit.run_bits(a, b, 0),
+                            p(a).add(p(b)).to_bits(),
+                            "add {a:#x}+{b:#x}"
+                        );
+                    }
+                    Op::Sub => {
+                        assert_eq!(
+                            unit.run_bits(a, b, 0),
+                            p(a).sub(p(b)).to_bits(),
+                            "sub {a:#x}-{b:#x}"
+                        );
+                    }
+                    Op::MulAdd => {
+                        for c in c_directed {
+                            assert_eq!(
+                                unit.run_bits(a, b, c),
+                                p(a).mul_add(p(b), p(c)).to_bits(),
+                                "mul_add {a:#x}*{b:#x}+{c:#x}"
+                            );
+                        }
+                    }
+                    Op::Sqrt => {
+                        if b == 0 {
+                            assert_eq!(
+                                unit.run_bits(a, 0, 0),
+                                golden_sqrt(p(a)).result.to_bits(),
+                                "sqrt {a:#x}"
+                            );
+                        }
+                    }
+                }
+            }
         }
     }
 }

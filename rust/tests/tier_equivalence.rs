@@ -1,0 +1,175 @@
+//! Tier-equivalence gates: the Fast tier (width-monomorphized direct
+//! kernels) must be bit-identical to the Datapath tier (cycle-accurate
+//! engines) — and both to the exact golden references — for every
+//! operation, every division algorithm, and every width class, specials
+//! and NaR included. These sweeps run un-`#[ignore]`d as part of tier-1
+//! `cargo test`; the exhaustive Posit8 fast-tier gate lives in
+//! `p8_exhaustive.rs`.
+
+use posit_div::division::golden;
+use posit_div::posit::mask;
+use posit_div::prelude::*;
+use posit_div::testkit::Rng;
+
+/// Standard widths (monomorphized kernels) plus odd widths (dynamic
+/// fallback) — Posit10 is the paper's worked-example format.
+const WIDTHS: [u32; 5] = [8, 10, 16, 32, 64];
+
+/// Directed operand patterns: both specials, the saturation endpoints,
+/// ±1, and values with extreme regimes.
+fn directed(n: u32) -> Vec<u64> {
+    let one = Posit::one(n);
+    vec![
+        Posit::zero(n).to_bits(),
+        Posit::nar(n).to_bits(),
+        one.to_bits(),
+        one.neg().to_bits(),
+        Posit::maxpos(n).to_bits(),
+        Posit::maxpos(n).neg().to_bits(),
+        Posit::minpos(n).to_bits(),
+        Posit::minpos(n).neg().to_bits(),
+    ]
+}
+
+/// Seeded lanes: every directed×directed pair, then random patterns.
+fn lanes(n: u32, rng: &mut Rng, random: usize) -> (Vec<u64>, Vec<u64>, Vec<u64>) {
+    let d = directed(n);
+    let mut a = Vec::new();
+    let mut b = Vec::new();
+    for &x in &d {
+        for &y in &d {
+            a.push(x);
+            b.push(y);
+        }
+    }
+    for _ in 0..random {
+        a.push(rng.next_u64() & mask(n));
+        b.push(rng.next_u64() & mask(n));
+    }
+    let c: Vec<u64> = (0..a.len()).map(|_| rng.next_u64() & mask(n)).collect();
+    (a, b, c)
+}
+
+#[test]
+fn fast_tier_division_matches_datapath_and_golden_for_every_algorithm() {
+    let mut rng = Rng::seeded(0x7151);
+    for n in WIDTHS {
+        let (xs, ds, _) = lanes(n, &mut rng, 200);
+        let golden_bits: Vec<u64> = xs
+            .iter()
+            .zip(&ds)
+            .map(|(&x, &d)| {
+                golden::divide(Posit::from_bits(n, x), Posit::from_bits(n, d)).result.to_bits()
+            })
+            .collect();
+        for alg in Algorithm::ALL {
+            let fast = Unit::with_tier(n, Op::Div { alg }, ExecTier::Fast).expect("valid width");
+            let dp =
+                Unit::with_tier(n, Op::Div { alg }, ExecTier::Datapath).expect("valid width");
+            let mut fast_out = vec![0u64; xs.len()];
+            let mut dp_out = vec![0u64; xs.len()];
+            fast.run_batch(&xs, &ds, &[], &mut fast_out).expect("equal lanes");
+            dp.run_batch(&xs, &ds, &[], &mut dp_out).expect("equal lanes");
+            for i in 0..xs.len() {
+                assert_eq!(
+                    fast_out[i], dp_out[i],
+                    "{} n={n} lane {i}: fast != datapath ({:#x}/{:#x})",
+                    alg.label(),
+                    xs[i],
+                    ds[i]
+                );
+                assert_eq!(
+                    fast_out[i], golden_bits[i],
+                    "{} n={n} lane {i}: tiers != golden ({:#x}/{:#x})",
+                    alg.label(),
+                    xs[i],
+                    ds[i]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fast_tier_matches_datapath_for_every_op() {
+    let mut rng = Rng::seeded(0x7152);
+    for n in WIDTHS {
+        let (a, b, c) = lanes(n, &mut rng, 200);
+        for op in Op::DEFAULTS {
+            let fast = Unit::with_tier(n, op, ExecTier::Fast).expect("valid width");
+            let dp = Unit::with_tier(n, op, ExecTier::Datapath).expect("valid width");
+            let (lb, lc): (&[u64], &[u64]) = match op.arity() {
+                1 => (&[], &[]),
+                2 => (&b, &[]),
+                _ => (&b, &c),
+            };
+            let mut fast_out = vec![0u64; a.len()];
+            let mut dp_out = vec![0u64; a.len()];
+            fast.run_batch(&a, lb, lc, &mut fast_out).expect("equal lanes");
+            dp.run_batch(&a, lb, lc, &mut dp_out).expect("equal lanes");
+            assert_eq!(fast_out, dp_out, "{op} n={n}");
+            // and both against the shared exact-reference table
+            for i in 0..a.len() {
+                let operands: Vec<Posit> = [a[i], b[i], c[i]]
+                    .iter()
+                    .take(op.arity())
+                    .map(|&bits| Posit::from_bits(n, bits))
+                    .collect();
+                let want = OpRequest::new(op, &operands).expect("arity matches").golden();
+                assert_eq!(fast_out[i], want.to_bits(), "{op} n={n} lane {i} vs golden");
+            }
+        }
+    }
+}
+
+#[test]
+fn auto_tier_serves_batches_from_the_fast_kernels_bit_identically() {
+    // `Unit::new` (Auto) must agree with both pinned tiers on the batch
+    // path, and its scalar path (datapath) must agree with the fast
+    // scalar path including metadata.
+    let mut rng = Rng::seeded(0x7153);
+    for n in [8u32, 16, 32] {
+        let (a, b, _) = lanes(n, &mut rng, 100);
+        for alg in [Algorithm::DEFAULT, Algorithm::Newton] {
+            let auto = Unit::new(n, Op::Div { alg }).expect("valid width");
+            let fast = Unit::with_tier(n, Op::Div { alg }, ExecTier::Fast).expect("valid width");
+            let mut auto_out = vec![0u64; a.len()];
+            let mut fast_out = vec![0u64; a.len()];
+            auto.run_batch(&a, &b, &[], &mut auto_out).expect("equal lanes");
+            fast.run_batch(&a, &b, &[], &mut fast_out).expect("equal lanes");
+            assert_eq!(auto_out, fast_out, "{} n={n}", alg.label());
+            for i in (0..a.len()).step_by(7) {
+                let x = Posit::from_bits(n, a[i]);
+                let d = Posit::from_bits(n, b[i]);
+                let s_auto = auto.run(&[x, d]).expect("width matches");
+                let s_fast = fast.run(&[x, d]).expect("width matches");
+                assert_eq!(
+                    (s_auto.result, s_auto.iterations, s_auto.cycles),
+                    (s_fast.result, s_fast.iterations, s_fast.cycles),
+                    "{} n={n} lane {i}: fast metadata must model the datapath",
+                    alg.label()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fast_tier_parallel_batches_are_bit_identical_on_the_shared_pool() {
+    let mut rng = Rng::seeded(0x7154);
+    let n = 16;
+    let (a, b, c) = lanes(n, &mut rng, 935);
+    for op in Op::DEFAULTS {
+        let fast = Unit::with_tier(n, op, ExecTier::Fast).expect("valid width");
+        let (lb, lc): (&[u64], &[u64]) = match op.arity() {
+            1 => (&[], &[]),
+            2 => (&b, &[]),
+            _ => (&b, &c),
+        };
+        let mut serial = vec![0u64; a.len()];
+        let mut parallel = vec![0u64; a.len()];
+        fast.run_batch(&a, lb, lc, &mut serial).expect("equal lanes");
+        fast.run_batch_parallel(&a, lb, lc, &mut parallel, 4).expect("equal lanes");
+        assert_eq!(serial, parallel, "{op}");
+    }
+}

@@ -93,6 +93,29 @@ fn typed_sqrt_and_prelude_exports() {
 }
 
 #[test]
+fn exec_tier_is_part_of_the_public_surface() {
+    // ExecTier comes from the prelude; with_tier builds pinned units and
+    // the resolution rules are observable.
+    let auto = Unit::new(16, Op::DIV).expect("valid width");
+    assert_eq!(auto.tier(), ExecTier::Auto);
+    assert_eq!(auto.batch_tier(), ExecTier::Fast);
+    assert_eq!(auto.scalar_tier(), ExecTier::Datapath);
+    let fast = Unit::with_tier(16, Op::DIV, ExecTier::Fast).expect("valid width");
+    let dp = Unit::with_tier(16, Op::DIV, ExecTier::Datapath).expect("valid width");
+    // the three tiers agree bit-for-bit on a quick sample
+    let mut rng = Rng::seeded(0x71E5);
+    for _ in 0..200 {
+        let (a, b) = (rng.next_u64(), rng.next_u64());
+        let want = dp.run_bits(a, b, 0);
+        assert_eq!(fast.run_bits(a, b, 0), want);
+        assert_eq!(auto.run_bits(a, b, 0), want);
+    }
+    // service config carries a tier
+    let cfg = ServiceConfig { tier: ExecTier::Fast, ..ServiceConfig::default() };
+    assert_eq!(cfg.tier, ExecTier::Fast);
+}
+
+#[test]
 fn arity_width_and_lane_errors_are_typed() {
     let sqrt = Unit::new(16, Op::Sqrt).expect("valid width");
     assert_eq!(
@@ -123,6 +146,7 @@ fn client_serves_every_op_and_counts_it() {
         n: 16,
         backend: Backend::Native { alg: Algorithm::DEFAULT, threads: 2 },
         policy: BatchPolicy { max_batch: 64, max_wait: std::time::Duration::from_micros(100) },
+        tier: ExecTier::Auto,
     })
     .expect("native service starts");
     let client = svc.client();
@@ -166,6 +190,7 @@ fn mixed_workload_through_client_matches_references() {
         n,
         backend: Backend::Native { alg: Algorithm::DEFAULT, threads: 4 },
         policy: BatchPolicy::default(),
+        tier: ExecTier::Auto,
     })
     .expect("native service starts");
     let client = svc.client();
