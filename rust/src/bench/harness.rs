@@ -51,6 +51,29 @@ fn env_flag(name: &str) -> bool {
     std::env::var(name).is_ok_and(|v| v == "1" || v.eq_ignore_ascii_case("true"))
 }
 
+/// Default regression threshold: `$POSIT_BENCH_THRESHOLD`, then 15%.
+fn default_threshold() -> f64 {
+    std::env::var("POSIT_BENCH_THRESHOLD")
+        .ok()
+        .and_then(|v| v.parse::<f64>().ok())
+        .unwrap_or(15.0)
+}
+
+/// The shared gate epilogue: exit code for a rendered comparison
+/// (regressions fail unless the run is advisory or the baseline is
+/// provisional). Used identically by the post-suite gate and `bench
+/// compare` so the two can never drift apart.
+fn gate_verdict(cmp: &Comparison, advisory: bool) -> i32 {
+    if cmp.passed() {
+        0
+    } else if advisory || cmp.baseline_provisional {
+        println!("regression gate: advisory — not failing this run");
+        0
+    } else {
+        1
+    }
+}
+
 impl BenchCli {
     pub fn from_args(suite: &'static str, args: &Args) -> BenchCli {
         let profile = if args.has("full") {
@@ -65,10 +88,6 @@ impl BenchCli {
         } else {
             Profile::from_env().unwrap_or(Profile::Full)
         };
-        let default_threshold = std::env::var("POSIT_BENCH_THRESHOLD")
-            .ok()
-            .and_then(|v| v.parse::<f64>().ok())
-            .unwrap_or(15.0);
         BenchCli {
             suite,
             profile,
@@ -82,7 +101,7 @@ impl BenchCli {
             json_out: args.flag("json").map(PathBuf::from),
             baseline: args.flag("baseline").map(PathBuf::from),
             write_baseline: args.has("write-baseline"),
-            threshold_pct: args.get("threshold", default_threshold),
+            threshold_pct: args.get("threshold", default_threshold()),
             advisory: args.has("advisory") || env_flag("POSIT_BENCH_ADVISORY"),
         }
     }
@@ -170,14 +189,7 @@ impl BenchCli {
         }
         let cmp = Comparison::compare(&base, &report, self.threshold_pct);
         print!("{}", cmp.render(&path.display().to_string()));
-        if cmp.passed() {
-            0
-        } else if self.advisory || cmp.baseline_provisional {
-            println!("regression gate: advisory — not failing this run");
-            0
-        } else {
-            1
-        }
+        gate_verdict(&cmp, self.advisory)
     }
 }
 
@@ -212,6 +224,44 @@ pub fn run_suite(name: &str, args: &Args) -> i32 {
 pub fn bench_main(suite: &str) -> ! {
     let args = Args::parse_from(std::env::args().skip(1).filter(|a| a != "--bench"));
     std::process::exit(run_suite(suite, &args));
+}
+
+/// Compare two arbitrary report files (`posit-div bench compare <a.json>
+/// <b.json>`): the same per-row delta table and regression verdict the
+/// post-suite gate prints, but between any two saved reports — e.g. a
+/// before/after pair from one machine, or two CI artifacts — instead of
+/// only against the committed `BENCH_<suite>.json`. `a` plays the
+/// baseline, `b` the candidate. Returns the process exit code (0 pass or
+/// advisory, 1 regression/invalid input).
+pub fn compare_reports(base: &Path, new: &Path, threshold_pct: f64, advisory: bool) -> i32 {
+    let load = |p: &Path| -> Result<Report, i32> {
+        Report::load(p).map_err(|e| {
+            eprintln!("{e}");
+            1
+        })
+    };
+    let (b, n) = match (load(base), load(new)) {
+        (Ok(b), Ok(n)) => (b, n),
+        _ => return 1,
+    };
+    if b.suite != n.suite {
+        eprintln!(
+            "note: comparing reports from different suites ({:?} vs {:?}) — rows join by name",
+            b.suite, n.suite
+        );
+    }
+    let cmp = Comparison::compare(&b, &n, threshold_pct);
+    print!("{}", cmp.render(&base.display().to_string()));
+    gate_verdict(&cmp, advisory)
+}
+
+/// Flag handling for the `bench compare` subcommand (shares the suite
+/// gate's `--threshold`/`--advisory` semantics and environment
+/// defaults).
+pub fn compare_command(base: &Path, new: &Path, args: &Args) -> i32 {
+    let threshold = args.get("threshold", default_threshold());
+    let advisory = args.has("advisory") || env_flag("POSIT_BENCH_ADVISORY");
+    compare_reports(base, new, threshold, advisory)
 }
 
 /// Validate a report file on disk; returns the exit code. Used by the
@@ -307,5 +357,57 @@ mod tests {
     #[test]
     fn validate_rejects_missing_file() {
         assert_eq!(validate_report(Path::new("/nonexistent/BENCH_x.json")), 1);
+    }
+
+    #[test]
+    fn compare_reports_on_two_files() {
+        use crate::bench::report::Entry;
+        use crate::bench::{Config, Measurement, Profile};
+        use std::time::Duration;
+
+        let row = |name: &str, ops: f64| -> Entry {
+            Entry::from_measurement(&Measurement {
+                name: name.into(),
+                per_op: Duration::from_secs_f64(1.0 / ops),
+                ops_per_sec: ops,
+                samples: 3,
+                iters_per_sample: 10,
+            })
+        };
+        let report = |rows: Vec<Entry>| Report::new("t", Profile::Quick, Config::quick(), rows);
+        let dir = std::env::temp_dir().join(format!("posit_cmp_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let a_path = dir.join("a.json");
+        let b_path = dir.join("b.json");
+        report(vec![row("x", 1000.0), row("y", 1000.0)]).save(&a_path).unwrap();
+
+        // within threshold: pass
+        report(vec![row("x", 950.0), row("y", 1200.0)]).save(&b_path).unwrap();
+        assert_eq!(compare_reports(&a_path, &b_path, 15.0, false), 0);
+        // regression past threshold: fail — unless advisory
+        report(vec![row("x", 500.0), row("y", 1000.0)]).save(&b_path).unwrap();
+        assert_eq!(compare_reports(&a_path, &b_path, 15.0, false), 1);
+        assert_eq!(compare_reports(&a_path, &b_path, 15.0, true), 0);
+        // a looser threshold tolerates the drop
+        assert_eq!(compare_reports(&a_path, &b_path, 60.0, false), 0);
+        // provisional baseline downgrades the gate to advisory
+        let mut prov = report(vec![row("x", 1000.0)]);
+        prov.provisional = true;
+        prov.save(&a_path).unwrap();
+        report(vec![row("x", 100.0)]).save(&b_path).unwrap();
+        assert_eq!(compare_reports(&a_path, &b_path, 15.0, false), 0);
+        // unreadable input: exit 1
+        assert_eq!(compare_reports(Path::new("/nonexistent.json"), &b_path, 15.0, false), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn compare_command_reads_flags() {
+        // bad files exercise only the flag plumbing (exit 1 either way)
+        let args = args("--threshold 30 --advisory");
+        assert_eq!(
+            compare_command(Path::new("/nonexistent_a.json"), Path::new("/nonexistent_b.json"), &args),
+            1
+        );
     }
 }

@@ -30,7 +30,10 @@
 //! ```
 //!
 //! `width`/`algorithm`/`path` are `null` when a row has no natural value
-//! for them (e.g. a selection-table derivation). `per_op_ns` is wall time
+//! for them (e.g. a selection-table derivation). `path` is a free-form
+//! producer tag (`batch`, `batch:fast-simd`, `service:datapath`, …) —
+//! validation only requires it to be non-empty when present, so new
+//! execution paths never need a schema change. `per_op_ns` is wall time
 //! for measured rows and modeled latency for `hw-*` rows. Measurement
 //! names are unique within a report — they are the join key for baseline
 //! comparison ([`super::baseline`]).
@@ -137,11 +140,21 @@ impl Entry {
                 .filter(|x| *x >= 1)
                 .ok_or(format!("{key}: required integer >= 1"))
         };
+        // `path` is a free-form producer tag (`batch`, `batch:fast-simd`,
+        // `service:datapath`, …) — new execution paths must not require a
+        // schema change, so the only constraint is non-emptiness (an
+        // empty tag is always a producer bug).
+        let path = match opt_str("path")? {
+            Some(p) if p.is_empty() => {
+                return Err("path: must be a non-empty string or null".into())
+            }
+            p => p,
+        };
         Ok(Entry {
             name,
             width,
             algorithm: opt_str("algorithm")?,
-            path: opt_str("path")?,
+            path,
             per_op_ns: pos_num("per_op_ns")?,
             ops_per_sec: pos_num("ops_per_sec")?,
             samples: count("samples")?,
@@ -369,12 +382,28 @@ mod tests {
         assert!(mutate(&|r| r.measurements[0].per_op_ns = -1.0).is_err());
         assert!(mutate(&|r| r.measurements[0].width = Some(3)).is_err());
         assert!(mutate(&|r| r.profile = "warp".into()).is_err());
+        // path is free-form but must be non-empty when present
+        let err = mutate(&|r| r.measurements[0].path = Some(String::new())).unwrap_err();
+        assert!(err.contains("path"), "{err}");
         // duplicate names break baseline matching
         let dup = mutate(&|r| {
             let row = r.measurements[0].clone();
             r.measurements.push(row);
         });
         assert!(dup.unwrap_err().contains("duplicate"));
+    }
+
+    /// Regression test: `path` is a free-form tag, not an enumerated
+    /// list — new execution-path tags must validate without a schema
+    /// change.
+    #[test]
+    fn novel_path_tags_are_accepted() {
+        for tag in ["batch:fast-simd", "batch:fast-table", "service:fast", "anything/else"] {
+            let mut rep = sample_report();
+            rep.measurements[0].path = Some(tag.to_string());
+            let back = Report::from_json(&Json::parse(&rep.to_json_string()).unwrap()).unwrap();
+            assert_eq!(back.measurements[0].path.as_deref(), Some(tag));
+        }
     }
 
     #[test]

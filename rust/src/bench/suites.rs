@@ -22,7 +22,7 @@ use crate::hardware::report as hw_report;
 use crate::hardware::{combinational, pipelined, synth, Cost, Mode, TSMC28};
 use crate::posit::{mask, Posit};
 use crate::testkit::Rng;
-use crate::unit::{ExecTier, Op, Unit};
+use crate::unit::{ExecTier, FastPath, Op, Unit};
 use crate::workload;
 
 /// One registered suite.
@@ -53,7 +53,7 @@ pub const SUITES: &[Suite] = &[
     Suite {
         name: "unit_throughput",
         title: "operation-generic unit throughput (op/s), 256-element working set",
-        about: "batch op/s for every unit op x width + mixed-op service rows",
+        about: "batch op/s per op x width x tier + fast-path (table/SWAR) + service rows",
         tier_aware: true,
         run: unit_throughput,
     },
@@ -197,9 +197,12 @@ fn tiers_under_test(cli: &BenchCli) -> &'static [ExecTier] {
 /// throughput of every [`Op`] (division at the default engine) at
 /// Posit16/32 through the same [`Unit::run_batch`] loop, **tier-tagged**
 /// — each op measured on both the Fast kernels and the cycle-accurate
-/// Datapath (restrict with `--tier`) — plus one mixed-op coordinator row
-/// per (width, tier) (the service groups each dynamic batch per op and
-/// runs every group on its cached unit at the configured tier).
+/// Datapath (restrict with `--tier`) — plus dispatch-forced fast-path
+/// rows (`batch:fast-table` for the exhaustive Posit8 tables,
+/// `batch:fast-simd` for the SWAR kernels at Posit8/16) and one mixed-op
+/// coordinator row per (width, tier) (the service groups each dynamic
+/// batch per op and runs every group on its cached unit at the
+/// configured tier).
 fn unit_throughput(cli: &BenchCli, r: &mut Runner) {
     let tiers = tiers_under_test(cli);
     let mut rng = Rng::seeded(0x0127);
@@ -237,6 +240,51 @@ fn unit_throughput(cli: &BenchCli, r: &mut Runner) {
                     Some(n),
                     Some(label.as_str()),
                     &format!("batch:{}", tier.name()),
+                );
+            }
+        }
+    }
+
+    // Fast-path dispatch rows: the vectorized layer inside the Fast tier
+    // (exhaustive Posit8 tables, SWAR lane-packed kernels), measured with
+    // the kernel *forced* so the rows stay stable regardless of the Auto
+    // thresholds. Paths: `batch:fast-table`, `batch:fast-simd`.
+    if tiers.contains(&ExecTier::Fast) {
+        let mut rng = Rng::seeded(0x51D);
+        for (n, path) in [(8u32, FastPath::Table), (8, FastPath::Simd), (16, FastPath::Simd)] {
+            let a: Vec<u64> = (0..256).map(|_| rng.next_u64() & mask(n)).collect();
+            let b: Vec<u64> = (0..256).map(|_| (rng.next_u64() & mask(n)) | 1).collect();
+            let c: Vec<u64> = (0..256).map(|_| rng.next_u64() & mask(n)).collect();
+            let radicands: Vec<u64> = a.iter().map(|&v| v & !(1u64 << (n - 1))).collect();
+            let mut out = vec![0u64; a.len()];
+            for op in Op::DEFAULTS {
+                // skip unsupported combinations (no Posit8 table for the
+                // ternary mul_add) instead of silently measuring another
+                // kernel
+                let Ok(unit) = Unit::with_exec(n, op, ExecTier::Fast, path) else {
+                    continue;
+                };
+                let la: &[u64] = if op == Op::Sqrt { &radicands } else { &a };
+                let (lb, lc): (&[u64], &[u64]) = match op.arity() {
+                    1 => (&[], &[]),
+                    2 => (&b, &[]),
+                    _ => (&b, &c),
+                };
+                let m = bench_batched(
+                    &format!("Posit{n} {} batch {}", op.name(), path.tag()),
+                    cli.cfg,
+                    la.len() as u64,
+                    || {
+                        unit.run_batch(la, lb, lc, &mut out).expect("equal lanes");
+                        black_box(&out);
+                    },
+                );
+                let label = op.label();
+                r.add_tagged(
+                    m,
+                    Some(n),
+                    Some(label.as_str()),
+                    &format!("batch:{}", path.tag()),
                 );
             }
         }

@@ -4,7 +4,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
-use crate::unit::{ExecTier, Op};
+use crate::unit::{ExecTier, FastPath, Op};
 
 /// Power-of-two-bucketed latency histogram, lock-free on the record path.
 /// Bucket i counts samples in [2^i, 2^(i+1)) nanoseconds, i < 48.
@@ -129,10 +129,19 @@ impl OpCounters {
 }
 
 /// Requests served per execution tier: the fast kernels, the
-/// cycle-accurate datapath engines, or the PJRT graph.
+/// cycle-accurate datapath engines, or the PJRT graph. The fast tier is
+/// further split per serving kernel (`fast_table`/`fast_simd` — the
+/// Posit8 lookup tables and the SWAR lane-packed kernels; the remainder
+/// of `fast` ran on the scalar-fast kernels).
 #[derive(Default)]
 pub struct TierCounters {
     pub fast: AtomicU64,
+    /// Fast-tier requests served by the exhaustive Posit8 tables
+    /// (a subset of `fast`).
+    pub fast_table: AtomicU64,
+    /// Fast-tier requests served by the SWAR lane-packed kernels
+    /// (a subset of `fast`).
+    pub fast_simd: AtomicU64,
     pub datapath: AtomicU64,
     pub pjrt: AtomicU64,
 }
@@ -146,6 +155,21 @@ impl TierCounters {
             ExecTier::Fast | ExecTier::Auto => self.fast.fetch_add(count, Ordering::Relaxed),
             ExecTier::Datapath => self.datapath.fetch_add(count, Ordering::Relaxed),
         };
+    }
+
+    /// Record which Fast kernel served `count` already-`record`ed
+    /// fast-tier requests (`Unit::resolve_fast_path`); scalar-fast
+    /// requests are the `fast` remainder and need no sub-counter.
+    pub fn record_fast_path(&self, path: FastPath, count: u64) {
+        match path {
+            FastPath::Table => {
+                self.fast_table.fetch_add(count, Ordering::Relaxed);
+            }
+            FastPath::Simd => {
+                self.fast_simd.fetch_add(count, Ordering::Relaxed);
+            }
+            _ => {}
+        }
     }
 
     /// Record `count` requests served by the PJRT graph.
@@ -163,8 +187,10 @@ impl TierCounters {
 
     pub fn summary(&self) -> String {
         format!(
-            "fast={} datapath={} pjrt={}",
+            "fast={} (table={} simd={}) datapath={} pjrt={}",
             self.fast.load(Ordering::Relaxed),
+            self.fast_table.load(Ordering::Relaxed),
+            self.fast_simd.load(Ordering::Relaxed),
             self.datapath.load(Ordering::Relaxed),
             self.pjrt.load(Ordering::Relaxed),
         )
@@ -243,6 +269,21 @@ mod tests {
         assert_eq!(t.pjrt.load(Ordering::Relaxed), 3);
         let s = t.summary();
         assert!(s.contains("fast=100") && s.contains("datapath=7") && s.contains("pjrt=3"), "{s}");
+    }
+
+    #[test]
+    fn fast_path_counters_split_the_fast_tier() {
+        let t = TierCounters::default();
+        t.record(ExecTier::Fast, 90);
+        t.record_fast_path(FastPath::Table, 50);
+        t.record_fast_path(FastPath::Simd, 30);
+        // scalar-fast requests are the remainder; recording them is a no-op
+        t.record_fast_path(FastPath::Scalar, 10);
+        assert_eq!(t.fast.load(Ordering::Relaxed), 90);
+        assert_eq!(t.fast_table.load(Ordering::Relaxed), 50);
+        assert_eq!(t.fast_simd.load(Ordering::Relaxed), 30);
+        let s = t.summary();
+        assert!(s.contains("table=50") && s.contains("simd=30"), "{s}");
     }
 
     #[test]

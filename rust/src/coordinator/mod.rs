@@ -46,7 +46,7 @@ use crate::division::Algorithm;
 use crate::error::{PositError, Result};
 use crate::posit::{Posit, MAX_N, MIN_N};
 use crate::runtime::Runtime;
-use crate::unit::{ExecTier, Op, OpRequest, Unit};
+use crate::unit::{ExecTier, FastPath, Op, OpRequest, Unit};
 
 /// Which execution engine serves the batches.
 #[derive(Clone, Debug)]
@@ -269,8 +269,16 @@ impl NativeUnits {
     }
 
     /// Execute one op group (spread over the shared crate pool) and
-    /// report which tier served it.
-    fn run(&mut self, op: Op, a: &[u64], b: &[u64], c: &[u64], out: &mut [u64]) -> ExecTier {
+    /// report which tier — and, on the fast tier, which kernel
+    /// (table/SWAR/scalar) — served it.
+    fn run(
+        &mut self,
+        op: Op,
+        a: &[u64],
+        b: &[u64],
+        c: &[u64],
+        out: &mut [u64],
+    ) -> (ExecTier, Option<FastPath>) {
         let (n, threads, tier) = (self.n, self.threads, self.tier);
         let unit = self
             .units
@@ -278,9 +286,10 @@ impl NativeUnits {
             .or_insert_with(|| {
                 Unit::with_tier(n, op, tier).expect("width validated at service start")
             });
+        let path = unit.resolve_fast_path(out.len());
         unit.run_batch_parallel(a, b, c, out, threads)
             .expect("lanes are same-length by construction");
-        unit.batch_tier()
+        (unit.batch_tier(), path)
     }
 }
 
@@ -367,8 +376,11 @@ impl DivisionService {
                         let mut out = vec![0u64; idxs.len()];
                         match &mut exec {
                             Exec::Native(native) => {
-                                let served = native.run(op, &a, &b, &c, &mut out);
+                                let (served, path) = native.run(op, &a, &b, &c, &mut out);
                                 m.tiers.record(served, idxs.len() as u64);
+                                if let Some(p) = path {
+                                    m.tiers.record_fast_path(p, idxs.len() as u64);
+                                }
                             }
                             Exec::Pjrt { rt, native } => {
                                 if matches!(op, Op::Div { .. }) {
@@ -384,8 +396,11 @@ impl DivisionService {
                                     }
                                     m.tiers.record_pjrt(idxs.len() as u64);
                                 } else {
-                                    let served = native.run(op, &a, &b, &c, &mut out);
+                                    let (served, path) = native.run(op, &a, &b, &c, &mut out);
                                     m.tiers.record(served, idxs.len() as u64);
+                                    if let Some(p) = path {
+                                        m.tiers.record_fast_path(p, idxs.len() as u64);
+                                    }
                                 }
                             }
                         }
@@ -641,6 +656,12 @@ mod tests {
         let m = svc.metrics();
         assert_eq!(m.tiers.get(ExecTier::Fast), 32);
         assert_eq!(m.tiers.get(ExecTier::Datapath), 0);
+        // the per-kernel split never exceeds the fast total (the exact
+        // table/SWAR/scalar split depends on dynamic batch sizes)
+        let table = m.tiers.fast_table.load(std::sync::atomic::Ordering::Relaxed);
+        let simd = m.tiers.fast_simd.load(std::sync::atomic::Ordering::Relaxed);
+        assert!(table + simd <= 32, "table={table} simd={simd}");
+        assert!(m.tiers.summary().contains("table="), "{}", m.tiers.summary());
         svc.shutdown();
 
         // Pinned Datapath: same results, counted on the other tier.

@@ -13,7 +13,7 @@
 //! construction (and by test: the tier-equivalence sweeps and the
 //! exhaustive Posit8 gates).
 //!
-//! Two layers:
+//! Three layers, picked per batch by the [`FastPath`] dispatch:
 //!
 //! * scalar lane kernels ([`FastKernel::op_bits`]) — special-pattern
 //!   resolution plus a real-lane kernel per op kind;
@@ -22,11 +22,22 @@
 //!   runs the remaining real lanes. The loop is monomorphized per
 //!   `(width, op)` for n ∈ {8, 16, 32, 64} (const generics — the
 //!   decode/encode and the fixed-point arithmetic all const-fold on `n`),
-//!   with a dynamic-width fallback for the odd widths (Posit10, …).
+//!   with a dynamic-width fallback for the odd widths (Posit10, …);
+//! * the vectorized serving layer — exhaustive Posit8 operation tables
+//!   ([`super::p8_tables`]: one constant-time lookup per lane) and the
+//!   SWAR lane-packed kernels ([`super::simd`]: packed special pre-pass,
+//!   structure-of-arrays mid-section) for 8×Posit8 / 4×Posit16 lanes per
+//!   `u64` word.
+//!
+//! Under [`FastPath::Auto`] a batch resolves **table > SWAR >
+//! scalar-fast** by width and batch length ([`FastKernel::resolve`]);
+//! every path is bit-identical to the others and to the Datapath tier
+//! (tier-equivalence sweeps, exhaustive at Posit8).
 
 use crate::posit::{frac_bits, mask, round::encode_round, Posit};
 
 use super::sqrt::isqrt_u128;
+use super::{p8_tables, simd};
 
 /// The operation kinds the fast tier serves. Division collapses to a
 /// single kernel: every Table IV engine is correctly rounded, so the fast
@@ -46,6 +57,87 @@ pub enum Kind {
     Sub,
     /// `a · b + c` (mul+add, two roundings).
     MulAdd,
+}
+
+/// Which Fast-tier batch kernel serves a batch ([`FastKernel::run_batch`]).
+///
+/// `Auto` (the serving default) resolves **table > SWAR > scalar-fast**
+/// by width and batch length; the explicit variants pin one kernel (used
+/// by the dispatch-forced bench rows and the differential tests). All
+/// paths are bit-identical — they differ only in speed.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum FastPath {
+    /// Pick per batch: the Posit8 table when it applies and the batch has
+    /// at least [`TABLE_MIN_LANES`] lanes, else the SWAR kernels when the
+    /// width has them and the batch has at least [`SIMD_MIN_LANES`]
+    /// lanes, else the scalar-fast kernel loop.
+    #[default]
+    Auto,
+    /// The exhaustive Posit8 operation tables ([`super::p8_tables`]);
+    /// only valid at n = 8 for ops with a table (everything but MulAdd).
+    Table,
+    /// The SWAR lane-packed kernels ([`super::simd`]); only valid at
+    /// n ∈ {8, 16}.
+    Simd,
+    /// The width-monomorphized scalar-fast kernel loop (any width).
+    Scalar,
+}
+
+impl FastPath {
+    /// Parse a CLI-style path name (`auto`, `table`, `simd`, `scalar`).
+    pub fn parse(s: &str) -> Option<FastPath> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Some(FastPath::Auto),
+            "table" => Some(FastPath::Table),
+            "simd" => Some(FastPath::Simd),
+            "scalar" => Some(FastPath::Scalar),
+            _ => None,
+        }
+    }
+
+    /// Stable lowercase name (`auto`, `table`, `simd`, `scalar`).
+    pub fn name(self) -> &'static str {
+        match self {
+            FastPath::Auto => "auto",
+            FastPath::Table => "table",
+            FastPath::Simd => "simd",
+            FastPath::Scalar => "scalar",
+        }
+    }
+
+    /// Report/metrics tag of a *resolved* path, matching the bench `path`
+    /// tags (`batch:fast-table`, `batch:fast-simd`, …): `fast-table`,
+    /// `fast-simd`, `fast-scalar` (`fast` for the unresolved `Auto`).
+    pub fn tag(self) -> &'static str {
+        match self {
+            FastPath::Auto => "fast",
+            FastPath::Table => "fast-table",
+            FastPath::Simd => "fast-simd",
+            FastPath::Scalar => "fast-scalar",
+        }
+    }
+}
+
+/// Minimum batch length at which [`FastPath::Auto`] picks the Posit8
+/// table: below this the scalar kernel finishes before a table lookup's
+/// cache traffic is worth scheduling (and a cold first call would build
+/// the table for a couple of lanes).
+pub const TABLE_MIN_LANES: usize = 4;
+
+/// Minimum batch length at which [`FastPath::Auto`] picks the SWAR
+/// kernels: the packed pre-pass needs a few full words to amortize its
+/// pack/unpack overhead.
+pub const SIMD_MIN_LANES: usize = 16;
+
+/// Can a forced `path` serve `(n, kind)`? (`Auto` and `Scalar` always
+/// can; `Table` needs n = 8 and a tabulated op; `Simd` needs a SWAR
+/// width.)
+pub fn path_supported(n: u32, kind: Kind, path: FastPath) -> bool {
+    match path {
+        FastPath::Auto | FastPath::Scalar => true,
+        FastPath::Table => n == p8_tables::N && p8_tables::supports(kind),
+        FastPath::Simd => simd::supports(n),
+    }
 }
 
 impl Kind {
@@ -267,29 +359,80 @@ fn select(n: u32, kind: Kind) -> BatchFn {
     }
 }
 
+/// The scalar Fast kernel for one lane: special-pattern resolution plus
+/// the real-lane arithmetic kernel, with high garbage bits masked off.
+/// This is the reference form every other Fast path reduces to — the
+/// batch kernels' ragged-tail path, and what the Posit8 tables memoize.
+pub(crate) fn scalar_bits(n: u32, kind: Kind, a: u64, b: u64, c: u64) -> u64 {
+    let m = mask(n);
+    let (a, b, c) = (a & m, b & m, c & m);
+    match special(n, kind, a, b, c) {
+        Some(r) => r,
+        None => real_lane(n, kind, a, b, c),
+    }
+}
+
 /// A fast-tier execution kernel for one `(width, op kind)` pair: the
-/// batch entry point resolved once at construction (monomorphized for
-/// the standard widths), plus the scalar lane kernels. Held by
-/// [`crate::unit::Unit`] and served whenever the unit's
-/// [`crate::unit::ExecTier`] resolves to `Fast`.
+/// scalar batch entry point resolved once at construction (monomorphized
+/// for the standard widths), the scalar lane kernels, and the
+/// [`FastPath`] dispatch over the vectorized layer (Posit8 tables, SWAR
+/// kernels). Held by [`crate::unit::Unit`] and served whenever the
+/// unit's [`crate::unit::ExecTier`] resolves to `Fast`.
 pub struct FastKernel {
     n: u32,
     kind: Kind,
+    path: FastPath,
     batch: BatchFn,
 }
 
 impl FastKernel {
-    /// Build the kernel for `Posit<n, 2>` lanes of `kind`. The width must
-    /// already be validated (the unit constructor does).
+    /// Build the kernel for `Posit<n, 2>` lanes of `kind` with the
+    /// default [`FastPath::Auto`] dispatch. The width must already be
+    /// validated (the unit constructor does).
     pub fn new(n: u32, kind: Kind) -> FastKernel {
+        FastKernel::with_path(n, kind, FastPath::Auto)
+    }
+
+    /// Build the kernel with an explicit batch-path override. The caller
+    /// must have checked [`path_supported`] (the unit constructor turns a
+    /// violation into a typed error).
+    pub fn with_path(n: u32, kind: Kind, path: FastPath) -> FastKernel {
         debug_assert!((crate::posit::MIN_N..=crate::posit::MAX_N).contains(&n));
-        FastKernel { n, kind, batch: select(n, kind) }
+        debug_assert!(path_supported(n, kind, path), "{path:?} unsupported for {kind:?} n={n}");
+        FastKernel { n, kind, path, batch: select(n, kind) }
     }
 
     /// The op kind this kernel serves.
     #[inline]
     pub fn kind(&self) -> Kind {
         self.kind
+    }
+
+    /// The configured batch path (the dispatch default `Auto`, or a
+    /// forced kernel).
+    #[inline]
+    pub fn path(&self) -> FastPath {
+        self.path
+    }
+
+    /// The kernel that will serve a batch of `len` lanes: the configured
+    /// override, or — under `Auto` — **table > SWAR > scalar-fast** by
+    /// width and batch length. Never returns `Auto`.
+    #[inline]
+    pub fn resolve(&self, len: usize) -> FastPath {
+        match self.path {
+            FastPath::Auto => {
+                if self.n == p8_tables::N && p8_tables::supports(self.kind) && len >= TABLE_MIN_LANES
+                {
+                    FastPath::Table
+                } else if simd::supports(self.n) && len >= SIMD_MIN_LANES {
+                    FastPath::Simd
+                } else {
+                    FastPath::Scalar
+                }
+            }
+            forced => forced,
+        }
     }
 
     /// Resolve the special-pattern fast path for one request, if it
@@ -303,15 +446,11 @@ impl FastKernel {
 
     /// One scalar operation over raw `n`-bit patterns (high garbage bits
     /// are masked off — the same contract as the datapath tier's
-    /// bit-level entry point).
+    /// bit-level entry point). Scalar calls always use the scalar lane
+    /// kernel; the [`FastPath`] dispatch applies to batches.
     #[inline]
     pub fn op_bits(&self, a: u64, b: u64, c: u64) -> u64 {
-        let m = mask(self.n);
-        let (a, b, c) = (a & m, b & m, c & m);
-        match special(self.n, self.kind, a, b, c) {
-            Some(r) => r,
-            None => real_lane(self.n, self.kind, a, b, c),
-        }
+        scalar_bits(self.n, self.kind, a, b, c)
     }
 
     /// The arithmetic kernel for one real lane (high garbage bits are
@@ -327,10 +466,35 @@ impl FastKernel {
 
     /// Batch execution: `out[i] = op(a[i], b[i], c[i])` with unused lanes
     /// empty or padded. Lane lengths must be pre-validated by the caller
-    /// (the unit's shared lane check does).
+    /// (the unit's shared lane check does). The serving kernel is chosen
+    /// by [`FastKernel::resolve`]; every choice is bit-identical.
     #[inline]
     pub fn run_batch(&self, a: &[u64], b: &[u64], c: &[u64], out: &mut [u64]) {
-        (self.batch)(self.n, self.kind, a, b, c, out)
+        self.run_batch_with(self.resolve(out.len()), a, b, c, out)
+    }
+
+    /// Batch execution on an already-resolved kernel. The parallel batch
+    /// path resolves once on the *full* batch length and runs every chunk
+    /// here, so a ragged tail chunk cannot slip onto a different kernel
+    /// than the one the whole batch (and its metrics) resolved to.
+    /// `path` must not be `Auto` and must be valid for this kernel's
+    /// `(width, kind)`.
+    pub(crate) fn run_batch_with(
+        &self,
+        path: FastPath,
+        a: &[u64],
+        b: &[u64],
+        c: &[u64],
+        out: &mut [u64],
+    ) {
+        match path {
+            FastPath::Table => {
+                let t = p8_tables::get(self.kind).expect("resolve checked table support");
+                t.run_batch(a, b, out);
+            }
+            FastPath::Simd => simd::run_batch(self.n, self.kind, a, b, c, out),
+            _ => (self.batch)(self.n, self.kind, a, b, c, out),
+        }
     }
 }
 
@@ -488,5 +652,106 @@ mod tests {
         let garbage = 0xABCD_0000_0000_0000u64;
         assert_eq!(k.op_bits(one | garbage, one | garbage, 0), one);
         assert_eq!(k.classify(garbage, one, 0), Some(0), "masked x is zero");
+    }
+
+    #[test]
+    fn fast_path_parse_names_and_tags() {
+        assert_eq!(FastPath::parse("table"), Some(FastPath::Table));
+        assert_eq!(FastPath::parse("SIMD"), Some(FastPath::Simd));
+        assert_eq!(FastPath::parse("scalar"), Some(FastPath::Scalar));
+        assert_eq!(FastPath::parse("auto"), Some(FastPath::Auto));
+        assert_eq!(FastPath::parse("warp"), None);
+        assert_eq!(FastPath::default(), FastPath::Auto);
+        assert_eq!(FastPath::Table.name(), "table");
+        assert_eq!(FastPath::Table.tag(), "fast-table");
+        assert_eq!(FastPath::Simd.tag(), "fast-simd");
+        assert_eq!(FastPath::Scalar.tag(), "fast-scalar");
+    }
+
+    #[test]
+    fn path_support_matrix() {
+        // Table: only Posit8, only tabulated ops.
+        assert!(path_supported(8, Kind::Div, FastPath::Table));
+        assert!(path_supported(8, Kind::Sqrt, FastPath::Table));
+        assert!(!path_supported(8, Kind::MulAdd, FastPath::Table));
+        assert!(!path_supported(16, Kind::Div, FastPath::Table));
+        // SWAR: Posit8 and Posit16, every op.
+        assert!(path_supported(8, Kind::MulAdd, FastPath::Simd));
+        assert!(path_supported(16, Kind::Div, FastPath::Simd));
+        assert!(!path_supported(32, Kind::Div, FastPath::Simd));
+        assert!(!path_supported(10, Kind::Div, FastPath::Simd));
+        // Auto/Scalar: everywhere.
+        for n in [8u32, 10, 16, 32, 64] {
+            assert!(path_supported(n, Kind::Div, FastPath::Auto));
+            assert!(path_supported(n, Kind::Div, FastPath::Scalar));
+        }
+    }
+
+    #[test]
+    fn auto_resolution_order_is_table_then_simd_then_scalar() {
+        let div8 = FastKernel::new(8, Kind::Div);
+        assert_eq!(div8.resolve(256), FastPath::Table);
+        assert_eq!(div8.resolve(TABLE_MIN_LANES), FastPath::Table);
+        assert_eq!(div8.resolve(TABLE_MIN_LANES - 1), FastPath::Scalar);
+        // no table for the ternary op: SWAR next
+        let fma8 = FastKernel::new(8, Kind::MulAdd);
+        assert_eq!(fma8.resolve(256), FastPath::Simd);
+        assert_eq!(fma8.resolve(SIMD_MIN_LANES - 1), FastPath::Scalar);
+        // Posit16: no table, SWAR above the lane threshold
+        let div16 = FastKernel::new(16, Kind::Div);
+        assert_eq!(div16.resolve(256), FastPath::Simd);
+        assert_eq!(div16.resolve(SIMD_MIN_LANES), FastPath::Simd);
+        assert_eq!(div16.resolve(SIMD_MIN_LANES - 1), FastPath::Scalar);
+        // wider formats: scalar regardless of batch length
+        let div32 = FastKernel::new(32, Kind::Div);
+        assert_eq!(div32.resolve(1 << 20), FastPath::Scalar);
+        // forced paths resolve to themselves at any length
+        let forced = FastKernel::with_path(8, Kind::Div, FastPath::Table);
+        assert_eq!(forced.resolve(1), FastPath::Table);
+        assert_eq!(forced.path(), FastPath::Table);
+        let forced = FastKernel::with_path(16, Kind::Div, FastPath::Scalar);
+        assert_eq!(forced.resolve(1 << 20), FastPath::Scalar);
+    }
+
+    /// Every forced path must be bit-identical to the scalar kernel on
+    /// mixed real/special batches — the dispatch can never change results.
+    #[test]
+    fn forced_paths_are_bit_identical_to_scalar() {
+        let mut rng = Rng::seeded(0xD15);
+        for n in [8u32, 16] {
+            for kind in KINDS {
+                for path in [FastPath::Table, FastPath::Simd] {
+                    if !path_supported(n, kind, path) {
+                        continue;
+                    }
+                    let k = FastKernel::with_path(n, kind, path);
+                    for len in [1usize, 5, 16, 257] {
+                        let lane = |rng: &mut Rng| -> Vec<u64> {
+                            (0..len)
+                                .map(|i| {
+                                    if i % 7 == 0 {
+                                        [0u64, 1 << (n - 1)][i / 7 % 2]
+                                    } else {
+                                        rng.next_u64() & mask(n)
+                                    }
+                                })
+                                .collect()
+                        };
+                        let a = lane(&mut rng);
+                        let b = lane(&mut rng);
+                        let c = lane(&mut rng);
+                        let mut out = vec![0u64; len];
+                        k.run_batch(&a, &b, &c, &mut out);
+                        for i in 0..len {
+                            assert_eq!(
+                                out[i],
+                                scalar_bits(n, kind, a[i], b[i], c[i]),
+                                "{kind:?} n={n} {path:?} len={len} i={i}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
     }
 }

@@ -24,8 +24,12 @@
 //!
 //! [`fastpath`] is the serving counterpart: width-monomorphized,
 //! branch-light kernels that compute the same truncated quotient + sticky
-//! by direct fixed-point `u128` arithmetic, bit-identical to every engine
-//! above. [`crate::unit::ExecTier`] picks between the two.
+//! by direct fixed-point arithmetic, bit-identical to every engine
+//! above, with a vectorized batch layer on top — exhaustive Posit8
+//! operation tables ([`p8_tables`]) and SWAR lane-packed kernels
+//! ([`simd`]) — dispatched per batch by [`fastpath::FastPath`].
+//! [`crate::unit::ExecTier`] picks between the engines and the fast
+//! kernels.
 
 pub mod carry_save;
 pub mod divider;
@@ -35,8 +39,10 @@ pub mod golden;
 pub mod newton;
 pub mod nrd;
 pub mod otf;
+pub mod p8_tables;
 pub mod scaling;
 pub mod selection;
+pub mod simd;
 pub mod sqrt;
 pub mod srt2;
 pub mod srt2_cs;

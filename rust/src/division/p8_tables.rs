@@ -1,0 +1,213 @@
+//! Exhaustive Posit8 operation tables — the constant-time layer of the
+//! Fast tier.
+//!
+//! At n = 8 the whole operand space of a binary posit operation is
+//! 256 × 256 = 65 536 patterns, so the fastest possible serving kernel is
+//! a memoized one: a 64 KiB table per binary op (`out = t[a ≪ 8 | b]`)
+//! and a 256 B table for sqrt, L1/L2-resident and branch-free. Tables are
+//! built **lazily** on first use (one [`std::sync::OnceLock`] per op) by
+//! running every pattern through the scalar Fast kernel
+//! ([`super::fastpath`]), and every entry is **verified against the exact
+//! golden references at construction** — the build panics on the first
+//! divergence, so a table can never serve a wrong bit pattern.
+//!
+//! Memory footprint when everything is faulted in: 4 binary ops × 64 KiB
+//! + 256 B = 256.25 KiB per process. `MulAdd` has no table (a ternary
+//! Posit8 op would need 16 MiB); it is served by the SWAR or scalar
+//! kernels instead ([`super::fastpath::FastPath`] dispatch).
+
+use std::sync::OnceLock;
+
+use crate::posit::{mask, Posit};
+
+use super::fastpath::{scalar_bits, Kind};
+use super::golden;
+use super::sqrt::golden_sqrt;
+
+/// The tabulated width.
+pub const N: u32 = 8;
+
+/// Bytes of one binary-op table (256 × 256 entries × 1 byte).
+pub const BINARY_TABLE_BYTES: usize = 1 << 16;
+
+/// Bytes of the sqrt table (256 entries × 1 byte).
+pub const SQRT_TABLE_BYTES: usize = 1 << 8;
+
+/// True when `kind` has an exhaustive Posit8 table (everything except
+/// the ternary `MulAdd`).
+#[inline]
+pub const fn supports(kind: Kind) -> bool {
+    !matches!(kind, Kind::MulAdd)
+}
+
+/// Total bytes of table storage once every supported op has been built.
+pub const fn total_bytes() -> usize {
+    4 * BINARY_TABLE_BYTES + SQRT_TABLE_BYTES
+}
+
+/// A borrowed, lazily-built, construction-verified Posit8 op table.
+#[derive(Clone, Copy)]
+pub struct P8Table {
+    data: &'static [u8],
+    unary: bool,
+}
+
+impl P8Table {
+    /// One constant-time lookup (high garbage bits are masked off — the
+    /// same contract as the other Fast kernels).
+    #[inline]
+    pub fn lookup(&self, a: u64, b: u64) -> u64 {
+        if self.unary {
+            self.data[(a & 0xFF) as usize] as u64
+        } else {
+            self.data[(((a & 0xFF) << 8) | (b & 0xFF)) as usize] as u64
+        }
+    }
+
+    /// Batch lookup: `out[i] = table[a[i], b[i]]`; lane `b` is ignored
+    /// for the unary sqrt table. Used operand lanes must match `out` —
+    /// checked with a hard assert (once per batch, not per lane), so a
+    /// contract violation panics like the scalar kernels' lane indexing
+    /// would instead of silently truncating the zip in release builds.
+    #[inline]
+    pub fn run_batch(&self, a: &[u64], b: &[u64], out: &mut [u64]) {
+        assert_eq!(a.len(), out.len(), "table lane a must match out");
+        if self.unary {
+            for (o, &x) in out.iter_mut().zip(a) {
+                *o = self.data[(x & 0xFF) as usize] as u64;
+            }
+        } else {
+            assert_eq!(b.len(), out.len(), "binary table needs lane b");
+            for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+                *o = self.data[(((x & 0xFF) << 8) | (y & 0xFF)) as usize] as u64;
+            }
+        }
+    }
+
+    /// Bytes held by this table.
+    #[inline]
+    pub fn memory_bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// The exact reference for one Posit8 lane, independent of the Fast
+/// kernels: the golden division/sqrt models and the correctly-rounded
+/// posit arithmetic library.
+fn reference(kind: Kind, a: u64, b: u64) -> u64 {
+    let p = |bits: u64| Posit::from_bits(N, bits);
+    match kind {
+        Kind::Div => golden::divide(p(a), p(b)).result.to_bits(),
+        Kind::Sqrt => golden_sqrt(p(a)).result.to_bits(),
+        Kind::Mul => p(a).mul(p(b)).to_bits(),
+        Kind::Add => p(a).add(p(b)).to_bits(),
+        Kind::Sub => p(a).sub(p(b)).to_bits(),
+        Kind::MulAdd => unreachable!("MulAdd has no table"),
+    }
+}
+
+/// Build one binary table from the scalar Fast kernel, verifying every
+/// entry against the golden reference.
+fn build_binary(kind: Kind) -> Box<[u8]> {
+    let mut t = vec![0u8; BINARY_TABLE_BYTES].into_boxed_slice();
+    for a in 0..=mask(N) {
+        for b in 0..=mask(N) {
+            let got = scalar_bits(N, kind, a, b, 0);
+            let want = reference(kind, a, b);
+            assert_eq!(
+                got, want,
+                "p8 table build: {kind:?} a={a:#04x} b={b:#04x} fast={got:#04x} golden={want:#04x}"
+            );
+            t[((a as usize) << 8) | b as usize] = got as u8;
+        }
+    }
+    t
+}
+
+/// Build the sqrt table, verifying every entry against [`golden_sqrt`].
+fn build_sqrt() -> Box<[u8]> {
+    let mut t = vec![0u8; SQRT_TABLE_BYTES].into_boxed_slice();
+    for a in 0..=mask(N) {
+        let got = scalar_bits(N, Kind::Sqrt, a, 0, 0);
+        let want = reference(Kind::Sqrt, a, 0);
+        assert_eq!(got, want, "p8 sqrt table build: a={a:#04x} fast={got:#04x} golden={want:#04x}");
+        t[a as usize] = got as u8;
+    }
+    t
+}
+
+/// The lazily-built table for `kind`; `None` for [`Kind::MulAdd`]. The
+/// first call per op pays the 65k-pattern build + golden verification
+/// (a few milliseconds); every later call is a pointer read.
+pub fn get(kind: Kind) -> Option<P8Table> {
+    static DIV: OnceLock<Box<[u8]>> = OnceLock::new();
+    static MUL: OnceLock<Box<[u8]>> = OnceLock::new();
+    static ADD: OnceLock<Box<[u8]>> = OnceLock::new();
+    static SUB: OnceLock<Box<[u8]>> = OnceLock::new();
+    static SQRT: OnceLock<Box<[u8]>> = OnceLock::new();
+    let (cell, unary): (&'static OnceLock<Box<[u8]>>, bool) = match kind {
+        Kind::Div => (&DIV, false),
+        Kind::Mul => (&MUL, false),
+        Kind::Add => (&ADD, false),
+        Kind::Sub => (&SUB, false),
+        Kind::Sqrt => (&SQRT, true),
+        Kind::MulAdd => return None,
+    };
+    let data: &'static [u8] =
+        cell.get_or_init(|| if unary { build_sqrt() } else { build_binary(kind) });
+    Some(P8Table { data, unary })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn supported_kinds_and_sizes() {
+        for kind in [Kind::Div, Kind::Mul, Kind::Add, Kind::Sub] {
+            assert!(supports(kind));
+            let t = get(kind).expect("binary table");
+            assert_eq!(t.memory_bytes(), BINARY_TABLE_BYTES, "{kind:?}");
+        }
+        assert!(supports(Kind::Sqrt));
+        assert_eq!(get(Kind::Sqrt).expect("sqrt table").memory_bytes(), SQRT_TABLE_BYTES);
+        assert!(!supports(Kind::MulAdd));
+        assert!(get(Kind::MulAdd).is_none());
+        assert_eq!(total_bytes(), 4 * 65536 + 256);
+    }
+
+    /// The build already verifies every entry against golden; spot-check
+    /// the lookup indexing and masking on top of that.
+    #[test]
+    fn lookup_matches_scalar_kernel() {
+        let t = get(Kind::Div).expect("table");
+        let mut rng = crate::testkit::Rng::seeded(0x7AB);
+        for _ in 0..10_000 {
+            let (a, b) = (rng.next_u64(), rng.next_u64());
+            assert_eq!(t.lookup(a, b), scalar_bits(N, Kind::Div, a, b, 0), "{a:#x}/{b:#x}");
+        }
+        let s = get(Kind::Sqrt).expect("table");
+        for a in 0..=mask(N) {
+            assert_eq!(s.lookup(a, 0), scalar_bits(N, Kind::Sqrt, a, 0, 0), "{a:#04x}");
+        }
+    }
+
+    #[test]
+    fn batch_lookup_matches_scalar_lookup() {
+        let t = get(Kind::Mul).expect("table");
+        let mut rng = crate::testkit::Rng::seeded(0x7AC);
+        let a: Vec<u64> = (0..300).map(|_| rng.next_u64()).collect();
+        let b: Vec<u64> = (0..300).map(|_| rng.next_u64()).collect();
+        let mut out = vec![0u64; a.len()];
+        t.run_batch(&a, &b, &mut out);
+        for i in 0..a.len() {
+            assert_eq!(out[i], t.lookup(a[i], b[i]), "i={i}");
+        }
+        let s = get(Kind::Sqrt).expect("table");
+        let mut out = vec![0u64; a.len()];
+        s.run_batch(&a, &[], &mut out);
+        for i in 0..a.len() {
+            assert_eq!(out[i], s.lookup(a[i], 0), "i={i}");
+        }
+    }
+}

@@ -1,0 +1,553 @@
+//! SWAR lane-packed batch kernels — the vectorized layer of the Fast tier.
+//!
+//! The scalar Fast kernels ([`super::fastpath`]) already replaced the
+//! cycle-accurate recurrence with direct fixed-point arithmetic, but they
+//! still classify, decode, divide and round one lane at a time. Posit
+//! vector-unit proposals (PVU, FPPU) get their throughput from lanes, not
+//! from a faster scalar datapath; this module is the software analogue of
+//! that idea, structured as three passes over a batch:
+//!
+//! 1. **SWAR pre-pass** — 8×Posit8 or 4×Posit16 lanes are packed into one
+//!    `u64` word and the decode-time special patterns (zero, NaR, negative
+//!    radicand, zero addend) are detected *per word* with branch-free bit
+//!    tricks (carry-contained zero-lane detection, mask expansion by
+//!    multiplication, lane-wise two's complement). Special lanes are
+//!    resolved in bulk straight from the masks; a word with no special
+//!    lane costs one compare.
+//! 2. **SoA mid-section** — surviving real lanes are decoded into
+//!    structure-of-arrays buffers (sign/scale/significand as contiguous
+//!    `i32`/`u64` arrays) and the fraction arithmetic runs in tight,
+//!    branch-free loops over those arrays: one native `u64` division per
+//!    division lane (the generic kernel pays a `u128` libcall), one
+//!    integer square root per sqrt lane, one widening multiply per mul
+//!    lane. Add/sub/mul-add lanes reuse the exact posit library routines
+//!    (their alignment/cancellation path is already a single pass and is
+//!    the bit-identity reference).
+//! 3. **Encode post-pass** — the shared regime-aware rounding
+//!    ([`crate::posit::round::encode_round`]) runs over the SoA results
+//!    and scatters into the output.
+//!
+//! Every pass computes the *same* integer math as the scalar kernels, so
+//! the results are bit-identical by construction — and by test: the SWAR
+//! path is swept against the scalar-fast and Datapath paths (specials and
+//! NaR included) in `tests/tier_equivalence.rs` and exhaustively at
+//! Posit8 in the module tests below.
+//!
+//! Supported widths: n ∈ {8, 16} ([`supports`]); wider formats stay on
+//! the width-monomorphized scalar kernels, where a `u64` word holds too
+//! few lanes for the packed pre-pass to pay for itself.
+
+use crate::posit::{frac_bits, mask, round::encode_round, Posit};
+
+use super::fastpath::{scalar_bits, Kind};
+use super::sqrt::isqrt_u128;
+
+/// Lanes processed per SoA block (a multiple of the per-word lane count
+/// for both supported widths, sized so the scratch buffers stay on the
+/// stack).
+const BLOCK: usize = 64;
+
+/// True when `n` has a SWAR kernel (8 lanes of Posit8 or 4 lanes of
+/// Posit16 per `u64` word).
+#[inline]
+pub const fn supports(n: u32) -> bool {
+    n == 8 || n == 16
+}
+
+/// Splat an `N`-bit lane value across the `L` lanes of a word.
+const fn splat<const N: u32, const L: usize>(v: u64) -> u64 {
+    let mut w = 0u64;
+    let mut i = 0;
+    while i < L {
+        w |= v << (i as u32 * N);
+        i += 1;
+    }
+    w
+}
+
+/// SWAR batch execution: `out[i] = kind(a[i], b[i], c[i])` for every
+/// lane, bit-identical to the scalar Fast kernel. `n` must satisfy
+/// [`supports`]; unused operand lanes may be empty or padded, used lanes
+/// must match `out` (the callers pre-validate, exactly as for the scalar
+/// batch kernels).
+pub fn run_batch(n: u32, kind: Kind, a: &[u64], b: &[u64], c: &[u64], out: &mut [u64]) {
+    debug_assert!(supports(n), "no SWAR kernel for n={n}");
+    match n {
+        8 => batch::<8, 8>(kind, a, b, c, out),
+        _ => batch::<16, 4>(kind, a, b, c, out),
+    }
+}
+
+/// Slice a possibly-empty operand lane to a block window.
+#[inline(always)]
+fn window(lane: &[u64], start: usize, len: usize) -> &[u64] {
+    if lane.is_empty() {
+        lane
+    } else {
+        &lane[start..start + len]
+    }
+}
+
+fn batch<const N: u32, const L: usize>(
+    kind: Kind,
+    a: &[u64],
+    b: &[u64],
+    c: &[u64],
+    out: &mut [u64],
+) {
+    let len = out.len();
+    let mut start = 0usize;
+    while start < len {
+        let m = (len - start).min(BLOCK);
+        block::<N, L>(
+            kind,
+            &a[start..start + m],
+            window(b, start, m),
+            window(c, start, m),
+            &mut out[start..start + m],
+        );
+        start += m;
+    }
+}
+
+/// Special-detection result for one packed word: `mask` has every bit of
+/// each special lane set, `bits` holds those lanes' resolved results
+/// (real lanes are zero in both).
+struct SpecialWord {
+    mask: u64,
+    bits: u64,
+}
+
+/// The packed special pre-pass for one word of `L` lanes: the SWAR
+/// mirror of the scalar `special()` table, including its precedence
+/// (NaR-producing patterns first, then zero/pass-through patterns).
+#[inline(always)]
+fn special_word<const N: u32, const L: usize>(kind: Kind, wa: u64, wb: u64, wc: u64) -> SpecialWord {
+    // Lane-geometry constants (const-folded per monomorphization).
+    let low = splat::<N, L>(mask(N - 1)); // low N-1 bits of every lane
+    let msb = splat::<N, L>(1u64 << (N - 1)); // sign/NaR bit of every lane
+    let one = splat::<N, L>(1);
+
+    // MSB-flag set in every zero lane, exactly (the naive `(w - 1) & !w`
+    // borrow trick has false positives across lanes; this carry-contained
+    // form does not: `(x & low) + low` cannot carry out of a lane).
+    let zero_msb = |w: u64| !(((w & low) + low) | w | low) & msb;
+    // Expand MSB flags to full-lane masks: move each flag to its lane's
+    // LSB, then multiply by the all-ones lane value (lane products cannot
+    // overlap, so the multiply is a lane-wise fill).
+    let expand = |flags: u64| (flags >> (N - 1)).wrapping_mul(mask(N));
+    // Lane-wise two's complement: bitwise NOT, then +1 per lane through
+    // the carry-contained SWAR add (MSBs recombined by XOR so a full lane
+    // cannot carry into its neighbor).
+    let lane_neg = |w: u64| {
+        let x = !w;
+        ((x & !msb).wrapping_add(one)) ^ ((x ^ one) & msb)
+    };
+
+    let za = expand(zero_msb(wa));
+    let na = expand(zero_msb(wa ^ msb));
+    let (mask_, bits) = match kind {
+        Kind::Div => {
+            let zb = expand(zero_msb(wb));
+            let nb = expand(zero_msb(wb ^ msb));
+            let nar = na | nb | zb;
+            (nar | za, msb & nar)
+        }
+        Kind::Sqrt => {
+            // NaR and every negative real have the sign bit set.
+            let nar = expand(wa & msb);
+            (nar | za, msb & nar)
+        }
+        Kind::Mul => {
+            let zb = expand(zero_msb(wb));
+            let nb = expand(zero_msb(wb ^ msb));
+            let nar = na | nb;
+            (nar | za | zb, msb & nar)
+        }
+        Kind::Add | Kind::Sub => {
+            let zb = expand(zero_msb(wb));
+            let nb = expand(zero_msb(wb ^ msb));
+            let nar = na | nb;
+            // b == 0 -> a; else a == 0 -> b (Add) / -b (Sub); the scalar
+            // table checks b first, so a == 0 only fires when b != 0.
+            let b_zero = zb & !nar;
+            let a_zero = za & !nar & !zb;
+            let other = if kind == Kind::Sub { lane_neg(wb) } else { wb };
+            (nar | zb | (za & !nar), (msb & nar) | (wa & b_zero) | (other & a_zero))
+        }
+        Kind::MulAdd => {
+            let zb = expand(zero_msb(wb));
+            let nb = expand(zero_msb(wb ^ msb));
+            let nc = expand(zero_msb(wc ^ msb));
+            let nar = na | nb | nc;
+            // exact-zero product: a·b + c = c
+            let pass_c = (za | zb) & !nar;
+            (nar | pass_c, (msb & nar) | (wc & pass_c))
+        }
+    };
+    SpecialWord { mask: mask_, bits }
+}
+
+/// One SoA block: packed pre-pass, compacted real-lane mid-section,
+/// encode post-pass.
+fn block<const N: u32, const L: usize>(
+    kind: Kind,
+    a: &[u64],
+    b: &[u64],
+    c: &[u64],
+    out: &mut [u64],
+) {
+    let m = out.len();
+    let msk = mask(N);
+    let lane = |l: &[u64], i: usize| if l.is_empty() { 0 } else { l[i] & msk };
+
+    // --- pass 1: SWAR special pre-pass over packed words ---------------
+    let mut real_idx = [0u8; BLOCK]; // compacted real-lane positions
+    let mut r = 0usize;
+    let words = m / L;
+    for wi in 0..words {
+        let base = wi * L;
+        let mut wa = 0u64;
+        let mut wb = 0u64;
+        let mut wc = 0u64;
+        for j in 0..L {
+            wa |= lane(a, base + j) << (j as u32 * N);
+            wb |= lane(b, base + j) << (j as u32 * N);
+            wc |= lane(c, base + j) << (j as u32 * N);
+        }
+        let sp = special_word::<N, L>(kind, wa, wb, wc);
+        if sp.mask == 0 {
+            // dense word: every lane is real
+            for j in 0..L {
+                real_idx[r] = (base + j) as u8;
+                r += 1;
+            }
+        } else {
+            for j in 0..L {
+                let sh = j as u32 * N;
+                if (sp.mask >> sh) & msk != 0 {
+                    out[base + j] = (sp.bits >> sh) & msk;
+                } else {
+                    real_idx[r] = (base + j) as u8;
+                    r += 1;
+                }
+            }
+        }
+    }
+    // ragged tail (batch length not a multiple of the lane count): the
+    // scalar kernel serves the leftover lanes — bit-identical by
+    // construction.
+    for i in words * L..m {
+        out[i] = scalar_bits(N, kind, lane(a, i), lane(b, i), lane(c, i));
+    }
+
+    if r == 0 {
+        return;
+    }
+
+    // --- pass 2 + 3: SoA mid-section and encode post-pass --------------
+    match kind {
+        Kind::Div => {
+            // decode into SoA buffers
+            let mut sign = [false; BLOCK];
+            let mut scale = [0i32; BLOCK];
+            let mut num = [0u64; BLOCK];
+            let mut den = [0u64; BLOCK];
+            for t in 0..r {
+                let i = real_idx[t] as usize;
+                let da = Posit::from_bits(N, lane(a, i)).decode();
+                let db = Posit::from_bits(N, lane(b, i)).decode();
+                sign[t] = da.sign ^ db.sign;
+                scale[t] = da.scale - db.scale;
+                num[t] = da.sig << N;
+                den[t] = db.sig;
+            }
+            // fraction divide: native u64 division (the generic kernel's
+            // u128 form is a libcall), same integer math, same quotient
+            // normal form
+            let mut q = [0u64; BLOCK];
+            let mut sticky = [false; BLOCK];
+            for t in 0..r {
+                q[t] = num[t] / den[t];
+                sticky[t] = num[t] % den[t] != 0;
+            }
+            for t in 0..r {
+                // normalize q ∈ (1/2, 2) to [1, 2)
+                let (sc, sfb) = if q[t] >> N != 0 { (scale[t], N) } else { (scale[t] - 1, N - 1) };
+                out[real_idx[t] as usize] =
+                    encode_round(N, sign[t], sc, q[t] as u128, sfb, sticky[t]).to_bits();
+            }
+        }
+        Kind::Sqrt => {
+            let f = frac_bits(N);
+            let p = f + 2;
+            let mut scale = [0i32; BLOCK];
+            let mut rad = [0u64; BLOCK];
+            for t in 0..r {
+                let i = real_idx[t] as usize;
+                let d = Posit::from_bits(N, lane(a, i)).decode();
+                scale[t] = d.scale >> 1; // ⌊T/2⌋ (arithmetic shift)
+                let odd = (d.scale & 1) as u32;
+                rad[t] = d.sig << (2 * p + odd - f);
+            }
+            let mut s = [0u64; BLOCK];
+            let mut sticky = [false; BLOCK];
+            for t in 0..r {
+                s[t] = isqrt_u128(rad[t] as u128) as u64;
+                sticky[t] = s[t] * s[t] != rad[t];
+            }
+            for t in 0..r {
+                out[real_idx[t] as usize] =
+                    encode_round(N, false, scale[t], s[t] as u128, p, sticky[t]).to_bits();
+            }
+        }
+        Kind::Mul => {
+            let fb = frac_bits(N);
+            let mut sign = [false; BLOCK];
+            let mut scale = [0i32; BLOCK];
+            let mut prod = [0u64; BLOCK];
+            for t in 0..r {
+                let i = real_idx[t] as usize;
+                let da = Posit::from_bits(N, lane(a, i)).decode();
+                let db = Posit::from_bits(N, lane(b, i)).decode();
+                sign[t] = da.sign ^ db.sign;
+                scale[t] = da.scale + db.scale;
+                prod[t] = da.sig * db.sig; // ≤ 2^(2(N-3)): fits u64 at n ≤ 16
+            }
+            for t in 0..r {
+                // value = prod / 2^(2fb) ∈ [1, 4): renormalize like Posit::mul
+                let (sc, sfb) = if prod[t] >> (2 * fb + 1) != 0 {
+                    (scale[t] + 1, 2 * fb + 1)
+                } else {
+                    (scale[t], 2 * fb)
+                };
+                out[real_idx[t] as usize] =
+                    encode_round(N, sign[t], sc, prod[t] as u128, sfb, false).to_bits();
+            }
+        }
+        // The remaining ops keep the posit library routine per real lane
+        // behind the packed special pre-pass: their alignment/cancellation
+        // datapath is already a single pass, and reusing it keeps the
+        // bit-identity argument trivial.
+        Kind::Add => {
+            for &t in &real_idx[..r] {
+                let i = t as usize;
+                out[i] =
+                    Posit::from_bits(N, lane(a, i)).add(Posit::from_bits(N, lane(b, i))).to_bits();
+            }
+        }
+        Kind::Sub => {
+            for &t in &real_idx[..r] {
+                let i = t as usize;
+                out[i] =
+                    Posit::from_bits(N, lane(a, i)).sub(Posit::from_bits(N, lane(b, i))).to_bits();
+            }
+        }
+        Kind::MulAdd => {
+            for &t in &real_idx[..r] {
+                let i = t as usize;
+                out[i] = Posit::from_bits(N, lane(a, i))
+                    .mul_add(Posit::from_bits(N, lane(b, i)), Posit::from_bits(N, lane(c, i)))
+                    .to_bits();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::division::fastpath::FastKernel;
+    use crate::testkit::Rng;
+
+    const KINDS: [Kind; 6] =
+        [Kind::Div, Kind::Sqrt, Kind::Mul, Kind::Add, Kind::Sub, Kind::MulAdd];
+
+    #[test]
+    fn splat_fills_every_lane() {
+        assert_eq!(splat::<8, 8>(0x01), 0x0101_0101_0101_0101);
+        assert_eq!(splat::<8, 8>(0x80), 0x8080_8080_8080_8080);
+        assert_eq!(splat::<16, 4>(1), 0x0001_0001_0001_0001);
+        assert_eq!(splat::<16, 4>(0x8000), 0x8000_8000_8000_8000);
+    }
+
+    /// The carry-contained zero-lane detector must be exact — including
+    /// the pattern the naive borrow trick gets wrong (a lane of value 1
+    /// above a zero lane).
+    #[test]
+    fn swar_zero_detection_is_exact() {
+        let low = splat::<8, 8>(mask(7));
+        let msb = splat::<8, 8>(0x80);
+        let zero_msb = |w: u64| !(((w & low) + low) | w | low) & msb;
+        let mut rng = Rng::seeded(0x5A);
+        for _ in 0..100_000 {
+            let w = rng.next_u64();
+            let got = zero_msb(w);
+            for j in 0..8 {
+                let lane = (w >> (8 * j)) & 0xFF;
+                let flag = (got >> (8 * j + 7)) & 1;
+                assert_eq!(flag == 1, lane == 0, "w={w:#018x} lane {j}");
+            }
+        }
+        // the classic false-positive shape: [0x00, 0x01] low-to-high
+        let w = 0x0100u64;
+        let got = zero_msb(w);
+        assert_eq!(got, 0x80, "only the zero lane may flag, {got:#x}");
+    }
+
+    #[test]
+    fn swar_lane_negation_matches_scalar() {
+        let mut rng = Rng::seeded(0x9E6);
+        let msb = splat::<8, 8>(0x80);
+        let one = splat::<8, 8>(1);
+        let lane_neg = |w: u64| {
+            let x = !w;
+            ((x & !msb).wrapping_add(one)) ^ ((x ^ one) & msb)
+        };
+        for _ in 0..100_000 {
+            let w = rng.next_u64();
+            let got = lane_neg(w);
+            for j in 0..8 {
+                let lane = (w >> (8 * j)) & 0xFF;
+                let want = lane.wrapping_neg() & 0xFF;
+                assert_eq!((got >> (8 * j)) & 0xFF, want, "w={w:#018x} lane {j}");
+            }
+        }
+    }
+
+    /// Every lane the pre-pass claims special must resolve exactly as the
+    /// scalar special table does — exhaustive at Posit8 per packed word.
+    #[test]
+    fn special_word_matches_scalar_table_p8() {
+        let mut rng = Rng::seeded(0x57EC);
+        for kind in KINDS {
+            let k = FastKernel::new(8, kind);
+            for _ in 0..20_000 {
+                // bias toward specials so every branch is exercised
+                let pack_word = |rng: &mut Rng| -> u64 {
+                    let mut w = 0u64;
+                    for j in 0..8 {
+                        let v = match rng.range_inclusive(0, 5) {
+                            0 => 0,
+                            1 => 0x80,
+                            _ => rng.next_u64() & 0xFF,
+                        };
+                        w |= v << (8 * j);
+                    }
+                    w
+                };
+                let (wa, wb, wc) = (pack_word(&mut rng), pack_word(&mut rng), pack_word(&mut rng));
+                let sp = special_word::<8, 8>(kind, wa, wb, wc);
+                for j in 0..8 {
+                    let sh = 8 * j;
+                    let (a, b, c) = ((wa >> sh) & 0xFF, (wb >> sh) & 0xFF, (wc >> sh) & 0xFF);
+                    let scalar = k.classify(a, b, c);
+                    let lane_mask = (sp.mask >> sh) & 0xFF;
+                    assert!(
+                        lane_mask == 0 || lane_mask == 0xFF,
+                        "{kind:?} lane {j}: partial mask {lane_mask:#x}"
+                    );
+                    match scalar {
+                        Some(want) => {
+                            assert_eq!(lane_mask, 0xFF, "{kind:?} lane {j} must be special");
+                            assert_eq!((sp.bits >> sh) & 0xFF, want, "{kind:?} lane {j}");
+                        }
+                        None => assert_eq!(lane_mask, 0, "{kind:?} lane {j} must be real"),
+                    }
+                }
+            }
+        }
+    }
+
+    /// The full SWAR batch vs the scalar kernel: random lanes with
+    /// specials sprinkled in, at lengths that cover dense words, partial
+    /// blocks and ragged tails.
+    #[test]
+    fn swar_batch_matches_scalar_kernel() {
+        let mut rng = Rng::seeded(0x51AD);
+        for n in [8u32, 16] {
+            for kind in KINDS {
+                for len in [1usize, 3, 4, 7, 8, 15, 16, 17, 63, 64, 65, 257] {
+                    let make_lane = |rng: &mut Rng, sprinkle: bool| -> Vec<u64> {
+                        (0..len)
+                            .map(|i| {
+                                if sprinkle && i % 5 == 0 {
+                                    [0u64, 1 << (n - 1)][i / 5 % 2]
+                                } else {
+                                    rng.next_u64() & mask(n)
+                                }
+                            })
+                            .collect()
+                    };
+                    for sprinkle in [false, true] {
+                        let a = make_lane(&mut rng, sprinkle);
+                        let b = make_lane(&mut rng, sprinkle);
+                        let c = make_lane(&mut rng, false);
+                        let mut out = vec![0u64; len];
+                        run_batch(n, kind, &a, &b, &c, &mut out);
+                        for i in 0..len {
+                            assert_eq!(
+                                out[i],
+                                scalar_bits(n, kind, a[i], b[i], c[i]),
+                                "{kind:?} n={n} len={len} i={i} sprinkle={sprinkle}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Exhaustive Posit8 pattern pairs through the SWAR kernels (the
+    /// batch analogue of the scalar kernels' exhaustive gate).
+    #[test]
+    fn swar_exhaustive_p8_binary_ops() {
+        for kind in [Kind::Div, Kind::Mul, Kind::Add, Kind::Sub] {
+            let b: Vec<u64> = (0..=mask(8)).collect();
+            let mut out = vec![0u64; b.len()];
+            for a in 0..=mask(8) {
+                let av = vec![a; b.len()];
+                run_batch(8, kind, &av, &b, &[], &mut out);
+                for (i, &got) in out.iter().enumerate() {
+                    assert_eq!(
+                        got,
+                        scalar_bits(8, kind, a, b[i], 0),
+                        "{kind:?} {a:#04x} {:#04x}",
+                        b[i]
+                    );
+                }
+            }
+        }
+        // sqrt: all 256 patterns in one batch
+        let a: Vec<u64> = (0..=mask(8)).collect();
+        let mut out = vec![0u64; a.len()];
+        run_batch(8, Kind::Sqrt, &a, &[], &[], &mut out);
+        for (i, &got) in out.iter().enumerate() {
+            assert_eq!(got, scalar_bits(8, Kind::Sqrt, a[i], 0, 0), "sqrt {:#04x}", a[i]);
+        }
+    }
+
+    #[test]
+    fn empty_and_padded_unused_lanes() {
+        let mut rng = Rng::seeded(0x17AD);
+        let n = 16;
+        let a: Vec<u64> = (0..90).map(|_| rng.next_u64() & mask(n)).collect();
+        let pad = vec![0u64; a.len()];
+        let mut with_empty = vec![0u64; a.len()];
+        let mut with_pad = vec![0u64; a.len()];
+        run_batch(n, Kind::Sqrt, &a, &[], &[], &mut with_empty);
+        run_batch(n, Kind::Sqrt, &a, &pad, &pad, &mut with_pad);
+        assert_eq!(with_empty, with_pad);
+    }
+
+    #[test]
+    fn high_garbage_bits_are_masked() {
+        let one = Posit::one(16).to_bits();
+        let garbage = 0xDEAD_0000_0000_0000u64;
+        let a = vec![one | garbage; 20];
+        let b = vec![one | garbage; 20];
+        let mut out = vec![0u64; 20];
+        run_batch(16, Kind::Div, &a, &b, &[], &mut out);
+        assert!(out.iter().all(|&q| q == one), "{out:?}");
+    }
+}

@@ -26,6 +26,12 @@ pub enum PositError {
     /// An operation received the wrong number of operands (e.g. `Sqrt` is
     /// unary, `MulAdd` ternary).
     ArityMismatch { op: &'static str, expected: usize, got: usize },
+    /// A forced fast-tier batch kernel cannot serve the requested
+    /// `(width, op)` (e.g. the Posit8 table path at n = 16, or the SWAR
+    /// path at a width without packed kernels). Forcing never falls back
+    /// silently — benches and tests must measure the kernel they asked
+    /// for.
+    UnsupportedFastPath { path: &'static str, op: &'static str, n: u32 },
     /// A requested execution backend cannot run in this build/environment
     /// (e.g. the PJRT runtime without the `xla` feature).
     BackendUnavailable { reason: String },
@@ -60,6 +66,9 @@ impl core::fmt::Display for PositError {
             PositError::ArityMismatch { op, expected, got } => {
                 write!(f, "op {op} takes {expected} operand(s), got {got}")
             }
+            PositError::UnsupportedFastPath { path, op, n } => {
+                write!(f, "fast path {path:?} cannot serve op {op} at Posit{n}")
+            }
             PositError::BackendUnavailable { reason } => {
                 write!(f, "backend unavailable: {reason}")
             }
@@ -88,6 +97,8 @@ mod tests {
         assert!(e.to_string().contains("sqrt") && e.to_string().contains("1"));
         let e = PositError::BatchLaneMismatch { lane: "c", expected: 4, got: 2 };
         assert!(e.to_string().contains("lane c"));
+        let e = PositError::UnsupportedFastPath { path: "table", op: "div", n: 16 };
+        assert!(e.to_string().contains("table") && e.to_string().contains("Posit16"));
         assert!(PositError::Artifacts { detail: "no artifacts found".into() }
             .to_string()
             .contains("no artifacts"));

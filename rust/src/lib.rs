@@ -25,8 +25,15 @@
 //!   width-monomorphized direct kernels of [`division::fastpath`] the
 //!   Fast tier — bit-identical, differing only in speed and in whether
 //!   cycle metadata is stepped or modeled; `Auto` (the default) serves
-//!   batches fast and metadata exactly. (The old division-only `Divider`
-//!   survives as a deprecated wrapper.)
+//!   batches fast and metadata exactly. Inside the Fast tier, batches
+//!   dispatch ([`unit::FastPath`], **table > SWAR > scalar-fast** by
+//!   width and batch length) over a vectorized serving layer:
+//!   construction-verified exhaustive Posit8 operation tables
+//!   ([`division::p8_tables`], one constant-time lookup per lane) and
+//!   SWAR lane-packed kernels ([`division::simd`], 8×Posit8 / 4×Posit16
+//!   lanes per `u64` word with a branch-free packed special pre-pass and
+//!   a structure-of-arrays mid-section). (The old division-only
+//!   `Divider` survives as a deprecated wrapper.)
 //! * [`pool`] — the crate-level worker pool: one persistent set of
 //!   workers ([`pool::global`]) behind every parallel batch path, instead
 //!   of per-call scoped thread spawning.

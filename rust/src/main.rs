@@ -27,7 +27,9 @@ subcommands:
   bench <suite> [--json P] [--baseline P] [--write-baseline] [--quick|--full]
         [--threshold PCT] [--advisory] [--tier T]   run a bench suite + regression gate
   bench list                                        list bench suites
-  bench validate <report.json>                      schema-check a bench report";
+  bench validate <report.json>                      schema-check a bench report
+  bench compare <a.json> <b.json> [--threshold PCT] [--advisory]
+                                                    delta two report files (a = baseline)";
 
 fn alg_by_name(name: &str) -> Option<Algorithm> {
     Algorithm::ALL.iter().copied().find(|a| {
@@ -237,6 +239,20 @@ fn cmd_bench(args: &Args) {
             Some(path) => harness::validate_report(std::path::Path::new(path)),
             None => {
                 eprintln!("usage: posit-div bench validate <report.json>");
+                2
+            }
+        },
+        Some("compare") => match (args.positional.get(1), args.positional.get(2)) {
+            (Some(a), Some(b)) => harness::compare_command(
+                std::path::Path::new(a),
+                std::path::Path::new(b),
+                args,
+            ),
+            _ => {
+                eprintln!(
+                    "usage: posit-div bench compare <baseline.json> <new.json> \
+                     [--threshold PCT] [--advisory]"
+                );
                 2
             }
         },

@@ -156,6 +156,8 @@ impl Pool {
     /// Run `f` over chunks of `items` on the pool's workers, writing
     /// results in order; blocks until done. No `Default`/`Clone` bound:
     /// results are written directly into the output's spare capacity.
+    /// Pick `chunk` with [`chunk_size`] when a per-item cost estimate is
+    /// available (or use [`Pool::map_chunks_auto`]).
     pub fn map_chunks<T, R, F>(&self, items: &[T], chunk: usize, f: F) -> Vec<R>
     where
         T: Sync,
@@ -186,6 +188,19 @@ impl Pool {
         unsafe { out.set_len(len) };
         out
     }
+
+    /// [`Pool::map_chunks`] with the chunk size chosen by the
+    /// [`chunk_size`] heuristic from an estimated per-item cost in
+    /// nanoseconds.
+    pub fn map_chunks_auto<T, R, F>(&self, items: &[T], per_item_ns: f64, f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(&T) -> R + Sync,
+    {
+        let chunk = chunk_size(per_item_ns, items.len(), self.threads());
+        self.map_chunks(items, chunk, f)
+    }
 }
 
 impl Drop for Pool {
@@ -195,6 +210,26 @@ impl Drop for Pool {
             let _ = w.join();
         }
     }
+}
+
+/// Target amount of work per parallel chunk, in nanoseconds (~128 µs —
+/// the middle of the 64–256 µs band where per-chunk fan-out cost, queue
+/// contention and load-balancing granularity are all comfortably
+/// amortized on this pool).
+pub const TARGET_CHUNK_NS: f64 = 128_000.0;
+
+/// Heuristic chunk size for splitting `len` items of roughly
+/// `per_item_ns` each across `threads` workers: an even split
+/// (`⌈len/threads⌉`), floored so no chunk carries less than about
+/// [`TARGET_CHUNK_NS`] of work. Small or cheap batches therefore produce
+/// *fewer* chunks than workers — down to a single chunk, which callers
+/// run inline — instead of paying cross-thread fan-out for microscopic
+/// pieces; large batches keep the even split.
+pub fn chunk_size(per_item_ns: f64, len: usize, threads: usize) -> usize {
+    let per = if per_item_ns.is_finite() && per_item_ns > 0.01 { per_item_ns } else { 0.01 };
+    let min_items = (TARGET_CHUNK_NS / per).ceil() as usize;
+    let fair = len.div_ceil(threads.max(1)).max(1);
+    fair.max(min_items)
 }
 
 /// Default worker count for the shared pool: the machine's available
@@ -331,6 +366,35 @@ mod tests {
         let pool = Pool::new(2);
         pool.execute(|| std::thread::sleep(std::time::Duration::from_millis(10)));
         drop(pool); // must not hang or panic
+    }
+
+    #[test]
+    fn chunk_size_targets_work_per_chunk() {
+        // expensive items: the even split already exceeds the target
+        // (1000 ns/item × 2500 items/chunk = 2.5 ms >> 128 µs)
+        assert_eq!(chunk_size(1000.0, 10_000, 4), 2500);
+        // cheap items: the floor kicks in (128 µs / 16 ns = 8000 items)
+        assert_eq!(chunk_size(16.0, 10_000, 4), 8000);
+        // tiny batch: one chunk covering everything (callers run inline)
+        assert!(chunk_size(16.0, 100, 4) >= 100);
+        // degenerate inputs stay sane
+        assert!(chunk_size(0.0, 100, 0) >= 1);
+        assert!(chunk_size(f64::NAN, 100, 4) >= 1);
+        assert!(chunk_size(1e9, 0, 4) >= 1);
+        // the even split is exact when it dominates
+        assert_eq!(chunk_size(1e6, 1001, 4), 251);
+    }
+
+    #[test]
+    fn map_chunks_auto_matches_map_chunks() {
+        let pool = Pool::new(3);
+        let items: Vec<u64> = (0..5000).collect();
+        // cheap per-item cost -> few large chunks; results identical
+        let auto = pool.map_chunks_auto(&items, 10.0, |&x| x + 7);
+        let manual = pool.map_chunks(&items, chunk_size(10.0, items.len(), 3), |&x| x + 7);
+        assert_eq!(auto, manual);
+        assert_eq!(auto.len(), 5000);
+        assert_eq!(auto[4999], 5006);
     }
 
     #[test]

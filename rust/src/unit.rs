@@ -30,10 +30,20 @@
 //! (tier-equivalence sweeps, exhaustive at Posit8). The default `Auto`
 //! tier serves batch/bit-level traffic from the Fast kernels and switches
 //! to the Datapath whenever cycle metadata is requested ([`Unit::run`]).
+//!
+//! Inside the Fast tier, batches dispatch over a vectorized serving
+//! layer ([`FastPath`]): exhaustive Posit8 operation tables
+//! ([`crate::division::p8_tables`], one constant-time lookup per lane)
+//! and SWAR lane-packed kernels ([`crate::division::simd`], 8×Posit8 /
+//! 4×Posit16 lanes per `u64` word). `Auto` resolves **table > SWAR >
+//! scalar-fast** by width and batch length; [`Unit::with_exec`] forces
+//! one kernel, and every choice is bit-identical.
 
 use std::fmt;
 
 use crate::division::fastpath::{self, FastKernel};
+
+pub use crate::division::fastpath::FastPath;
 use crate::division::sqrt::{golden_sqrt, SqrtEngine};
 use crate::division::{
     exec, golden, iterations, latency_cycles, newton::Newton, nrd::Nrd, srt2::Srt2,
@@ -433,10 +443,28 @@ impl Unit {
     }
 
     /// Build a context for `Posit<n, 2>` serving `op` from a specific
-    /// execution tier.
+    /// execution tier (fast-tier batches keep the default
+    /// [`FastPath::Auto`] dispatch).
     pub fn with_tier(n: u32, op: Op, tier: ExecTier) -> Result<Unit> {
+        Unit::with_exec(n, op, tier, FastPath::Auto)
+    }
+
+    /// Build a context with both the execution tier and the fast-tier
+    /// batch kernel pinned. `path` must be able to serve `(n, op)`
+    /// ([`FastPath::Table`] needs n = 8 and a tabulated op,
+    /// [`FastPath::Simd`] needs n ∈ {8, 16}), and a Datapath-pinned unit
+    /// never consults the fast path, so forcing one there is rejected
+    /// too. Either mismatch is a typed
+    /// [`PositError::UnsupportedFastPath`], not a silent fallback —
+    /// benches and tests that force a kernel must never measure a
+    /// different one.
+    pub fn with_exec(n: u32, op: Op, tier: ExecTier, path: FastPath) -> Result<Unit> {
         if !(MIN_N..=MAX_N).contains(&n) {
             return Err(PositError::WidthOutOfRange { n });
+        }
+        let datapath_pinned = tier == ExecTier::Datapath && path != FastPath::Auto;
+        if datapath_pinned || !fastpath::path_supported(n, op.fast_kind(), path) {
+            return Err(PositError::UnsupportedFastPath { path: path.name(), op: op.name(), n });
         }
         let (core, iters, real_iters, cycles) = match op {
             Op::Div { alg } => {
@@ -474,7 +502,7 @@ impl Unit {
             op,
             core,
             tier,
-            fast: FastKernel::new(n, op.fast_kind()),
+            fast: FastKernel::with_path(n, op.fast_kind(), path),
             iterations: iters,
             real_iters,
             cycles,
@@ -505,6 +533,26 @@ impl Unit {
         match self.tier {
             ExecTier::Fast => ExecTier::Fast,
             _ => ExecTier::Datapath,
+        }
+    }
+
+    /// The configured fast-tier batch dispatch (`Auto` unless the unit
+    /// was built through [`Unit::with_exec`]).
+    #[inline]
+    pub fn fast_path(&self) -> FastPath {
+        self.fast.path()
+    }
+
+    /// The concrete Fast kernel that serves a batch of `len` lanes
+    /// (table, SWAR or scalar-fast; never `Auto`), or `None` when the
+    /// unit's batches run on the Datapath tier. This is what the
+    /// coordinator's per-path metrics count.
+    #[inline]
+    pub fn resolve_fast_path(&self, len: usize) -> Option<FastPath> {
+        if self.batch_tier() == ExecTier::Fast {
+            Some(self.fast.resolve(len))
+        } else {
+            None
         }
     }
 
@@ -731,10 +779,50 @@ impl Unit {
         Ok(())
     }
 
-    /// [`Unit::run_batch`] split into `threads` contiguous chunks and
+    /// Rough per-lane serving cost on the tier/kernel a batch of `len`
+    /// lanes resolves to, in nanoseconds. Coarse calibration constants —
+    /// they only steer the parallel chunking heuristic
+    /// ([`Unit::parallel_chunk`]), so being within ~2× is enough.
+    fn batch_lane_ns(&self, len: usize) -> f64 {
+        if self.batch_tier() == ExecTier::Datapath {
+            // per-iteration register emulation dominates; decode/encode
+            // and the iteration body both grow with the width
+            return 30.0 + 16.0 * self.real_iters as f64 + 0.4 * self.n as f64;
+        }
+        match self.fast.resolve(len) {
+            FastPath::Table => 3.0,
+            FastPath::Simd => match self.op {
+                Op::Div { .. } => 16.0,
+                Op::Sqrt => 30.0,
+                Op::MulAdd => 25.0,
+                _ => 10.0,
+            },
+            _ => match self.op {
+                Op::Div { .. } => 40.0,
+                Op::Sqrt => 60.0,
+                Op::MulAdd => 55.0,
+                _ => 25.0,
+            },
+        }
+    }
+
+    /// Chunk size [`Unit::run_batch_parallel`] uses to split a batch of
+    /// `len` lanes across `threads` workers: an even split, floored so
+    /// every chunk carries roughly [`crate::pool::TARGET_CHUNK_NS`] of
+    /// work on this unit's `(op, width, tier)` — small batches therefore
+    /// collapse to fewer chunks (down to one, which runs inline) instead
+    /// of paying pool fan-out for microscopic pieces. Public so tests and
+    /// capacity planning can inspect the policy.
+    pub fn parallel_chunk(&self, len: usize, threads: usize) -> usize {
+        crate::pool::chunk_size(self.batch_lane_ns(len), len, threads)
+    }
+
+    /// [`Unit::run_batch`] split into contiguous chunks (sized by the
+    /// [`Unit::parallel_chunk`] heuristic, at most one per `threads`) and
     /// spread over the shared crate-level worker pool
     /// ([`crate::pool::global`] — persistent workers, no per-call thread
     /// spawning); results are written in place, ordering preserved.
+    /// Batches below roughly one chunk of work run inline on the caller.
     pub fn run_batch_parallel(
         &self,
         a: &[u64],
@@ -745,19 +833,26 @@ impl Unit {
     ) -> Result<()> {
         self.check_lanes(a, b, c, out.len())?;
         let threads = threads.max(1);
-        if threads == 1 || out.len() <= 1 {
+        let chunk = self.parallel_chunk(out.len(), threads);
+        if threads == 1 || out.len() <= chunk {
             return self.run_batch(a, b, c, out);
         }
-        let chunk = out.len().div_ceil(threads).max(1);
-        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(threads);
+        // Resolve the fast kernel once on the full batch length: every
+        // chunk runs the same kernel the batch (and the per-path metrics,
+        // via `resolve_fast_path` on the same length) resolved to, even
+        // when a ragged tail chunk falls below a dispatch threshold.
+        let fast_path = self.resolve_fast_path(out.len());
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+            Vec::with_capacity(out.len().div_ceil(chunk));
         let mut start = 0usize;
         for co in out.chunks_mut(chunk) {
             let end = start + co.len();
             let ca = &a[start..end];
             let cb = if b.is_empty() { b } else { &b[start..end] };
             let cc = if c.is_empty() { c } else { &c[start..end] };
-            jobs.push(Box::new(move || {
-                self.run_batch(ca, cb, cc, co).expect("equal chunk lanes");
+            jobs.push(Box::new(move || match fast_path {
+                Some(p) => self.fast.run_batch_with(p, ca, cb, cc, co),
+                None => self.run_batch(ca, cb, cc, co).expect("equal chunk lanes"),
             }));
             start = end;
         }
@@ -1027,6 +1122,113 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn auto_fast_path_dispatch_order() {
+        // table > SWAR > scalar-fast, by width and batch length
+        let div8 = Unit::new(8, Op::DIV).unwrap();
+        assert_eq!(div8.fast_path(), FastPath::Auto);
+        assert_eq!(div8.resolve_fast_path(256), Some(FastPath::Table));
+        assert_eq!(div8.resolve_fast_path(2), Some(FastPath::Scalar));
+        // ternary op has no table: SWAR is next in line
+        let fma8 = Unit::new(8, Op::MulAdd).unwrap();
+        assert_eq!(fma8.resolve_fast_path(256), Some(FastPath::Simd));
+        assert_eq!(fma8.resolve_fast_path(4), Some(FastPath::Scalar));
+        // Posit16: SWAR above the lane threshold, scalar below
+        let div16 = Unit::new(16, Op::DIV).unwrap();
+        assert_eq!(div16.resolve_fast_path(256), Some(FastPath::Simd));
+        assert_eq!(div16.resolve_fast_path(8), Some(FastPath::Scalar));
+        // wide formats stay scalar at any length
+        let div32 = Unit::new(32, Op::DIV).unwrap();
+        assert_eq!(div32.resolve_fast_path(1 << 20), Some(FastPath::Scalar));
+        // datapath-pinned units have no fast path to resolve
+        let dp = Unit::with_tier(16, Op::DIV, ExecTier::Datapath).unwrap();
+        assert_eq!(dp.resolve_fast_path(256), None);
+    }
+
+    #[test]
+    fn with_exec_rejects_unsupported_paths() {
+        assert_eq!(
+            Unit::with_exec(16, Op::DIV, ExecTier::Fast, FastPath::Table).err(),
+            Some(PositError::UnsupportedFastPath { path: "table", op: "div", n: 16 })
+        );
+        assert_eq!(
+            Unit::with_exec(8, Op::MulAdd, ExecTier::Fast, FastPath::Table).err(),
+            Some(PositError::UnsupportedFastPath { path: "table", op: "mul_add", n: 8 })
+        );
+        assert_eq!(
+            Unit::with_exec(32, Op::DIV, ExecTier::Fast, FastPath::Simd).err(),
+            Some(PositError::UnsupportedFastPath { path: "simd", op: "div", n: 32 })
+        );
+        // a Datapath-pinned unit never consults the fast path: forcing
+        // one is rejected instead of silently serving from the datapath
+        assert_eq!(
+            Unit::with_exec(8, Op::DIV, ExecTier::Datapath, FastPath::Table).err(),
+            Some(PositError::UnsupportedFastPath { path: "table", op: "div", n: 8 })
+        );
+        assert!(Unit::with_exec(16, Op::DIV, ExecTier::Datapath, FastPath::Auto).is_ok());
+        // supported combinations build and resolve to the forced kernel
+        let t = Unit::with_exec(8, Op::DIV, ExecTier::Fast, FastPath::Table).unwrap();
+        assert_eq!((t.fast_path(), t.resolve_fast_path(1)), (FastPath::Table, Some(FastPath::Table)));
+        let s = Unit::with_exec(16, Op::Sqrt, ExecTier::Fast, FastPath::Simd).unwrap();
+        assert_eq!(s.resolve_fast_path(1), Some(FastPath::Simd));
+    }
+
+    /// Every forced fast path serves bit-identically through the Unit
+    /// batch entry point.
+    #[test]
+    fn forced_paths_are_bit_identical_through_unit() {
+        let mut rng = Rng::seeded(0xFA7);
+        for n in [8u32, 16] {
+            for op in Op::DEFAULTS {
+                let a: Vec<u64> = (0..100).map(|_| rng.next_u64() & mask(n)).collect();
+                let b: Vec<u64> = (0..100).map(|_| rng.next_u64() & mask(n)).collect();
+                let c: Vec<u64> = (0..100).map(|_| rng.next_u64() & mask(n)).collect();
+                let (lb, lc): (&[u64], &[u64]) = match op.arity() {
+                    1 => (&[], &[]),
+                    2 => (&b, &[]),
+                    _ => (&b, &c),
+                };
+                let scalar =
+                    Unit::with_exec(n, op, ExecTier::Fast, FastPath::Scalar).unwrap();
+                let mut want = vec![0u64; a.len()];
+                scalar.run_batch(&a, lb, lc, &mut want).unwrap();
+                for path in [FastPath::Table, FastPath::Simd, FastPath::Auto] {
+                    let Ok(unit) = Unit::with_exec(n, op, ExecTier::Fast, path) else {
+                        continue;
+                    };
+                    let mut got = vec![0u64; a.len()];
+                    unit.run_batch(&a, lb, lc, &mut got).unwrap();
+                    assert_eq!(got, want, "{op} n={n} {path:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_chunk_heuristic_scales_with_cost() {
+        // cheap fast-tier lanes: small batches collapse to one chunk
+        let fast = Unit::with_tier(16, Op::DIV, ExecTier::Fast).unwrap();
+        let len = 1000;
+        assert!(fast.parallel_chunk(len, 8) >= len, "small cheap batch must not fan out");
+        // the datapath is ~an order of magnitude costlier per lane: the
+        // same batch splits into real chunks
+        let dp = Unit::with_tier(16, Op::DIV, ExecTier::Datapath).unwrap();
+        let chunk = dp.parallel_chunk(10_000, 8);
+        assert!(chunk < 10_000, "expensive lanes must fan out, got {chunk}");
+        assert!(chunk >= 10_000 / 8, "never smaller than the even split");
+        // huge batches reach the even split on any tier
+        assert_eq!(fast.parallel_chunk(8_000_000, 8), 1_000_000);
+        // and the parallel entry point stays bit-identical either way
+        let mut rng = Rng::seeded(0xC43);
+        let a: Vec<u64> = (0..30_000).map(|_| rng.next_u64() & mask(16)).collect();
+        let b: Vec<u64> = (0..30_000).map(|_| rng.next_u64() & mask(16)).collect();
+        let mut serial = vec![0u64; a.len()];
+        let mut parallel = vec![0u64; a.len()];
+        dp.run_batch(&a, &b, &[], &mut serial).unwrap();
+        dp.run_batch_parallel(&a, &b, &[], &mut parallel, 4).unwrap();
+        assert_eq!(serial, parallel);
     }
 
     #[test]

@@ -7,11 +7,13 @@
 //! the whole pattern space again through the **Fast tier**'s
 //! width-monomorphized kernels (the serving default under `Auto`).
 //!
-//! `#[ignore]`d for local `cargo test` (the tier-1 suite already covers
-//! Posit8 exhaustively across all engines in `engines_cross.rs` and the
-//! sqrt engine in its module tests); CI runs them explicitly with
-//! `cargo test --test p8_exhaustive -- --ignored` so the serving
-//! datapaths are gated on every push.
+//! The engine-level sweeps are `#[ignore]`d for local `cargo test` (the
+//! tier-1 suite already covers Posit8 exhaustively across all engines in
+//! `engines_cross.rs` and the sqrt engine in its module tests); CI runs
+//! them explicitly with `cargo test --test p8_exhaustive -- --ignored`
+//! so the serving datapaths are gated on every push. The **table-path**
+//! sweep below runs un-ignored: a constant-time lookup per case makes
+//! the full 65k-pair space per op cheap enough for tier-1.
 
 // The division gates deliberately run through the deprecated `Divider`
 // wrapper so the legacy entry point stays pinned bit-exact.
@@ -20,7 +22,49 @@
 use posit_div::division::sqrt::golden_sqrt;
 use posit_div::division::{golden, Algorithm, DivEngine, Divider};
 use posit_div::posit::{mask, Posit, Unpacked};
-use posit_div::unit::{ExecTier, Op, Unit};
+use posit_div::unit::{ExecTier, FastPath, Op, Unit};
+
+/// Exhaustive Posit8 **table-path** gate — runs un-`#[ignore]`d in
+/// tier-1: the lazily-built op tables (`division::p8_tables`) already
+/// verify every entry against golden at construction, and this sweep
+/// additionally drives all 256×256 pattern pairs per binary op (and all
+/// 256 patterns for sqrt) through the *dispatch* (`Unit::run_batch` with
+/// the table kernel forced), re-checking each result against the exact
+/// references — 65k cases per op is well inside a tier-1 budget.
+#[test]
+fn p8_table_path_matches_exact_references_on_all_pattern_pairs() {
+    let n = 8;
+    let p = |bits: u64| Posit::from_bits(n, bits);
+    let bs: Vec<u64> = (0..=mask(n)).collect();
+    let mut out = vec![0u64; bs.len()];
+    for op in [Op::DIV, Op::Mul, Op::Add, Op::Sub] {
+        let unit = Unit::with_exec(n, op, ExecTier::Fast, FastPath::Table)
+            .expect("binary Posit8 ops are tabulated");
+        for a in 0..=mask(n) {
+            let avec = vec![a; bs.len()];
+            unit.run_batch(&avec, &bs, &[], &mut out).expect("equal lanes");
+            for (i, &got) in out.iter().enumerate() {
+                let b = bs[i];
+                let want = match op {
+                    Op::Div { .. } => golden::divide(p(a), p(b)).result.to_bits(),
+                    Op::Mul => p(a).mul(p(b)).to_bits(),
+                    Op::Add => p(a).add(p(b)).to_bits(),
+                    _ => p(a).sub(p(b)).to_bits(),
+                };
+                assert_eq!(got, want, "{op} table path: {a:#04x}, {b:#04x}");
+            }
+        }
+    }
+    // sqrt: the whole pattern space in one batch
+    let sqrt = Unit::with_exec(n, Op::Sqrt, ExecTier::Fast, FastPath::Table)
+        .expect("sqrt is tabulated");
+    sqrt.run_batch(&bs, &[], &[], &mut out).expect("equal lanes");
+    for (i, &got) in out.iter().enumerate() {
+        assert_eq!(got, golden_sqrt(p(bs[i])).result.to_bits(), "sqrt table path: {:#04x}", bs[i]);
+    }
+    // and the ternary op correctly has no table
+    assert!(Unit::with_exec(n, Op::MulAdd, ExecTier::Fast, FastPath::Table).is_err());
+}
 
 #[test]
 #[ignore = "exhaustive CI gate; run with `cargo test --test p8_exhaustive -- --ignored`"]

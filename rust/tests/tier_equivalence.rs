@@ -158,7 +158,10 @@ fn auto_tier_serves_batches_from_the_fast_kernels_bit_identically() {
 fn fast_tier_parallel_batches_are_bit_identical_on_the_shared_pool() {
     let mut rng = Rng::seeded(0x7154);
     let n = 16;
-    let (a, b, c) = lanes(n, &mut rng, 935);
+    // large enough that the per-(op, width, tier) chunk heuristic
+    // actually fans out over the pool for every fast kernel (small
+    // batches now deliberately run inline)
+    let (a, b, c) = lanes(n, &mut rng, 24_936);
     for op in Op::DEFAULTS {
         let fast = Unit::with_tier(n, op, ExecTier::Fast).expect("valid width");
         let (lb, lc): (&[u64], &[u64]) = match op.arity() {
@@ -171,5 +174,104 @@ fn fast_tier_parallel_batches_are_bit_identical_on_the_shared_pool() {
         fast.run_batch(&a, lb, lc, &mut serial).expect("equal lanes");
         fast.run_batch_parallel(&a, lb, lc, &mut parallel, 4).expect("equal lanes");
         assert_eq!(serial, parallel, "{op}");
+    }
+}
+
+/// SWAR vs scalar-fast vs Datapath bit-identity: seeded sweeps with the
+/// batch kernel *forced*, at batch lengths around the Auto dispatch
+/// thresholds (16, 32) and across SoA block/ragged-tail boundaries,
+/// specials and NaR included, for every op at both SWAR widths.
+#[test]
+fn swar_path_matches_scalar_fast_and_datapath_for_every_op() {
+    let mut rng = Rng::seeded(0x7156);
+    for n in [8u32, 16] {
+        for len in [16usize, 32, 300] {
+            let (full_a, full_b, full_c) = lanes(n, &mut rng, 300);
+            let a = &full_a[..len];
+            let b = &full_b[..len];
+            let c = &full_c[..len];
+            for op in Op::DEFAULTS {
+                let simd = Unit::with_exec(n, op, ExecTier::Fast, FastPath::Simd)
+                    .expect("SWAR width");
+                let scalar = Unit::with_exec(n, op, ExecTier::Fast, FastPath::Scalar)
+                    .expect("always valid");
+                let dp = Unit::with_tier(n, op, ExecTier::Datapath).expect("valid width");
+                let (lb, lc): (&[u64], &[u64]) = match op.arity() {
+                    1 => (&[], &[]),
+                    2 => (b, &[]),
+                    _ => (b, c),
+                };
+                let mut simd_out = vec![0u64; len];
+                let mut scalar_out = vec![0u64; len];
+                let mut dp_out = vec![0u64; len];
+                simd.run_batch(a, lb, lc, &mut simd_out).expect("equal lanes");
+                scalar.run_batch(a, lb, lc, &mut scalar_out).expect("equal lanes");
+                dp.run_batch(a, lb, lc, &mut dp_out).expect("equal lanes");
+                assert_eq!(simd_out, scalar_out, "{op} n={n} len={len}: SWAR != scalar-fast");
+                assert_eq!(simd_out, dp_out, "{op} n={n} len={len}: SWAR != datapath");
+            }
+        }
+    }
+}
+
+/// Posit8 table path vs scalar-fast vs Datapath on the same seeded
+/// sweeps (the exhaustive all-pairs gate lives in `p8_exhaustive.rs`).
+#[test]
+fn table_path_matches_scalar_fast_and_datapath_p8() {
+    let mut rng = Rng::seeded(0x7157);
+    let n = 8;
+    for len in [16usize, 32, 300] {
+        let (full_a, full_b, _) = lanes(n, &mut rng, 300);
+        let a = &full_a[..len];
+        let b = &full_b[..len];
+        for op in Op::DEFAULTS {
+            let Ok(table) = Unit::with_exec(n, op, ExecTier::Fast, FastPath::Table) else {
+                continue; // mul_add has no table
+            };
+            let scalar =
+                Unit::with_exec(n, op, ExecTier::Fast, FastPath::Scalar).expect("always valid");
+            let dp = Unit::with_tier(n, op, ExecTier::Datapath).expect("valid width");
+            let (lb, lc): (&[u64], &[u64]) = match op.arity() {
+                1 => (&[], &[]),
+                _ => (b, &[]),
+            };
+            let mut t_out = vec![0u64; len];
+            let mut s_out = vec![0u64; len];
+            let mut d_out = vec![0u64; len];
+            table.run_batch(a, lb, lc, &mut t_out).expect("equal lanes");
+            scalar.run_batch(a, lb, lc, &mut s_out).expect("equal lanes");
+            dp.run_batch(a, lb, lc, &mut d_out).expect("equal lanes");
+            assert_eq!(t_out, s_out, "{op} len={len}: table != scalar-fast");
+            assert_eq!(t_out, d_out, "{op} len={len}: table != datapath");
+        }
+    }
+}
+
+/// The Auto dispatch can pick different kernels on either side of its
+/// thresholds — the results must stay bit-identical across the seam.
+#[test]
+fn auto_dispatch_is_bit_identical_across_length_thresholds() {
+    let mut rng = Rng::seeded(0x7158);
+    for n in [8u32, 16] {
+        let (a, b, _) = lanes(n, &mut rng, 100);
+        for op in [Op::DIV, Op::Mul, Op::Sqrt] {
+            let auto = Unit::with_tier(n, op, ExecTier::Fast).expect("valid width");
+            let scalar =
+                Unit::with_exec(n, op, ExecTier::Fast, FastPath::Scalar).expect("always valid");
+            let (lb, _lc): (&[u64], &[u64]) = match op.arity() {
+                1 => (&[], &[]),
+                _ => (&b, &[]),
+            };
+            // lengths straddling TABLE_MIN_LANES (4) and SIMD_MIN_LANES (16)
+            for len in [1usize, 3, 4, 5, 15, 16, 17, 64] {
+                let la = &a[..len];
+                let lb2: &[u64] = if lb.is_empty() { lb } else { &lb[..len] };
+                let mut auto_out = vec![0u64; len];
+                let mut scalar_out = vec![0u64; len];
+                auto.run_batch(la, lb2, &[], &mut auto_out).expect("equal lanes");
+                scalar.run_batch(la, lb2, &[], &mut scalar_out).expect("equal lanes");
+                assert_eq!(auto_out, scalar_out, "{op} n={n} len={len}");
+            }
+        }
     }
 }
