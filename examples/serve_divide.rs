@@ -6,7 +6,8 @@
 //!        L1 Pallas radix-4 SRT kernel (artifacts/, built once by
 //!        `make artifacts`; needs the `xla` feature — skipped otherwise)
 //!     -> native backend: the bit-exact Rust engines behind cached per-op
-//!        `Unit` contexts (division, sqrt, mul, add/sub, mul-add)
+//!        `Unit` contexts (division, sqrt, mul, add/sub, mul-add, and the
+//!        quire reductions dot/fused-sum/axpy)
 //!
 //! Serves a DSP-trace division workload on Posit16 and Posit32 through
 //! both backends via the typed `Client` handle, then a mixed op-tagged
@@ -70,7 +71,10 @@ fn run(n: u32, backend: Backend, label: &str) {
 }
 
 /// Mixed op-tagged traffic through the native backend: the service groups
-/// each dynamic batch per op and runs every group on its cached unit.
+/// each dynamic batch per op and runs every group on its cached unit —
+/// including the quire reductions (dot/fsum/axpy), which carry their
+/// vector lanes per request (`serve --mix dot:2,fsum:1,axpy:1` from the
+/// CLI exercises the same path).
 fn run_mixed(n: u32) {
     let policy = BatchPolicy { max_batch: 1024, max_wait: Duration::from_micros(200) };
     let backend = Backend::Native { alg: Algorithm::DEFAULT, threads: 4 };
@@ -78,7 +82,9 @@ fn run_mixed(n: u32) {
     let svc = DivisionService::start(cfg).expect("native backend always starts");
     let client = svc.client();
 
-    let mut wl = workload::MixedOps::new(n, OpMix::DEFAULT, 0xE2E0 + n as u64);
+    let mix = OpMix::parse("div:6,sqrt:2,mul:4,add:4,sub:2,fma:2,dot:2,fsum:1,axpy:1")
+        .expect("literal mix parses");
+    let mut wl = workload::MixedOps::new(n, mix, 0xE2E0 + n as u64);
     let reqs = workload::take_requests(&mut wl, REQUESTS);
 
     let t0 = Instant::now();

@@ -1,0 +1,10 @@
+//! Quire reduction throughput (dot/fsum/axpy element rates per width ×
+//! tier, plus blocked GEMM) — thin shim over
+//! [`posit_div::bench::suites`], where the suite body lives so the same
+//! code runs under `cargo bench --bench linalg_throughput` and
+//! `posit-div bench linalg_throughput` (flags: `--json`, `--baseline`,
+//! `--write-baseline`, `--quick`/`--full`, `--threshold`, `--advisory`).
+
+fn main() {
+    posit_div::bench::harness::bench_main("linalg_throughput");
+}

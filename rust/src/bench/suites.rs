@@ -21,6 +21,7 @@ use crate::hardware::components as hc;
 use crate::hardware::report as hw_report;
 use crate::hardware::{combinational, pipelined, synth, Cost, Mode, TSMC28};
 use crate::posit::{mask, Posit};
+use crate::quire;
 use crate::testkit::Rng;
 use crate::unit::{ExecTier, FastPath, Op, Unit};
 use crate::workload;
@@ -56,6 +57,13 @@ pub const SUITES: &[Suite] = &[
         about: "batch op/s per op x width x tier + fast-path (table/SWAR) + service rows",
         tier_aware: true,
         run: unit_throughput,
+    },
+    Suite {
+        name: "linalg_throughput",
+        title: "quire reduction throughput (element/s), 256-element vectors",
+        about: "dot/fsum/axpy element rates per width x tier + blocked GEMM",
+        tier_aware: true,
+        run: linalg_throughput,
     },
     Suite {
         name: "table2_iterations",
@@ -348,6 +356,84 @@ fn mixed_service_run(n: u32, requests: usize, tier: ExecTier) -> Option<Entry> {
         samples: 1,
         iters_per_sample: requests as u64,
     })
+}
+
+/// Quire linear-algebra throughput: the reduction units (`Op::Dot`,
+/// `Op::FusedSum`, `Op::Axpy`) over 256-element vectors through the same
+/// [`Unit::run_batch`] surface the coordinator serves, tier-tagged —
+/// `batch:fast` keeps the accumulator in registers where the width
+/// allows, `batch:datapath` walks the limb quire (restrict with
+/// `--tier`). Rates are **elements per second** (one "op" = one
+/// accumulated element), so rows are comparable across vector lengths.
+/// Plus blocked [`quire::gemm`] rows (one exact deferred-rounding dot per
+/// output element; rate = multiply-accumulates per second).
+fn linalg_throughput(cli: &BenchCli, r: &mut Runner) {
+    let tiers = tiers_under_test(cli);
+    let mut rng = Rng::seeded(0x11A16);
+    const K: usize = 256;
+    for n in [8u32, 16, 32] {
+        // NaR poisons a whole reduction and lets the kernel skip real
+        // accumulation work, so the stimulus excludes it (same reasoning
+        // as the sanitized divisor/radicand lanes in `unit_throughput`).
+        let mut real = |n: u32| -> u64 {
+            loop {
+                let v = rng.next_u64() & mask(n);
+                if v != 1 << (n - 1) {
+                    return v;
+                }
+            }
+        };
+        let a: Vec<u64> = (0..K).map(|_| real(n)).collect();
+        let b: Vec<u64> = (0..K).map(|_| real(n)).collect();
+        let alpha = [real(n)];
+        let mut out = [0u64];
+        for op in Op::REDUCTIONS {
+            for &tier in tiers {
+                let unit = Unit::with_tier(n, op, tier).expect("standard width");
+                let (lb, lc): (&[u64], &[u64]) = match op {
+                    Op::Dot => (&b, &[]),
+                    Op::FusedSum => (&[], &[]),
+                    _ => (&b, &alpha),
+                };
+                let m = bench_batched(
+                    &format!("Posit{n} {} batch {}", op.name(), tier.name()),
+                    cli.cfg,
+                    K as u64,
+                    || {
+                        unit.run_batch(&a, lb, lc, &mut out).expect("matched lanes");
+                        black_box(&out);
+                    },
+                );
+                r.add_tagged(m, Some(n), Some(op.name()), &format!("batch:{}", tier.name()));
+            }
+        }
+    }
+
+    // Blocked GEMM on persistent quires: (16x16)·(16x16), 4096 exact
+    // multiply-accumulates per call. Workload size is profile-independent
+    // (it is already small); only timing budgets shrink under --quick.
+    for n in [8u32, 16] {
+        let (mm, kk, pp) = (16usize, 16, 16);
+        let mut real = |n: u32| -> u64 {
+            loop {
+                let v = rng.next_u64() & mask(n);
+                if v != 1 << (n - 1) {
+                    return v;
+                }
+            }
+        };
+        let av: Vec<Posit> = (0..mm * kk).map(|_| Posit::from_bits(n, real(n))).collect();
+        let bv: Vec<Posit> = (0..kk * pp).map(|_| Posit::from_bits(n, real(n))).collect();
+        let m = bench_batched(
+            &format!("Posit{n} gemm {mm}x{kk}x{pp}"),
+            cli.cfg,
+            (mm * kk * pp) as u64,
+            || {
+                black_box(quire::gemm(&av, &bv, mm, kk, pp).expect("shapes match"));
+            },
+        );
+        r.add_tagged(m, Some(n), None, "gemm");
+    }
 }
 
 /// Table II — iteration counts and pipelined latency, *measured* from the
@@ -733,7 +819,7 @@ mod tests {
 
     #[test]
     fn registry_is_complete_and_unique() {
-        assert_eq!(SUITES.len(), 10);
+        assert_eq!(SUITES.len(), 11);
         for (i, s) in SUITES.iter().enumerate() {
             assert!(find(s.name).is_some());
             assert!(!s.about.is_empty() && !s.title.is_empty());

@@ -93,6 +93,9 @@ pub struct OpCounters {
     pub add: AtomicU64,
     pub sub: AtomicU64,
     pub mul_add: AtomicU64,
+    pub dot: AtomicU64,
+    pub fused_sum: AtomicU64,
+    pub axpy: AtomicU64,
 }
 
 impl OpCounters {
@@ -104,6 +107,9 @@ impl OpCounters {
             Op::Add => &self.add,
             Op::Sub => &self.sub,
             Op::MulAdd => &self.mul_add,
+            Op::Dot => &self.dot,
+            Op::FusedSum => &self.fused_sum,
+            Op::Axpy => &self.axpy,
         }
     }
 
@@ -117,13 +123,16 @@ impl OpCounters {
 
     pub fn summary(&self) -> String {
         format!(
-            "div={} sqrt={} mul={} add={} sub={} mul_add={}",
+            "div={} sqrt={} mul={} add={} sub={} mul_add={} dot={} fsum={} axpy={}",
             self.div.load(Ordering::Relaxed),
             self.sqrt.load(Ordering::Relaxed),
             self.mul.load(Ordering::Relaxed),
             self.add.load(Ordering::Relaxed),
             self.sub.load(Ordering::Relaxed),
             self.mul_add.load(Ordering::Relaxed),
+            self.dot.load(Ordering::Relaxed),
+            self.fused_sum.load(Ordering::Relaxed),
+            self.axpy.load(Ordering::Relaxed),
         )
     }
 }
@@ -250,12 +259,20 @@ mod tests {
         c.record(Op::Div { alg: crate::division::Algorithm::Nrd });
         c.record(Op::Sqrt);
         c.record(Op::MulAdd);
+        c.record(Op::Dot);
+        c.record(Op::Dot);
+        c.record(Op::FusedSum);
+        c.record(Op::Axpy);
         assert_eq!(c.get(Op::DIV), 2, "division buckets ignore the algorithm");
         assert_eq!(c.get(Op::Sqrt), 1);
         assert_eq!(c.get(Op::Mul), 0);
         assert_eq!(c.get(Op::MulAdd), 1);
+        assert_eq!(c.get(Op::Dot), 2);
+        assert_eq!(c.get(Op::FusedSum), 1);
+        assert_eq!(c.get(Op::Axpy), 1);
         let s = c.summary();
         assert!(s.contains("div=2") && s.contains("mul_add=1"), "{s}");
+        assert!(s.contains("dot=2") && s.contains("fsum=1") && s.contains("axpy=1"), "{s}");
     }
 
     #[test]

@@ -4,10 +4,13 @@
 //! the thin-but-real driver the architecture calls for: a leader thread
 //! owns a dynamic [`batcher`] (size + deadline policy) and a backend, and
 //! serves **op-tagged** requests ([`crate::unit::OpRequest`]: division by
-//! any Table IV engine, square root, mul, add/sub, mul-add). Mixed
+//! any Table IV engine, square root, mul, add/sub, mul-add, and the
+//! quire-backed reductions dot/fused-sum/axpy). Mixed
 //! batches are split per operation ([`batcher::group_indices`]) and each
 //! group runs through a cached per-op [`crate::unit::Unit`] at the
-//! configured [`crate::unit::ExecTier`] — the native backend spreads
+//! configured [`crate::unit::ExecTier`] — reduction requests carry their
+//! vector lanes with them and are served one result per request by the
+//! same cached units — the native backend spreads
 //! every group over the shared crate-level worker pool
 //! ([`crate::pool::global`]; no per-batch thread spawning), while the
 //! PJRT backend executes division groups on the AOT-compiled JAX/Pallas
@@ -100,6 +103,10 @@ struct Request {
     a: u64,
     b: u64,
     c: u64,
+    /// Vector lanes of a reduction request (`Dot`/`FusedSum`/`Axpy`):
+    /// the `a`/`b` element vectors, boxed so the common scalar request
+    /// stays two words smaller. The `Axpy` coefficient rides in `c`.
+    vec: Option<Box<(Vec<u64>, Vec<u64>)>>,
     enqueued: Instant,
     respond: Sender<u64>,
 }
@@ -169,24 +176,26 @@ impl Client {
         self.tx.upgrade().ok_or(PositError::ServiceStopped)
     }
 
-    fn check_width(&self, p: Posit) -> Result<()> {
-        if p.width() != self.n {
-            return Err(PositError::WidthMismatch { expected: self.n, got: p.width() });
-        }
-        Ok(())
-    }
-
     fn check_request(&self, req: &OpRequest) -> Result<()> {
-        for &p in req.operands() {
-            self.check_width(p)?;
+        // `OpRequest` constructors already guarantee one width across all
+        // operand lanes (scalar slots and reduction vectors alike), so
+        // the service only has to match that width against its own.
+        if req.width() != self.n {
+            return Err(PositError::WidthMismatch { expected: self.n, got: req.width() });
         }
         Ok(())
     }
 
-    fn enqueue(&self, tx: &Sender<Request>, req: OpRequest, enqueued: Instant) -> Result<Pending> {
+    fn enqueue(&self, tx: &Sender<Request>, req: &OpRequest, enqueued: Instant) -> Result<Pending> {
         let (rtx, rrx) = channel();
         let [a, b, c] = req.bits();
-        tx.send(Request { op: req.op, a, b, c, enqueued, respond: rtx })
+        let vec = req.vector_lanes().map(|(va, vb, _)| {
+            Box::new((
+                va.iter().map(|p| p.to_bits()).collect(),
+                vb.iter().map(|p| p.to_bits()).collect(),
+            ))
+        });
+        tx.send(Request { op: req.op, a, b, c, vec, enqueued, respond: rtx })
             .map_err(|_| PositError::ServiceStopped)?;
         Ok(Pending { n: self.n, rx: rrx })
     }
@@ -196,7 +205,7 @@ impl Client {
     pub fn submit_op(&self, req: OpRequest) -> Result<Pending> {
         self.check_request(&req)?;
         let tx = self.sender()?;
-        self.enqueue(&tx, req, Instant::now())
+        self.enqueue(&tx, &req, Instant::now())
     }
 
     /// Submit many op-tagged requests (any mix of operations); returns
@@ -210,7 +219,7 @@ impl Client {
         let tx = self.sender()?;
         let now = Instant::now();
         let mut rxs = Vec::with_capacity(reqs.len());
-        for &req in reqs {
+        for req in reqs {
             rxs.push(self.enqueue(&tx, req, now)?.rx);
         }
         Ok(BatchHandle { n: self.n, rxs })
@@ -363,6 +372,38 @@ impl DivisionService {
                     let t0 = Instant::now();
                     let mut results = vec![0u64; batch.len()];
                     for (op, idxs) in batcher::group_indices(&batch, |r| r.op) {
+                        let mut out = vec![0u64; idxs.len()];
+                        if op.is_reduction() {
+                            // Reductions carry per-request vector lanes,
+                            // so the group is served request by request
+                            // (each produces exactly one result lane);
+                            // PJRT has no reduction graph — both backends
+                            // go through the native quire units.
+                            let native = match &mut exec {
+                                Exec::Native(native) => native,
+                                Exec::Pjrt { native, .. } => native,
+                            };
+                            for (k, &i) in idxs.iter().enumerate() {
+                                let req = &batch[i];
+                                let (va, vb) = req
+                                    .vec
+                                    .as_deref()
+                                    .map_or((&[][..], &[][..]), |v| (&v.0[..], &v.1[..]));
+                                let alpha = [req.c];
+                                let lc: &[u64] =
+                                    if op.arity() >= 3 { &alpha } else { &[] };
+                                let (served, path) =
+                                    native.run(op, va, vb, lc, &mut out[k..k + 1]);
+                                m.tiers.record(served, 1);
+                                if let Some(p) = path {
+                                    m.tiers.record_fast_path(p, 1);
+                                }
+                            }
+                            for (&i, q) in idxs.iter().zip(out) {
+                                results[i] = q;
+                            }
+                            continue;
+                        }
                         let gather = |lane: fn(&Request) -> u64, used: bool| -> Vec<u64> {
                             if used {
                                 idxs.iter().map(|&i| lane(&batch[i])).collect()
@@ -373,7 +414,6 @@ impl DivisionService {
                         let a = gather(|r| r.a, true);
                         let b = gather(|r| r.b, op.arity() >= 2);
                         let c = gather(|r| r.c, op.arity() >= 3);
-                        let mut out = vec![0u64; idxs.len()];
                         match &mut exec {
                             Exec::Native(native) => {
                                 let (served, path) = native.run(op, &a, &b, &c, &mut out);
@@ -673,6 +713,46 @@ mod tests {
         assert_eq!(m.tiers.get(ExecTier::Datapath), 32);
         assert_eq!(m.tiers.get(ExecTier::Fast), 0);
         assert!(m.tiers.summary().contains("datapath=32"), "{}", m.tiers.summary());
+        svc.shutdown();
+    }
+
+    /// Acceptance gate: the quire reductions run end to end through the
+    /// coordinator `Client`, bit-exact against the exact-rational golden.
+    #[test]
+    fn reductions_served_end_to_end() {
+        use crate::testkit::rational;
+        let n = 16;
+        let svc = DivisionService::start(native_cfg(n)).unwrap();
+        let client = svc.client();
+        let mut rng = Rng::seeded(0xD07_E2E);
+        let rand_vec = |rng: &mut Rng, k: usize| -> Vec<Posit> {
+            (0..k).map(|_| Posit::from_bits(n, rng.next_u64() & mask(n))).collect()
+        };
+        for _ in 0..40 {
+            let k = 1 + (rng.next_u64() % 12) as usize;
+            let a = rand_vec(&mut rng, k);
+            let b = rand_vec(&mut rng, k);
+            let alpha = Posit::from_bits(n, rng.next_u64() & mask(n));
+            let reqs = [
+                OpRequest::dot(&a, &b).unwrap(),
+                OpRequest::fused_sum(&a).unwrap(),
+                OpRequest::axpy(alpha, &a, &b).unwrap(),
+            ];
+            let got = client.submit_ops(&reqs).unwrap().wait().unwrap();
+            assert_eq!(got[0], rational::dot(&a, &b), "dot k={k}");
+            assert_eq!(got[1], rational::fused_sum(&a), "fsum k={k}");
+            assert_eq!(got[2], rational::axpy(alpha, &a, &b), "axpy k={k}");
+        }
+        let m = svc.metrics();
+        assert_eq!(m.ops.get(Op::Dot), 40);
+        assert_eq!(m.ops.get(Op::FusedSum), 40);
+        assert_eq!(m.ops.get(Op::Axpy), 40);
+        assert!(m.ops.summary().contains("dot=40"), "{}", m.ops.summary());
+        // width mismatches are rejected up front, vectors included
+        assert_eq!(
+            client.submit_op(OpRequest::fused_sum(&[Posit::one(8)]).unwrap()).err(),
+            Some(PositError::WidthMismatch { expected: 16, got: 8 })
+        );
         svc.shutdown();
     }
 

@@ -20,11 +20,13 @@ pub enum PositError {
     /// Batch slices passed to `divide_batch`/`run_batch` have
     /// inconsistent lengths (lanes `a`/`b` map to the `xs`/`ds` fields).
     BatchShapeMismatch { xs: usize, ds: usize, out: usize },
-    /// An extra batch operand lane (e.g. lane `c` of `MulAdd`) has the
-    /// wrong length.
+    /// An extra batch operand lane (e.g. lane `c` of `MulAdd`, or lane
+    /// `b` of a `Dot` reduction that must match lane `a` element for
+    /// element) has the wrong length.
     BatchLaneMismatch { lane: &'static str, expected: usize, got: usize },
-    /// An operation received the wrong number of operands (e.g. `Sqrt` is
-    /// unary, `MulAdd` ternary).
+    /// An operation received the wrong number of operand lanes (e.g.
+    /// `Sqrt` is unary, `MulAdd` ternary; reductions count *lanes*, so
+    /// `Dot` is binary however long its vectors are).
     ArityMismatch { op: &'static str, expected: usize, got: usize },
     /// A forced fast-tier batch kernel cannot serve the requested
     /// `(width, op)` (e.g. the Posit8 table path at n = 16, or the SWAR
@@ -64,7 +66,7 @@ impl core::fmt::Display for PositError {
                 "batch lane mismatch: lane {lane} has length {got}, expected {expected}"
             ),
             PositError::ArityMismatch { op, expected, got } => {
-                write!(f, "op {op} takes {expected} operand(s), got {got}")
+                write!(f, "op {op} takes {expected} operand lane(s), got {got}")
             }
             PositError::UnsupportedFastPath { path, op, n } => {
                 write!(f, "fast path {path:?} cannot serve op {op} at Posit{n}")

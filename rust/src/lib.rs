@@ -16,7 +16,8 @@
 //!   Newton–Raphson multiplicative baseline, an exact golden reference and
 //!   a digit-recurrence square root ([`division::sqrt`]).
 //! * [`unit`] — the execution surface: [`unit::Op`] tags a request
-//!   (`Div { alg }`, `Sqrt`, `Mul`, `Add`, `Sub`, `MulAdd`) and
+//!   (`Div { alg }`, `Sqrt`, `Mul`, `Add`, `Sub`, `MulAdd`, and the
+//!   quire reductions `Dot`/`FusedSum`/`Axpy`) and
 //!   [`unit::Unit`] is the reusable zero-alloc context — built once per
 //!   `(width, op)` — whose `run`/`run_batch`/`run_batch_parallel` entry
 //!   points are the one hot path shared by the coordinator, the benches
@@ -34,6 +35,14 @@
 //!   lanes per `u64` word with a branch-free packed special pre-pass and
 //!   a structure-of-arrays mid-section). (The old division-only
 //!   `Divider` survives as a deprecated wrapper.)
+//! * [`quire`] — the posit-standard exact accumulator: a
+//!   width-parameterized fixed-point register (128/512/2048 bits for
+//!   Posit8/16/32) that adds posit products with **no intermediate
+//!   rounding**, behind the reduction ops above and the free functions
+//!   [`quire::dot`], [`quire::fused_sum`], [`quire::axpy`] and the
+//!   blocked [`quire::gemm`]. One rounding at the very end — results are
+//!   bit-exact against the [`testkit::rational`] reference, and the
+//!   in-register Fast-tier kernels are bit-identical to the limb quire.
 //! * [`pool`] — the crate-level worker pool: one persistent set of
 //!   workers ([`pool::global`]) behind every parallel batch path, instead
 //!   of per-call scoped thread spawning.
@@ -52,7 +61,7 @@
 //!   property-testing harnesses (criterion / proptest are unavailable in
 //!   the offline build environment). The bench side is a full subsystem:
 //!   structured JSON reports, committed `BENCH_<suite>.json` baselines,
-//!   and a threshold-based regression gate shared by all ten bench
+//!   and a threshold-based regression gate shared by all eleven bench
 //!   targets and the `posit-div bench` subcommand (EXPERIMENTS.md §Perf).
 //!
 //! ## Quickstart
@@ -104,6 +113,7 @@ pub mod hardware;
 pub mod pool;
 pub mod posit;
 pub mod prelude;
+pub mod quire;
 pub mod runtime;
 pub mod testkit;
 pub mod unit;

@@ -22,7 +22,9 @@ subcommands:
   sqrt <v> [--n N] [--bits] [--tier T]              one square root, all metadata
   verify [--n N] [--cases N]                        engines + fast tier vs golden cross-check
   serve [--n N] [--backend native|pjrt] [--requests N] [--batch N] [--threads N]
-        [--mix div:6,sqrt:2,mul:4,...] [--tier T]   serve division or mixed-op traffic
+        [--mix div:6,sqrt:2,dot:2,fsum:1,axpy:1,...]
+        [--tier T]                                  serve division or mixed-op traffic
+                                                    (dot/fsum/axpy = quire reductions)
   engines                                           list algorithm variants
   bench <suite> [--json P] [--baseline P] [--write-baseline] [--quick|--full]
         [--threshold PCT] [--advisory] [--tier T]   run a bench suite + regression gate
@@ -268,7 +270,7 @@ fn cmd_serve(args: &Args) {
     let threads: usize = args.get("threads", 4);
     let mix = args.flag("mix").map(|s| {
         OpMix::parse(s).unwrap_or_else(|| {
-            eprintln!("invalid --mix {s:?} (expected e.g. div:6,sqrt:2,mul:4)");
+            eprintln!("invalid --mix {s:?} (expected e.g. div:6,sqrt:2,mul:4,dot:2,fsum:1,axpy:1)");
             std::process::exit(2);
         })
     });

@@ -28,4 +28,5 @@ pub use crate::division::{Algorithm, DivEngine, Division};
 pub use crate::error::{PositError, Result};
 pub use crate::pool::Pool;
 pub use crate::posit::{Posit, RoundFrom, RoundInto, P16, P32, P64, P8};
+pub use crate::quire::{axpy, dot, fused_sum, gemm, Quire};
 pub use crate::unit::{ExecTier, FastPath, Op, OpRequest, Unit};

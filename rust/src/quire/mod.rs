@@ -1,0 +1,653 @@
+//! The posit-standard **quire**: a width-parameterized fixed-point
+//! accumulator wide enough to hold any sum of posit products *exactly*,
+//! deferring the single rounding to the final posit conversion.
+//!
+//! For posit⟨n, es=2⟩ the extreme product magnitudes are `maxpos²` =
+//! 2^(8(n−2)) and `minpos²` = 2^(−8(n−2)), so an accumulator whose LSB
+//! weighs 2^QMIN with QMIN = −(8(n−2) + 2·fb) (fb = fraction bits)
+//! represents every product of two reals as an *integer* multiple of its
+//! LSB. [`Quire`] backs that integer with a small LSB-first two's
+//! complement `u64` limb vector of 2n² bits (128 / 512 / 2048 bits for
+//! P8 / P16 / P32, clamped to ≥ 128 so the narrow widths keep product
+//! range plus headroom), leaving ≥ 23 carry-headroom bits above the
+//! widest product — millions of accumulations before wraparound.
+//!
+//! Exactness contract: for inputs free of NaR, [`Quire::to_posit`] after
+//! any sequence of [`Quire::add_product`] / [`Quire::add_posit`] calls
+//! within the headroom budget equals the exact rational sum rounded once
+//! to nearest-even in pattern space — bit-identical to the independent
+//! bignum-rational golden in [`crate::testkit::rational`]. In particular
+//! the result is invariant under permutation of the accumulation order,
+//! which no fold of individually-rounded posit ops can promise.
+//!
+//! NaR latches: accumulating anything involving NaR poisons the quire and
+//! `to_posit` returns NaR, matching the standard's quire semantics.
+//!
+//! The free functions [`dot`], [`fused_sum`], [`axpy`] and the blocked
+//! [`gemm`] are the workload-facing reductions; the serving layer reaches
+//! them through `Op::Dot` / `Op::FusedSum` / `Op::Axpy` on
+//! [`crate::unit::Unit`] and the coordinator client.
+
+use crate::error::{PositError, Result};
+use crate::posit::round::encode_round;
+use crate::posit::{frac_bits, Posit, Unpacked, MAX_N, MIN_N};
+
+/// Weight (base-2 exponent) of the quire's least-significant bit:
+/// `minpos² = 2^QMIN · 2^(2·fb)`'s lowest product bit lands exactly here.
+fn qmin(n: u32) -> i32 {
+    -(8 * (n as i32 - 2) + 2 * frac_bits(n) as i32)
+}
+
+/// Limb count: 2n² bits per the 2^(n²/2) dynamic-range rule, clamped to
+/// two limbs so n < 8 still covers `maxpos²` plus a sign/carry margin.
+fn quire_limbs(n: u32) -> usize {
+    ((((2 * n * n) as usize) + 63) / 64).max(2)
+}
+
+/// Widths whose whole quire fits one `i128` register — the Fast tier's
+/// in-register accumulator is bit-identical there (same 128-bit two's
+/// complement wrap as the two-limb backing).
+pub(crate) fn fits_in_register(n: u32) -> bool {
+    quire_limbs(n) <= 2
+}
+
+/// A posit-standard exact accumulator for one posit width.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Quire {
+    n: u32,
+    nar: bool,
+    /// LSB-first two's complement limbs; bit k weighs 2^(QMIN + k).
+    limbs: Vec<u64>,
+}
+
+impl Quire {
+    /// A zeroed quire for posit width `n` (4..=64).
+    pub fn new(n: u32) -> Result<Quire> {
+        if !(MIN_N..=MAX_N).contains(&n) {
+            return Err(PositError::WidthOutOfRange { n });
+        }
+        Ok(Quire { n, nar: false, limbs: vec![0; quire_limbs(n)] })
+    }
+
+    /// The posit width this quire accumulates.
+    pub fn width(&self) -> u32 {
+        self.n
+    }
+
+    /// Total accumulator width in bits.
+    pub fn bits(&self) -> u32 {
+        64 * self.limbs.len() as u32
+    }
+
+    /// Reset to exact zero (also clears a latched NaR).
+    pub fn clear(&mut self) {
+        self.nar = false;
+        self.limbs.fill(0);
+    }
+
+    /// True once any NaR operand has been accumulated.
+    pub fn is_nar(&self) -> bool {
+        self.nar
+    }
+
+    /// True when the accumulator holds exact zero (and no NaR).
+    pub fn is_zero(&self) -> bool {
+        !self.nar && self.limbs.iter().all(|&w| w == 0)
+    }
+
+    /// Accumulate the exact product `a · b` (no rounding). NaR operands
+    /// latch NaR; zero operands are no-ops.
+    pub fn add_product(&mut self, a: Posit, b: Posit) {
+        assert_eq!(a.width(), self.n, "quire width mismatch");
+        assert_eq!(b.width(), self.n, "quire width mismatch");
+        match (a.unpack(), b.unpack()) {
+            (Unpacked::NaR, _) | (_, Unpacked::NaR) => self.nar = true,
+            (Unpacked::Zero, _) | (_, Unpacked::Zero) => {}
+            (Unpacked::Real(da), Unpacked::Real(db)) => {
+                let fb = frac_bits(self.n) as i32;
+                let mag = (da.sig as u128) * (db.sig as u128);
+                let shift = (da.scale + db.scale - 2 * fb - qmin(self.n)) as u32;
+                self.accumulate(mag, shift, da.sign ^ db.sign);
+            }
+        }
+    }
+
+    /// Accumulate the posit value itself, exactly.
+    pub fn add_posit(&mut self, p: Posit) {
+        assert_eq!(p.width(), self.n, "quire width mismatch");
+        match p.unpack() {
+            Unpacked::NaR => self.nar = true,
+            Unpacked::Zero => {}
+            Unpacked::Real(d) => {
+                let fb = frac_bits(self.n) as i32;
+                let shift = (d.scale - fb - qmin(self.n)) as u32;
+                self.accumulate(d.sig as u128, shift, d.sign);
+            }
+        }
+    }
+
+    /// Accumulate `-p`, exactly (posit negation is exact).
+    pub fn sub_posit(&mut self, p: Posit) {
+        self.add_posit(p.neg());
+    }
+
+    fn accumulate(&mut self, mag: u128, shift: u32, negative: bool) {
+        let li = (shift / 64) as usize;
+        let words = shifted_words(mag, shift % 64);
+        if negative {
+            self.sub_words(li, words);
+        } else {
+            self.add_words(li, words);
+        }
+    }
+
+    fn add_words(&mut self, li: usize, words: [u64; 3]) {
+        let len = self.limbs.len();
+        let mut carry = 0u64;
+        for (k, w) in words.into_iter().enumerate() {
+            if li + k >= len {
+                break; // in-range posit data never lands here (headroom)
+            }
+            let (s1, c1) = self.limbs[li + k].overflowing_add(w);
+            let (s2, c2) = s1.overflowing_add(carry);
+            self.limbs[li + k] = s2;
+            carry = (c1 | c2) as u64;
+        }
+        let mut i = li + 3;
+        while carry != 0 && i < len {
+            let (s, c) = self.limbs[i].overflowing_add(carry);
+            self.limbs[i] = s;
+            carry = c as u64;
+            i += 1;
+        }
+        // a carry off the top wraps, like the hardware register would
+    }
+
+    fn sub_words(&mut self, li: usize, words: [u64; 3]) {
+        let len = self.limbs.len();
+        let mut borrow = 0u64;
+        for (k, w) in words.into_iter().enumerate() {
+            if li + k >= len {
+                break;
+            }
+            let (d1, b1) = self.limbs[li + k].overflowing_sub(w);
+            let (d2, b2) = d1.overflowing_sub(borrow);
+            self.limbs[li + k] = d2;
+            borrow = (b1 | b2) as u64;
+        }
+        let mut i = li + 3;
+        while borrow != 0 && i < len {
+            let (d, b) = self.limbs[i].overflowing_sub(borrow);
+            self.limbs[i] = d;
+            borrow = b as u64;
+            i += 1;
+        }
+    }
+
+    /// The single rounding: convert the exact fixed-point value to the
+    /// nearest posit (ties to even in pattern space), NaR if latched.
+    pub fn to_posit(&self) -> Posit {
+        if self.nar {
+            return Posit::nar(self.n);
+        }
+        let negative = self.limbs.last().copied().unwrap_or(0) >> 63 == 1;
+        let storage;
+        let mag: &[u64] = if negative {
+            storage = negate_limbs(&self.limbs);
+            &storage
+        } else {
+            &self.limbs
+        };
+        let Some(top) = mag.iter().rposition(|&w| w != 0) else {
+            return Posit::zero(self.n);
+        };
+        // global index of the most significant set bit
+        let g = top as u32 * 64 + (63 - mag[top].leading_zeros());
+        // a ≤127-bit window below it; everything lower folds into sticky
+        let lo = g.saturating_sub(126);
+        let sig = bit_range(mag, lo, g);
+        let sticky = any_bit_below(mag, lo);
+        encode_round(self.n, negative, qmin(self.n) + g as i32, sig, g - lo, sticky)
+    }
+}
+
+/// `mag << off` (off < 64) spread over three 64-bit words, LSB-first.
+fn shifted_words(mag: u128, off: u32) -> [u64; 3] {
+    let lo = mag as u64;
+    let hi = (mag >> 64) as u64;
+    if off == 0 {
+        [lo, hi, 0]
+    } else {
+        [lo << off, (lo >> (64 - off)) | (hi << off), hi >> (64 - off)]
+    }
+}
+
+/// Two's complement negation of an LSB-first limb vector.
+fn negate_limbs(limbs: &[u64]) -> Vec<u64> {
+    let mut out = Vec::with_capacity(limbs.len());
+    let mut carry = 1u64;
+    for &w in limbs {
+        let (v, c) = (!w).overflowing_add(carry);
+        out.push(v);
+        carry = c as u64;
+    }
+    out
+}
+
+/// Bits `lo..=hi` of an LSB-first magnitude (hi − lo ≤ 126).
+fn bit_range(mag: &[u64], lo: u32, hi: u32) -> u128 {
+    let mut v: u128 = 0;
+    for i in (lo / 64) as usize..=(hi / 64) as usize {
+        let base = i as u32 * 64;
+        let limb = mag[i] as u128;
+        if base >= lo {
+            v |= limb << (base - lo);
+        } else {
+            v |= limb >> (lo - base);
+        }
+    }
+    let width = hi - lo + 1;
+    if width < 128 {
+        v &= (1u128 << width) - 1;
+    }
+    v
+}
+
+/// True when any bit strictly below `lo` is set.
+fn any_bit_below(mag: &[u64], lo: u32) -> bool {
+    let limb = (lo / 64) as usize;
+    if mag[..limb].iter().any(|&w| w != 0) {
+        return true;
+    }
+    let rem = lo % 64;
+    rem > 0 && mag[limb] & ((1u64 << rem) - 1) != 0
+}
+
+fn check_lane(name: &'static str, len: usize, expected: usize) -> Result<()> {
+    if len != expected {
+        return Err(PositError::BatchLaneMismatch {
+            lane: name,
+            expected: expected.max(1),
+            got: len,
+        });
+    }
+    Ok(())
+}
+
+fn common_width(lanes: &[&[Posit]]) -> Result<u32> {
+    let mut width = None;
+    for lane in lanes {
+        for p in *lane {
+            match width {
+                None => width = Some(p.width()),
+                Some(w) if p.width() != w => {
+                    return Err(PositError::WidthMismatch { expected: w, got: p.width() })
+                }
+                _ => {}
+            }
+        }
+    }
+    width.ok_or(PositError::BatchLaneMismatch { lane: "a", expected: 1, got: 0 })
+}
+
+/// Exact dot product: `round(Σ aᵢ·bᵢ)` with one final rounding.
+pub fn dot(a: &[Posit], b: &[Posit]) -> Result<Posit> {
+    check_lane("b", b.len(), a.len())?;
+    let n = common_width(&[a, b])?;
+    let mut q = Quire::new(n)?;
+    for (&x, &y) in a.iter().zip(b) {
+        q.add_product(x, y);
+    }
+    Ok(q.to_posit())
+}
+
+/// Exact sum: `round(Σ xᵢ)` with one final rounding — permutation
+/// invariant, unlike a fold of rounded `add`s.
+pub fn fused_sum(xs: &[Posit]) -> Result<Posit> {
+    let n = common_width(&[xs])?;
+    let mut q = Quire::new(n)?;
+    for &x in xs {
+        q.add_posit(x);
+    }
+    Ok(q.to_posit())
+}
+
+/// Exact fused `round(Σᵢ (α·xᵢ + yᵢ))`: the scaled vector and the added
+/// vector accumulate in one quire, one final rounding.
+pub fn axpy(alpha: Posit, xs: &[Posit], ys: &[Posit]) -> Result<Posit> {
+    check_lane("b", ys.len(), xs.len())?;
+    let n = common_width(&[&[alpha], xs, ys])?;
+    if xs.is_empty() {
+        return Err(PositError::BatchLaneMismatch { lane: "a", expected: 1, got: 0 });
+    }
+    let mut q = Quire::new(n)?;
+    for (&x, &y) in xs.iter().zip(ys) {
+        q.add_product(alpha, x);
+        q.add_posit(y);
+    }
+    Ok(q.to_posit())
+}
+
+/// Blocked quire GEMM: row-major `a` (m×k) times row-major `b` (k×p),
+/// each output entry one exact quire dot (a single rounding per entry).
+/// Column tiles of `b` share a strip of persistent quires across the k
+/// loop so the inner walk stays sequential in both operands.
+pub fn gemm(a: &[Posit], b: &[Posit], m: usize, k: usize, p: usize) -> Result<Vec<Posit>> {
+    check_lane("a", a.len(), m * k)?;
+    check_lane("b", b.len(), k * p)?;
+    let n = common_width(&[a, b])?;
+    const JB: usize = 8;
+    let mut out = vec![Posit::zero(n); m * p];
+    let mut tile: Vec<Quire> = (0..JB).map(|_| Quire::new(n)).collect::<Result<_>>()?;
+    for j0 in (0..p).step_by(JB) {
+        let jw = JB.min(p - j0);
+        for i in 0..m {
+            for q in tile.iter_mut().take(jw) {
+                q.clear();
+            }
+            for t in 0..k {
+                let av = a[i * k + t];
+                for (jj, q) in tile.iter_mut().take(jw).enumerate() {
+                    q.add_product(av, b[t * p + j0 + jj]);
+                }
+            }
+            for (jj, q) in tile.iter().take(jw).enumerate() {
+                out[i * p + j0 + jj] = q.to_posit();
+            }
+        }
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// Bit-level kernels for the serving tiers (`unit.rs`). The register
+// variants keep the whole quire in one i128 — valid exactly when the limb
+// backing is two words, so wraparound semantics stay bit-identical.
+
+fn nar_bits(n: u32) -> u64 {
+    1u64 << (n - 1)
+}
+
+fn i128_fixed_to_bits(n: u32, acc: i128) -> u64 {
+    if acc == 0 {
+        return 0;
+    }
+    let negative = acc < 0;
+    let mag = acc.unsigned_abs();
+    let msb = 127 - mag.leading_zeros();
+    let (sig, sfb, sticky) = if msb == 127 {
+        (mag >> 1, 126, mag & 1 != 0)
+    } else {
+        (mag, msb, false)
+    };
+    encode_round(n, negative, qmin(n) + msb as i32, sig, sfb, sticky).to_bits()
+}
+
+/// In-register dot kernel (n with a two-limb quire only).
+fn dot_bits_reg(n: u32, a: &[u64], b: &[u64]) -> u64 {
+    debug_assert!(fits_in_register(n));
+    let fb = frac_bits(n) as i32;
+    let qm = qmin(n);
+    let mut acc: i128 = 0;
+    for (&ab, &bb) in a.iter().zip(b) {
+        let (pa, pb) = (Posit::from_bits(n, ab), Posit::from_bits(n, bb));
+        match (pa.unpack(), pb.unpack()) {
+            (Unpacked::NaR, _) | (_, Unpacked::NaR) => return nar_bits(n),
+            (Unpacked::Zero, _) | (_, Unpacked::Zero) => {}
+            (Unpacked::Real(da), Unpacked::Real(db)) => {
+                let mag = (da.sig as u128 * db.sig as u128) as i128;
+                let v = mag.wrapping_shl((da.scale + db.scale - 2 * fb - qm) as u32);
+                acc = acc.wrapping_add(if da.sign ^ db.sign { v.wrapping_neg() } else { v });
+            }
+        }
+    }
+    i128_fixed_to_bits(n, acc)
+}
+
+fn fused_sum_bits_reg(n: u32, xs: &[u64]) -> u64 {
+    debug_assert!(fits_in_register(n));
+    let fb = frac_bits(n) as i32;
+    let qm = qmin(n);
+    let mut acc: i128 = 0;
+    for &xb in xs {
+        match Posit::from_bits(n, xb).unpack() {
+            Unpacked::NaR => return nar_bits(n),
+            Unpacked::Zero => {}
+            Unpacked::Real(d) => {
+                let v = (d.sig as i128).wrapping_shl((d.scale - fb - qm) as u32);
+                acc = acc.wrapping_add(if d.sign { v.wrapping_neg() } else { v });
+            }
+        }
+    }
+    i128_fixed_to_bits(n, acc)
+}
+
+/// Datapath-tier dot: the limb quire, any width.
+pub(crate) fn dot_bits(n: u32, a: &[u64], b: &[u64]) -> u64 {
+    let mut q = Quire::new(n).expect("unit widths are validated");
+    for (&ab, &bb) in a.iter().zip(b) {
+        q.add_product(Posit::from_bits(n, ab), Posit::from_bits(n, bb));
+    }
+    q.to_posit().to_bits()
+}
+
+pub(crate) fn fused_sum_bits(n: u32, xs: &[u64]) -> u64 {
+    let mut q = Quire::new(n).expect("unit widths are validated");
+    for &xb in xs {
+        q.add_posit(Posit::from_bits(n, xb));
+    }
+    q.to_posit().to_bits()
+}
+
+pub(crate) fn axpy_bits(n: u32, alpha: u64, xs: &[u64], ys: &[u64]) -> u64 {
+    let pa = Posit::from_bits(n, alpha);
+    let mut q = Quire::new(n).expect("unit widths are validated");
+    for (&xb, &yb) in xs.iter().zip(ys) {
+        q.add_product(pa, Posit::from_bits(n, xb));
+        q.add_posit(Posit::from_bits(n, yb));
+    }
+    q.to_posit().to_bits()
+}
+
+/// Fast-tier dot: in-register accumulator where the quire fits one
+/// `i128`, otherwise the same limb walk (bit-identical either way).
+pub(crate) fn dot_bits_fast(n: u32, a: &[u64], b: &[u64]) -> u64 {
+    if fits_in_register(n) {
+        dot_bits_reg(n, a, b)
+    } else {
+        dot_bits(n, a, b)
+    }
+}
+
+pub(crate) fn fused_sum_bits_fast(n: u32, xs: &[u64]) -> u64 {
+    if fits_in_register(n) {
+        fused_sum_bits_reg(n, xs)
+    } else {
+        fused_sum_bits(n, xs)
+    }
+}
+
+pub(crate) fn axpy_bits_fast(n: u32, alpha: u64, xs: &[u64], ys: &[u64]) -> u64 {
+    if fits_in_register(n) {
+        let fb = frac_bits(n) as i32;
+        let qm = qmin(n);
+        let pa = Posit::from_bits(n, alpha);
+        if pa.is_nar() {
+            return nar_bits(n);
+        }
+        let mut acc: i128 = 0;
+        for (&xb, &yb) in xs.iter().zip(ys) {
+            let (px, py) = (Posit::from_bits(n, xb), Posit::from_bits(n, yb));
+            if px.is_nar() || py.is_nar() {
+                return nar_bits(n);
+            }
+            if !pa.is_zero() && !px.is_zero() {
+                let (da, dx) = (pa.decode(), px.decode());
+                let mag = (da.sig as u128 * dx.sig as u128) as i128;
+                let v = mag.wrapping_shl((da.scale + dx.scale - 2 * fb - qm) as u32);
+                acc = acc.wrapping_add(if da.sign ^ dx.sign { v.wrapping_neg() } else { v });
+            }
+            if !py.is_zero() {
+                let d = py.decode();
+                let v = (d.sig as i128).wrapping_shl((d.scale - fb - qm) as u32);
+                acc = acc.wrapping_add(if d.sign { v.wrapping_neg() } else { v });
+            }
+        }
+        i128_fixed_to_bits(n, acc)
+    } else {
+        axpy_bits(n, alpha, xs, ys)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::posit::mask;
+    use crate::testkit::Rng;
+
+    #[test]
+    fn quire_geometry_matches_the_standard() {
+        for (n, bits) in [(8u32, 128u32), (16, 512), (32, 2048)] {
+            assert_eq!(Quire::new(n).unwrap().bits(), bits);
+        }
+        // narrow widths clamp to two limbs, still covering maxpos²
+        assert_eq!(Quire::new(4).unwrap().bits(), 128);
+        assert!(Quire::new(3).is_err());
+        assert!(Quire::new(65).is_err());
+        assert!(fits_in_register(8) && !fits_in_register(9));
+    }
+
+    #[test]
+    fn single_values_round_trip_exactly() {
+        for n in [8u32, 16, 32] {
+            for bits in 0..=mask(8) {
+                let p = Posit::from_bits(n, bits);
+                let mut q = Quire::new(n).unwrap();
+                q.add_posit(p);
+                assert_eq!(q.to_posit(), p, "n={n} bits={bits:#x}");
+                // and one·p as a product
+                q.clear();
+                q.add_product(Posit::one(n), p);
+                assert_eq!(q.to_posit(), p, "n={n} 1*{bits:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn exact_cancellation_and_nar_latching() {
+        let n = 16;
+        let mut q = Quire::new(n).unwrap();
+        let x = Posit::from_f64(n, 1.5);
+        let y = Posit::from_f64(n, -123.25);
+        q.add_posit(x);
+        q.add_posit(y);
+        q.sub_posit(y);
+        q.sub_posit(x);
+        assert!(q.is_zero());
+        assert_eq!(q.to_posit(), Posit::zero(n));
+        q.add_posit(Posit::nar(n));
+        assert!(q.is_nar() && q.to_posit().is_nar());
+        q.clear();
+        assert!(q.is_zero());
+    }
+
+    #[test]
+    fn extreme_products_stay_in_range() {
+        for n in [4u32, 8, 16, 32] {
+            let maxpos = Posit::maxpos(n);
+            let minpos = Posit::minpos(n);
+            let mut q = Quire::new(n).unwrap();
+            q.add_product(maxpos, maxpos);
+            // maxpos² saturates back to maxpos on rounding
+            assert_eq!(q.to_posit(), maxpos, "n={n}");
+            q.clear();
+            q.add_product(minpos, minpos);
+            // minpos² is below minpos; posit rounding never hits zero
+            assert_eq!(q.to_posit(), minpos, "n={n}");
+            q.clear();
+            q.add_product(maxpos, maxpos);
+            q.add_product(maxpos.neg(), maxpos);
+            assert!(q.is_zero(), "n={n}: exact cancellation of maxpos²");
+        }
+    }
+
+    #[test]
+    fn dot_is_permutation_invariant_and_fold_is_not_promised() {
+        let n = 16;
+        let mut rng = Rng::seeded(0xD07);
+        for _ in 0..200 {
+            let k = 3 + rng.below(8) as usize;
+            let mut a: Vec<Posit> = (0..k)
+                .map(|_| Posit::from_bits(n, rng.next_u64() & mask(n)))
+                .filter(|p| !p.is_nar())
+                .collect();
+            while a.len() < k {
+                a.push(Posit::one(n));
+            }
+            let b: Vec<Posit> = a.iter().rev().copied().collect();
+            let fwd = dot(&a, &b).unwrap();
+            let mut ar: Vec<Posit> = a.clone();
+            let mut br: Vec<Posit> = b.clone();
+            ar.reverse();
+            br.reverse();
+            assert_eq!(fwd, dot(&ar, &br).unwrap());
+        }
+    }
+
+    #[test]
+    fn register_kernels_match_limb_kernels() {
+        let n = 8;
+        let mut rng = Rng::seeded(0x2E6);
+        for _ in 0..500 {
+            let k = 1 + rng.below(12) as usize;
+            let a: Vec<u64> = (0..k).map(|_| rng.next_u64() & mask(n)).collect();
+            let b: Vec<u64> = (0..k).map(|_| rng.next_u64() & mask(n)).collect();
+            let alpha = rng.next_u64() & mask(n);
+            assert_eq!(dot_bits_fast(n, &a, &b), dot_bits(n, &a, &b));
+            assert_eq!(fused_sum_bits_fast(n, &a), fused_sum_bits(n, &a));
+            assert_eq!(axpy_bits_fast(n, alpha, &a, &b), axpy_bits(n, alpha, &a, &b));
+        }
+    }
+
+    #[test]
+    fn reduction_shape_errors_are_typed() {
+        let n = 16;
+        let one = Posit::one(n);
+        assert!(matches!(
+            dot(&[one, one], &[one]),
+            Err(PositError::BatchLaneMismatch { lane: "b", expected: 2, got: 1 })
+        ));
+        assert!(matches!(
+            fused_sum(&[]),
+            Err(PositError::BatchLaneMismatch { lane: "a", .. })
+        ));
+        assert!(matches!(
+            dot(&[one], &[Posit::one(8)]),
+            Err(PositError::WidthMismatch { expected: 16, got: 8 })
+        ));
+    }
+
+    #[test]
+    fn gemm_entries_are_quire_dots() {
+        let n = 16;
+        let mut rng = Rng::seeded(0x6E);
+        let (m, k, p) = (3usize, 17usize, 11usize);
+        let real = |rng: &mut Rng| loop {
+            let p = Posit::from_bits(n, rng.next_u64() & mask(n));
+            if !p.is_nar() {
+                return p;
+            }
+        };
+        let a: Vec<Posit> = (0..m * k).map(|_| real(&mut rng)).collect();
+        let b: Vec<Posit> = (0..k * p).map(|_| real(&mut rng)).collect();
+        let c = gemm(&a, &b, m, k, p).unwrap();
+        for i in 0..m {
+            for j in 0..p {
+                let row: Vec<Posit> = (0..k).map(|t| a[i * k + t]).collect();
+                let col: Vec<Posit> = (0..k).map(|t| b[t * p + j]).collect();
+                assert_eq!(c[i * p + j], dot(&row, &col).unwrap(), "({i},{j})");
+            }
+        }
+        assert!(gemm(&a, &b, m, k + 1, p).is_err());
+    }
+}

@@ -6,6 +6,7 @@
 //! ([`forall`]), and posit-aware generators ([`gen`]).
 
 pub mod gen;
+pub mod rational;
 
 /// SplitMix64 PRNG — tiny, fast, full-period, deterministic across
 /// platforms. Good enough statistical quality for test-case generation and

@@ -1,0 +1,438 @@
+//! Exact-rational reduction golden: an arbitrary-precision dyadic model
+//! (`Σ ±sig·2^e` held in a tiny sign-magnitude bignum) plus a
+//! pattern-space nearest rounding that is **independent of the encode
+//! path** — no floats, no `encode_round`, no quire. The reduction
+//! references here ([`dot`], [`fused_sum`], [`axpy`]) are what the quire
+//! subsystem and both serving tiers are gated against, exhaustively at
+//! Posit8 and under seeded sweeps at wider widths.
+//!
+//! Every posit value is dyadic (±sig · 2^(scale − fb)), so any finite sum
+//! of posit products is dyadic too and [`Dyadic`] represents it exactly.
+//! Rounding mirrors `golden::verify_nearest`'s structure — binary-search
+//! the floor pattern, compare against the exact midpoint of the two
+//! candidate posits, break ties to the even pattern — but with bignum
+//! comparisons instead of clamped `i128` shifts, so it also covers the
+//! wide exponent spans a quire sum can reach at any standard width.
+
+use crate::posit::{frac_bits, mask, Posit, Unpacked};
+use std::cmp::Ordering;
+
+/// Minimal sign-magnitude big integer: LSB-first `u64` limbs, trimmed,
+/// with zero canonically `{ neg: false, mag: [] }`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BigInt {
+    neg: bool,
+    mag: Vec<u64>,
+}
+
+impl BigInt {
+    pub fn zero() -> BigInt {
+        BigInt { neg: false, mag: Vec::new() }
+    }
+
+    pub fn from_u128(v: u128) -> BigInt {
+        let mut mag = vec![v as u64, (v >> 64) as u64];
+        trim(&mut mag);
+        BigInt { neg: false, mag }
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.mag.is_empty()
+    }
+
+    pub fn negated(mut self) -> BigInt {
+        if !self.is_zero() {
+            self.neg = !self.neg;
+        }
+        self
+    }
+
+    /// `self · 2^k`.
+    pub fn shl(&self, k: u32) -> BigInt {
+        if self.is_zero() {
+            return BigInt::zero();
+        }
+        let limbs = (k / 64) as usize;
+        let bits = k % 64;
+        let mut mag = vec![0u64; limbs];
+        if bits == 0 {
+            mag.extend_from_slice(&self.mag);
+        } else {
+            let mut carry = 0u64;
+            for &w in &self.mag {
+                mag.push((w << bits) | carry);
+                carry = w >> (64 - bits);
+            }
+            if carry != 0 {
+                mag.push(carry);
+            }
+        }
+        BigInt { neg: self.neg, mag }
+    }
+
+    pub fn add(&self, other: &BigInt) -> BigInt {
+        if self.is_zero() {
+            return other.clone();
+        }
+        if other.is_zero() {
+            return self.clone();
+        }
+        if self.neg == other.neg {
+            return BigInt { neg: self.neg, mag: mag_add(&self.mag, &other.mag) };
+        }
+        match mag_cmp(&self.mag, &other.mag) {
+            Ordering::Equal => BigInt::zero(),
+            Ordering::Greater => {
+                BigInt { neg: self.neg, mag: mag_sub(&self.mag, &other.mag) }
+            }
+            Ordering::Less => BigInt { neg: other.neg, mag: mag_sub(&other.mag, &self.mag) },
+        }
+    }
+
+    /// Signed comparison.
+    pub fn cmp_value(&self, other: &BigInt) -> Ordering {
+        match (self.is_zero() || !self.neg, other.is_zero() || !other.neg) {
+            (true, false) => Ordering::Greater,
+            (false, true) => Ordering::Less,
+            (true, true) => mag_cmp(&self.mag, &other.mag),
+            (false, false) => mag_cmp(&other.mag, &self.mag),
+        }
+    }
+}
+
+fn trim(mag: &mut Vec<u64>) {
+    while mag.last() == Some(&0) {
+        mag.pop();
+    }
+}
+
+fn mag_cmp(a: &[u64], b: &[u64]) -> Ordering {
+    if a.len() != b.len() {
+        return a.len().cmp(&b.len());
+    }
+    for i in (0..a.len()).rev() {
+        if a[i] != b[i] {
+            return a[i].cmp(&b[i]);
+        }
+    }
+    Ordering::Equal
+}
+
+fn mag_add(a: &[u64], b: &[u64]) -> Vec<u64> {
+    let mut out = Vec::with_capacity(a.len().max(b.len()) + 1);
+    let mut carry = 0u64;
+    for i in 0..a.len().max(b.len()) {
+        let x = a.get(i).copied().unwrap_or(0);
+        let y = b.get(i).copied().unwrap_or(0);
+        let (s1, c1) = x.overflowing_add(y);
+        let (s2, c2) = s1.overflowing_add(carry);
+        out.push(s2);
+        carry = (c1 | c2) as u64;
+    }
+    if carry != 0 {
+        out.push(carry);
+    }
+    out
+}
+
+/// `a − b` for `a ≥ b` (magnitudes).
+fn mag_sub(a: &[u64], b: &[u64]) -> Vec<u64> {
+    let mut out = Vec::with_capacity(a.len());
+    let mut borrow = 0u64;
+    for i in 0..a.len() {
+        let y = b.get(i).copied().unwrap_or(0);
+        let (d1, b1) = a[i].overflowing_sub(y);
+        let (d2, b2) = d1.overflowing_sub(borrow);
+        out.push(d2);
+        borrow = (b1 | b2) as u64;
+    }
+    debug_assert_eq!(borrow, 0, "mag_sub requires a >= b");
+    trim(&mut out);
+    out
+}
+
+/// An exact dyadic rational `num · 2^exp`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Dyadic {
+    pub num: BigInt,
+    pub exp: i32,
+}
+
+impl Dyadic {
+    pub fn zero() -> Dyadic {
+        Dyadic { num: BigInt::zero(), exp: 0 }
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.num.is_zero()
+    }
+
+    pub fn is_negative(&self) -> bool {
+        !self.num.is_zero() && self.num.neg
+    }
+
+    /// The exact value of a non-NaR posit (zero included).
+    pub fn from_posit(p: Posit) -> Option<Dyadic> {
+        match p.unpack() {
+            Unpacked::NaR => None,
+            Unpacked::Zero => Some(Dyadic::zero()),
+            Unpacked::Real(d) => {
+                let mut num = BigInt::from_u128(d.sig as u128);
+                if d.sign {
+                    num = num.negated();
+                }
+                Some(Dyadic { num, exp: d.scale - frac_bits(p.width()) as i32 })
+            }
+        }
+    }
+
+    /// The exact product of two non-NaR posits.
+    pub fn product(a: Posit, b: Posit) -> Option<Dyadic> {
+        match (a.unpack(), b.unpack()) {
+            (Unpacked::NaR, _) | (_, Unpacked::NaR) => None,
+            (Unpacked::Zero, _) | (_, Unpacked::Zero) => Some(Dyadic::zero()),
+            (Unpacked::Real(da), Unpacked::Real(db)) => {
+                let mut num = BigInt::from_u128(da.sig as u128 * db.sig as u128);
+                if da.sign ^ db.sign {
+                    num = num.negated();
+                }
+                let fb = frac_bits(a.width()) as i32;
+                Some(Dyadic { num, exp: da.scale + db.scale - 2 * fb })
+            }
+        }
+    }
+
+    pub fn add(&self, other: &Dyadic) -> Dyadic {
+        if self.is_zero() {
+            return other.clone();
+        }
+        if other.is_zero() {
+            return self.clone();
+        }
+        let exp = self.exp.min(other.exp);
+        let a = self.num.shl((self.exp - exp) as u32);
+        let b = other.num.shl((other.exp - exp) as u32);
+        Dyadic { num: a.add(&b), exp }
+    }
+
+    pub fn cmp_value(&self, other: &Dyadic) -> Ordering {
+        let exp = self.exp.min(other.exp);
+        let a = self.num.shl((self.exp - exp) as u32);
+        let b = other.num.shl((other.exp - exp) as u32);
+        a.cmp_value(&b)
+    }
+
+    fn abs(&self) -> Dyadic {
+        let mut num = self.num.clone();
+        num.neg = false;
+        Dyadic { num, exp: self.exp }
+    }
+}
+
+/// Round an exact dyadic value to the nearest posit of width `n`:
+/// saturate outside [minpos, maxpos] (never to zero or NaR), otherwise
+/// nearest with ties to the even bit pattern — all comparisons exact.
+pub fn round_to_posit(n: u32, v: &Dyadic) -> Posit {
+    if v.is_zero() {
+        return Posit::zero(n);
+    }
+    let negative = v.is_negative();
+    let va = v.abs();
+    // positive patterns 1..=maxpat are monotone in value
+    let maxpat = mask(n - 1);
+    let pval = |t: u64| Dyadic::from_posit(Posit::from_bits(n, t)).expect("positive pattern");
+    let signed = |t: u64| {
+        let p = Posit::from_bits(n, t);
+        if negative {
+            p.neg()
+        } else {
+            p
+        }
+    };
+    if va.cmp_value(&pval(1)) == Ordering::Less {
+        return signed(1); // below minpos rounds to minpos, never zero
+    }
+    if va.cmp_value(&pval(maxpat)) != Ordering::Less {
+        return signed(maxpat); // maxpos saturation
+    }
+    let (mut lo, mut hi) = (1u64, maxpat);
+    while hi - lo > 1 {
+        let mid = lo + (hi - lo) / 2;
+        if pval(mid).cmp_value(&va) != Ordering::Greater {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    // pval(lo) <= va < pval(hi); the midpoint is their exact average
+    let sum = pval(lo).add(&pval(hi));
+    let midpoint = Dyadic { num: sum.num, exp: sum.exp - 1 };
+    match va.cmp_value(&midpoint) {
+        Ordering::Less => signed(lo),
+        Ordering::Greater => signed(hi),
+        Ordering::Equal => signed(if lo & 1 == 0 { lo } else { hi }),
+    }
+}
+
+fn width_of(lanes: &[&[Posit]]) -> u32 {
+    lanes
+        .iter()
+        .flat_map(|l| l.iter())
+        .map(|p| p.width())
+        .next()
+        .expect("reduction golden needs at least one operand")
+}
+
+/// Exact-rational dot reference: `round(Σ aᵢ·bᵢ)`, NaR anywhere → NaR.
+pub fn dot(a: &[Posit], b: &[Posit]) -> Posit {
+    assert_eq!(a.len(), b.len(), "dot golden lanes must match");
+    let n = width_of(&[a, b]);
+    let mut sum = Dyadic::zero();
+    for (&x, &y) in a.iter().zip(b) {
+        match Dyadic::product(x, y) {
+            None => return Posit::nar(n),
+            Some(p) => sum = sum.add(&p),
+        }
+    }
+    round_to_posit(n, &sum)
+}
+
+/// Exact-rational sum reference: `round(Σ xᵢ)`, NaR anywhere → NaR.
+pub fn fused_sum(xs: &[Posit]) -> Posit {
+    let n = width_of(&[xs]);
+    let mut sum = Dyadic::zero();
+    for &x in xs {
+        match Dyadic::from_posit(x) {
+            None => return Posit::nar(n),
+            Some(v) => sum = sum.add(&v),
+        }
+    }
+    round_to_posit(n, &sum)
+}
+
+/// Exact-rational axpy reference: `round(Σᵢ (α·xᵢ + yᵢ))`.
+pub fn axpy(alpha: Posit, xs: &[Posit], ys: &[Posit]) -> Posit {
+    assert_eq!(xs.len(), ys.len(), "axpy golden lanes must match");
+    let n = alpha.width();
+    if alpha.is_nar() {
+        return Posit::nar(n);
+    }
+    let mut sum = Dyadic::zero();
+    for (&x, &y) in xs.iter().zip(ys) {
+        let (Some(p), Some(v)) = (Dyadic::product(alpha, x), Dyadic::from_posit(y)) else {
+            return Posit::nar(n);
+        };
+        sum = sum.add(&p.add(&v));
+    }
+    round_to_posit(n, &sum)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Rng;
+
+    #[test]
+    fn bigint_arithmetic_basics() {
+        let a = BigInt::from_u128(u128::MAX);
+        let b = BigInt::from_u128(1);
+        let sum = a.add(&b); // 2^128
+        assert_eq!(sum, BigInt::from_u128(1).shl(128));
+        assert_eq!(sum.add(&a.negated()), b);
+        assert_eq!(a.add(&a.clone().negated()), BigInt::zero());
+        assert_eq!(
+            BigInt::from_u128(5).cmp_value(&BigInt::from_u128(7).negated()),
+            Ordering::Greater
+        );
+        assert_eq!(BigInt::from_u128(3).shl(70).cmp_value(&BigInt::from_u128(3)), Ordering::Greater);
+    }
+
+    #[test]
+    fn every_posit_value_rounds_to_itself() {
+        // rounding an exact posit value must be the identity, for every
+        // Posit8 pattern and random wider patterns
+        for bits in 0..=mask(8) {
+            let p = Posit::from_bits(8, bits);
+            if p.is_nar() {
+                continue;
+            }
+            let v = Dyadic::from_posit(p).unwrap();
+            assert_eq!(round_to_posit(8, &v), p, "{bits:#04x}");
+        }
+        let mut rng = Rng::seeded(0x1D);
+        for n in [16u32, 32] {
+            for _ in 0..2000 {
+                let p = Posit::from_bits(n, rng.next_u64() & mask(n));
+                if p.is_nar() {
+                    continue;
+                }
+                let v = Dyadic::from_posit(p).unwrap();
+                assert_eq!(round_to_posit(n, &v), p, "n={n} {p:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn midpoint_ties_round_to_even_pattern() {
+        let n = 8;
+        let mut rng = Rng::seeded(0x7E);
+        for _ in 0..500 {
+            let t = 1 + rng.below(mask(n - 1) - 1);
+            let a = Posit::from_bits(n, t);
+            let b = Posit::from_bits(n, t + 1);
+            let sum = Dyadic::from_posit(a).unwrap().add(&Dyadic::from_posit(b).unwrap());
+            let mid = Dyadic { num: sum.num, exp: sum.exp - 1 };
+            let want = if t & 1 == 0 { a } else { b };
+            assert_eq!(round_to_posit(n, &mid), want, "tie between {t:#x} and its successor");
+            // and the negated tie mirrors exactly
+            assert_eq!(round_to_posit(n, &mid.add(&mid).add(&mid.clone().neg_test())), want);
+        }
+    }
+
+    impl Dyadic {
+        fn neg_test(self) -> Dyadic {
+            Dyadic { num: self.num.negated(), exp: self.exp }
+        }
+    }
+
+    #[test]
+    fn saturation_and_underflow_edges() {
+        let n = 16;
+        let two = Dyadic::from_posit(Posit::from_f64(n, 2.0)).unwrap();
+        let huge = Dyadic { num: two.num.clone().shl(4000), exp: two.exp };
+        assert_eq!(round_to_posit(n, &huge), Posit::maxpos(n));
+        assert_eq!(round_to_posit(n, &huge.neg_test()), Posit::maxpos(n).neg());
+        let tiny = Dyadic { num: two.num.clone(), exp: two.exp - 4000 };
+        assert_eq!(round_to_posit(n, &tiny), Posit::minpos(n));
+        assert_eq!(round_to_posit(n, &tiny.neg_test()), Posit::minpos(n).neg());
+    }
+
+    #[test]
+    fn reduction_references_match_scalar_ops_on_singletons() {
+        // a one-term dot is a correctly-rounded multiply; a one-term
+        // fused sum is the identity — cross-checks against arith.rs
+        let mut rng = Rng::seeded(0x90);
+        for n in [8u32, 16, 32] {
+            for _ in 0..2000 {
+                let a = Posit::from_bits(n, rng.next_u64() & mask(n));
+                let b = Posit::from_bits(n, rng.next_u64() & mask(n));
+                assert_eq!(dot(&[a], &[b]), a.mul(b), "n={n} {a:?}*{b:?}");
+                if !a.is_nar() {
+                    assert_eq!(fused_sum(&[a]), a);
+                }
+                assert_eq!(axpy(a, &[b], &[Posit::zero(n)]), a.mul(b), "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn nar_poisons_every_reference() {
+        let n = 16;
+        let one = Posit::one(n);
+        let nar = Posit::nar(n);
+        assert!(dot(&[one, nar], &[one, one]).is_nar());
+        assert!(fused_sum(&[one, nar]).is_nar());
+        assert!(axpy(nar, &[one], &[one]).is_nar());
+        assert!(axpy(one, &[one], &[nar]).is_nar());
+    }
+}

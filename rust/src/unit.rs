@@ -8,9 +8,12 @@
 //! that surface in software:
 //!
 //! * [`Op`] — the request model: `Div { alg }`, `Sqrt`, `Mul`, `Add`,
-//!   `Sub`, `MulAdd`.
-//! * [`OpRequest`] — one op plus its operands (arity 1–3), the unit of
-//!   traffic for the coordinator and the mixed workloads.
+//!   `Sub`, `MulAdd`, plus the quire-backed reductions `Dot`, `FusedSum`
+//!   and `Axpy` ([`crate::quire`]: slice operands, exact accumulation,
+//!   one rounding).
+//! * [`OpRequest`] — one op plus its operands (scalar lanes of arity
+//!   1–3, or vector lanes for the reductions), the unit of traffic for
+//!   the coordinator and the mixed workloads.
 //! * [`Unit`] — a reusable, zero-alloc execution context for one
 //!   `(width, op)` pair. Built once, it owns the concrete engine state
 //!   (enum dispatch, no heap indirection on the call path) and the
@@ -52,6 +55,8 @@ use crate::division::{
 };
 use crate::error::{PositError, Result};
 use crate::posit::{mask, Posit, MAX_N, MIN_N};
+use crate::quire;
+use crate::testkit::rational;
 
 /// Modeled pipeline cycles for the single-pass arithmetic ops: the
 /// decode/detect/encode cost of the special path ([`exec::SPECIAL_CYCLES`])
@@ -125,6 +130,17 @@ impl fmt::Display for ExecTier {
 /// | `Add` | `a + b` | 2 |
 /// | `Sub` | `a − b` | 2 |
 /// | `MulAdd` | `a · b + c` (mul+add, two roundings — not a quire) | 3 |
+///
+/// The **reduction ops** take vector lanes instead of scalar slots
+/// (`a`/`b` are equal-length slices, `c` the scalar coefficient) and
+/// accumulate in the posit-standard quire ([`crate::quire`]) — exact
+/// until one final rounding:
+///
+/// | op | result | lanes |
+/// |----|--------|-------|
+/// | `Dot` | `round(Σ aᵢ·bᵢ)` | 2 |
+/// | `FusedSum` | `round(Σ aᵢ)` | 1 |
+/// | `Axpy` | `round(Σᵢ (c·aᵢ + bᵢ))` | 3 |
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Op {
     /// Division through one of the paper's engines.
@@ -139,6 +155,12 @@ pub enum Op {
     Sub,
     /// Fused-style `a·b + c` built from mul+add (two roundings).
     MulAdd,
+    /// Quire dot product: `round(Σ aᵢ·bᵢ)`, one rounding total.
+    Dot,
+    /// Quire vector sum: `round(Σ aᵢ)`, permutation invariant.
+    FusedSum,
+    /// Quire fused scale-and-add: `round(Σᵢ (α·xᵢ + yᵢ))`.
+    Axpy,
 }
 
 impl Op {
@@ -146,22 +168,37 @@ impl Op {
     /// ([`Algorithm::DEFAULT`], SRT r4 CS OF FR).
     pub const DIV: Op = Op::Div { alg: Algorithm::DEFAULT };
 
-    /// One representative of every operation kind (division at the
-    /// default algorithm) — what "every op" sweeps iterate.
+    /// One representative of every *scalar* operation kind (division at
+    /// the default algorithm) — what "every op" sweeps iterate. The
+    /// reduction ops live in [`Op::REDUCTIONS`]; they take vector
+    /// operands, so sweeps drive them separately.
     pub const DEFAULTS: [Op; 6] = [Op::DIV, Op::Sqrt, Op::Mul, Op::Add, Op::Sub, Op::MulAdd];
 
-    /// Number of operands the op consumes.
+    /// The quire-backed reduction ops (vector operands, exact
+    /// accumulation, one rounding).
+    pub const REDUCTIONS: [Op; 3] = [Op::Dot, Op::FusedSum, Op::Axpy];
+
+    /// Number of operand lanes the op consumes (for the reductions these
+    /// are vector lanes: `Dot` reads `a`/`b`, `FusedSum` reads `a`,
+    /// `Axpy` reads `a`/`b` plus the scalar coefficient in `c`).
     #[inline]
     pub fn arity(self) -> usize {
         match self {
-            Op::Sqrt => 1,
-            Op::MulAdd => 3,
+            Op::Sqrt | Op::FusedSum => 1,
+            Op::MulAdd | Op::Axpy => 3,
             _ => 2,
         }
     }
 
+    /// True for the quire-backed vector-operand ops.
+    #[inline]
+    pub fn is_reduction(self) -> bool {
+        matches!(self, Op::Dot | Op::FusedSum | Op::Axpy)
+    }
+
     /// Stable short name of the operation kind (ignores the division
-    /// algorithm): `div`, `sqrt`, `mul`, `add`, `sub`, `mul_add`.
+    /// algorithm): `div`, `sqrt`, `mul`, `add`, `sub`, `mul_add`,
+    /// `dot`, `fsum`, `axpy`.
     pub fn name(self) -> &'static str {
         match self {
             Op::Div { .. } => "div",
@@ -170,6 +207,9 @@ impl Op {
             Op::Add => "add",
             Op::Sub => "sub",
             Op::MulAdd => "mul_add",
+            Op::Dot => "dot",
+            Op::FusedSum => "fsum",
+            Op::Axpy => "axpy",
         }
     }
 
@@ -182,12 +222,15 @@ impl Op {
     }
 
     /// The fast-tier kernel kind serving this op (the division algorithm
-    /// is irrelevant there: every engine is correctly rounded).
+    /// is irrelevant there: every engine is correctly rounded). The
+    /// reductions never execute through a [`FastKernel`] — they carry a
+    /// placeholder kind only so the kernel handle can be constructed;
+    /// their Fast tier is the in-register quire in [`crate::quire`].
     fn fast_kind(self) -> fastpath::Kind {
         match self {
             Op::Div { .. } => fastpath::Kind::Div,
             Op::Sqrt => fastpath::Kind::Sqrt,
-            Op::Mul => fastpath::Kind::Mul,
+            Op::Mul | Op::Dot | Op::FusedSum | Op::Axpy => fastpath::Kind::Mul,
             Op::Add => fastpath::Kind::Add,
             Op::Sub => fastpath::Kind::Sub,
             Op::MulAdd => fastpath::Kind::MulAdd,
@@ -204,20 +247,37 @@ impl fmt::Display for Op {
     }
 }
 
-/// One op-tagged scalar request: the operation plus its operands. The
+/// One op-tagged request: the operation plus its operands — three scalar
+/// slots for the scalar ops, vector lanes for the reductions. The
 /// traffic unit of the coordinator ([`crate::coordinator::Client`]) and
 /// the mixed workloads ([`crate::workload::MixedOps`]).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct OpRequest {
     pub op: Op,
+    operands: Operands,
+}
+
+/// Operand storage: the constructors guarantee internal consistency
+/// (equal widths, matched lane lengths, nonempty `a`), so holders of an
+/// `OpRequest` never need to re-validate its shape.
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum Operands {
     /// Fixed three slots; only the first [`Op::arity`] are meaningful
     /// (the rest are zero posits of the same width).
-    operands: [Posit; 3],
+    Scalar([Posit; 3]),
+    /// Reduction lanes: `a` (nonempty), `b` (same length, or empty when
+    /// the op ignores it) and the scalar coefficient `c` (zero when the
+    /// op ignores it).
+    Vector { a: Vec<Posit>, b: Vec<Posit>, c: Posit },
 }
 
 impl OpRequest {
     /// Build a request, checking arity and that all operands share one
-    /// width.
+    /// width. For scalar ops `operands` are the 1–3 operand lanes in
+    /// order; a reduction op here builds the single-element reduction
+    /// (`Dot`: `[a₀, b₀]`, `FusedSum`: `[x₀]`, `Axpy`: `[x₀, y₀, α]`) —
+    /// use [`OpRequest::dot`], [`OpRequest::fused_sum`] and
+    /// [`OpRequest::axpy`] to pass real slices.
     pub fn new(op: Op, operands: &[Posit]) -> Result<OpRequest> {
         if operands.len() != op.arity() {
             return Err(PositError::ArityMismatch {
@@ -232,18 +292,75 @@ impl OpRequest {
                 return Err(PositError::WidthMismatch { expected: w, got: p.width() });
             }
         }
-        let mut slots = [Posit::zero(w); 3];
-        slots[..operands.len()].copy_from_slice(operands);
-        Ok(OpRequest { op, operands: slots })
+        Ok(match op {
+            Op::Dot => Self::vector(op, vec![operands[0]], vec![operands[1]], None),
+            Op::FusedSum => Self::vector(op, vec![operands[0]], Vec::new(), None),
+            Op::Axpy => {
+                Self::vector(op, vec![operands[0]], vec![operands[1]], Some(operands[2]))
+            }
+            _ => {
+                let mut slots = [Posit::zero(w); 3];
+                slots[..operands.len()].copy_from_slice(operands);
+                OpRequest { op, operands: Operands::Scalar(slots) }
+            }
+        })
     }
 
     fn unary(op: Op, a: Posit) -> OpRequest {
-        OpRequest { op, operands: [a, Posit::zero(a.width()), Posit::zero(a.width())] }
+        let z = Posit::zero(a.width());
+        OpRequest { op, operands: Operands::Scalar([a, z, z]) }
     }
 
     fn binary(op: Op, a: Posit, b: Posit) -> OpRequest {
         debug_assert_eq!(a.width(), b.width(), "mixed-width {op:?} request");
-        OpRequest { op, operands: [a, b, Posit::zero(a.width())] }
+        OpRequest { op, operands: Operands::Scalar([a, b, Posit::zero(a.width())]) }
+    }
+
+    fn vector(op: Op, a: Vec<Posit>, b: Vec<Posit>, c: Option<Posit>) -> OpRequest {
+        let w = c.map_or_else(|| a[0].width(), |p| p.width());
+        OpRequest { op, operands: Operands::Vector { a, b, c: c.unwrap_or(Posit::zero(w)) } }
+    }
+
+    /// Validated reduction-request builder: `a` nonempty, `b` matched
+    /// when the op reads it, every operand (and `alpha`) at one width.
+    fn reduction(
+        op: Op,
+        a: &[Posit],
+        b: &[Posit],
+        alpha: Option<Posit>,
+    ) -> Result<OpRequest> {
+        if a.is_empty() {
+            return Err(PositError::BatchLaneMismatch { lane: "a", expected: 1, got: 0 });
+        }
+        if matches!(op, Op::Dot | Op::Axpy) && b.len() != a.len() {
+            return Err(PositError::BatchLaneMismatch {
+                lane: "b",
+                expected: a.len(),
+                got: b.len(),
+            });
+        }
+        let w = alpha.map_or_else(|| a[0].width(), |p| p.width());
+        for p in a.iter().chain(b.iter()) {
+            if p.width() != w {
+                return Err(PositError::WidthMismatch { expected: w, got: p.width() });
+            }
+        }
+        Ok(Self::vector(op, a.to_vec(), b.to_vec(), alpha))
+    }
+
+    /// Exact dot product `round(Σ aᵢ·bᵢ)` over equal-length slices.
+    pub fn dot(a: &[Posit], b: &[Posit]) -> Result<OpRequest> {
+        Self::reduction(Op::Dot, a, b, None)
+    }
+
+    /// Exact vector sum `round(Σ xᵢ)`.
+    pub fn fused_sum(xs: &[Posit]) -> Result<OpRequest> {
+        Self::reduction(Op::FusedSum, xs, &[], None)
+    }
+
+    /// Exact fused scale-and-add `round(Σᵢ (α·xᵢ + yᵢ))`.
+    pub fn axpy(alpha: Posit, xs: &[Posit], ys: &[Posit]) -> Result<OpRequest> {
+        Self::reduction(Op::Axpy, xs, ys, Some(alpha))
     }
 
     /// `x / d` with the default engine.
@@ -280,45 +397,84 @@ impl OpRequest {
     pub fn mul_add(a: Posit, b: Posit, c: Posit) -> OpRequest {
         debug_assert_eq!(a.width(), b.width(), "mixed-width MulAdd request");
         debug_assert_eq!(a.width(), c.width(), "mixed-width MulAdd request");
-        OpRequest { op: Op::MulAdd, operands: [a, b, c] }
+        OpRequest { op: Op::MulAdd, operands: Operands::Scalar([a, b, c]) }
     }
 
-    /// The meaningful operands (first `arity` slots).
+    /// The meaningful scalar operands (first `arity` slots). Reduction
+    /// requests have no scalar slots — this returns the empty slice for
+    /// them; read their lanes through [`OpRequest::vector_lanes`].
     #[inline]
     pub fn operands(&self) -> &[Posit] {
-        &self.operands[..self.op.arity()]
+        match &self.operands {
+            Operands::Scalar(slots) => &slots[..self.op.arity()],
+            Operands::Vector { .. } => &[],
+        }
     }
 
-    /// Posit width of the request's first operand. [`OpRequest::new`]
-    /// rejects mixed-width operand sets (the named constructors
-    /// `debug_assert` it), and [`Unit::run`] / the coordinator re-check
-    /// every operand against the serving width, so a mixed-width request
-    /// surfaces as a typed [`PositError::WidthMismatch`] at execution.
+    /// The vector lanes `(a, b, α)` of a reduction request (`b` is empty
+    /// when the op ignores it, `α` is meaningful for `Axpy` only);
+    /// `None` for scalar requests.
+    #[inline]
+    pub fn vector_lanes(&self) -> Option<(&[Posit], &[Posit], Posit)> {
+        match &self.operands {
+            Operands::Vector { a, b, c } => Some((a, b, *c)),
+            Operands::Scalar(_) => None,
+        }
+    }
+
+    /// Posit width of the request's operands. [`OpRequest::new`] and the
+    /// reduction constructors reject mixed-width operand sets (the named
+    /// scalar constructors `debug_assert` it), and [`Unit::run`] / the
+    /// coordinator re-check the request against the serving width, so a
+    /// mixed-width request surfaces as a typed
+    /// [`PositError::WidthMismatch`] at execution.
     #[inline]
     pub fn width(&self) -> u32 {
-        self.operands[0].width()
+        match &self.operands {
+            Operands::Scalar(slots) => slots[0].width(),
+            Operands::Vector { a, .. } => a[0].width(),
+        }
     }
 
-    /// All three operand slots as raw bit patterns (unused slots are 0).
+    /// The three scalar operand slots as raw bit patterns (unused slots
+    /// are 0). Reduction requests surface only their scalar coefficient
+    /// (in slot `c`); their vectors travel via
+    /// [`OpRequest::vector_lanes`].
     #[inline]
     pub fn bits(&self) -> [u64; 3] {
-        [self.operands[0].to_bits(), self.operands[1].to_bits(), self.operands[2].to_bits()]
+        match &self.operands {
+            Operands::Scalar(s) => [s[0].to_bits(), s[1].to_bits(), s[2].to_bits()],
+            Operands::Vector { c, .. } => [0, 0, c.to_bits()],
+        }
     }
 
     /// The exact expected result for this request, from the crate's
-    /// golden references: the exact-rational division/sqrt models,
-    /// the correctly-rounded arithmetic library for the rest. The one
-    /// verification table shared by the serve drivers, the bench suites
-    /// and the tests — independent of the [`Unit`] execution path.
+    /// golden references: the exact-rational division/sqrt models, the
+    /// correctly-rounded arithmetic library for the scalar ops, and the
+    /// bignum-rational reduction golden ([`crate::testkit::rational`] —
+    /// no quire, no floats) for the reductions. The one verification
+    /// table shared by the serve drivers, the bench suites and the tests
+    /// — independent of the [`Unit`] execution path.
     pub fn golden(&self) -> Posit {
-        let ops = self.operands();
-        match self.op {
-            Op::Div { .. } => golden::divide(ops[0], ops[1]).result,
-            Op::Sqrt => golden_sqrt(ops[0]).result,
-            Op::Mul => ops[0].mul(ops[1]),
-            Op::Add => ops[0].add(ops[1]),
-            Op::Sub => ops[0].sub(ops[1]),
-            Op::MulAdd => ops[0].mul_add(ops[1], ops[2]),
+        match &self.operands {
+            Operands::Vector { a, b, c } => match self.op {
+                Op::Dot => rational::dot(a, b),
+                Op::FusedSum => rational::fused_sum(a),
+                Op::Axpy => rational::axpy(*c, a, b),
+                _ => unreachable!("vector operands on a scalar op"),
+            },
+            Operands::Scalar(slots) => {
+                let ops = &slots[..self.op.arity()];
+                match self.op {
+                    Op::Div { .. } => golden::divide(ops[0], ops[1]).result,
+                    Op::Sqrt => golden_sqrt(ops[0]).result,
+                    Op::Mul => ops[0].mul(ops[1]),
+                    Op::Add => ops[0].add(ops[1]),
+                    Op::Sub => ops[0].sub(ops[1]),
+                    Op::MulAdd => ops[0].mul_add(ops[1], ops[2]),
+                    _ => unreachable!("scalar operands on a reduction op"),
+                }
+            }
         }
     }
 }
@@ -397,6 +553,8 @@ enum Core {
     Add,
     Sub,
     MulAdd,
+    /// All three quire reductions: the op tag picks the kernel.
+    Reduce,
 }
 
 /// A reusable execution context for one posit width and one [`Op`].
@@ -463,7 +621,15 @@ impl Unit {
             return Err(PositError::WidthOutOfRange { n });
         }
         let datapath_pinned = tier == ExecTier::Datapath && path != FastPath::Auto;
-        if datapath_pinned || !fastpath::path_supported(n, op.fast_kind(), path) {
+        // The reductions never run through a FastKernel (their Fast tier
+        // is the in-register quire), so a forced table/SWAR kernel has
+        // nothing to serve them — reject it rather than silently ignore.
+        let reduction_forced =
+            op.is_reduction() && matches!(path, FastPath::Table | FastPath::Simd);
+        if datapath_pinned
+            || reduction_forced
+            || !fastpath::path_supported(n, op.fast_kind(), path)
+        {
             return Err(PositError::UnsupportedFastPath { path: path.name(), op: op.name(), n });
         }
         let (core, iters, real_iters, cycles) = match op {
@@ -496,6 +662,10 @@ impl Unit {
             Op::Add => (Core::Add, 0, 0, ARITH_CYCLES),
             Op::Sub => (Core::Sub, 0, 0, ARITH_CYCLES),
             Op::MulAdd => (Core::MulAdd, 0, 0, ARITH_CYCLES + 1),
+            // reductions: one multiply-accumulate stage into the quire,
+            // modeled per request (the per-element cost is what the
+            // linalg bench suite measures)
+            Op::Dot | Op::FusedSum | Op::Axpy => (Core::Reduce, 0, 0, ARITH_CYCLES + 1),
         };
         Ok(Unit {
             n,
@@ -549,11 +719,15 @@ impl Unit {
     /// coordinator's per-path metrics count.
     #[inline]
     pub fn resolve_fast_path(&self, len: usize) -> Option<FastPath> {
-        if self.batch_tier() == ExecTier::Fast {
-            Some(self.fast.resolve(len))
-        } else {
-            None
+        if self.batch_tier() != ExecTier::Fast {
+            return None;
         }
+        if self.op.is_reduction() {
+            // the in-register quire is the reductions' scalar-fast kernel;
+            // they never dispatch to the table/SWAR serving layer
+            return Some(FastPath::Scalar);
+        }
+        Some(self.fast.resolve(len))
     }
 
     /// Posit width this context serves.
@@ -593,6 +767,7 @@ impl Unit {
             Core::Add => "add",
             Core::Sub => "sub",
             Core::MulAdd => "mul+add",
+            Core::Reduce => "quire",
         }
     }
 
@@ -645,6 +820,11 @@ impl Unit {
                 return Err(PositError::WidthMismatch { expected: self.n, got: p.width() });
             }
         }
+        if let Core::Reduce = self.core {
+            // a scalar reduction call is the single-element reduction;
+            // both tiers are exact, so metadata is the flat model either way
+            return Ok(self.arith_division(self.reduce_scalar(operands)));
+        }
         if self.scalar_tier() == ExecTier::Fast {
             return Ok(self.fast_run(operands));
         }
@@ -662,7 +842,21 @@ impl Unit {
             Core::Add => self.arith_division(operands[0].add(operands[1])),
             Core::Sub => self.arith_division(operands[0].sub(operands[1])),
             Core::MulAdd => self.arith_division(operands[0].mul_add(operands[1], operands[2])),
+            Core::Reduce => unreachable!("reductions return above"),
         })
+    }
+
+    /// Single-element reduction for the scalar [`Unit::run`] entry point
+    /// (`Dot`: `[a₀, b₀]`, `FusedSum`: `[x₀]`, `Axpy`: `[x₀, y₀, α]`).
+    fn reduce_scalar(&self, operands: &[Posit]) -> Posit {
+        let lane = |i: usize| [operands[i].to_bits()];
+        let bits = match self.op {
+            Op::Dot => self.reduction_bits(&lane(0), &lane(1), &[]),
+            Op::FusedSum => self.reduction_bits(&lane(0), &[], &[]),
+            Op::Axpy => self.reduction_bits(&lane(0), &lane(1), &lane(2)),
+            _ => unreachable!("reduce_scalar on a scalar op"),
+        };
+        Posit::from_bits(self.n, bits)
     }
 
     /// Fast-tier scalar execution with modeled metadata (bit-identical to
@@ -698,10 +892,38 @@ impl Unit {
     /// pinned to `Datapath`).
     #[inline]
     pub fn run_bits(&self, a: u64, b: u64, c: u64) -> u64 {
+        if let Core::Reduce = self.core {
+            // the single-element reduction; the FastKernel serves only
+            // the scalar ops
+            return self.reduction_bits(&[a], &[b], &[c]);
+        }
         if self.batch_tier() == ExecTier::Fast {
             return self.fast.op_bits(a, b, c);
         }
         self.datapath_bits(a, b, c)
+    }
+
+    /// Reduction execution over raw bit-pattern lanes (one output):
+    /// Datapath accumulates in the limb quire, Fast keeps the quire in a
+    /// register where the width allows — bit-identical by construction
+    /// ([`crate::quire`]).
+    fn reduction_bits(&self, a: &[u64], b: &[u64], c: &[u64]) -> u64 {
+        let fast = self.batch_tier() == ExecTier::Fast;
+        match self.op {
+            Op::Dot if fast => quire::dot_bits_fast(self.n, a, b),
+            Op::Dot => quire::dot_bits(self.n, a, b),
+            Op::FusedSum if fast => quire::fused_sum_bits_fast(self.n, a),
+            Op::FusedSum => quire::fused_sum_bits(self.n, a),
+            Op::Axpy => {
+                let alpha = c.first().copied().unwrap_or(0) & self.mask;
+                if fast {
+                    quire::axpy_bits_fast(self.n, alpha, a, b)
+                } else {
+                    quire::axpy_bits(self.n, alpha, a, b)
+                }
+            }
+            _ => unreachable!("reduction_bits on a scalar op"),
+        }
     }
 
     /// Datapath-tier bit-level execution (the cycle-accurate engines).
@@ -715,6 +937,7 @@ impl Unit {
             Core::Add => p(a).add(p(b)).to_bits(),
             Core::Sub => p(a).sub(p(b)).to_bits(),
             Core::MulAdd => p(a).mul_add(p(b), p(c)).to_bits(),
+            Core::Reduce => self.reduction_bits(&[a & self.mask], &[b & self.mask], &[c]),
         }
     }
 
@@ -740,6 +963,31 @@ impl Unit {
         Ok(())
     }
 
+    /// Lane shape for a reduction batch: one output, a nonempty `a`
+    /// vector, `b` matched element-for-element when the op reads it, and
+    /// for `Axpy` exactly one coefficient in `c`. Violations are typed
+    /// [`PositError::BatchLaneMismatch`] / [`PositError::BatchShapeMismatch`]
+    /// errors, mirroring the scalar-batch checks.
+    fn check_reduction_lanes(&self, a: &[u64], b: &[u64], c: &[u64], out_len: usize) -> Result<()> {
+        if out_len != 1 {
+            return Err(PositError::BatchShapeMismatch { xs: a.len(), ds: b.len(), out: out_len });
+        }
+        if a.is_empty() {
+            return Err(PositError::BatchLaneMismatch { lane: "a", expected: 1, got: 0 });
+        }
+        if matches!(self.op, Op::Dot | Op::Axpy) && b.len() != a.len() {
+            return Err(PositError::BatchLaneMismatch {
+                lane: "b",
+                expected: a.len(),
+                got: b.len(),
+            });
+        }
+        if matches!(self.op, Op::Axpy) && c.len() != 1 {
+            return Err(PositError::BatchLaneMismatch { lane: "c", expected: 1, got: c.len() });
+        }
+        Ok(())
+    }
+
     /// Batch-first execution over raw bit patterns:
     /// `out[i] = op(a[i], b[i], c[i])`, taking only the lanes the op uses
     /// (pass `&[]` for the rest). Bit-identical to calling [`Unit::run`]
@@ -751,7 +999,18 @@ impl Unit {
     /// resolved in bulk, real lanes through the width-monomorphized
     /// kernel loop); under `Datapath` every lane steps the cycle-accurate
     /// engine.
+    ///
+    /// **Reduction units** invert the shape: `a`/`b` are the k-element
+    /// input vectors (plus the single `Axpy` coefficient in `c`) and
+    /// `out` is exactly one lane holding the rounded accumulation —
+    /// Datapath batches walk the limb quire, Fast batches keep the quire
+    /// in a register where the width allows, bit-identically.
     pub fn run_batch(&self, a: &[u64], b: &[u64], c: &[u64], out: &mut [u64]) -> Result<()> {
+        if let Core::Reduce = self.core {
+            self.check_reduction_lanes(a, b, c, out.len())?;
+            out[0] = self.reduction_bits(a, b, c);
+            return Ok(());
+        }
         self.check_lanes(a, b, c, out.len())?;
         if self.batch_tier() == ExecTier::Fast {
             self.fast.run_batch(a, b, c, out);
@@ -831,6 +1090,10 @@ impl Unit {
         out: &mut [u64],
         threads: usize,
     ) -> Result<()> {
+        if let Core::Reduce = self.core {
+            // a reduction is one sequential accumulation; serve it inline
+            return self.run_batch(a, b, c, out);
+        }
         self.check_lanes(a, b, c, out.len())?;
         let threads = threads.max(1);
         let chunk = self.parallel_chunk(out.len(), threads);
@@ -1250,5 +1513,162 @@ mod tests {
         );
         let ok = OpRequest::new(Op::MulAdd, &[Posit::one(8); 3]).unwrap();
         assert_eq!(ok.operands(), &[Posit::one(8); 3]);
+    }
+
+    #[test]
+    fn reduction_op_metadata() {
+        assert_eq!(Op::REDUCTIONS.len(), 3);
+        assert_eq!(Op::Dot.arity(), 2);
+        assert_eq!(Op::FusedSum.arity(), 1);
+        assert_eq!(Op::Axpy.arity(), 3);
+        assert_eq!(Op::Dot.name(), "dot");
+        assert_eq!(Op::FusedSum.name(), "fsum");
+        assert_eq!(Op::Axpy.name(), "axpy");
+        assert_eq!(Op::Axpy.label(), "axpy");
+        assert_eq!(Op::Dot.to_string(), "dot");
+        for op in Op::REDUCTIONS {
+            assert!(op.is_reduction());
+        }
+        for op in Op::DEFAULTS {
+            assert!(!op.is_reduction());
+        }
+        let unit = Unit::new(16, Op::Dot).unwrap();
+        assert_eq!(unit.engine_name(), "quire");
+        assert_eq!(unit.algorithm(), None);
+        assert!(unit.as_div_engine().is_none());
+    }
+
+    /// Satellite regression: the vector constructors report typed shape
+    /// errors — mismatched `Dot` lanes are a `BatchLaneMismatch`, not an
+    /// arity error, and `OpRequest::new` keeps covering the reductions
+    /// through the singleton convention.
+    #[test]
+    fn reduction_request_model_and_shape_errors() {
+        let n = 16;
+        let one = Posit::one(n);
+        let two = Posit::from_f64(n, 2.0);
+        assert_eq!(
+            OpRequest::dot(&[one, two], &[one]).err(),
+            Some(PositError::BatchLaneMismatch { lane: "b", expected: 2, got: 1 })
+        );
+        assert_eq!(
+            OpRequest::dot(&[], &[]).err(),
+            Some(PositError::BatchLaneMismatch { lane: "a", expected: 1, got: 0 })
+        );
+        assert_eq!(
+            OpRequest::fused_sum(&[]).err(),
+            Some(PositError::BatchLaneMismatch { lane: "a", expected: 1, got: 0 })
+        );
+        assert_eq!(
+            OpRequest::axpy(one, &[one], &[one, two]).err(),
+            Some(PositError::BatchLaneMismatch { lane: "b", expected: 1, got: 2 })
+        );
+        assert_eq!(
+            OpRequest::dot(&[one], &[Posit::one(8)]).err(),
+            Some(PositError::WidthMismatch { expected: 16, got: 8 })
+        );
+        assert_eq!(
+            OpRequest::new(Op::Dot, &[one]).err(),
+            Some(PositError::ArityMismatch { op: "dot", expected: 2, got: 1 })
+        );
+        let r = OpRequest::dot(&[one, two], &[two, one]).unwrap();
+        assert_eq!(r.op, Op::Dot);
+        assert_eq!(r.width(), n);
+        assert!(r.operands().is_empty(), "reductions have no scalar slots");
+        let (a, b, _) = r.vector_lanes().unwrap();
+        assert_eq!((a.len(), b.len()), (2, 2));
+        assert_eq!(r.bits(), [0, 0, 0]);
+        let ax = OpRequest::axpy(two, &[one], &[one]).unwrap();
+        assert_eq!(ax.bits(), [0, 0, two.to_bits()]);
+        assert_eq!(ax.vector_lanes().unwrap().2, two);
+        // singleton convention through `new`
+        let single = OpRequest::new(Op::Dot, &[one, two]).unwrap();
+        assert_eq!(single.golden(), one.mul(two));
+    }
+
+    #[test]
+    fn reduction_batches_match_rational_golden_on_both_tiers() {
+        let mut rng = Rng::seeded(0xD0717);
+        for n in [8u32, 16, 32] {
+            for op in Op::REDUCTIONS {
+                for tier in [ExecTier::Datapath, ExecTier::Fast, ExecTier::Auto] {
+                    let unit = Unit::with_tier(n, op, tier).unwrap();
+                    for _ in 0..24 {
+                        let k = 1 + rng.below(9) as usize;
+                        let a: Vec<u64> = (0..k).map(|_| rng.next_u64() & mask(n)).collect();
+                        let b: Vec<u64> = (0..k).map(|_| rng.next_u64() & mask(n)).collect();
+                        let alpha = [rng.next_u64() & mask(n)];
+                        let (lb, lc): (&[u64], &[u64]) = match op {
+                            Op::Dot => (&b, &[]),
+                            Op::FusedSum => (&[], &[]),
+                            _ => (&b, &alpha),
+                        };
+                        let mut out = [0u64];
+                        unit.run_batch(&a, lb, lc, &mut out).unwrap();
+                        let pv = |bits: &[u64]| -> Vec<Posit> {
+                            bits.iter().map(|&x| Posit::from_bits(n, x)).collect()
+                        };
+                        let want = match op {
+                            Op::Dot => rational::dot(&pv(&a), &pv(&b)),
+                            Op::FusedSum => rational::fused_sum(&pv(&a)),
+                            _ => rational::axpy(Posit::from_bits(n, alpha[0]), &pv(&a), &pv(&b)),
+                        };
+                        assert_eq!(out[0], want.to_bits(), "{op} n={n} {tier:?} k={k}");
+                        // parallel entry point serves reductions inline
+                        let mut par = [0u64];
+                        unit.run_batch_parallel(&a, lb, lc, &mut par, 4).unwrap();
+                        assert_eq!(par, out, "{op} n={n} {tier:?}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduction_batch_lane_checks_and_scalar_run() {
+        let dot = Unit::new(16, Op::Dot).unwrap();
+        let mut out = [0u64];
+        assert_eq!(
+            dot.run_batch(&[1, 2], &[1], &[], &mut out).err(),
+            Some(PositError::BatchLaneMismatch { lane: "b", expected: 2, got: 1 })
+        );
+        assert_eq!(
+            dot.run_batch(&[], &[], &[], &mut out).err(),
+            Some(PositError::BatchLaneMismatch { lane: "a", expected: 1, got: 0 })
+        );
+        let mut wide = [0u64; 2];
+        assert!(matches!(
+            dot.run_batch(&[1, 2], &[1, 2], &[], &mut wide).err(),
+            Some(PositError::BatchShapeMismatch { out: 2, .. })
+        ));
+        let axpy = Unit::new(16, Op::Axpy).unwrap();
+        assert_eq!(
+            axpy.run_batch(&[1], &[1], &[], &mut out).err(),
+            Some(PositError::BatchLaneMismatch { lane: "c", expected: 1, got: 0 })
+        );
+        // forced table/SWAR kernels have nothing to serve reductions
+        assert_eq!(
+            Unit::with_exec(8, Op::Dot, ExecTier::Fast, FastPath::Table).err(),
+            Some(PositError::UnsupportedFastPath { path: "table", op: "dot", n: 8 })
+        );
+        assert_eq!(
+            Unit::with_exec(16, Op::FusedSum, ExecTier::Fast, FastPath::Simd).err(),
+            Some(PositError::UnsupportedFastPath { path: "simd", op: "fsum", n: 16 })
+        );
+        assert_eq!(dot.resolve_fast_path(1 << 12), Some(FastPath::Scalar));
+        // scalar run: the single-element reduction with flat metadata
+        let one = Posit::one(16);
+        let two = Posit::from_f64(16, 2.0);
+        let r = dot.run(&[two, two]).unwrap();
+        assert_eq!(r.result, two.mul(two));
+        assert_eq!((r.iterations, r.cycles), (0, dot.latency_cycles()));
+        assert_eq!(
+            dot.run(&[one]).err(),
+            Some(PositError::ArityMismatch { op: "dot", expected: 2, got: 1 })
+        );
+        let fsum = Unit::new(16, Op::FusedSum).unwrap();
+        assert_eq!(fsum.run(&[two]).unwrap().result, two);
+        let ax = Unit::new(16, Op::Axpy).unwrap();
+        assert_eq!(ax.run(&[two, one, two]).unwrap().result, two.mul_add(two, one));
     }
 }

@@ -120,7 +120,9 @@ pub fn take(w: &mut dyn Workload, count: usize) -> Vec<(Posit, Posit)> {
 }
 
 /// Relative weights of each operation in a mixed stream (division runs
-/// the default engine). All-zero weights degenerate to division-only.
+/// the default engine; `dot`/`fsum`/`axpy` are the quire reductions,
+/// drawn with short random vectors). All-zero weights degenerate to
+/// division-only.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct OpMix {
     pub div: u32,
@@ -129,25 +131,68 @@ pub struct OpMix {
     pub add: u32,
     pub sub: u32,
     pub mul_add: u32,
+    pub dot: u32,
+    pub fsum: u32,
+    pub axpy: u32,
 }
 
 impl OpMix {
     /// A DSP-flavored default: division-heavy with an arithmetic
-    /// background and some sqrt (normalization) traffic.
-    pub const DEFAULT: OpMix = OpMix { div: 6, sqrt: 2, mul: 4, add: 4, sub: 2, mul_add: 2 };
+    /// background and some sqrt (normalization) traffic. No reduction
+    /// traffic — ask for it explicitly (`dot:2,fsum:1,axpy:1`).
+    pub const DEFAULT: OpMix = OpMix {
+        div: 6,
+        sqrt: 2,
+        mul: 4,
+        add: 4,
+        sub: 2,
+        mul_add: 2,
+        dot: 0,
+        fsum: 0,
+        axpy: 0,
+    };
 
     /// Pure division traffic (the pre-redesign workload).
-    pub const DIV_ONLY: OpMix = OpMix { div: 1, sqrt: 0, mul: 0, add: 0, sub: 0, mul_add: 0 };
+    pub const DIV_ONLY: OpMix = OpMix {
+        div: 1,
+        sqrt: 0,
+        mul: 0,
+        add: 0,
+        sub: 0,
+        mul_add: 0,
+        dot: 0,
+        fsum: 0,
+        axpy: 0,
+    };
 
     pub fn total(&self) -> u32 {
-        self.div + self.sqrt + self.mul + self.add + self.sub + self.mul_add
+        self.div
+            + self.sqrt
+            + self.mul
+            + self.add
+            + self.sub
+            + self.mul_add
+            + self.dot
+            + self.fsum
+            + self.axpy
     }
 
-    /// Parse a `name:weight` list, e.g. `div:6,sqrt:2,mul:4` (ops not
-    /// named get weight 0; `mul_add`/`muladd`/`fma` are synonyms).
-    /// Returns `None` on unknown names, bad weights or an all-zero mix.
+    /// Parse a `name:weight` list, e.g. `div:6,sqrt:2,dot:2` (ops not
+    /// named get weight 0; `mul_add`/`muladd`/`fma` are synonyms, as are
+    /// `fsum`/`fused_sum`). Returns `None` on unknown names, bad weights
+    /// or an all-zero mix.
     pub fn parse(s: &str) -> Option<OpMix> {
-        let mut mix = OpMix { div: 0, sqrt: 0, mul: 0, add: 0, sub: 0, mul_add: 0 };
+        let mut mix = OpMix {
+            div: 0,
+            sqrt: 0,
+            mul: 0,
+            add: 0,
+            sub: 0,
+            mul_add: 0,
+            dot: 0,
+            fsum: 0,
+            axpy: 0,
+        };
         for part in s.split(',') {
             let (name, weight) = part.split_once(':')?;
             let weight: u32 = weight.trim().parse().ok()?;
@@ -158,6 +203,9 @@ impl OpMix {
                 "add" => mix.add = weight,
                 "sub" => mix.sub = weight,
                 "mul_add" | "muladd" | "fma" => mix.mul_add = weight,
+                "dot" => mix.dot = weight,
+                "fsum" | "fused_sum" => mix.fsum = weight,
+                "axpy" => mix.axpy = weight,
                 _ => return None,
             }
         }
@@ -181,6 +229,9 @@ impl OpMix {
             (self.add, Op::Add),
             (self.sub, Op::Sub),
             (self.mul_add, Op::MulAdd),
+            (self.dot, Op::Dot),
+            (self.fsum, Op::FusedSum),
+            (self.axpy, Op::Axpy),
         ] {
             if r < weight as u64 {
                 return op;
@@ -224,6 +275,13 @@ impl MixedOps {
         }
     }
 
+    /// A short random reduction vector (2–8 elements keeps mixed batches
+    /// latency-comparable to the scalar ops).
+    fn real_vec(&mut self) -> Vec<Posit> {
+        let k = 2 + self.rng.below(7) as usize;
+        (0..k).map(|_| self.real()).collect()
+    }
+
     /// The next op-tagged request of the stream.
     pub fn next_request(&mut self) -> OpRequest {
         match self.mix.pick(&mut self.rng) {
@@ -250,6 +308,21 @@ impl MixedOps {
             Op::MulAdd => {
                 let (a, b, c) = (self.real(), self.real(), self.real());
                 OpRequest::mul_add(a, b, c)
+            }
+            Op::Dot => {
+                let a = self.real_vec();
+                let b: Vec<Posit> = (0..a.len()).map(|_| self.real()).collect();
+                OpRequest::dot(&a, &b).expect("generated lanes match")
+            }
+            Op::FusedSum => {
+                let xs = self.real_vec();
+                OpRequest::fused_sum(&xs).expect("generated lane is nonempty")
+            }
+            Op::Axpy => {
+                let alpha = self.real();
+                let xs = self.real_vec();
+                let ys: Vec<Posit> = (0..xs.len()).map(|_| self.real()).collect();
+                OpRequest::axpy(alpha, &xs, &ys).expect("generated lanes match")
             }
         }
     }
@@ -295,8 +368,24 @@ mod tests {
     #[test]
     fn op_mix_parse() {
         let m = OpMix::parse("div:6,sqrt:2,mul:4").unwrap();
-        assert_eq!(m, OpMix { div: 6, sqrt: 2, mul: 4, add: 0, sub: 0, mul_add: 0 });
+        assert_eq!(
+            m,
+            OpMix {
+                div: 6,
+                sqrt: 2,
+                mul: 4,
+                add: 0,
+                sub: 0,
+                mul_add: 0,
+                dot: 0,
+                fsum: 0,
+                axpy: 0
+            }
+        );
         assert_eq!(OpMix::parse("fma:3").unwrap().mul_add, 3);
+        let r = OpMix::parse("dot:2,fsum:1,axpy:1").unwrap();
+        assert_eq!((r.dot, r.fsum, r.axpy), (2, 1, 1));
+        assert_eq!(OpMix::parse("fused_sum:4").unwrap().fsum, 4, "fsum synonym");
         assert!(OpMix::parse("frobnicate:1").is_none());
         assert!(OpMix::parse("div:x").is_none());
         assert!(OpMix::parse("div:0").is_none(), "all-zero mixes are rejected");
@@ -311,7 +400,12 @@ mod tests {
         for _ in 0..4000 {
             let req = w.next_request();
             assert_eq!(req.width(), 16);
-            assert_eq!(req.operands().len(), req.op.arity());
+            if req.op.is_reduction() {
+                let (a, _, _) = req.vector_lanes().expect("reductions carry vectors");
+                assert!(!a.is_empty());
+            } else {
+                assert_eq!(req.operands().len(), req.op.arity());
+            }
             for p in req.operands() {
                 assert!(!p.is_nar(), "{:?}", req.op);
             }
@@ -336,11 +430,53 @@ mod tests {
         for _ in 0..200 {
             assert!(matches!(w.next_request().op, Op::Div { .. }));
         }
-        let only_sqrt = OpMix { div: 0, sqrt: 5, mul: 0, add: 0, sub: 0, mul_add: 0 };
+        let only_sqrt = OpMix {
+            div: 0,
+            sqrt: 5,
+            mul: 0,
+            add: 0,
+            sub: 0,
+            mul_add: 0,
+            dot: 0,
+            fsum: 0,
+            axpy: 0,
+        };
         let mut w = MixedOps::new(16, only_sqrt, 2);
         for _ in 0..200 {
             assert_eq!(w.next_request().op, Op::Sqrt);
         }
+    }
+
+    #[test]
+    fn mixed_reduction_stream_is_sane() {
+        let mix = OpMix::parse("dot:2,fsum:1,axpy:1").unwrap();
+        let mut w = MixedOps::new(16, mix, 0xABC);
+        let mut seen = [0u32; 3];
+        for _ in 0..600 {
+            let req = w.next_request();
+            assert!(req.op.is_reduction());
+            let (a, b, alpha) = req.vector_lanes().expect("reductions carry vectors");
+            assert!((2..=8).contains(&a.len()), "{}", a.len());
+            for p in a.iter().chain(b.iter()).chain([&alpha]) {
+                assert!(!p.is_nar());
+                assert_eq!(p.width(), 16);
+            }
+            match req.op {
+                Op::Dot => {
+                    assert_eq!(b.len(), a.len());
+                    seen[0] += 1;
+                }
+                Op::FusedSum => {
+                    assert!(b.is_empty());
+                    seen[1] += 1;
+                }
+                _ => {
+                    assert_eq!(b.len(), a.len());
+                    seen[2] += 1;
+                }
+            }
+        }
+        assert!(seen.iter().all(|&s| s > 50), "{seen:?}");
     }
 
     #[test]

@@ -13,7 +13,9 @@
 //! them explicitly with `cargo test --test p8_exhaustive -- --ignored`
 //! so the serving datapaths are gated on every push. The **table-path**
 //! sweep below runs un-ignored: a constant-time lookup per case makes
-//! the full 65k-pair space per op cheap enough for tier-1.
+//! the full 65k-pair space per op cheap enough for tier-1. The
+//! **quire-dot** sweep also runs un-ignored: every two-term Posit8 dot
+//! is a couple of 128-bit adds per tier, well inside the tier-1 budget.
 
 // The division gates deliberately run through the deprecated `Divider`
 // wrapper so the legacy entry point stays pinned bit-exact.
@@ -22,6 +24,7 @@
 use posit_div::division::sqrt::golden_sqrt;
 use posit_div::division::{golden, Algorithm, DivEngine, Divider};
 use posit_div::posit::{mask, Posit, Unpacked};
+use posit_div::testkit::rational;
 use posit_div::unit::{ExecTier, FastPath, Op, Unit};
 
 /// Exhaustive Posit8 **table-path** gate — runs un-`#[ignore]`d in
@@ -64,6 +67,34 @@ fn p8_table_path_matches_exact_references_on_all_pattern_pairs() {
     }
     // and the ternary op correctly has no table
     assert!(Unit::with_exec(n, Op::MulAdd, ExecTier::Fast, FastPath::Table).is_err());
+}
+
+/// Exhaustive Posit8 **quire-dot** gate — runs un-`#[ignore]`d in
+/// tier-1: every one of the 256×256 pattern pairs as the two-term dot
+/// `round(a·b + b·a)` through `Op::Dot`'s `Unit::run_batch` on **both**
+/// tiers (Fast = in-register i128 accumulator, Datapath = limb quire),
+/// checked against the exact-rational reference (`testkit::rational`,
+/// bignum dyadics — no quire code, no floats). Two-term dots cover every
+/// product magnitude the quire can see at Posit8 (maxpos² down to
+/// minpos²), every sign combination, exact cancellation, and NaR/zero
+/// propagation; each case is a couple of wide adds, so the full space
+/// fits the tier-1 budget.
+#[test]
+fn p8_quire_dot_matches_rational_golden_on_all_pattern_pairs() {
+    let n = 8;
+    let p = |bits: u64| Posit::from_bits(n, bits);
+    let fast = Unit::with_tier(n, Op::Dot, ExecTier::Fast).expect("standard width");
+    let dp = Unit::with_tier(n, Op::Dot, ExecTier::Datapath).expect("standard width");
+    let mut out = [0u64];
+    for a in 0..=mask(n) {
+        for b in 0..=mask(n) {
+            let want = rational::dot(&[p(a), p(b)], &[p(b), p(a)]).to_bits();
+            fast.run_batch(&[a, b], &[b, a], &[], &mut out).expect("matched lanes");
+            assert_eq!(out[0], want, "fast dot([{a:#04x},{b:#04x}],[{b:#04x},{a:#04x}])");
+            dp.run_batch(&[a, b], &[b, a], &[], &mut out).expect("matched lanes");
+            assert_eq!(out[0], want, "datapath dot([{a:#04x},{b:#04x}],[{b:#04x},{a:#04x}])");
+        }
+    }
 }
 
 #[test]

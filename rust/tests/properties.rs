@@ -3,7 +3,9 @@
 //! correctness verified by exact rational comparison against
 //! pattern-space midpoints (independent of the encode path) — plus
 //! correctly-rounded references for the arithmetic ops the
-//! operation-generic unit serves (mul/add/sub at n ∈ {8, 16, 32}).
+//! operation-generic unit serves (mul/add/sub at n ∈ {8, 16, 32}) and
+//! the quire reductions (permutation invariance, and a constructed case
+//! where a rounding-per-step fold provably loses bits the quire keeps).
 
 // Division properties run through the deprecated `Divider` wrapper on
 // purpose — they pin the legacy context's behavior.
@@ -11,7 +13,8 @@
 
 use posit_div::division::{golden, Algorithm, Divider};
 use posit_div::posit::{frac_bits, mask, round::encode_round, Posit};
-use posit_div::testkit::{self, gen, Config, Rng};
+use posit_div::quire;
+use posit_div::testkit::{self, gen, rational, Config, Rng};
 
 #[test]
 fn golden_is_correctly_rounded_p16_random() {
@@ -206,6 +209,94 @@ fn add_sub_match_exact_integer_reference_p32() {
                 }
             }
         }
+    }
+}
+
+/// In-place Fisher–Yates driven by the deterministic testkit RNG — the
+/// quire properties need the *same* permutation applied to both dot
+/// operand vectors, so the shuffle works on an index vector.
+fn shuffled_indices(rng: &mut Rng, k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..k).collect();
+    for i in (1..k).rev() {
+        idx.swap(i, rng.below(i as u64 + 1) as usize);
+    }
+    idx
+}
+
+#[test]
+fn quire_reductions_are_permutation_invariant_p16_p32() {
+    // The quire accumulates in exact fixed point, so the result of a
+    // reduction cannot depend on summation order — unlike any
+    // rounding-per-step fold. Checked against the independent
+    // exact-rational reference on the original order, then re-run on a
+    // random permutation of the terms.
+    for n in [16u32, 32] {
+        let mut rng = Rng::seeded(0x5EED + n as u64);
+        for _ in 0..400 {
+            let k = 2 + rng.below(14) as usize;
+            let a: Vec<Posit> = (0..k).map(|_| gen::real_posit(&mut rng, n)).collect();
+            let b: Vec<Posit> = (0..k).map(|_| gen::real_posit(&mut rng, n)).collect();
+            let alpha = gen::real_posit(&mut rng, n);
+
+            let d = quire::dot(&a, &b).expect("matched lanes");
+            assert_eq!(d, rational::dot(&a, &b), "dot vs rational, n={n}");
+            let s = quire::fused_sum(&a).expect("non-empty");
+            assert_eq!(s, rational::fused_sum(&a), "fsum vs rational, n={n}");
+            let ax = quire::axpy(alpha, &a, &b).expect("matched lanes");
+            assert_eq!(ax, rational::axpy(alpha, &a, &b), "axpy vs rational, n={n}");
+
+            let idx = shuffled_indices(&mut rng, k);
+            let ap: Vec<Posit> = idx.iter().map(|&i| a[i]).collect();
+            let bp: Vec<Posit> = idx.iter().map(|&i| b[i]).collect();
+            assert_eq!(quire::dot(&ap, &bp).expect("matched lanes"), d, "dot order, n={n}");
+            assert_eq!(quire::fused_sum(&ap).expect("non-empty"), s, "fsum order, n={n}");
+            assert_eq!(
+                quire::axpy(alpha, &ap, &bp).expect("matched lanes"),
+                ax,
+                "axpy order, n={n}"
+            );
+        }
+    }
+}
+
+#[test]
+fn quire_is_exact_where_naive_fold_provably_rounds_p16_p32() {
+    // The constructed case the quire exists for. At width n the posits in
+    // [1, 2) carry fb = frac_bits(n) fraction bits, so the ulp at 1.0 is
+    // 2^-fb and anything strictly below the half-ulp 2^-(fb+1) is
+    // absorbed by a rounded add. Take t = 2^-(fb+2) — a quarter ulp,
+    // exactly representable (its own regime is short enough to keep
+    // fraction bits at both widths). Then:
+    //   naive: 1.0 (+) t rounds back to 1.0 at every step — four adds of
+    //          t leave 1.0 unchanged;
+    //   exact: 1 + 4t = 1 + 2^-fb is exactly one ulp above 1.0 and
+    //          exactly representable, so the deferred rounding returns it.
+    // The fold loses the entire tail; the quire provably cannot.
+    for n in [16u32, 32] {
+        let fb = frac_bits(n) as i32;
+        let one = Posit::one(n);
+        let t = Posit::from_f64(n, (-(fb + 2) as f64).exp2());
+        assert!(!t.is_zero(), "quarter-ulp must be representable at n={n}");
+        assert_eq!(t.to_f64(), (-(fb + 2) as f64).exp2(), "t must be exact at n={n}");
+        let xs = [one, t, t, t, t];
+
+        // the naive rounding-per-step fold absorbs every tiny term
+        let mut naive = Posit::zero(n);
+        for x in xs {
+            naive = naive.add(x);
+        }
+        assert_eq!(naive, one, "each quarter-ulp add must absorb at n={n}");
+
+        // the quire keeps them all: one ulp above 1.0, bit-exact vs the
+        // rational reference — and provably != the naive fold
+        let exact = quire::fused_sum(&xs).expect("non-empty");
+        assert_eq!(exact, rational::fused_sum(&xs), "quire vs rational, n={n}");
+        assert_eq!(exact, Posit::from_f64(n, 1.0 + (-fb as f64).exp2()), "n={n}");
+        assert_ne!(exact, naive, "n={n}: the fold must lose the tail");
+
+        // same story through the dot product (all-ones second vector)
+        let ones = [one; 5];
+        assert_eq!(quire::dot(&xs, &ones).expect("matched lanes"), exact, "dot, n={n}");
     }
 }
 
