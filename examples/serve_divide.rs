@@ -11,8 +11,12 @@
 //!
 //! Serves a DSP-trace division workload on Posit16 and Posit32 through
 //! both backends via the typed `Client` handle, then a mixed op-tagged
-//! stream through the native backend, verifies every response against
-//! the exact references, and reports throughput and latency.
+//! stream through the native backend, then the same mixed stream one
+//! layer further out: over TCP loopback through the sharded serving
+//! tier (`Server`/`ServiceClient`, docs/SERVING.md). Every response is
+//! verified against the exact references; throughput and latency are
+//! reported. (The old division-only `Divider` plays no part here — it
+//! is deprecated in favor of `Unit` behind the coordinator.)
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example serve_divide
@@ -109,6 +113,43 @@ fn run_mixed(n: u32) {
     svc.shutdown();
 }
 
+/// The same mixed stream through the networked serving tier: a sharded
+/// TCP server on loopback (router → shards → units, docs/SERVING.md)
+/// driven by the wire-protocol client. `posit-div serve --listen` /
+/// `posit-div client` run this exact path between processes; here both
+/// ends live in one process for a self-contained demo.
+fn run_networked(n: u32) {
+    let mut cfg = ShardConfig::default();
+    cfg.service.n = n;
+    let shards = cfg.shards;
+    let server = Server::bind("127.0.0.1:0", cfg).expect("bind loopback");
+    let mut client = ServiceClient::connect(server.local_addr(), n).expect("connect loopback");
+
+    let mix = OpMix::parse("div:6,sqrt:2,mul:4,add:4,sub:2,fma:2,dot:2,fsum:1,axpy:1")
+        .expect("literal mix parses");
+    let mut wl = workload::MixedOps::new(n, mix, 0xE2E0 + n as u64);
+    let reqs = workload::take_requests(&mut wl, REQUESTS / 5);
+
+    let t0 = Instant::now();
+    let results = client.run_ops(&reqs).expect("loopback transport");
+    let wall = t0.elapsed();
+    for (i, (req, res)) in reqs.iter().zip(&results).enumerate() {
+        let got = res.as_ref().expect("no shed below the admission budget");
+        assert_eq!(*got, req.golden(), "networked {} i={i}", req.op);
+    }
+
+    client.shutdown_server().expect("shutdown frame");
+    let svc = server.wait();
+    println!("\n[sharded tcp] Posit{n}: {} requests in {wall:.2?}", reqs.len());
+    println!(
+        "  throughput     : {:>12.0} op/s over loopback ({shards} shards)",
+        reqs.len() as f64 / wall.as_secs_f64()
+    );
+    print!("{}", svc.counters_render());
+    println!("  verified       : {0}/{0} bit-exact vs exact references", reqs.len());
+    svc.shutdown();
+}
+
 fn main() {
     println!("=== end-to-end: three-layer posit unit service ===");
     for n in [16u32, 32] {
@@ -124,5 +165,6 @@ fn main() {
         );
         run_mixed(n);
     }
+    run_networked(16);
     println!("\nall served responses verified bit-exact against the exact references");
 }

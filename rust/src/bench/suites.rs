@@ -14,7 +14,9 @@ use std::time::Duration;
 use super::harness::BenchCli;
 use super::report::Entry;
 use super::{bench, bench_batched, black_box, Measurement, Profile, Runner};
-use crate::coordinator::{Backend, BatchPolicy, DivisionService, ServiceConfig};
+use crate::coordinator::{
+    Backend, BatchPolicy, DivisionService, Histogram, LatencyPanel, ServedBy, ServiceConfig,
+};
 use crate::division::selection::derive_radix4_thresholds;
 use crate::division::{golden, iterations, latency_cycles, scaling, Algorithm};
 use crate::hardware::components as hc;
@@ -22,8 +24,9 @@ use crate::hardware::report as hw_report;
 use crate::hardware::{combinational, pipelined, synth, Cost, Mode, TSMC28};
 use crate::posit::{mask, Posit};
 use crate::quire;
+use crate::service::{Server, ServiceClient, ShardConfig};
 use crate::testkit::Rng;
-use crate::unit::{ExecTier, FastPath, Op, Unit};
+use crate::unit::{ExecTier, FastPath, Op, OpRequest, Unit};
 use crate::workload;
 
 /// One registered suite.
@@ -117,7 +120,7 @@ pub const SUITES: &[Suite] = &[
     Suite {
         name: "service_e2e",
         title: "end-to-end service throughput",
-        about: "coordinator div/s across batch sizes and backends",
+        about: "coordinator div/s across batches/backends + sharded TCP serving with SLO rows",
         tier_aware: false,
         run: service_e2e,
     },
@@ -776,8 +779,132 @@ fn service_run(
     })
 }
 
+/// Convert a merged op × lane SLO panel into report rows: one p999 row
+/// per cell that saw traffic, plus per-lane aggregate p50/p99/p999.
+/// `per_op_ns` carries the quantile (the histogram bucket's upper bound,
+/// in ns) and `ops_per_sec` its reciprocal so the regression gate's rate
+/// math still applies; `samples` is the cell's request count. Shared
+/// with the `serve --json` report on the CLI.
+pub fn latency_rows(n: u32, panel: &LatencyPanel) -> Vec<Entry> {
+    fn row(n: u32, name: String, h: &Histogram, q: f64, tag: &str) -> Entry {
+        let ns = (h.quantile(q).as_nanos() as f64).max(1.0);
+        Entry {
+            name: format!("{name} {tag}"),
+            width: Some(n),
+            algorithm: None,
+            path: Some("service:latency".to_string()),
+            per_op_ns: ns,
+            ops_per_sec: 1e9 / ns,
+            samples: h.count().max(1),
+            iters_per_sample: 1,
+        }
+    }
+    let mut rows = Vec::new();
+    for (op, lane, h) in panel.nonempty() {
+        rows.push(row(n, format!("Posit{n} {} x {}", op.name(), lane.name()), h, 0.999, "p999"));
+    }
+    for lane in ServedBy::ALL {
+        let agg = panel.lane_aggregate(lane);
+        if agg.count() == 0 {
+            continue;
+        }
+        for (tag, q) in [("p50", 0.5), ("p99", 0.99), ("p999", 0.999)] {
+            rows.push(row(n, format!("Posit{n} {} lane", lane.name()), &agg, q, tag));
+        }
+    }
+    rows
+}
+
+/// One request per op kind, so the sharded TCP section's latency row set
+/// is identical in every profile (the suite contract) no matter how the
+/// random mix happens to sample.
+fn every_kind_once(n: u32) -> Vec<OpRequest> {
+    let one = Posit::from_f64(n, 1.0);
+    vec![
+        OpRequest::div(one, one),
+        OpRequest::sqrt(one),
+        OpRequest::mul(one, one),
+        OpRequest::add(one, one),
+        OpRequest::sub(one, one),
+        OpRequest::mul_add(one, one, one),
+        OpRequest::dot(&[one], &[one]).expect("matched lanes"),
+        OpRequest::fused_sum(&[one]).expect("nonempty vector"),
+        OpRequest::axpy(one, &[one], &[one]).expect("matched lanes"),
+    ]
+}
+
+/// Sharded serving over TCP loopback: mixed op traffic through two
+/// coordinator shards behind the wire protocol, golden-verified, with
+/// the shards' merged SLO panel emitted as latency rows.
+fn sharded_tcp_run(requests: usize, r: &mut Runner) {
+    let n = 16u32;
+    let cfg = ShardConfig {
+        shards: 2,
+        // far above the client's pipeline window: this section measures
+        // latency under load, not shed behavior (the tests cover that)
+        queue_capacity: 8192,
+        service: ServiceConfig {
+            n,
+            backend: Backend::Native { alg: Algorithm::DEFAULT, threads: 4 },
+            policy: BatchPolicy { max_batch: 256, max_wait: Duration::from_micros(200) },
+            tier: ExecTier::Auto,
+        },
+    };
+    let server = match Server::bind("127.0.0.1:0", cfg) {
+        Ok(s) => s,
+        Err(e) => {
+            println!("sharded tcp                  SKIP ({e})");
+            return;
+        }
+    };
+    let mut client = match ServiceClient::connect(server.local_addr(), n) {
+        Ok(c) => c,
+        Err(e) => {
+            println!("sharded tcp                  SKIP ({e})");
+            server.shutdown().shutdown();
+            return;
+        }
+    };
+    let mix = workload::OpMix::parse("div:4,sqrt:2,mul:3,add:3,sub:2,fma:2,dot:1,fsum:1,axpy:1")
+        .expect("static mix");
+    let mut wl = workload::MixedOps::new(n, mix, 0xC0FFEE);
+    let mut reqs = workload::take_requests(&mut wl, requests);
+    reqs.extend(every_kind_once(n));
+    let t0 = std::time::Instant::now();
+    let results = client.run_ops(&reqs).expect("loopback transport");
+    let wall = t0.elapsed();
+    for (i, (req, res)) in reqs.iter().zip(&results).enumerate() {
+        let got = res.as_ref().expect("queue capacity exceeds the pipeline window");
+        assert_eq!(*got, req.golden(), "{} sample {i}", req.op);
+    }
+    client.shutdown_server().expect("shutdown frame");
+    let svc = server.wait();
+    assert_eq!(svc.total_requests(), reqs.len() as u64);
+    println!(
+        "sharded tcp (2 shards)       {:>10.0} op/s over loopback ({} requests, {} shed)",
+        reqs.len() as f64 / wall.as_secs_f64(),
+        reqs.len(),
+        svc.shed_total(),
+    );
+    r.add_entry(Entry {
+        name: format!("Posit{n} sharded tcp 2-shard mixed"),
+        width: Some(n),
+        algorithm: None,
+        path: Some("service:tcp".to_string()),
+        per_op_ns: wall.as_secs_f64() * 1e9 / reqs.len() as f64,
+        ops_per_sec: reqs.len() as f64 / wall.as_secs_f64(),
+        samples: 1,
+        iters_per_sample: reqs.len() as u64,
+    });
+    for e in latency_rows(n, &svc.latency_snapshot()) {
+        r.add_entry(e);
+    }
+    svc.shutdown();
+}
+
 /// End-to-end service bench: coordinator throughput across batch sizes and
-/// backends (native engines vs the AOT PJRT graph). PJRT rows need
+/// backends (native engines vs the AOT PJRT graph), then the sharded TCP
+/// serving tier over loopback with its SLO latency rows. PJRT rows need
 /// `make artifacts` and a build with the `xla` feature (skipped otherwise).
 fn service_e2e(cli: &BenchCli, r: &mut Runner) {
     let requests = match cli.profile {
@@ -811,6 +938,8 @@ fn service_e2e(cli: &BenchCli, r: &mut Runner) {
             }
         }
     }
+    println!("\n=== sharded TCP serving (Posit16, loopback, {requests} requests) ===");
+    sharded_tcp_run(requests, r);
 }
 
 #[cfg(test)]

@@ -73,13 +73,160 @@ impl Histogram {
 
     pub fn summary(&self) -> String {
         format!(
-            "count={} mean={:?} p50<={:?} p99<={:?} max={:?}",
+            "count={} mean={:?} p50<={:?} p99<={:?} p999<={:?} max={:?}",
             self.count(),
             self.mean(),
             self.quantile(0.50),
             self.quantile(0.99),
+            self.quantile(0.999),
             self.max()
         )
+    }
+
+    /// Fold another histogram's samples into this one (used to aggregate
+    /// per-shard histograms into a fleet view). Both sides may be live;
+    /// the merge is a relaxed snapshot, like every other read here.
+    pub fn merge_from(&self, other: &Histogram) {
+        for (mine, theirs) in self.buckets.iter().zip(other.buckets.iter()) {
+            let v = theirs.load(Ordering::Relaxed);
+            if v > 0 {
+                mine.fetch_add(v, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum_ns.fetch_add(other.sum_ns.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max_ns.fetch_max(other.max_ns.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+}
+
+/// Which execution lane ultimately served a request: the Fast kernels,
+/// the cycle-accurate Datapath engines, or the PJRT graph. This is the
+/// *resolved* serving lane (`ExecTier::Auto` never appears here), the
+/// second axis of the [`LatencyPanel`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServedBy {
+    Fast,
+    Datapath,
+    Pjrt,
+}
+
+impl ServedBy {
+    /// All lanes, in [`ServedBy::index`] order.
+    pub const ALL: [ServedBy; 3] = [ServedBy::Fast, ServedBy::Datapath, ServedBy::Pjrt];
+
+    /// Map a *resolved* native tier to its lane.
+    pub fn from_tier(tier: ExecTier) -> ServedBy {
+        match tier {
+            ExecTier::Fast | ExecTier::Auto => ServedBy::Fast,
+            ExecTier::Datapath => ServedBy::Datapath,
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            ServedBy::Fast => 0,
+            ServedBy::Datapath => 1,
+            ServedBy::Pjrt => 2,
+        }
+    }
+
+    /// Stable lowercase name (`fast`, `datapath`, `pjrt`).
+    pub fn name(self) -> &'static str {
+        match self {
+            ServedBy::Fast => "fast",
+            ServedBy::Datapath => "datapath",
+            ServedBy::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// SLO telemetry: one end-to-end latency [`Histogram`] per
+/// (operation kind × serving lane). Recorded by the coordinator leader at
+/// response time (enqueue → response, the latency a client observes),
+/// read as p50/p99/p999 by `serve`, the service bench rows and the soak
+/// tests.
+pub struct LatencyPanel {
+    /// `[op kind][lane]`, indexed by [`Op::kind_index`] ×
+    /// [`ServedBy::index`].
+    cells: [[Histogram; 3]; 9],
+}
+
+impl Default for LatencyPanel {
+    fn default() -> Self {
+        LatencyPanel { cells: std::array::from_fn(|_| std::array::from_fn(|_| Histogram::new())) }
+    }
+}
+
+impl LatencyPanel {
+    pub fn record(&self, op: Op, lane: ServedBy, d: Duration) {
+        self.cells[op.kind_index()][lane.index()].record(d);
+    }
+
+    /// The histogram for one (op kind, lane) cell.
+    pub fn get(&self, op: Op, lane: ServedBy) -> &Histogram {
+        &self.cells[op.kind_index()][lane.index()]
+    }
+
+    /// Every cell that has served traffic, as `(op, lane, histogram)` in
+    /// stable kind × lane order.
+    pub fn nonempty(&self) -> Vec<(Op, ServedBy, &Histogram)> {
+        let mut out = Vec::new();
+        for op in Op::KINDS {
+            for lane in ServedBy::ALL {
+                let h = self.get(op, lane);
+                if h.count() > 0 {
+                    out.push((op, lane, h));
+                }
+            }
+        }
+        out
+    }
+
+    /// Fold every cell of another panel into this one (per-shard →
+    /// fleet aggregation).
+    pub fn merge_from(&self, other: &LatencyPanel) {
+        for (mine, theirs) in self.cells.iter().zip(other.cells.iter()) {
+            for (m, t) in mine.iter().zip(theirs.iter()) {
+                if t.count() > 0 {
+                    m.merge_from(t);
+                }
+            }
+        }
+    }
+
+    /// All samples across ops for one lane, merged into a fresh
+    /// histogram (the "mixed traffic" tail for that lane).
+    pub fn lane_aggregate(&self, lane: ServedBy) -> Histogram {
+        let agg = Histogram::new();
+        for op in Op::KINDS {
+            let h = self.get(op, lane);
+            if h.count() > 0 {
+                agg.merge_from(h);
+            }
+        }
+        agg
+    }
+
+    /// Multi-line render of every nonempty cell:
+    /// `div x fast: n=... p50<=... p99<=... p999<=... max=...`.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (op, lane, h) in self.nonempty() {
+            out.push_str(&format!(
+                "{} x {}: n={} p50<={:?} p99<={:?} p999<={:?} max={:?}\n",
+                op.name(),
+                lane.name(),
+                h.count(),
+                h.quantile(0.50),
+                h.quantile(0.99),
+                h.quantile(0.999),
+                h.max()
+            ));
+        }
+        if out.is_empty() {
+            out.push_str("(no traffic)\n");
+        }
+        out
     }
 }
 
@@ -220,6 +367,12 @@ pub struct Metrics {
     pub ops: OpCounters,
     /// Requests served, split by execution tier.
     pub tiers: TierCounters,
+    /// End-to-end latency per (op kind × serving lane) — the SLO panel.
+    pub latency: LatencyPanel,
+    /// Requests shed by admission control (`ServiceOverloaded`): counted
+    /// by the sharded router against the target shard's metrics, never
+    /// enqueued, never part of `requests`.
+    pub shed: AtomicU64,
 }
 
 impl Metrics {
@@ -301,6 +454,55 @@ mod tests {
         assert_eq!(t.fast_simd.load(Ordering::Relaxed), 30);
         let s = t.summary();
         assert!(s.contains("table=50") && s.contains("simd=30"), "{s}");
+    }
+
+    #[test]
+    fn histogram_merge_accumulates() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        for i in 1..=100u64 {
+            a.record(Duration::from_nanos(i * 10));
+            b.record(Duration::from_micros(i));
+        }
+        a.merge_from(&b);
+        assert_eq!(a.count(), 200);
+        assert!(a.max() >= b.max());
+        assert!(a.quantile(0.999) >= a.quantile(0.5));
+        assert!(a.summary().contains("p999<="), "{}", a.summary());
+    }
+
+    #[test]
+    fn latency_panel_buckets_by_op_and_lane() {
+        let p = LatencyPanel::default();
+        p.record(Op::DIV, ServedBy::Fast, Duration::from_micros(10));
+        p.record(Op::Div { alg: crate::division::Algorithm::Nrd }, ServedBy::Fast,
+                 Duration::from_micros(20));
+        p.record(Op::DIV, ServedBy::Datapath, Duration::from_micros(30));
+        p.record(Op::Sqrt, ServedBy::Pjrt, Duration::from_micros(40));
+        assert_eq!(p.get(Op::DIV, ServedBy::Fast).count(), 2, "algorithm-blind");
+        assert_eq!(p.get(Op::DIV, ServedBy::Datapath).count(), 1);
+        assert_eq!(p.get(Op::Sqrt, ServedBy::Pjrt).count(), 1);
+        assert_eq!(p.get(Op::Mul, ServedBy::Fast).count(), 0);
+        let cells = p.nonempty();
+        assert_eq!(cells.len(), 3);
+        assert!(p.render().contains("div x fast"), "{}", p.render());
+        // lane aggregate folds ops together
+        assert_eq!(p.lane_aggregate(ServedBy::Fast).count(), 2);
+        // panel merge folds cell-wise
+        let q = LatencyPanel::default();
+        q.merge_from(&p);
+        q.merge_from(&p);
+        assert_eq!(q.get(Op::DIV, ServedBy::Fast).count(), 4);
+    }
+
+    #[test]
+    fn served_by_maps_resolved_tiers() {
+        assert_eq!(ServedBy::from_tier(ExecTier::Fast), ServedBy::Fast);
+        assert_eq!(ServedBy::from_tier(ExecTier::Datapath), ServedBy::Datapath);
+        for (i, lane) in ServedBy::ALL.iter().enumerate() {
+            assert_eq!(lane.index(), i);
+        }
+        assert_eq!(ServedBy::Pjrt.name(), "pjrt");
     }
 
     #[test]

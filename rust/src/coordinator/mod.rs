@@ -39,7 +39,7 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 pub use batcher::BatchPolicy;
-pub use metrics::{Histogram, Metrics, OpCounters, TierCounters};
+pub use metrics::{Histogram, LatencyPanel, Metrics, OpCounters, ServedBy, TierCounters};
 // The worker pool is a crate-level module now ([`crate::pool`]), shared
 // by every parallel batch path; these re-exports keep the old
 // `coordinator::{pool, Pool}` paths working.
@@ -371,6 +371,8 @@ impl DivisionService {
                 while let Some(batch) = batcher::collect_batch(&rx, policy) {
                     let t0 = Instant::now();
                     let mut results = vec![0u64; batch.len()];
+                    // which lane served each request, for the SLO panel
+                    let mut lanes = vec![ServedBy::Fast; batch.len()];
                     for (op, idxs) in batcher::group_indices(&batch, |r| r.op) {
                         let mut out = vec![0u64; idxs.len()];
                         if op.is_reduction() {
@@ -394,6 +396,7 @@ impl DivisionService {
                                     if op.arity() >= 3 { &alpha } else { &[] };
                                 let (served, path) =
                                     native.run(op, va, vb, lc, &mut out[k..k + 1]);
+                                lanes[i] = ServedBy::from_tier(served);
                                 m.tiers.record(served, 1);
                                 if let Some(p) = path {
                                     m.tiers.record_fast_path(p, 1);
@@ -417,6 +420,9 @@ impl DivisionService {
                         match &mut exec {
                             Exec::Native(native) => {
                                 let (served, path) = native.run(op, &a, &b, &c, &mut out);
+                                for &i in &idxs {
+                                    lanes[i] = ServedBy::from_tier(served);
+                                }
                                 m.tiers.record(served, idxs.len() as u64);
                                 if let Some(p) = path {
                                     m.tiers.record_fast_path(p, idxs.len() as u64);
@@ -434,9 +440,15 @@ impl DivisionService {
                                             out = vec![1u64 << (n - 1); idxs.len()];
                                         }
                                     }
+                                    for &i in &idxs {
+                                        lanes[i] = ServedBy::Pjrt;
+                                    }
                                     m.tiers.record_pjrt(idxs.len() as u64);
                                 } else {
                                     let (served, path) = native.run(op, &a, &b, &c, &mut out);
+                                    for &i in &idxs {
+                                        lanes[i] = ServedBy::from_tier(served);
+                                    }
                                     m.tiers.record(served, idxs.len() as u64);
                                     if let Some(p) = path {
                                         m.tiers.record_fast_path(p, idxs.len() as u64);
@@ -450,14 +462,16 @@ impl DivisionService {
                     }
                     m.batch_latency.record(t0.elapsed());
                     m.batches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                    for (req, q) in batch.into_iter().zip(results) {
+                    for ((req, q), lane) in batch.into_iter().zip(results).zip(lanes) {
                         if q == 1u64 << (n - 1) {
                             m.special_results
                                 .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                         }
                         m.requests.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                         m.ops.record(req.op);
-                        m.request_latency.record(req.enqueued.elapsed());
+                        let waited = req.enqueued.elapsed();
+                        m.request_latency.record(waited);
+                        m.latency.record(req.op, lane, waited);
                         let _ = req.respond.send(q); // receiver may have gone
                     }
                 }
@@ -753,6 +767,35 @@ mod tests {
             client.submit_op(OpRequest::fused_sum(&[Posit::one(8)]).unwrap()).err(),
             Some(PositError::WidthMismatch { expected: 16, got: 8 })
         );
+        svc.shutdown();
+    }
+
+    #[test]
+    fn latency_panel_records_per_op_and_lane() {
+        let svc = DivisionService::start(native_cfg(16)).unwrap();
+        let client = svc.client();
+        let nine = Posit::from_f64(16, 9.0);
+        for _ in 0..10 {
+            client.run_op(OpRequest::sqrt(nine)).unwrap();
+            client.divide(nine, Posit::from_f64(16, 3.0)).unwrap();
+        }
+        let m = svc.metrics();
+        // Auto config serves batch traffic from the fast lane
+        assert_eq!(m.latency.get(Op::Sqrt, ServedBy::Fast).count(), 10);
+        assert_eq!(m.latency.get(Op::DIV, ServedBy::Fast).count(), 10);
+        assert_eq!(m.latency.get(Op::DIV, ServedBy::Datapath).count(), 0);
+        assert!(
+            m.latency.get(Op::DIV, ServedBy::Fast).quantile(0.999) > std::time::Duration::ZERO
+        );
+        assert!(m.latency.render().contains("sqrt x fast"), "{}", m.latency.render());
+
+        // pinning Datapath moves the same traffic to the other lane
+        let cfg = ServiceConfig { tier: ExecTier::Datapath, ..native_cfg(16) };
+        let dp = DivisionService::start(cfg).unwrap();
+        dp.client().run_op(OpRequest::sqrt(nine)).unwrap();
+        assert_eq!(dp.metrics().latency.get(Op::Sqrt, ServedBy::Datapath).count(), 1);
+        assert_eq!(dp.metrics().latency.get(Op::Sqrt, ServedBy::Fast).count(), 0);
+        dp.shutdown();
         svc.shutdown();
     }
 

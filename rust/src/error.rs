@@ -43,6 +43,15 @@ pub enum PositError {
     Execution { detail: String },
     /// The division service has shut down (or its leader thread is gone).
     ServiceStopped,
+    /// Admission control shed this request: the target shard's bounded
+    /// in-flight queue was at capacity. The request was **not** enqueued;
+    /// back off and resubmit. (`inflight` is the queue depth observed at
+    /// admission time.)
+    ServiceOverloaded { shard: usize, inflight: usize, capacity: usize },
+    /// A wire-protocol frame was malformed: bad magic, unsupported
+    /// version, oversized or truncated payload, unknown frame kind or
+    /// opcode, or operand bits outside the negotiated posit width.
+    Protocol { detail: String },
 }
 
 impl core::fmt::Display for PositError {
@@ -77,6 +86,12 @@ impl core::fmt::Display for PositError {
             PositError::Artifacts { detail } => write!(f, "{detail}"),
             PositError::Execution { detail } => write!(f, "execution failed: {detail}"),
             PositError::ServiceStopped => write!(f, "division service stopped"),
+            PositError::ServiceOverloaded { shard, inflight, capacity } => write!(
+                f,
+                "service overloaded: shard {shard} at {inflight}/{capacity} in-flight \
+                 requests, request shed"
+            ),
+            PositError::Protocol { detail } => write!(f, "wire protocol error: {detail}"),
         }
     }
 }
@@ -104,6 +119,10 @@ mod tests {
         assert!(PositError::Artifacts { detail: "no artifacts found".into() }
             .to_string()
             .contains("no artifacts"));
+        let e = PositError::ServiceOverloaded { shard: 3, inflight: 128, capacity: 128 };
+        assert!(e.to_string().contains("shard 3") && e.to_string().contains("128/128"));
+        let e = PositError::Protocol { detail: "truncated frame".into() };
+        assert!(e.to_string().contains("truncated frame"));
     }
 
     #[test]

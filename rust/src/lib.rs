@@ -54,7 +54,17 @@
 //!   serving **mixed op-tagged traffic** (grouped per op, each group on
 //!   its cached unit) from either the native Rust engines or an
 //!   AOT-compiled JAX/Pallas kernel through PJRT ([`runtime`]); clients
-//!   talk to it through the typed [`coordinator::Client`] handle.
+//!   talk to it through the typed [`coordinator::Client`] handle. Every
+//!   shard keeps SLO telemetry: p50/p99/p999 latency per op × serving
+//!   lane ([`coordinator::LatencyPanel`]).
+//! * [`service`] — the production serving tier above the coordinator:
+//!   N coordinator shards behind a router with consistent `(op, width)`
+//!   affinity ([`service::shard_for`]), bounded admission control that
+//!   sheds overload with the typed [`PositError::ServiceOverloaded`],
+//!   and a `std`-only length-prefixed TCP wire protocol
+//!   ([`service::wire`], normatively documented in `docs/SERVING.md`) —
+//!   `posit-div serve --listen` / `posit-div client` on the CLI,
+//!   [`service::Server`] / [`service::ServiceClient`] in code.
 //! * [`error`] — the typed [`PositError`] every fallible public entry
 //!   point returns (no panicking library surface, no `anyhow` leakage).
 //! * [`bench`] / [`testkit`] — self-contained micro-benchmark and
@@ -100,9 +110,41 @@
 //! # Ok::<(), posit_div::PositError>(())
 //! ```
 //!
-//! For a running service (dynamic batching, mixed-op routing, worker
-//! pool, metrics), see [`coordinator::DivisionService`] and
-//! `examples/serve_divide.rs`.
+//! ## Networked serving quickstart
+//!
+//! The serving tier runs over TCP with no dependencies beyond `std` —
+//! bind a sharded server, connect a client (same process here; normally
+//! another one), and drive it:
+//!
+//! ```
+//! use posit_div::prelude::*;
+//!
+//! let mut cfg = ShardConfig::default();
+//! cfg.service.n = 16;
+//! let server = Server::bind("127.0.0.1:0", cfg)?; // port 0: OS-assigned
+//!
+//! let mut client = ServiceClient::connect(server.local_addr(), 16)?;
+//! let q = client.run_op(&OpRequest::div(
+//!     Posit::from_f64(16, 355.0),
+//!     Posit::from_f64(16, 113.0),
+//! ))?;
+//! assert_eq!(q, OpRequest::div(
+//!     Posit::from_f64(16, 355.0),
+//!     Posit::from_f64(16, 113.0),
+//! ).golden());
+//!
+//! client.shutdown_server()?;           // SHUTDOWN frame: drain + stop
+//! let svc = server.wait();             // returns the shards' metrics
+//! assert_eq!(svc.total_requests(), 1);
+//! svc.shutdown();
+//! # Ok::<(), posit_div::PositError>(())
+//! ```
+//!
+//! For a running in-process service (dynamic batching, mixed-op routing,
+//! worker pool, metrics), see [`coordinator::DivisionService`] and
+//! `examples/serve_divide.rs` — and note that the old division-only
+//! `Divider` is deprecated everywhere in favor of [`unit::Unit`]; it
+//! survives only as a thin compatibility wrapper.
 
 pub mod bench;
 pub mod cli;
@@ -115,6 +157,7 @@ pub mod posit;
 pub mod prelude;
 pub mod quire;
 pub mod runtime;
+pub mod service;
 pub mod testkit;
 pub mod unit;
 pub mod workload;

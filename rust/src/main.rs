@@ -3,14 +3,17 @@
 
 use std::time::Instant;
 
-use posit_div::bench::{harness, suites};
+use posit_div::bench::report::Report;
+use posit_div::bench::{harness, suites, Config, Profile};
 use posit_div::cli::Args;
 use posit_div::coordinator::{Backend, BatchPolicy, DivisionService, ServiceConfig};
 use posit_div::division::{golden, Algorithm};
 use posit_div::hardware::{report, Mode, TSMC28};
 use posit_div::posit::Posit;
+use posit_div::service::{Server, ServiceClient, ShardConfig};
 use posit_div::unit::{ExecTier, Op, Unit};
-use posit_div::workload::{self, OpMix, Workload};
+use posit_div::workload::{self, OpMix, OpenLoop, Workload};
+use posit_div::PositError;
 
 const USAGE: &str = "usage: posit-div <subcommand> [flags]
 
@@ -25,6 +28,15 @@ subcommands:
         [--mix div:6,sqrt:2,dot:2,fsum:1,axpy:1,...]
         [--tier T]                                  serve division or mixed-op traffic
                                                     (dot/fsum/axpy = quire reductions)
+  serve --listen HOST:PORT [--shards K] [--queue-cap Q] [--json P]
+        [--n N] [--backend B] [--batch N] [--threads N] [--tier T]
+                                                    sharded TCP server (docs/SERVING.md);
+                                                    runs until a client sends --shutdown
+  client --connect HOST:PORT [--n N] [--requests N] [--mix M] [--rate R]
+         [--window W] [--verify-every K] [--shutdown]
+                                                    drive a server over TCP: closed-loop
+                                                    pipelined, or open-loop with --rate
+                                                    (arrivals/s); --shutdown stops it
   engines                                           list algorithm variants
   bench <suite> [--json P] [--baseline P] [--write-baseline] [--quick|--full]
         [--threshold PCT] [--advisory] [--tier T]   run a bench suite + regression gate
@@ -61,6 +73,7 @@ fn main() {
         Some("sqrt") => cmd_sqrt(&args),
         Some("verify") => cmd_verify(&args),
         Some("serve") => cmd_serve(&args),
+        Some("client") => cmd_client(&args),
         Some("bench") => cmd_bench(&args),
         Some("engines") => {
             for a in Algorithm::ALL {
@@ -264,6 +277,10 @@ fn cmd_bench(args: &Args) {
 }
 
 fn cmd_serve(args: &Args) {
+    if let Some(listen) = args.flag("listen") {
+        cmd_serve_listen(args, listen);
+        return;
+    }
     let n: u32 = args.get("n", 16);
     let requests: usize = args.get("requests", 100_000);
     let batch: usize = args.get("batch", 256);
@@ -326,4 +343,154 @@ fn cmd_serve(args: &Args) {
     println!("  ops: {}", m.ops.summary());
     println!("  tiers: {}", m.tiers.summary());
     svc.shutdown();
+}
+
+/// `serve --listen HOST:PORT`: the sharded TCP serving tier. Runs until
+/// a client sends a SHUTDOWN frame (`posit-div client --connect ADDR
+/// --shutdown`), then prints per-shard counters and the merged SLO
+/// latency panel — and, with `--json P`, writes the panel as a
+/// `service_live` bench report (`posit-div bench validate` checks it).
+fn cmd_serve_listen(args: &Args, listen: &str) {
+    let n: u32 = args.get("n", 16);
+    let batch: usize = args.get("batch", 256);
+    let threads: usize = args.get("threads", 4);
+    let shards: usize = args.get("shards", 2);
+    let queue_capacity: usize = args.get("queue-cap", 4096);
+    let backend = match args.flag("backend").unwrap_or("native") {
+        "pjrt" => Backend::Pjrt { artifacts_dir: "artifacts".into() },
+        _ => Backend::Native { alg: Algorithm::DEFAULT, threads },
+    };
+    let cfg = ShardConfig {
+        shards,
+        queue_capacity,
+        service: ServiceConfig {
+            n,
+            backend,
+            policy: BatchPolicy {
+                max_batch: batch,
+                max_wait: std::time::Duration::from_micros(200),
+            },
+            tier: tier_flag(args),
+        },
+    };
+    let server = Server::bind(listen, cfg).unwrap_or_else(|e| {
+        eprintln!("bind {listen} failed: {e}");
+        std::process::exit(1);
+    });
+    let addr = server.local_addr();
+    println!(
+        "listening on {addr} (Posit{n}, {shards} shards, queue {queue_capacity}); \
+         stop with `posit-div client --connect {addr} --shutdown`"
+    );
+    let svc = server.wait(); // blocks until a SHUTDOWN frame arrives
+    println!("shutdown requested; connections drained");
+    print!("{}", svc.counters_render());
+    let panel = svc.latency_snapshot();
+    print!("{}", panel.render());
+    println!("total: requests={} shed={}", svc.total_requests(), svc.shed_total());
+    if let Some(path) = args.flag("json") {
+        let rows = suites::latency_rows(n, &panel);
+        let rep = Report::new("service_live", Profile::Quick, Config::quick(), rows);
+        match rep.save(std::path::Path::new(path)) {
+            Ok(()) => println!("wrote {} latency rows to {path}", rep.measurements.len()),
+            Err(e) => {
+                eprintln!("failed to write {path}: {e}");
+                svc.shutdown();
+                std::process::exit(1);
+            }
+        }
+    }
+    svc.shutdown();
+}
+
+/// `client --connect HOST:PORT`: drive a serving tier over TCP.
+/// Closed-loop (windowed pipelining) by default; `--rate R` switches to
+/// an open-loop Poisson arrival process, the way an SLO sees latency.
+/// Exits non-zero on transport failure, golden-verification mismatch,
+/// or non-shed request errors.
+fn cmd_client(args: &Args) {
+    let addr = args.flag("connect").unwrap_or_else(|| {
+        eprintln!("usage: posit-div client --connect HOST:PORT [flags]\n\n{USAGE}");
+        std::process::exit(2);
+    });
+    let n: u32 = args.get("n", 16);
+    let requests: usize = args.get("requests", 10_000);
+    let verify_every: usize = args.get("verify-every", 101);
+    let mix_s =
+        args.flag("mix").unwrap_or("div:6,sqrt:2,mul:4,add:4,sub:2,fma:2,dot:1,fsum:1,axpy:1");
+    let mix = OpMix::parse(mix_s).unwrap_or_else(|| {
+        eprintln!("invalid --mix {mix_s:?} (expected e.g. div:6,sqrt:2,mul:4,dot:2,fsum:1,axpy:1)");
+        std::process::exit(2);
+    });
+    let mut client = ServiceClient::connect(addr, n).unwrap_or_else(|e| {
+        eprintln!("connect {addr} failed: {e}");
+        std::process::exit(1);
+    });
+    if let Some(w) = args.flag("window") {
+        client.set_window(w.parse().expect("--window"));
+    }
+    println!("connected to {addr}: Posit{} across {} shards", client.width(), client.shards());
+    if requests > 0 {
+        if let Some(rate) = args.flag("rate") {
+            let rate: f64 = rate.parse().expect("--rate");
+            let mut wl = OpenLoop::new(n, mix, rate, 0x5E12);
+            let rep = client.run_open_loop(&mut wl, requests, verify_every).unwrap_or_else(|e| {
+                eprintln!("open loop failed: {e}");
+                std::process::exit(1);
+            });
+            println!(
+                "open loop @ {:.0}/s nominal, {:.0}/s achieved",
+                wl.rate(),
+                rep.achieved_rate()
+            );
+            println!("  {}", rep.summary());
+            if rep.verify_failures > 0 || rep.errors > 0 {
+                eprintln!(
+                    "{} verification failures, {} request errors",
+                    rep.verify_failures, rep.errors
+                );
+                std::process::exit(1);
+            }
+        } else {
+            let mut wl = workload::MixedOps::new(n, mix, 0x5E12);
+            let reqs = workload::take_requests(&mut wl, requests);
+            let t0 = Instant::now();
+            let results = client.run_ops(&reqs).unwrap_or_else(|e| {
+                eprintln!("transport failed: {e}");
+                std::process::exit(1);
+            });
+            let wall = t0.elapsed();
+            let (mut ok, mut shed, mut errors, mut bad) = (0usize, 0usize, 0usize, 0usize);
+            for (i, (req, res)) in reqs.iter().zip(&results).enumerate() {
+                match res {
+                    Ok(p) => {
+                        ok += 1;
+                        if verify_every != 0 && i % verify_every == 0 && *p != req.golden() {
+                            bad += 1;
+                        }
+                    }
+                    Err(PositError::ServiceOverloaded { .. }) => shed += 1,
+                    Err(_) => errors += 1,
+                }
+            }
+            println!(
+                "closed loop: {requests} requests in {wall:?} ({:.0} op/s) \
+                 ok={ok} shed={shed} errors={errors} verify_failures={bad}",
+                requests as f64 / wall.as_secs_f64()
+            );
+            if bad > 0 || errors > 0 {
+                std::process::exit(1);
+            }
+        }
+    }
+    let closed = if args.has("shutdown") {
+        println!("sending SHUTDOWN");
+        client.shutdown_server()
+    } else {
+        client.bye()
+    };
+    if let Err(e) = closed {
+        eprintln!("close failed: {e}");
+        std::process::exit(1);
+    }
 }

@@ -18,9 +18,10 @@
 //! ```
 
 pub use crate::coordinator::{
-    Backend, BatchHandle, BatchPolicy, Client, DivisionService, Pending, ServiceConfig,
-    UnitService,
+    Backend, BatchHandle, BatchPolicy, Client, DivisionService, Histogram, LatencyPanel, Metrics,
+    Pending, ServedBy, ServiceConfig, UnitService,
 };
+// Deprecated division-only wrapper; prefer `Unit` (see the crate docs).
 #[allow(deprecated)]
 pub use crate::division::Divider;
 pub use crate::division::sqrt::{golden_sqrt, SqrtEngine, SqrtResult};
@@ -29,4 +30,9 @@ pub use crate::error::{PositError, Result};
 pub use crate::pool::Pool;
 pub use crate::posit::{Posit, RoundFrom, RoundInto, P16, P32, P64, P8};
 pub use crate::quire::{axpy, dot, fused_sum, gemm, Quire};
+pub use crate::service::{
+    shard_for, OpenLoopReport, Server, ServiceClient, ShardConfig, ShardTicket, ShardedClient,
+    ShardedService,
+};
 pub use crate::unit::{ExecTier, FastPath, Op, OpRequest, Unit};
+pub use crate::workload::{MixedOps, OpMix, OpenLoop};

@@ -1,0 +1,430 @@
+//! The production serving tier: sharded coordinators behind a router
+//! with consistent op/width affinity, bounded admission control, and a
+//! `std`-only TCP wire protocol.
+//!
+//! Layering, top to bottom (`docs/SERVING.md` walks the same stack):
+//!
+//! ```text
+//! ServiceClient ── TCP frames ──▶ Server (accept + per-conn threads)
+//!                                   │ ShardedClient (router)
+//!                                   ▼
+//!                     shard_for(op, n) → DivisionService shard 0..K
+//!                                   │ leader thread + dynamic batcher
+//!                                   ▼
+//!                            Unit → ExecTier → fast kernels / datapath
+//! ```
+//!
+//! * [`shard_for`] routes every request by `(op, width)` — all traffic
+//!   for one operation kind (and, for division, one algorithm) lands on
+//!   one shard, so each shard's per-op [`crate::unit::Unit`] cache and
+//!   batcher see homogeneous streams that fill wide batches.
+//! * [`ShardedClient::submit_op`] applies admission control *before*
+//!   enqueueing: each shard has a bounded in-flight budget
+//!   ([`ShardConfig::queue_capacity`]); at capacity the request is shed
+//!   with [`PositError::ServiceOverloaded`] — typed, never a hang or a
+//!   panic — and counted in the target shard's
+//!   [`crate::coordinator::Metrics::shed`].
+//! * The wire layer ([`wire`]) and the TCP server/client ([`net`]) make
+//!   the whole stack reachable from another process:
+//!   `posit-div serve --listen` / `posit-div client`.
+//!
+//! SLO telemetry rides on the coordinator's per-shard
+//! [`crate::coordinator::LatencyPanel`] (p50/p99/p999 per op × lane);
+//! [`ShardedService::latency_snapshot`] merges the shards into one panel
+//! for reports.
+
+pub mod net;
+pub mod wire;
+
+pub use net::{OpenLoopReport, Server, ServiceClient};
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::coordinator::{
+    Client, DivisionService, LatencyPanel, Metrics, Pending, ServiceConfig,
+};
+use crate::error::{PositError, Result};
+use crate::posit::Posit;
+use crate::unit::{Op, OpRequest};
+
+/// Configuration of a sharded service: how many coordinator shards to
+/// run and how much in-flight work each accepts before shedding. Every
+/// shard runs an identical [`ServiceConfig`] (width, backend, batch
+/// policy, tier).
+#[derive(Clone, Debug)]
+pub struct ShardConfig {
+    /// Number of coordinator shards (each with its own leader thread,
+    /// batcher and unit cache). Must be >= 1.
+    pub shards: usize,
+    /// Per-shard bound on admitted-but-unfinished requests. Submissions
+    /// beyond it are shed with [`PositError::ServiceOverloaded`]. Must
+    /// be >= 1.
+    pub queue_capacity: usize,
+    /// The per-shard coordinator configuration.
+    pub service: ServiceConfig,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        ShardConfig { shards: 2, queue_capacity: 4096, service: ServiceConfig::default() }
+    }
+}
+
+/// The shard serving `(op, n)` out of `shards`: FNV-1a over the
+/// request's wire identity (opcode, division-algorithm index, width).
+/// Pure and deterministic — every router instance, local or remote,
+/// agrees; the loopback affinity test in `tests/service_e2e.rs` holds it
+/// to that.
+pub fn shard_for(op: Op, n: u32, shards: usize) -> usize {
+    const OFFSET_BASIS: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let (opcode, alg) = wire::op_code(op);
+    let mut h = OFFSET_BASIS;
+    for b in [opcode, alg, n as u8] {
+        h = (h ^ b as u64).wrapping_mul(PRIME);
+    }
+    (h % shards.max(1) as u64) as usize
+}
+
+/// Decrements the owning shard's in-flight counter when the request
+/// leaves the system (response consumed, or the ticket dropped).
+struct InflightGuard {
+    slots: Arc<Vec<AtomicUsize>>,
+    shard: usize,
+}
+
+impl Drop for InflightGuard {
+    fn drop(&mut self) {
+        self.slots[self.shard].fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// An admitted in-flight request: holds one unit of the target shard's
+/// admission budget until waited or dropped.
+pub struct ShardTicket {
+    shard: usize,
+    pending: Pending,
+    guard: InflightGuard,
+}
+
+impl ShardTicket {
+    /// The shard this request was routed to.
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// Block until the shard responds, releasing the admission slot.
+    pub fn wait(self) -> Result<Posit> {
+        let ShardTicket { pending, guard, .. } = self;
+        let result = pending.wait();
+        drop(guard);
+        result
+    }
+}
+
+/// A cheap, cloneable routing handle over the shards: picks the shard
+/// by [`shard_for`], applies admission control, and submits. Does not
+/// keep the service alive (see [`crate::coordinator::Client`]).
+#[derive(Clone)]
+pub struct ShardedClient {
+    n: u32,
+    clients: Arc<Vec<Client>>,
+    inflight: Arc<Vec<AtomicUsize>>,
+    capacity: usize,
+}
+
+impl ShardedClient {
+    /// Posit width served.
+    pub fn width(&self) -> u32 {
+        self.n
+    }
+
+    /// Number of shards routed over.
+    pub fn shards(&self) -> usize {
+        self.clients.len()
+    }
+
+    /// Per-shard admission budget.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// The shard an op routes to (what [`ShardedClient::submit_op`]
+    /// will pick).
+    pub fn shard_of(&self, op: Op) -> usize {
+        shard_for(op, self.n, self.clients.len())
+    }
+
+    /// Current in-flight count of one shard.
+    pub fn inflight(&self, shard: usize) -> usize {
+        self.inflight[shard].load(Ordering::Acquire)
+    }
+
+    /// Route and submit one request. Returns a [`ShardTicket`] holding
+    /// the admission slot, or [`PositError::ServiceOverloaded`] when the
+    /// target shard is at capacity (the request is **not** enqueued).
+    pub fn submit_op(&self, req: OpRequest) -> Result<ShardTicket> {
+        let shard = self.shard_of(req.op);
+        let slot = &self.inflight[shard];
+        let observed = slot.fetch_add(1, Ordering::AcqRel);
+        if observed >= self.capacity {
+            slot.fetch_sub(1, Ordering::AcqRel);
+            let m = self.clients[shard].metrics();
+            m.shed.fetch_add(1, Ordering::Relaxed);
+            return Err(PositError::ServiceOverloaded {
+                shard,
+                inflight: observed,
+                capacity: self.capacity,
+            });
+        }
+        let guard = InflightGuard { slots: self.inflight.clone(), shard };
+        let pending = self.clients[shard].submit_op(req)?;
+        Ok(ShardTicket { shard, pending, guard })
+    }
+
+    /// Blocking submit-and-wait.
+    pub fn run_op(&self, req: OpRequest) -> Result<Posit> {
+        self.submit_op(req)?.wait()
+    }
+
+    /// Shard metrics (shared with the service and every other client).
+    pub fn metrics(&self, shard: usize) -> &Metrics {
+        self.clients[shard].metrics()
+    }
+}
+
+/// `shards` identical coordinator services behind a [`ShardedClient`]
+/// router. The TCP layer ([`net::Server`]) serves exactly this object;
+/// in-process callers can use it directly.
+pub struct ShardedService {
+    shards: Vec<DivisionService>,
+    client: ShardedClient,
+}
+
+impl ShardedService {
+    /// Start every shard (each with its own leader thread and backend).
+    /// Fails up front on a bad width, an unavailable backend, or a
+    /// degenerate config (`shards == 0`, `queue_capacity == 0`).
+    pub fn start(cfg: ShardConfig) -> Result<ShardedService> {
+        if cfg.shards == 0 {
+            return Err(PositError::Execution { detail: "shard count must be >= 1".into() });
+        }
+        if cfg.queue_capacity == 0 {
+            return Err(PositError::Execution {
+                detail: "per-shard queue capacity must be >= 1".into(),
+            });
+        }
+        let mut shards = Vec::with_capacity(cfg.shards);
+        for _ in 0..cfg.shards {
+            shards.push(DivisionService::start(cfg.service.clone())?);
+        }
+        let clients: Vec<Client> = shards.iter().map(|s| s.client()).collect();
+        let inflight: Vec<AtomicUsize> = (0..cfg.shards).map(|_| AtomicUsize::new(0)).collect();
+        let client = ShardedClient {
+            n: cfg.service.n,
+            clients: Arc::new(clients),
+            inflight: Arc::new(inflight),
+            capacity: cfg.queue_capacity,
+        };
+        Ok(ShardedService { shards, client })
+    }
+
+    /// Posit width served.
+    pub fn width(&self) -> u32 {
+        self.client.n
+    }
+
+    /// Number of shards.
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// A routing handle (cloneable, shareable across threads).
+    pub fn client(&self) -> ShardedClient {
+        self.client.clone()
+    }
+
+    /// One shard's metrics.
+    pub fn metrics(&self, shard: usize) -> &Metrics {
+        self.shards[shard].metrics()
+    }
+
+    /// Requests served per shard (admitted and completed by the
+    /// coordinator; sheds are counted separately).
+    pub fn shard_requests(&self) -> Vec<u64> {
+        self.shards
+            .iter()
+            .map(|s| s.metrics().requests.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// Requests served across all shards.
+    pub fn total_requests(&self) -> u64 {
+        self.shard_requests().iter().sum()
+    }
+
+    /// Requests shed by admission control across all shards.
+    pub fn shed_total(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| s.metrics().shed.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Merge every shard's op × lane latency panel into one snapshot
+    /// (the SLO view a report renders).
+    pub fn latency_snapshot(&self) -> LatencyPanel {
+        let panel = LatencyPanel::default();
+        for s in &self.shards {
+            panel.merge_from(&s.metrics().latency);
+        }
+        panel
+    }
+
+    /// One line per shard: requests, batches, sheds, p99. The `serve`
+    /// CLI prints this on shutdown and the CI smoke job greps it.
+    pub fn counters_render(&self) -> String {
+        let mut out = String::new();
+        for (i, s) in self.shards.iter().enumerate() {
+            let m = s.metrics();
+            out.push_str(&format!(
+                "shard {i}: requests={} batches={} shed={} p99<={:?}\n",
+                m.requests.load(Ordering::Relaxed),
+                m.batches.load(Ordering::Relaxed),
+                m.shed.load(Ordering::Relaxed),
+                m.request_latency.quantile(0.99),
+            ));
+        }
+        out
+    }
+
+    /// Stop every shard: queued requests drain, leaders join. Clients
+    /// outliving the service get [`PositError::ServiceStopped`].
+    pub fn shutdown(self) {
+        for s in self.shards {
+            s.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Backend, BatchPolicy, ServedBy};
+    use crate::division::Algorithm;
+    use crate::unit::ExecTier;
+    use std::collections::HashSet;
+    use std::time::Duration;
+
+    fn cfg(n: u32, shards: usize, queue_capacity: usize) -> ShardConfig {
+        ShardConfig {
+            shards,
+            queue_capacity,
+            service: ServiceConfig {
+                n,
+                backend: Backend::Native { alg: Algorithm::DEFAULT, threads: 2 },
+                policy: BatchPolicy { max_batch: 64, max_wait: Duration::from_micros(100) },
+                tier: ExecTier::Auto,
+            },
+        }
+    }
+
+    #[test]
+    fn affinity_is_deterministic_and_spreads() {
+        for &op in &[Op::DIV, Op::Sqrt, Op::Dot] {
+            assert_eq!(shard_for(op, 16, 4), shard_for(op, 16, 4));
+        }
+        // one shard degenerates to 0; any shard count stays in range
+        for &op in Op::KINDS.iter() {
+            assert_eq!(shard_for(op, 16, 1), 0);
+            assert!(shard_for(op, 16, 3) < 3);
+        }
+        // the 9 op kinds at one width must not all pile onto one of two
+        // shards (sqrt and mul already split under FNV-1a)
+        let hit: HashSet<usize> = Op::KINDS.iter().map(|&op| shard_for(op, 16, 2)).collect();
+        assert_eq!(hit.len(), 2, "all ops routed to one shard of two");
+        // width is part of the key: some op must move between widths
+        assert!(
+            Op::KINDS
+                .iter()
+                .any(|&op| shard_for(op, 16, 2) != shard_for(op, 17, 2)),
+            "width ignored by the affinity hash"
+        );
+    }
+
+    #[test]
+    fn degenerate_configs_are_rejected() {
+        assert!(ShardedService::start(cfg(16, 0, 8)).is_err());
+        assert!(ShardedService::start(cfg(16, 2, 0)).is_err());
+        assert!(matches!(
+            ShardedService::start(cfg(2, 2, 8)).unwrap_err(),
+            PositError::WidthOutOfRange { n: 2 }
+        ));
+    }
+
+    #[test]
+    fn one_op_lands_on_one_shard() {
+        let svc = ShardedService::start(cfg(16, 2, 1024)).unwrap();
+        let c = svc.client();
+        let one = Posit::one(16);
+        for _ in 0..32 {
+            assert_eq!(c.run_op(OpRequest::mul(one, one)).unwrap(), one);
+        }
+        let per_shard = svc.shard_requests();
+        let target = shard_for(Op::Mul, 16, 2);
+        assert_eq!(per_shard[target], 32);
+        assert_eq!(per_shard[1 - target], 0);
+        assert_eq!(svc.total_requests(), 32);
+        assert_eq!(svc.shed_total(), 0);
+        let panel = svc.latency_snapshot();
+        let served: u64 = [ServedBy::Fast, ServedBy::Datapath, ServedBy::Pjrt]
+            .iter()
+            .map(|&l| panel.get(Op::Mul, l).count())
+            .sum();
+        assert_eq!(served, 32, "latency snapshot merges shard panels");
+        assert!(svc.counters_render().contains("shard 0: requests="));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn admission_control_sheds_at_capacity_and_recovers() {
+        let svc = ShardedService::start(cfg(16, 2, 1)).unwrap();
+        let c = svc.client();
+        let one = Posit::one(16);
+        // hold the single admission slot of sqrt's shard
+        let ticket = c.submit_op(OpRequest::sqrt(one)).unwrap();
+        let shard = ticket.shard();
+        assert_eq!(shard, c.shard_of(Op::Sqrt));
+        assert_eq!(c.inflight(shard), 1);
+        // the next sqrt must shed, typed, without being enqueued
+        match c.submit_op(OpRequest::sqrt(one)).unwrap_err() {
+            PositError::ServiceOverloaded { shard: s, inflight, capacity } => {
+                assert_eq!(s, shard);
+                assert_eq!((inflight, capacity), (1, 1));
+            }
+            other => panic!("expected ServiceOverloaded, got {other:?}"),
+        }
+        assert_eq!(svc.shed_total(), 1);
+        assert_eq!(svc.metrics(shard).shed.load(Ordering::Relaxed), 1);
+        // waiting the ticket frees the slot; traffic flows again
+        assert_eq!(ticket.wait().unwrap(), one);
+        assert_eq!(c.inflight(shard), 0);
+        assert_eq!(c.run_op(OpRequest::sqrt(one)).unwrap(), one);
+        // sheds never count as served requests
+        assert_eq!(svc.total_requests(), 2);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn dropping_a_ticket_releases_the_slot() {
+        let svc = ShardedService::start(cfg(16, 1, 1)).unwrap();
+        let c = svc.client();
+        let t = c.submit_op(OpRequest::sqrt(Posit::one(16))).unwrap();
+        assert_eq!(c.inflight(0), 1);
+        drop(t);
+        assert_eq!(c.inflight(0), 0);
+        assert_eq!(c.run_op(OpRequest::sqrt(Posit::one(16))).unwrap(), Posit::one(16));
+        svc.shutdown();
+    }
+}

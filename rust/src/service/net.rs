@@ -1,0 +1,743 @@
+//! Networked serving over TCP: [`Server`] wraps a [`ShardedService`]
+//! behind a `TcpListener`; [`ServiceClient`] speaks the [`super::wire`]
+//! protocol from another process (or another machine).
+//!
+//! Threading model, per server:
+//!
+//! * one accept thread (`posit-div-accept`), woken from blocking
+//!   `accept` on shutdown by a loopback self-connect;
+//! * per connection, a reader thread (the accepted thread itself) that
+//!   decodes frames, routes through the [`ShardedClient`], and hands
+//!   admitted tickets to
+//! * a writer thread (`posit-div-conn-writer`) that waits tickets **in
+//!   submission order** and streams responses back — so responses and
+//!   typed error frames arrive strictly in request order per
+//!   connection, and a slow shard never blocks frame *reading*
+//!   (admission control stays responsive under overload).
+//!
+//! Reads poll a 250 ms timeout so a server with idle connections still
+//! notices shutdown promptly. All failure paths are typed: malformed
+//! frames get [`PositError::Protocol`] error frames, admission sheds
+//! get [`PositError::ServiceOverloaded`], and a dead peer just ends the
+//! connection's threads — the server never panics on client input.
+
+use std::collections::VecDeque;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use super::wire::{self, Frame, FrameKind};
+use super::{ShardConfig, ShardTicket, ShardedClient, ShardedService};
+use crate::coordinator::Histogram;
+use crate::error::{PositError, Result};
+use crate::posit::{mask, Posit};
+use crate::unit::OpRequest;
+use crate::workload::OpenLoop;
+
+/// How long a server-side read blocks before re-checking the stop flag.
+const READ_POLL: Duration = Duration::from_millis(250);
+
+fn io_err(what: &str, e: std::io::Error) -> PositError {
+    PositError::Execution { detail: format!("{what}: {e}") }
+}
+
+/// A TCP front-end over a [`ShardedService`]. Bind with
+/// [`Server::bind`], then either [`Server::wait`] for a client's
+/// `SHUTDOWN` frame (the `posit-div serve` loop) or stop it yourself
+/// with [`Server::shutdown`]. Both return the inner service so the
+/// caller can read counters and latency panels before tearing it down.
+pub struct Server {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    svc: Option<ShardedService>,
+}
+
+impl Server {
+    /// Start the sharded service and listen on `addr` (use port 0 for an
+    /// OS-assigned port, then read [`Server::local_addr`]).
+    pub fn bind(addr: impl ToSocketAddrs, cfg: ShardConfig) -> Result<Server> {
+        let svc = ShardedService::start(cfg)?;
+        let listener = TcpListener::bind(addr).map_err(|e| io_err("bind", e))?;
+        let addr = listener.local_addr().map_err(|e| io_err("local_addr", e))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let router = svc.client();
+        let accept = {
+            let (stop, conns) = (stop.clone(), conns.clone());
+            thread::Builder::new()
+                .name("posit-div-accept".into())
+                .spawn(move || {
+                    for incoming in listener.incoming() {
+                        if stop.load(Ordering::Acquire) {
+                            break; // a shutdown self-connect lands here
+                        }
+                        let stream = match incoming {
+                            Ok(s) => s,
+                            Err(_) => continue,
+                        };
+                        let (stop, router) = (stop.clone(), router.clone());
+                        let handle = thread::Builder::new()
+                            .name("posit-div-conn".into())
+                            .spawn(move || handle_conn(stream, router, stop, addr))
+                            .expect("spawn connection thread");
+                        conns.lock().expect("connection registry lock").push(handle);
+                    }
+                })
+                .map_err(|e| io_err("spawn accept thread", e))?
+        };
+        Ok(Server { addr, stop, accept: Some(accept), conns, svc: Some(svc) })
+    }
+
+    /// The bound address (with the real port when bound to port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// An in-process routing handle to the same shards the TCP
+    /// connections use — local and networked traffic share admission
+    /// budgets and metrics.
+    pub fn client(&self) -> ShardedClient {
+        self.svc.as_ref().expect("service runs until wait/shutdown").client()
+    }
+
+    /// Ask the server to stop: no new connections, existing connection
+    /// threads wind down at their next read poll. Idempotent.
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::Release);
+        // wake the accept thread out of its blocking accept
+        let _ = TcpStream::connect(self.addr);
+    }
+
+    /// Block until the server stops (a client `SHUTDOWN` frame, or
+    /// [`Server::stop`] from another thread), join every connection, and
+    /// return the inner [`ShardedService`] for final metrics.
+    pub fn wait(mut self) -> ShardedService {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let handles: Vec<_> = {
+            let mut guard = self.conns.lock().expect("connection registry lock");
+            std::mem::take(&mut *guard)
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+        self.svc.take().expect("service present until wait/shutdown")
+    }
+
+    /// [`Server::stop`] + [`Server::wait`].
+    pub fn shutdown(self) -> ShardedService {
+        self.stop();
+        self.wait()
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if self.accept.is_some() {
+            let _ = TcpStream::connect(self.addr);
+        }
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let handles: Vec<_> = {
+            let mut guard = self.conns.lock().expect("connection registry lock");
+            std::mem::take(&mut *guard)
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+        // self.svc (if wait() was never called) drops here, joining the
+        // shard leaders.
+    }
+}
+
+/// What the connection's reader hands its writer. Channel order == wire
+/// order: the writer waits tickets FIFO, so per-connection responses are
+/// strictly in request order.
+enum Reply {
+    /// An admitted request: wait the shard, then write the response (or
+    /// the typed error the shard produced).
+    Ticket(u64, ShardTicket),
+    /// Rejected before admission (shed, malformed, width mismatch):
+    /// write the typed error frame immediately.
+    Reject(u64, PositError),
+}
+
+fn writer_loop(stream: TcpStream, rx: mpsc::Receiver<Reply>) {
+    let mut w = BufWriter::new(stream);
+    while let Ok(reply) = rx.recv() {
+        let mut next = Some(reply);
+        while let Some(r) = next {
+            if write_reply(&mut w, r).is_err() {
+                return; // peer gone; the reader thread notices on its own
+            }
+            next = rx.try_recv().ok();
+        }
+        if w.flush().is_err() {
+            return;
+        }
+    }
+}
+
+fn write_reply(w: &mut impl Write, reply: Reply) -> Result<()> {
+    match reply {
+        Reply::Ticket(id, ticket) => match ticket.wait() {
+            Ok(p) => {
+                wire::write_frame(w, FrameKind::Response, &wire::encode_response(id, p.to_bits()))
+            }
+            Err(e) => wire::write_frame(w, FrameKind::Error, &wire::encode_error(id, &e)),
+        },
+        Reply::Reject(id, e) => {
+            wire::write_frame(w, FrameKind::Error, &wire::encode_error(id, &e))
+        }
+    }
+}
+
+enum Step {
+    Frame(Frame),
+    /// Clean end of stream at a frame boundary.
+    Eof,
+    /// The server's stop flag went up while we were waiting.
+    Stopped,
+}
+
+enum Fill {
+    Done,
+    Eof,
+    Stopped,
+}
+
+/// Fill `buf` from a timeout-polling stream without losing partial
+/// progress (unlike `read_exact`, which discards it on `WouldBlock`).
+fn read_full(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    stop: &AtomicBool,
+    at_boundary: bool,
+) -> Result<Fill> {
+    let mut pos = 0;
+    while pos < buf.len() {
+        match stream.read(&mut buf[pos..]) {
+            Ok(0) => {
+                return if pos == 0 && at_boundary {
+                    Ok(Fill::Eof)
+                } else {
+                    Err(PositError::Protocol {
+                        detail: "truncated frame: connection closed mid-frame".into(),
+                    })
+                }
+            }
+            Ok(k) => pos += k,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if stop.load(Ordering::Acquire) {
+                    return Ok(Fill::Stopped);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(io_err("socket read", e)),
+        }
+    }
+    Ok(Fill::Done)
+}
+
+fn read_step(stream: &mut TcpStream, stop: &AtomicBool) -> Result<Step> {
+    let mut header = [0u8; wire::HEADER_LEN];
+    match read_full(stream, &mut header, stop, true)? {
+        Fill::Done => {}
+        Fill::Eof => return Ok(Step::Eof),
+        Fill::Stopped => return Ok(Step::Stopped),
+    }
+    let (kind, len) = wire::parse_header(&header)?;
+    let mut payload = vec![0u8; len];
+    match read_full(stream, &mut payload, stop, false)? {
+        Fill::Done => Ok(Step::Frame(Frame { kind, payload })),
+        Fill::Stopped => Ok(Step::Stopped),
+        Fill::Eof => unreachable!("payload reads are never at a frame boundary"),
+    }
+}
+
+fn handle_conn(
+    mut stream: TcpStream,
+    router: ShardedClient,
+    stop: Arc<AtomicBool>,
+    server_addr: SocketAddr,
+) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(READ_POLL));
+    let n = router.width();
+
+    // Handshake: HELLO(n) must match the service width before any
+    // request is admitted.
+    let hello = match read_step(&mut stream, &stop) {
+        Ok(Step::Frame(f)) if f.kind == FrameKind::Hello => f,
+        Ok(_) => return,
+        Err(e) => {
+            let _ = wire::write_frame(&mut stream, FrameKind::Error, &wire::encode_error(0, &e));
+            return;
+        }
+    };
+    match wire::decode_hello(&hello.payload) {
+        Ok(got) if got == n => {}
+        Ok(got) => {
+            let e = PositError::WidthMismatch { expected: n, got };
+            let _ = wire::write_frame(&mut stream, FrameKind::Error, &wire::encode_error(0, &e));
+            return;
+        }
+        Err(e) => {
+            let _ = wire::write_frame(&mut stream, FrameKind::Error, &wire::encode_error(0, &e));
+            return;
+        }
+    }
+    if wire::write_frame(
+        &mut stream,
+        FrameKind::Welcome,
+        &wire::encode_welcome(n, router.shards()),
+    )
+    .is_err()
+    {
+        return;
+    }
+
+    let writer_stream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let (tx, rx) = mpsc::channel::<Reply>();
+    let writer = thread::Builder::new()
+        .name("posit-div-conn-writer".into())
+        .spawn(move || writer_loop(writer_stream, rx))
+        .expect("spawn connection writer thread");
+
+    loop {
+        match read_step(&mut stream, &stop) {
+            Ok(Step::Frame(f)) => match f.kind {
+                FrameKind::Request => {
+                    let reply = match wire::decode_request(&f.payload, n) {
+                        Ok((id, req)) => match router.submit_op(req) {
+                            Ok(ticket) => Reply::Ticket(id, ticket),
+                            Err(e) => Reply::Reject(id, e),
+                        },
+                        Err(e) => Reply::Reject(wire::request_id(&f.payload).unwrap_or(0), e),
+                    };
+                    if tx.send(reply).is_err() {
+                        break;
+                    }
+                }
+                FrameKind::Bye => break,
+                FrameKind::Shutdown => {
+                    stop.store(true, Ordering::Release);
+                    // wake the accept thread so the whole server drains
+                    let _ = TcpStream::connect(server_addr);
+                    break;
+                }
+                other => {
+                    let e = PositError::Protocol {
+                        detail: format!("unexpected {other:?} frame from a client"),
+                    };
+                    let _ = tx.send(Reply::Reject(0, e));
+                    break;
+                }
+            },
+            Ok(Step::Eof) | Ok(Step::Stopped) => break,
+            Err(e) => {
+                // framing is broken; answer typed, then drop the stream
+                let _ = tx.send(Reply::Reject(0, e));
+                break;
+            }
+        }
+    }
+    drop(tx);
+    let _ = writer.join();
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+/// Default pipelining window of [`ServiceClient::run_ops`]: how many
+/// requests may be on the wire before the client reads a response.
+pub const DEFAULT_WINDOW: usize = 512;
+
+/// A blocking client for one server connection. Not thread-safe by
+/// design — open one connection per driver thread; the server handles
+/// each concurrently.
+pub struct ServiceClient {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    n: u32,
+    shards: usize,
+    next_id: u64,
+    window: usize,
+}
+
+impl ServiceClient {
+    /// Connect and handshake at posit width `n`. A width the server does
+    /// not serve fails here with [`PositError::WidthMismatch`].
+    pub fn connect(addr: impl ToSocketAddrs, n: u32) -> Result<ServiceClient> {
+        let stream = TcpStream::connect(addr).map_err(|e| io_err("connect", e))?;
+        let _ = stream.set_nodelay(true);
+        let read_half = stream.try_clone().map_err(|e| io_err("clone stream", e))?;
+        let mut client = ServiceClient {
+            reader: BufReader::new(read_half),
+            writer: BufWriter::new(stream),
+            n,
+            shards: 0,
+            next_id: 1,
+            window: DEFAULT_WINDOW,
+        };
+        client.send(FrameKind::Hello, &wire::encode_hello(n))?;
+        client.flush()?;
+        let f = wire::read_frame(&mut client.reader)?;
+        match f.kind {
+            FrameKind::Welcome => {
+                let (served, shards) = wire::decode_welcome(&f.payload)?;
+                if served != n {
+                    return Err(PositError::WidthMismatch { expected: served, got: n });
+                }
+                client.shards = shards;
+                Ok(client)
+            }
+            FrameKind::Error => Err(wire::decode_error(&f.payload)?.1),
+            other => Err(PositError::Protocol {
+                detail: format!("expected WELCOME, got {other:?}"),
+            }),
+        }
+    }
+
+    /// Posit width negotiated with the server.
+    pub fn width(&self) -> u32 {
+        self.n
+    }
+
+    /// Shard count the server reported at handshake.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Cap on in-flight pipelined requests (min 1).
+    pub fn set_window(&mut self, window: usize) {
+        self.window = window.max(1);
+    }
+
+    fn send(&mut self, kind: FrameKind, payload: &[u8]) -> Result<()> {
+        wire::write_frame(&mut self.writer, kind, payload)
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        self.writer.flush().map_err(|e| io_err("socket write", e))
+    }
+
+    /// Read one RESPONSE/ERROR frame: `(id, per-request result)`.
+    /// Transport-level failures are the outer error.
+    fn read_reply(&mut self) -> Result<(u64, Result<Posit>)> {
+        let f = wire::read_frame(&mut self.reader)?;
+        match f.kind {
+            FrameKind::Response => {
+                let (id, bits) = wire::decode_response(&f.payload)?;
+                if bits & !mask(self.n) != 0 {
+                    return Err(PositError::Protocol {
+                        detail: format!("response bits {bits:#x} exceed the Posit{} mask", self.n),
+                    });
+                }
+                Ok((id, Ok(Posit::from_bits(self.n, bits))))
+            }
+            FrameKind::Error => {
+                let (id, e) = wire::decode_error(&f.payload)?;
+                Ok((id, Err(e)))
+            }
+            other => Err(PositError::Protocol {
+                detail: format!("unexpected {other:?} frame from the server"),
+            }),
+        }
+    }
+
+    /// One blocking request round-trip.
+    pub fn run_op(&mut self, req: &OpRequest) -> Result<Posit> {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.send(FrameKind::Request, &wire::encode_request(id, req))?;
+        self.flush()?;
+        let (rid, result) = self.read_reply()?;
+        if rid != id {
+            return Err(PositError::Protocol {
+                detail: format!("response id {rid} for request {id}"),
+            });
+        }
+        result
+    }
+
+    /// Run a batch with windowed pipelining (closed loop): up to the
+    /// configured window rides the wire at once, results come back in
+    /// submission order. Per-request failures (sheds, width problems)
+    /// land in the inner `Result`s; a transport failure aborts the call.
+    pub fn run_ops(&mut self, reqs: &[OpRequest]) -> Result<Vec<Result<Posit>>> {
+        let mut out = Vec::with_capacity(reqs.len());
+        let mut inflight: VecDeque<u64> = VecDeque::with_capacity(self.window);
+        for req in reqs {
+            if inflight.len() >= self.window {
+                self.flush()?;
+                self.pop_reply(&mut inflight, &mut out)?;
+            }
+            let id = self.next_id;
+            self.next_id += 1;
+            self.send(FrameKind::Request, &wire::encode_request(id, req))?;
+            inflight.push_back(id);
+        }
+        self.flush()?;
+        while !inflight.is_empty() {
+            self.pop_reply(&mut inflight, &mut out)?;
+        }
+        Ok(out)
+    }
+
+    fn pop_reply(
+        &mut self,
+        inflight: &mut VecDeque<u64>,
+        out: &mut Vec<Result<Posit>>,
+    ) -> Result<()> {
+        let (id, result) = self.read_reply()?;
+        let expected = inflight.pop_front().expect("pop_reply called with requests in flight");
+        if id != expected {
+            return Err(PositError::Protocol {
+                detail: format!("out-of-order response: id {id}, expected {expected}"),
+            });
+        }
+        out.push(result);
+        Ok(())
+    }
+
+    /// Drive an arrival-rate-paced open loop (latency measured the way
+    /// an SLO sees it: from intended arrival time, unthrottled by slow
+    /// responses). A writer paces requests off `wl`'s Poisson clock
+    /// while a scoped reader thread drains responses concurrently.
+    ///
+    /// Every `verify_every`-th request (0 = never) is checked against
+    /// its [`OpRequest::golden`] result; mismatches count in
+    /// [`OpenLoopReport::verify_failures`].
+    pub fn run_open_loop(
+        &mut self,
+        wl: &mut OpenLoop,
+        requests: usize,
+        verify_every: usize,
+    ) -> Result<OpenLoopReport> {
+        let start = Instant::now();
+        let latency = Histogram::new();
+        let n = self.n;
+        let mut next_id = self.next_id;
+        let mut offered = 0usize;
+        // id, intended-arrival stamp, golden bits to verify (sampled)
+        let (meta_tx, meta_rx) = mpsc::channel::<(u64, Instant, Option<u64>)>();
+        let reader = &mut self.reader;
+        let writer = &mut self.writer;
+        let counts = thread::scope(|s| {
+            let latency = &latency;
+            let collector = s.spawn(move || -> Result<(usize, usize, usize, usize)> {
+                let (mut completed, mut shed, mut errors, mut verify_failures) = (0, 0, 0, 0);
+                while let Ok((id, sent, golden)) = meta_rx.recv() {
+                    let f = wire::read_frame(reader)?;
+                    let (rid, result) = match f.kind {
+                        FrameKind::Response => {
+                            let (rid, bits) = wire::decode_response(&f.payload)?;
+                            (rid, Ok(bits))
+                        }
+                        FrameKind::Error => {
+                            let (rid, e) = wire::decode_error(&f.payload)?;
+                            (rid, Err(e))
+                        }
+                        other => {
+                            return Err(PositError::Protocol {
+                                detail: format!("unexpected {other:?} frame from the server"),
+                            })
+                        }
+                    };
+                    if rid != id {
+                        return Err(PositError::Protocol {
+                            detail: format!("out-of-order response: id {rid}, expected {id}"),
+                        });
+                    }
+                    latency.record(sent.elapsed());
+                    match result {
+                        Ok(bits) => {
+                            completed += 1;
+                            if golden.is_some_and(|g| g != bits) {
+                                verify_failures += 1;
+                            }
+                        }
+                        Err(PositError::ServiceOverloaded { .. }) => shed += 1,
+                        Err(_) => errors += 1,
+                    }
+                }
+                Ok((completed, shed, errors, verify_failures))
+            });
+            for i in 0..requests {
+                let (at, req) = wl.next_arrival();
+                loop {
+                    let now = start.elapsed();
+                    if now >= at {
+                        break;
+                    }
+                    thread::sleep((at - now).min(Duration::from_millis(2)));
+                }
+                let id = next_id;
+                next_id += 1;
+                let golden =
+                    (verify_every != 0 && i % verify_every == 0).then(|| req.golden().to_bits());
+                if meta_tx.send((id, Instant::now(), golden)).is_err() {
+                    break; // collector bailed on a transport error
+                }
+                if wire::write_frame(writer, FrameKind::Request, &wire::encode_request(id, &req))
+                    .is_err()
+                    || writer.flush().is_err()
+                {
+                    break;
+                }
+                offered += 1;
+            }
+            drop(meta_tx);
+            collector.join().expect("open-loop collector thread panicked")
+        });
+        self.next_id = next_id;
+        let (completed, shed, errors, verify_failures) = counts?;
+        if offered < requests {
+            return Err(PositError::Execution {
+                detail: format!("open-loop send aborted after {offered}/{requests} requests"),
+            });
+        }
+        Ok(OpenLoopReport {
+            offered,
+            completed,
+            shed,
+            errors,
+            verify_failures,
+            wall: start.elapsed(),
+            latency,
+            width: n,
+        })
+    }
+
+    /// Close this connection politely (the server keeps running).
+    pub fn bye(mut self) -> Result<()> {
+        self.send(FrameKind::Bye, &[])?;
+        self.flush()
+    }
+
+    /// Ask the server process to stop accepting and drain — the whole
+    /// server, not just this connection.
+    pub fn shutdown_server(mut self) -> Result<()> {
+        self.send(FrameKind::Shutdown, &[])?;
+        self.flush()
+    }
+}
+
+/// What an open-loop drive observed, client side.
+#[derive(Debug)]
+pub struct OpenLoopReport {
+    /// Requests actually sent (== the requested count unless the
+    /// transport died).
+    pub offered: usize,
+    /// Successful responses.
+    pub completed: usize,
+    /// Typed [`PositError::ServiceOverloaded`] sheds.
+    pub shed: usize,
+    /// Other per-request errors.
+    pub errors: usize,
+    /// Sampled responses that disagreed with [`OpRequest::golden`].
+    pub verify_failures: usize,
+    /// Wall-clock time of the whole drive.
+    pub wall: Duration,
+    /// Client-observed latency from intended arrival to response — the
+    /// open-loop (SLO) view, which includes queueing delay the server
+    /// cannot see.
+    pub latency: Histogram,
+    /// Posit width driven.
+    pub width: u32,
+}
+
+impl OpenLoopReport {
+    /// Achieved throughput in responses (of any kind) per second.
+    pub fn achieved_rate(&self) -> f64 {
+        let done = (self.completed + self.shed + self.errors) as f64;
+        done / self.wall.as_secs_f64().max(1e-9)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "offered={} completed={} shed={} errors={} verify_failures={} wall={:?} rtt: {}",
+            self.offered,
+            self.completed,
+            self.shed,
+            self.errors,
+            self.verify_failures,
+            self.wall,
+            self.latency.summary(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Backend, BatchPolicy, ServiceConfig};
+    use crate::division::Algorithm;
+    use crate::unit::ExecTier;
+    use crate::workload::{take_requests, MixedOps, OpMix};
+
+    fn shard_cfg(n: u32) -> ShardConfig {
+        ShardConfig {
+            shards: 2,
+            queue_capacity: 1024,
+            service: ServiceConfig {
+                n,
+                backend: Backend::Native { alg: Algorithm::DEFAULT, threads: 2 },
+                policy: BatchPolicy { max_batch: 64, max_wait: Duration::from_micros(100) },
+                tier: ExecTier::Auto,
+            },
+        }
+    }
+
+    #[test]
+    fn loopback_roundtrip_and_shutdown() {
+        let server = Server::bind("127.0.0.1:0", shard_cfg(16)).unwrap();
+        let mut client = ServiceClient::connect(server.local_addr(), 16).unwrap();
+        assert_eq!(client.width(), 16);
+        assert_eq!(client.shards(), 2);
+
+        let one = Posit::one(16);
+        assert_eq!(client.run_op(&OpRequest::sqrt(one)).unwrap(), one);
+
+        // pipelined mixed traffic, golden-verified end to end
+        let mix = OpMix::parse("div:3,sqrt:1,mul:2,add:2,dot:1,fsum:1,axpy:1").unwrap();
+        let reqs = take_requests(&mut MixedOps::new(16, mix, 7), 200);
+        let results = client.run_ops(&reqs).unwrap();
+        assert_eq!(results.len(), reqs.len());
+        for (req, r) in reqs.iter().zip(&results) {
+            assert_eq!(*r.as_ref().unwrap(), req.golden(), "op {}", req.op);
+        }
+
+        client.shutdown_server().unwrap();
+        let svc = server.wait();
+        assert_eq!(svc.total_requests(), 201);
+        assert_eq!(svc.shed_total(), 0);
+        assert!(svc.counters_render().contains("shard 0: requests="));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn handshake_rejects_width_mismatch() {
+        let server = Server::bind("127.0.0.1:0", shard_cfg(16)).unwrap();
+        let e = ServiceClient::connect(server.local_addr(), 32).unwrap_err();
+        assert_eq!(e, PositError::WidthMismatch { expected: 16, got: 32 });
+        let svc = server.shutdown();
+        assert_eq!(svc.total_requests(), 0);
+        svc.shutdown();
+    }
+}

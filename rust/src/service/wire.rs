@@ -1,0 +1,652 @@
+//! The `posit-div` wire protocol: length-prefixed binary frames over a
+//! byte stream (TCP in production, any `Read`/`Write` in tests).
+//!
+//! This module is the **normative implementation** of the frame format
+//! documented in `docs/SERVING.md`; the two must not drift. Everything
+//! is `std`-only and little-endian on the wire.
+//!
+//! ```text
+//! frame   := header payload
+//! header  := magic(2) version(1) kind(1) len(4, u32 LE)   ; 8 bytes
+//! payload := len bytes, len <= MAX_FRAME
+//! ```
+//!
+//! Frame kinds and payload layouts (all integers little-endian):
+//!
+//! | kind | code | payload |
+//! |------|------|---------|
+//! | `HELLO`    | 0x01 | `n: u8` — the client's posit width |
+//! | `WELCOME`  | 0x02 | `n: u8, shards: u16` |
+//! | `REQUEST`  | 0x03 | `id: u64, opcode: u8, alg: u8, a: u64, b: u64, c: u64, va_len: u32, vb_len: u32, va: u64 × va_len, vb: u64 × vb_len` |
+//! | `RESPONSE` | 0x04 | `id: u64, bits: u64` |
+//! | `ERROR`    | 0x05 | `id: u64, code: u8, aux0: u32, aux1: u32, aux2: u32, msg_len: u16, msg: utf-8 × msg_len` |
+//! | `BYE`      | 0x06 | empty |
+//! | `SHUTDOWN` | 0x07 | empty |
+//!
+//! `REQUEST` opcodes are [`crate::unit::Op::kind_index`] values (div=0 …
+//! axpy=8); `alg` indexes [`Algorithm::ALL`] for division and must be 0
+//! otherwise. Scalar ops put their 1–3 operands in slots `a`/`b`/`c`
+//! (unused slots must be 0) with `va_len = vb_len = 0`; reductions put
+//! their vectors in `va`/`vb` with `a = b = 0` and the `Axpy`
+//! coefficient in `c`. Operand words must fit the negotiated width's
+//! bit mask. Violations are [`PositError::Protocol`] — never a panic.
+//!
+//! `ERROR` codes (`aux0..aux2` meaning depends on the code):
+//!
+//! | code | error | aux |
+//! |------|-------|-----|
+//! | 1 | [`PositError::ServiceOverloaded`] | shard, inflight, capacity |
+//! | 2 | [`PositError::WidthMismatch`] | expected, got, 0 |
+//! | 3 | [`PositError::Protocol`] | 0 (detail in `msg`) |
+//! | 4 | [`PositError::ServiceStopped`] | 0 |
+//! | 5 | other server-side failure (surfaces as [`PositError::Execution`]) | 0 (detail in `msg`) |
+//! | 6 | [`PositError::WidthOutOfRange`] | n, 0, 0 |
+
+use std::io::{Read, Write};
+
+use crate::division::Algorithm;
+use crate::error::{PositError, Result};
+use crate::posit::{mask, Posit};
+use crate::unit::{Op, OpRequest};
+
+/// Leading frame bytes: `b"PD"` (posit-div).
+pub const MAGIC: [u8; 2] = *b"PD";
+/// Protocol version carried in every frame header.
+pub const VERSION: u8 = 1;
+/// Header size in bytes: magic + version + kind + payload length.
+pub const HEADER_LEN: usize = 8;
+/// Largest accepted payload. Caps a `Dot`/`Axpy` request at ~65k lanes
+/// per vector; anything larger is a [`PositError::Protocol`] rejection
+/// *before* allocation.
+pub const MAX_FRAME: usize = 1 << 20;
+
+/// Frame kind tag (the header's `kind` byte).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameKind {
+    Hello,
+    Welcome,
+    Request,
+    Response,
+    Error,
+    Bye,
+    Shutdown,
+}
+
+impl FrameKind {
+    pub fn code(self) -> u8 {
+        match self {
+            FrameKind::Hello => 0x01,
+            FrameKind::Welcome => 0x02,
+            FrameKind::Request => 0x03,
+            FrameKind::Response => 0x04,
+            FrameKind::Error => 0x05,
+            FrameKind::Bye => 0x06,
+            FrameKind::Shutdown => 0x07,
+        }
+    }
+
+    pub fn from_code(code: u8) -> Option<FrameKind> {
+        match code {
+            0x01 => Some(FrameKind::Hello),
+            0x02 => Some(FrameKind::Welcome),
+            0x03 => Some(FrameKind::Request),
+            0x04 => Some(FrameKind::Response),
+            0x05 => Some(FrameKind::Error),
+            0x06 => Some(FrameKind::Bye),
+            0x07 => Some(FrameKind::Shutdown),
+            _ => None,
+        }
+    }
+}
+
+/// One parsed frame: kind plus raw payload (decode with the typed
+/// helpers below).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Frame {
+    pub kind: FrameKind,
+    pub payload: Vec<u8>,
+}
+
+fn protocol(detail: impl Into<String>) -> PositError {
+    PositError::Protocol { detail: detail.into() }
+}
+
+/// Build the 8-byte header for a frame of `kind` with `len` payload
+/// bytes.
+pub fn header_bytes(kind: FrameKind, len: usize) -> [u8; HEADER_LEN] {
+    let l = (len as u32).to_le_bytes();
+    [MAGIC[0], MAGIC[1], VERSION, kind.code(), l[0], l[1], l[2], l[3]]
+}
+
+/// Parse and validate a frame header (magic, version, kind, length cap).
+pub fn parse_header(h: &[u8; HEADER_LEN]) -> Result<(FrameKind, usize)> {
+    if h[0..2] != MAGIC {
+        return Err(protocol(format!("bad magic {:02x}{:02x} (expected \"PD\")", h[0], h[1])));
+    }
+    if h[2] != VERSION {
+        return Err(protocol(format!("unsupported protocol version {} (expected {VERSION})", h[2])));
+    }
+    let kind = FrameKind::from_code(h[3])
+        .ok_or_else(|| protocol(format!("unknown frame kind {:#04x}", h[3])))?;
+    let len = u32::from_le_bytes([h[4], h[5], h[6], h[7]]) as usize;
+    if len > MAX_FRAME {
+        return Err(protocol(format!("oversized frame: {len} bytes (cap {MAX_FRAME})")));
+    }
+    Ok((kind, len))
+}
+
+/// Write one frame (header + payload) to `w`.
+pub fn write_frame(w: &mut impl Write, kind: FrameKind, payload: &[u8]) -> Result<()> {
+    if payload.len() > MAX_FRAME {
+        return Err(protocol(format!(
+            "refusing to send oversized frame: {} bytes (cap {MAX_FRAME})",
+            payload.len()
+        )));
+    }
+    let io = |e: std::io::Error| PositError::Execution { detail: format!("socket write: {e}") };
+    w.write_all(&header_bytes(kind, payload.len())).map_err(io)?;
+    w.write_all(payload).map_err(io)
+}
+
+/// Read one frame from `r`. Malformed framing (bad magic/version/kind,
+/// oversized length, stream truncated mid-frame) is a typed
+/// [`PositError::Protocol`]; other I/O failures surface as
+/// [`PositError::Execution`].
+pub fn read_frame(r: &mut impl Read) -> Result<Frame> {
+    let mut header = [0u8; HEADER_LEN];
+    read_exactly(r, &mut header, "header")?;
+    let (kind, len) = parse_header(&header)?;
+    let mut payload = vec![0u8; len];
+    read_exactly(r, &mut payload, "payload")?;
+    Ok(Frame { kind, payload })
+}
+
+fn read_exactly(r: &mut impl Read, buf: &mut [u8], what: &str) -> Result<()> {
+    r.read_exact(buf).map_err(|e| match e.kind() {
+        std::io::ErrorKind::UnexpectedEof => {
+            protocol(format!("truncated frame: stream ended inside the {what}"))
+        }
+        _ => PositError::Execution { detail: format!("socket read: {e}") },
+    })
+}
+
+// ---- HELLO / WELCOME ----------------------------------------------------
+
+pub fn encode_hello(n: u32) -> Vec<u8> {
+    vec![n as u8]
+}
+
+pub fn decode_hello(p: &[u8]) -> Result<u32> {
+    match p {
+        [n] => Ok(*n as u32),
+        _ => Err(protocol(format!("HELLO payload must be 1 byte, got {}", p.len()))),
+    }
+}
+
+pub fn encode_welcome(n: u32, shards: usize) -> Vec<u8> {
+    let s = (shards as u16).to_le_bytes();
+    vec![n as u8, s[0], s[1]]
+}
+
+pub fn decode_welcome(p: &[u8]) -> Result<(u32, usize)> {
+    match p {
+        [n, s0, s1] => Ok((*n as u32, u16::from_le_bytes([*s0, *s1]) as usize)),
+        _ => Err(protocol(format!("WELCOME payload must be 3 bytes, got {}", p.len()))),
+    }
+}
+
+// ---- REQUEST ------------------------------------------------------------
+
+/// Fixed-size prefix of a `REQUEST` payload (before the vector lanes).
+pub const REQUEST_PREFIX: usize = 8 + 1 + 1 + 3 * 8 + 2 * 4;
+
+fn alg_index(alg: Algorithm) -> u8 {
+    Algorithm::ALL
+        .iter()
+        .position(|&a| a == alg)
+        .expect("every Algorithm value is listed in Algorithm::ALL") as u8
+}
+
+/// An op's wire identity: `(opcode, algorithm index)`. The router's
+/// affinity hash ([`crate::service::shard_for`]) keys on exactly these
+/// bytes, so "same wire identity" and "same shard" coincide.
+pub fn op_code(op: Op) -> (u8, u8) {
+    let alg = match op {
+        Op::Div { alg } => alg_index(alg),
+        _ => 0,
+    };
+    (op.kind_index() as u8, alg)
+}
+
+fn op_from_code(opcode: u8, alg: u8) -> Result<Op> {
+    if opcode == 0 {
+        return Algorithm::ALL
+            .get(alg as usize)
+            .map(|&a| Op::Div { alg: a })
+            .ok_or_else(|| protocol(format!("unknown division algorithm index {alg}")));
+    }
+    if alg != 0 {
+        return Err(protocol(format!("non-division opcode {opcode} with algorithm byte {alg}")));
+    }
+    match opcode {
+        1 => Ok(Op::Sqrt),
+        2 => Ok(Op::Mul),
+        3 => Ok(Op::Add),
+        4 => Ok(Op::Sub),
+        5 => Ok(Op::MulAdd),
+        6 => Ok(Op::Dot),
+        7 => Ok(Op::FusedSum),
+        8 => Ok(Op::Axpy),
+        _ => Err(protocol(format!("unknown opcode {opcode}"))),
+    }
+}
+
+/// Encode one op-tagged request under client-chosen `id`.
+pub fn encode_request(id: u64, req: &OpRequest) -> Vec<u8> {
+    let (opcode, alg) = op_code(req.op);
+    let [a, b, c] = req.bits();
+    let (va, vb): (Vec<u64>, Vec<u64>) = match req.vector_lanes() {
+        Some((la, lb, _)) => (
+            la.iter().map(|p| p.to_bits()).collect(),
+            lb.iter().map(|p| p.to_bits()).collect(),
+        ),
+        None => (Vec::new(), Vec::new()),
+    };
+    let mut p = Vec::with_capacity(REQUEST_PREFIX + 8 * (va.len() + vb.len()));
+    p.extend_from_slice(&id.to_le_bytes());
+    p.push(opcode);
+    p.push(alg);
+    for w in [a, b, c] {
+        p.extend_from_slice(&w.to_le_bytes());
+    }
+    p.extend_from_slice(&(va.len() as u32).to_le_bytes());
+    p.extend_from_slice(&(vb.len() as u32).to_le_bytes());
+    for w in va.iter().chain(vb.iter()) {
+        p.extend_from_slice(&w.to_le_bytes());
+    }
+    p
+}
+
+/// The request id of a `REQUEST` payload, if the prefix is present —
+/// lets the server address an error frame even when the rest of the
+/// payload is garbage.
+pub fn request_id(p: &[u8]) -> Option<u64> {
+    p.get(0..8).map(|b| u64::from_le_bytes(b.try_into().expect("8-byte slice")))
+}
+
+fn u64_at(p: &[u8], off: usize) -> u64 {
+    u64::from_le_bytes(p[off..off + 8].try_into().expect("8-byte slice"))
+}
+
+fn checked_posit(n: u32, bits: u64, what: &str) -> Result<Posit> {
+    if bits & !mask(n) != 0 {
+        return Err(protocol(format!("{what} bits {bits:#x} exceed the Posit{n} mask")));
+    }
+    Ok(Posit::from_bits(n, bits))
+}
+
+/// Decode a `REQUEST` payload against the connection's negotiated width
+/// `n`. Structural garbage (bad lengths, nonzero must-be-zero slots,
+/// out-of-mask operand words, unknown opcodes) is
+/// [`PositError::Protocol`]; shape errors the [`OpRequest`] constructors
+/// detect (mismatched reduction lanes, empty `FusedSum`) keep their own
+/// typed variants.
+pub fn decode_request(p: &[u8], n: u32) -> Result<(u64, OpRequest)> {
+    if p.len() < REQUEST_PREFIX {
+        return Err(protocol(format!(
+            "REQUEST payload too short: {} bytes (prefix is {REQUEST_PREFIX})",
+            p.len()
+        )));
+    }
+    let id = u64_at(p, 0);
+    let (opcode, alg) = (p[8], p[9]);
+    let (a, b, c) = (u64_at(p, 10), u64_at(p, 18), u64_at(p, 26));
+    let va_len = u32::from_le_bytes(p[34..38].try_into().expect("4-byte slice")) as usize;
+    let vb_len = u32::from_le_bytes(p[38..42].try_into().expect("4-byte slice")) as usize;
+    let expected = REQUEST_PREFIX + 8 * (va_len + vb_len);
+    if p.len() != expected {
+        return Err(protocol(format!(
+            "REQUEST length mismatch: {} bytes for va_len={va_len} vb_len={vb_len} \
+             (expected {expected})",
+            p.len()
+        )));
+    }
+    let op = op_from_code(opcode, alg)?;
+    let req = if op.is_reduction() {
+        if a != 0 || b != 0 {
+            return Err(protocol("reduction REQUEST must zero scalar slots a/b"));
+        }
+        let lane = |k: usize, count: usize, what: &str| -> Result<Vec<Posit>> {
+            (0..count)
+                .map(|i| checked_posit(n, u64_at(p, REQUEST_PREFIX + 8 * (k + i)), what))
+                .collect()
+        };
+        let va = lane(0, va_len, "vector lane a")?;
+        let vb = lane(va_len, vb_len, "vector lane b")?;
+        match op {
+            Op::Dot => {
+                if c != 0 {
+                    return Err(protocol("Dot REQUEST must zero scalar slot c"));
+                }
+                OpRequest::dot(&va, &vb)?
+            }
+            Op::FusedSum => {
+                if c != 0 {
+                    return Err(protocol("FusedSum REQUEST must zero scalar slot c"));
+                }
+                if vb_len != 0 {
+                    return Err(protocol("FusedSum REQUEST must have an empty vector lane b"));
+                }
+                OpRequest::fused_sum(&va)?
+            }
+            _ => OpRequest::axpy(checked_posit(n, c, "axpy coefficient")?, &va, &vb)?,
+        }
+    } else {
+        if va_len != 0 || vb_len != 0 {
+            return Err(protocol(format!("scalar op {} with vector lanes", op.name())));
+        }
+        let slots = [a, b, c];
+        let arity = op.arity();
+        for (k, &s) in slots.iter().enumerate().skip(arity) {
+            if s != 0 {
+                return Err(protocol(format!(
+                    "scalar op {} uses {arity} slot(s); slot {k} must be 0",
+                    op.name()
+                )));
+            }
+        }
+        let operands: Vec<Posit> = slots[..arity]
+            .iter()
+            .map(|&s| checked_posit(n, s, "operand"))
+            .collect::<Result<_>>()?;
+        OpRequest::new(op, &operands)?
+    };
+    Ok((id, req))
+}
+
+// ---- RESPONSE -----------------------------------------------------------
+
+pub fn encode_response(id: u64, bits: u64) -> Vec<u8> {
+    let mut p = Vec::with_capacity(16);
+    p.extend_from_slice(&id.to_le_bytes());
+    p.extend_from_slice(&bits.to_le_bytes());
+    p
+}
+
+pub fn decode_response(p: &[u8]) -> Result<(u64, u64)> {
+    if p.len() != 16 {
+        return Err(protocol(format!("RESPONSE payload must be 16 bytes, got {}", p.len())));
+    }
+    Ok((u64_at(p, 0), u64_at(p, 8)))
+}
+
+// ---- ERROR --------------------------------------------------------------
+
+fn error_code_aux(e: &PositError) -> (u8, [u32; 3], String) {
+    match e {
+        PositError::ServiceOverloaded { shard, inflight, capacity } => {
+            (1, [*shard as u32, *inflight as u32, *capacity as u32], String::new())
+        }
+        PositError::WidthMismatch { expected, got } => (2, [*expected, *got, 0], String::new()),
+        PositError::Protocol { detail } => (3, [0; 3], detail.clone()),
+        PositError::ServiceStopped => (4, [0; 3], String::new()),
+        PositError::WidthOutOfRange { n } => (6, [*n, 0, 0], String::new()),
+        other => (5, [0; 3], other.to_string()),
+    }
+}
+
+/// Encode a typed error against request `id` (0 when the error is not
+/// tied to one request, e.g. a handshake failure).
+pub fn encode_error(id: u64, e: &PositError) -> Vec<u8> {
+    let (code, aux, msg) = error_code_aux(e);
+    let msg = msg.as_bytes();
+    let msg = &msg[..msg.len().min(u16::MAX as usize)];
+    let mut p = Vec::with_capacity(23 + msg.len());
+    p.extend_from_slice(&id.to_le_bytes());
+    p.push(code);
+    for a in aux {
+        p.extend_from_slice(&a.to_le_bytes());
+    }
+    p.extend_from_slice(&(msg.len() as u16).to_le_bytes());
+    p.extend_from_slice(msg);
+    p
+}
+
+pub fn decode_error(p: &[u8]) -> Result<(u64, PositError)> {
+    if p.len() < 23 {
+        return Err(protocol(format!("ERROR payload too short: {} bytes", p.len())));
+    }
+    let id = u64_at(p, 0);
+    let code = p[8];
+    let aux = |k: usize| u32::from_le_bytes(p[9 + 4 * k..13 + 4 * k].try_into().expect("4 bytes"));
+    let msg_len = u16::from_le_bytes(p[21..23].try_into().expect("2 bytes")) as usize;
+    if p.len() != 23 + msg_len {
+        return Err(protocol(format!(
+            "ERROR length mismatch: {} bytes for msg_len={msg_len}",
+            p.len()
+        )));
+    }
+    let msg = String::from_utf8_lossy(&p[23..]).into_owned();
+    let e = match code {
+        1 => PositError::ServiceOverloaded {
+            shard: aux(0) as usize,
+            inflight: aux(1) as usize,
+            capacity: aux(2) as usize,
+        },
+        2 => PositError::WidthMismatch { expected: aux(0), got: aux(1) },
+        3 => PositError::Protocol { detail: msg },
+        4 => PositError::ServiceStopped,
+        5 => PositError::Execution { detail: msg },
+        6 => PositError::WidthOutOfRange { n: aux(0) },
+        other => return Err(protocol(format!("unknown ERROR code {other}"))),
+    };
+    Ok((id, e))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Rng;
+    use crate::workload::{MixedOps, OpMix};
+    use std::io::Cursor;
+
+    fn roundtrip_frame(kind: FrameKind, payload: &[u8]) -> Frame {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, kind, payload).unwrap();
+        read_frame(&mut Cursor::new(buf)).unwrap()
+    }
+
+    #[test]
+    fn frame_roundtrip_all_kinds() {
+        for kind in [
+            FrameKind::Hello,
+            FrameKind::Welcome,
+            FrameKind::Request,
+            FrameKind::Response,
+            FrameKind::Error,
+            FrameKind::Bye,
+            FrameKind::Shutdown,
+        ] {
+            assert_eq!(FrameKind::from_code(kind.code()), Some(kind));
+            let f = roundtrip_frame(kind, b"xyz");
+            assert_eq!(f.kind, kind);
+            assert_eq!(f.payload, b"xyz");
+        }
+        assert_eq!(roundtrip_frame(FrameKind::Bye, &[]).payload, b"");
+    }
+
+    #[test]
+    fn malformed_headers_are_typed_protocol_errors() {
+        // bad magic
+        let mut buf = Vec::new();
+        write_frame(&mut buf, FrameKind::Bye, &[]).unwrap();
+        buf[0] = b'X';
+        let e = read_frame(&mut Cursor::new(&buf)).unwrap_err();
+        assert!(matches!(e, PositError::Protocol { .. }), "{e}");
+        assert!(e.to_string().contains("magic"), "{e}");
+
+        // bad version
+        let mut buf = Vec::new();
+        write_frame(&mut buf, FrameKind::Bye, &[]).unwrap();
+        buf[2] = 99;
+        let e = read_frame(&mut Cursor::new(&buf)).unwrap_err();
+        assert!(e.to_string().contains("version"), "{e}");
+
+        // unknown kind
+        let mut buf = Vec::new();
+        write_frame(&mut buf, FrameKind::Bye, &[]).unwrap();
+        buf[3] = 0x7f;
+        let e = read_frame(&mut Cursor::new(&buf)).unwrap_err();
+        assert!(e.to_string().contains("kind"), "{e}");
+
+        // oversized declared length is rejected before allocating
+        let mut buf = header_bytes(FrameKind::Request, 0).to_vec();
+        buf[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+        let e = read_frame(&mut Cursor::new(&buf)).unwrap_err();
+        assert!(e.to_string().contains("oversized"), "{e}");
+
+        // truncated: header promises more payload than the stream holds
+        let mut buf = Vec::new();
+        write_frame(&mut buf, FrameKind::Response, &encode_response(1, 2)).unwrap();
+        buf.truncate(buf.len() - 5);
+        let e = read_frame(&mut Cursor::new(&buf)).unwrap_err();
+        assert!(matches!(e, PositError::Protocol { .. }), "{e}");
+        assert!(e.to_string().contains("truncated"), "{e}");
+
+        // truncated mid-header
+        let e = read_frame(&mut Cursor::new(&buf[..3])).unwrap_err();
+        assert!(e.to_string().contains("truncated"), "{e}");
+    }
+
+    #[test]
+    fn hello_welcome_roundtrip() {
+        assert_eq!(decode_hello(&encode_hello(16)).unwrap(), 16);
+        assert_eq!(decode_welcome(&encode_welcome(32, 4)).unwrap(), (32, 4));
+        assert!(decode_hello(&[1, 2]).is_err());
+        assert!(decode_welcome(&[16]).is_err());
+    }
+
+    /// Property: every request the mixed generator can produce (scalar
+    /// ops, every division algorithm, reductions with vector lanes)
+    /// round-trips bit-exactly through encode/decode.
+    #[test]
+    fn request_roundtrip_property() {
+        let mix = OpMix::parse("div:4,sqrt:2,mul:2,add:2,sub:1,fma:1,dot:2,fsum:1,axpy:1").unwrap();
+        for n in [8u32, 16, 32] {
+            let mut wl = MixedOps::new(n, mix, 0x31BE ^ n as u64);
+            let mut rng = Rng::seeded(n as u64);
+            for _ in 0..500 {
+                let req = wl.next_request();
+                let id = rng.next_u64();
+                let (rid, back) = decode_request(&encode_request(id, &req), n).unwrap();
+                assert_eq!(rid, id);
+                assert_eq!(back.op, req.op);
+                assert_eq!(back.bits(), req.bits());
+                assert_eq!(
+                    back.vector_lanes().map(|(a, b, c)| (a.to_vec(), b.to_vec(), c)),
+                    req.vector_lanes().map(|(a, b, c)| (a.to_vec(), b.to_vec(), c)),
+                );
+                assert_eq!(back.golden(), req.golden());
+            }
+        }
+    }
+
+    #[test]
+    fn garbage_requests_are_typed_errors() {
+        let n = 16;
+        let ok = encode_request(7, &OpRequest::sqrt(Posit::one(n)));
+
+        // too short
+        let e = decode_request(&ok[..20], n).unwrap_err();
+        assert!(e.to_string().contains("too short"), "{e}");
+
+        // unknown opcode
+        let mut p = ok.clone();
+        p[8] = 42;
+        assert!(decode_request(&p, n).unwrap_err().to_string().contains("opcode"));
+
+        // algorithm byte on a non-division op
+        let mut p = ok.clone();
+        p[9] = 3;
+        assert!(decode_request(&p, n).unwrap_err().to_string().contains("algorithm"));
+
+        // division with an out-of-range algorithm index
+        let mut p = ok.clone();
+        p[8] = 0;
+        p[9] = Algorithm::ALL.len() as u8;
+        assert!(decode_request(&p, n).unwrap_err().to_string().contains("algorithm"));
+
+        // operand bits outside the Posit16 mask
+        let mut p = ok.clone();
+        p[10..18].copy_from_slice(&u64::MAX.to_le_bytes());
+        let e = decode_request(&p, n).unwrap_err();
+        assert!(matches!(e, PositError::Protocol { .. }) && e.to_string().contains("mask"), "{e}");
+
+        // unused scalar slot must be zero (sqrt is unary)
+        let mut p = ok.clone();
+        p[18..26].copy_from_slice(&1u64.to_le_bytes());
+        assert!(decode_request(&p, n).unwrap_err().to_string().contains("slot"));
+
+        // declared vector lanes on a scalar op / length mismatch
+        let mut p = ok.clone();
+        p[34..38].copy_from_slice(&2u32.to_le_bytes());
+        assert!(decode_request(&p, n).unwrap_err().to_string().contains("length mismatch"));
+        let mut p = ok;
+        p[34..38].copy_from_slice(&1u32.to_le_bytes());
+        p.extend_from_slice(&Posit::one(n).to_bits().to_le_bytes());
+        assert!(decode_request(&p, n).unwrap_err().to_string().contains("vector lanes"));
+
+        // reduction shape errors keep their own typed variants
+        let a = [Posit::one(n); 2];
+        let b = [Posit::one(n); 2];
+        let dot = encode_request(9, &OpRequest::dot(&a, &b).unwrap());
+        let mut p = dot.clone();
+        // chop one trailing lane element and fix up vb_len to match
+        p.truncate(p.len() - 8);
+        p[38..42].copy_from_slice(&1u32.to_le_bytes());
+        assert!(matches!(
+            decode_request(&p, n).unwrap_err(),
+            PositError::BatchLaneMismatch { .. }
+        ));
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let (id, bits) = decode_response(&encode_response(0xDEAD, 0xBEEF)).unwrap();
+        assert_eq!((id, bits), (0xDEAD, 0xBEEF));
+        assert!(decode_response(&[0; 15]).is_err());
+    }
+
+    #[test]
+    fn error_roundtrip_preserves_types() {
+        let cases = [
+            PositError::ServiceOverloaded { shard: 2, inflight: 4096, capacity: 4096 },
+            PositError::WidthMismatch { expected: 16, got: 32 },
+            PositError::Protocol { detail: "bad magic".into() },
+            PositError::ServiceStopped,
+            PositError::WidthOutOfRange { n: 3 },
+        ];
+        for e in cases {
+            let (id, back) = decode_error(&encode_error(11, &e)).unwrap();
+            assert_eq!(id, 11);
+            assert_eq!(back, e);
+        }
+        // errors without a wire shape surface as Execution with the message
+        let e = PositError::ArityMismatch { op: "sqrt", expected: 1, got: 2 };
+        let (_, back) = decode_error(&encode_error(0, &e)).unwrap();
+        assert!(matches!(back, PositError::Execution { .. }));
+        assert!(back.to_string().contains("sqrt"));
+        // garbage error payloads are themselves typed
+        assert!(decode_error(&[0; 10]).is_err());
+        let mut p = encode_error(1, &PositError::ServiceStopped);
+        p[8] = 99;
+        assert!(decode_error(&p).unwrap_err().to_string().contains("code"));
+    }
+
+    #[test]
+    fn request_id_recovers_from_partial_garbage() {
+        let p = encode_request(0x1234_5678, &OpRequest::sqrt(Posit::one(16)));
+        assert_eq!(request_id(&p), Some(0x1234_5678));
+        assert_eq!(request_id(&p[..4]), None);
+    }
+}

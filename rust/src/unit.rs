@@ -178,6 +178,39 @@ impl Op {
     /// accumulation, one rounding).
     pub const REDUCTIONS: [Op; 3] = [Op::Dot, Op::FusedSum, Op::Axpy];
 
+    /// One representative per operation *kind* (scalar ops then
+    /// reductions, division at the default algorithm) — the index space
+    /// for kind-keyed telemetry ([`Op::kind_index`]).
+    pub const KINDS: [Op; 9] = [
+        Op::DIV,
+        Op::Sqrt,
+        Op::Mul,
+        Op::Add,
+        Op::Sub,
+        Op::MulAdd,
+        Op::Dot,
+        Op::FusedSum,
+        Op::Axpy,
+    ];
+
+    /// Dense index of this op's kind into [`Op::KINDS`] (division maps to
+    /// one slot regardless of algorithm) — used by kind-keyed metric
+    /// storage such as the coordinator latency panel.
+    #[inline]
+    pub fn kind_index(self) -> usize {
+        match self {
+            Op::Div { .. } => 0,
+            Op::Sqrt => 1,
+            Op::Mul => 2,
+            Op::Add => 3,
+            Op::Sub => 4,
+            Op::MulAdd => 5,
+            Op::Dot => 6,
+            Op::FusedSum => 7,
+            Op::Axpy => 8,
+        }
+    }
+
     /// Number of operand lanes the op consumes (for the reductions these
     /// are vector lanes: `Dot` reads `a`/`b`, `FusedSum` reads `a`,
     /// `Axpy` reads `a`/`b` plus the scalar coefficient in `c`).
@@ -1153,6 +1186,15 @@ mod tests {
         assert_eq!(Op::Sqrt.label(), "sqrt");
         assert_eq!(Op::Sqrt.to_string(), "sqrt");
         assert_eq!(Op::DEFAULTS.len(), 6);
+        // kind indices are dense, stable and algorithm-blind
+        for (i, op) in Op::KINDS.iter().enumerate() {
+            assert_eq!(op.kind_index(), i, "{op}");
+        }
+        assert_eq!(
+            Op::Div { alg: Algorithm::Nrd }.kind_index(),
+            Op::DIV.kind_index(),
+            "division kinds ignore the algorithm"
+        );
     }
 
     #[test]

@@ -2,6 +2,8 @@
 //! division-pair streams ([`Workload`]) and op-tagged mixed streams
 //! ([`MixedOps`]) for the operation-generic unit service.
 
+use std::time::Duration;
+
 use crate::posit::{mask, Posit};
 use crate::testkit::Rng;
 use crate::unit::{Op, OpRequest};
@@ -337,6 +339,58 @@ pub fn take_requests(w: &mut MixedOps, count: usize) -> Vec<OpRequest> {
     (0..count).map(|_| w.next_request()).collect()
 }
 
+/// Open-loop traffic: a [`MixedOps`] stream paced by a Poisson arrival
+/// process at a fixed offered rate. Unlike the closed-loop generators
+/// above (which produce the next request whenever the consumer is
+/// ready), arrivals here carry *timestamps* that do not care whether
+/// the service keeps up — the drive that exposes queueing delay and
+/// tail latency, which closed loops structurally hide.
+///
+/// Inter-arrival gaps are exponential (`-ln(1-U)·mean`), so bursts
+/// happen naturally; the service sees realistic short-term overload
+/// even when the average rate is sustainable.
+pub struct OpenLoop {
+    ops: MixedOps,
+    mean_gap_ns: f64,
+    clock_ns: f64,
+    rng: Rng,
+}
+
+impl OpenLoop {
+    /// A stream of `mix`-distributed Posit-`n` requests arriving at
+    /// `rate_per_sec` on average (clamped below at 1 req/s).
+    pub fn new(n: u32, mix: OpMix, rate_per_sec: f64, seed: u64) -> Self {
+        let rate = if rate_per_sec.is_finite() { rate_per_sec.max(1.0) } else { 1.0 };
+        OpenLoop {
+            ops: MixedOps::new(n, mix, seed),
+            mean_gap_ns: 1e9 / rate,
+            clock_ns: 0.0,
+            rng: Rng::seeded(seed ^ 0x9E37_79B9_7F4A_7C15),
+        }
+    }
+
+    /// The configured mean arrival rate, in requests per second.
+    pub fn rate(&self) -> f64 {
+        1e9 / self.mean_gap_ns
+    }
+
+    pub fn width(&self) -> u32 {
+        self.ops.n
+    }
+
+    /// The next arrival: its offset from the start of the drive (a
+    /// strictly advancing clock) and the request itself.
+    pub fn next_arrival(&mut self) -> (Duration, OpRequest) {
+        let u = self.rng.f64_unit();
+        self.clock_ns += -(1.0 - u).ln() * self.mean_gap_ns;
+        (Duration::from_nanos(self.clock_ns as u64), self.ops.next_request())
+    }
+
+    pub fn name(&self) -> &'static str {
+        "open-loop"
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -477,6 +531,42 @@ mod tests {
             }
         }
         assert!(seen.iter().all(|&s| s > 50), "{seen:?}");
+    }
+
+    #[test]
+    fn open_loop_arrivals_are_poisson_paced() {
+        let mut wl = OpenLoop::new(16, OpMix::DEFAULT, 50_000.0, 9);
+        assert_eq!(wl.rate(), 50_000.0);
+        assert_eq!(wl.width(), 16);
+        let mut last = Duration::ZERO;
+        let count = 10_000;
+        let mut final_at = Duration::ZERO;
+        for _ in 0..count {
+            let (at, req) = wl.next_arrival();
+            assert!(at >= last, "arrival clock must not run backwards");
+            assert_eq!(req.width(), 16);
+            last = at;
+            final_at = at;
+        }
+        // mean gap of an exponential at 50k/s is 20µs; over 10k draws
+        // the total should land near 200ms (±30%)
+        let total_ms = final_at.as_secs_f64() * 1e3;
+        assert!((140.0..260.0).contains(&total_ms), "{total_ms}ms");
+        // same seed → identical schedule (resumable, shardable drives)
+        let mut again = OpenLoop::new(16, OpMix::DEFAULT, 50_000.0, 9);
+        for _ in 0..count {
+            again.next_arrival();
+        }
+        let (a1, _) = wl.next_arrival();
+        let (a2, _) = again.next_arrival();
+        assert_eq!(a1, a2);
+    }
+
+    #[test]
+    fn open_loop_clamps_degenerate_rates() {
+        assert_eq!(OpenLoop::new(16, OpMix::DEFAULT, 0.0, 1).rate(), 1.0);
+        assert_eq!(OpenLoop::new(16, OpMix::DEFAULT, f64::NAN, 1).rate(), 1.0);
+        assert_eq!(OpenLoop::new(16, OpMix::DEFAULT, f64::INFINITY, 1).rate(), 1.0);
     }
 
     #[test]

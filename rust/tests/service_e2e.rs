@@ -1,0 +1,202 @@
+//! End-to-end soak of the sharded TCP serving tier: sustained mixed
+//! traffic across shards over loopback with bounded tail latency,
+//! typed overload shedding, open-loop (arrival-rate) driving, consistent
+//! `(op, width)` shard affinity, and typed rejection of malformed wire
+//! frames. Everything here goes through the real socket path — the same
+//! bytes `posit-div serve`/`client` exchange (docs/SERVING.md).
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::time::Duration;
+
+use posit_div::coordinator::{Backend, BatchPolicy, ServiceConfig};
+use posit_div::division::Algorithm;
+use posit_div::posit::Posit;
+use posit_div::service::wire::{self, FrameKind};
+use posit_div::service::{shard_for, Server, ServiceClient, ShardConfig};
+use posit_div::unit::{ExecTier, Op, OpRequest};
+use posit_div::workload::{take_requests, MixedOps, OpMix, OpenLoop};
+use posit_div::PositError;
+
+fn cfg(n: u32, shards: usize, queue_capacity: usize) -> ShardConfig {
+    ShardConfig {
+        shards,
+        queue_capacity,
+        service: ServiceConfig {
+            n,
+            backend: Backend::Native { alg: Algorithm::DEFAULT, threads: 2 },
+            policy: BatchPolicy { max_batch: 64, max_wait: Duration::from_micros(100) },
+            tier: ExecTier::Auto,
+        },
+    }
+}
+
+/// The full op mix: every kind the wire protocol can carry, including
+/// the quire reductions.
+fn full_mix() -> OpMix {
+    OpMix::parse("div:4,sqrt:2,mul:3,add:3,sub:2,fma:2,dot:1,fsum:1,axpy:1").expect("static mix")
+}
+
+#[test]
+fn soak_mixed_traffic_across_shards_with_bounded_tail() {
+    let server = Server::bind("127.0.0.1:0", cfg(16, 2, 4096)).unwrap();
+    let mut client = ServiceClient::connect(server.local_addr(), 16).unwrap();
+
+    let reqs = take_requests(&mut MixedOps::new(16, full_mix(), 0xABCD), 4_000);
+    let results = client.run_ops(&reqs).unwrap();
+    assert_eq!(results.len(), reqs.len());
+    for (i, (req, res)) in reqs.iter().zip(&results).enumerate() {
+        let got = res.as_ref().expect("queue capacity exceeds the pipeline window");
+        assert_eq!(*got, req.golden(), "{} sample {i}", req.op);
+    }
+
+    client.shutdown_server().unwrap();
+    let svc = server.wait();
+    assert_eq!(svc.total_requests(), reqs.len() as u64);
+    assert_eq!(svc.shed_total(), 0);
+
+    // affinity spreads a full mix over both shards
+    let per_shard = svc.shard_requests();
+    assert_eq!(per_shard.len(), 2);
+    assert!(per_shard.iter().all(|&r| r > 0), "one shard sat idle: {per_shard:?}");
+
+    // the SLO panel saw every op kind, every request, and nothing hung
+    let panel = svc.latency_snapshot();
+    let cells = panel.nonempty();
+    let kinds: std::collections::BTreeSet<&str> =
+        cells.iter().map(|(op, _, _)| op.name()).collect();
+    assert_eq!(kinds.len(), 9, "op kinds with latency cells: {kinds:?}");
+    let mut measured = 0;
+    for (op, lane, h) in &cells {
+        assert!(h.count() > 0);
+        assert!(
+            h.quantile(0.999) < Duration::from_secs(5),
+            "{} x {} p999 unbounded",
+            op.name(),
+            lane.name()
+        );
+        measured += h.count();
+    }
+    assert_eq!(measured, reqs.len() as u64);
+
+    let render = svc.counters_render();
+    assert!(render.contains("shard 0: requests="), "{render}");
+    assert!(render.contains("shard 1: requests="), "{render}");
+    svc.shutdown();
+}
+
+#[test]
+fn overload_sheds_typed_over_tcp_and_recovers() {
+    // One admission slot per shard: holding it from the in-process
+    // router handle makes the next TCP request for the same op a
+    // deterministic shed — no timing involved.
+    let server = Server::bind("127.0.0.1:0", cfg(16, 2, 1)).unwrap();
+    let router = server.client();
+    let mut client = ServiceClient::connect(server.local_addr(), 16).unwrap();
+
+    let one = Posit::one(16);
+    let shard = shard_for(Op::Sqrt, 16, 2);
+    let ticket = router.submit_op(OpRequest::sqrt(one)).unwrap();
+    assert_eq!(ticket.shard(), shard);
+
+    let e = client.run_op(&OpRequest::sqrt(one)).unwrap_err();
+    assert_eq!(e, PositError::ServiceOverloaded { shard, inflight: 1, capacity: 1 });
+
+    // draining the held ticket frees the slot; the same request succeeds
+    assert_eq!(ticket.wait().unwrap(), one);
+    assert_eq!(client.run_op(&OpRequest::sqrt(one)).unwrap(), one);
+
+    client.shutdown_server().unwrap();
+    let svc = server.wait();
+    assert_eq!(svc.shed_total(), 1);
+    assert_eq!(svc.total_requests(), 2);
+    svc.shutdown();
+}
+
+#[test]
+fn open_loop_drive_is_verified_and_accounted() {
+    let server = Server::bind("127.0.0.1:0", cfg(16, 2, 4096)).unwrap();
+    let mut client = ServiceClient::connect(server.local_addr(), 16).unwrap();
+
+    let mut wl = OpenLoop::new(16, full_mix(), 25_000.0, 42);
+    let rep = client.run_open_loop(&mut wl, 2_000, 7).unwrap();
+
+    assert_eq!(rep.offered, 2_000);
+    assert_eq!(rep.completed + rep.shed + rep.errors, rep.offered, "every request accounted");
+    assert_eq!(rep.errors, 0);
+    assert_eq!(rep.shed, 0, "2000 in flight cannot overrun a 4096 budget");
+    assert_eq!(rep.verify_failures, 0);
+    assert_eq!(rep.latency.count(), 2_000);
+    assert!(rep.latency.quantile(0.999) < Duration::from_secs(10), "open-loop p999 unbounded");
+    assert!(rep.achieved_rate() > 0.0);
+    assert_eq!(rep.width, 16);
+
+    client.shutdown_server().unwrap();
+    server.shutdown().shutdown();
+}
+
+#[test]
+fn affinity_routes_an_op_to_its_shard_over_tcp() {
+    let server = Server::bind("127.0.0.1:0", cfg(16, 2, 1024)).unwrap();
+    let mut client = ServiceClient::connect(server.local_addr(), 16).unwrap();
+
+    let one = Posit::one(16);
+    let reqs = vec![OpRequest::mul(one, one); 50];
+    let results = client.run_ops(&reqs).unwrap();
+    assert!(results.iter().all(|r| *r.as_ref().unwrap() == one));
+
+    client.shutdown_server().unwrap();
+    let svc = server.wait();
+    let shard = shard_for(Op::Mul, 16, 2);
+    let per_shard = svc.shard_requests();
+    assert_eq!(per_shard[shard], 50, "all mul traffic on its home shard");
+    assert_eq!(per_shard[1 - shard], 0, "the other shard stayed idle");
+    svc.shutdown();
+}
+
+#[test]
+fn malformed_frames_get_typed_error_replies() {
+    let server = Server::bind("127.0.0.1:0", cfg(16, 1, 1024)).unwrap();
+    let addr = server.local_addr();
+
+    let handshake = |s: &mut TcpStream| {
+        wire::write_frame(s, FrameKind::Hello, &wire::encode_hello(16)).unwrap();
+        let f = wire::read_frame(s).unwrap();
+        assert_eq!(f.kind, FrameKind::Welcome);
+    };
+    let expect_protocol_error = |s: &mut TcpStream| {
+        let f = wire::read_frame(s).unwrap();
+        assert_eq!(f.kind, FrameKind::Error);
+        let (id, e) = wire::decode_error(&f.payload).unwrap();
+        assert_eq!(id, 0, "no request id recoverable from broken framing");
+        assert!(matches!(e, PositError::Protocol { .. }), "{e}");
+    };
+
+    // broken framing (bad magic): typed error, then the server hangs up
+    let mut s = TcpStream::connect(addr).unwrap();
+    handshake(&mut s);
+    s.write_all(&[0xFF; 8]).unwrap();
+    expect_protocol_error(&mut s);
+    assert!(wire::read_frame(&mut s).is_err(), "connection stays closed after a framing break");
+
+    // oversized declared length: rejected from the header alone
+    let mut s = TcpStream::connect(addr).unwrap();
+    handshake(&mut s);
+    s.write_all(&wire::header_bytes(FrameKind::Request, wire::MAX_FRAME + 1)).unwrap();
+    expect_protocol_error(&mut s);
+
+    // garbage *payload* in a well-formed frame: typed error, but the
+    // connection survives and serves the next request normally
+    let mut s = TcpStream::connect(addr).unwrap();
+    handshake(&mut s);
+    wire::write_frame(&mut s, FrameKind::Request, &[1, 2, 3]).unwrap();
+    expect_protocol_error(&mut s);
+    let one = Posit::one(16);
+    let req = wire::encode_request(9, &OpRequest::sqrt(one));
+    wire::write_frame(&mut s, FrameKind::Request, &req).unwrap();
+    let f = wire::read_frame(&mut s).unwrap();
+    assert_eq!(f.kind, FrameKind::Response);
+    assert_eq!(wire::decode_response(&f.payload).unwrap(), (9, one.to_bits()));
+
+    server.shutdown().shutdown();
+}

@@ -18,6 +18,11 @@ cargo build --release --all-targets
 echo "== tier-1: cargo test -q =="
 cargo test -q
 
+echo "== service soak (sharded TCP serving over loopback) =="
+# also part of `cargo test` above; named so a serving regression (hang,
+# shed miscount, wire break) fails as its own step with its own output
+cargo test --release --test service_e2e
+
 if [ "${SKIP_FMT:-0}" != "1" ]; then
     if cargo fmt --version >/dev/null 2>&1; then
         echo "== cargo fmt --check =="
