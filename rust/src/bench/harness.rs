@@ -34,7 +34,7 @@ pub struct BenchCli {
     pub profile: Profile,
     /// Timing configuration derived from the profile.
     pub cfg: Config,
-    /// `--tier fast|datapath|auto` — restricts tier-aware suites
+    /// `--tier fast|datapath|approx|auto` — restricts tier-aware suites
     /// (`unit_throughput`) to one execution tier. `None`/`auto` runs the
     /// full tier-tagged row set; note that unlike profiles, an explicit
     /// single-tier run *does* shrink the row set (the baseline compare
@@ -94,7 +94,7 @@ impl BenchCli {
             cfg: profile.config(),
             tier: args.flag("tier").map(|t| {
                 ExecTier::parse(t).unwrap_or_else(|| {
-                    eprintln!("invalid --tier {t:?} (expected fast|datapath|auto)");
+                    eprintln!("invalid --tier {t:?} (expected fast|datapath|approx|auto)");
                     std::process::exit(2);
                 })
             }),

@@ -194,14 +194,22 @@ fn engine_throughput(cli: &BenchCli, r: &mut Runner) {
     }
 }
 
-/// The execution tiers a tier-aware suite sweeps for this run:
-/// both by default, one under an explicit `--tier fast|datapath`.
+/// The exact execution tiers a tier-aware suite sweeps for this run:
+/// both by default, one under an explicit `--tier fast|datapath`, none
+/// under `--tier approx` (which selects only the bounded-error rows).
 fn tiers_under_test(cli: &BenchCli) -> &'static [ExecTier] {
     match cli.tier {
         Some(ExecTier::Fast) => &[ExecTier::Fast],
         Some(ExecTier::Datapath) => &[ExecTier::Datapath],
+        Some(ExecTier::Approx) => &[],
         _ => &[ExecTier::Fast, ExecTier::Datapath],
     }
+}
+
+/// Whether this run should include the approx-tier rows: yes by
+/// default and under `--tier approx`; no when pinned to an exact tier.
+fn approx_rows_under_test(cli: &BenchCli) -> bool {
+    !matches!(cli.tier, Some(ExecTier::Fast) | Some(ExecTier::Datapath))
 }
 
 /// The operation-generic counterpart of [`engine_throughput`]: batch
@@ -210,10 +218,12 @@ fn tiers_under_test(cli: &BenchCli) -> &'static [ExecTier] {
 /// — each op measured on both the Fast kernels and the cycle-accurate
 /// Datapath (restrict with `--tier`) — plus dispatch-forced fast-path
 /// rows (`batch:fast-table` for the exhaustive Posit8 tables,
-/// `batch:fast-simd` for the SWAR kernels at Posit8/16) and one mixed-op
-/// coordinator row per (width, tier) (the service groups each dynamic
-/// batch per op and runs every group on its cached unit at the
-/// configured tier).
+/// `batch:fast-simd` for the SWAR kernels at Posit8/16), approx-tier
+/// rows (`batch:approx` — the bounded-error kernels for every (op,
+/// width) with a registered ulp spec: div/sqrt/mul at Posit8/16/32) and
+/// one mixed-op coordinator row per (width, tier) (the service groups
+/// each dynamic batch per op and runs every group on its cached unit at
+/// the configured tier).
 fn unit_throughput(cli: &BenchCli, r: &mut Runner) {
     let tiers = tiers_under_test(cli);
     let mut rng = Rng::seeded(0x0127);
@@ -297,6 +307,36 @@ fn unit_throughput(cli: &BenchCli, r: &mut Runner) {
                     Some(label.as_str()),
                     &format!("batch:{}", path.tag()),
                 );
+            }
+        }
+    }
+
+    // Approx-tier rows: the bounded-error kernels for every (op, width)
+    // with a registered ulp spec. Same operand sanitization as above so
+    // the rows measure the real-lane kernels, not the special pre-pass.
+    if approx_rows_under_test(cli) {
+        let mut rng = Rng::seeded(0xA99);
+        for n in [8u32, 16, 32] {
+            let a: Vec<u64> = (0..256).map(|_| rng.next_u64() & mask(n)).collect();
+            let b: Vec<u64> = (0..256).map(|_| (rng.next_u64() & mask(n)) | 1).collect();
+            let radicands: Vec<u64> = a.iter().map(|&v| v & !(1u64 << (n - 1))).collect();
+            let mut out = vec![0u64; a.len()];
+            for op in [Op::DIV, Op::Sqrt, Op::Mul] {
+                let unit = Unit::with_tier(n, op, ExecTier::Approx)
+                    .expect("div/sqrt/mul carry approx specs at the standard widths");
+                let la: &[u64] = if op == Op::Sqrt { &radicands } else { &a };
+                let lb: &[u64] = if op == Op::Sqrt { &[] } else { &b };
+                let m = bench_batched(
+                    &format!("Posit{n} {} batch approx", op.name()),
+                    cli.cfg,
+                    la.len() as u64,
+                    || {
+                        unit.run_batch(la, lb, &[], &mut out).expect("equal lanes");
+                        black_box(&out);
+                    },
+                );
+                let label = op.label();
+                r.add_tagged(m, Some(n), Some(label.as_str()), "batch:approx");
             }
         }
     }

@@ -100,25 +100,29 @@ impl Histogram {
 }
 
 /// Which execution lane ultimately served a request: the Fast kernels,
-/// the cycle-accurate Datapath engines, or the PJRT graph. This is the
-/// *resolved* serving lane (`ExecTier::Auto` never appears here), the
-/// second axis of the [`LatencyPanel`].
+/// the cycle-accurate Datapath engines, the PJRT graph, or the
+/// bounded-error Approx kernels. This is the *resolved* serving lane
+/// (`ExecTier::Auto` never appears here), the second axis of the
+/// [`LatencyPanel`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ServedBy {
     Fast,
     Datapath,
     Pjrt,
+    Approx,
 }
 
 impl ServedBy {
     /// All lanes, in [`ServedBy::index`] order.
-    pub const ALL: [ServedBy; 3] = [ServedBy::Fast, ServedBy::Datapath, ServedBy::Pjrt];
+    pub const ALL: [ServedBy; 4] =
+        [ServedBy::Fast, ServedBy::Datapath, ServedBy::Pjrt, ServedBy::Approx];
 
     /// Map a *resolved* native tier to its lane.
     pub fn from_tier(tier: ExecTier) -> ServedBy {
         match tier {
             ExecTier::Fast | ExecTier::Auto => ServedBy::Fast,
             ExecTier::Datapath => ServedBy::Datapath,
+            ExecTier::Approx => ServedBy::Approx,
         }
     }
 
@@ -127,15 +131,17 @@ impl ServedBy {
             ServedBy::Fast => 0,
             ServedBy::Datapath => 1,
             ServedBy::Pjrt => 2,
+            ServedBy::Approx => 3,
         }
     }
 
-    /// Stable lowercase name (`fast`, `datapath`, `pjrt`).
+    /// Stable lowercase name (`fast`, `datapath`, `pjrt`, `approx`).
     pub fn name(self) -> &'static str {
         match self {
             ServedBy::Fast => "fast",
             ServedBy::Datapath => "datapath",
             ServedBy::Pjrt => "pjrt",
+            ServedBy::Approx => "approx",
         }
     }
 }
@@ -148,7 +154,7 @@ impl ServedBy {
 pub struct LatencyPanel {
     /// `[op kind][lane]`, indexed by [`Op::kind_index`] ×
     /// [`ServedBy::index`].
-    cells: [[Histogram; 3]; 9],
+    cells: [[Histogram; 4]; 9],
 }
 
 impl Default for LatencyPanel {
@@ -300,6 +306,8 @@ pub struct TierCounters {
     pub fast_simd: AtomicU64,
     pub datapath: AtomicU64,
     pub pjrt: AtomicU64,
+    /// Requests served by the bounded-error Approx kernels.
+    pub approx: AtomicU64,
 }
 
 impl TierCounters {
@@ -310,6 +318,7 @@ impl TierCounters {
         match tier {
             ExecTier::Fast | ExecTier::Auto => self.fast.fetch_add(count, Ordering::Relaxed),
             ExecTier::Datapath => self.datapath.fetch_add(count, Ordering::Relaxed),
+            ExecTier::Approx => self.approx.fetch_add(count, Ordering::Relaxed),
         };
     }
 
@@ -338,18 +347,118 @@ impl TierCounters {
         match tier {
             ExecTier::Fast | ExecTier::Auto => self.fast.load(Ordering::Relaxed),
             ExecTier::Datapath => self.datapath.load(Ordering::Relaxed),
+            ExecTier::Approx => self.approx.load(Ordering::Relaxed),
         }
     }
 
     pub fn summary(&self) -> String {
         format!(
-            "fast={} (table={} simd={}) datapath={} pjrt={}",
+            "fast={} (table={} simd={}) datapath={} pjrt={} approx={}",
             self.fast.load(Ordering::Relaxed),
             self.fast_table.load(Ordering::Relaxed),
             self.fast_simd.load(Ordering::Relaxed),
             self.datapath.load(Ordering::Relaxed),
             self.pjrt.load(Ordering::Relaxed),
+            self.approx.load(Ordering::Relaxed),
         )
+    }
+}
+
+/// One op kind's observed Approx-tier error telemetry, as a relaxed
+/// snapshot of the sampled audit lanes (the coordinator recomputes every
+/// k-th approx-served lane on the exact tier and records the observed
+/// ulp distance here).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ApproxErrorStats {
+    /// Audited lanes.
+    pub count: u64,
+    /// Largest observed ulp error.
+    pub max: u64,
+    /// Sum of observed ulp errors (mean = `sum / count`).
+    pub sum: u64,
+    /// Audited lanes whose observed error exceeded the kernel's
+    /// *declared* bound — a contract violation; should stay 0.
+    pub over: u64,
+}
+
+impl ApproxErrorStats {
+    /// Mean observed ulp error over the audited lanes.
+    pub fn mean(&self) -> f64 {
+        self.sum as f64 / self.count.max(1) as f64
+    }
+}
+
+#[derive(Default)]
+struct ApproxErrorCell {
+    count: AtomicU64,
+    max: AtomicU64,
+    sum: AtomicU64,
+    over: AtomicU64,
+}
+
+/// Observed-error telemetry for the Approx tier, one cell per op kind
+/// ([`Op::kind_index`]). Lock-free on the record path, like every other
+/// panel here.
+#[derive(Default)]
+pub struct ApproxErrorPanel {
+    cells: [ApproxErrorCell; 9],
+}
+
+impl ApproxErrorPanel {
+    /// Record one audited lane: the observed ulp distance from the exact
+    /// result, checked against the kernel's declared bound.
+    pub fn record(&self, op: Op, ulp: u64, declared_max: u64) {
+        let c = &self.cells[op.kind_index()];
+        c.count.fetch_add(1, Ordering::Relaxed);
+        c.max.fetch_max(ulp, Ordering::Relaxed);
+        c.sum.fetch_add(ulp, Ordering::Relaxed);
+        if ulp > declared_max {
+            c.over.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Snapshot one op kind's stats.
+    pub fn get(&self, op: Op) -> ApproxErrorStats {
+        let c = &self.cells[op.kind_index()];
+        ApproxErrorStats {
+            count: c.count.load(Ordering::Relaxed),
+            max: c.max.load(Ordering::Relaxed),
+            sum: c.sum.load(Ordering::Relaxed),
+            over: c.over.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Fold another panel into this one (per-shard → fleet aggregation).
+    pub fn merge_from(&self, other: &ApproxErrorPanel) {
+        for (mine, theirs) in self.cells.iter().zip(other.cells.iter()) {
+            mine.count.fetch_add(theirs.count.load(Ordering::Relaxed), Ordering::Relaxed);
+            mine.max.fetch_max(theirs.max.load(Ordering::Relaxed), Ordering::Relaxed);
+            mine.sum.fetch_add(theirs.sum.load(Ordering::Relaxed), Ordering::Relaxed);
+            mine.over.fetch_add(theirs.over.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+    }
+
+    /// One line per op kind with audited traffic:
+    /// `div: audited=... max_ulp=... mean_ulp=... over=...`.
+    pub fn summary(&self) -> String {
+        let mut out = String::new();
+        for op in Op::KINDS {
+            let s = self.get(op);
+            if s.count > 0 {
+                out.push_str(&format!(
+                    "{}: audited={} max_ulp={} mean_ulp={:.2} over={}\n",
+                    op.name(),
+                    s.count,
+                    s.max,
+                    s.mean(),
+                    s.over
+                ));
+            }
+        }
+        if out.is_empty() {
+            out.push_str("(no approx traffic)\n");
+        }
+        out
     }
 }
 
@@ -369,6 +478,8 @@ pub struct Metrics {
     pub tiers: TierCounters,
     /// End-to-end latency per (op kind × serving lane) — the SLO panel.
     pub latency: LatencyPanel,
+    /// Observed Approx-tier error per op kind, from the sampled audit.
+    pub approx_errors: ApproxErrorPanel,
     /// Requests shed by admission control (`ServiceOverloaded`): counted
     /// by the sharded router against the target shard's metrics, never
     /// enqueued, never part of `requests`.
@@ -499,10 +610,46 @@ mod tests {
     fn served_by_maps_resolved_tiers() {
         assert_eq!(ServedBy::from_tier(ExecTier::Fast), ServedBy::Fast);
         assert_eq!(ServedBy::from_tier(ExecTier::Datapath), ServedBy::Datapath);
+        assert_eq!(ServedBy::from_tier(ExecTier::Approx), ServedBy::Approx);
         for (i, lane) in ServedBy::ALL.iter().enumerate() {
             assert_eq!(lane.index(), i);
         }
         assert_eq!(ServedBy::Pjrt.name(), "pjrt");
+        assert_eq!(ServedBy::Approx.name(), "approx");
+    }
+
+    #[test]
+    fn approx_error_panel_records_and_merges() {
+        let p = ApproxErrorPanel::default();
+        p.record(Op::DIV, 1, 4);
+        p.record(Op::DIV, 3, 4);
+        p.record(Op::Div { alg: crate::division::Algorithm::Nrd }, 0, 4);
+        p.record(Op::Sqrt, 9, 4); // over the declared bound
+        let d = p.get(Op::DIV);
+        assert_eq!((d.count, d.max, d.sum, d.over), (3, 3, 4, 0));
+        assert!((d.mean() - 4.0 / 3.0).abs() < 1e-9);
+        let s = p.get(Op::Sqrt);
+        assert_eq!((s.count, s.max, s.over), (1, 9, 1));
+        assert_eq!(p.get(Op::Mul), ApproxErrorStats::default());
+        let out = p.summary();
+        assert!(out.contains("div: audited=3 max_ulp=3"), "{out}");
+        assert!(out.contains("sqrt: audited=1 max_ulp=9") && out.contains("over=1"), "{out}");
+        // fleet aggregation folds cell-wise
+        let q = ApproxErrorPanel::default();
+        q.merge_from(&p);
+        q.merge_from(&p);
+        let d = q.get(Op::DIV);
+        assert_eq!((d.count, d.max, d.sum), (6, 3, 8));
+        assert_eq!(ApproxErrorPanel::default().summary(), "(no approx traffic)\n");
+    }
+
+    #[test]
+    fn tier_counters_count_the_approx_lane() {
+        let t = TierCounters::default();
+        t.record(ExecTier::Approx, 12);
+        t.record(ExecTier::Fast, 3);
+        assert_eq!(t.get(ExecTier::Approx), 12);
+        assert!(t.summary().contains("approx=12"), "{}", t.summary());
     }
 
     #[test]

@@ -39,7 +39,10 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 pub use batcher::BatchPolicy;
-pub use metrics::{Histogram, LatencyPanel, Metrics, OpCounters, ServedBy, TierCounters};
+pub use metrics::{
+    ApproxErrorPanel, ApproxErrorStats, Histogram, LatencyPanel, Metrics, OpCounters, ServedBy,
+    TierCounters,
+};
 // The worker pool is a crate-level module now ([`crate::pool`]), shared
 // by every parallel batch path; these re-exports keep the old
 // `coordinator::{pool, Pool}` paths working.
@@ -49,7 +52,13 @@ use crate::division::Algorithm;
 use crate::error::{PositError, Result};
 use crate::posit::{Posit, MAX_N, MIN_N};
 use crate::runtime::Runtime;
-use crate::unit::{ExecTier, FastPath, Op, OpRequest, Unit};
+use crate::unit::{Accuracy, ExecTier, FastPath, Op, OpRequest, Unit};
+
+/// Audit sampling stride for approx-served groups: every k-th lane is
+/// recomputed on the exact tier and its observed ulp error recorded in
+/// [`Metrics::approx_errors`]. A stride of 8 keeps the audit overhead
+/// near 1/8 of one exact pass while still catching contract drift fast.
+const APPROX_AUDIT_INTERVAL: usize = 8;
 
 /// Which execution engine serves the batches.
 #[derive(Clone, Debug)]
@@ -83,7 +92,11 @@ pub struct ServiceConfig {
     /// Execution tier for the native units (the PJRT graph, when used for
     /// division groups, is its own path). The default `Auto` serves batch
     /// traffic from the Fast kernels; pin `Datapath` to serve from the
-    /// cycle-accurate engines.
+    /// cycle-accurate engines. Pinning `Approx` serves every op that has
+    /// a registered bounded-error kernel from the Approx tier regardless
+    /// of per-request policy (ops without one fall back to `Auto`);
+    /// under any other tier, only requests whose [`Accuracy::Ulp`]
+    /// policy a registered kernel satisfies route approx.
     pub tier: ExecTier,
 }
 
@@ -100,6 +113,11 @@ impl Default for ServiceConfig {
 
 struct Request {
     op: Op,
+    /// Routed to the Approx tier: the request's accuracy policy is
+    /// satisfied by a registered kernel's declared bound (resolved at
+    /// enqueue time by [`Op::routes_approx`], so grouping stays a cheap
+    /// key compare).
+    approx: bool,
     a: u64,
     b: u64,
     c: u64,
@@ -195,7 +213,8 @@ impl Client {
                 vb.iter().map(|p| p.to_bits()).collect(),
             ))
         });
-        tx.send(Request { op: req.op, a, b, c, vec, enqueued, respond: rtx })
+        let approx = req.op.routes_approx(self.n, req.accuracy());
+        tx.send(Request { op: req.op, approx, a, b, c, vec, enqueued, respond: rtx })
             .map_err(|_| PositError::ServiceStopped)?;
         Ok(Pending { n: self.n, rx: rrx })
     }
@@ -262,19 +281,43 @@ impl Client {
     }
 }
 
-/// The native execution state: one cached [`Unit`] per op, built lazily
-/// as traffic arrives (the width is validated at service start, so
-/// construction cannot fail afterwards).
+/// The native execution state: one cached [`Unit`] per (op, approx)
+/// pair, built lazily as traffic arrives (the width is validated at
+/// service start, so construction cannot fail afterwards).
 struct NativeUnits {
     n: u32,
     threads: usize,
     tier: ExecTier,
-    units: HashMap<Op, Unit>,
+    units: HashMap<(Op, bool), Unit>,
 }
 
 impl NativeUnits {
     fn new(n: u32, threads: usize, tier: ExecTier) -> NativeUnits {
         NativeUnits { n, threads, tier, units: HashMap::new() }
+    }
+
+    /// The exact-lane tier: a config-pinned `Approx` still serves its
+    /// exact traffic (and its audit recomputations) from `Auto`.
+    fn exact_tier(&self) -> ExecTier {
+        if self.tier == ExecTier::Approx {
+            ExecTier::Auto
+        } else {
+            self.tier
+        }
+    }
+
+    /// The cached unit for one (op, approx-eligible) group. A group is
+    /// served approx when the requests asked for it (or the service tier
+    /// pins it) *and* a registered kernel exists — otherwise it falls
+    /// back to the exact lane, which satisfies every accuracy policy.
+    fn unit(&mut self, op: Op, approx: bool) -> (&Unit, bool) {
+        let approx = (approx || self.tier == ExecTier::Approx) && op.approx_spec(self.n).is_some();
+        let (n, tier) =
+            (self.n, if approx { ExecTier::Approx } else { self.exact_tier() });
+        let unit = self.units.entry((op, approx)).or_insert_with(|| {
+            Unit::with_tier(n, op, tier).expect("width validated at service start")
+        });
+        (unit, approx)
     }
 
     /// Execute one op group (spread over the shared crate pool) and
@@ -283,22 +326,52 @@ impl NativeUnits {
     fn run(
         &mut self,
         op: Op,
+        approx: bool,
         a: &[u64],
         b: &[u64],
         c: &[u64],
         out: &mut [u64],
     ) -> (ExecTier, Option<FastPath>) {
-        let (n, threads, tier) = (self.n, self.threads, self.tier);
-        let unit = self
-            .units
-            .entry(op)
-            .or_insert_with(|| {
-                Unit::with_tier(n, op, tier).expect("width validated at service start")
-            });
+        let threads = self.threads;
+        let (unit, _) = self.unit(op, approx);
         let path = unit.resolve_fast_path(out.len());
         unit.run_batch_parallel(a, b, c, out, threads)
             .expect("lanes are same-length by construction");
         (unit.batch_tier(), path)
+    }
+
+    /// One exact-lane recomputation, for the sampled approx audit.
+    fn exact_bits(&mut self, op: Op, a: u64, b: u64, c: u64) -> u64 {
+        let (n, tier) = (self.n, self.exact_tier());
+        let unit = self.units.entry((op, false)).or_insert_with(|| {
+            Unit::with_tier(n, op, tier).expect("width validated at service start")
+        });
+        unit.run_bits(a, b, c)
+    }
+}
+
+/// Sampled accuracy audit for an approx-served group: every
+/// [`APPROX_AUDIT_INTERVAL`]-th lane is recomputed on the exact tier and
+/// the observed ulp distance recorded against the kernel's declared
+/// bound in [`Metrics::approx_errors`].
+fn audit_approx_group(
+    native: &mut NativeUnits,
+    m: &Metrics,
+    n: u32,
+    op: Op,
+    a: &[u64],
+    b: &[u64],
+    c: &[u64],
+    out: &[u64],
+) {
+    let Some(spec) = op.approx_spec(n) else { return };
+    let lane = |l: &[u64], i: usize| if l.is_empty() { 0 } else { l[i] };
+    let mut i = 0;
+    while i < out.len() {
+        let exact = native.exact_bits(op, lane(a, i), lane(b, i), lane(c, i));
+        let ulp = Posit::from_bits(n, out[i]).ulp_distance(Posit::from_bits(n, exact));
+        m.approx_errors.record(op, ulp, spec.max_ulp);
+        i += APPROX_AUDIT_INTERVAL;
     }
 }
 
@@ -352,7 +425,7 @@ impl DivisionService {
                         // pre-build the default division unit (pays the
                         // Newton LUT etc. before traffic arrives)
                         let mut warm = [0u64; 0];
-                        native.run(Op::Div { alg: *alg }, &[], &[], &[], &mut warm);
+                        native.run(Op::Div { alg: *alg }, false, &[], &[], &[], &mut warm);
                         Exec::Native(native)
                     }
                     Backend::Pjrt { artifacts_dir } => {
@@ -373,7 +446,9 @@ impl DivisionService {
                     let mut results = vec![0u64; batch.len()];
                     // which lane served each request, for the SLO panel
                     let mut lanes = vec![ServedBy::Fast; batch.len()];
-                    for (op, idxs) in batcher::group_indices(&batch, |r| r.op) {
+                    for ((op, approx), idxs) in
+                        batcher::group_indices(&batch, |r| (r.op, r.approx))
+                    {
                         let mut out = vec![0u64; idxs.len()];
                         if op.is_reduction() {
                             // Reductions carry per-request vector lanes,
@@ -395,7 +470,7 @@ impl DivisionService {
                                 let lc: &[u64] =
                                     if op.arity() >= 3 { &alpha } else { &[] };
                                 let (served, path) =
-                                    native.run(op, va, vb, lc, &mut out[k..k + 1]);
+                                    native.run(op, false, va, vb, lc, &mut out[k..k + 1]);
                                 lanes[i] = ServedBy::from_tier(served);
                                 m.tiers.record(served, 1);
                                 if let Some(p) = path {
@@ -419,7 +494,7 @@ impl DivisionService {
                         let c = gather(|r| r.c, op.arity() >= 3);
                         match &mut exec {
                             Exec::Native(native) => {
-                                let (served, path) = native.run(op, &a, &b, &c, &mut out);
+                                let (served, path) = native.run(op, approx, &a, &b, &c, &mut out);
                                 for &i in &idxs {
                                     lanes[i] = ServedBy::from_tier(served);
                                 }
@@ -427,9 +502,12 @@ impl DivisionService {
                                 if let Some(p) = path {
                                     m.tiers.record_fast_path(p, idxs.len() as u64);
                                 }
+                                if served == ExecTier::Approx {
+                                    audit_approx_group(native, &m, n, op, &a, &b, &c, &out);
+                                }
                             }
                             Exec::Pjrt { rt, native } => {
-                                if matches!(op, Op::Div { .. }) {
+                                if matches!(op, Op::Div { .. }) && !approx {
                                     match rt.divide_bits(n, &a, &b) {
                                         Ok(q) => out = q,
                                         Err(e) => {
@@ -445,13 +523,17 @@ impl DivisionService {
                                     }
                                     m.tiers.record_pjrt(idxs.len() as u64);
                                 } else {
-                                    let (served, path) = native.run(op, &a, &b, &c, &mut out);
+                                    let (served, path) =
+                                        native.run(op, approx, &a, &b, &c, &mut out);
                                     for &i in &idxs {
                                         lanes[i] = ServedBy::from_tier(served);
                                     }
                                     m.tiers.record(served, idxs.len() as u64);
                                     if let Some(p) = path {
                                         m.tiers.record_fast_path(p, idxs.len() as u64);
+                                    }
+                                    if served == ExecTier::Approx {
+                                        audit_approx_group(native, &m, n, op, &a, &b, &c, &out);
                                     }
                                 }
                             }
@@ -727,6 +809,79 @@ mod tests {
         assert_eq!(m.tiers.get(ExecTier::Datapath), 32);
         assert_eq!(m.tiers.get(ExecTier::Fast), 0);
         assert!(m.tiers.summary().contains("datapath=32"), "{}", m.tiers.summary());
+        svc.shutdown();
+    }
+
+    /// Per-request accuracy policy: `Ulp(k)` traffic that a registered
+    /// kernel satisfies routes to the Approx tier (within its declared
+    /// bound, counted on its own lane, audited into the error panel);
+    /// `Exact` traffic stays bit-identical on the exact tiers.
+    #[test]
+    fn accuracy_policy_routes_audits_and_bounds() {
+        let n = 16;
+        let svc = DivisionService::start(native_cfg(n)).unwrap();
+        let client = svc.client();
+        let mut rng = Rng::seeded(0xACC);
+        let mut reqs = Vec::new();
+        for _ in 0..64 {
+            let x = Posit::from_bits(n, rng.next_u64() & mask(n));
+            let d = Posit::from_bits(n, rng.next_u64() & mask(n));
+            reqs.push(OpRequest::div(x, d).with_accuracy(Accuracy::Ulp(50)));
+            reqs.push(OpRequest::div(x, d));
+        }
+        let got = client.submit_ops(&reqs).unwrap().wait().unwrap();
+        for (req, q) in reqs.iter().zip(&got) {
+            let golden = req.golden();
+            match req.accuracy() {
+                Accuracy::Exact => assert_eq!(*q, golden, "exact lane must stay bit-identical"),
+                Accuracy::Ulp(k) => assert!(
+                    q.ulp_distance(golden) <= u64::from(k),
+                    "approx result {q:?} beyond ulp:{k} of {golden:?}"
+                ),
+            }
+        }
+        let m = svc.metrics();
+        assert_eq!(m.tiers.get(ExecTier::Approx), 64);
+        assert_eq!(m.tiers.get(ExecTier::Fast), 64);
+        assert_eq!(m.latency.get(Op::DIV, ServedBy::Approx).count(), 64);
+        // the sampled audit populated the error panel, within contract
+        let stats = m.approx_errors.get(Op::DIV);
+        assert!(stats.count > 0, "audit must sample approx groups");
+        assert_eq!(stats.over, 0, "observed error exceeded the declared bound");
+        assert!(stats.max <= Op::DIV.approx_spec(n).unwrap().max_ulp);
+        // a policy tighter than every registered kernel runs exact
+        let x = Posit::one(n);
+        let d = Posit::from_f64(n, 3.0);
+        let tight = OpRequest::div(x, d).with_accuracy(Accuracy::Ulp(1));
+        assert_eq!(client.run_op(tight).unwrap(), golden::divide(x, d).result);
+        assert_eq!(m.tiers.get(ExecTier::Approx), 64, "tight policy must not route approx");
+        svc.shutdown();
+    }
+
+    /// A service pinned to `ExecTier::Approx` serves every kernel-backed
+    /// op approx (whatever the request policy) and falls back to the
+    /// exact tiers for the rest.
+    #[test]
+    fn approx_tier_config_serves_eligible_ops() {
+        let n = 16;
+        let cfg = ServiceConfig { tier: ExecTier::Approx, ..native_cfg(n) };
+        let svc = DivisionService::start(cfg).unwrap();
+        let client = svc.client();
+        let nine = Posit::from_f64(n, 9.0);
+        let three = Posit::from_f64(n, 3.0);
+        let spec = Op::DIV.approx_spec(n).unwrap().max_ulp;
+        let q = client.run_op(OpRequest::div(nine, three)).unwrap();
+        assert!(q.ulp_distance(three) <= spec);
+        let s = client.run_op(OpRequest::sqrt(nine)).unwrap();
+        assert!(s.ulp_distance(three) <= Op::Sqrt.approx_spec(n).unwrap().max_ulp);
+        // no registered add kernel: exact fallback, bit-identical
+        assert_eq!(client.run_op(OpRequest::add(nine, three)).unwrap().to_f64(), 12.0);
+        let m = svc.metrics();
+        assert_eq!(m.tiers.get(ExecTier::Approx), 2);
+        assert_eq!(m.tiers.get(ExecTier::Fast), 1);
+        assert!(m.tiers.summary().contains("approx=2"), "{}", m.tiers.summary());
+        assert!(m.approx_errors.summary().contains("div: audited="), "{}",
+                m.approx_errors.summary());
         svc.shutdown();
     }
 

@@ -158,9 +158,10 @@ impl Kind {
 /// Resolve the decode-time special patterns (zero, NaR, negative
 /// radicand, zero addend) for one lane: `Some(result)` when the lane
 /// never reaches the arithmetic kernel, `None` for real lanes. Operands
-/// must already be masked to `n` bits.
+/// must already be masked to `n` bits. Shared with the Approx tier
+/// ([`super::approx`]) so special lanes stay bit-exact in every mode.
 #[inline(always)]
-fn special(n: u32, kind: Kind, a: u64, b: u64, c: u64) -> Option<u64> {
+pub(crate) fn special(n: u32, kind: Kind, a: u64, b: u64, c: u64) -> Option<u64> {
     let nar = 1u64 << (n - 1);
     match kind {
         Kind::Div => {

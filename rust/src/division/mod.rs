@@ -30,7 +30,14 @@
 //! ([`simd`]) — dispatched per batch by [`fastpath::FastPath`].
 //! [`crate::unit::ExecTier`] picks between the engines and the fast
 //! kernels.
+//!
+//! [`approx`] is the bounded-error counterpart: reciprocal/rsqrt-seeded
+//! single-Newton-step division and square root plus truncated-fraction
+//! multiplication, each registered with a declared max-ulp contract
+//! ([`approx::ApproxSpec`]) and served by `ExecTier::Approx` for
+//! requests that opt in via a per-request accuracy policy.
 
+pub mod approx;
 pub mod carry_save;
 pub mod divider;
 pub mod exec;

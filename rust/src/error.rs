@@ -34,6 +34,11 @@ pub enum PositError {
     /// silently — benches and tests must measure the kernel they asked
     /// for.
     UnsupportedFastPath { path: &'static str, op: &'static str, n: u32 },
+    /// The Approx tier has no registered bounded-error kernel for the
+    /// requested `(op, width)` (only `div`/`sqrt`/`mul` at n ∈ {8, 16, 32}
+    /// carry declared ulp specs), or a forced fast path was combined with
+    /// the Approx tier.
+    UnsupportedApprox { op: &'static str, n: u32 },
     /// A requested execution backend cannot run in this build/environment
     /// (e.g. the PJRT runtime without the `xla` feature).
     BackendUnavailable { reason: String },
@@ -78,7 +83,10 @@ impl core::fmt::Display for PositError {
                 write!(f, "op {op} takes {expected} operand lane(s), got {got}")
             }
             PositError::UnsupportedFastPath { path, op, n } => {
-                write!(f, "fast path {path:?} cannot serve op {op} at Posit{n}")
+                write!(f, "fast path {path} cannot serve op {op} at Posit{n}")
+            }
+            PositError::UnsupportedApprox { op, n } => {
+                write!(f, "approx tier has no bounded-error kernel for op {op} at Posit{n}")
             }
             PositError::BackendUnavailable { reason } => {
                 write!(f, "backend unavailable: {reason}")
@@ -116,6 +124,8 @@ mod tests {
         assert!(e.to_string().contains("lane c"));
         let e = PositError::UnsupportedFastPath { path: "table", op: "div", n: 16 };
         assert!(e.to_string().contains("table") && e.to_string().contains("Posit16"));
+        let e = PositError::UnsupportedApprox { op: "add", n: 16 };
+        assert!(e.to_string().contains("add") && e.to_string().contains("Posit16"));
         assert!(PositError::Artifacts { detail: "no artifacts found".into() }
             .to_string()
             .contains("no artifacts"));
@@ -123,6 +133,16 @@ mod tests {
         assert!(e.to_string().contains("shard 3") && e.to_string().contains("128/128"));
         let e = PositError::Protocol { detail: "truncated frame".into() };
         assert!(e.to_string().contains("truncated frame"));
+    }
+
+    /// A forced-path rejection must name the requested path and the op
+    /// verbatim — operators grep serve logs for these strings.
+    #[test]
+    fn unsupported_fast_path_message_names_path_and_op() {
+        let e = PositError::UnsupportedFastPath { path: "simd", op: "mul_add", n: 32 };
+        assert_eq!(e.to_string(), "fast path simd cannot serve op mul_add at Posit32");
+        let e = PositError::UnsupportedApprox { op: "dot", n: 64 };
+        assert_eq!(e.to_string(), "approx tier has no bounded-error kernel for op dot at Posit64");
     }
 
     #[test]

@@ -26,7 +26,15 @@
 //!   width-monomorphized direct kernels of [`division::fastpath`] the
 //!   Fast tier — bit-identical, differing only in speed and in whether
 //!   cycle metadata is stepped or modeled; `Auto` (the default) serves
-//!   batches fast and metadata exactly. Inside the Fast tier, batches
+//!   batches fast and metadata exactly. A third, **opt-in** Approx tier
+//!   ([`division::approx`]) trades correct rounding for speed under
+//!   machine-checked ulp contracts: each bounded-error kernel
+//!   (reciprocal-seed division, rsqrt-LUT square root, truncated-fraction
+//!   multiply) carries a declared [`division::approx::ApproxSpec`] bound,
+//!   enforced
+//!   exhaustively at Posit8 and by seeded sweeps at wider widths, and
+//!   requests opt in per call via [`unit::Accuracy::Ulp`] — `Exact`
+//!   traffic never touches it. Inside the Fast tier, batches
 //!   dispatch ([`unit::FastPath`], **table > SWAR > scalar-fast** by
 //!   width and batch length) over a vectorized serving layer:
 //!   construction-verified exhaustive Posit8 operation tables

@@ -11,7 +11,7 @@ use posit_div::division::{golden, Algorithm};
 use posit_div::hardware::{report, Mode, TSMC28};
 use posit_div::posit::Posit;
 use posit_div::service::{Server, ServiceClient, ShardConfig};
-use posit_div::unit::{ExecTier, Op, Unit};
+use posit_div::unit::{Accuracy, ExecTier, Op, Unit};
 use posit_div::workload::{self, OpMix, OpenLoop, Workload};
 use posit_div::PositError;
 
@@ -20,20 +20,21 @@ const USAGE: &str = "usage: posit-div <subcommand> [flags]
 subcommands:
   synth [--csv] [--n 16|32|64] [--mode comb|pipe]   synthesis model (Figs. 4-9)
   table2                                            iteration/latency table
-  divide <x> <d> [--n N] [--alg NAME] [--bits] [--tier fast|datapath|auto]
+  divide <x> <d> [--n N] [--alg NAME] [--bits] [--tier fast|datapath|approx|auto]
                                                     one division, all metadata
   sqrt <v> [--n N] [--bits] [--tier T]              one square root, all metadata
   verify [--n N] [--cases N]                        engines + fast tier vs golden cross-check
   serve [--n N] [--backend native|pjrt] [--requests N] [--batch N] [--threads N]
         [--mix div:6,sqrt:2,dot:2,fsum:1,axpy:1,...]
-        [--tier T]                                  serve division or mixed-op traffic
-                                                    (dot/fsum/axpy = quire reductions)
+        [--tier T] [--accuracy exact|ulp:K]         serve division or mixed-op traffic
+                                                    (dot/fsum/axpy = quire reductions;
+                                                    ulp:K routes eligible ops approx)
   serve --listen HOST:PORT [--shards K] [--queue-cap Q] [--json P]
         [--n N] [--backend B] [--batch N] [--threads N] [--tier T]
                                                     sharded TCP server (docs/SERVING.md);
                                                     runs until a client sends --shutdown
   client --connect HOST:PORT [--n N] [--requests N] [--mix M] [--rate R]
-         [--window W] [--verify-every K] [--shutdown]
+         [--window W] [--verify-every K] [--accuracy exact|ulp:K] [--shutdown]
                                                     drive a server over TCP: closed-loop
                                                     pipelined, or open-loop with --rate
                                                     (arrivals/s); --shutdown stops it
@@ -53,14 +54,35 @@ fn alg_by_name(name: &str) -> Option<Algorithm> {
     })
 }
 
-/// `--tier fast|datapath|auto` (default auto).
+/// `--tier fast|datapath|approx|auto` (default auto).
 fn tier_flag(args: &Args) -> ExecTier {
     match args.flag("tier") {
         None => ExecTier::Auto,
         Some(s) => ExecTier::parse(s).unwrap_or_else(|| {
-            eprintln!("invalid --tier {s:?} (expected fast|datapath|auto)");
+            eprintln!("invalid --tier {s:?} (expected fast|datapath|approx|auto)");
             std::process::exit(2);
         }),
+    }
+}
+
+/// `--accuracy exact|ulp:K` (default exact). `ulp:K` marks generated
+/// traffic as tolerating up to K ulps of error, which lets the service
+/// route eligible ops to the approx tier.
+fn accuracy_flag(args: &Args) -> Accuracy {
+    match args.flag("accuracy") {
+        None => Accuracy::Exact,
+        Some(s) => Accuracy::parse(s).unwrap_or_else(|| {
+            eprintln!("invalid --accuracy {s:?} (expected exact|ulp:K)");
+            std::process::exit(2);
+        }),
+    }
+}
+
+/// The ulp tolerance a verified result is allowed against golden.
+fn ulp_tolerance(accuracy: Accuracy) -> u64 {
+    match accuracy {
+        Accuracy::Exact => 0,
+        Accuracy::Ulp(k) => u64::from(k),
     }
 }
 
@@ -307,15 +329,23 @@ fn cmd_serve(args: &Args) {
     });
 
     let client = svc.client();
+    let accuracy = accuracy_flag(args);
     let (wall, what) = if let Some(mix) = mix {
-        let mut w = workload::MixedOps::new(n, mix, 0x5E12);
+        let mut w = workload::MixedOps::new(n, mix, 0x5E12).with_accuracy(accuracy);
         let reqs = workload::take_requests(&mut w, requests);
         let t0 = Instant::now();
         let results = client.submit_ops(&reqs).expect("service running").wait().expect("running");
         let wall = t0.elapsed();
-        // verify a sample against the exact golden references
+        // verify a sample against the golden references, within the
+        // tolerance the accuracy policy grants
         for (i, req) in reqs.iter().enumerate().step_by(101) {
-            assert_eq!(results[i], req.golden(), "{} sample {i}", req.op);
+            let dist = results[i].ulp_distance(req.golden());
+            assert!(
+                dist <= ulp_tolerance(req.accuracy()),
+                "{} sample {i}: {dist} ulp from golden under {}",
+                req.op,
+                req.accuracy()
+            );
         }
         (wall, "mixed ops")
     } else {
@@ -342,6 +372,10 @@ fn cmd_serve(args: &Args) {
     );
     println!("  ops: {}", m.ops.summary());
     println!("  tiers: {}", m.tiers.summary());
+    println!("  approx audit:");
+    for line in m.approx_errors.summary().lines() {
+        println!("    {line}");
+    }
     svc.shutdown();
 }
 
@@ -430,10 +464,11 @@ fn cmd_client(args: &Args) {
         client.set_window(w.parse().expect("--window"));
     }
     println!("connected to {addr}: Posit{} across {} shards", client.width(), client.shards());
+    let accuracy = accuracy_flag(args);
     if requests > 0 {
         if let Some(rate) = args.flag("rate") {
             let rate: f64 = rate.parse().expect("--rate");
-            let mut wl = OpenLoop::new(n, mix, rate, 0x5E12);
+            let mut wl = OpenLoop::new(n, mix, rate, 0x5E12).with_accuracy(accuracy);
             let rep = client.run_open_loop(&mut wl, requests, verify_every).unwrap_or_else(|e| {
                 eprintln!("open loop failed: {e}");
                 std::process::exit(1);
@@ -452,7 +487,7 @@ fn cmd_client(args: &Args) {
                 std::process::exit(1);
             }
         } else {
-            let mut wl = workload::MixedOps::new(n, mix, 0x5E12);
+            let mut wl = workload::MixedOps::new(n, mix, 0x5E12).with_accuracy(accuracy);
             let reqs = workload::take_requests(&mut wl, requests);
             let t0 = Instant::now();
             let results = client.run_ops(&reqs).unwrap_or_else(|e| {
@@ -465,7 +500,10 @@ fn cmd_client(args: &Args) {
                 match res {
                     Ok(p) => {
                         ok += 1;
-                        if verify_every != 0 && i % verify_every == 0 && *p != req.golden() {
+                        if verify_every != 0
+                            && i % verify_every == 0
+                            && p.ulp_distance(req.golden()) > ulp_tolerance(req.accuracy())
+                        {
                             bad += 1;
                         }
                     }

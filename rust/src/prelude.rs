@@ -34,5 +34,6 @@ pub use crate::service::{
     shard_for, OpenLoopReport, Server, ServiceClient, ShardConfig, ShardTicket, ShardedClient,
     ShardedService,
 };
-pub use crate::unit::{ExecTier, FastPath, Op, OpRequest, Unit};
+pub use crate::division::approx::ApproxSpec;
+pub use crate::unit::{Accuracy, ExecTier, FastPath, Op, OpRequest, Unit};
 pub use crate::workload::{MixedOps, OpMix, OpenLoop};

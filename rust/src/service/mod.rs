@@ -378,10 +378,8 @@ mod tests {
         assert_eq!(svc.total_requests(), 32);
         assert_eq!(svc.shed_total(), 0);
         let panel = svc.latency_snapshot();
-        let served: u64 = [ServedBy::Fast, ServedBy::Datapath, ServedBy::Pjrt]
-            .iter()
-            .map(|&l| panel.get(Op::Mul, l).count())
-            .sum();
+        let served: u64 =
+            ServedBy::ALL.iter().map(|&l| panel.get(Op::Mul, l).count()).sum();
         assert_eq!(served, 32, "latency snapshot merges shard panels");
         assert!(svc.counters_render().contains("shard 0: requests="));
         svc.shutdown();

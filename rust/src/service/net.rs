@@ -34,7 +34,7 @@ use super::{ShardConfig, ShardTicket, ShardedClient, ShardedService};
 use crate::coordinator::Histogram;
 use crate::error::{PositError, Result};
 use crate::posit::{mask, Posit};
-use crate::unit::OpRequest;
+use crate::unit::{Accuracy, OpRequest};
 use crate::workload::OpenLoop;
 
 /// How long a server-side read blocks before re-checking the stop flag.
@@ -521,7 +521,9 @@ impl ServiceClient {
     /// while a scoped reader thread drains responses concurrently.
     ///
     /// Every `verify_every`-th request (0 = never) is checked against
-    /// its [`OpRequest::golden`] result; mismatches count in
+    /// its [`OpRequest::golden`] result, within the ulp tolerance its
+    /// accuracy policy grants (`Exact` traffic must match bit-exactly,
+    /// `Ulp(k)` may land up to `k` ulps away); violations count in
     /// [`OpenLoopReport::verify_failures`].
     pub fn run_open_loop(
         &mut self,
@@ -534,8 +536,9 @@ impl ServiceClient {
         let n = self.n;
         let mut next_id = self.next_id;
         let mut offered = 0usize;
-        // id, intended-arrival stamp, golden bits to verify (sampled)
-        let (meta_tx, meta_rx) = mpsc::channel::<(u64, Instant, Option<u64>)>();
+        // id, intended-arrival stamp, (golden bits, ulp tolerance) to
+        // verify (sampled)
+        let (meta_tx, meta_rx) = mpsc::channel::<(u64, Instant, Option<(u64, u64)>)>();
         let reader = &mut self.reader;
         let writer = &mut self.writer;
         let counts = thread::scope(|s| {
@@ -568,7 +571,10 @@ impl ServiceClient {
                     match result {
                         Ok(bits) => {
                             completed += 1;
-                            if golden.is_some_and(|g| g != bits) {
+                            if golden.is_some_and(|(g, tol)| {
+                                Posit::from_bits(n, bits).ulp_distance(Posit::from_bits(n, g))
+                                    > tol
+                            }) {
                                 verify_failures += 1;
                             }
                         }
@@ -589,8 +595,13 @@ impl ServiceClient {
                 }
                 let id = next_id;
                 next_id += 1;
-                let golden =
-                    (verify_every != 0 && i % verify_every == 0).then(|| req.golden().to_bits());
+                let golden = (verify_every != 0 && i % verify_every == 0).then(|| {
+                    let tol = match req.accuracy() {
+                        Accuracy::Exact => 0u64,
+                        Accuracy::Ulp(k) => u64::from(k),
+                    };
+                    (req.golden().to_bits(), tol)
+                });
                 if meta_tx.send((id, Instant::now(), golden)).is_err() {
                     break; // collector bailed on a transport error
                 }

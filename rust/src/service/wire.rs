@@ -17,7 +17,7 @@
 //! |------|------|---------|
 //! | `HELLO`    | 0x01 | `n: u8` — the client's posit width |
 //! | `WELCOME`  | 0x02 | `n: u8, shards: u16` |
-//! | `REQUEST`  | 0x03 | `id: u64, opcode: u8, alg: u8, a: u64, b: u64, c: u64, va_len: u32, vb_len: u32, va: u64 × va_len, vb: u64 × vb_len` |
+//! | `REQUEST`  | 0x03 | `id: u64, opcode: u8, alg: u8, a: u64, b: u64, c: u64, va_len: u32, vb_len: u32, accuracy: u8, max_ulp: u32, va: u64 × va_len, vb: u64 × vb_len` |
 //! | `RESPONSE` | 0x04 | `id: u64, bits: u64` |
 //! | `ERROR`    | 0x05 | `id: u64, code: u8, aux0: u32, aux1: u32, aux2: u32, msg_len: u16, msg: utf-8 × msg_len` |
 //! | `BYE`      | 0x06 | empty |
@@ -30,6 +30,12 @@
 //! their vectors in `va`/`vb` with `a = b = 0` and the `Axpy`
 //! coefficient in `c`. Operand words must fit the negotiated width's
 //! bit mask. Violations are [`PositError::Protocol`] — never a panic.
+//!
+//! `accuracy` (new in version 2) carries the per-request accuracy
+//! policy ([`crate::unit::Accuracy`]): `0` = exact (`max_ulp` must be
+//! 0), `1` = tolerate up to `max_ulp` ulps of rounding error, making
+//! the request eligible for the server's bounded-error Approx tier.
+//! Any other `accuracy` byte is a [`PositError::Protocol`] rejection.
 //!
 //! `ERROR` codes (`aux0..aux2` meaning depends on the code):
 //!
@@ -47,12 +53,13 @@ use std::io::{Read, Write};
 use crate::division::Algorithm;
 use crate::error::{PositError, Result};
 use crate::posit::{mask, Posit};
-use crate::unit::{Op, OpRequest};
+use crate::unit::{Accuracy, Op, OpRequest};
 
 /// Leading frame bytes: `b"PD"` (posit-div).
 pub const MAGIC: [u8; 2] = *b"PD";
-/// Protocol version carried in every frame header.
-pub const VERSION: u8 = 1;
+/// Protocol version carried in every frame header. Version 2 added the
+/// per-request accuracy policy (`accuracy`/`max_ulp`) to `REQUEST`.
+pub const VERSION: u8 = 2;
 /// Header size in bytes: magic + version + kind + payload length.
 pub const HEADER_LEN: usize = 8;
 /// Largest accepted payload. Caps a `Dot`/`Axpy` request at ~65k lanes
@@ -197,8 +204,11 @@ pub fn decode_welcome(p: &[u8]) -> Result<(u32, usize)> {
 
 // ---- REQUEST ------------------------------------------------------------
 
-/// Fixed-size prefix of a `REQUEST` payload (before the vector lanes).
-pub const REQUEST_PREFIX: usize = 8 + 1 + 1 + 3 * 8 + 2 * 4;
+/// Fixed-size prefix of a `REQUEST` payload (before the vector lanes):
+/// id, opcode, alg, three operand words, two vector lengths, and the
+/// version-2 accuracy policy (`accuracy: u8` at offset 42, `max_ulp:
+/// u32` at 43).
+pub const REQUEST_PREFIX: usize = 8 + 1 + 1 + 3 * 8 + 2 * 4 + 1 + 4;
 
 fn alg_index(alg: Algorithm) -> u8 {
     Algorithm::ALL
@@ -261,6 +271,12 @@ pub fn encode_request(id: u64, req: &OpRequest) -> Vec<u8> {
     }
     p.extend_from_slice(&(va.len() as u32).to_le_bytes());
     p.extend_from_slice(&(vb.len() as u32).to_le_bytes());
+    let (acc, max_ulp) = match req.accuracy() {
+        Accuracy::Exact => (0u8, 0u32),
+        Accuracy::Ulp(k) => (1u8, k),
+    };
+    p.push(acc);
+    p.extend_from_slice(&max_ulp.to_le_bytes());
     for w in va.iter().chain(vb.iter()) {
         p.extend_from_slice(&w.to_le_bytes());
     }
@@ -303,6 +319,15 @@ pub fn decode_request(p: &[u8], n: u32) -> Result<(u64, OpRequest)> {
     let (a, b, c) = (u64_at(p, 10), u64_at(p, 18), u64_at(p, 26));
     let va_len = u32::from_le_bytes(p[34..38].try_into().expect("4-byte slice")) as usize;
     let vb_len = u32::from_le_bytes(p[38..42].try_into().expect("4-byte slice")) as usize;
+    let max_ulp = u32::from_le_bytes(p[43..47].try_into().expect("4-byte slice"));
+    let accuracy = match (p[42], max_ulp) {
+        (0, 0) => Accuracy::Exact,
+        (0, k) => {
+            return Err(protocol(format!("exact REQUEST with nonzero ulp tolerance {k}")))
+        }
+        (1, k) => Accuracy::Ulp(k),
+        (other, _) => return Err(protocol(format!("unknown accuracy policy byte {other}"))),
+    };
     let expected = REQUEST_PREFIX + 8 * (va_len + vb_len);
     if p.len() != expected {
         return Err(protocol(format!(
@@ -361,7 +386,7 @@ pub fn decode_request(p: &[u8], n: u32) -> Result<(u64, OpRequest)> {
             .collect::<Result<_>>()?;
         OpRequest::new(op, &operands)?
     };
-    Ok((id, req))
+    Ok((id, req.with_accuracy(accuracy)))
 }
 
 // ---- RESPONSE -----------------------------------------------------------
@@ -535,12 +560,18 @@ mod tests {
         for n in [8u32, 16, 32] {
             let mut wl = MixedOps::new(n, mix, 0x31BE ^ n as u64);
             let mut rng = Rng::seeded(n as u64);
-            for _ in 0..500 {
-                let req = wl.next_request();
+            for i in 0..500u32 {
+                let accuracy = match i % 3 {
+                    0 => Accuracy::Exact,
+                    1 => Accuracy::Ulp(i),
+                    _ => Accuracy::Ulp(u32::MAX),
+                };
+                let req = wl.next_request().with_accuracy(accuracy);
                 let id = rng.next_u64();
                 let (rid, back) = decode_request(&encode_request(id, &req), n).unwrap();
                 assert_eq!(rid, id);
                 assert_eq!(back.op, req.op);
+                assert_eq!(back.accuracy(), req.accuracy());
                 assert_eq!(back.bits(), req.bits());
                 assert_eq!(
                     back.vector_lanes().map(|(a, b, c)| (a.to_vec(), b.to_vec(), c)),
@@ -608,6 +639,37 @@ mod tests {
             decode_request(&p, n).unwrap_err(),
             PositError::BatchLaneMismatch { .. }
         ));
+    }
+
+    /// The accuracy policy occupies fixed byte positions (42 and 43..47)
+    /// so mixed-version tooling can inspect it without a full decode, and
+    /// inconsistent encodings are rejected as Protocol errors.
+    #[test]
+    fn accuracy_policy_bytes_and_rejections() {
+        let n = 16;
+        let exact = encode_request(1, &OpRequest::sqrt(Posit::one(n)));
+        assert_eq!(exact[42], 0);
+        assert_eq!(&exact[43..47], &[0u8; 4]);
+
+        let bounded =
+            encode_request(2, &OpRequest::sqrt(Posit::one(n)).with_accuracy(Accuracy::Ulp(7)));
+        assert_eq!(bounded[42], 1);
+        assert_eq!(&bounded[43..47], &7u32.to_le_bytes());
+        let (_, back) = decode_request(&bounded, n).unwrap();
+        assert_eq!(back.accuracy(), Accuracy::Ulp(7));
+
+        // exact byte with a nonzero tolerance is contradictory
+        let mut p = exact.clone();
+        p[43..47].copy_from_slice(&9u32.to_le_bytes());
+        let e = decode_request(&p, n).unwrap_err();
+        assert!(matches!(e, PositError::Protocol { .. }), "{e}");
+        assert!(e.to_string().contains("ulp tolerance"), "{e}");
+
+        // unknown policy byte
+        let mut p = exact;
+        p[42] = 9;
+        let e = decode_request(&p, n).unwrap_err();
+        assert!(e.to_string().contains("accuracy policy"), "{e}");
     }
 
     #[test]

@@ -44,6 +44,7 @@
 
 use std::fmt;
 
+use crate::division::approx;
 use crate::division::fastpath::{self, FastKernel};
 
 pub use crate::division::fastpath::FastPath;
@@ -89,25 +90,40 @@ pub enum ExecTier {
     /// metadata is requested ([`Unit::run`]).
     #[default]
     Auto,
+    /// The bounded-error kernels of [`crate::division::approx`]:
+    /// reciprocal/rsqrt-seeded single-Newton-step division and square
+    /// root plus truncated-fraction multiplication. **Not**
+    /// bit-identical — each `(op, width)` kernel carries a declared
+    /// max-ulp contract ([`crate::division::approx::ApproxSpec`]),
+    /// machine-checked exhaustively at Posit8 and by seeded sweeps at
+    /// the wider widths. Only `div`/`sqrt`/`mul` at n ∈ {8, 16, 32}
+    /// have registered kernels; constructing any other unit on this
+    /// tier is a typed [`PositError::UnsupportedApprox`]. Special
+    /// patterns (zero, NaR, negative radicand) stay bit-exact through
+    /// the shared special pre-pass.
+    Approx,
 }
 
 impl ExecTier {
-    /// Parse a CLI-style tier name (`fast`, `datapath`, `auto`).
+    /// Parse a CLI-style tier name (`fast`, `datapath`, `auto`,
+    /// `approx`).
     pub fn parse(s: &str) -> Option<ExecTier> {
         match s.to_ascii_lowercase().as_str() {
             "datapath" => Some(ExecTier::Datapath),
             "fast" => Some(ExecTier::Fast),
             "auto" => Some(ExecTier::Auto),
+            "approx" => Some(ExecTier::Approx),
             _ => None,
         }
     }
 
-    /// Stable lowercase name (`datapath`, `fast`, `auto`).
+    /// Stable lowercase name (`datapath`, `fast`, `auto`, `approx`).
     pub fn name(self) -> &'static str {
         match self {
             ExecTier::Datapath => "datapath",
             ExecTier::Fast => "fast",
             ExecTier::Auto => "auto",
+            ExecTier::Approx => "approx",
         }
     }
 }
@@ -269,6 +285,31 @@ impl Op {
             Op::MulAdd => fastpath::Kind::MulAdd,
         }
     }
+
+    /// The declared ulp contract of the Approx-tier kernel serving this
+    /// op at width `n`, or `None` when no bounded-error kernel is
+    /// registered (reductions, `add`/`sub`/`mul_add`, and widths outside
+    /// {8, 16, 32} always route exact).
+    pub fn approx_spec(self, n: u32) -> Option<approx::ApproxSpec> {
+        if self.is_reduction() {
+            return None;
+        }
+        approx::spec(self.fast_kind(), n)
+    }
+
+    /// Whether a request for this op at width `n` under `accuracy` is
+    /// eligible for the Approx tier: the policy must tolerate error
+    /// (`Accuracy::Ulp(k)`) *and* a registered kernel's declared bound
+    /// must satisfy it (`max_ulp <= k`). `Accuracy::Exact` never routes
+    /// approx.
+    pub fn routes_approx(self, n: u32, accuracy: Accuracy) -> bool {
+        match accuracy {
+            Accuracy::Exact => false,
+            Accuracy::Ulp(k) => {
+                self.approx_spec(n).is_some_and(|s| s.max_ulp <= u64::from(k))
+            }
+        }
+    }
 }
 
 impl fmt::Display for Op {
@@ -280,14 +321,65 @@ impl fmt::Display for Op {
     }
 }
 
+/// Per-request accuracy policy: how much rounding error the requester
+/// tolerates on this one operation.
+///
+/// `Exact` (the default) demands the correctly-rounded result — bit
+/// identical to the Datapath reference — and never routes to the Approx
+/// tier. `Ulp(k)` accepts any result within `k` ulps of correct
+/// rounding, which makes the request *eligible* for a bounded-error
+/// kernel: the coordinator routes it approx only when a registered
+/// [`crate::division::approx::ApproxSpec`] for the `(op, width)` pair
+/// declares `max_ulp <= k` ([`Op::routes_approx`]); otherwise the
+/// request silently runs exact (exact always satisfies `Ulp(k)`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Accuracy {
+    /// Correctly rounded, bit-identical to the Datapath tier.
+    #[default]
+    Exact,
+    /// Up to `k` ulps of error tolerated; routes approx only when a
+    /// registered kernel's declared bound satisfies `k`.
+    Ulp(u32),
+}
+
+impl Accuracy {
+    /// Parse a CLI-style accuracy policy: `exact`, or `ulp:K` with a
+    /// decimal tolerance (e.g. `ulp:4`).
+    pub fn parse(s: &str) -> Option<Accuracy> {
+        let s = s.to_ascii_lowercase();
+        if s == "exact" {
+            return Some(Accuracy::Exact);
+        }
+        let k = s.strip_prefix("ulp:")?;
+        k.parse::<u32>().ok().map(Accuracy::Ulp)
+    }
+
+    /// Stable label (`exact`, `ulp:K`) matching [`Accuracy::parse`].
+    pub fn label(self) -> String {
+        match self {
+            Accuracy::Exact => "exact".to_string(),
+            Accuracy::Ulp(k) => format!("ulp:{k}"),
+        }
+    }
+}
+
+impl fmt::Display for Accuracy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
 /// One op-tagged request: the operation plus its operands — three scalar
-/// slots for the scalar ops, vector lanes for the reductions. The
-/// traffic unit of the coordinator ([`crate::coordinator::Client`]) and
-/// the mixed workloads ([`crate::workload::MixedOps`]).
+/// slots for the scalar ops, vector lanes for the reductions — and the
+/// accuracy policy the requester tolerates ([`Accuracy`], default
+/// `Exact`). The traffic unit of the coordinator
+/// ([`crate::coordinator::Client`]) and the mixed workloads
+/// ([`crate::workload::MixedOps`]).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct OpRequest {
     pub op: Op,
     operands: Operands,
+    accuracy: Accuracy,
 }
 
 /// Operand storage: the constructors guarantee internal consistency
@@ -334,24 +426,32 @@ impl OpRequest {
             _ => {
                 let mut slots = [Posit::zero(w); 3];
                 slots[..operands.len()].copy_from_slice(operands);
-                OpRequest { op, operands: Operands::Scalar(slots) }
+                OpRequest { op, operands: Operands::Scalar(slots), accuracy: Accuracy::Exact }
             }
         })
     }
 
     fn unary(op: Op, a: Posit) -> OpRequest {
         let z = Posit::zero(a.width());
-        OpRequest { op, operands: Operands::Scalar([a, z, z]) }
+        OpRequest { op, operands: Operands::Scalar([a, z, z]), accuracy: Accuracy::Exact }
     }
 
     fn binary(op: Op, a: Posit, b: Posit) -> OpRequest {
         debug_assert_eq!(a.width(), b.width(), "mixed-width {op:?} request");
-        OpRequest { op, operands: Operands::Scalar([a, b, Posit::zero(a.width())]) }
+        OpRequest {
+            op,
+            operands: Operands::Scalar([a, b, Posit::zero(a.width())]),
+            accuracy: Accuracy::Exact,
+        }
     }
 
     fn vector(op: Op, a: Vec<Posit>, b: Vec<Posit>, c: Option<Posit>) -> OpRequest {
         let w = c.map_or_else(|| a[0].width(), |p| p.width());
-        OpRequest { op, operands: Operands::Vector { a, b, c: c.unwrap_or(Posit::zero(w)) } }
+        OpRequest {
+            op,
+            operands: Operands::Vector { a, b, c: c.unwrap_or(Posit::zero(w)) },
+            accuracy: Accuracy::Exact,
+        }
     }
 
     /// Validated reduction-request builder: `a` nonempty, `b` matched
@@ -430,7 +530,26 @@ impl OpRequest {
     pub fn mul_add(a: Posit, b: Posit, c: Posit) -> OpRequest {
         debug_assert_eq!(a.width(), b.width(), "mixed-width MulAdd request");
         debug_assert_eq!(a.width(), c.width(), "mixed-width MulAdd request");
-        OpRequest { op: Op::MulAdd, operands: Operands::Scalar([a, b, c]) }
+        OpRequest {
+            op: Op::MulAdd,
+            operands: Operands::Scalar([a, b, c]),
+            accuracy: Accuracy::Exact,
+        }
+    }
+
+    /// Attach an accuracy policy (builder style; constructors default to
+    /// [`Accuracy::Exact`]). `Ulp(k)` marks the request eligible for the
+    /// Approx tier when a registered kernel's declared bound satisfies
+    /// `k` — see [`Op::routes_approx`].
+    pub fn with_accuracy(mut self, accuracy: Accuracy) -> OpRequest {
+        self.accuracy = accuracy;
+        self
+    }
+
+    /// The accuracy policy attached to this request.
+    #[inline]
+    pub fn accuracy(&self) -> Accuracy {
+        self.accuracy
     }
 
     /// The meaningful scalar operands (first `arity` slots). Reduction
@@ -653,17 +772,28 @@ impl Unit {
         if !(MIN_N..=MAX_N).contains(&n) {
             return Err(PositError::WidthOutOfRange { n });
         }
+        // The Approx tier bypasses the fast-path serving layer entirely,
+        // so forcing a table/SWAR kernel there could never be honored.
+        let approx_pinned = tier == ExecTier::Approx && path != FastPath::Auto;
         let datapath_pinned = tier == ExecTier::Datapath && path != FastPath::Auto;
         // The reductions never run through a FastKernel (their Fast tier
         // is the in-register quire), so a forced table/SWAR kernel has
         // nothing to serve them — reject it rather than silently ignore.
         let reduction_forced =
             op.is_reduction() && matches!(path, FastPath::Table | FastPath::Simd);
-        if datapath_pinned
+        if approx_pinned
+            || datapath_pinned
             || reduction_forced
             || !fastpath::path_supported(n, op.fast_kind(), path)
         {
             return Err(PositError::UnsupportedFastPath { path: path.name(), op: op.name(), n });
+        }
+        // The Approx tier serves only the (op, width) grid with declared
+        // ulp contracts — anything else is a typed rejection, never a
+        // silent exact fallback (a unit pinned approx must measure the
+        // bounded-error kernel it asked for).
+        if tier == ExecTier::Approx && op.approx_spec(n).is_none() {
+            return Err(PositError::UnsupportedApprox { op: op.name(), n });
         }
         let (core, iters, real_iters, cycles) = match op {
             Op::Div { alg } => {
@@ -725,6 +855,7 @@ impl Unit {
     pub fn batch_tier(&self) -> ExecTier {
         match self.tier {
             ExecTier::Datapath => ExecTier::Datapath,
+            ExecTier::Approx => ExecTier::Approx,
             _ => ExecTier::Fast,
         }
     }
@@ -735,6 +866,7 @@ impl Unit {
     pub fn scalar_tier(&self) -> ExecTier {
         match self.tier {
             ExecTier::Fast => ExecTier::Fast,
+            ExecTier::Approx => ExecTier::Approx,
             _ => ExecTier::Datapath,
         }
     }
@@ -748,7 +880,8 @@ impl Unit {
 
     /// The concrete Fast kernel that serves a batch of `len` lanes
     /// (table, SWAR or scalar-fast; never `Auto`), or `None` when the
-    /// unit's batches run on the Datapath tier. This is what the
+    /// unit's batches run on the Datapath or Approx tier (neither
+    /// dispatches through the fast-path serving layer). This is what the
     /// coordinator's per-path metrics count.
     #[inline]
     pub fn resolve_fast_path(&self, len: usize) -> Option<FastPath> {
@@ -858,6 +991,9 @@ impl Unit {
             // both tiers are exact, so metadata is the flat model either way
             return Ok(self.arith_division(self.reduce_scalar(operands)));
         }
+        if self.scalar_tier() == ExecTier::Approx {
+            return Ok(self.approx_run(operands));
+        }
         if self.scalar_tier() == ExecTier::Fast {
             return Ok(self.fast_run(operands));
         }
@@ -913,6 +1049,27 @@ impl Unit {
         }
     }
 
+    /// Approx-tier scalar execution: the bounded-error kernel of
+    /// [`crate::division::approx`], with modeled single-pass metadata —
+    /// one Newton refinement for div/sqrt (`iterations = 1`), none for
+    /// the truncated multiply, one datapath stage either way. Specials
+    /// resolve through the shared exact pre-pass and report the same
+    /// metadata as the other tiers.
+    fn approx_run(&self, operands: &[Posit]) -> Division {
+        let lane = |i: usize| operands.get(i).map_or(0, |p| p.to_bits());
+        let (a, b) = (lane(0), lane(1));
+        let bits = approx::scalar_bits(self.n, self.op.fast_kind(), a, b, 0);
+        let result = Posit::from_bits(self.n, bits);
+        if self.fast.classify(a, b, 0).is_some() {
+            return Division { result, iterations: 0, cycles: exec::SPECIAL_CYCLES };
+        }
+        let iterations = match self.op {
+            Op::Div { .. } | Op::Sqrt => 1,
+            _ => 0,
+        };
+        Division { result, iterations, cycles: ARITH_CYCLES }
+    }
+
     #[inline]
     fn arith_division(&self, result: Posit) -> Division {
         Division { result, iterations: 0, cycles: self.cycles }
@@ -930,10 +1087,11 @@ impl Unit {
             // the scalar ops
             return self.reduction_bits(&[a], &[b], &[c]);
         }
-        if self.batch_tier() == ExecTier::Fast {
-            return self.fast.op_bits(a, b, c);
+        match self.batch_tier() {
+            ExecTier::Fast => self.fast.op_bits(a, b, c),
+            ExecTier::Approx => approx::scalar_bits(self.n, self.op.fast_kind(), a, b, c),
+            _ => self.datapath_bits(a, b, c),
         }
-        self.datapath_bits(a, b, c)
     }
 
     /// Reduction execution over raw bit-pattern lanes (one output):
@@ -1045,6 +1203,10 @@ impl Unit {
             return Ok(());
         }
         self.check_lanes(a, b, c, out.len())?;
+        if self.batch_tier() == ExecTier::Approx {
+            approx::run_batch(self.n, self.op.fast_kind(), a, b, out);
+            return Ok(());
+        }
         if self.batch_tier() == ExecTier::Fast {
             self.fast.run_batch(a, b, c, out);
             return Ok(());
@@ -1080,6 +1242,16 @@ impl Unit {
             // per-iteration register emulation dominates; decode/encode
             // and the iteration body both grow with the width
             return 30.0 + 16.0 * self.real_iters as f64 + 0.4 * self.n as f64;
+        }
+        if self.batch_tier() == ExecTier::Approx {
+            // straight-line seed + one Newton step (div/sqrt) or one
+            // truncated multiply — cheaper than the scalar-fast kernels,
+            // costlier than a table lookup
+            return match self.op {
+                Op::Div { .. } => 18.0,
+                Op::Sqrt => 22.0,
+                _ => 12.0,
+            };
         }
         match self.fast.resolve(len) {
             FastPath::Table => 3.0,
@@ -1361,10 +1533,41 @@ mod tests {
         assert_eq!(ExecTier::parse("fast"), Some(ExecTier::Fast));
         assert_eq!(ExecTier::parse("DATAPATH"), Some(ExecTier::Datapath));
         assert_eq!(ExecTier::parse("Auto"), Some(ExecTier::Auto));
+        assert_eq!(ExecTier::parse("approx"), Some(ExecTier::Approx));
         assert_eq!(ExecTier::parse("warp"), None);
         assert_eq!(ExecTier::Fast.name(), "fast");
+        assert_eq!(ExecTier::Approx.name(), "approx");
         assert_eq!(ExecTier::Datapath.to_string(), "datapath");
         assert_eq!(ExecTier::default(), ExecTier::Auto);
+    }
+
+    #[test]
+    fn accuracy_parse_labels_and_routing() {
+        assert_eq!(Accuracy::parse("exact"), Some(Accuracy::Exact));
+        assert_eq!(Accuracy::parse("ULP:4"), Some(Accuracy::Ulp(4)));
+        assert_eq!(Accuracy::parse("ulp:0"), Some(Accuracy::Ulp(0)));
+        assert_eq!(Accuracy::parse("ulp:"), None);
+        assert_eq!(Accuracy::parse("ulp:x"), None);
+        assert_eq!(Accuracy::parse("loose"), None);
+        assert_eq!(Accuracy::default(), Accuracy::Exact);
+        assert_eq!(Accuracy::Ulp(4).to_string(), "ulp:4");
+        assert_eq!(Accuracy::parse(&Accuracy::Ulp(9).label()), Some(Accuracy::Ulp(9)));
+
+        // Exact never routes approx; Ulp(k) routes iff a registered spec
+        // satisfies k.
+        assert!(!Op::DIV.routes_approx(16, Accuracy::Exact));
+        assert!(Op::DIV.routes_approx(16, Accuracy::Ulp(4)));
+        assert!(!Op::DIV.routes_approx(16, Accuracy::Ulp(3)));
+        assert!(Op::Sqrt.routes_approx(8, Accuracy::Ulp(1)));
+        assert!(Op::Mul.routes_approx(32, Accuracy::Ulp(10_000)));
+        // no registered kernel → never eligible, however loose the policy
+        assert!(!Op::Add.routes_approx(16, Accuracy::Ulp(u32::MAX)));
+        assert!(!Op::Dot.routes_approx(16, Accuracy::Ulp(u32::MAX)));
+        assert!(!Op::DIV.routes_approx(24, Accuracy::Ulp(u32::MAX)));
+        // spec metadata round-trips through the Op surface
+        let spec = Op::DIV.approx_spec(32).unwrap();
+        assert_eq!((spec.n, spec.max_ulp), (32, 4096));
+        assert_eq!(Op::FusedSum.approx_spec(16), None);
     }
 
     #[test]
@@ -1377,6 +1580,9 @@ mod tests {
         assert_eq!((fast.batch_tier(), fast.scalar_tier()), (ExecTier::Fast, ExecTier::Fast));
         let dp = Unit::with_tier(16, Op::DIV, ExecTier::Datapath).unwrap();
         assert_eq!((dp.batch_tier(), dp.scalar_tier()), (ExecTier::Datapath, ExecTier::Datapath));
+        let ap = Unit::with_tier(16, Op::DIV, ExecTier::Approx).unwrap();
+        assert_eq!((ap.batch_tier(), ap.scalar_tier()), (ExecTier::Approx, ExecTier::Approx));
+        assert_eq!(ap.resolve_fast_path(256), None);
         assert_eq!(
             Unit::with_tier(3, Op::DIV, ExecTier::Fast).err(),
             Some(PositError::WidthOutOfRange { n: 3 })
@@ -1473,6 +1679,25 @@ mod tests {
             Some(PositError::UnsupportedFastPath { path: "table", op: "div", n: 8 })
         );
         assert!(Unit::with_exec(16, Op::DIV, ExecTier::Datapath, FastPath::Auto).is_ok());
+        // the Approx tier never consults the fast-path layer either
+        assert_eq!(
+            Unit::with_exec(8, Op::DIV, ExecTier::Approx, FastPath::Table).err(),
+            Some(PositError::UnsupportedFastPath { path: "table", op: "div", n: 8 })
+        );
+        // ...and serves only the (op, width) grid with declared specs
+        assert_eq!(
+            Unit::with_tier(16, Op::Add, ExecTier::Approx).err(),
+            Some(PositError::UnsupportedApprox { op: "add", n: 16 })
+        );
+        assert_eq!(
+            Unit::with_tier(64, Op::DIV, ExecTier::Approx).err(),
+            Some(PositError::UnsupportedApprox { op: "div", n: 64 })
+        );
+        assert_eq!(
+            Unit::with_tier(16, Op::Dot, ExecTier::Approx).err(),
+            Some(PositError::UnsupportedApprox { op: "dot", n: 16 })
+        );
+        assert!(Unit::with_tier(32, Op::Sqrt, ExecTier::Approx).is_ok());
         // supported combinations build and resolve to the forced kernel
         let t = Unit::with_exec(8, Op::DIV, ExecTier::Fast, FastPath::Table).unwrap();
         assert_eq!((t.fast_path(), t.resolve_fast_path(1)), (FastPath::Table, Some(FastPath::Table)));
@@ -1555,6 +1780,86 @@ mod tests {
         );
         let ok = OpRequest::new(Op::MulAdd, &[Posit::one(8); 3]).unwrap();
         assert_eq!(ok.operands(), &[Posit::one(8); 3]);
+        // accuracy policy: Exact by default, carried by the builder,
+        // preserved across clones and equality
+        assert_eq!(r.accuracy(), Accuracy::Exact);
+        let loose = r.clone().with_accuracy(Accuracy::Ulp(4));
+        assert_eq!(loose.accuracy(), Accuracy::Ulp(4));
+        assert_eq!(loose.operands(), r.operands());
+        assert_ne!(loose, r);
+        let red = OpRequest::dot(&[Posit::one(16)], &[Posit::one(16)])
+            .unwrap()
+            .with_accuracy(Accuracy::Ulp(8));
+        assert_eq!(red.accuracy(), Accuracy::Ulp(8));
+    }
+
+    /// The Approx tier stays within its declared ulp contracts through
+    /// the Unit surface (scalar, bit-level and batch entry points agree),
+    /// specials are bit-exact, and the modeled metadata is single-pass.
+    #[test]
+    fn approx_tier_through_unit_surface() {
+        let mut rng = Rng::seeded(0xA9_0C);
+        for n in [8u32, 16, 32] {
+            for op in [Op::DIV, Op::Sqrt, Op::Mul] {
+                let unit = Unit::with_tier(n, op, ExecTier::Approx).unwrap();
+                let spec = op.approx_spec(n).unwrap();
+                let lanes = 257;
+                let a: Vec<u64> = (0..lanes).map(|_| rng.next_u64() & mask(n)).collect();
+                let b: Vec<u64> = if op.arity() == 2 {
+                    (0..lanes).map(|_| rng.next_u64() & mask(n)).collect()
+                } else {
+                    Vec::new()
+                };
+                let mut out = vec![0u64; lanes];
+                unit.run_batch(&a, &b, &[], &mut out).unwrap();
+                for i in 0..lanes {
+                    let bi = if b.is_empty() { 0 } else { b[i] };
+                    // batch == scalar bit path
+                    assert_eq!(out[i], unit.run_bits(a[i], bi, 0), "{op} n={n} lane {i}");
+                    // within the declared contract against the golden
+                    let operands: Vec<Posit> = (0..op.arity())
+                        .map(|j| Posit::from_bits(n, if j == 0 { a[i] } else { bi }))
+                        .collect();
+                    let req = OpRequest::new(op, &operands).unwrap();
+                    let golden = req.golden();
+                    let got = Posit::from_bits(n, out[i]);
+                    assert!(
+                        got.ulp_distance(golden) <= spec.max_ulp,
+                        "{op} n={n}: |{got:?} - {golden:?}| > {} ulp",
+                        spec.max_ulp
+                    );
+                }
+                // scalar entry point: within contract, modeled metadata
+                let one = Posit::one(n);
+                let operands = vec![one; op.arity()];
+                let d = unit.run(&operands).unwrap();
+                assert!(d.result.ulp_distance(one) <= spec.max_ulp, "{op} n={n} at 1");
+                assert_eq!(d.cycles, ARITH_CYCLES);
+                // specials bypass the approx kernel bit-exactly
+                let nar = vec![Posit::nar(n); op.arity()];
+                let d = unit.run(&nar).unwrap();
+                assert_eq!(d.result, Posit::nar(n));
+                assert_eq!((d.iterations, d.cycles), (0, exec::SPECIAL_CYCLES));
+            }
+        }
+    }
+
+    /// Exact-policy traffic through an Approx-capable op still matches
+    /// the Datapath bit-for-bit when served by the exact tiers — the
+    /// routing predicate is what keeps them apart.
+    #[test]
+    fn approx_batches_run_in_parallel_too() {
+        let n = 16;
+        let unit = Unit::with_tier(n, Op::DIV, ExecTier::Approx).unwrap();
+        let mut rng = Rng::seeded(0x9A11);
+        let len = 4096;
+        let a: Vec<u64> = (0..len).map(|_| rng.next_u64() & mask(n)).collect();
+        let b: Vec<u64> = (0..len).map(|_| rng.next_u64() & mask(n)).collect();
+        let mut seq = vec![0u64; len];
+        let mut par = vec![0u64; len];
+        unit.run_batch(&a, &b, &[], &mut seq).unwrap();
+        unit.run_batch_parallel(&a, &b, &[], &mut par, 4).unwrap();
+        assert_eq!(seq, par);
     }
 
     #[test]

@@ -6,7 +6,7 @@ use std::time::Duration;
 
 use crate::posit::{mask, Posit};
 use crate::testkit::Rng;
-use crate::unit::{Op, OpRequest};
+use crate::unit::{Accuracy, Op, OpRequest};
 
 /// A stream of division operand pairs of a fixed posit width.
 pub trait Workload {
@@ -181,8 +181,10 @@ impl OpMix {
 
     /// Parse a `name:weight` list, e.g. `div:6,sqrt:2,dot:2` (ops not
     /// named get weight 0; `mul_add`/`muladd`/`fma` are synonyms, as are
-    /// `fsum`/`fused_sum`). Returns `None` on unknown names, bad weights
-    /// or an all-zero mix.
+    /// `fsum`/`fused_sum`). Returns `None` on unknown names, bad weights,
+    /// an all-zero mix, or a repeated op — naming the same op twice
+    /// (under any synonym) is almost certainly an operator typo, so it
+    /// is rejected rather than letting the last entry silently win.
     pub fn parse(s: &str) -> Option<OpMix> {
         let mut mix = OpMix {
             div: 0,
@@ -195,21 +197,26 @@ impl OpMix {
             fsum: 0,
             axpy: 0,
         };
+        let mut seen = [false; 9];
         for part in s.split(',') {
             let (name, weight) = part.split_once(':')?;
             let weight: u32 = weight.trim().parse().ok()?;
-            match name.trim() {
-                "div" => mix.div = weight,
-                "sqrt" => mix.sqrt = weight,
-                "mul" => mix.mul = weight,
-                "add" => mix.add = weight,
-                "sub" => mix.sub = weight,
-                "mul_add" | "muladd" | "fma" => mix.mul_add = weight,
-                "dot" => mix.dot = weight,
-                "fsum" | "fused_sum" => mix.fsum = weight,
-                "axpy" => mix.axpy = weight,
+            let (slot, field) = match name.trim() {
+                "div" => (0, &mut mix.div),
+                "sqrt" => (1, &mut mix.sqrt),
+                "mul" => (2, &mut mix.mul),
+                "add" => (3, &mut mix.add),
+                "sub" => (4, &mut mix.sub),
+                "mul_add" | "muladd" | "fma" => (5, &mut mix.mul_add),
+                "dot" => (6, &mut mix.dot),
+                "fsum" | "fused_sum" => (7, &mut mix.fsum),
+                "axpy" => (8, &mut mix.axpy),
                 _ => return None,
+            };
+            if std::mem::replace(&mut seen[slot], true) {
+                return None;
             }
+            *field = weight;
         }
         if mix.total() == 0 {
             return None;
@@ -251,12 +258,22 @@ impl OpMix {
 pub struct MixedOps {
     pub n: u32,
     pub mix: OpMix,
+    accuracy: Accuracy,
     rng: Rng,
 }
 
 impl MixedOps {
     pub fn new(n: u32, mix: OpMix, seed: u64) -> Self {
-        MixedOps { n, mix, rng: Rng::seeded(seed) }
+        MixedOps { n, mix, accuracy: Accuracy::Exact, rng: Rng::seeded(seed) }
+    }
+
+    /// Stamp every generated request with an accuracy policy (the
+    /// default is [`Accuracy::Exact`]). `Ulp(k)` traffic is what the
+    /// service routes to the approx tier when a bounded-error kernel's
+    /// declared spec satisfies `k`.
+    pub fn with_accuracy(mut self, accuracy: Accuracy) -> Self {
+        self.accuracy = accuracy;
+        self
     }
 
     fn real(&mut self) -> Posit {
@@ -286,7 +303,7 @@ impl MixedOps {
 
     /// The next op-tagged request of the stream.
     pub fn next_request(&mut self) -> OpRequest {
-        match self.mix.pick(&mut self.rng) {
+        let req = match self.mix.pick(&mut self.rng) {
             Op::Div { alg } => {
                 let (x, d) = (self.real(), self.nonzero());
                 OpRequest::div_with(alg, x, d)
@@ -326,7 +343,8 @@ impl MixedOps {
                 let ys: Vec<Posit> = (0..xs.len()).map(|_| self.real()).collect();
                 OpRequest::axpy(alpha, &xs, &ys).expect("generated lanes match")
             }
-        }
+        };
+        req.with_accuracy(self.accuracy)
     }
 
     pub fn name(&self) -> &'static str {
@@ -367,6 +385,12 @@ impl OpenLoop {
             clock_ns: 0.0,
             rng: Rng::seeded(seed ^ 0x9E37_79B9_7F4A_7C15),
         }
+    }
+
+    /// Stamp every arrival with an accuracy policy (default Exact).
+    pub fn with_accuracy(mut self, accuracy: Accuracy) -> Self {
+        self.ops = self.ops.with_accuracy(accuracy);
+        self
     }
 
     /// The configured mean arrival rate, in requests per second.
@@ -444,6 +468,29 @@ mod tests {
         assert!(OpMix::parse("div:x").is_none());
         assert!(OpMix::parse("div:0").is_none(), "all-zero mixes are rejected");
         assert!(OpMix::parse("div").is_none(), "missing weight");
+    }
+
+    #[test]
+    fn op_mix_parse_rejects_duplicate_keys() {
+        assert!(OpMix::parse("div:1,div:2").is_none(), "repeated key");
+        assert!(OpMix::parse("div:6,sqrt:2,div:1").is_none(), "repeat after others");
+        assert!(OpMix::parse("fma:1,muladd:2").is_none(), "duplicate via synonym");
+        assert!(OpMix::parse("fsum:1,fused_sum:1").is_none(), "duplicate via synonym");
+        // distinct keys still parse, whatever the synonym spelling
+        assert_eq!(OpMix::parse("muladd:2,fsum:1").map(|m| (m.mul_add, m.fsum)), Some((2, 1)));
+    }
+
+    #[test]
+    fn mixed_ops_stamp_accuracy() {
+        let mut w = MixedOps::new(16, OpMix::DEFAULT, 7);
+        assert_eq!(w.next_request().accuracy(), Accuracy::Exact);
+        let mut w = MixedOps::new(16, OpMix::DEFAULT, 7).with_accuracy(Accuracy::Ulp(3));
+        for _ in 0..100 {
+            assert_eq!(w.next_request().accuracy(), Accuracy::Ulp(3));
+        }
+        let mut wl = OpenLoop::new(16, OpMix::DEFAULT, 1000.0, 7).with_accuracy(Accuracy::Ulp(9));
+        let (_, req) = wl.next_arrival();
+        assert_eq!(req.accuracy(), Accuracy::Ulp(9));
     }
 
     #[test]

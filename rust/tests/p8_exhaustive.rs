@@ -16,6 +16,10 @@
 //! the full 65k-pair space per op cheap enough for tier-1. The
 //! **quire-dot** sweep also runs un-ignored: every two-term Posit8 dot
 //! is a couple of 128-bit adds per tier, well inside the tier-1 budget.
+//! The **approx-tier** sweep runs un-ignored too: it is the machine
+//! check of the bounded-error contract — every registered approx kernel
+//! over the whole pattern space, observed ulp error ≤ the declared
+//! [`ApproxSpec::max_ulp`], specials bit-exact.
 
 // The division gates deliberately run through the deprecated `Divider`
 // wrapper so the legacy entry point stays pinned bit-exact.
@@ -93,6 +97,86 @@ fn p8_quire_dot_matches_rational_golden_on_all_pattern_pairs() {
             assert_eq!(out[0], want, "fast dot([{a:#04x},{b:#04x}],[{b:#04x},{a:#04x}])");
             dp.run_batch(&[a, b], &[b, a], &[], &mut out).expect("matched lanes");
             assert_eq!(out[0], want, "datapath dot([{a:#04x},{b:#04x}],[{b:#04x},{a:#04x}])");
+        }
+    }
+}
+
+/// Exhaustive Posit8 **approx-tier** gate — runs un-`#[ignore]`d in
+/// tier-1: every registered bounded-error kernel (div, mul over all
+/// 256×256 pattern pairs; sqrt over all 256 patterns) through
+/// `Unit::run_batch` with the tier pinned to `Approx`, asserting
+///
+///   * the observed ulp error against the exact reference never
+///     exceeds the kernel's declared [`ApproxSpec::max_ulp`] — the
+///     machine check behind the spec registry,
+///   * special inputs (NaR operands, zeros, negative radicands, zero
+///     divisors) produce **bit-exact** results — the approx contract
+///     only relaxes real-lane rounding, never special semantics,
+///   * the batch kernels and the scalar dispatch (`run_bits`) agree
+///     bit-for-bit, so the SWAR-style lanes serve the same function.
+#[test]
+fn p8_approx_tier_stays_within_declared_ulp_bounds_on_all_patterns() {
+    let n = 8;
+    let p = |bits: u64| Posit::from_bits(n, bits);
+    let bs: Vec<u64> = (0..=mask(n)).collect();
+    let mut out = vec![0u64; bs.len()];
+    for op in [Op::DIV, Op::Mul] {
+        let spec = op.approx_spec(n).expect("div and mul register Posit8 approx kernels");
+        assert_eq!(spec.n, n);
+        let unit = Unit::with_tier(n, op, ExecTier::Approx).expect("standard width");
+        let mut worst = 0u64;
+        for a in 0..=mask(n) {
+            let avec = vec![a; bs.len()];
+            unit.run_batch(&avec, &bs, &[], &mut out).expect("equal lanes");
+            for (i, &got) in out.iter().enumerate() {
+                let b = bs[i];
+                assert_eq!(
+                    got,
+                    unit.run_bits(a, b, 0),
+                    "{op} approx batch vs scalar: {a:#04x}, {b:#04x}"
+                );
+                let want = match op {
+                    Op::Div { .. } => golden::divide(p(a), p(b)).result,
+                    _ => p(a).mul(p(b)),
+                };
+                let special = p(a).is_nar() || p(b).is_nar() || p(a).is_zero() || p(b).is_zero();
+                if special {
+                    assert_eq!(
+                        got,
+                        want.to_bits(),
+                        "{op} approx must be bit-exact on specials: {a:#04x}, {b:#04x}"
+                    );
+                } else {
+                    let dist = p(got).ulp_distance(want);
+                    assert!(
+                        dist <= spec.max_ulp,
+                        "{op} approx {a:#04x}, {b:#04x}: {dist} ulp > declared {}",
+                        spec.max_ulp
+                    );
+                    worst = worst.max(dist);
+                }
+            }
+        }
+        assert!(worst <= spec.max_ulp, "{op}: observed {worst} > declared {}", spec.max_ulp);
+    }
+    // sqrt: the whole pattern space in one batch
+    let spec = Op::Sqrt.approx_spec(n).expect("sqrt registers a Posit8 approx kernel");
+    let sqrt = Unit::with_tier(n, Op::Sqrt, ExecTier::Approx).expect("standard width");
+    sqrt.run_batch(&bs, &[], &[], &mut out).expect("equal lanes");
+    for (i, &got) in out.iter().enumerate() {
+        let v = p(bs[i]);
+        assert_eq!(got, sqrt.run_bits(bs[i], 0, 0), "sqrt approx batch vs scalar: {:#04x}", bs[i]);
+        let want = golden_sqrt(v).result;
+        if v.is_nar() || v.is_zero() || v.is_negative() {
+            assert_eq!(got, want.to_bits(), "sqrt approx special: {:#04x}", bs[i]);
+        } else {
+            let dist = p(got).ulp_distance(want);
+            assert!(
+                dist <= spec.max_ulp,
+                "sqrt approx {:#04x}: {dist} ulp > declared {}",
+                bs[i],
+                spec.max_ulp
+            );
         }
     }
 }

@@ -9,12 +9,12 @@ use std::io::Write;
 use std::net::TcpStream;
 use std::time::Duration;
 
-use posit_div::coordinator::{Backend, BatchPolicy, ServiceConfig};
+use posit_div::coordinator::{Backend, BatchPolicy, ServedBy, ServiceConfig};
 use posit_div::division::Algorithm;
 use posit_div::posit::Posit;
 use posit_div::service::wire::{self, FrameKind};
 use posit_div::service::{shard_for, Server, ServiceClient, ShardConfig};
-use posit_div::unit::{ExecTier, Op, OpRequest};
+use posit_div::unit::{Accuracy, ExecTier, Op, OpRequest};
 use posit_div::workload::{take_requests, MixedOps, OpMix, OpenLoop};
 use posit_div::PositError;
 
@@ -133,6 +133,79 @@ fn open_loop_drive_is_verified_and_accounted() {
 
     client.shutdown_server().unwrap();
     server.shutdown().shutdown();
+}
+
+/// Mixed per-request accuracy on one server over TCP: interleaved
+/// `exact` and `ulp:50` traffic through the same wire connection.
+/// Exact responses stay bit-identical to golden; tolerant responses for
+/// ops with a registered bounded-error kernel land within the kernel's
+/// declared ulp bound; and the merged metrics account for it all —
+/// per-tier serve counters, per-op approx error telemetry from the
+/// audit sampler, and the approx lane of the SLO latency panel.
+#[test]
+fn mixed_accuracy_traffic_routes_approx_and_audits_over_tcp() {
+    let n = 16;
+    let server = Server::bind("127.0.0.1:0", cfg(n, 2, 4096)).unwrap();
+    let mut client = ServiceClient::connect(server.local_addr(), n).unwrap();
+
+    let exact = take_requests(&mut MixedOps::new(n, full_mix(), 0xE1), 600);
+    let tolerant = take_requests(
+        &mut MixedOps::new(n, full_mix(), 0xE2).with_accuracy(Accuracy::Ulp(50)),
+        600,
+    );
+    // interleave so individual dynamic batches carry both policies
+    let reqs: Vec<OpRequest> =
+        exact.into_iter().zip(tolerant).flat_map(|(e, t)| [e, t]).collect();
+    let results = client.run_ops(&reqs).unwrap();
+    let mut approx_eligible = 0u64;
+    for (i, (req, res)) in reqs.iter().zip(&results).enumerate() {
+        let got = res.as_ref().expect("4096-deep queues cannot shed this drive");
+        let want = req.golden();
+        if req.op.routes_approx(n, req.accuracy()) {
+            approx_eligible += 1;
+            let spec = req.op.approx_spec(n).expect("routing implies a registered spec");
+            assert!(
+                got.ulp_distance(want) <= spec.max_ulp,
+                "{} sample {i}: {} ulp from golden exceeds declared {}",
+                req.op,
+                got.ulp_distance(want),
+                spec.max_ulp
+            );
+        } else {
+            assert_eq!(*got, want, "{} sample {i} must be bit-exact", req.op);
+        }
+    }
+    assert!(approx_eligible > 0, "the mix must exercise the approx tier");
+
+    client.shutdown_server().unwrap();
+    let svc = server.wait();
+    let (mut approx_served, mut exact_served, mut audited, mut over) = (0u64, 0u64, 0u64, 0u64);
+    let mut max_seen = 0u64;
+    for shard in 0..svc.shards() {
+        let m = svc.metrics(shard);
+        approx_served += m.tiers.get(ExecTier::Approx);
+        exact_served += m.tiers.get(ExecTier::Fast) + m.tiers.get(ExecTier::Datapath);
+        for op in [Op::DIV, Op::Sqrt, Op::Mul] {
+            let s = m.approx_errors.get(op);
+            audited += s.count;
+            over += s.over;
+            max_seen = max_seen.max(s.max);
+        }
+    }
+    assert_eq!(approx_served, approx_eligible, "per-tier counters account the approx lane");
+    assert!(exact_served > 0, "exact traffic keeps serving on the exact tiers");
+    assert!(audited > 0, "the audit sampler must have recomputed lanes");
+    assert_eq!(over, 0, "no audited lane exceeded its declared bound");
+    assert!(max_seen <= 4, "P16 div/sqrt declare max_ulp 4 (mul 1): observed {max_seen}");
+
+    // the SLO latency panel's approx lane saw exactly the routed traffic
+    let panel = svc.latency_snapshot();
+    let approx_lane: u64 = [Op::DIV, Op::Sqrt, Op::Mul]
+        .iter()
+        .map(|&op| panel.get(op, ServedBy::Approx).count())
+        .sum();
+    assert_eq!(approx_lane, approx_eligible);
+    svc.shutdown();
 }
 
 #[test]

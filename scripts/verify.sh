@@ -23,6 +23,11 @@ echo "== service soak (sharded TCP serving over loopback) =="
 # shed miscount, wire break) fails as its own step with its own output
 cargo test --release --test service_e2e
 
+echo "== approx-tier ulp-contract gate (exhaustive Posit8) =="
+# also part of `cargo test` above (un-ignored); named so a bounded-error
+# kernel drifting past its declared ApproxSpec fails as its own step
+cargo test --release --test p8_exhaustive p8_approx_tier_stays_within_declared_ulp_bounds
+
 if [ "${SKIP_FMT:-0}" != "1" ]; then
     if cargo fmt --version >/dev/null 2>&1; then
         echo "== cargo fmt --check =="
