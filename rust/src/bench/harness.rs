@@ -26,7 +26,7 @@ use super::baseline::Comparison;
 use super::report::Report;
 use super::{suites, Config, Profile, Runner};
 use crate::cli::Args;
-use crate::unit::ExecTier;
+use crate::unit::{ExecTier, FastPath};
 
 /// Parsed bench-harness options for one suite run.
 pub struct BenchCli {
@@ -40,6 +40,12 @@ pub struct BenchCli {
     /// single-tier run *does* shrink the row set (the baseline compare
     /// treats the missing rows as removed, which never fails).
     pub tier: Option<ExecTier>,
+    /// `--path auto|table|vector|simd|scalar` — restricts the tier-aware
+    /// suites' forced fast-kernel rows to one [`FastPath`] (and pins the
+    /// kernel on `posit-div divide`). `None`/`auto` keeps the full
+    /// forced-path row set; like `--tier`, a pinned run shrinks the row
+    /// set, which the baseline compare treats as removed rows.
+    pub path: Option<FastPath>,
     json_out: Option<PathBuf>,
     baseline: Option<PathBuf>,
     write_baseline: bool,
@@ -95,6 +101,12 @@ impl BenchCli {
             tier: args.flag("tier").map(|t| {
                 ExecTier::parse(t).unwrap_or_else(|| {
                     eprintln!("invalid --tier {t:?} (expected fast|datapath|approx|auto)");
+                    std::process::exit(2);
+                })
+            }),
+            path: args.flag("path").map(|p| {
+                FastPath::parse(p).unwrap_or_else(|| {
+                    eprintln!("invalid --path {p:?} (expected auto|table|vector|simd|scalar)");
                     std::process::exit(2);
                 })
             }),
@@ -201,13 +213,14 @@ pub fn run_suite(name: &str, args: &Args) -> i32 {
         return 2;
     };
     let cli = BenchCli::from_args(suite.name, args);
-    if cli.tier.is_some() && !suite.tier_aware {
+    if (cli.tier.is_some() || cli.path.is_some()) && !suite.tier_aware {
         // Refuse rather than mislabel: the per-engine suites pin the
-        // Datapath tier by design, so honoring `--tier fast` silently
-        // would record datapath numbers under a fast-tier run.
+        // Datapath tier by design, so honoring `--tier fast` (or a forced
+        // `--path`) silently would record datapath numbers under a
+        // fast-tier run.
         eprintln!(
             "suite {:?} is not tier-aware (it pins the Datapath tier by design); \
-             drop --tier, or use `unit_throughput` for the tier comparison",
+             drop --tier/--path, or use `unit_throughput` for the tier comparison",
             suite.name
         );
         return 2;
@@ -340,6 +353,23 @@ mod tests {
             Some(ExecTier::Datapath)
         );
         assert_eq!(BenchCli::from_args("t", &args("--tier auto")).tier, Some(ExecTier::Auto));
+    }
+
+    #[test]
+    fn path_flag_resolution() {
+        assert_eq!(BenchCli::from_args("t", &args("")).path, None);
+        assert_eq!(
+            BenchCli::from_args("t", &args("--path vector")).path,
+            Some(FastPath::Vector)
+        );
+        assert_eq!(BenchCli::from_args("t", &args("--path table")).path, Some(FastPath::Table));
+        assert_eq!(
+            BenchCli::from_args("t", &args("--path scalar")).path,
+            Some(FastPath::Scalar)
+        );
+        // --path and --tier compose
+        let c = BenchCli::from_args("t", &args("--tier fast --path simd"));
+        assert_eq!((c.tier, c.path), (Some(ExecTier::Fast), Some(FastPath::Simd)));
     }
 
     #[test]

@@ -57,7 +57,7 @@ pub const SUITES: &[Suite] = &[
     Suite {
         name: "unit_throughput",
         title: "operation-generic unit throughput (op/s), 256-element working set",
-        about: "batch op/s per op x width x tier + fast-path (table/SWAR) + service rows",
+        about: "batch op/s per op x width x tier + fast-path (table/vector/SWAR) + service rows",
         tier_aware: true,
         run: unit_throughput,
     },
@@ -217,13 +217,16 @@ fn approx_rows_under_test(cli: &BenchCli) -> bool {
 /// Posit16/32 through the same [`Unit::run_batch`] loop, **tier-tagged**
 /// — each op measured on both the Fast kernels and the cycle-accurate
 /// Datapath (restrict with `--tier`) — plus dispatch-forced fast-path
-/// rows (`batch:fast-table` for the exhaustive Posit8 tables,
-/// `batch:fast-simd` for the SWAR kernels at Posit8/16), approx-tier
-/// rows (`batch:approx` — the bounded-error kernels for every (op,
-/// width) with a registered ulp spec: div/sqrt/mul at Posit8/16/32) and
-/// one mixed-op coordinator row per (width, tier) (the service groups
-/// each dynamic batch per op and runs every group on its cached unit at
-/// the configured tier).
+/// rows (`batch:fast-table` for the lookup tables — exhaustive Posit8
+/// whole-op and Posit16 div/sqrt seed; `batch:fast-vector` for the
+/// explicit AVX2/NEON kernels at Posit8/16, present only when the
+/// `vsimd` feature detects the ISA; `batch:fast-simd` for the SWAR
+/// kernels at Posit8/16; restrict with `--path`), approx-tier rows
+/// (`batch:approx` — the bounded-error kernels for every (op, width)
+/// with a registered ulp spec: div/sqrt/mul at Posit8/16/32) and one
+/// mixed-op coordinator row per (width, tier) (the service groups each
+/// dynamic batch per op and runs every group on its cached unit at the
+/// configured tier).
 fn unit_throughput(cli: &BenchCli, r: &mut Runner) {
     let tiers = tiers_under_test(cli);
     let mut rng = Rng::seeded(0x0127);
@@ -267,12 +270,24 @@ fn unit_throughput(cli: &BenchCli, r: &mut Runner) {
     }
 
     // Fast-path dispatch rows: the vectorized layer inside the Fast tier
-    // (exhaustive Posit8 tables, SWAR lane-packed kernels), measured with
-    // the kernel *forced* so the rows stay stable regardless of the Auto
-    // thresholds. Paths: `batch:fast-table`, `batch:fast-simd`.
+    // (lookup tables, explicit AVX2/NEON vector kernels, SWAR lane-packed
+    // kernels), measured with the kernel *forced* so the rows stay stable
+    // regardless of the Auto thresholds. Paths: `batch:fast-table`,
+    // `batch:fast-vector`, `batch:fast-simd`; `--path` restricts the set.
     if tiers.contains(&ExecTier::Fast) {
         let mut rng = Rng::seeded(0x51D);
-        for (n, path) in [(8u32, FastPath::Table), (8, FastPath::Simd), (16, FastPath::Simd)] {
+        let forced = [
+            (8u32, FastPath::Table),
+            (16, FastPath::Table),
+            (8, FastPath::Vector),
+            (16, FastPath::Vector),
+            (8, FastPath::Simd),
+            (16, FastPath::Simd),
+        ];
+        for (n, path) in forced {
+            if matches!(cli.path, Some(p) if p != FastPath::Auto && p != path) {
+                continue;
+            }
             let a: Vec<u64> = (0..256).map(|_| rng.next_u64() & mask(n)).collect();
             let b: Vec<u64> = (0..256).map(|_| (rng.next_u64() & mask(n)) | 1).collect();
             let c: Vec<u64> = (0..256).map(|_| rng.next_u64() & mask(n)).collect();
@@ -280,8 +295,9 @@ fn unit_throughput(cli: &BenchCli, r: &mut Runner) {
             let mut out = vec![0u64; a.len()];
             for op in Op::DEFAULTS {
                 // skip unsupported combinations (no Posit8 table for the
-                // ternary mul_add) instead of silently measuring another
-                // kernel
+                // ternary mul_add, no Posit16 table beyond div/sqrt, no
+                // vector kernels without a detected ISA) instead of
+                // silently measuring another kernel
                 let Ok(unit) = Unit::with_exec(n, op, ExecTier::Fast, path) else {
                     continue;
                 };

@@ -292,15 +292,19 @@ impl OpCounters {
 
 /// Requests served per execution tier: the fast kernels, the
 /// cycle-accurate datapath engines, or the PJRT graph. The fast tier is
-/// further split per serving kernel (`fast_table`/`fast_simd` — the
-/// Posit8 lookup tables and the SWAR lane-packed kernels; the remainder
-/// of `fast` ran on the scalar-fast kernels).
+/// further split per serving kernel (`fast_table`/`fast_vector`/
+/// `fast_simd` — the construction-verified lookup tables, the explicit
+/// AVX2/NEON vector kernels and the SWAR lane-packed kernels; the
+/// remainder of `fast` ran on the scalar-fast kernels).
 #[derive(Default)]
 pub struct TierCounters {
     pub fast: AtomicU64,
-    /// Fast-tier requests served by the exhaustive Posit8 tables
-    /// (a subset of `fast`).
+    /// Fast-tier requests served by the construction-verified lookup
+    /// tables — Posit8 whole-op or Posit16 seed (a subset of `fast`).
     pub fast_table: AtomicU64,
+    /// Fast-tier requests served by the explicit AVX2/NEON vector
+    /// kernels (a subset of `fast`).
+    pub fast_vector: AtomicU64,
     /// Fast-tier requests served by the SWAR lane-packed kernels
     /// (a subset of `fast`).
     pub fast_simd: AtomicU64,
@@ -330,6 +334,9 @@ impl TierCounters {
             FastPath::Table => {
                 self.fast_table.fetch_add(count, Ordering::Relaxed);
             }
+            FastPath::Vector => {
+                self.fast_vector.fetch_add(count, Ordering::Relaxed);
+            }
             FastPath::Simd => {
                 self.fast_simd.fetch_add(count, Ordering::Relaxed);
             }
@@ -353,9 +360,10 @@ impl TierCounters {
 
     pub fn summary(&self) -> String {
         format!(
-            "fast={} (table={} simd={}) datapath={} pjrt={} approx={}",
+            "fast={} (table={} vector={} simd={}) datapath={} pjrt={} approx={}",
             self.fast.load(Ordering::Relaxed),
             self.fast_table.load(Ordering::Relaxed),
+            self.fast_vector.load(Ordering::Relaxed),
             self.fast_simd.load(Ordering::Relaxed),
             self.datapath.load(Ordering::Relaxed),
             self.pjrt.load(Ordering::Relaxed),
@@ -555,16 +563,18 @@ mod tests {
     #[test]
     fn fast_path_counters_split_the_fast_tier() {
         let t = TierCounters::default();
-        t.record(ExecTier::Fast, 90);
+        t.record(ExecTier::Fast, 110);
         t.record_fast_path(FastPath::Table, 50);
+        t.record_fast_path(FastPath::Vector, 20);
         t.record_fast_path(FastPath::Simd, 30);
         // scalar-fast requests are the remainder; recording them is a no-op
         t.record_fast_path(FastPath::Scalar, 10);
-        assert_eq!(t.fast.load(Ordering::Relaxed), 90);
+        assert_eq!(t.fast.load(Ordering::Relaxed), 110);
         assert_eq!(t.fast_table.load(Ordering::Relaxed), 50);
+        assert_eq!(t.fast_vector.load(Ordering::Relaxed), 20);
         assert_eq!(t.fast_simd.load(Ordering::Relaxed), 30);
         let s = t.summary();
-        assert!(s.contains("table=50") && s.contains("simd=30"), "{s}");
+        assert!(s.contains("table=50") && s.contains("vector=20") && s.contains("simd=30"), "{s}");
     }
 
     #[test]

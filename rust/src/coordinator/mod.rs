@@ -793,10 +793,11 @@ mod tests {
         assert_eq!(m.tiers.get(ExecTier::Fast), 32);
         assert_eq!(m.tiers.get(ExecTier::Datapath), 0);
         // the per-kernel split never exceeds the fast total (the exact
-        // table/SWAR/scalar split depends on dynamic batch sizes)
+        // table/vector/SWAR/scalar split depends on dynamic batch sizes)
         let table = m.tiers.fast_table.load(std::sync::atomic::Ordering::Relaxed);
+        let vector = m.tiers.fast_vector.load(std::sync::atomic::Ordering::Relaxed);
         let simd = m.tiers.fast_simd.load(std::sync::atomic::Ordering::Relaxed);
-        assert!(table + simd <= 32, "table={table} simd={simd}");
+        assert!(table + vector + simd <= 32, "table={table} vector={vector} simd={simd}");
         assert!(m.tiers.summary().contains("table="), "{}", m.tiers.summary());
         svc.shutdown();
 

@@ -105,6 +105,15 @@ fn clamp_scale(n: u32, scale: i32) -> i32 {
     scale.clamp(-ms, ms)
 }
 
+/// Round-half-up fixed-point reciprocal: `⌊(2^k + den/2) / den⌋` — the
+/// shared constructor for every reciprocal-style seed table (the Q12 and
+/// Q30 LUTs below and the exhaustive Posit16 reciprocal table in
+/// [`super::p16_tables`]). `2^k + den/2` must fit a `u64`.
+#[inline]
+pub(crate) fn fixed_recip(k: u32, den: u64) -> u64 {
+    ((1u64 << k) + den / 2) / den
+}
+
 /// 256-entry reciprocal seed table: entry `i` is `2^12/d` rounded, for
 /// `d` the midpoint of `[1 + i/256, 1 + (i+1)/256)`. Values lie in
 /// `(2^11, 2^12)`. Integer-only construction (no floats in any kernel).
@@ -115,7 +124,7 @@ fn recip_lut() -> &'static [u32; 256] {
         for (i, slot) in t.iter_mut().enumerate() {
             // 2^12 · 2/(2·(256+i)+1), i.e. 1/midpoint in Q12, rounded.
             let den = 513 + 2 * i as u64;
-            *slot = (((1u64 << 21) + den / 2) / den) as u32;
+            *slot = fixed_recip(21, den) as u32;
         }
         t
     })
@@ -132,7 +141,7 @@ fn rsqrt_lut() -> &'static [u32; 384] {
             let m = 2 * (128 + i as u64) + 1; // 256·v at the midpoint
             // 2^30/√(m/256) = 2^34/√m, via the integer square root.
             let s = super::sqrt::isqrt_u128((m as u128) << 40) as u64; // √m in Q20
-            *slot = (((1u64 << 54) + s / 2) / s) as u32;
+            *slot = fixed_recip(54, s) as u32;
         }
         t
     })

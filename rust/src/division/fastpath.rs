@@ -24,20 +24,23 @@
 //!   decode/encode and the fixed-point arithmetic all const-fold on `n`),
 //!   with a dynamic-width fallback for the odd widths (Posit10, …);
 //! * the vectorized serving layer — exhaustive Posit8 operation tables
-//!   ([`super::p8_tables`]: one constant-time lookup per lane) and the
-//!   SWAR lane-packed kernels ([`super::simd`]: packed special pre-pass,
-//!   structure-of-arrays mid-section) for 8×Posit8 / 4×Posit16 lanes per
-//!   `u64` word.
+//!   ([`super::p8_tables`]: one constant-time lookup per lane), Posit16
+//!   reciprocal/root seed tables ([`super::p16_tables`]: one table load
+//!   replaces the long division / integer square root), explicit
+//!   vector-ISA kernels ([`super::vector`]: runtime-detected AVX2/NEON
+//!   behind the `vsimd` feature), and the SWAR lane-packed kernels
+//!   ([`super::simd`]: packed special pre-pass, structure-of-arrays
+//!   mid-section) for 16×Posit8 / 8×Posit16 lanes per `u128` word.
 //!
-//! Under [`FastPath::Auto`] a batch resolves **table > SWAR >
-//! scalar-fast** by width and batch length ([`FastKernel::resolve`]);
+//! Under [`FastPath::Auto`] a batch resolves **table > vector > SWAR >
+//! scalar-fast** by width, ISA and batch length ([`FastKernel::resolve`]);
 //! every path is bit-identical to the others and to the Datapath tier
 //! (tier-equivalence sweeps, exhaustive at Posit8).
 
 use crate::posit::{frac_bits, mask, round::encode_round, Posit};
 
 use super::sqrt::isqrt_u128;
-use super::{p8_tables, simd};
+use super::{p16_tables, p8_tables, simd, vector};
 
 /// The operation kinds the fast tier serves. Division collapses to a
 /// single kernel: every Table IV engine is correctly rounded, so the fast
@@ -61,21 +64,29 @@ pub enum Kind {
 
 /// Which Fast-tier batch kernel serves a batch ([`FastKernel::run_batch`]).
 ///
-/// `Auto` (the serving default) resolves **table > SWAR > scalar-fast**
-/// by width and batch length; the explicit variants pin one kernel (used
-/// by the dispatch-forced bench rows and the differential tests). All
-/// paths are bit-identical — they differ only in speed.
+/// `Auto` (the serving default) resolves **table > vector > SWAR >
+/// scalar-fast** by width, ISA and batch length; the explicit variants
+/// pin one kernel (used by the dispatch-forced bench rows and the
+/// differential tests). All paths are bit-identical — they differ only
+/// in speed.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
 pub enum FastPath {
-    /// Pick per batch: the Posit8 table when it applies and the batch has
-    /// at least [`TABLE_MIN_LANES`] lanes, else the SWAR kernels when the
-    /// width has them and the batch has at least [`SIMD_MIN_LANES`]
-    /// lanes, else the scalar-fast kernel loop.
+    /// Pick per batch: a width's op table when it applies and the batch
+    /// has at least [`TABLE_MIN_LANES`] lanes, else the vector-ISA
+    /// kernels when detected and the batch has at least
+    /// [`VECTOR_MIN_LANES`] lanes, else the SWAR kernels when the width
+    /// has them and the batch has at least [`SIMD_MIN_LANES`] lanes,
+    /// else the scalar-fast kernel loop.
     #[default]
     Auto,
-    /// The exhaustive Posit8 operation tables ([`super::p8_tables`]);
-    /// only valid at n = 8 for ops with a table (everything but MulAdd).
+    /// The constant-time tables: exhaustive Posit8 operation tables
+    /// ([`super::p8_tables`], everything but MulAdd) or the Posit16
+    /// reciprocal/root seed tables ([`super::p16_tables`], div and sqrt).
     Table,
+    /// The explicit vector-ISA kernels ([`super::vector`]: AVX2/NEON);
+    /// only valid for div/mul/add/sub at n ∈ {8, 16} on a detected
+    /// vector CPU with the `vsimd` feature enabled.
+    Vector,
     /// The SWAR lane-packed kernels ([`super::simd`]); only valid at
     /// n ∈ {8, 16}.
     Simd,
@@ -84,34 +95,40 @@ pub enum FastPath {
 }
 
 impl FastPath {
-    /// Parse a CLI-style path name (`auto`, `table`, `simd`, `scalar`).
+    /// Parse a CLI-style path name (`auto`, `table`, `vector`, `simd`,
+    /// `scalar`).
     pub fn parse(s: &str) -> Option<FastPath> {
         match s.to_ascii_lowercase().as_str() {
             "auto" => Some(FastPath::Auto),
             "table" => Some(FastPath::Table),
+            "vector" => Some(FastPath::Vector),
             "simd" => Some(FastPath::Simd),
             "scalar" => Some(FastPath::Scalar),
             _ => None,
         }
     }
 
-    /// Stable lowercase name (`auto`, `table`, `simd`, `scalar`).
+    /// Stable lowercase name (`auto`, `table`, `vector`, `simd`,
+    /// `scalar`).
     pub fn name(self) -> &'static str {
         match self {
             FastPath::Auto => "auto",
             FastPath::Table => "table",
+            FastPath::Vector => "vector",
             FastPath::Simd => "simd",
             FastPath::Scalar => "scalar",
         }
     }
 
     /// Report/metrics tag of a *resolved* path, matching the bench `path`
-    /// tags (`batch:fast-table`, `batch:fast-simd`, …): `fast-table`,
-    /// `fast-simd`, `fast-scalar` (`fast` for the unresolved `Auto`).
+    /// tags (`batch:fast-table`, `batch:fast-vector`, …): `fast-table`,
+    /// `fast-vector`, `fast-simd`, `fast-scalar` (`fast` for the
+    /// unresolved `Auto`).
     pub fn tag(self) -> &'static str {
         match self {
             FastPath::Auto => "fast",
             FastPath::Table => "fast-table",
+            FastPath::Vector => "fast-vector",
             FastPath::Simd => "fast-simd",
             FastPath::Scalar => "fast-scalar",
         }
@@ -129,13 +146,35 @@ pub const TABLE_MIN_LANES: usize = 4;
 /// pack/unpack overhead.
 pub const SIMD_MIN_LANES: usize = 16;
 
+/// Minimum batch length at which [`FastPath::Auto`] picks the vector-ISA
+/// kernels: below two full SoA half-blocks the pack/compact overhead
+/// around the wide mid-section leaves nothing for the ISA to win.
+pub const VECTOR_MIN_LANES: usize = 32;
+
+/// The SoA block size every lane-packed Fast kernel (SWAR and vector)
+/// steps in. Exported so batch *producers* — the parallel fan-out above
+/// all ([`crate::unit::Unit::parallel_chunk`]) — can align chunk
+/// boundaries to whole blocks instead of feeding the kernels ragged
+/// mid-chunks.
+pub const LANE_BLOCK: usize = simd::BLOCK;
+
+/// Does `(n, kind)` have a constant-time table: the exhaustive Posit8
+/// operation tables, or the Posit16 reciprocal/root seed tables.
+fn table_supported(n: u32, kind: Kind) -> bool {
+    (n == p8_tables::N && p8_tables::supports(kind))
+        || (n == p16_tables::N && p16_tables::supports(kind))
+}
+
 /// Can a forced `path` serve `(n, kind)`? (`Auto` and `Scalar` always
-/// can; `Table` needs n = 8 and a tabulated op; `Simd` needs a SWAR
-/// width.)
+/// can; `Table` needs a tabulated `(width, op)` — Posit8 everything-but-
+/// MulAdd or Posit16 div/sqrt; `Vector` needs a vector kernel *and* a
+/// detected vector ISA ([`super::vector::available`]); `Simd` needs a
+/// SWAR width.)
 pub fn path_supported(n: u32, kind: Kind, path: FastPath) -> bool {
     match path {
         FastPath::Auto | FastPath::Scalar => true,
-        FastPath::Table => n == p8_tables::N && p8_tables::supports(kind),
+        FastPath::Table => table_supported(n, kind),
+        FastPath::Vector => vector::available() && vector::supports(n, kind),
         FastPath::Simd => simd::supports(n),
     }
 }
@@ -376,9 +415,10 @@ pub(crate) fn scalar_bits(n: u32, kind: Kind, a: u64, b: u64, c: u64) -> u64 {
 /// A fast-tier execution kernel for one `(width, op kind)` pair: the
 /// scalar batch entry point resolved once at construction (monomorphized
 /// for the standard widths), the scalar lane kernels, and the
-/// [`FastPath`] dispatch over the vectorized layer (Posit8 tables, SWAR
-/// kernels). Held by [`crate::unit::Unit`] and served whenever the
-/// unit's [`crate::unit::ExecTier`] resolves to `Fast`.
+/// [`FastPath`] dispatch over the vectorized layer (Posit8/Posit16
+/// tables, vector-ISA and SWAR kernels). Held by [`crate::unit::Unit`]
+/// and served whenever the unit's [`crate::unit::ExecTier`] resolves to
+/// `Fast`.
 pub struct FastKernel {
     n: u32,
     kind: Kind,
@@ -417,15 +457,20 @@ impl FastKernel {
     }
 
     /// The kernel that will serve a batch of `len` lanes: the configured
-    /// override, or — under `Auto` — **table > SWAR > scalar-fast** by
-    /// width and batch length. Never returns `Auto`.
+    /// override, or — under `Auto` — **table > vector > SWAR >
+    /// scalar-fast** by width, ISA and batch length. Never returns
+    /// `Auto`.
     #[inline]
     pub fn resolve(&self, len: usize) -> FastPath {
         match self.path {
             FastPath::Auto => {
-                if self.n == p8_tables::N && p8_tables::supports(self.kind) && len >= TABLE_MIN_LANES
-                {
+                if table_supported(self.n, self.kind) && len >= TABLE_MIN_LANES {
                     FastPath::Table
+                } else if vector::available()
+                    && vector::supports(self.n, self.kind)
+                    && len >= VECTOR_MIN_LANES
+                {
+                    FastPath::Vector
                 } else if simd::supports(self.n) && len >= SIMD_MIN_LANES {
                     FastPath::Simd
                 } else {
@@ -489,10 +534,12 @@ impl FastKernel {
         out: &mut [u64],
     ) {
         match path {
-            FastPath::Table => {
+            FastPath::Table if self.n == p8_tables::N => {
                 let t = p8_tables::get(self.kind).expect("resolve checked table support");
                 t.run_batch(a, b, out);
             }
+            FastPath::Table => p16_tables::run_batch(self.kind, a, b, out),
+            FastPath::Vector => vector::run_batch(self.n, self.kind, a, b, c, out),
             FastPath::Simd => simd::run_batch(self.n, self.kind, a, b, c, out),
             _ => (self.batch)(self.n, self.kind, a, b, c, out),
         }
@@ -658,24 +705,42 @@ mod tests {
     #[test]
     fn fast_path_parse_names_and_tags() {
         assert_eq!(FastPath::parse("table"), Some(FastPath::Table));
+        assert_eq!(FastPath::parse("vector"), Some(FastPath::Vector));
         assert_eq!(FastPath::parse("SIMD"), Some(FastPath::Simd));
         assert_eq!(FastPath::parse("scalar"), Some(FastPath::Scalar));
         assert_eq!(FastPath::parse("auto"), Some(FastPath::Auto));
         assert_eq!(FastPath::parse("warp"), None);
         assert_eq!(FastPath::default(), FastPath::Auto);
         assert_eq!(FastPath::Table.name(), "table");
+        assert_eq!(FastPath::Vector.name(), "vector");
         assert_eq!(FastPath::Table.tag(), "fast-table");
+        assert_eq!(FastPath::Vector.tag(), "fast-vector");
         assert_eq!(FastPath::Simd.tag(), "fast-simd");
         assert_eq!(FastPath::Scalar.tag(), "fast-scalar");
     }
 
     #[test]
     fn path_support_matrix() {
-        // Table: only Posit8, only tabulated ops.
+        // Table: Posit8 tabulated ops, Posit16 div/sqrt.
         assert!(path_supported(8, Kind::Div, FastPath::Table));
         assert!(path_supported(8, Kind::Sqrt, FastPath::Table));
         assert!(!path_supported(8, Kind::MulAdd, FastPath::Table));
-        assert!(!path_supported(16, Kind::Div, FastPath::Table));
+        assert!(path_supported(16, Kind::Div, FastPath::Table));
+        assert!(path_supported(16, Kind::Sqrt, FastPath::Table));
+        assert!(!path_supported(16, Kind::Mul, FastPath::Table));
+        assert!(!path_supported(32, Kind::Div, FastPath::Table));
+        // Vector: machine-dependent — but never for excluded ops/widths,
+        // and only when detection succeeded.
+        for n in [8u32, 16] {
+            assert!(!path_supported(n, Kind::Sqrt, FastPath::Vector));
+            assert!(!path_supported(n, Kind::MulAdd, FastPath::Vector));
+            assert_eq!(
+                path_supported(n, Kind::Div, FastPath::Vector),
+                vector::available(),
+                "n={n}"
+            );
+        }
+        assert!(!path_supported(32, Kind::Div, FastPath::Vector));
         // SWAR: Posit8 and Posit16, every op.
         assert!(path_supported(8, Kind::MulAdd, FastPath::Simd));
         assert!(path_supported(16, Kind::Div, FastPath::Simd));
@@ -689,20 +754,28 @@ mod tests {
     }
 
     #[test]
-    fn auto_resolution_order_is_table_then_simd_then_scalar() {
+    fn auto_resolution_order_is_table_then_vector_then_simd_then_scalar() {
         let div8 = FastKernel::new(8, Kind::Div);
         assert_eq!(div8.resolve(256), FastPath::Table);
         assert_eq!(div8.resolve(TABLE_MIN_LANES), FastPath::Table);
         assert_eq!(div8.resolve(TABLE_MIN_LANES - 1), FastPath::Scalar);
-        // no table for the ternary op: SWAR next
+        // no table for the ternary op, no vector kernel either: SWAR next
         let fma8 = FastKernel::new(8, Kind::MulAdd);
         assert_eq!(fma8.resolve(256), FastPath::Simd);
         assert_eq!(fma8.resolve(SIMD_MIN_LANES - 1), FastPath::Scalar);
-        // Posit16: no table, SWAR above the lane threshold
+        // Posit16 div/sqrt: seed tables above the table threshold
         let div16 = FastKernel::new(16, Kind::Div);
-        assert_eq!(div16.resolve(256), FastPath::Simd);
-        assert_eq!(div16.resolve(SIMD_MIN_LANES), FastPath::Simd);
-        assert_eq!(div16.resolve(SIMD_MIN_LANES - 1), FastPath::Scalar);
+        assert_eq!(div16.resolve(256), FastPath::Table);
+        assert_eq!(div16.resolve(TABLE_MIN_LANES), FastPath::Table);
+        assert_eq!(div16.resolve(TABLE_MIN_LANES - 1), FastPath::Scalar);
+        // Posit16 mul: no table — vector when the machine has it, SWAR
+        // otherwise; machine-independent below both lane thresholds.
+        let mul16 = FastKernel::new(16, Kind::Mul);
+        let wide = if vector::available() { FastPath::Vector } else { FastPath::Simd };
+        assert_eq!(mul16.resolve(256), wide);
+        assert_eq!(mul16.resolve(VECTOR_MIN_LANES), wide);
+        assert_eq!(mul16.resolve(SIMD_MIN_LANES), FastPath::Simd);
+        assert_eq!(mul16.resolve(SIMD_MIN_LANES - 1), FastPath::Scalar);
         // wider formats: scalar regardless of batch length
         let div32 = FastKernel::new(32, Kind::Div);
         assert_eq!(div32.resolve(1 << 20), FastPath::Scalar);
@@ -721,7 +794,7 @@ mod tests {
         let mut rng = Rng::seeded(0xD15);
         for n in [8u32, 16] {
             for kind in KINDS {
-                for path in [FastPath::Table, FastPath::Simd] {
+                for path in [FastPath::Table, FastPath::Vector, FastPath::Simd] {
                     if !path_supported(n, kind, path) {
                         continue;
                     }

@@ -26,10 +26,11 @@
 //! branch-light kernels that compute the same truncated quotient + sticky
 //! by direct fixed-point arithmetic, bit-identical to every engine
 //! above, with a vectorized batch layer on top — exhaustive Posit8
-//! operation tables ([`p8_tables`]) and SWAR lane-packed kernels
-//! ([`simd`]) — dispatched per batch by [`fastpath::FastPath`].
-//! [`crate::unit::ExecTier`] picks between the engines and the fast
-//! kernels.
+//! operation tables ([`p8_tables`]), Posit16 reciprocal/root seed tables
+//! ([`p16_tables`]), runtime-detected explicit vector-ISA kernels
+//! ([`vector`]) and SWAR lane-packed kernels ([`simd`]) — dispatched per
+//! batch by [`fastpath::FastPath`]. [`crate::unit::ExecTier`] picks
+//! between the engines and the fast kernels.
 //!
 //! [`approx`] is the bounded-error counterpart: reciprocal/rsqrt-seeded
 //! single-Newton-step division and square root plus truncated-fraction
@@ -46,6 +47,7 @@ pub mod golden;
 pub mod newton;
 pub mod nrd;
 pub mod otf;
+pub mod p16_tables;
 pub mod p8_tables;
 pub mod scaling;
 pub mod selection;
@@ -55,6 +57,7 @@ pub mod srt2;
 pub mod srt2_cs;
 pub mod srt4_cs;
 pub mod srt4_scaled;
+pub mod vector;
 
 use crate::posit::Posit;
 

@@ -1,0 +1,281 @@
+//! Posit16 reciprocal / square-root seed tables — the constant-time
+//! treatment for the one width where exhaustive operation tables are
+//! impossible.
+//!
+//! At n = 8 the Fast tier memoizes whole operations
+//! ([`super::p8_tables`]); at n = 16 a binary-op table would be
+//! 2³² entries, but the *significand space* is tiny: a decoded Posit16
+//! significand is a 13-bit value `sig ∈ [2^12, 2^13)` — 4096 distinct
+//! patterns. So instead of memoizing the operation we memoize the only
+//! expensive step of each lane:
+//!
+//! * **division** — a 4096-entry Q30 reciprocal table indexed by the
+//!   divisor significand (the exhaustive limit of the approx tier's
+//!   256-entry *seed* table, so no Newton step is needed: with
+//!   `y = rnd(2^30/den)` the estimate `(num·y) ≫ 30` is within ±1 of
+//!   the true quotient `⌊(sig_a ≪ 16)/den⌋`, and one signed remainder
+//!   fix-up per direction lands it exactly — the same seed-plus-
+//!   correction shape the approximate multiply-divide unit literature
+//!   uses, here driven to bit-exactness);
+//! * **square root** — an 8192-entry table of exact integer square roots
+//!   `⌊√(sig ≪ (16+odd))⌋` indexed by (scale parity, significand),
+//!   replacing the per-lane `isqrt` iteration with one load (sticky is
+//!   recomputed from the entry: `s² ≠ rad`).
+//!
+//! Both tables are built **lazily** (one [`std::sync::OnceLock`] each)
+//! and **verified at construction**: every reciprocal entry must satisfy
+//! the round-half-up contract `2·|y·den − 2^30| ≤ den` that the ±1
+//! fix-up bound is proved from, and every root entry must be the exact
+//! integer square root (`s² ≤ rad < (s+1)²`). The build panics on the
+//! first violation, so a table can never serve a wrong seed — the same
+//! policy as the Posit8 tables.
+//!
+//! Memory footprint when both tables are faulted in: 16 KiB + 32 KiB =
+//! 48 KiB per process ([`total_bytes`]), inside the 64 KiB budget the
+//! Posit8 tables spend per single binary op. Mul/add/sub/mul-add have no
+//! seed worth tabulating at this width (their lane cost is the multiply
+//! or alignment itself); they stay on the vector/SWAR/scalar kernels
+//! ([`supports`]).
+
+use std::sync::OnceLock;
+
+use crate::posit::{frac_bits, mask, round::encode_round, Posit};
+
+use super::approx::fixed_recip;
+use super::fastpath::{special, Kind};
+use super::sqrt::isqrt_u128;
+
+/// The tabulated width.
+pub const N: u32 = 16;
+
+/// Fraction bits at n = 16 (`frac_bits(16)`), fixed so the table
+/// geometry is const; the builders assert it matches the library.
+const F: u32 = 12;
+
+/// Distinct Posit16 significands (`sig ∈ [2^F, 2^(F+1))`).
+const SIGS: usize = 1 << F;
+
+/// Bytes of the reciprocal table (4096 × `u32`).
+pub const RECIP_TABLE_BYTES: usize = SIGS * 4;
+
+/// Bytes of the square-root table (2 parities × 4096 × `u32`).
+pub const ROOT_TABLE_BYTES: usize = 2 * SIGS * 4;
+
+/// True when `kind` has a Posit16 seed table (division and square root —
+/// the two ops whose lane cost is dominated by a step a 13-bit-indexed
+/// table can replace).
+#[inline]
+pub const fn supports(kind: Kind) -> bool {
+    matches!(kind, Kind::Div | Kind::Sqrt)
+}
+
+/// Total bytes of table storage once both tables are built.
+pub const fn total_bytes() -> usize {
+    RECIP_TABLE_BYTES + ROOT_TABLE_BYTES
+}
+
+/// The lazily-built Q30 reciprocal table: entry `den − 2^F` is
+/// `rnd(2^30/den)` ∈ (2^17, 2^18], construction-verified against the
+/// round-half-up contract.
+fn recip_table() -> &'static [u32] {
+    static RECIP: OnceLock<Box<[u32]>> = OnceLock::new();
+    RECIP.get_or_init(|| {
+        debug_assert_eq!(F, frac_bits(N));
+        let mut t = vec![0u32; SIGS].into_boxed_slice();
+        for (i, slot) in t.iter_mut().enumerate() {
+            let den = (SIGS + i) as u64;
+            let y = fixed_recip(30, den);
+            // |y·den − 2^30| ≤ den/2: the bound the ±1 quotient fix-up
+            // is proved from (numerators are < 2^29, so the estimate
+            // error is < 2^29·(den/2)/(den·2^30) = 1/4 quotient ulp).
+            let err = (y * den) as i64 - (1i64 << 30);
+            assert!(
+                err.unsigned_abs() * 2 <= den,
+                "p16 recip table build: den={den} y={y} err={err}"
+            );
+            *slot = y as u32;
+        }
+        t
+    })
+}
+
+/// The lazily-built square-root table: entry `odd·4096 + (sig − 2^F)` is
+/// the exact `⌊√(sig ≪ (16+odd))⌋`, construction-verified as such.
+fn root_table() -> &'static [u32] {
+    static ROOT: OnceLock<Box<[u32]>> = OnceLock::new();
+    ROOT.get_or_init(|| {
+        debug_assert_eq!(F, frac_bits(N));
+        let mut t = vec![0u32; 2 * SIGS].into_boxed_slice();
+        for odd in 0..2u32 {
+            for i in 0..SIGS {
+                let sig = (SIGS + i) as u64;
+                // the sqrt kernels' radicand normal form at n = 16:
+                // rad = sig << (2(F+2) + odd − F) = sig << (16 + odd)
+                let rad = sig << (16 + odd);
+                let s = isqrt_u128(rad as u128) as u64;
+                assert!(
+                    s * s <= rad && (s + 1) * (s + 1) > rad,
+                    "p16 root table build: sig={sig} odd={odd} s={s}"
+                );
+                t[odd as usize * SIGS + i] = s as u32;
+            }
+        }
+        t
+    })
+}
+
+/// Division for one real (non-special) lane: table reciprocal, ±1
+/// remainder fix-up, the Fast tier's shared quotient normal form.
+#[inline(always)]
+fn div_real(recip: &[u32], ab: u64, bb: u64) -> u64 {
+    let da = Posit::from_bits(N, ab).decode();
+    let db = Posit::from_bits(N, bb).decode();
+    let num = (da.sig << N) as i64; // < 2^29
+    let den = db.sig as i64; // ∈ [2^12, 2^13)
+    let y = recip[(db.sig - SIGS as u64) as usize] as i64;
+    // q = ⌊num·y / 2^30⌋ is within ±1 of ⌊num/den⌋ (see recip_table);
+    // the signed remainder pins it and doubles as the sticky bit.
+    let mut q = (num * y) >> 30;
+    let mut rem = num - q * den;
+    if rem < 0 {
+        q -= 1;
+        rem += den;
+    }
+    if rem >= den {
+        q += 1;
+        rem -= den;
+    }
+    let t = da.scale - db.scale;
+    // normalize q ∈ (1/2, 2) to [1, 2) — same as every other div kernel
+    let (sc, sfb) = if (q as u64) >> N != 0 { (t, N) } else { (t - 1, N - 1) };
+    encode_round(N, da.sign ^ db.sign, sc, q as u128, sfb, rem != 0).to_bits()
+}
+
+/// Square root for one real lane: one table load replaces the `isqrt`
+/// iteration; sticky is recomputed exactly from the entry.
+#[inline(always)]
+fn sqrt_real(root: &[u32], ab: u64) -> u64 {
+    let d = Posit::from_bits(N, ab).decode();
+    let odd = (d.scale & 1) as u32;
+    let rad = d.sig << (16 + odd);
+    let s = root[(odd as usize * SIGS) + (d.sig - SIGS as u64) as usize] as u64;
+    encode_round(N, false, d.scale >> 1, s as u128, F + 2, s * s != rad).to_bits()
+}
+
+/// Batch execution: `out[i] = kind(a[i], b[i])` (lane `b` empty or
+/// ignored for sqrt), bit-identical to the scalar Fast kernel. `kind`
+/// must satisfy [`supports`]; used operand lanes must match `out` —
+/// checked with a hard assert once per batch, the same contract as the
+/// Posit8 tables.
+pub fn run_batch(kind: Kind, a: &[u64], b: &[u64], out: &mut [u64]) {
+    assert_eq!(a.len(), out.len(), "table lane a must match out");
+    let m = mask(N);
+    match kind {
+        Kind::Div => {
+            assert_eq!(b.len(), out.len(), "p16 div table needs lane b");
+            let recip = recip_table();
+            for i in 0..out.len() {
+                let (x, y) = (a[i] & m, b[i] & m);
+                out[i] = match special(N, Kind::Div, x, y, 0) {
+                    Some(r) => r,
+                    None => div_real(recip, x, y),
+                };
+            }
+        }
+        Kind::Sqrt => {
+            let root = root_table();
+            for i in 0..out.len() {
+                let x = a[i] & m;
+                out[i] = match special(N, Kind::Sqrt, x, 0, 0) {
+                    Some(r) => r,
+                    None => sqrt_real(root, x),
+                };
+            }
+        }
+        _ => unreachable!("no p16 table for {kind:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::division::fastpath::scalar_bits;
+    use crate::division::golden;
+    use crate::division::sqrt::golden_sqrt;
+    use crate::testkit::Rng;
+
+    #[test]
+    fn supported_kinds_and_sizes() {
+        assert!(supports(Kind::Div));
+        assert!(supports(Kind::Sqrt));
+        for kind in [Kind::Mul, Kind::Add, Kind::Sub, Kind::MulAdd] {
+            assert!(!supports(kind), "{kind:?}");
+        }
+        assert_eq!(RECIP_TABLE_BYTES, 16 * 1024);
+        assert_eq!(ROOT_TABLE_BYTES, 32 * 1024);
+        assert_eq!(total_bytes(), 48 * 1024);
+    }
+
+    /// Entry ranges on top of the construction contracts (which already
+    /// ran, and panicked on violation, when the tables were built).
+    #[test]
+    fn table_entries_are_in_range() {
+        for (i, &y) in recip_table().iter().enumerate() {
+            assert!((1 << 17) < y && y <= (1 << 18), "recip[{i}] = {y}");
+        }
+        for (i, &s) in root_table().iter().enumerate() {
+            assert!((1 << 13) < s && s < (1 << 15), "root[{i}] = {s}");
+        }
+    }
+
+    /// Exhaustive Posit16 sqrt: all 65 536 bit patterns through the
+    /// table path vs the scalar Fast kernel (which is itself golden-
+    /// verified); the specials (NaR, zero, negatives) ride along.
+    #[test]
+    fn exhaustive_p16_sqrt_matches_scalar_kernel() {
+        let a: Vec<u64> = (0..=mask(N)).collect();
+        let mut out = vec![0u64; a.len()];
+        run_batch(Kind::Sqrt, &a, &[], &mut out);
+        for (i, &got) in out.iter().enumerate() {
+            assert_eq!(got, scalar_bits(N, Kind::Sqrt, a[i], 0, 0), "sqrt {:#06x}", a[i]);
+        }
+    }
+
+    /// Exhaustive over every divisor bit pattern (so every reciprocal
+    /// entry that any posit can index is exercised) against random
+    /// dividends, vs the scalar Fast kernel.
+    #[test]
+    fn every_divisor_pattern_matches_scalar_kernel() {
+        let mut rng = Rng::seeded(0x16DE);
+        let b: Vec<u64> = (0..=mask(N)).collect();
+        let a: Vec<u64> = (0..b.len()).map(|_| rng.next_u64() & mask(N)).collect();
+        let mut out = vec![0u64; b.len()];
+        run_batch(Kind::Div, &a, &b, &mut out);
+        for i in 0..b.len() {
+            assert_eq!(
+                out[i],
+                scalar_bits(N, Kind::Div, a[i], b[i], 0),
+                "{:#06x}/{:#06x}",
+                a[i],
+                b[i]
+            );
+        }
+    }
+
+    /// Seeded sweep vs the *golden* references directly — independent of
+    /// the Fast kernels the other tests compare against.
+    #[test]
+    fn seeded_sweep_matches_golden_references() {
+        let mut rng = Rng::seeded(0x16D9);
+        let p = |bits: u64| Posit::from_bits(N, bits);
+        for _ in 0..5_000 {
+            let (a, b) = (rng.next_u64() & mask(N), rng.next_u64() & mask(N));
+            let mut out = [0u64; 1];
+            run_batch(Kind::Div, &[a], &[b], &mut out);
+            assert_eq!(out[0], golden::divide(p(a), p(b)).result.to_bits(), "{a:#06x}/{b:#06x}");
+            let mut out = [0u64; 1];
+            run_batch(Kind::Sqrt, &[a], &[], &mut out);
+            assert_eq!(out[0], golden_sqrt(p(a)).result.to_bits(), "sqrt {a:#06x}");
+        }
+    }
+}

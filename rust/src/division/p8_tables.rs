@@ -13,8 +13,11 @@
 //!
 //! Memory footprint when everything is faulted in: 4 binary ops × 64 KiB
 //! + 256 B = 256.25 KiB per process. `MulAdd` has no table (a ternary
-//! Posit8 op would need 16 MiB); it is served by the SWAR or scalar
-//! kernels instead ([`super::fastpath::FastPath`] dispatch).
+//! Posit8 op would need 16 MiB); it is served by the vector, SWAR or
+//! scalar kernels instead ([`super::fastpath::FastPath`] dispatch). At
+//! n = 16, where whole-operation tables are impossible, the same
+//! construction-verified treatment is applied to the per-lane *seed*
+//! instead — see [`super::p16_tables`].
 
 use std::sync::OnceLock;
 

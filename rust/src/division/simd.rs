@@ -1,4 +1,5 @@
-//! SWAR lane-packed batch kernels — the vectorized layer of the Fast tier.
+//! SWAR lane-packed batch kernels — the portable vectorized layer of the
+//! Fast tier.
 //!
 //! The scalar Fast kernels ([`super::fastpath`]) already replaced the
 //! cycle-accurate recurrence with direct fixed-point arithmetic, but they
@@ -7,13 +8,13 @@
 //! from a faster scalar datapath; this module is the software analogue of
 //! that idea, structured as three passes over a batch:
 //!
-//! 1. **SWAR pre-pass** — 8×Posit8 or 4×Posit16 lanes are packed into one
-//!    `u64` word and the decode-time special patterns (zero, NaR, negative
-//!    radicand, zero addend) are detected *per word* with branch-free bit
-//!    tricks (carry-contained zero-lane detection, mask expansion by
-//!    multiplication, lane-wise two's complement). Special lanes are
-//!    resolved in bulk straight from the masks; a word with no special
-//!    lane costs one compare.
+//! 1. **SWAR pre-pass** — 16×Posit8 or 8×Posit16 lanes are packed into
+//!    one `u128` word and the decode-time special patterns (zero, NaR,
+//!    negative radicand, zero addend) are detected *per word* with
+//!    branch-free bit tricks (carry-contained zero-lane detection, mask
+//!    expansion by multiplication, lane-wise two's complement). Special
+//!    lanes are resolved in bulk straight from the masks; a word with no
+//!    special lane costs one compare.
 //! 2. **SoA mid-section** — surviving real lanes are decoded into
 //!    structure-of-arrays buffers (sign/scale/significand as contiguous
 //!    `i32`/`u64` arrays) and the fraction arithmetic runs in tight,
@@ -33,9 +34,14 @@
 //! NaR included) in `tests/tier_equivalence.rs` and exhaustively at
 //! Posit8 in the module tests below.
 //!
+//! The special pre-pass (pass 1) is shared with the explicit vector-ISA
+//! kernels in [`super::vector`] through `special_prepass`: both kernel
+//! families classify the same way and differ only in how the surviving
+//! real lanes compute their fraction arithmetic.
+//!
 //! Supported widths: n ∈ {8, 16} ([`supports`]); wider formats stay on
-//! the width-monomorphized scalar kernels, where a `u64` word holds too
-//! few lanes for the packed pre-pass to pay for itself.
+//! the width-monomorphized scalar kernels, where even a `u128` word holds
+//! too few lanes for the packed pre-pass to pay for itself.
 
 use crate::posit::{frac_bits, mask, round::encode_round, Posit};
 
@@ -44,22 +50,24 @@ use super::sqrt::isqrt_u128;
 
 /// Lanes processed per SoA block (a multiple of the per-word lane count
 /// for both supported widths, sized so the scratch buffers stay on the
-/// stack).
-const BLOCK: usize = 64;
+/// stack). Shared with [`super::vector`], whose widest kernels also step
+/// inside one block, and exported to the dispatch layer as
+/// `fastpath::LANE_BLOCK` so parallel chunking can align to it.
+pub(crate) const BLOCK: usize = 64;
 
-/// True when `n` has a SWAR kernel (8 lanes of Posit8 or 4 lanes of
-/// Posit16 per `u64` word).
+/// True when `n` has a SWAR kernel (16 lanes of Posit8 or 8 lanes of
+/// Posit16 per `u128` word).
 #[inline]
 pub const fn supports(n: u32) -> bool {
     n == 8 || n == 16
 }
 
 /// Splat an `N`-bit lane value across the `L` lanes of a word.
-const fn splat<const N: u32, const L: usize>(v: u64) -> u64 {
-    let mut w = 0u64;
+const fn splat<const N: u32, const L: usize>(v: u64) -> u128 {
+    let mut w = 0u128;
     let mut i = 0;
     while i < L {
-        w |= v << (i as u32 * N);
+        w |= (v as u128) << (i as u32 * N);
         i += 1;
     }
     w
@@ -73,14 +81,14 @@ const fn splat<const N: u32, const L: usize>(v: u64) -> u64 {
 pub fn run_batch(n: u32, kind: Kind, a: &[u64], b: &[u64], c: &[u64], out: &mut [u64]) {
     debug_assert!(supports(n), "no SWAR kernel for n={n}");
     match n {
-        8 => batch::<8, 8>(kind, a, b, c, out),
-        _ => batch::<16, 4>(kind, a, b, c, out),
+        8 => batch::<8, 16>(kind, a, b, c, out),
+        _ => batch::<16, 8>(kind, a, b, c, out),
     }
 }
 
 /// Slice a possibly-empty operand lane to a block window.
 #[inline(always)]
-fn window(lane: &[u64], start: usize, len: usize) -> &[u64] {
+pub(crate) fn window(lane: &[u64], start: usize, len: usize) -> &[u64] {
     if lane.is_empty() {
         lane
     } else {
@@ -114,15 +122,20 @@ fn batch<const N: u32, const L: usize>(
 /// each special lane set, `bits` holds those lanes' resolved results
 /// (real lanes are zero in both).
 struct SpecialWord {
-    mask: u64,
-    bits: u64,
+    mask: u128,
+    bits: u128,
 }
 
 /// The packed special pre-pass for one word of `L` lanes: the SWAR
 /// mirror of the scalar `special()` table, including its precedence
 /// (NaR-producing patterns first, then zero/pass-through patterns).
 #[inline(always)]
-fn special_word<const N: u32, const L: usize>(kind: Kind, wa: u64, wb: u64, wc: u64) -> SpecialWord {
+fn special_word<const N: u32, const L: usize>(
+    kind: Kind,
+    wa: u128,
+    wb: u128,
+    wc: u128,
+) -> SpecialWord {
     // Lane-geometry constants (const-folded per monomorphization).
     let low = splat::<N, L>(mask(N - 1)); // low N-1 bits of every lane
     let msb = splat::<N, L>(1u64 << (N - 1)); // sign/NaR bit of every lane
@@ -131,15 +144,15 @@ fn special_word<const N: u32, const L: usize>(kind: Kind, wa: u64, wb: u64, wc: 
     // MSB-flag set in every zero lane, exactly (the naive `(w - 1) & !w`
     // borrow trick has false positives across lanes; this carry-contained
     // form does not: `(x & low) + low` cannot carry out of a lane).
-    let zero_msb = |w: u64| !(((w & low) + low) | w | low) & msb;
+    let zero_msb = |w: u128| !(((w & low) + low) | w | low) & msb;
     // Expand MSB flags to full-lane masks: move each flag to its lane's
     // LSB, then multiply by the all-ones lane value (lane products cannot
     // overlap, so the multiply is a lane-wise fill).
-    let expand = |flags: u64| (flags >> (N - 1)).wrapping_mul(mask(N));
+    let expand = |flags: u128| (flags >> (N - 1)).wrapping_mul(mask(N) as u128);
     // Lane-wise two's complement: bitwise NOT, then +1 per lane through
     // the carry-contained SWAR add (MSBs recombined by XOR so a full lane
     // cannot carry into its neighbor).
-    let lane_neg = |w: u64| {
+    let lane_neg = |w: u128| {
         let x = !w;
         ((x & !msb).wrapping_add(one)) ^ ((x ^ one) & msb)
     };
@@ -188,32 +201,39 @@ fn special_word<const N: u32, const L: usize>(kind: Kind, wa: u64, wb: u64, wc: 
     SpecialWord { mask: mask_, bits }
 }
 
-/// One SoA block: packed pre-pass, compacted real-lane mid-section,
-/// encode post-pass.
-fn block<const N: u32, const L: usize>(
+/// The packed special pre-pass over one block: packs `L` lanes per
+/// `u128` word, resolves every special lane straight into `out`, serves
+/// the ragged tail (block length not a multiple of `L`) through the
+/// scalar kernel, and compacts the surviving real-lane positions into
+/// `real_idx`. Returns the number of real lanes.
+///
+/// Shared between the SWAR mid-sections below and the explicit vector
+/// kernels in [`super::vector`] — both consume the same compacted
+/// real-lane list, so classification stays bit-identical across the
+/// whole Fast tier by construction.
+pub(crate) fn special_prepass<const N: u32, const L: usize>(
     kind: Kind,
     a: &[u64],
     b: &[u64],
     c: &[u64],
     out: &mut [u64],
-) {
+    real_idx: &mut [u8; BLOCK],
+) -> usize {
     let m = out.len();
     let msk = mask(N);
     let lane = |l: &[u64], i: usize| if l.is_empty() { 0 } else { l[i] & msk };
 
-    // --- pass 1: SWAR special pre-pass over packed words ---------------
-    let mut real_idx = [0u8; BLOCK]; // compacted real-lane positions
     let mut r = 0usize;
     let words = m / L;
     for wi in 0..words {
         let base = wi * L;
-        let mut wa = 0u64;
-        let mut wb = 0u64;
-        let mut wc = 0u64;
+        let mut wa = 0u128;
+        let mut wb = 0u128;
+        let mut wc = 0u128;
         for j in 0..L {
-            wa |= lane(a, base + j) << (j as u32 * N);
-            wb |= lane(b, base + j) << (j as u32 * N);
-            wc |= lane(c, base + j) << (j as u32 * N);
+            wa |= (lane(a, base + j) as u128) << (j as u32 * N);
+            wb |= (lane(b, base + j) as u128) << (j as u32 * N);
+            wc |= (lane(c, base + j) as u128) << (j as u32 * N);
         }
         let sp = special_word::<N, L>(kind, wa, wb, wc);
         if sp.mask == 0 {
@@ -225,8 +245,8 @@ fn block<const N: u32, const L: usize>(
         } else {
             for j in 0..L {
                 let sh = j as u32 * N;
-                if (sp.mask >> sh) & msk != 0 {
-                    out[base + j] = (sp.bits >> sh) & msk;
+                if (sp.mask >> sh) as u64 & msk != 0 {
+                    out[base + j] = (sp.bits >> sh) as u64 & msk;
                 } else {
                     real_idx[r] = (base + j) as u8;
                     r += 1;
@@ -240,6 +260,24 @@ fn block<const N: u32, const L: usize>(
     for i in words * L..m {
         out[i] = scalar_bits(N, kind, lane(a, i), lane(b, i), lane(c, i));
     }
+    r
+}
+
+/// One SoA block: packed pre-pass, compacted real-lane mid-section,
+/// encode post-pass.
+fn block<const N: u32, const L: usize>(
+    kind: Kind,
+    a: &[u64],
+    b: &[u64],
+    c: &[u64],
+    out: &mut [u64],
+) {
+    let msk = mask(N);
+    let lane = |l: &[u64], i: usize| if l.is_empty() { 0 } else { l[i] & msk };
+
+    // --- pass 1: SWAR special pre-pass over packed words ---------------
+    let mut real_idx = [0u8; BLOCK]; // compacted real-lane positions
+    let r = special_prepass::<N, L>(kind, a, b, c, out, &mut real_idx);
 
     if r == 0 {
         return;
@@ -363,12 +401,16 @@ mod tests {
     const KINDS: [Kind; 6] =
         [Kind::Div, Kind::Sqrt, Kind::Mul, Kind::Add, Kind::Sub, Kind::MulAdd];
 
+    fn rand_u128(rng: &mut Rng) -> u128 {
+        ((rng.next_u64() as u128) << 64) | rng.next_u64() as u128
+    }
+
     #[test]
     fn splat_fills_every_lane() {
-        assert_eq!(splat::<8, 8>(0x01), 0x0101_0101_0101_0101);
-        assert_eq!(splat::<8, 8>(0x80), 0x8080_8080_8080_8080);
-        assert_eq!(splat::<16, 4>(1), 0x0001_0001_0001_0001);
-        assert_eq!(splat::<16, 4>(0x8000), 0x8000_8000_8000_8000);
+        assert_eq!(splat::<8, 16>(0x01), 0x0101_0101_0101_0101_0101_0101_0101_0101);
+        assert_eq!(splat::<8, 16>(0x80), 0x8080_8080_8080_8080_8080_8080_8080_8080);
+        assert_eq!(splat::<16, 8>(1), 0x0001_0001_0001_0001_0001_0001_0001_0001);
+        assert_eq!(splat::<16, 8>(0x8000), 0x8000_8000_8000_8000_8000_8000_8000_8000);
     }
 
     /// The carry-contained zero-lane detector must be exact — including
@@ -376,21 +418,21 @@ mod tests {
     /// above a zero lane).
     #[test]
     fn swar_zero_detection_is_exact() {
-        let low = splat::<8, 8>(mask(7));
-        let msb = splat::<8, 8>(0x80);
-        let zero_msb = |w: u64| !(((w & low) + low) | w | low) & msb;
+        let low = splat::<8, 16>(mask(7));
+        let msb = splat::<8, 16>(0x80);
+        let zero_msb = |w: u128| !(((w & low) + low) | w | low) & msb;
         let mut rng = Rng::seeded(0x5A);
         for _ in 0..100_000 {
-            let w = rng.next_u64();
+            let w = rand_u128(&mut rng);
             let got = zero_msb(w);
-            for j in 0..8 {
+            for j in 0..16 {
                 let lane = (w >> (8 * j)) & 0xFF;
                 let flag = (got >> (8 * j + 7)) & 1;
-                assert_eq!(flag == 1, lane == 0, "w={w:#018x} lane {j}");
+                assert_eq!(flag == 1, lane == 0, "w={w:#034x} lane {j}");
             }
         }
         // the classic false-positive shape: [0x00, 0x01] low-to-high
-        let w = 0x0100u64;
+        let w = 0x0100u128;
         let got = zero_msb(w);
         assert_eq!(got, 0x80, "only the zero lane may flag, {got:#x}");
     }
@@ -398,19 +440,19 @@ mod tests {
     #[test]
     fn swar_lane_negation_matches_scalar() {
         let mut rng = Rng::seeded(0x9E6);
-        let msb = splat::<8, 8>(0x80);
-        let one = splat::<8, 8>(1);
-        let lane_neg = |w: u64| {
+        let msb = splat::<8, 16>(0x80);
+        let one = splat::<8, 16>(1);
+        let lane_neg = |w: u128| {
             let x = !w;
             ((x & !msb).wrapping_add(one)) ^ ((x ^ one) & msb)
         };
         for _ in 0..100_000 {
-            let w = rng.next_u64();
+            let w = rand_u128(&mut rng);
             let got = lane_neg(w);
-            for j in 0..8 {
+            for j in 0..16 {
                 let lane = (w >> (8 * j)) & 0xFF;
                 let want = lane.wrapping_neg() & 0xFF;
-                assert_eq!((got >> (8 * j)) & 0xFF, want, "w={w:#018x} lane {j}");
+                assert_eq!((got >> (8 * j)) & 0xFF, want, "w={w:#034x} lane {j}");
             }
         }
     }
@@ -424,25 +466,29 @@ mod tests {
             let k = FastKernel::new(8, kind);
             for _ in 0..20_000 {
                 // bias toward specials so every branch is exercised
-                let pack_word = |rng: &mut Rng| -> u64 {
-                    let mut w = 0u64;
-                    for j in 0..8 {
+                let pack_word = |rng: &mut Rng| -> u128 {
+                    let mut w = 0u128;
+                    for j in 0..16 {
                         let v = match rng.range_inclusive(0, 5) {
                             0 => 0,
                             1 => 0x80,
                             _ => rng.next_u64() & 0xFF,
                         };
-                        w |= v << (8 * j);
+                        w |= (v as u128) << (8 * j);
                     }
                     w
                 };
                 let (wa, wb, wc) = (pack_word(&mut rng), pack_word(&mut rng), pack_word(&mut rng));
-                let sp = special_word::<8, 8>(kind, wa, wb, wc);
-                for j in 0..8 {
+                let sp = special_word::<8, 16>(kind, wa, wb, wc);
+                for j in 0..16 {
                     let sh = 8 * j;
-                    let (a, b, c) = ((wa >> sh) & 0xFF, (wb >> sh) & 0xFF, (wc >> sh) & 0xFF);
+                    let (a, b, c) = (
+                        (wa >> sh) as u64 & 0xFF,
+                        (wb >> sh) as u64 & 0xFF,
+                        (wc >> sh) as u64 & 0xFF,
+                    );
                     let scalar = k.classify(a, b, c);
-                    let lane_mask = (sp.mask >> sh) & 0xFF;
+                    let lane_mask = (sp.mask >> sh) as u64 & 0xFF;
                     assert!(
                         lane_mask == 0 || lane_mask == 0xFF,
                         "{kind:?} lane {j}: partial mask {lane_mask:#x}"
@@ -450,7 +496,7 @@ mod tests {
                     match scalar {
                         Some(want) => {
                             assert_eq!(lane_mask, 0xFF, "{kind:?} lane {j} must be special");
-                            assert_eq!((sp.bits >> sh) & 0xFF, want, "{kind:?} lane {j}");
+                            assert_eq!((sp.bits >> sh) as u64 & 0xFF, want, "{kind:?} lane {j}");
                         }
                         None => assert_eq!(lane_mask, 0, "{kind:?} lane {j} must be real"),
                     }

@@ -1,0 +1,704 @@
+//! Explicit vector-ISA batch kernels — the widest layer of the Fast tier.
+//!
+//! The SWAR kernels ([`super::simd`]) pack lanes into `u128` words but
+//! still run the fraction arithmetic one lane at a time; real hardware
+//! offers 128–256-bit vector units that can retire 4–8 of those lane
+//! operations per instruction. This module is the `core::arch` analogue:
+//! AVX2 kernels on x86_64 and NEON kernels on aarch64 for div/mul/add/sub
+//! at n ∈ {8, 16}, behind one-time runtime CPU detection.
+//!
+//! **Structure.** Each block reuses the SWAR special pre-pass
+//! (`simd::special_prepass`) verbatim — classification is the
+//! part of the Fast tier where bit-identity bugs hide, so there is exactly
+//! one implementation of it — then runs a vectorized mid-section over the
+//! compacted real lanes and the shared [`encode_round`] post-pass:
+//!
+//! * **Div** — lanes decode into `i32` numerator/denominator arrays
+//!   (`num = sig << n` ≤ 2^14 at P8, ≤ 2^29 at P16; `den = sig` < 2^13,
+//!   so both widths fit `i32` losslessly). The quotient comes from
+//!   hardware float division — `f32` 8-wide for P8 (num < 2^14 is exact
+//!   in 24 mantissa bits), `f64` 4-wide for P16 (num < 2^29 is exact in
+//!   53) — truncated back to integer. IEEE division is correctly rounded
+//!   and every non-integer quotient is ≥ 1/den > one float ulp away from
+//!   an integer, so the truncation already equals the integer floor; a
+//!   branch-free ±1 remainder fix-up in the same vector registers keeps
+//!   the kernel correct even on that analysis' margin, and the exact
+//!   remainder doubles as the sticky bit. Same quotient normal form as
+//!   the SWAR kernel, hence bit-identical rounding.
+//! * **Mul** — significand products fit `i32` at both widths (≤ 2^12 /
+//!   ≤ 2^26), so the mid-section is one vector `mullo` per 4–8 lanes
+//!   feeding the shared renormalize-and-round tail.
+//! * **Add/Sub** — the packed special pre-pass plus the exact posit
+//!   library routine per surviving lane, compiled inside the
+//!   target-feature region so the decode/align/encode straight-line code
+//!   can use the wider ISA. (Their cancellation path is data-dependent
+//!   enough that a hand-vectorized version would need its own bit-identity
+//!   argument; the shared routine keeps that argument trivial.)
+//!
+//! **Gating.** Everything here compiles whenever the target architecture
+//! matches (so the portable build type-checks the kernels), but
+//! [`available`] only returns `true` when the default-off `vsimd` cargo
+//! feature is enabled *and* runtime detection
+//! (`is_x86_feature_detected!("avx2")` / `is_aarch64_feature_detected!
+//! ("neon")`, cached in a [`OnceLock`]) confirms the ISA. The dispatcher
+//! ([`super::fastpath::FastKernel::resolve`]) consults [`available`]
+//! before ever selecting [`super::fastpath::FastPath::Vector`], and
+//! forced-path construction re-checks it, so the `unsafe`
+//! `#[target_feature]` kernels are unreachable on CPUs that lack the ISA.
+//!
+//! Sqrt and mul-add stay on the table/SWAR/scalar paths: sqrt needs a
+//! per-lane integer square root with no vector equivalent cheap enough to
+//! win, and mul-add's double rounding hazard keeps it on the fused
+//! library routine ([`supports`] excludes both).
+
+use std::sync::OnceLock;
+
+use crate::posit::{frac_bits, mask, round::encode_round, Posit};
+
+use super::fastpath::Kind;
+use super::simd::{special_prepass, window, BLOCK};
+
+/// True when `(n, kind)` has a vector kernel: div/mul/add/sub at
+/// n ∈ {8, 16}. Capability of the *code*, not the *machine* — the
+/// dispatch layer combines this with [`available`].
+#[inline]
+pub const fn supports(n: u32, kind: Kind) -> bool {
+    (n == 8 || n == 16) && matches!(kind, Kind::Div | Kind::Mul | Kind::Add | Kind::Sub)
+}
+
+/// True when the vector kernels may run on this machine: the `vsimd`
+/// cargo feature is enabled and the CPU reports the required ISA (AVX2 on
+/// x86_64, NEON on aarch64; always false elsewhere). Detection runs once
+/// per process and is cached in a [`OnceLock`].
+pub fn available() -> bool {
+    if cfg!(not(feature = "vsimd")) {
+        return false;
+    }
+    static DETECTED: OnceLock<bool> = OnceLock::new();
+    *DETECTED.get_or_init(detect)
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect() -> bool {
+    std::is_x86_feature_detected!("avx2")
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect() -> bool {
+    std::arch::is_aarch64_feature_detected!("neon")
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect() -> bool {
+    false
+}
+
+/// Vector batch execution: `out[i] = kind(a[i], b[i], c[i])` for every
+/// lane, bit-identical to the scalar Fast kernel. Callers must hold
+/// [`supports`]`(n, kind)` and [`available`]`()` — the dispatch layer
+/// guarantees both before routing a batch here.
+pub fn run_batch(n: u32, kind: Kind, a: &[u64], b: &[u64], c: &[u64], out: &mut [u64]) {
+    debug_assert!(supports(n, kind), "no vector kernel for n={n} {kind:?}");
+    debug_assert!(available(), "vector kernels dispatched without ISA support");
+    match n {
+        8 => batch::<8, 16>(kind, a, b, c, out),
+        _ => batch::<16, 8>(kind, a, b, c, out),
+    }
+}
+
+fn batch<const N: u32, const L: usize>(
+    kind: Kind,
+    a: &[u64],
+    b: &[u64],
+    c: &[u64],
+    out: &mut [u64],
+) {
+    let len = out.len();
+    let mut start = 0usize;
+    while start < len {
+        let m = (len - start).min(BLOCK);
+        block::<N, L>(
+            kind,
+            &a[start..start + m],
+            window(b, start, m),
+            window(c, start, m),
+            &mut out[start..start + m],
+        );
+        start += m;
+    }
+}
+
+/// One block: shared packed special pre-pass, vectorized mid-section over
+/// the compacted real lanes, shared encode post-pass.
+fn block<const N: u32, const L: usize>(
+    kind: Kind,
+    a: &[u64],
+    b: &[u64],
+    c: &[u64],
+    out: &mut [u64],
+) {
+    let mut real_idx = [0u8; BLOCK];
+    let r = special_prepass::<N, L>(kind, a, b, c, out, &mut real_idx);
+    if r == 0 {
+        return;
+    }
+    match kind {
+        Kind::Div => div_block(N, a, b, out, &real_idx, r),
+        Kind::Mul => mul_block(N, a, b, out, &real_idx, r),
+        Kind::Add | Kind::Sub => add_sub_block(N, kind == Kind::Sub, a, b, out, &real_idx, r),
+        // excluded by `supports`; the dispatcher never routes them here
+        Kind::Sqrt | Kind::MulAdd => unreachable!("no vector kernel for {kind:?}"),
+    }
+}
+
+/// Division mid-section: decode to `i32` SoA buffers, vector float
+/// divide with integer fix-up, shared rounding. Identical normal form to
+/// the SWAR kernel (`q = (sig_a << n) / sig_b`, sticky from the exact
+/// remainder), so the encode post-pass sees the same integers.
+fn div_block(n: u32, a: &[u64], b: &[u64], out: &mut [u64], real_idx: &[u8; BLOCK], r: usize) {
+    let msk = mask(n);
+    let mut sign = [false; BLOCK];
+    let mut scale = [0i32; BLOCK];
+    let mut num = [0i32; BLOCK];
+    // 1, not 0: the vector loops step 4–8 lanes past `r` inside the
+    // block-sized buffers, and defined dead lanes keep those tails
+    // trivially harmless.
+    let mut den = [1i32; BLOCK];
+    for t in 0..r {
+        let i = real_idx[t] as usize;
+        let da = Posit::from_bits(n, a[i] & msk).decode();
+        let db = Posit::from_bits(n, b[i] & msk).decode();
+        sign[t] = da.sign ^ db.sign;
+        scale[t] = da.scale - db.scale;
+        num[t] = (da.sig << n) as i32; // < 2^29 at n = 16: exact in f64
+        den[t] = db.sig as i32;
+    }
+    let mut q = [0i32; BLOCK];
+    let mut rem = [0i32; BLOCK];
+    div_q_rem(n, &num, &den, &mut q, &mut rem, r);
+    for t in 0..r {
+        // normalize q ∈ (1/2, 2) to [1, 2) — same as the SWAR kernel
+        let (sc, sfb) =
+            if (q[t] as u64) >> n != 0 { (scale[t], n) } else { (scale[t] - 1, n - 1) };
+        out[real_idx[t] as usize] =
+            encode_round(n, sign[t], sc, q[t] as u128, sfb, rem[t] != 0).to_bits();
+    }
+}
+
+/// Multiply mid-section: significand products via vector `mullo`, shared
+/// renormalize-and-round tail (same normal form as the SWAR kernel).
+fn mul_block(n: u32, a: &[u64], b: &[u64], out: &mut [u64], real_idx: &[u8; BLOCK], r: usize) {
+    let msk = mask(n);
+    let fb = frac_bits(n);
+    let mut sign = [false; BLOCK];
+    let mut scale = [0i32; BLOCK];
+    let mut sa = [0i32; BLOCK];
+    let mut sb = [0i32; BLOCK];
+    for t in 0..r {
+        let i = real_idx[t] as usize;
+        let da = Posit::from_bits(n, a[i] & msk).decode();
+        let db = Posit::from_bits(n, b[i] & msk).decode();
+        sign[t] = da.sign ^ db.sign;
+        scale[t] = da.scale + db.scale;
+        sa[t] = da.sig as i32;
+        sb[t] = db.sig as i32;
+    }
+    let mut prod = [0i32; BLOCK];
+    mullo(&sa, &sb, &mut prod, r);
+    for t in 0..r {
+        let p = prod[t] as u64; // ≤ 2^26 at n = 16: fits i32, positive
+        // value = prod / 2^(2fb) ∈ [1, 4): renormalize like Posit::mul
+        let (sc, sfb) = if p >> (2 * fb + 1) != 0 {
+            (scale[t] + 1, 2 * fb + 1)
+        } else {
+            (scale[t], 2 * fb)
+        };
+        out[real_idx[t] as usize] = encode_round(n, sign[t], sc, p as u128, sfb, false).to_bits();
+    }
+}
+
+/// Add/sub mid-section: the exact posit library routine per real lane,
+/// compiled inside the target-feature region on vector-capable targets.
+fn add_sub_scalar(
+    n: u32,
+    sub: bool,
+    a: &[u64],
+    b: &[u64],
+    out: &mut [u64],
+    real_idx: &[u8; BLOCK],
+    r: usize,
+) {
+    let msk = mask(n);
+    for &t in &real_idx[..r] {
+        let i = t as usize;
+        let x = Posit::from_bits(n, a[i] & msk);
+        let y = Posit::from_bits(n, b[i] & msk);
+        out[i] = if sub { x.sub(y) } else { x.add(y) }.to_bits();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Arch dispatch: one same-named shim per target, so the portable callers
+// above stay architecture-free. The `unsafe` blocks are sound because
+// `run_batch` is only reachable when `available()` confirmed the ISA.
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+fn div_q_rem(
+    n: u32,
+    num: &[i32; BLOCK],
+    den: &[i32; BLOCK],
+    q: &mut [i32; BLOCK],
+    rem: &mut [i32; BLOCK],
+    r: usize,
+) {
+    // Safety: dispatch is gated on `available()` ⇒ AVX2 present.
+    unsafe {
+        if n == 8 {
+            x86::div_q_rem_f32(num, den, q, rem, r);
+        } else {
+            x86::div_q_rem_f64(num, den, q, rem, r);
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn mullo(x: &[i32; BLOCK], y: &[i32; BLOCK], out: &mut [i32; BLOCK], r: usize) {
+    // Safety: dispatch is gated on `available()` ⇒ AVX2 present.
+    unsafe { x86::mullo(x, y, out, r) }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn add_sub_block(
+    n: u32,
+    sub: bool,
+    a: &[u64],
+    b: &[u64],
+    out: &mut [u64],
+    real_idx: &[u8; BLOCK],
+    r: usize,
+) {
+    // Safety: dispatch is gated on `available()` ⇒ AVX2 present.
+    unsafe { x86::add_sub_lanes(n, sub, a, b, out, real_idx, r) }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn div_q_rem(
+    n: u32,
+    num: &[i32; BLOCK],
+    den: &[i32; BLOCK],
+    q: &mut [i32; BLOCK],
+    rem: &mut [i32; BLOCK],
+    r: usize,
+) {
+    // Safety: dispatch is gated on `available()` ⇒ NEON present.
+    unsafe {
+        if n == 8 {
+            arm::div_q_rem_f32(num, den, q, rem, r);
+        } else {
+            arm::div_q_rem_f64(num, den, q, rem, r);
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn mullo(x: &[i32; BLOCK], y: &[i32; BLOCK], out: &mut [i32; BLOCK], r: usize) {
+    // Safety: dispatch is gated on `available()` ⇒ NEON present.
+    unsafe { arm::mullo(x, y, out, r) }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn add_sub_block(
+    n: u32,
+    sub: bool,
+    a: &[u64],
+    b: &[u64],
+    out: &mut [u64],
+    real_idx: &[u8; BLOCK],
+    r: usize,
+) {
+    // Safety: dispatch is gated on `available()` ⇒ NEON present.
+    unsafe { arm::add_sub_lanes(n, sub, a, b, out, real_idx, r) }
+}
+
+// Portable shims for other architectures: `available()` is always false
+// there, so these only exist to keep the module compiling; exact integer
+// forms, trivially bit-identical.
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn div_q_rem(
+    _n: u32,
+    num: &[i32; BLOCK],
+    den: &[i32; BLOCK],
+    q: &mut [i32; BLOCK],
+    rem: &mut [i32; BLOCK],
+    r: usize,
+) {
+    for t in 0..r {
+        q[t] = num[t] / den[t];
+        rem[t] = num[t] % den[t];
+    }
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn mullo(x: &[i32; BLOCK], y: &[i32; BLOCK], out: &mut [i32; BLOCK], r: usize) {
+    for t in 0..r {
+        out[t] = x[t] * y[t];
+    }
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn add_sub_block(
+    n: u32,
+    sub: bool,
+    a: &[u64],
+    b: &[u64],
+    out: &mut [u64],
+    real_idx: &[u8; BLOCK],
+    r: usize,
+) {
+    add_sub_scalar(n, sub, a, b, out, real_idx, r);
+}
+
+/// AVX2 kernels. The loops step 8 (f32/mullo) or 4 (f64) lanes and may
+/// read/write up to one full vector past `r` — always inside the
+/// `BLOCK`-sized buffers (`r` ≤ 64, steps divide 64), over dead lanes the
+/// callers initialized to defined values.
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    use super::BLOCK;
+
+    /// 8-wide P8 division: `q = ⌊num/den⌋`, `rem = num − q·den` via f32
+    /// division (exact for num < 2^14, den < 2^6) plus a branch-free ±1
+    /// remainder fix-up.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn div_q_rem_f32(
+        num: &[i32; BLOCK],
+        den: &[i32; BLOCK],
+        q: &mut [i32; BLOCK],
+        rem: &mut [i32; BLOCK],
+        r: usize,
+    ) {
+        let mut t = 0;
+        while t < r {
+            unsafe {
+                let vn = _mm256_loadu_si256(num.as_ptr().add(t) as *const __m256i);
+                let vd = _mm256_loadu_si256(den.as_ptr().add(t) as *const __m256i);
+                let fq = _mm256_div_ps(_mm256_cvtepi32_ps(vn), _mm256_cvtepi32_ps(vd));
+                let mut vq = _mm256_cvttps_epi32(fq);
+                let mut vr = _mm256_sub_epi32(vn, _mm256_mullo_epi32(vq, vd));
+                // rem < 0 → q -= 1, rem += den (cmp mask is −1 per lane)
+                let neg = _mm256_cmpgt_epi32(_mm256_setzero_si256(), vr);
+                vq = _mm256_add_epi32(vq, neg);
+                vr = _mm256_add_epi32(vr, _mm256_and_si256(neg, vd));
+                // rem ≥ den → q += 1, rem -= den
+                let lt = _mm256_cmpgt_epi32(vd, vr); // den > rem
+                let over = _mm256_andnot_si256(lt, _mm256_set1_epi32(-1));
+                vq = _mm256_sub_epi32(vq, over);
+                vr = _mm256_sub_epi32(vr, _mm256_and_si256(over, vd));
+                _mm256_storeu_si256(q.as_mut_ptr().add(t) as *mut __m256i, vq);
+                _mm256_storeu_si256(rem.as_mut_ptr().add(t) as *mut __m256i, vr);
+            }
+            t += 8;
+        }
+    }
+
+    /// 4-wide P16 division: same shape through f64 lanes (exact for
+    /// num < 2^29, den < 2^13); `cvtepi32_pd`/`cvttpd_epi32` move between
+    /// the 128-bit integer and 256-bit double registers.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn div_q_rem_f64(
+        num: &[i32; BLOCK],
+        den: &[i32; BLOCK],
+        q: &mut [i32; BLOCK],
+        rem: &mut [i32; BLOCK],
+        r: usize,
+    ) {
+        let mut t = 0;
+        while t < r {
+            unsafe {
+                let vn = _mm_loadu_si128(num.as_ptr().add(t) as *const __m128i);
+                let vd = _mm_loadu_si128(den.as_ptr().add(t) as *const __m128i);
+                let fq = _mm256_div_pd(_mm256_cvtepi32_pd(vn), _mm256_cvtepi32_pd(vd));
+                let mut vq = _mm256_cvttpd_epi32(fq);
+                let mut vr = _mm_sub_epi32(vn, _mm_mullo_epi32(vq, vd));
+                let neg = _mm_cmpgt_epi32(_mm_setzero_si128(), vr);
+                vq = _mm_add_epi32(vq, neg);
+                vr = _mm_add_epi32(vr, _mm_and_si128(neg, vd));
+                let lt = _mm_cmpgt_epi32(vd, vr);
+                let over = _mm_andnot_si128(lt, _mm_set1_epi32(-1));
+                vq = _mm_sub_epi32(vq, over);
+                vr = _mm_sub_epi32(vr, _mm_and_si128(over, vd));
+                _mm_storeu_si128(q.as_mut_ptr().add(t) as *mut __m128i, vq);
+                _mm_storeu_si128(rem.as_mut_ptr().add(t) as *mut __m128i, vr);
+            }
+            t += 4;
+        }
+    }
+
+    /// 8-wide significand product (products fit `i32` at both widths).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn mullo(
+        x: &[i32; BLOCK],
+        y: &[i32; BLOCK],
+        out: &mut [i32; BLOCK],
+        r: usize,
+    ) {
+        let mut t = 0;
+        while t < r {
+            unsafe {
+                let vx = _mm256_loadu_si256(x.as_ptr().add(t) as *const __m256i);
+                let vy = _mm256_loadu_si256(y.as_ptr().add(t) as *const __m256i);
+                _mm256_storeu_si256(
+                    out.as_mut_ptr().add(t) as *mut __m256i,
+                    _mm256_mullo_epi32(vx, vy),
+                );
+            }
+            t += 8;
+        }
+    }
+
+    /// Add/sub real lanes inside the AVX2 target-feature region.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn add_sub_lanes(
+        n: u32,
+        sub: bool,
+        a: &[u64],
+        b: &[u64],
+        out: &mut [u64],
+        real_idx: &[u8; BLOCK],
+        r: usize,
+    ) {
+        super::add_sub_scalar(n, sub, a, b, out, real_idx, r);
+    }
+}
+
+/// NEON kernels: 4-wide f32 for P8 (`vdivq_f32` is correctly rounded on
+/// aarch64), scalar f64 for P16 (no 4-wide i32↔f64 path worth the
+/// shuffle), 4-wide `vmulq_s32` products.
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use std::arch::aarch64::*;
+
+    use super::BLOCK;
+
+    /// 4-wide P8 division via f32 lanes plus the ±1 remainder fix-up.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn div_q_rem_f32(
+        num: &[i32; BLOCK],
+        den: &[i32; BLOCK],
+        q: &mut [i32; BLOCK],
+        rem: &mut [i32; BLOCK],
+        r: usize,
+    ) {
+        let mut t = 0;
+        while t < r {
+            unsafe {
+                let vn = vld1q_s32(num.as_ptr().add(t));
+                let vd = vld1q_s32(den.as_ptr().add(t));
+                let fq = vdivq_f32(vcvtq_f32_s32(vn), vcvtq_f32_s32(vd));
+                let mut vq = vcvtq_s32_f32(fq); // truncates toward zero
+                let mut vr = vsubq_s32(vn, vmulq_s32(vq, vd));
+                // rem < 0 → q -= 1, rem += den (cmp mask is −1 per lane)
+                let neg = vreinterpretq_s32_u32(vcltq_s32(vr, vdupq_n_s32(0)));
+                vq = vaddq_s32(vq, neg);
+                vr = vaddq_s32(vr, vandq_s32(neg, vd));
+                // rem ≥ den → q += 1, rem -= den
+                let over = vreinterpretq_s32_u32(vcgeq_s32(vr, vd));
+                vq = vsubq_s32(vq, over);
+                vr = vsubq_s32(vr, vandq_s32(over, vd));
+                vst1q_s32(q.as_mut_ptr().add(t), vq);
+                vst1q_s32(rem.as_mut_ptr().add(t), vr);
+            }
+            t += 4;
+        }
+    }
+
+    /// P16 division: scalar f64 per lane inside the NEON region (the
+    /// i32→f64 widening shuffle costs more than it saves at 2 lanes per
+    /// register); same float-divide-plus-fix-up contract as the x86 f64
+    /// kernel.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn div_q_rem_f64(
+        num: &[i32; BLOCK],
+        den: &[i32; BLOCK],
+        q: &mut [i32; BLOCK],
+        rem: &mut [i32; BLOCK],
+        r: usize,
+    ) {
+        for t in 0..r {
+            let (n, d) = (num[t], den[t]);
+            let mut qq = (n as f64 / d as f64) as i32;
+            let mut rr = n - qq * d;
+            if rr < 0 {
+                qq -= 1;
+                rr += d;
+            }
+            if rr >= d {
+                qq += 1;
+                rr -= d;
+            }
+            q[t] = qq;
+            rem[t] = rr;
+        }
+    }
+
+    /// 4-wide significand product.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn mullo(
+        x: &[i32; BLOCK],
+        y: &[i32; BLOCK],
+        out: &mut [i32; BLOCK],
+        r: usize,
+    ) {
+        let mut t = 0;
+        while t < r {
+            unsafe {
+                let vx = vld1q_s32(x.as_ptr().add(t));
+                let vy = vld1q_s32(y.as_ptr().add(t));
+                vst1q_s32(out.as_mut_ptr().add(t), vmulq_s32(vx, vy));
+            }
+            t += 4;
+        }
+    }
+
+    /// Add/sub real lanes inside the NEON target-feature region.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn add_sub_lanes(
+        n: u32,
+        sub: bool,
+        a: &[u64],
+        b: &[u64],
+        out: &mut [u64],
+        real_idx: &[u8; BLOCK],
+        r: usize,
+    ) {
+        super::add_sub_scalar(n, sub, a, b, out, real_idx, r);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::division::fastpath::scalar_bits;
+    use crate::testkit::Rng;
+
+    const KINDS: [Kind; 4] = [Kind::Div, Kind::Mul, Kind::Add, Kind::Sub];
+
+    #[test]
+    fn supports_is_div_mul_add_sub_at_8_and_16() {
+        for n in [8u32, 16] {
+            for kind in KINDS {
+                assert!(supports(n, kind), "n={n} {kind:?}");
+            }
+            assert!(!supports(n, Kind::Sqrt));
+            assert!(!supports(n, Kind::MulAdd));
+        }
+        for n in [4u32, 10, 32, 64] {
+            assert!(!supports(n, Kind::Div), "n={n}");
+        }
+    }
+
+    #[test]
+    fn available_implies_feature_and_isa() {
+        // Without the cargo feature this must be constant false; with it,
+        // whatever detection said is cached and stable across calls.
+        let first = available();
+        if cfg!(not(feature = "vsimd")) {
+            assert!(!first);
+        }
+        assert_eq!(available(), first);
+    }
+
+    /// Random lanes with specials sprinkled in, vector vs scalar kernel,
+    /// at lengths covering dense words, partial blocks and ragged tails.
+    /// Skips (passes vacuously) when the CPU lacks the ISA.
+    #[test]
+    fn vector_batch_matches_scalar_kernel() {
+        if !available() {
+            return;
+        }
+        let mut rng = Rng::seeded(0x7EC7);
+        for n in [8u32, 16] {
+            for kind in KINDS {
+                for len in [1usize, 3, 7, 16, 17, 63, 64, 65, 257] {
+                    let make_lane = |rng: &mut Rng, sprinkle: bool| -> Vec<u64> {
+                        (0..len)
+                            .map(|i| {
+                                if sprinkle && i % 5 == 0 {
+                                    [0u64, 1 << (n - 1)][i / 5 % 2]
+                                } else {
+                                    rng.next_u64() & mask(n)
+                                }
+                            })
+                            .collect()
+                    };
+                    for sprinkle in [false, true] {
+                        let a = make_lane(&mut rng, sprinkle);
+                        let b = make_lane(&mut rng, sprinkle);
+                        let mut out = vec![0u64; len];
+                        run_batch(n, kind, &a, &b, &[], &mut out);
+                        for i in 0..len {
+                            assert_eq!(
+                                out[i],
+                                scalar_bits(n, kind, a[i], b[i], 0),
+                                "{kind:?} n={n} len={len} i={i} sprinkle={sprinkle}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Exhaustive Posit8 pattern pairs through the vector kernels.
+    /// Skips (passes vacuously) when the CPU lacks the ISA.
+    #[test]
+    fn vector_exhaustive_p8_binary_ops() {
+        if !available() {
+            return;
+        }
+        for kind in KINDS {
+            let b: Vec<u64> = (0..=mask(8)).collect();
+            let mut out = vec![0u64; b.len()];
+            for a in 0..=mask(8) {
+                let av = vec![a; b.len()];
+                run_batch(8, kind, &av, &b, &[], &mut out);
+                for (i, &got) in out.iter().enumerate() {
+                    assert_eq!(
+                        got,
+                        scalar_bits(8, kind, a, b[i], 0),
+                        "{kind:?} {a:#04x} {:#04x}",
+                        b[i]
+                    );
+                }
+            }
+        }
+    }
+
+    /// P16 seeded sweep pinning the f64 division kernel's fix-up range
+    /// (every decodable num/den pair must produce the exact floor and
+    /// remainder through whatever float path the target uses).
+    #[test]
+    fn vector_p16_division_quotients_are_exact() {
+        if !available() {
+            return;
+        }
+        let mut rng = Rng::seeded(0x16D1);
+        let f = frac_bits(16);
+        for _ in 0..200_000 {
+            let sa = (1u64 << f) | (rng.next_u64() & mask(f));
+            let sb = (1u64 << f) | (rng.next_u64() & mask(f));
+            let mut num = [0i32; BLOCK];
+            let mut den = [1i32; BLOCK];
+            num[0] = (sa << 16) as i32;
+            den[0] = sb as i32;
+            let mut q = [0i32; BLOCK];
+            let mut rem = [0i32; BLOCK];
+            div_q_rem(16, &num, &den, &mut q, &mut rem, 1);
+            assert_eq!(q[0] as u64, (sa << 16) / sb, "sa={sa:#x} sb={sb:#x}");
+            assert_eq!(rem[0] as u64, (sa << 16) % sb, "sa={sa:#x} sb={sb:#x}");
+        }
+    }
+}

@@ -35,14 +35,17 @@
 //!   exhaustively at Posit8 and by seeded sweeps at wider widths, and
 //!   requests opt in per call via [`unit::Accuracy::Ulp`] — `Exact`
 //!   traffic never touches it. Inside the Fast tier, batches
-//!   dispatch ([`unit::FastPath`], **table > SWAR > scalar-fast** by
-//!   width and batch length) over a vectorized serving layer:
-//!   construction-verified exhaustive Posit8 operation tables
-//!   ([`division::p8_tables`], one constant-time lookup per lane) and
-//!   SWAR lane-packed kernels ([`division::simd`], 8×Posit8 / 4×Posit16
-//!   lanes per `u64` word with a branch-free packed special pre-pass and
-//!   a structure-of-arrays mid-section). (The old division-only
-//!   `Divider` survives as a deprecated wrapper.)
+//!   dispatch ([`unit::FastPath`], **table > vector > SWAR >
+//!   scalar-fast** by width and batch length) over a vectorized serving
+//!   layer: construction-verified lookup tables (exhaustive Posit8
+//!   whole-op tables in [`division::p8_tables`], Posit16 div/sqrt seed
+//!   tables in [`division::p16_tables`]), explicit AVX2/NEON vector
+//!   kernels ([`division::vector`], runtime-detected behind the
+//!   default-off `vsimd` feature) and SWAR lane-packed kernels
+//!   ([`division::simd`], 16×Posit8 / 8×Posit16 lanes per `u128` word
+//!   with a branch-free packed special pre-pass and a
+//!   structure-of-arrays mid-section). (The old division-only `Divider`
+//!   survives as a deprecated wrapper.)
 //! * [`quire`] — the posit-standard exact accumulator: a
 //!   width-parameterized fixed-point register (128/512/2048 bits for
 //!   Posit8/16/32) that adds posit products with **no intermediate

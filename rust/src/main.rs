@@ -11,7 +11,7 @@ use posit_div::division::{golden, Algorithm};
 use posit_div::hardware::{report, Mode, TSMC28};
 use posit_div::posit::Posit;
 use posit_div::service::{Server, ServiceClient, ShardConfig};
-use posit_div::unit::{Accuracy, ExecTier, Op, Unit};
+use posit_div::unit::{Accuracy, ExecTier, FastPath, Op, Unit};
 use posit_div::workload::{self, OpMix, OpenLoop, Workload};
 use posit_div::PositError;
 
@@ -21,7 +21,8 @@ subcommands:
   synth [--csv] [--n 16|32|64] [--mode comb|pipe]   synthesis model (Figs. 4-9)
   table2                                            iteration/latency table
   divide <x> <d> [--n N] [--alg NAME] [--bits] [--tier fast|datapath|approx|auto]
-                                                    one division, all metadata
+         [--path auto|table|vector|simd|scalar]     one division, all metadata
+                                                    (--path pins the fast kernel)
   sqrt <v> [--n N] [--bits] [--tier T]              one square root, all metadata
   verify [--n N] [--cases N]                        engines + fast tier vs golden cross-check
   serve [--n N] [--backend native|pjrt] [--requests N] [--batch N] [--threads N]
@@ -40,7 +41,8 @@ subcommands:
                                                     (arrivals/s); --shutdown stops it
   engines                                           list algorithm variants
   bench <suite> [--json P] [--baseline P] [--write-baseline] [--quick|--full]
-        [--threshold PCT] [--advisory] [--tier T]   run a bench suite + regression gate
+        [--threshold PCT] [--advisory] [--tier T] [--path P]
+                                                    run a bench suite + regression gate
   bench list                                        list bench suites
   bench validate <report.json>                      schema-check a bench report
   bench compare <a.json> <b.json> [--threshold PCT] [--advisory]
@@ -60,6 +62,19 @@ fn tier_flag(args: &Args) -> ExecTier {
         None => ExecTier::Auto,
         Some(s) => ExecTier::parse(s).unwrap_or_else(|| {
             eprintln!("invalid --tier {s:?} (expected fast|datapath|approx|auto)");
+            std::process::exit(2);
+        }),
+    }
+}
+
+/// `--path auto|table|vector|simd|scalar` (default auto): pin the
+/// fast-tier batch kernel ([`Unit::with_exec`] validates the pin, so an
+/// unsupported combination is a typed refusal, not a silent fallback).
+fn path_flag(args: &Args) -> FastPath {
+    match args.flag("path") {
+        None => FastPath::Auto,
+        Some(s) => FastPath::parse(s).unwrap_or_else(|| {
+            eprintln!("invalid --path {s:?} (expected auto|table|vector|simd|scalar)");
             std::process::exit(2);
         }),
     }
@@ -162,22 +177,43 @@ fn cmd_divide(args: &Args) {
     let x = parse_operand(args, n, &args.positional[0]);
     let d = parse_operand(args, n, &args.positional[1]);
     let tier = tier_flag(args);
-    let unit = Unit::with_tier(n, Op::Div { alg }, tier).unwrap_or_else(|e| {
+    let path = path_flag(args);
+    let unit = Unit::with_exec(n, Op::Div { alg }, tier, path).unwrap_or_else(|e| {
         eprintln!("{e}");
         std::process::exit(2);
     });
+    // a pinned kernel serves through the batch/bit-level entry point (the
+    // metadata-bearing scalar path never consults the fast-path layer)
     let div = unit.run(&[x, d]).expect("operands constructed at the context width");
-    println!(
-        "Posit{n} {} / {} = {}  (bits {:#x}, {} iterations, {} cycles, alg {}, tier {})",
-        x,
-        d,
-        div.result,
-        div.result.to_bits(),
-        div.iterations,
-        div.cycles,
-        alg.label(),
-        unit.scalar_tier()
-    );
+    if path == FastPath::Auto {
+        println!(
+            "Posit{n} {} / {} = {}  (bits {:#x}, {} iterations, {} cycles, alg {}, tier {})",
+            x,
+            d,
+            div.result,
+            div.result.to_bits(),
+            div.iterations,
+            div.cycles,
+            alg.label(),
+            unit.scalar_tier()
+        );
+    } else {
+        // the batch entry point is the one that honors a pinned kernel
+        let mut out = [0u64; 1];
+        unit.run_batch(&[x.to_bits()], &[d.to_bits()], &[], &mut out)
+            .expect("1-lane batch with matched lanes");
+        let bits = out[0];
+        assert_eq!(bits, div.result.to_bits(), "pinned kernel diverged from the scalar tier");
+        println!(
+            "Posit{n} {} / {} = {}  (bits {bits:#x}, alg {}, tier {}, path {})",
+            x,
+            d,
+            Posit::from_bits(n, bits),
+            alg.label(),
+            unit.batch_tier(),
+            unit.resolve_fast_path(1).map_or("-", FastPath::name)
+        );
+    }
 }
 
 fn cmd_sqrt(args: &Args) {
@@ -242,9 +278,9 @@ fn cmd_verify(args: &Args) {
 fn cmd_bench(args: &Args) {
     // Every flag the bench harness understands; used to detect a suite
     // name swallowed by the greedy flag grammar.
-    const BENCH_FLAGS: [&str; 9] = [
+    const BENCH_FLAGS: [&str; 10] = [
         "quick", "full", "advisory", "write-baseline", "json", "baseline", "profile", "threshold",
-        "tier",
+        "tier", "path",
     ];
     let code = match args.positional.first().map(String::as_str) {
         None => {

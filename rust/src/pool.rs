@@ -232,6 +232,22 @@ pub fn chunk_size(per_item_ns: f64, len: usize, threads: usize) -> usize {
     fair.max(min_items)
 }
 
+/// Round `chunk` up to a multiple of `block`, so chunk boundaries land on
+/// kernel block boundaries. The block kernels (SWAR, explicit vector)
+/// process [`crate::division::fastpath::LANE_BLOCK`] lanes per block; a
+/// chunk size that is not a multiple of the block leaves every chunk with
+/// a partially-filled trailing block — up to `threads - 1` extra block
+/// passes per batch. Chunks already covering the whole batch (`chunk >=
+/// len`) are returned unchanged: the caller runs those inline and the
+/// kernel's own tail handling applies once.
+pub fn align_chunk(chunk: usize, len: usize, block: usize) -> usize {
+    if block < 2 || chunk >= len {
+        chunk
+    } else {
+        chunk.div_ceil(block) * block
+    }
+}
+
 /// Default worker count for the shared pool: the machine's available
 /// parallelism, capped at 16 (the batch kernels saturate memory bandwidth
 /// long before that).
@@ -383,6 +399,21 @@ mod tests {
         assert!(chunk_size(1e9, 0, 4) >= 1);
         // the even split is exact when it dominates
         assert_eq!(chunk_size(1e6, 1001, 4), 251);
+    }
+
+    #[test]
+    fn align_chunk_rounds_to_block_multiples() {
+        // mid-batch chunks round up to the block
+        assert_eq!(align_chunk(100, 10_000, 64), 128);
+        assert_eq!(align_chunk(64, 10_000, 64), 64);
+        assert_eq!(align_chunk(65, 10_000, 64), 128);
+        assert_eq!(align_chunk(1, 10_000, 64), 64);
+        // chunks covering the whole batch are untouched
+        assert_eq!(align_chunk(10_000, 10_000, 64), 10_000);
+        assert_eq!(align_chunk(500, 300, 64), 500);
+        // degenerate block sizes are a no-op
+        assert_eq!(align_chunk(100, 10_000, 1), 100);
+        assert_eq!(align_chunk(100, 10_000, 0), 100);
     }
 
     #[test]

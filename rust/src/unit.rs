@@ -35,12 +35,15 @@
 //! to the Datapath whenever cycle metadata is requested ([`Unit::run`]).
 //!
 //! Inside the Fast tier, batches dispatch over a vectorized serving
-//! layer ([`FastPath`]): exhaustive Posit8 operation tables
-//! ([`crate::division::p8_tables`], one constant-time lookup per lane)
-//! and SWAR lane-packed kernels ([`crate::division::simd`], 8×Posit8 /
-//! 4×Posit16 lanes per `u64` word). `Auto` resolves **table > SWAR >
-//! scalar-fast** by width and batch length; [`Unit::with_exec`] forces
-//! one kernel, and every choice is bit-identical.
+//! layer ([`FastPath`]): construction-verified lookup tables
+//! ([`crate::division::p8_tables`] whole-op at Posit8,
+//! [`crate::division::p16_tables`] div/sqrt seeds at Posit16), explicit
+//! AVX2/NEON vector kernels ([`crate::division::vector`], runtime-detected
+//! behind the `vsimd` feature) and SWAR lane-packed kernels
+//! ([`crate::division::simd`], 16×Posit8 / 8×Posit16 lanes per `u128`
+//! word). `Auto` resolves **table > vector > SWAR > scalar-fast** by
+//! width and batch length; [`Unit::with_exec`] forces one kernel, and
+//! every choice is bit-identical.
 
 use std::fmt;
 
@@ -761,11 +764,13 @@ impl Unit {
 
     /// Build a context with both the execution tier and the fast-tier
     /// batch kernel pinned. `path` must be able to serve `(n, op)`
-    /// ([`FastPath::Table`] needs n = 8 and a tabulated op,
-    /// [`FastPath::Simd`] needs n ∈ {8, 16}), and a Datapath-pinned unit
-    /// never consults the fast path, so forcing one there is rejected
-    /// too. Either mismatch is a typed
-    /// [`PositError::UnsupportedFastPath`], not a silent fallback —
+    /// ([`FastPath::Table`] needs a tabulated `(n, op)` — any Posit8 op
+    /// but `MulAdd`, or Posit16 div/sqrt; [`FastPath::Vector`] needs
+    /// n ∈ {8, 16}, a non-`Sqrt`/`MulAdd` op *and* a runtime-detected
+    /// vector ISA under the `vsimd` feature; [`FastPath::Simd`] needs
+    /// n ∈ {8, 16}), and a Datapath-pinned unit never consults the fast
+    /// path, so forcing one there is rejected too. Either mismatch is a
+    /// typed [`PositError::UnsupportedFastPath`], not a silent fallback —
     /// benches and tests that force a kernel must never measure a
     /// different one.
     pub fn with_exec(n: u32, op: Op, tier: ExecTier, path: FastPath) -> Result<Unit> {
@@ -777,10 +782,11 @@ impl Unit {
         let approx_pinned = tier == ExecTier::Approx && path != FastPath::Auto;
         let datapath_pinned = tier == ExecTier::Datapath && path != FastPath::Auto;
         // The reductions never run through a FastKernel (their Fast tier
-        // is the in-register quire), so a forced table/SWAR kernel has
-        // nothing to serve them — reject it rather than silently ignore.
-        let reduction_forced =
-            op.is_reduction() && matches!(path, FastPath::Table | FastPath::Simd);
+        // is the in-register quire), so a forced table/vector/SWAR kernel
+        // has nothing to serve them — reject it rather than silently
+        // ignore.
+        let reduction_forced = op.is_reduction()
+            && matches!(path, FastPath::Table | FastPath::Vector | FastPath::Simd);
         if approx_pinned
             || datapath_pinned
             || reduction_forced
@@ -879,8 +885,8 @@ impl Unit {
     }
 
     /// The concrete Fast kernel that serves a batch of `len` lanes
-    /// (table, SWAR or scalar-fast; never `Auto`), or `None` when the
-    /// unit's batches run on the Datapath or Approx tier (neither
+    /// (table, vector, SWAR or scalar-fast; never `Auto`), or `None` when
+    /// the unit's batches run on the Datapath or Approx tier (neither
     /// dispatches through the fast-path serving layer). This is what the
     /// coordinator's per-path metrics count.
     #[inline]
@@ -1254,7 +1260,14 @@ impl Unit {
             };
         }
         match self.fast.resolve(len) {
-            FastPath::Table => 3.0,
+            // Posit8 whole-op lookup vs the Posit16 seed-table kernels
+            // (one table read + a fix-up division step per lane)
+            FastPath::Table if self.n == 8 => 3.0,
+            FastPath::Table => 6.0,
+            FastPath::Vector => match self.op {
+                Op::Div { .. } => 10.0,
+                _ => 6.0,
+            },
             FastPath::Simd => match self.op {
                 Op::Div { .. } => 16.0,
                 Op::Sqrt => 30.0,
@@ -1275,10 +1288,21 @@ impl Unit {
     /// every chunk carries roughly [`crate::pool::TARGET_CHUNK_NS`] of
     /// work on this unit's `(op, width, tier)` — small batches therefore
     /// collapse to fewer chunks (down to one, which runs inline) instead
-    /// of paying pool fan-out for microscopic pieces. Public so tests and
-    /// capacity planning can inspect the policy.
+    /// of paying pool fan-out for microscopic pieces. When the batch
+    /// resolves to a block kernel (SWAR or explicit vector), the chunk is
+    /// rounded up to the kernel's [`fastpath::LANE_BLOCK`] so chunk
+    /// boundaries land on block boundaries — a misaligned chunk would
+    /// leave every worker a partially-filled trailing block. Public so
+    /// tests and capacity planning can inspect the policy.
     pub fn parallel_chunk(&self, len: usize, threads: usize) -> usize {
-        crate::pool::chunk_size(self.batch_lane_ns(len), len, threads)
+        let chunk = crate::pool::chunk_size(self.batch_lane_ns(len), len, threads);
+        if self.batch_tier() == ExecTier::Fast
+            && matches!(self.fast.resolve(len), FastPath::Vector | FastPath::Simd)
+        {
+            crate::pool::align_chunk(chunk, len, fastpath::LANE_BLOCK)
+        } else {
+            chunk
+        }
     }
 
     /// [`Unit::run_batch`] split into contiguous chunks (sized by the
@@ -1637,19 +1661,32 @@ mod tests {
 
     #[test]
     fn auto_fast_path_dispatch_order() {
-        // table > SWAR > scalar-fast, by width and batch length
+        // table > vector > SWAR > scalar-fast, by width and batch length
         let div8 = Unit::new(8, Op::DIV).unwrap();
         assert_eq!(div8.fast_path(), FastPath::Auto);
         assert_eq!(div8.resolve_fast_path(256), Some(FastPath::Table));
         assert_eq!(div8.resolve_fast_path(2), Some(FastPath::Scalar));
-        // ternary op has no table: SWAR is next in line
+        // ternary op has no table or vector kernel: SWAR is next in line
         let fma8 = Unit::new(8, Op::MulAdd).unwrap();
         assert_eq!(fma8.resolve_fast_path(256), Some(FastPath::Simd));
         assert_eq!(fma8.resolve_fast_path(4), Some(FastPath::Scalar));
-        // Posit16: SWAR above the lane threshold, scalar below
+        // Posit16 division has a seed table: constant-time above the
+        // (small) table threshold, scalar below
         let div16 = Unit::new(16, Op::DIV).unwrap();
-        assert_eq!(div16.resolve_fast_path(256), Some(FastPath::Simd));
-        assert_eq!(div16.resolve_fast_path(8), Some(FastPath::Scalar));
+        assert_eq!(div16.resolve_fast_path(256), Some(FastPath::Table));
+        assert_eq!(div16.resolve_fast_path(8), Some(FastPath::Table));
+        assert_eq!(div16.resolve_fast_path(2), Some(FastPath::Scalar));
+        // Posit16 mul has no table: the explicit vector kernel serves it
+        // when the ISA is detected, SWAR otherwise
+        let mul16 = Unit::new(16, Op::Mul).unwrap();
+        let big = if crate::division::vector::available() {
+            FastPath::Vector
+        } else {
+            FastPath::Simd
+        };
+        assert_eq!(mul16.resolve_fast_path(256), Some(big));
+        assert_eq!(mul16.resolve_fast_path(fastpath::SIMD_MIN_LANES), Some(FastPath::Simd));
+        assert_eq!(mul16.resolve_fast_path(8), Some(FastPath::Scalar));
         // wide formats stay scalar at any length
         let div32 = Unit::new(32, Op::DIV).unwrap();
         assert_eq!(div32.resolve_fast_path(1 << 20), Some(FastPath::Scalar));
@@ -1660,9 +1697,10 @@ mod tests {
 
     #[test]
     fn with_exec_rejects_unsupported_paths() {
+        // Posit16 mul has no table (only div/sqrt carry seed tables)
         assert_eq!(
-            Unit::with_exec(16, Op::DIV, ExecTier::Fast, FastPath::Table).err(),
-            Some(PositError::UnsupportedFastPath { path: "table", op: "div", n: 16 })
+            Unit::with_exec(16, Op::Mul, ExecTier::Fast, FastPath::Table).err(),
+            Some(PositError::UnsupportedFastPath { path: "table", op: "mul", n: 16 })
         );
         assert_eq!(
             Unit::with_exec(8, Op::MulAdd, ExecTier::Fast, FastPath::Table).err(),
@@ -1672,6 +1710,20 @@ mod tests {
             Unit::with_exec(32, Op::DIV, ExecTier::Fast, FastPath::Simd).err(),
             Some(PositError::UnsupportedFastPath { path: "simd", op: "div", n: 32 })
         );
+        // the vector kernels never serve sqrt or wide formats, detected
+        // ISA or not
+        assert_eq!(
+            Unit::with_exec(16, Op::Sqrt, ExecTier::Fast, FastPath::Vector).err(),
+            Some(PositError::UnsupportedFastPath { path: "vector", op: "sqrt", n: 16 })
+        );
+        assert_eq!(
+            Unit::with_exec(32, Op::DIV, ExecTier::Fast, FastPath::Vector).err(),
+            Some(PositError::UnsupportedFastPath { path: "vector", op: "div", n: 32 })
+        );
+        // forcing Vector at a supported (n, op) succeeds exactly when the
+        // ISA is detected under the `vsimd` feature
+        let forced_vec = Unit::with_exec(16, Op::DIV, ExecTier::Fast, FastPath::Vector);
+        assert_eq!(forced_vec.is_ok(), crate::division::vector::available());
         // a Datapath-pinned unit never consults the fast path: forcing
         // one is rejected instead of silently serving from the datapath
         assert_eq!(
@@ -1724,7 +1776,11 @@ mod tests {
                     Unit::with_exec(n, op, ExecTier::Fast, FastPath::Scalar).unwrap();
                 let mut want = vec![0u64; a.len()];
                 scalar.run_batch(&a, lb, lc, &mut want).unwrap();
-                for path in [FastPath::Table, FastPath::Simd, FastPath::Auto] {
+                for path in
+                    [FastPath::Table, FastPath::Vector, FastPath::Simd, FastPath::Auto]
+                {
+                    // unsupported (n, op, path) combinations — including
+                    // Vector on hosts without a detected ISA — skip
                     let Ok(unit) = Unit::with_exec(n, op, ExecTier::Fast, path) else {
                         continue;
                     };
@@ -1750,6 +1806,13 @@ mod tests {
         assert!(chunk >= 10_000 / 8, "never smaller than the even split");
         // huge batches reach the even split on any tier
         assert_eq!(fast.parallel_chunk(8_000_000, 8), 1_000_000);
+        // block-kernel batches (SWAR / vector) round the chunk up to the
+        // 64-lane block so chunk boundaries land on block boundaries:
+        // the even split 1_000_000/8 = 125_000 is not a block multiple
+        let mul16 = Unit::with_tier(16, Op::Mul, ExecTier::Fast).unwrap();
+        let chunk = mul16.parallel_chunk(1_000_000, 8);
+        assert_eq!(chunk, 125_056, "even split 125_000 rounds up to the next block");
+        assert_eq!(chunk % fastpath::LANE_BLOCK, 0);
         // and the parallel entry point stays bit-identical either way
         let mut rng = Rng::seeded(0xC43);
         let a: Vec<u64> = (0..30_000).map(|_| rng.next_u64() & mask(16)).collect();
@@ -2001,6 +2064,10 @@ mod tests {
         assert_eq!(
             Unit::with_exec(16, Op::FusedSum, ExecTier::Fast, FastPath::Simd).err(),
             Some(PositError::UnsupportedFastPath { path: "simd", op: "fsum", n: 16 })
+        );
+        assert_eq!(
+            Unit::with_exec(16, Op::Dot, ExecTier::Fast, FastPath::Vector).err(),
+            Some(PositError::UnsupportedFastPath { path: "vector", op: "dot", n: 16 })
         );
         assert_eq!(dot.resolve_fast_path(1 << 12), Some(FastPath::Scalar));
         // scalar run: the single-element reduction with flat metadata

@@ -14,6 +14,9 @@
 //! so the serving datapaths are gated on every push. The **table-path**
 //! sweep below runs un-ignored: a constant-time lookup per case makes
 //! the full 65k-pair space per op cheap enough for tier-1. The
+//! **vector-path** sweep (explicit AVX2/NEON kernels behind the `vsimd`
+//! feature) runs un-ignored as well, skipping gracefully on hosts where
+//! `Unit::with_exec(.., FastPath::Vector)` is a typed refusal. The
 //! **quire-dot** sweep also runs un-ignored: every two-term Posit8 dot
 //! is a couple of 128-bit adds per tier, well inside the tier-1 budget.
 //! The **approx-tier** sweep runs un-ignored too: it is the machine
@@ -71,6 +74,45 @@ fn p8_table_path_matches_exact_references_on_all_pattern_pairs() {
     }
     // and the ternary op correctly has no table
     assert!(Unit::with_exec(n, Op::MulAdd, ExecTier::Fast, FastPath::Table).is_err());
+}
+
+/// Exhaustive Posit8 **vector-path** gate — runs un-`#[ignore]`d in
+/// tier-1: all 256×256 pattern pairs per binary op through
+/// `Unit::run_batch` with the explicit AVX2/NEON kernel forced
+/// (`FastPath::Vector`), re-checking each result against the exact
+/// references. On hosts without the `vsimd` feature or a detected
+/// vector ISA, `Unit::with_exec` refuses with a typed error and the
+/// sweep skips gracefully — the gate then proves only the refusal
+/// shape, never a wrong bit.
+#[test]
+fn p8_vector_path_matches_exact_references_on_all_pattern_pairs() {
+    let n = 8;
+    let p = |bits: u64| Posit::from_bits(n, bits);
+    let bs: Vec<u64> = (0..=mask(n)).collect();
+    let mut out = vec![0u64; bs.len()];
+    for op in [Op::DIV, Op::Mul, Op::Add, Op::Sub] {
+        let Ok(unit) = Unit::with_exec(n, op, ExecTier::Fast, FastPath::Vector) else {
+            continue; // no vsimd feature / no detected vector ISA
+        };
+        for a in 0..=mask(n) {
+            let avec = vec![a; bs.len()];
+            unit.run_batch(&avec, &bs, &[], &mut out).expect("equal lanes");
+            for (i, &got) in out.iter().enumerate() {
+                let b = bs[i];
+                let want = match op {
+                    Op::Div { .. } => golden::divide(p(a), p(b)).result.to_bits(),
+                    Op::Mul => p(a).mul(p(b)).to_bits(),
+                    Op::Add => p(a).add(p(b)).to_bits(),
+                    _ => p(a).sub(p(b)).to_bits(),
+                };
+                assert_eq!(got, want, "{op} vector path: {a:#04x}, {b:#04x}");
+            }
+        }
+    }
+    // sqrt and mul_add are never vector-served — a typed refusal whether
+    // or not the host has a vector ISA
+    assert!(Unit::with_exec(n, Op::Sqrt, ExecTier::Fast, FastPath::Vector).is_err());
+    assert!(Unit::with_exec(n, Op::MulAdd, ExecTier::Fast, FastPath::Vector).is_err());
 }
 
 /// Exhaustive Posit8 **quire-dot** gate — runs un-`#[ignore]`d in

@@ -214,8 +214,58 @@ fn swar_path_matches_scalar_fast_and_datapath_for_every_op() {
     }
 }
 
-/// Posit8 table path vs scalar-fast vs Datapath on the same seeded
-/// sweeps (the exhaustive all-pairs gate lives in `p8_exhaustive.rs`).
+/// Explicit vector ISA (AVX2/NEON) vs SWAR vs scalar-fast vs Datapath
+/// bit-identity: seeded sweeps with the kernel *forced*, at batch
+/// lengths around the `VECTOR_MIN_LANES` threshold and across the
+/// 64-lane block/ragged-tail boundaries, specials and NaR included. On
+/// hosts without the `vsimd` feature or a detected vector ISA,
+/// `Unit::with_exec(.., FastPath::Vector)` is a typed refusal and every
+/// combination skips gracefully — the sweep then degenerates to the SWAR
+/// half, which still runs.
+#[test]
+fn vector_path_matches_swar_scalar_fast_and_datapath_for_every_op() {
+    let mut rng = Rng::seeded(0x7159);
+    for n in [8u32, 16] {
+        for len in [16usize, 64, 300] {
+            let (full_a, full_b, full_c) = lanes(n, &mut rng, 300);
+            let a = &full_a[..len];
+            let b = &full_b[..len];
+            let c = &full_c[..len];
+            for op in Op::DEFAULTS {
+                // skip when the host has no detected vector ISA, and for
+                // the ops the vector family never serves (sqrt, mul_add)
+                let Ok(vector) = Unit::with_exec(n, op, ExecTier::Fast, FastPath::Vector) else {
+                    continue;
+                };
+                let simd =
+                    Unit::with_exec(n, op, ExecTier::Fast, FastPath::Simd).expect("SWAR width");
+                let scalar = Unit::with_exec(n, op, ExecTier::Fast, FastPath::Scalar)
+                    .expect("always valid");
+                let dp = Unit::with_tier(n, op, ExecTier::Datapath).expect("valid width");
+                let (lb, lc): (&[u64], &[u64]) = match op.arity() {
+                    1 => (&[], &[]),
+                    2 => (b, &[]),
+                    _ => (b, c),
+                };
+                let mut v_out = vec![0u64; len];
+                let mut simd_out = vec![0u64; len];
+                let mut s_out = vec![0u64; len];
+                let mut d_out = vec![0u64; len];
+                vector.run_batch(a, lb, lc, &mut v_out).expect("equal lanes");
+                simd.run_batch(a, lb, lc, &mut simd_out).expect("equal lanes");
+                scalar.run_batch(a, lb, lc, &mut s_out).expect("equal lanes");
+                dp.run_batch(a, lb, lc, &mut d_out).expect("equal lanes");
+                assert_eq!(v_out, simd_out, "{op} n={n} len={len}: vector != SWAR");
+                assert_eq!(v_out, s_out, "{op} n={n} len={len}: vector != scalar-fast");
+                assert_eq!(v_out, d_out, "{op} n={n} len={len}: vector != datapath");
+            }
+        }
+    }
+}
+
+/// Exhaustive-Posit8 lookup-table path vs scalar-fast vs Datapath on
+/// the same seeded sweeps (the exhaustive all-pairs gate lives in
+/// `p8_exhaustive.rs`; the Posit16 seed-table sweep is the next test).
 #[test]
 fn table_path_matches_scalar_fast_and_datapath_p8() {
     let mut rng = Rng::seeded(0x7157);
@@ -247,6 +297,36 @@ fn table_path_matches_scalar_fast_and_datapath_p8() {
     }
 }
 
+/// Posit16 seed-table path (div/sqrt) vs scalar-fast vs Datapath on
+/// seeded sweeps: the reciprocal/rsqrt seed tables must never change a
+/// bit relative to the exact kernels.
+#[test]
+fn table_path_matches_scalar_fast_and_datapath_p16() {
+    let mut rng = Rng::seeded(0x715A);
+    let n = 16;
+    for len in [16usize, 64, 300] {
+        let (full_a, full_b, _) = lanes(n, &mut rng, 300);
+        let a = &full_a[..len];
+        let b = &full_b[..len];
+        for op in [Op::DIV, Op::Sqrt] {
+            let table = Unit::with_exec(n, op, ExecTier::Fast, FastPath::Table)
+                .expect("Posit16 div/sqrt carry seed tables");
+            let scalar =
+                Unit::with_exec(n, op, ExecTier::Fast, FastPath::Scalar).expect("always valid");
+            let dp = Unit::with_tier(n, op, ExecTier::Datapath).expect("valid width");
+            let lb: &[u64] = if op == Op::Sqrt { &[] } else { b };
+            let mut t_out = vec![0u64; len];
+            let mut s_out = vec![0u64; len];
+            let mut d_out = vec![0u64; len];
+            table.run_batch(a, lb, &[], &mut t_out).expect("equal lanes");
+            scalar.run_batch(a, lb, &[], &mut s_out).expect("equal lanes");
+            dp.run_batch(a, lb, &[], &mut d_out).expect("equal lanes");
+            assert_eq!(t_out, s_out, "{op} len={len}: p16 table != scalar-fast");
+            assert_eq!(t_out, d_out, "{op} len={len}: p16 table != datapath");
+        }
+    }
+}
+
 /// The Auto dispatch can pick different kernels on either side of its
 /// thresholds — the results must stay bit-identical across the seam.
 #[test]
@@ -262,8 +342,9 @@ fn auto_dispatch_is_bit_identical_across_length_thresholds() {
                 1 => (&[], &[]),
                 _ => (&b, &[]),
             };
-            // lengths straddling TABLE_MIN_LANES (4) and SIMD_MIN_LANES (16)
-            for len in [1usize, 3, 4, 5, 15, 16, 17, 64] {
+            // lengths straddling TABLE_MIN_LANES (4), SIMD_MIN_LANES (16)
+            // and VECTOR_MIN_LANES (32)
+            for len in [1usize, 3, 4, 5, 15, 16, 17, 31, 32, 33, 64, 65] {
                 let la = &a[..len];
                 let lb2: &[u64] = if lb.is_empty() { lb } else { &lb[..len] };
                 let mut auto_out = vec![0u64; len];
