@@ -899,6 +899,8 @@ fn sharded_tcp_run(requests: usize, r: &mut Runner) {
         // far above the client's pipeline window: this section measures
         // latency under load, not shed behavior (the tests cover that)
         queue_capacity: 8192,
+        soft_capacity: 8192, // == hard cap: brown-out disabled for the bench
+        idle_timeout: ShardConfig::DEFAULT_IDLE_TIMEOUT,
         service: ServiceConfig {
             n,
             backend: Backend::Native { alg: Algorithm::DEFAULT, threads: 4 },

@@ -492,6 +492,18 @@ pub struct Metrics {
     /// by the sharded router against the target shard's metrics, never
     /// enqueued, never part of `requests`.
     pub shed: AtomicU64,
+    /// Brown-out degradations, split by operation kind: requests the
+    /// sharded router forcibly routed to the Approx tier because the
+    /// shard's inflight crossed its soft watermark and the request
+    /// declared an ulp tolerance ([`crate::unit::Op::degrades_approx`]).
+    /// Degraded requests still complete and still count in `requests`;
+    /// this panel is the ladder's first rung, ahead of `shed`.
+    pub degraded: OpCounters,
+    /// Requests dropped at admission because their end-to-end deadline
+    /// budget had already elapsed (`DeadlineExceeded`): like `shed`,
+    /// never enqueued and never part of `requests` — but unlike `shed`,
+    /// they never held an admission slot at all.
+    pub deadline_drops: AtomicU64,
 }
 
 impl Metrics {
@@ -499,6 +511,11 @@ impl Metrics {
         let b = self.batches.load(Ordering::Relaxed).max(1);
         let r = self.requests.load(Ordering::Relaxed);
         r as f64 / b as f64 / max_batch as f64
+    }
+
+    /// Total brown-out degradations across all op kinds.
+    pub fn degraded_total(&self) -> u64 {
+        Op::KINDS.iter().map(|&op| self.degraded.get(op)).sum()
     }
 }
 
@@ -660,6 +677,24 @@ mod tests {
         t.record(ExecTier::Fast, 3);
         assert_eq!(t.get(ExecTier::Approx), 12);
         assert!(t.summary().contains("approx=12"), "{}", t.summary());
+    }
+
+    #[test]
+    fn degraded_panel_and_deadline_drops() {
+        let m = Metrics::default();
+        assert_eq!(m.degraded_total(), 0);
+        m.degraded.record(Op::DIV);
+        m.degraded.record(Op::Div { alg: crate::division::Algorithm::Nrd });
+        m.degraded.record(Op::Sqrt);
+        assert_eq!(m.degraded.get(Op::DIV), 2, "degradations bucket algorithm-blind");
+        assert_eq!(m.degraded.get(Op::Sqrt), 1);
+        assert_eq!(m.degraded.get(Op::Mul), 0);
+        assert_eq!(m.degraded_total(), 3);
+        m.deadline_drops.fetch_add(2, Ordering::Relaxed);
+        assert_eq!(m.deadline_drops.load(Ordering::Relaxed), 2);
+        // the ladder's rungs are independent counters
+        assert_eq!(m.shed.load(Ordering::Relaxed), 0);
+        assert_eq!(m.requests.load(Ordering::Relaxed), 0);
     }
 
     #[test]

@@ -204,7 +204,13 @@ impl Client {
         Ok(())
     }
 
-    fn enqueue(&self, tx: &Sender<Request>, req: &OpRequest, enqueued: Instant) -> Result<Pending> {
+    fn enqueue(
+        &self,
+        tx: &Sender<Request>,
+        req: &OpRequest,
+        enqueued: Instant,
+        force_approx: bool,
+    ) -> Result<Pending> {
         let (rtx, rrx) = channel();
         let [a, b, c] = req.bits();
         let vec = req.vector_lanes().map(|(va, vb, _)| {
@@ -213,7 +219,8 @@ impl Client {
                 vb.iter().map(|p| p.to_bits()).collect(),
             ))
         });
-        let approx = req.op.routes_approx(self.n, req.accuracy());
+        let approx = req.op.routes_approx(self.n, req.accuracy())
+            || (force_approx && req.op.degrades_approx(self.n, req.accuracy()));
         tx.send(Request { op: req.op, approx, a, b, c, vec, enqueued, respond: rtx })
             .map_err(|_| PositError::ServiceStopped)?;
         Ok(Pending { n: self.n, rx: rrx })
@@ -222,9 +229,21 @@ impl Client {
     /// Submit one op-tagged request; returns immediately with a
     /// [`Pending`].
     pub fn submit_op(&self, req: OpRequest) -> Result<Pending> {
+        self.submit_op_forced(req, false)
+    }
+
+    /// Submit one op-tagged request, optionally forcing brown-out
+    /// degradation: when `force_approx` is set and the request is
+    /// degrade-eligible ([`Op::degrades_approx`] — it declared *any* ulp
+    /// tolerance and a bounded-error kernel is registered), it is routed
+    /// to the Approx tier even if the kernel's declared bound exceeds
+    /// the requested tolerance. Exact traffic and kernel-less ops ignore
+    /// the flag and route normally. Used by the sharded router's soft
+    /// watermark; plain clients want [`Client::submit_op`].
+    pub fn submit_op_forced(&self, req: OpRequest, force_approx: bool) -> Result<Pending> {
         self.check_request(&req)?;
         let tx = self.sender()?;
-        self.enqueue(&tx, &req, Instant::now())
+        self.enqueue(&tx, &req, Instant::now(), force_approx)
     }
 
     /// Submit many op-tagged requests (any mix of operations); returns
@@ -239,7 +258,7 @@ impl Client {
         let now = Instant::now();
         let mut rxs = Vec::with_capacity(reqs.len());
         for req in reqs {
-            rxs.push(self.enqueue(&tx, req, now)?.rx);
+            rxs.push(self.enqueue(&tx, req, now, false)?.rx);
         }
         Ok(BatchHandle { n: self.n, rxs })
     }
@@ -883,6 +902,43 @@ mod tests {
         assert!(m.tiers.summary().contains("approx=2"), "{}", m.tiers.summary());
         assert!(m.approx_errors.summary().contains("div: audited="), "{}",
                 m.approx_errors.summary());
+        svc.shutdown();
+    }
+
+    /// Brown-out forcing: `submit_op_forced(.., true)` routes a
+    /// degrade-eligible request (any `Ulp(k)` + registered kernel) to
+    /// the Approx tier even when the kernel's declared bound exceeds
+    /// `k`; exact traffic and kernel-less ops ignore the flag.
+    #[test]
+    fn forced_degradation_routes_approx() {
+        let n = 16;
+        let svc = DivisionService::start(native_cfg(n)).unwrap();
+        let client = svc.client();
+        let nine = Posit::from_f64(n, 9.0);
+        let three = Posit::from_f64(n, 3.0);
+        let spec = Op::DIV.approx_spec(n).unwrap().max_ulp;
+        let m = svc.metrics();
+
+        // Ulp(1) is tighter than the declared bound: normal routing keeps
+        // it exact, forcing serves it approx within the *declared* bound
+        let tight = OpRequest::div(nine, three).with_accuracy(Accuracy::Ulp(1));
+        assert_eq!(client.run_op(tight.clone()).unwrap(), three);
+        assert_eq!(m.tiers.get(ExecTier::Approx), 0);
+        let q = client.submit_op_forced(tight, true).unwrap().wait().unwrap();
+        assert!(q.ulp_distance(three) <= spec);
+        assert_eq!(m.tiers.get(ExecTier::Approx), 1);
+
+        // exact traffic ignores the flag
+        let q = client.submit_op_forced(OpRequest::div(nine, three), true).unwrap();
+        assert_eq!(q.wait().unwrap(), three);
+        assert_eq!(m.tiers.get(ExecTier::Approx), 1);
+
+        // so does an op without a registered kernel
+        let s = client
+            .submit_op_forced(OpRequest::add(nine, three).with_accuracy(Accuracy::Ulp(1)), true)
+            .unwrap();
+        assert_eq!(s.wait().unwrap().to_f64(), 12.0);
+        assert_eq!(m.tiers.get(ExecTier::Approx), 1);
         svc.shutdown();
     }
 

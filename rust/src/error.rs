@@ -7,6 +7,8 @@
 //! width assertion, mirroring the hardware's "illegal configuration"
 //! contract).
 
+use std::time::Duration;
+
 /// Crate-wide result alias over [`PositError`].
 pub type Result<T> = core::result::Result<T, PositError>;
 
@@ -57,6 +59,15 @@ pub enum PositError {
     /// version, oversized or truncated payload, unknown frame kind or
     /// opcode, or operand bits outside the negotiated posit width.
     Protocol { detail: String },
+    /// A network operation (connect, socket read) exceeded its configured
+    /// timeout. The connection's stream state is indeterminate after a
+    /// timeout — a resilient caller must discard the connection and
+    /// retry on a fresh one (ops are pure, so replay is safe).
+    Timeout { what: String, after: Duration },
+    /// The request's end-to-end deadline had already expired when the
+    /// service looked at it; it was dropped *before* admission, without
+    /// consuming a shard slot. `waited_ms` is how stale the request was.
+    DeadlineExceeded { deadline_ms: u32, waited_ms: u32 },
 }
 
 impl core::fmt::Display for PositError {
@@ -100,6 +111,14 @@ impl core::fmt::Display for PositError {
                  requests, request shed"
             ),
             PositError::Protocol { detail } => write!(f, "wire protocol error: {detail}"),
+            PositError::Timeout { what, after } => {
+                write!(f, "timed out after {after:?}: {what}")
+            }
+            PositError::DeadlineExceeded { deadline_ms, waited_ms } => write!(
+                f,
+                "deadline exceeded: {deadline_ms} ms budget, request {waited_ms} ms old at \
+                 admission; dropped without consuming a slot"
+            ),
         }
     }
 }
@@ -133,6 +152,15 @@ mod tests {
         assert!(e.to_string().contains("shard 3") && e.to_string().contains("128/128"));
         let e = PositError::Protocol { detail: "truncated frame".into() };
         assert!(e.to_string().contains("truncated frame"));
+        let e = PositError::Timeout {
+            what: "connect 127.0.0.1:9".into(),
+            after: Duration::from_secs(5),
+        };
+        assert!(e.to_string().contains("timed out after 5s"), "{e}");
+        assert!(e.to_string().contains("connect 127.0.0.1:9"));
+        let e = PositError::DeadlineExceeded { deadline_ms: 50, waited_ms: 300 };
+        assert!(e.to_string().contains("50 ms budget"), "{e}");
+        assert!(e.to_string().contains("300 ms old"));
     }
 
     /// A forced-path rejection must name the requested path and the op

@@ -70,12 +70,17 @@
 //!   lane ([`coordinator::LatencyPanel`]).
 //! * [`service`] — the production serving tier above the coordinator:
 //!   N coordinator shards behind a router with consistent `(op, width)`
-//!   affinity ([`service::shard_for`]), bounded admission control that
-//!   sheds overload with the typed [`PositError::ServiceOverloaded`],
-//!   and a `std`-only length-prefixed TCP wire protocol
-//!   ([`service::wire`], normatively documented in `docs/SERVING.md`) —
-//!   `posit-div serve --listen` / `posit-div client` on the CLI,
-//!   [`service::Server`] / [`service::ServiceClient`] in code.
+//!   affinity ([`service::shard_for`]), a three-rung overload ladder
+//!   (deadline drops → brown-out degradation to the Approx tier →
+//!   typed [`PositError::ServiceOverloaded`] sheds), and a `std`-only
+//!   length-prefixed TCP wire protocol ([`service::wire`], normatively
+//!   documented in `docs/SERVING.md`) — `posit-div serve --listen` /
+//!   `posit-div client` on the CLI, [`service::Server`] /
+//!   [`service::ServiceClient`] in code. For fault tolerance,
+//!   [`service::ResilientClient`] fans one logical stream over N
+//!   endpoints (circuit breakers, bounded seeded retry, duplicate-free
+//!   replay) and [`service::FaultNet`] injects deterministic network
+//!   faults for chaos tests.
 //! * [`error`] — the typed [`PositError`] every fallible public entry
 //!   point returns (no panicking library surface, no `anyhow` leakage).
 //! * [`bench`] / [`testkit`] — self-contained micro-benchmark and

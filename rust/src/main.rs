@@ -10,7 +10,10 @@ use posit_div::coordinator::{Backend, BatchPolicy, DivisionService, ServiceConfi
 use posit_div::division::{golden, Algorithm};
 use posit_div::hardware::{report, Mode, TSMC28};
 use posit_div::posit::Posit;
-use posit_div::service::{Server, ServiceClient, ShardConfig};
+use posit_div::service::{
+    BreakerConfig, ConnectOptions, ResilientClient, RetryPolicy, Server, ServiceClient,
+    ShardConfig,
+};
 use posit_div::unit::{Accuracy, ExecTier, FastPath, Op, Unit};
 use posit_div::workload::{self, OpMix, OpenLoop, Workload};
 use posit_div::PositError;
@@ -30,15 +33,25 @@ subcommands:
         [--tier T] [--accuracy exact|ulp:K]         serve division or mixed-op traffic
                                                     (dot/fsum/axpy = quire reductions;
                                                     ulp:K routes eligible ops approx)
-  serve --listen HOST:PORT [--shards K] [--queue-cap Q] [--json P]
+  serve --listen HOST:PORT [--shards K] [--queue-cap Q] [--soft-cap S]
+        [--idle-ms MS] [--json P]
         [--n N] [--backend B] [--batch N] [--threads N] [--tier T]
                                                     sharded TCP server (docs/SERVING.md);
-                                                    runs until a client sends --shutdown
+                                                    runs until a client sends --shutdown;
+                                                    --soft-cap sets the brown-out
+                                                    watermark, --idle-ms the idle-client
+                                                    reap timeout (0 disables)
   client --connect HOST:PORT [--n N] [--requests N] [--mix M] [--rate R]
-         [--window W] [--verify-every K] [--accuracy exact|ulp:K] [--shutdown]
-                                                    drive a server over TCP: closed-loop
+         [--window W] [--verify-every K] [--accuracy exact|ulp:K]
+         [--deadline-ms D] [--shutdown]             drive a server over TCP: closed-loop
                                                     pipelined, or open-loop with --rate
                                                     (arrivals/s); --shutdown stops it
+  client --endpoints A,B,C [--retries N] [--deadline-ms D] [--json P]
+         [--n N] [--requests N] [--mix M] [--verify-every K]
+         [--accuracy exact|ulp:K] [--shutdown]      fault-tolerant client: fan one stream
+                                                    over N endpoints with circuit breakers
+                                                    + bounded seeded retry; --json writes
+                                                    the resilience report
   engines                                           list algorithm variants
   bench <suite> [--json P] [--baseline P] [--write-baseline] [--quick|--full]
         [--threshold PCT] [--advisory] [--tier T] [--path P]
@@ -426,6 +439,10 @@ fn cmd_serve_listen(args: &Args, listen: &str) {
     let threads: usize = args.get("threads", 4);
     let shards: usize = args.get("shards", 2);
     let queue_capacity: usize = args.get("queue-cap", 4096);
+    // soft watermark defaults to 3/4 of the hard cap; --soft-cap equal to
+    // --queue-cap disables brown-out (shed happens first)
+    let soft_capacity: usize = args.get("soft-cap", queue_capacity - queue_capacity / 4);
+    let idle_ms: u64 = args.get("idle-ms", 30_000);
     let backend = match args.flag("backend").unwrap_or("native") {
         "pjrt" => Backend::Pjrt { artifacts_dir: "artifacts".into() },
         _ => Backend::Native { alg: Algorithm::DEFAULT, threads },
@@ -433,6 +450,8 @@ fn cmd_serve_listen(args: &Args, listen: &str) {
     let cfg = ShardConfig {
         shards,
         queue_capacity,
+        soft_capacity,
+        idle_timeout: std::time::Duration::from_millis(idle_ms),
         service: ServiceConfig {
             n,
             backend,
@@ -449,7 +468,8 @@ fn cmd_serve_listen(args: &Args, listen: &str) {
     });
     let addr = server.local_addr();
     println!(
-        "listening on {addr} (Posit{n}, {shards} shards, queue {queue_capacity}); \
+        "listening on {addr} (Posit{n}, {shards} shards, queue {queue_capacity}, \
+         soft cap {soft_capacity}); \
          stop with `posit-div client --connect {addr} --shutdown`"
     );
     let svc = server.wait(); // blocks until a SHUTDOWN frame arrives
@@ -457,7 +477,13 @@ fn cmd_serve_listen(args: &Args, listen: &str) {
     print!("{}", svc.counters_render());
     let panel = svc.latency_snapshot();
     print!("{}", panel.render());
-    println!("total: requests={} shed={}", svc.total_requests(), svc.shed_total());
+    println!(
+        "total: requests={} shed={} degraded={} deadline_drops={}",
+        svc.total_requests(),
+        svc.shed_total(),
+        svc.degraded_total(),
+        svc.deadline_drops_total()
+    );
     if let Some(path) = args.flag("json") {
         let rows = suites::latency_rows(n, &panel);
         let rep = Report::new("service_live", Profile::Quick, Config::quick(), rows);
@@ -479,17 +505,22 @@ fn cmd_serve_listen(args: &Args, listen: &str) {
 /// Exits non-zero on transport failure, golden-verification mismatch,
 /// or non-shed request errors.
 fn cmd_client(args: &Args) {
-    let addr = args.flag("connect").unwrap_or_else(|| {
-        eprintln!("usage: posit-div client --connect HOST:PORT [flags]\n\n{USAGE}");
-        std::process::exit(2);
-    });
     let n: u32 = args.get("n", 16);
     let requests: usize = args.get("requests", 10_000);
     let verify_every: usize = args.get("verify-every", 101);
+    let deadline_ms: u32 = args.get("deadline-ms", 0);
     let mix_s =
         args.flag("mix").unwrap_or("div:6,sqrt:2,mul:4,add:4,sub:2,fma:2,dot:1,fsum:1,axpy:1");
     let mix = OpMix::parse(mix_s).unwrap_or_else(|| {
         eprintln!("invalid --mix {mix_s:?} (expected e.g. div:6,sqrt:2,mul:4,dot:2,fsum:1,axpy:1)");
+        std::process::exit(2);
+    });
+    if let Some(endpoints) = args.flag("endpoints") {
+        cmd_client_resilient(args, endpoints, n, requests, verify_every, deadline_ms, mix);
+        return;
+    }
+    let addr = args.flag("connect").unwrap_or_else(|| {
+        eprintln!("usage: posit-div client --connect HOST:PORT [flags]\n\n{USAGE}");
         std::process::exit(2);
     });
     let mut client = ServiceClient::connect(addr, n).unwrap_or_else(|e| {
@@ -504,7 +535,8 @@ fn cmd_client(args: &Args) {
     if requests > 0 {
         if let Some(rate) = args.flag("rate") {
             let rate: f64 = rate.parse().expect("--rate");
-            let mut wl = OpenLoop::new(n, mix, rate, 0x5E12).with_accuracy(accuracy);
+            let mut wl =
+                OpenLoop::new(n, mix, rate, 0x5E12).with_accuracy(accuracy).with_deadline_ms(deadline_ms);
             let rep = client.run_open_loop(&mut wl, requests, verify_every).unwrap_or_else(|e| {
                 eprintln!("open loop failed: {e}");
                 std::process::exit(1);
@@ -523,7 +555,9 @@ fn cmd_client(args: &Args) {
                 std::process::exit(1);
             }
         } else {
-            let mut wl = workload::MixedOps::new(n, mix, 0x5E12).with_accuracy(accuracy);
+            let mut wl = workload::MixedOps::new(n, mix, 0x5E12)
+                .with_accuracy(accuracy)
+                .with_deadline_ms(deadline_ms);
             let reqs = workload::take_requests(&mut wl, requests);
             let t0 = Instant::now();
             let results = client.run_ops(&reqs).unwrap_or_else(|e| {
@@ -531,7 +565,8 @@ fn cmd_client(args: &Args) {
                 std::process::exit(1);
             });
             let wall = t0.elapsed();
-            let (mut ok, mut shed, mut errors, mut bad) = (0usize, 0usize, 0usize, 0usize);
+            let (mut ok, mut shed, mut dropped, mut errors, mut bad) =
+                (0usize, 0usize, 0usize, 0usize, 0usize);
             for (i, (req, res)) in reqs.iter().zip(&results).enumerate() {
                 match res {
                     Ok(p) => {
@@ -544,12 +579,14 @@ fn cmd_client(args: &Args) {
                         }
                     }
                     Err(PositError::ServiceOverloaded { .. }) => shed += 1,
+                    Err(PositError::DeadlineExceeded { .. }) => dropped += 1,
                     Err(_) => errors += 1,
                 }
             }
             println!(
                 "closed loop: {requests} requests in {wall:?} ({:.0} op/s) \
-                 ok={ok} shed={shed} errors={errors} verify_failures={bad}",
+                 ok={ok} shed={shed} deadline_drops={dropped} errors={errors} \
+                 verify_failures={bad}",
                 requests as f64 / wall.as_secs_f64()
             );
             if bad > 0 || errors > 0 {
@@ -565,6 +602,95 @@ fn cmd_client(args: &Args) {
     };
     if let Err(e) = closed {
         eprintln!("close failed: {e}");
+        std::process::exit(1);
+    }
+}
+
+/// `client --endpoints A,B,C`: the fault-tolerant path. One logical
+/// request stream fans over every endpoint with per-endpoint circuit
+/// breakers and bounded seeded retry; a request is lost only when its
+/// whole retry budget fails. `--json P` writes the resilience report
+/// (the CI chaos leg asserts `"lost": 0` and a non-zero
+/// `"breaker_opens"` from it). Exits non-zero on lost requests or
+/// golden-verification failures.
+fn cmd_client_resilient(
+    args: &Args,
+    endpoints: &str,
+    n: u32,
+    requests: usize,
+    verify_every: usize,
+    deadline_ms: u32,
+    mix: OpMix,
+) {
+    let addrs: Vec<std::net::SocketAddr> = endpoints
+        .split(',')
+        .map(|s| {
+            s.trim().parse().unwrap_or_else(|e| {
+                eprintln!("invalid endpoint {s:?} in --endpoints: {e}");
+                std::process::exit(2);
+            })
+        })
+        .collect();
+    let policy = RetryPolicy { max_retries: args.get("retries", 8), ..RetryPolicy::default() };
+    let opts = ConnectOptions {
+        connect_timeout: Some(std::time::Duration::from_millis(1000)),
+        read_timeout: Some(std::time::Duration::from_millis(2000)),
+    };
+    let mut rc = ResilientClient::new(&addrs, n, policy, BreakerConfig::default(), opts)
+        .unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2);
+        });
+    let accuracy = accuracy_flag(args);
+    let mut wl = workload::MixedOps::new(n, mix, 0x5E12)
+        .with_accuracy(accuracy)
+        .with_deadline_ms(deadline_ms);
+    let reqs = workload::take_requests(&mut wl, requests);
+    let t0 = Instant::now();
+    let rep = rc.run_requests(&reqs, verify_every);
+    let wall = t0.elapsed();
+    let lost = rep.offered - rep.completed;
+    println!(
+        "resilient: {} requests over {} endpoints in {wall:?} ({:.0} op/s)",
+        requests,
+        addrs.len(),
+        requests as f64 / wall.as_secs_f64()
+    );
+    println!("  {}", rep.summary());
+    if let Some(path) = args.flag("json") {
+        let json = format!(
+            "{{\n  \"endpoints\": {},\n  \"offered\": {},\n  \"completed\": {},\n  \
+             \"lost\": {},\n  \"retries\": {},\n  \"connects\": {},\n  \
+             \"breaker_opens\": {},\n  \"duplicates_discarded\": {},\n  \
+             \"degraded\": {},\n  \"shed_retries\": {},\n  \"deadline_retries\": {},\n  \
+             \"verify_failures\": {}\n}}\n",
+            addrs.len(),
+            rep.offered,
+            rep.completed,
+            lost,
+            rep.retries,
+            rep.connects,
+            rep.breaker_opens,
+            rep.duplicates_discarded,
+            rep.degraded,
+            rep.shed_retries,
+            rep.deadline_retries,
+            rep.verify_failures,
+        );
+        if let Err(e) = std::fs::write(path, json) {
+            eprintln!("failed to write {path}: {e}");
+            std::process::exit(1);
+        }
+        println!("wrote resilience report to {path}");
+    }
+    if args.has("shutdown") {
+        println!("sending SHUTDOWN to every endpoint");
+        rc.shutdown_endpoints();
+    } else {
+        rc.close_connections();
+    }
+    if lost > 0 || rep.verify_failures > 0 {
+        eprintln!("{lost} lost requests, {} verification failures", rep.verify_failures);
         std::process::exit(1);
     }
 }

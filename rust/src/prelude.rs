@@ -31,8 +31,9 @@ pub use crate::pool::Pool;
 pub use crate::posit::{Posit, RoundFrom, RoundInto, P16, P32, P64, P8};
 pub use crate::quire::{axpy, dot, fused_sum, gemm, Quire};
 pub use crate::service::{
-    shard_for, OpenLoopReport, Server, ServiceClient, ShardConfig, ShardTicket, ShardedClient,
-    ShardedService,
+    shard_for, BreakerConfig, ConnectOptions, FaultNet, FaultPlan, OpenLoopReport,
+    ResilientClient, ResilientReport, RetryPolicy, Server, ServiceClient, ShardConfig,
+    ShardTicket, ShardedClient, ShardedService,
 };
 pub use crate::division::approx::ApproxSpec;
 pub use crate::unit::{Accuracy, ExecTier, FastPath, Op, OpRequest, Unit};

@@ -1,0 +1,484 @@
+//! Deterministic in-process network fault injection: a TCP chaos proxy
+//! between a [`super::ServiceClient`] and a [`super::net::Server`].
+//!
+//! [`FaultNet`] listens on a loopback port, relays every connection to
+//! the real server, and — on the client→server direction only, where it
+//! can see frame boundaries — injects faults decided by a pure,
+//! seed-keyed function of `(connection, frame)` ([`FaultPlan::decide`]).
+//! Equal seeds produce byte-identical fault schedules on every run and
+//! every machine: chaos tests assert exact convergence properties
+//! instead of flaky probabilities.
+//!
+//! The injectable faults, per client frame:
+//!
+//! | fault | what the server sees | what the client sees |
+//! |-------|----------------------|----------------------|
+//! | [`Fault::Delay`] | the frame, late | a slow reply (deadline pressure) |
+//! | [`Fault::Duplicate`] | the frame twice (two replies!) | a duplicate reply to discard |
+//! | [`Fault::BlackHole`] | nothing (conn stays up) | a read timeout |
+//! | [`Fault::Truncate`] | header + half the payload, then close | a dead connection |
+//! | [`Fault::DropConn`] | the connection close, frame never sent | a dead connection |
+//!
+//! The first [`FaultPlan::warmup_frames`] frames of every connection
+//! pass clean so the HELLO/WELCOME handshake always completes — the
+//! faults under test are request-path faults, not connect storms (the
+//! breaker tests cover those separately by pointing at dead ports).
+//!
+//! Server→client bytes are relayed verbatim: response-side corruption
+//! would only re-test the same client decode paths the wire tests
+//! already cover, while request-side faults exercise the full
+//! retry/dedup/breaker machinery.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+use super::wire;
+use crate::error::{PositError, Result};
+use crate::testkit::Rng;
+
+/// How long a proxy-side read blocks before re-checking the stop flag.
+const POLL: Duration = Duration::from_millis(50);
+
+/// What to do with one client→server frame.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Fault {
+    /// Relay unchanged.
+    Forward,
+    /// Sleep [`FaultPlan::delay_ms`], then relay.
+    Delay,
+    /// Relay the frame twice (the server will answer twice).
+    Duplicate,
+    /// Swallow the frame; the connection stays up.
+    BlackHole,
+    /// Relay the header plus half the payload, then close both sides.
+    Truncate,
+    /// Close both sides without relaying the frame.
+    DropConn,
+}
+
+/// A seeded fault schedule. Rates are per-mille (‰) of non-warmup
+/// frames; the remainder forwards clean. The decision for a given
+/// `(seed, connection, frame)` is pure — see [`FaultPlan::decide`].
+#[derive(Clone, Copy, Debug)]
+pub struct FaultPlan {
+    /// Seed keying the whole schedule.
+    pub seed: u64,
+    /// ‰ of frames delayed by [`FaultPlan::delay_ms`].
+    pub delay_per_mille: u32,
+    /// ‰ of frames relayed twice.
+    pub duplicate_per_mille: u32,
+    /// ‰ of frames swallowed (connection kept).
+    pub black_hole_per_mille: u32,
+    /// ‰ of frames truncated mid-payload (connection closed).
+    pub truncate_per_mille: u32,
+    /// ‰ of frames replaced by a connection close.
+    pub drop_conn_per_mille: u32,
+    /// Delay applied by [`Fault::Delay`].
+    pub delay_ms: u64,
+    /// Leading frames per connection that always forward clean (keep
+    /// >= 1 so the HELLO handshake survives).
+    pub warmup_frames: u32,
+}
+
+impl FaultPlan {
+    /// A transparent plan: every frame forwards clean.
+    pub fn clean(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            delay_per_mille: 0,
+            duplicate_per_mille: 0,
+            black_hole_per_mille: 0,
+            truncate_per_mille: 0,
+            drop_conn_per_mille: 0,
+            delay_ms: 0,
+            warmup_frames: 1,
+        }
+    }
+
+    /// The standard chaos mix the soak tests run: ~12% of frames
+    /// faulted, every fault kind represented, delays short enough to
+    /// keep the test fast but long enough to cross deadline budgets.
+    pub fn chaos(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            delay_per_mille: 30,
+            duplicate_per_mille: 30,
+            black_hole_per_mille: 20,
+            truncate_per_mille: 20,
+            drop_conn_per_mille: 20,
+            delay_ms: 20,
+            warmup_frames: 1,
+        }
+    }
+
+    fn budget(&self) -> u64 {
+        u64::from(
+            self.delay_per_mille
+                + self.duplicate_per_mille
+                + self.black_hole_per_mille
+                + self.truncate_per_mille
+                + self.drop_conn_per_mille,
+        )
+    }
+
+    /// The fault for frame `frame` of connection `conn` — a pure
+    /// function of `(seed, conn, frame)`, so a schedule can be replayed
+    /// (or predicted in a test) without running the proxy.
+    pub fn decide(&self, conn: u64, frame: u64) -> Fault {
+        if frame < u64::from(self.warmup_frames) {
+            return Fault::Forward;
+        }
+        let key = self
+            .seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(conn.wrapping_mul(0xD6E8_FEB8_6659_FD93))
+            .wrapping_add(frame);
+        let mut rng = Rng::seeded(key);
+        let draw = rng.below(1000);
+        let mut edge = u64::from(self.delay_per_mille);
+        if draw < edge {
+            return Fault::Delay;
+        }
+        edge += u64::from(self.duplicate_per_mille);
+        if draw < edge {
+            return Fault::Duplicate;
+        }
+        edge += u64::from(self.black_hole_per_mille);
+        if draw < edge {
+            return Fault::BlackHole;
+        }
+        edge += u64::from(self.truncate_per_mille);
+        if draw < edge {
+            return Fault::Truncate;
+        }
+        edge += u64::from(self.drop_conn_per_mille);
+        if draw < edge {
+            return Fault::DropConn;
+        }
+        Fault::Forward
+    }
+}
+
+/// Counts of faults actually injected (after warmup exclusion), for
+/// asserting a chaos run really exercised every kind.
+#[derive(Default, Debug)]
+pub struct FaultCounters {
+    pub delayed: AtomicU64,
+    pub duplicated: AtomicU64,
+    pub black_holed: AtomicU64,
+    pub truncated: AtomicU64,
+    pub dropped_conns: AtomicU64,
+    pub forwarded: AtomicU64,
+}
+
+impl FaultCounters {
+    /// Total faulted (non-forward) frames.
+    pub fn faulted(&self) -> u64 {
+        self.delayed.load(Ordering::Relaxed)
+            + self.duplicated.load(Ordering::Relaxed)
+            + self.black_holed.load(Ordering::Relaxed)
+            + self.truncated.load(Ordering::Relaxed)
+            + self.dropped_conns.load(Ordering::Relaxed)
+    }
+}
+
+/// The running chaos proxy. Connect clients to
+/// [`FaultNet::local_addr`]; stop it with [`FaultNet::stop`] (also runs
+/// on drop).
+pub struct FaultNet {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    counters: Arc<FaultCounters>,
+}
+
+impl FaultNet {
+    /// Listen on an OS-assigned loopback port, relaying every connection
+    /// to `upstream` under `plan`.
+    pub fn start(upstream: SocketAddr, plan: FaultPlan) -> Result<FaultNet> {
+        let listener = TcpListener::bind("127.0.0.1:0")
+            .map_err(|e| PositError::Execution { detail: format!("faultnet bind: {e}") })?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| PositError::Execution { detail: format!("faultnet local_addr: {e}") })?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let counters = Arc::new(FaultCounters::default());
+        let accept = {
+            let (stop, conns, counters) = (stop.clone(), conns.clone(), counters.clone());
+            thread::Builder::new()
+                .name("faultnet-accept".into())
+                .spawn(move || {
+                    let mut conn_id = 0u64;
+                    for incoming in listener.incoming() {
+                        if stop.load(Ordering::Acquire) {
+                            break;
+                        }
+                        let client = match incoming {
+                            Ok(s) => s,
+                            Err(_) => continue,
+                        };
+                        let id = conn_id;
+                        conn_id += 1;
+                        let (stop, counters) = (stop.clone(), counters.clone());
+                        let handle = thread::Builder::new()
+                            .name("faultnet-conn".into())
+                            .spawn(move || relay_conn(client, upstream, plan, id, stop, counters))
+                            .expect("spawn faultnet connection thread");
+                        conns.lock().expect("faultnet conn registry").push(handle);
+                    }
+                })
+                .map_err(|e| PositError::Execution {
+                    detail: format!("spawn faultnet accept thread: {e}"),
+                })?
+        };
+        Ok(FaultNet { addr, stop, accept: Some(accept), conns, counters })
+    }
+
+    /// The proxy's listen address — point clients here instead of at the
+    /// real server.
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Injected-fault counters (live; the proxy keeps counting until
+    /// stopped).
+    pub fn counters(&self) -> &FaultCounters {
+        &self.counters
+    }
+
+    /// Stop accepting and tear down every relay.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let handles: Vec<_> = {
+            let mut guard = self.conns.lock().expect("faultnet conn registry");
+            std::mem::take(&mut *guard)
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for FaultNet {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Read one raw frame (header + payload bytes, unparsed beyond the
+/// length) from a timeout-polling stream. `None` ends the relay: EOF,
+/// a malformed header, an I/O error, or the stop flag.
+fn read_raw_frame(stream: &mut TcpStream, stop: &AtomicBool) -> Option<(Vec<u8>, Vec<u8>)> {
+    let mut header = vec![0u8; wire::HEADER_LEN];
+    read_raw_full(stream, &mut header, stop)?;
+    let hdr: &[u8; wire::HEADER_LEN] = header.as_slice().try_into().expect("fixed length");
+    let (_, len) = wire::parse_header(hdr).ok()?;
+    let mut payload = vec![0u8; len];
+    read_raw_full(stream, &mut payload, stop)?;
+    Some((header, payload))
+}
+
+fn read_raw_full(stream: &mut TcpStream, buf: &mut [u8], stop: &AtomicBool) -> Option<()> {
+    let mut pos = 0;
+    while pos < buf.len() {
+        match stream.read(&mut buf[pos..]) {
+            Ok(0) => return None,
+            Ok(k) => pos += k,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if stop.load(Ordering::Acquire) {
+                    return None;
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return None,
+        }
+    }
+    Some(())
+}
+
+fn relay_conn(
+    mut client: TcpStream,
+    upstream: SocketAddr,
+    plan: FaultPlan,
+    conn_id: u64,
+    stop: Arc<AtomicBool>,
+    counters: Arc<FaultCounters>,
+) {
+    let Ok(mut server) = TcpStream::connect(upstream) else {
+        let _ = client.shutdown(Shutdown::Both);
+        return;
+    };
+    let _ = client.set_nodelay(true);
+    let _ = server.set_nodelay(true);
+    let _ = client.set_read_timeout(Some(POLL));
+
+    // server→client: a dumb byte pipe (responses relay verbatim)
+    let pipe = {
+        let (mut server_r, mut client_w) = match (server.try_clone(), client.try_clone()) {
+            (Ok(s), Ok(c)) => (s, c),
+            _ => {
+                let _ = client.shutdown(Shutdown::Both);
+                let _ = server.shutdown(Shutdown::Both);
+                return;
+            }
+        };
+        let stop = stop.clone();
+        thread::Builder::new()
+            .name("faultnet-pipe".into())
+            .spawn(move || {
+                let _ = server_r.set_read_timeout(Some(POLL));
+                let mut buf = [0u8; 8192];
+                loop {
+                    match server_r.read(&mut buf) {
+                        Ok(0) => break,
+                        Ok(k) => {
+                            if client_w.write_all(&buf[..k]).is_err() {
+                                break;
+                            }
+                        }
+                        Err(e)
+                            if matches!(
+                                e.kind(),
+                                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                            ) =>
+                        {
+                            if stop.load(Ordering::Acquire) {
+                                break;
+                            }
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                        Err(_) => break,
+                    }
+                }
+                let _ = client_w.shutdown(Shutdown::Both);
+            })
+            .expect("spawn faultnet pipe thread")
+    };
+
+    // client→server: frame-aware, faults injected per the plan
+    let mut frame_idx = 0u64;
+    loop {
+        if stop.load(Ordering::Acquire) {
+            break;
+        }
+        let Some((header, payload)) = read_raw_frame(&mut client, &stop) else {
+            break;
+        };
+        let fault = plan.decide(conn_id, frame_idx);
+        frame_idx += 1;
+        let forward =
+            |server: &mut TcpStream, header: &[u8], payload: &[u8]| -> std::io::Result<()> {
+                server.write_all(header)?;
+                server.write_all(payload)
+            };
+        let ok = match fault {
+            Fault::Forward => {
+                counters.forwarded.fetch_add(1, Ordering::Relaxed);
+                forward(&mut server, &header, &payload).is_ok()
+            }
+            Fault::Delay => {
+                counters.delayed.fetch_add(1, Ordering::Relaxed);
+                thread::sleep(Duration::from_millis(plan.delay_ms));
+                forward(&mut server, &header, &payload).is_ok()
+            }
+            Fault::Duplicate => {
+                counters.duplicated.fetch_add(1, Ordering::Relaxed);
+                forward(&mut server, &header, &payload).is_ok()
+                    && forward(&mut server, &header, &payload).is_ok()
+            }
+            Fault::BlackHole => {
+                counters.black_holed.fetch_add(1, Ordering::Relaxed);
+                true
+            }
+            Fault::Truncate => {
+                counters.truncated.fetch_add(1, Ordering::Relaxed);
+                let _ = server
+                    .write_all(&header)
+                    .and_then(|()| server.write_all(&payload[..payload.len() / 2]));
+                false
+            }
+            Fault::DropConn => {
+                counters.dropped_conns.fetch_add(1, Ordering::Relaxed);
+                false
+            }
+        };
+        if !ok {
+            break;
+        }
+    }
+    let _ = client.shutdown(Shutdown::Both);
+    let _ = server.shutdown(Shutdown::Both);
+    let _ = pipe.join();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The schedule is a pure function: same (seed, conn, frame) ⇒ same
+    /// fault, different seeds ⇒ different schedules, warmup always
+    /// forwards.
+    #[test]
+    fn plans_are_deterministic_and_seed_keyed() {
+        let plan = FaultPlan::chaos(42);
+        for conn in 0..4u64 {
+            assert_eq!(plan.decide(conn, 0), Fault::Forward, "warmup frame must pass");
+            for frame in 0..64u64 {
+                assert_eq!(plan.decide(conn, frame), plan.decide(conn, frame));
+            }
+        }
+        let other = FaultPlan::chaos(43);
+        let differs = (0..256u64).any(|f| plan.decide(0, f) != other.decide(0, f));
+        assert!(differs, "seed must key the schedule");
+        // rates roughly honor the per-mille budget over a long horizon
+        let faulted = (1..4001u64)
+            .filter(|&f| plan.decide(7, f) != Fault::Forward)
+            .count();
+        let expect = (plan.budget() as usize * 4000) / 1000;
+        assert!(
+            faulted > expect / 2 && faulted < expect * 2,
+            "faulted {faulted} of 4000, budget {expect}"
+        );
+        // a clean plan never faults
+        let clean = FaultPlan::clean(42);
+        assert!((0..4000u64).all(|f| clean.decide(0, f) == Fault::Forward));
+    }
+
+    /// Every fault kind must actually occur under the chaos preset —
+    /// otherwise the soak test exercises less than it claims.
+    #[test]
+    fn chaos_preset_reaches_every_fault_kind() {
+        let plan = FaultPlan::chaos(7);
+        let mut seen = std::collections::HashSet::new();
+        for conn in 0..8u64 {
+            for frame in 1..512u64 {
+                seen.insert(plan.decide(conn, frame));
+            }
+        }
+        for fault in [
+            Fault::Forward,
+            Fault::Delay,
+            Fault::Duplicate,
+            Fault::BlackHole,
+            Fault::Truncate,
+            Fault::DropConn,
+        ] {
+            assert!(seen.contains(&fault), "{fault:?} never scheduled");
+        }
+    }
+}

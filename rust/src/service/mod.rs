@@ -18,28 +18,47 @@
 //!   for one operation kind (and, for division, one algorithm) lands on
 //!   one shard, so each shard's per-op [`crate::unit::Unit`] cache and
 //!   batcher see homogeneous streams that fill wide batches.
-//! * [`ShardedClient::submit_op`] applies admission control *before*
-//!   enqueueing: each shard has a bounded in-flight budget
-//!   ([`ShardConfig::queue_capacity`]); at capacity the request is shed
-//!   with [`PositError::ServiceOverloaded`] — typed, never a hang or a
-//!   panic — and counted in the target shard's
-//!   [`crate::coordinator::Metrics::shed`].
+//! * [`ShardedClient::submit_op`] applies the **overload ladder**
+//!   *before* enqueueing — three rungs, cheapest first:
+//!   1. **Deadline drop** — a request whose end-to-end deadline
+//!      ([`OpRequest::deadline_ms`]) already expired is dropped with a
+//!      typed [`PositError::DeadlineExceeded`] *without* touching the
+//!      admission counter (it never holds a slot), counted in
+//!      [`crate::coordinator::Metrics::deadline_drops`].
+//!   2. **Brown-out degrade** — past the soft watermark
+//!      ([`ShardConfig::soft_capacity`]), degrade-eligible traffic
+//!      (any `Ulp(k)` accuracy + a registered bounded-error kernel,
+//!      [`Op::degrades_approx`]) is forced to the Approx tier and
+//!      counted in [`crate::coordinator::Metrics::degraded`]. Bit-exact
+//!      traffic is **never** degraded.
+//!   3. **Shed** — at the hard capacity
+//!      ([`ShardConfig::queue_capacity`]) the request is shed with
+//!      [`PositError::ServiceOverloaded`] — typed, never a hang or a
+//!      panic — and counted in [`crate::coordinator::Metrics::shed`].
 //! * The wire layer ([`wire`]) and the TCP server/client ([`net`]) make
 //!   the whole stack reachable from another process:
-//!   `posit-div serve --listen` / `posit-div client`.
+//!   `posit-div serve --listen` / `posit-div client`. The resilient
+//!   layer ([`resilient`]) turns N such endpoints into one fault-tolerant
+//!   logical stream, and [`faultnet`] injects deterministic network
+//!   faults between client and server in tests.
 //!
 //! SLO telemetry rides on the coordinator's per-shard
 //! [`crate::coordinator::LatencyPanel`] (p50/p99/p999 per op × lane);
 //! [`ShardedService::latency_snapshot`] merges the shards into one panel
 //! for reports.
 
+pub mod faultnet;
 pub mod net;
+pub mod resilient;
 pub mod wire;
 
-pub use net::{OpenLoopReport, Server, ServiceClient};
+pub use faultnet::{FaultNet, FaultPlan};
+pub use net::{ConnectOptions, OpenLoopReport, Server, ServiceClient};
+pub use resilient::{BreakerConfig, ResilientClient, ResilientReport, RetryPolicy};
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::{
     Client, DivisionService, LatencyPanel, Metrics, Pending, ServiceConfig,
@@ -61,13 +80,36 @@ pub struct ShardConfig {
     /// beyond it are shed with [`PositError::ServiceOverloaded`]. Must
     /// be >= 1.
     pub queue_capacity: usize,
+    /// Brown-out watermark: once a shard's in-flight depth reaches this,
+    /// degrade-eligible requests ([`Op::degrades_approx`]) are forced to
+    /// the Approx tier instead of waiting for the hard cap. Must satisfy
+    /// `1 <= soft_capacity <= queue_capacity`; setting it equal to
+    /// `queue_capacity` disables brown-out.
+    pub soft_capacity: usize,
+    /// Server-side idle timeout for TCP connections: a connection with
+    /// no complete frame for this long is presumed vanished and closed,
+    /// releasing its in-flight admission slots. Zero disables the check
+    /// (not recommended outside tests).
+    pub idle_timeout: Duration,
     /// The per-shard coordinator configuration.
     pub service: ServiceConfig,
 }
 
+impl ShardConfig {
+    /// Default idle timeout: generous against slow clients, small enough
+    /// that a vanished client cannot pin admission slots for long.
+    pub const DEFAULT_IDLE_TIMEOUT: Duration = Duration::from_secs(30);
+}
+
 impl Default for ShardConfig {
     fn default() -> Self {
-        ShardConfig { shards: 2, queue_capacity: 4096, service: ServiceConfig::default() }
+        ShardConfig {
+            shards: 2,
+            queue_capacity: 4096,
+            soft_capacity: 3072,
+            idle_timeout: ShardConfig::DEFAULT_IDLE_TIMEOUT,
+            service: ServiceConfig::default(),
+        }
     }
 }
 
@@ -104,6 +146,7 @@ impl Drop for InflightGuard {
 /// admission budget until waited or dropped.
 pub struct ShardTicket {
     shard: usize,
+    degraded: bool,
     pending: Pending,
     guard: InflightGuard,
 }
@@ -112,6 +155,13 @@ impl ShardTicket {
     /// The shard this request was routed to.
     pub fn shard(&self) -> usize {
         self.shard
+    }
+
+    /// True when the soft watermark forced this request to the Approx
+    /// tier (the TCP layer echoes this as a RESPONSE flag so remote
+    /// callers can see brown-out per reply).
+    pub fn degraded(&self) -> bool {
+        self.degraded
     }
 
     /// Block until the shard responds, releasing the admission slot.
@@ -132,6 +182,7 @@ pub struct ShardedClient {
     clients: Arc<Vec<Client>>,
     inflight: Arc<Vec<AtomicUsize>>,
     capacity: usize,
+    soft_capacity: usize,
 }
 
 impl ShardedClient {
@@ -150,6 +201,11 @@ impl ShardedClient {
         self.capacity
     }
 
+    /// Per-shard brown-out watermark.
+    pub fn soft_capacity(&self) -> usize {
+        self.soft_capacity
+    }
+
     /// The shard an op routes to (what [`ShardedClient::submit_op`]
     /// will pick).
     pub fn shard_of(&self, op: Op) -> usize {
@@ -161,11 +217,35 @@ impl ShardedClient {
         self.inflight[shard].load(Ordering::Acquire)
     }
 
-    /// Route and submit one request. Returns a [`ShardTicket`] holding
-    /// the admission slot, or [`PositError::ServiceOverloaded`] when the
-    /// target shard is at capacity (the request is **not** enqueued).
+    /// Route and submit one request that arrived `now`. Equivalent to
+    /// [`ShardedClient::submit_op_at`] with the current instant.
     pub fn submit_op(&self, req: OpRequest) -> Result<ShardTicket> {
+        self.submit_op_at(req, Instant::now())
+    }
+
+    /// Route and submit one request through the overload ladder (see the
+    /// module docs). `arrival` is when the request entered the system —
+    /// the TCP server stamps it when it starts reading the frame, so a
+    /// request's time on the wire counts against its deadline.
+    ///
+    /// Returns a [`ShardTicket`] holding the admission slot;
+    /// [`PositError::DeadlineExceeded`] when the request's deadline
+    /// expired before admission (no slot consumed);
+    /// [`PositError::ServiceOverloaded`] when the target shard is at
+    /// capacity (the request is **not** enqueued).
+    pub fn submit_op_at(&self, req: OpRequest, arrival: Instant) -> Result<ShardTicket> {
         let shard = self.shard_of(req.op);
+        if let Some(deadline) = req.deadline() {
+            let waited = arrival.elapsed();
+            if waited >= deadline {
+                let m = self.clients[shard].metrics();
+                m.deadline_drops.fetch_add(1, Ordering::Relaxed);
+                return Err(PositError::DeadlineExceeded {
+                    deadline_ms: req.deadline_ms(),
+                    waited_ms: waited.as_millis().min(u128::from(u32::MAX)) as u32,
+                });
+            }
+        }
         let slot = &self.inflight[shard];
         let observed = slot.fetch_add(1, Ordering::AcqRel);
         if observed >= self.capacity {
@@ -179,8 +259,16 @@ impl ShardedClient {
             });
         }
         let guard = InflightGuard { slots: self.inflight.clone(), shard };
-        let pending = self.clients[shard].submit_op(req)?;
-        Ok(ShardTicket { shard, pending, guard })
+        // `observed` is the depth *before* this request: at the hard cap
+        // it sheds above, so `soft_capacity == queue_capacity` never
+        // degrades anything
+        let degraded = observed >= self.soft_capacity
+            && req.op.degrades_approx(self.n, req.accuracy());
+        if degraded {
+            self.clients[shard].metrics().degraded.record(req.op);
+        }
+        let pending = self.clients[shard].submit_op_forced(req, degraded)?;
+        Ok(ShardTicket { shard, degraded, pending, guard })
     }
 
     /// Blocking submit-and-wait.
@@ -215,6 +303,14 @@ impl ShardedService {
                 detail: "per-shard queue capacity must be >= 1".into(),
             });
         }
+        if cfg.soft_capacity == 0 || cfg.soft_capacity > cfg.queue_capacity {
+            return Err(PositError::Execution {
+                detail: format!(
+                    "soft capacity must be in [1, queue_capacity={}], got {}",
+                    cfg.queue_capacity, cfg.soft_capacity
+                ),
+            });
+        }
         let mut shards = Vec::with_capacity(cfg.shards);
         for _ in 0..cfg.shards {
             shards.push(DivisionService::start(cfg.service.clone())?);
@@ -226,6 +322,7 @@ impl ShardedService {
             clients: Arc::new(clients),
             inflight: Arc::new(inflight),
             capacity: cfg.queue_capacity,
+            soft_capacity: cfg.soft_capacity,
         };
         Ok(ShardedService { shards, client })
     }
@@ -272,6 +369,21 @@ impl ShardedService {
             .sum()
     }
 
+    /// Requests brown-out-degraded to the Approx tier across all shards
+    /// (these still complete and count in `requests`).
+    pub fn degraded_total(&self) -> u64 {
+        self.shards.iter().map(|s| s.metrics().degraded_total()).sum()
+    }
+
+    /// Requests dropped before admission on an expired deadline across
+    /// all shards (never held a slot, never enqueued).
+    pub fn deadline_drops_total(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| s.metrics().deadline_drops.load(Ordering::Relaxed))
+            .sum()
+    }
+
     /// Merge every shard's op × lane latency panel into one snapshot
     /// (the SLO view a report renders).
     pub fn latency_snapshot(&self) -> LatencyPanel {
@@ -289,10 +401,13 @@ impl ShardedService {
         for (i, s) in self.shards.iter().enumerate() {
             let m = s.metrics();
             out.push_str(&format!(
-                "shard {i}: requests={} batches={} shed={} p99<={:?}\n",
+                "shard {i}: requests={} batches={} shed={} degraded={} deadline_drops={} \
+                 p99<={:?}\n",
                 m.requests.load(Ordering::Relaxed),
                 m.batches.load(Ordering::Relaxed),
                 m.shed.load(Ordering::Relaxed),
+                m.degraded_total(),
+                m.deadline_drops.load(Ordering::Relaxed),
                 m.request_latency.quantile(0.99),
             ));
         }
@@ -313,7 +428,7 @@ mod tests {
     use super::*;
     use crate::coordinator::{Backend, BatchPolicy, ServedBy};
     use crate::division::Algorithm;
-    use crate::unit::ExecTier;
+    use crate::unit::{Accuracy, ExecTier};
     use std::collections::HashSet;
     use std::time::Duration;
 
@@ -321,6 +436,8 @@ mod tests {
         ShardConfig {
             shards,
             queue_capacity,
+            soft_capacity: queue_capacity,
+            idle_timeout: ShardConfig::DEFAULT_IDLE_TIMEOUT,
             service: ServiceConfig {
                 n,
                 backend: Backend::Native { alg: Algorithm::DEFAULT, threads: 2 },
@@ -361,6 +478,13 @@ mod tests {
             ShardedService::start(cfg(2, 2, 8)).unwrap_err(),
             PositError::WidthOutOfRange { n: 2 }
         ));
+        // soft watermark must stay within [1, queue_capacity]
+        let mut bad = cfg(16, 2, 8);
+        bad.soft_capacity = 9;
+        assert!(ShardedService::start(bad).is_err());
+        let mut bad = cfg(16, 2, 8);
+        bad.soft_capacity = 0;
+        assert!(ShardedService::start(bad).is_err());
     }
 
     #[test]
@@ -423,6 +547,88 @@ mod tests {
         drop(t);
         assert_eq!(c.inflight(0), 0);
         assert_eq!(c.run_op(OpRequest::sqrt(Posit::one(16))).unwrap(), Posit::one(16));
+        svc.shutdown();
+    }
+
+    /// The soft watermark degrades Ulp(k) traffic with a registered
+    /// kernel to the Approx tier; bit-exact traffic and kernel-less ops
+    /// ride through unchanged, and nothing sheds below the hard cap.
+    #[test]
+    fn soft_watermark_degrades_tolerant_traffic_only() {
+        let mut shard_cfg = cfg(16, 1, 8);
+        shard_cfg.soft_capacity = 1;
+        let svc = ShardedService::start(shard_cfg).unwrap();
+        let c = svc.client();
+        let nine = Posit::from_f64(16, 9.0);
+        let three = Posit::from_f64(16, 3.0);
+        let spec = Op::DIV.approx_spec(16).unwrap().max_ulp;
+
+        // below the watermark nothing degrades, tight tolerance or not
+        let calm = c
+            .submit_op(OpRequest::div(nine, three).with_accuracy(Accuracy::Ulp(1)))
+            .unwrap();
+        assert!(!calm.degraded());
+        assert_eq!(calm.wait().unwrap(), three);
+
+        // hold one slot to sit at the watermark (1 of 8)
+        let held = c.submit_op(OpRequest::sqrt(nine)).unwrap();
+        assert!(!held.degraded(), "the request *reaching* the watermark is not degraded");
+
+        // tolerant div now degrades: flagged, approx-served, within the
+        // kernel's declared bound
+        let t = c
+            .submit_op(OpRequest::div(nine, three).with_accuracy(Accuracy::Ulp(1)))
+            .unwrap();
+        assert!(t.degraded());
+        assert!(t.wait().unwrap().ulp_distance(three) <= spec);
+        assert_eq!(svc.degraded_total(), 1);
+        assert_eq!(svc.metrics(0).degraded.get(Op::DIV), 1);
+        assert!(svc.metrics(0).tiers.get(ExecTier::Approx) >= 1);
+
+        // bit-exact traffic is never degraded, even past the watermark
+        let e = c.submit_op(OpRequest::div(nine, three)).unwrap();
+        assert!(!e.degraded());
+        assert_eq!(e.wait().unwrap(), three);
+
+        // tolerant traffic without a registered kernel stays exact too
+        let a = c
+            .submit_op(OpRequest::add(nine, three).with_accuracy(Accuracy::Ulp(1)))
+            .unwrap();
+        assert!(!a.degraded());
+        assert_eq!(a.wait().unwrap().to_f64(), 12.0);
+
+        assert_eq!(svc.degraded_total(), 1);
+        assert_eq!(svc.shed_total(), 0, "brown-out must precede any shed");
+        drop(held);
+        assert!(svc.counters_render().contains("degraded=1"));
+        svc.shutdown();
+    }
+
+    /// An expired deadline is a typed drop *before* admission: no slot
+    /// consumed, no enqueue, counted in `deadline_drops`.
+    #[test]
+    fn expired_deadline_drops_without_a_slot() {
+        let svc = ShardedService::start(cfg(16, 1, 4)).unwrap();
+        let c = svc.client();
+        let one = Posit::one(16);
+        let req = OpRequest::sqrt(one).with_deadline_ms(50);
+        let stale = Instant::now() - Duration::from_millis(200);
+        match c.submit_op_at(req.clone(), stale).unwrap_err() {
+            PositError::DeadlineExceeded { deadline_ms, waited_ms } => {
+                assert_eq!(deadline_ms, 50);
+                assert!(waited_ms >= 200, "waited {waited_ms} ms");
+            }
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+        assert_eq!(c.inflight(0), 0, "an expired request must never hold a slot");
+        assert_eq!(svc.deadline_drops_total(), 1);
+        assert_eq!(svc.total_requests(), 0, "the drop was never enqueued");
+        // a live deadline sails through
+        assert_eq!(c.submit_op_at(req, Instant::now()).unwrap().wait().unwrap(), one);
+        // deadline-less requests never expire
+        assert_eq!(c.run_op(OpRequest::sqrt(one)).unwrap(), one);
+        assert_eq!(svc.deadline_drops_total(), 1);
+        assert!(svc.counters_render().contains("deadline_drops=1"));
         svc.shutdown();
     }
 }

@@ -1,0 +1,535 @@
+//! Fault-tolerant serving client: one logical request stream fanned
+//! over N endpoints with per-endpoint circuit breakers, bounded retry
+//! with seeded backoff jitter, and duplicate-free completion.
+//!
+//! The [`ResilientClient`] sits where a plain [`ServiceClient`] is too
+//! brittle: endpoints restart, networks drop frames, servers brown out.
+//! Its contract (normative; `docs/SERVING.md` § Failure semantics):
+//!
+//! * **Safe replay.** Every op is pure — same operands, same bits — so
+//!   retrying a request whose fate is unknown (timeout, dead socket) is
+//!   always correct. What must *not* happen is one logical request
+//!   counting twice: replies are matched by wire id and replies for
+//!   already-settled ids are discarded
+//!   ([`ServiceClient::read_reply_for`]), and a retry never reuses the
+//!   connection whose reply-stream state is unknown — the poisoned
+//!   connection is dropped whole, taking any late original reply with
+//!   it. Zero duplicate completions, by construction.
+//! * **Circuit breaking.** Per endpoint, three states: `Closed` (normal;
+//!   consecutive transport failures count up), `Open` (after
+//!   [`BreakerConfig::failure_threshold`] failures — traffic avoids the
+//!   endpoint until [`BreakerConfig::open_cooldown`] passes), `HalfOpen`
+//!   (one probe request; success closes the breaker, failure re-opens
+//!   it). A request only fails over, it never waits for a cooldown while
+//!   another endpoint is healthy.
+//! * **Bounded retry.** At most [`RetryPolicy::max_retries`] retries per
+//!   logical request, exponential backoff from
+//!   [`RetryPolicy::base_backoff`] capped at
+//!   [`RetryPolicy::max_backoff`], jitter drawn from a seeded
+//!   [`Rng`] — test runs with equal seeds back off identically.
+//! * **Typed, not retried.** Request-shape errors (width mismatch,
+//!   unsupported op/width) fail fast: retrying cannot fix them.
+//!   [`PositError::ServiceOverloaded`] and
+//!   [`PositError::DeadlineExceeded`] *are* retried (the next attempt
+//!   restarts the deadline budget server-side) but counted separately —
+//!   they are the server protecting itself, not the network failing.
+
+use std::net::SocketAddr;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use super::net::{ConnectOptions, ServiceClient};
+use crate::error::{PositError, Result};
+use crate::posit::Posit;
+use crate::testkit::Rng;
+use crate::unit::{Accuracy, OpRequest};
+
+/// Retry budget and backoff shape for one logical request.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Retries after the first attempt (so `max_retries + 1` attempts
+    /// total).
+    pub max_retries: u32,
+    /// First backoff; doubles each retry.
+    pub base_backoff: Duration,
+    /// Backoff ceiling.
+    pub max_backoff: Duration,
+    /// Seeds the jitter stream — equal seeds, equal backoff schedules.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_retries: 8,
+            base_backoff: Duration::from_millis(5),
+            max_backoff: Duration::from_millis(500),
+            seed: 0x5EED,
+        }
+    }
+}
+
+/// Per-endpoint circuit-breaker tuning.
+#[derive(Clone, Copy, Debug)]
+pub struct BreakerConfig {
+    /// Consecutive transport failures that open the breaker.
+    pub failure_threshold: u32,
+    /// How long an open breaker rejects traffic before allowing one
+    /// half-open probe.
+    pub open_cooldown: Duration,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        BreakerConfig { failure_threshold: 3, open_cooldown: Duration::from_millis(250) }
+    }
+}
+
+/// Circuit-breaker state of one endpoint.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Breaker {
+    /// Serving; `fails` consecutive transport failures so far.
+    Closed { fails: u32 },
+    /// Not serving until the cooldown instant passes.
+    Open { until: Instant },
+    /// One probe request in flight decides open vs closed.
+    HalfOpen,
+}
+
+struct Endpoint {
+    addr: SocketAddr,
+    conn: Option<ServiceClient>,
+    breaker: Breaker,
+}
+
+/// Aggregate counters of one client's lifetime (see
+/// [`ResilientClient::report`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ResilientReport {
+    /// Logical requests offered via `run_op`/`run_requests`.
+    pub offered: u64,
+    /// Logical requests that returned `Ok`.
+    pub completed: u64,
+    /// Logical requests that exhausted their retry budget (or hit a
+    /// non-retryable error).
+    pub failed: u64,
+    /// Retry attempts (beyond each request's first attempt).
+    pub retries: u64,
+    /// Fresh connections established (first connects and reconnects).
+    pub connects: u64,
+    /// Closed→Open and HalfOpen→Open breaker transitions.
+    pub breaker_opens: u64,
+    /// Replies for already-settled ids discarded by the dedup layer —
+    /// duplicates that were *seen and suppressed*, never surfaced.
+    pub duplicates_discarded: u64,
+    /// Replies flagged brown-out-degraded by the server.
+    pub degraded: u64,
+    /// Retries caused by [`PositError::ServiceOverloaded`].
+    pub shed_retries: u64,
+    /// Retries caused by [`PositError::DeadlineExceeded`].
+    pub deadline_retries: u64,
+    /// Sampled completions that disagreed with [`OpRequest::golden`]
+    /// beyond their accuracy budget ([`ResilientClient::run_requests`]).
+    pub verify_failures: u64,
+}
+
+impl ResilientReport {
+    pub fn summary(&self) -> String {
+        format!(
+            "offered={} completed={} failed={} retries={} connects={} breaker_opens={} \
+             duplicates_discarded={} degraded={} shed_retries={} deadline_retries={} \
+             verify_failures={}",
+            self.offered,
+            self.completed,
+            self.failed,
+            self.retries,
+            self.connects,
+            self.breaker_opens,
+            self.duplicates_discarded,
+            self.degraded,
+            self.shed_retries,
+            self.deadline_retries,
+            self.verify_failures,
+        )
+    }
+}
+
+/// A client over N interchangeable endpoints (every endpoint serves the
+/// same width and the same pure ops). Not thread-safe, like the
+/// [`ServiceClient`] it wraps — one per driver thread.
+pub struct ResilientClient {
+    n: u32,
+    endpoints: Vec<Endpoint>,
+    policy: RetryPolicy,
+    breaker_cfg: BreakerConfig,
+    opts: ConnectOptions,
+    rng: Rng,
+    cursor: usize,
+    stats: ResilientReport,
+}
+
+impl ResilientClient {
+    /// Build a client over `endpoints` (at least one) at posit width
+    /// `n`. Connections are opened lazily, per endpoint, on first use —
+    /// a dead endpoint costs nothing until traffic routes at it.
+    pub fn new(
+        endpoints: &[SocketAddr],
+        n: u32,
+        policy: RetryPolicy,
+        breaker: BreakerConfig,
+        opts: ConnectOptions,
+    ) -> Result<ResilientClient> {
+        if endpoints.is_empty() {
+            return Err(PositError::Execution {
+                detail: "resilient client needs at least one endpoint".into(),
+            });
+        }
+        Ok(ResilientClient {
+            n,
+            endpoints: endpoints
+                .iter()
+                .map(|&addr| Endpoint { addr, conn: None, breaker: Breaker::Closed { fails: 0 } })
+                .collect(),
+            policy,
+            breaker_cfg: breaker,
+            opts,
+            rng: Rng::seeded(policy.seed),
+            cursor: 0,
+            stats: ResilientReport::default(),
+        })
+    }
+
+    /// Lifetime counters so far.
+    pub fn report(&self) -> ResilientReport {
+        let mut r = self.stats;
+        // live connections still hold their dedup/degraded tallies
+        for ep in &self.endpoints {
+            if let Some(c) = &ep.conn {
+                r.duplicates_discarded += c.stale_replies();
+                r.degraded += c.degraded_replies();
+            }
+        }
+        r
+    }
+
+    /// Endpoints currently breaker-open.
+    pub fn open_breakers(&self) -> usize {
+        self.endpoints
+            .iter()
+            .filter(|e| matches!(e.breaker, Breaker::Open { .. }))
+            .count()
+    }
+
+    /// Can this error be fixed by trying again (possibly elsewhere)?
+    /// Transport faults and server self-protection are retryable;
+    /// request-shape errors are not.
+    fn retryable(e: &PositError) -> bool {
+        matches!(
+            e,
+            PositError::Timeout { .. }
+                | PositError::Execution { .. }
+                | PositError::Protocol { .. }
+                | PositError::ServiceStopped
+                | PositError::ServiceOverloaded { .. }
+                | PositError::DeadlineExceeded { .. }
+        )
+    }
+
+    /// One logical request: route, retry within policy, never complete
+    /// twice. The error of the last attempt surfaces when the budget is
+    /// exhausted.
+    pub fn run_op(&mut self, req: &OpRequest) -> Result<Posit> {
+        self.stats.offered += 1;
+        let mut attempt = 0u32;
+        loop {
+            match self.try_once(req) {
+                Ok(p) => {
+                    self.stats.completed += 1;
+                    return Ok(p);
+                }
+                Err(e) if !Self::retryable(&e) => {
+                    self.stats.failed += 1;
+                    return Err(e);
+                }
+                Err(e) => {
+                    match e {
+                        PositError::ServiceOverloaded { .. } => self.stats.shed_retries += 1,
+                        PositError::DeadlineExceeded { .. } => self.stats.deadline_retries += 1,
+                        _ => {}
+                    }
+                    if attempt >= self.policy.max_retries {
+                        self.stats.failed += 1;
+                        return Err(e);
+                    }
+                    attempt += 1;
+                    self.stats.retries += 1;
+                    self.backoff(attempt);
+                }
+            }
+        }
+    }
+
+    /// Exponential backoff with seeded jitter: `base · 2^(attempt-1)`
+    /// capped at `max_backoff`, then jittered to 50–100% of that so
+    /// retry storms decorrelate — deterministically, per seed.
+    fn backoff(&mut self, attempt: u32) {
+        let exp = self
+            .policy
+            .base_backoff
+            .saturating_mul(1u32 << attempt.saturating_sub(1).min(20))
+            .min(self.policy.max_backoff);
+        let micros = exp.as_micros().min(u128::from(u64::MAX)) as u64;
+        if micros == 0 {
+            return;
+        }
+        let jittered = micros / 2 + self.rng.below(micros / 2 + 1);
+        thread::sleep(Duration::from_micros(jittered));
+    }
+
+    /// Pick the next endpoint the breaker allows, round-robin from the
+    /// cursor. Open breakers past their cooldown become half-open (one
+    /// probe). If *every* breaker is open and cooling, sleep out the
+    /// nearest cooldown — progress beats failing fast when there is
+    /// nowhere to fail over to.
+    fn pick(&mut self) -> usize {
+        loop {
+            let k = self.endpoints.len();
+            for off in 0..k {
+                let i = (self.cursor + off) % k;
+                match self.endpoints[i].breaker {
+                    Breaker::Closed { .. } | Breaker::HalfOpen => {
+                        self.cursor = (i + 1) % k;
+                        return i;
+                    }
+                    Breaker::Open { until } => {
+                        if Instant::now() >= until {
+                            self.endpoints[i].breaker = Breaker::HalfOpen;
+                            self.cursor = (i + 1) % k;
+                            return i;
+                        }
+                    }
+                }
+            }
+            let nearest = self
+                .endpoints
+                .iter()
+                .filter_map(|e| match e.breaker {
+                    Breaker::Open { until } => Some(until),
+                    _ => None,
+                })
+                .min()
+                .expect("all endpoints open implies an open cooldown");
+            thread::sleep(nearest.saturating_duration_since(Instant::now()));
+        }
+    }
+
+    /// A transport success closes the endpoint's breaker.
+    fn on_success(&mut self, i: usize) {
+        self.endpoints[i].breaker = Breaker::Closed { fails: 0 };
+    }
+
+    /// A transport failure poisons the endpoint's connection (dropping
+    /// it, and with it any in-flight reply whose fate is unknown) and
+    /// advances the breaker.
+    fn on_transport_failure(&mut self, i: usize) {
+        self.poison(i);
+        let cfg = self.breaker_cfg;
+        let ep = &mut self.endpoints[i];
+        ep.breaker = match ep.breaker {
+            Breaker::Closed { fails } if fails + 1 < cfg.failure_threshold => {
+                Breaker::Closed { fails: fails + 1 }
+            }
+            Breaker::Closed { .. } | Breaker::HalfOpen => {
+                self.stats.breaker_opens += 1;
+                Breaker::Open { until: Instant::now() + cfg.open_cooldown }
+            }
+            open @ Breaker::Open { .. } => open,
+        };
+    }
+
+    /// Drop an endpoint's connection, folding its dedup/degraded
+    /// counters into the lifetime stats first.
+    fn poison(&mut self, i: usize) {
+        if let Some(c) = self.endpoints[i].conn.take() {
+            self.stats.duplicates_discarded += c.stale_replies();
+            self.stats.degraded += c.degraded_replies();
+        }
+    }
+
+    fn try_once(&mut self, req: &OpRequest) -> Result<Posit> {
+        let i = self.pick();
+        if self.endpoints[i].conn.is_none() {
+            match ServiceClient::connect_with(self.endpoints[i].addr, self.n, self.opts) {
+                Ok(c) => {
+                    self.stats.connects += 1;
+                    self.endpoints[i].conn = Some(c);
+                }
+                Err(e) => {
+                    self.on_transport_failure(i);
+                    return Err(e);
+                }
+            }
+        }
+        let conn = self.endpoints[i].conn.as_mut().expect("connected above");
+        let id = match conn.send_request(req) {
+            Ok(id) => id,
+            Err(e) => {
+                self.on_transport_failure(i);
+                return Err(e);
+            }
+        };
+        match conn.read_reply_for(id) {
+            // transport-level failure: the reply stream is unknown,
+            // poison the whole connection
+            Err(e) => {
+                self.on_transport_failure(i);
+                Err(e)
+            }
+            // per-request server answer: the connection is healthy
+            // (it just carried a well-formed reply), win or lose
+            Ok(result) => {
+                self.on_success(i);
+                result
+            }
+        }
+    }
+
+    /// Drive a request list through [`ResilientClient::run_op`],
+    /// verifying every `verify_every`-th completion (0 = never) against
+    /// [`OpRequest::golden`] within its accuracy budget. Returns the
+    /// lifetime report (including prior traffic on this client).
+    pub fn run_requests(&mut self, reqs: &[OpRequest], verify_every: usize) -> ResilientReport {
+        for (i, req) in reqs.iter().enumerate() {
+            let verify = verify_every != 0 && i % verify_every == 0;
+            match self.run_op(req) {
+                Ok(p) => {
+                    if verify {
+                        let tol = match req.accuracy() {
+                            Accuracy::Exact => 0u64,
+                            Accuracy::Ulp(k) => u64::from(k),
+                        };
+                        // a degraded reply may stretch to its kernel's
+                        // declared bound; widen to the loosest registered
+                        // contract rather than miscounting it
+                        let declared =
+                            req.op.approx_spec(self.n).map_or(0, |s| s.max_ulp);
+                        if p.ulp_distance(req.golden()) > tol.max(declared) {
+                            self.stats.verify_failures += 1;
+                        }
+                    }
+                }
+                Err(_) => {} // already counted in failed
+            }
+        }
+        self.report()
+    }
+
+    /// Drop every live connection (the server sees EOF and reaps it);
+    /// breaker state and lifetime stats survive.
+    pub fn close_connections(&mut self) {
+        for i in 0..self.endpoints.len() {
+            self.poison(i);
+        }
+    }
+
+    /// Ask every reachable endpoint's server process to shut down
+    /// (best-effort; used by CLI drains).
+    pub fn shutdown_endpoints(&mut self) {
+        for i in 0..self.endpoints.len() {
+            self.poison(i);
+            let addr = self.endpoints[i].addr;
+            if let Ok(c) = ServiceClient::connect_with(addr, self.n, self.opts) {
+                let _ = c.shutdown_server();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Breaker state machine: threshold consecutive failures open it,
+    /// cooldown expiry half-opens it, a probe success closes it, a probe
+    /// failure re-opens it.
+    #[test]
+    fn breaker_transitions() {
+        let dead: SocketAddr = "127.0.0.1:1".parse().unwrap();
+        let breaker = BreakerConfig {
+            failure_threshold: 2,
+            open_cooldown: Duration::from_millis(50),
+        };
+        let policy = RetryPolicy {
+            max_retries: 0,
+            base_backoff: Duration::from_micros(100),
+            max_backoff: Duration::from_millis(1),
+            seed: 1,
+        };
+        let opts = ConnectOptions {
+            connect_timeout: Some(Duration::from_millis(200)),
+            read_timeout: Some(Duration::from_millis(200)),
+        };
+        let mut rc = ResilientClient::new(&[dead], 16, policy, breaker, opts).unwrap();
+        assert!(ResilientClient::new(&[], 16, policy, breaker, opts).is_err());
+
+        let req = OpRequest::sqrt(Posit::one(16));
+        // two failed attempts (threshold) open the breaker exactly once
+        assert!(rc.run_op(&req).is_err());
+        assert_eq!(rc.open_breakers(), 0);
+        assert!(rc.run_op(&req).is_err());
+        assert_eq!(rc.open_breakers(), 1);
+        assert_eq!(rc.report().breaker_opens, 1);
+
+        // after the cooldown the next attempt is a half-open probe; its
+        // failure re-opens (second open transition)
+        thread::sleep(Duration::from_millis(60));
+        assert!(rc.run_op(&req).is_err());
+        assert_eq!(rc.open_breakers(), 1);
+        assert_eq!(rc.report().breaker_opens, 2);
+        let r = rc.report();
+        assert_eq!(r.offered, 3);
+        assert_eq!(r.failed, 3);
+        assert_eq!(r.completed, 0);
+    }
+
+    /// Request-shape errors must fail fast, not burn the retry budget.
+    #[test]
+    fn non_retryable_errors_fail_fast() {
+        assert!(!ResilientClient::retryable(&PositError::WidthMismatch {
+            expected: 16,
+            got: 32
+        }));
+        assert!(!ResilientClient::retryable(&PositError::UnsupportedApprox {
+            op: "add",
+            n: 16
+        }));
+        assert!(ResilientClient::retryable(&PositError::Timeout {
+            what: "socket read".into(),
+            after: Duration::from_millis(1),
+        }));
+        assert!(ResilientClient::retryable(&PositError::ServiceOverloaded {
+            shard: 0,
+            inflight: 1,
+            capacity: 1,
+        }));
+        assert!(ResilientClient::retryable(&PositError::DeadlineExceeded {
+            deadline_ms: 5,
+            waited_ms: 10,
+        }));
+    }
+
+    /// Backoff is deterministic per seed and bounded by the ceiling.
+    #[test]
+    fn backoff_is_seeded_and_bounded() {
+        let draws = |seed: u64| -> Vec<u64> {
+            let mut rng = Rng::seeded(seed);
+            (0..8).map(|_| rng.below(1000)).collect()
+        };
+        assert_eq!(draws(7), draws(7));
+        assert_ne!(draws(7), draws(8));
+        // the exponential cap: by attempt 20+ the shift saturates
+        let policy = RetryPolicy::default();
+        let exp = policy.base_backoff.saturating_mul(1u32 << 20).min(policy.max_backoff);
+        assert_eq!(exp, policy.max_backoff);
+    }
+}

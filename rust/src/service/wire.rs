@@ -17,8 +17,8 @@
 //! |------|------|---------|
 //! | `HELLO`    | 0x01 | `n: u8` — the client's posit width |
 //! | `WELCOME`  | 0x02 | `n: u8, shards: u16` |
-//! | `REQUEST`  | 0x03 | `id: u64, opcode: u8, alg: u8, a: u64, b: u64, c: u64, va_len: u32, vb_len: u32, accuracy: u8, max_ulp: u32, va: u64 × va_len, vb: u64 × vb_len` |
-//! | `RESPONSE` | 0x04 | `id: u64, bits: u64` |
+//! | `REQUEST`  | 0x03 | `id: u64, opcode: u8, alg: u8, a: u64, b: u64, c: u64, va_len: u32, vb_len: u32, accuracy: u8, max_ulp: u32, deadline_ms: u32, va: u64 × va_len, vb: u64 × vb_len` |
+//! | `RESPONSE` | 0x04 | `id: u64, bits: u64, flags: u8` |
 //! | `ERROR`    | 0x05 | `id: u64, code: u8, aux0: u32, aux1: u32, aux2: u32, msg_len: u16, msg: utf-8 × msg_len` |
 //! | `BYE`      | 0x06 | empty |
 //! | `SHUTDOWN` | 0x07 | empty |
@@ -37,6 +37,19 @@
 //! the request eligible for the server's bounded-error Approx tier.
 //! Any other `accuracy` byte is a [`PositError::Protocol`] rejection.
 //!
+//! Version 3 adds the failure-semantics plumbing. `deadline_ms` (offset
+//! 47 of `REQUEST`, `u32`, 0 = none) is the request's end-to-end budget
+//! in milliseconds, measured from the moment the server starts reading
+//! the frame: a request whose budget has elapsed by admission time is
+//! answered with `ERROR` code 7 without consuming a shard slot.
+//! `RESPONSE` grows a trailing `flags` byte whose only defined bit is
+//! [`RESPONSE_FLAG_DEGRADED`] (0x01) — set when brown-out forced the
+//! request onto the Approx tier; all other bits must be zero. The
+//! response `id` field (offset 0, unchanged since v1) is the normative
+//! request-id echo that retry deduplication keys on: a client that
+//! replays a request after a timeout must discard any late reply whose
+//! echoed id it has already completed.
+//!
 //! `ERROR` codes (`aux0..aux2` meaning depends on the code):
 //!
 //! | code | error | aux |
@@ -47,8 +60,11 @@
 //! | 4 | [`PositError::ServiceStopped`] | 0 |
 //! | 5 | other server-side failure (surfaces as [`PositError::Execution`]) | 0 (detail in `msg`) |
 //! | 6 | [`PositError::WidthOutOfRange`] | n, 0, 0 |
+//! | 7 | [`PositError::DeadlineExceeded`] | deadline_ms, waited_ms, 0 |
+//! | 8 | [`PositError::Timeout`] | after_ms, 0, 0 (what in `msg`) |
 
 use std::io::{Read, Write};
+use std::time::Duration;
 
 use crate::division::Algorithm;
 use crate::error::{PositError, Result};
@@ -58,8 +74,16 @@ use crate::unit::{Accuracy, Op, OpRequest};
 /// Leading frame bytes: `b"PD"` (posit-div).
 pub const MAGIC: [u8; 2] = *b"PD";
 /// Protocol version carried in every frame header. Version 2 added the
-/// per-request accuracy policy (`accuracy`/`max_ulp`) to `REQUEST`.
-pub const VERSION: u8 = 2;
+/// per-request accuracy policy (`accuracy`/`max_ulp`) to `REQUEST`;
+/// version 3 added `deadline_ms` to `REQUEST` and the `flags` byte
+/// (degraded-serve marker) to `RESPONSE`.
+pub const VERSION: u8 = 3;
+
+/// `RESPONSE.flags` bit: the reply was served by the Approx tier because
+/// brown-out degradation forced it there (soft watermark crossed and the
+/// request declared an ulp tolerance). Clear on normally-routed replies,
+/// including policy-routed approx serves.
+pub const RESPONSE_FLAG_DEGRADED: u8 = 0x01;
 /// Header size in bytes: magic + version + kind + payload length.
 pub const HEADER_LEN: usize = 8;
 /// Largest accepted payload. Caps a `Dot`/`Axpy` request at ~65k lanes
@@ -205,10 +229,11 @@ pub fn decode_welcome(p: &[u8]) -> Result<(u32, usize)> {
 // ---- REQUEST ------------------------------------------------------------
 
 /// Fixed-size prefix of a `REQUEST` payload (before the vector lanes):
-/// id, opcode, alg, three operand words, two vector lengths, and the
+/// id, opcode, alg, three operand words, two vector lengths, the
 /// version-2 accuracy policy (`accuracy: u8` at offset 42, `max_ulp:
-/// u32` at 43).
-pub const REQUEST_PREFIX: usize = 8 + 1 + 1 + 3 * 8 + 2 * 4 + 1 + 4;
+/// u32` at 43), and the version-3 deadline budget (`deadline_ms: u32`
+/// at 47).
+pub const REQUEST_PREFIX: usize = 8 + 1 + 1 + 3 * 8 + 2 * 4 + 1 + 4 + 4;
 
 fn alg_index(alg: Algorithm) -> u8 {
     Algorithm::ALL
@@ -277,6 +302,7 @@ pub fn encode_request(id: u64, req: &OpRequest) -> Vec<u8> {
     };
     p.push(acc);
     p.extend_from_slice(&max_ulp.to_le_bytes());
+    p.extend_from_slice(&req.deadline_ms().to_le_bytes());
     for w in va.iter().chain(vb.iter()) {
         p.extend_from_slice(&w.to_le_bytes());
     }
@@ -328,6 +354,7 @@ pub fn decode_request(p: &[u8], n: u32) -> Result<(u64, OpRequest)> {
         (1, k) => Accuracy::Ulp(k),
         (other, _) => return Err(protocol(format!("unknown accuracy policy byte {other}"))),
     };
+    let deadline_ms = u32::from_le_bytes(p[47..51].try_into().expect("4-byte slice"));
     let expected = REQUEST_PREFIX + 8 * (va_len + vb_len);
     if p.len() != expected {
         return Err(protocol(format!(
@@ -386,23 +413,34 @@ pub fn decode_request(p: &[u8], n: u32) -> Result<(u64, OpRequest)> {
             .collect::<Result<_>>()?;
         OpRequest::new(op, &operands)?
     };
-    Ok((id, req.with_accuracy(accuracy)))
+    Ok((id, req.with_accuracy(accuracy).with_deadline_ms(deadline_ms)))
 }
 
 // ---- RESPONSE -----------------------------------------------------------
 
-pub fn encode_response(id: u64, bits: u64) -> Vec<u8> {
-    let mut p = Vec::with_capacity(16);
+/// Encode a `RESPONSE`: the echoed request id, the result bits, and the
+/// version-3 `flags` byte ([`RESPONSE_FLAG_DEGRADED`] is the only
+/// defined bit).
+pub fn encode_response(id: u64, bits: u64, flags: u8) -> Vec<u8> {
+    let mut p = Vec::with_capacity(17);
     p.extend_from_slice(&id.to_le_bytes());
     p.extend_from_slice(&bits.to_le_bytes());
+    p.push(flags);
     p
 }
 
-pub fn decode_response(p: &[u8]) -> Result<(u64, u64)> {
-    if p.len() != 16 {
-        return Err(protocol(format!("RESPONSE payload must be 16 bytes, got {}", p.len())));
+/// Decode a `RESPONSE` into `(id, bits, flags)`. Undefined flag bits are
+/// a [`PositError::Protocol`] rejection — a v4 server cannot silently
+/// smuggle semantics past a v3 client.
+pub fn decode_response(p: &[u8]) -> Result<(u64, u64, u8)> {
+    if p.len() != 17 {
+        return Err(protocol(format!("RESPONSE payload must be 17 bytes, got {}", p.len())));
     }
-    Ok((u64_at(p, 0), u64_at(p, 8)))
+    let flags = p[16];
+    if flags & !RESPONSE_FLAG_DEGRADED != 0 {
+        return Err(protocol(format!("RESPONSE with undefined flag bits {flags:#04x}")));
+    }
+    Ok((u64_at(p, 0), u64_at(p, 8), flags))
 }
 
 // ---- ERROR --------------------------------------------------------------
@@ -416,6 +454,13 @@ fn error_code_aux(e: &PositError) -> (u8, [u32; 3], String) {
         PositError::Protocol { detail } => (3, [0; 3], detail.clone()),
         PositError::ServiceStopped => (4, [0; 3], String::new()),
         PositError::WidthOutOfRange { n } => (6, [*n, 0, 0], String::new()),
+        PositError::DeadlineExceeded { deadline_ms, waited_ms } => {
+            (7, [*deadline_ms, *waited_ms, 0], String::new())
+        }
+        PositError::Timeout { what, after } => {
+            let ms = after.as_millis().min(u128::from(u32::MAX)) as u32;
+            (8, [ms, 0, 0], what.clone())
+        }
         other => (5, [0; 3], other.to_string()),
     }
 }
@@ -463,6 +508,8 @@ pub fn decode_error(p: &[u8]) -> Result<(u64, PositError)> {
         4 => PositError::ServiceStopped,
         5 => PositError::Execution { detail: msg },
         6 => PositError::WidthOutOfRange { n: aux(0) },
+        7 => PositError::DeadlineExceeded { deadline_ms: aux(0), waited_ms: aux(1) },
+        8 => PositError::Timeout { what: msg, after: Duration::from_millis(u64::from(aux(0))) },
         other => return Err(protocol(format!("unknown ERROR code {other}"))),
     };
     Ok((id, e))
@@ -532,7 +579,7 @@ mod tests {
 
         // truncated: header promises more payload than the stream holds
         let mut buf = Vec::new();
-        write_frame(&mut buf, FrameKind::Response, &encode_response(1, 2)).unwrap();
+        write_frame(&mut buf, FrameKind::Response, &encode_response(1, 2, 0)).unwrap();
         buf.truncate(buf.len() - 5);
         let e = read_frame(&mut Cursor::new(&buf)).unwrap_err();
         assert!(matches!(e, PositError::Protocol { .. }), "{e}");
@@ -566,12 +613,19 @@ mod tests {
                     1 => Accuracy::Ulp(i),
                     _ => Accuracy::Ulp(u32::MAX),
                 };
-                let req = wl.next_request().with_accuracy(accuracy);
+                let deadline_ms = match i % 4 {
+                    0 => 0,
+                    1 => i,
+                    2 => 1,
+                    _ => u32::MAX,
+                };
+                let req = wl.next_request().with_accuracy(accuracy).with_deadline_ms(deadline_ms);
                 let id = rng.next_u64();
                 let (rid, back) = decode_request(&encode_request(id, &req), n).unwrap();
                 assert_eq!(rid, id);
                 assert_eq!(back.op, req.op);
                 assert_eq!(back.accuracy(), req.accuracy());
+                assert_eq!(back.deadline_ms(), deadline_ms);
                 assert_eq!(back.bits(), req.bits());
                 assert_eq!(
                     back.vector_lanes().map(|(a, b, c)| (a.to_vec(), b.to_vec(), c)),
@@ -672,11 +726,60 @@ mod tests {
         assert!(e.to_string().contains("accuracy policy"), "{e}");
     }
 
+    /// The v3 deadline occupies fixed bytes 47..51 of the REQUEST prefix
+    /// (after `max_ulp`, before the vector lanes), defaulting to 0 =
+    /// no deadline; every earlier field keeps its v2 offset.
+    #[test]
+    fn deadline_bytes_and_roundtrip() {
+        let n = 16;
+        assert_eq!(REQUEST_PREFIX, 51);
+        let plain = encode_request(1, &OpRequest::sqrt(Posit::one(n)));
+        assert_eq!(plain.len(), REQUEST_PREFIX);
+        assert_eq!(&plain[47..51], &[0u8; 4]);
+
+        let stamped =
+            encode_request(2, &OpRequest::sqrt(Posit::one(n)).with_deadline_ms(12_345));
+        assert_eq!(&stamped[47..51], &12_345u32.to_le_bytes());
+        let (_, back) = decode_request(&stamped, n).unwrap();
+        assert_eq!(back.deadline_ms(), 12_345);
+        assert_eq!(back.accuracy(), Accuracy::Exact, "deadline is orthogonal to accuracy");
+
+        // a reduction carries the deadline in the same prefix slot, with
+        // lanes following it
+        let a = [Posit::one(n); 3];
+        let dot = OpRequest::dot(&a, &a).unwrap().with_deadline_ms(7);
+        let p = encode_request(3, &dot);
+        assert_eq!(p.len(), REQUEST_PREFIX + 8 * 6);
+        assert_eq!(&p[47..51], &7u32.to_le_bytes());
+        let (_, back) = decode_request(&p, n).unwrap();
+        assert_eq!(back.deadline_ms(), 7);
+        assert_eq!(back.golden(), dot.golden());
+
+        // a v2-length payload (prefix without the deadline word) is a
+        // typed rejection, not a misparse
+        let e = decode_request(&plain[..47], n).unwrap_err();
+        assert!(matches!(e, PositError::Protocol { .. }), "{e}");
+    }
+
     #[test]
     fn response_roundtrip() {
-        let (id, bits) = decode_response(&encode_response(0xDEAD, 0xBEEF)).unwrap();
-        assert_eq!((id, bits), (0xDEAD, 0xBEEF));
+        let (id, bits, flags) = decode_response(&encode_response(0xDEAD, 0xBEEF, 0)).unwrap();
+        assert_eq!((id, bits, flags), (0xDEAD, 0xBEEF, 0));
+        // v2-shaped (16-byte) responses are rejected
+        assert!(decode_response(&[0; 16]).is_err());
         assert!(decode_response(&[0; 15]).is_err());
+
+        // the degraded marker round-trips; undefined bits are typed
+        // Protocol rejections
+        let p = encode_response(5, 9, RESPONSE_FLAG_DEGRADED);
+        let (id, bits, flags) = decode_response(&p).unwrap();
+        assert_eq!((id, bits), (5, 9));
+        assert_eq!(flags & RESPONSE_FLAG_DEGRADED, RESPONSE_FLAG_DEGRADED);
+        let mut p = encode_response(5, 9, 0);
+        p[16] = 0x82;
+        let e = decode_response(&p).unwrap_err();
+        assert!(matches!(e, PositError::Protocol { .. }), "{e}");
+        assert!(e.to_string().contains("flag bits"), "{e}");
     }
 
     #[test]
@@ -687,6 +790,11 @@ mod tests {
             PositError::Protocol { detail: "bad magic".into() },
             PositError::ServiceStopped,
             PositError::WidthOutOfRange { n: 3 },
+            PositError::DeadlineExceeded { deadline_ms: 50, waited_ms: 321 },
+            PositError::Timeout {
+                what: "socket read (header)".into(),
+                after: Duration::from_millis(1500),
+            },
         ];
         for e in cases {
             let (id, back) = decode_error(&encode_error(11, &e)).unwrap();

@@ -313,6 +313,19 @@ impl Op {
             }
         }
     }
+
+    /// Whether brown-out degradation may *force* this request onto the
+    /// Approx tier: the requester declared **any** error tolerance
+    /// (`Accuracy::Ulp(k)`, whatever `k`) and a bounded-error kernel is
+    /// registered for `(op, width)`. Unlike [`Op::routes_approx`], the
+    /// kernel's declared bound need not satisfy `k` — under overload the
+    /// service stretches the tolerance rather than shedding the request,
+    /// and the response is still within the kernel's declared
+    /// [`crate::division::approx::ApproxSpec`] bound. `Exact` traffic is
+    /// never degraded.
+    pub fn degrades_approx(self, n: u32, accuracy: Accuracy) -> bool {
+        matches!(accuracy, Accuracy::Ulp(_)) && self.approx_spec(n).is_some()
+    }
 }
 
 impl fmt::Display for Op {
@@ -373,16 +386,18 @@ impl fmt::Display for Accuracy {
 }
 
 /// One op-tagged request: the operation plus its operands — three scalar
-/// slots for the scalar ops, vector lanes for the reductions — and the
+/// slots for the scalar ops, vector lanes for the reductions — the
 /// accuracy policy the requester tolerates ([`Accuracy`], default
-/// `Exact`). The traffic unit of the coordinator
-/// ([`crate::coordinator::Client`]) and the mixed workloads
-/// ([`crate::workload::MixedOps`]).
+/// `Exact`), and an optional end-to-end deadline budget in milliseconds
+/// (0 = none; carried on the wire, enforced at shard admission). The
+/// traffic unit of the coordinator ([`crate::coordinator::Client`]) and
+/// the mixed workloads ([`crate::workload::MixedOps`]).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct OpRequest {
     pub op: Op,
     operands: Operands,
     accuracy: Accuracy,
+    deadline_ms: u32,
 }
 
 /// Operand storage: the constructors guarantee internal consistency
@@ -429,14 +444,24 @@ impl OpRequest {
             _ => {
                 let mut slots = [Posit::zero(w); 3];
                 slots[..operands.len()].copy_from_slice(operands);
-                OpRequest { op, operands: Operands::Scalar(slots), accuracy: Accuracy::Exact }
+                OpRequest {
+                    op,
+                    operands: Operands::Scalar(slots),
+                    accuracy: Accuracy::Exact,
+                    deadline_ms: 0,
+                }
             }
         })
     }
 
     fn unary(op: Op, a: Posit) -> OpRequest {
         let z = Posit::zero(a.width());
-        OpRequest { op, operands: Operands::Scalar([a, z, z]), accuracy: Accuracy::Exact }
+        OpRequest {
+            op,
+            operands: Operands::Scalar([a, z, z]),
+            accuracy: Accuracy::Exact,
+            deadline_ms: 0,
+        }
     }
 
     fn binary(op: Op, a: Posit, b: Posit) -> OpRequest {
@@ -445,6 +470,7 @@ impl OpRequest {
             op,
             operands: Operands::Scalar([a, b, Posit::zero(a.width())]),
             accuracy: Accuracy::Exact,
+            deadline_ms: 0,
         }
     }
 
@@ -454,6 +480,7 @@ impl OpRequest {
             op,
             operands: Operands::Vector { a, b, c: c.unwrap_or(Posit::zero(w)) },
             accuracy: Accuracy::Exact,
+            deadline_ms: 0,
         }
     }
 
@@ -537,6 +564,7 @@ impl OpRequest {
             op: Op::MulAdd,
             operands: Operands::Scalar([a, b, c]),
             accuracy: Accuracy::Exact,
+            deadline_ms: 0,
         }
     }
 
@@ -553,6 +581,31 @@ impl OpRequest {
     #[inline]
     pub fn accuracy(&self) -> Accuracy {
         self.accuracy
+    }
+
+    /// Attach an end-to-end deadline budget in milliseconds (builder
+    /// style; 0 — the constructors' default — means no deadline). The
+    /// budget travels in the wire-v3 REQUEST frame and is enforced at
+    /// shard admission: a request whose budget has already elapsed when
+    /// the router looks at it is dropped with the typed
+    /// [`crate::PositError::DeadlineExceeded`] *before* it consumes an
+    /// admission slot.
+    pub fn with_deadline_ms(mut self, deadline_ms: u32) -> OpRequest {
+        self.deadline_ms = deadline_ms;
+        self
+    }
+
+    /// The deadline budget in milliseconds (0 = no deadline).
+    #[inline]
+    pub fn deadline_ms(&self) -> u32 {
+        self.deadline_ms
+    }
+
+    /// The deadline budget as a [`Duration`], or `None` when unset.
+    #[inline]
+    pub fn deadline(&self) -> Option<core::time::Duration> {
+        (self.deadline_ms > 0)
+            .then(|| core::time::Duration::from_millis(u64::from(self.deadline_ms)))
     }
 
     /// The meaningful scalar operands (first `arity` slots). Reduction
@@ -1592,6 +1645,32 @@ mod tests {
         let spec = Op::DIV.approx_spec(32).unwrap();
         assert_eq!((spec.n, spec.max_ulp), (32, 4096));
         assert_eq!(Op::FusedSum.approx_spec(16), None);
+
+        // brown-out degradation: any Ulp(k) with a registered kernel is
+        // force-eligible, even when k is below the declared bound; Exact
+        // and kernel-less ops never are.
+        assert!(Op::DIV.degrades_approx(16, Accuracy::Ulp(1)));
+        assert!(Op::DIV.degrades_approx(16, Accuracy::Ulp(u32::MAX)));
+        assert!(!Op::DIV.degrades_approx(16, Accuracy::Exact));
+        assert!(!Op::Add.degrades_approx(16, Accuracy::Ulp(u32::MAX)));
+        assert!(!Op::Dot.degrades_approx(16, Accuracy::Ulp(u32::MAX)));
+        assert!(!Op::DIV.degrades_approx(24, Accuracy::Ulp(u32::MAX)));
+    }
+
+    #[test]
+    fn deadline_budget_on_requests() {
+        let one = Posit::one(16);
+        let req = OpRequest::div(one, one);
+        assert_eq!(req.deadline_ms(), 0);
+        assert_eq!(req.deadline(), None);
+        let req = req.with_deadline_ms(250);
+        assert_eq!(req.deadline_ms(), 250);
+        assert_eq!(req.deadline(), Some(core::time::Duration::from_millis(250)));
+        // builder order does not matter and accuracy is preserved
+        let req = OpRequest::sqrt(one)
+            .with_deadline_ms(5)
+            .with_accuracy(Accuracy::Ulp(3));
+        assert_eq!((req.deadline_ms(), req.accuracy()), (5, Accuracy::Ulp(3)));
     }
 
     #[test]

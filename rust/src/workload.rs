@@ -259,12 +259,13 @@ pub struct MixedOps {
     pub n: u32,
     pub mix: OpMix,
     accuracy: Accuracy,
+    deadline_ms: u32,
     rng: Rng,
 }
 
 impl MixedOps {
     pub fn new(n: u32, mix: OpMix, seed: u64) -> Self {
-        MixedOps { n, mix, accuracy: Accuracy::Exact, rng: Rng::seeded(seed) }
+        MixedOps { n, mix, accuracy: Accuracy::Exact, deadline_ms: 0, rng: Rng::seeded(seed) }
     }
 
     /// Stamp every generated request with an accuracy policy (the
@@ -273,6 +274,15 @@ impl MixedOps {
     /// declared spec satisfies `k`.
     pub fn with_accuracy(mut self, accuracy: Accuracy) -> Self {
         self.accuracy = accuracy;
+        self
+    }
+
+    /// Stamp every generated request with an end-to-end deadline budget
+    /// in milliseconds (0 = none, the default): the service drops the
+    /// request with [`crate::error::PositError::DeadlineExceeded`] if
+    /// the budget expires before admission.
+    pub fn with_deadline_ms(mut self, deadline_ms: u32) -> Self {
+        self.deadline_ms = deadline_ms;
         self
     }
 
@@ -344,7 +354,7 @@ impl MixedOps {
                 OpRequest::axpy(alpha, &xs, &ys).expect("generated lanes match")
             }
         };
-        req.with_accuracy(self.accuracy)
+        req.with_accuracy(self.accuracy).with_deadline_ms(self.deadline_ms)
     }
 
     pub fn name(&self) -> &'static str {
@@ -390,6 +400,12 @@ impl OpenLoop {
     /// Stamp every arrival with an accuracy policy (default Exact).
     pub fn with_accuracy(mut self, accuracy: Accuracy) -> Self {
         self.ops = self.ops.with_accuracy(accuracy);
+        self
+    }
+
+    /// Stamp every arrival with a deadline budget in ms (default 0 = none).
+    pub fn with_deadline_ms(mut self, deadline_ms: u32) -> Self {
+        self.ops = self.ops.with_deadline_ms(deadline_ms);
         self
     }
 
@@ -491,6 +507,19 @@ mod tests {
         let mut wl = OpenLoop::new(16, OpMix::DEFAULT, 1000.0, 7).with_accuracy(Accuracy::Ulp(9));
         let (_, req) = wl.next_arrival();
         assert_eq!(req.accuracy(), Accuracy::Ulp(9));
+    }
+
+    #[test]
+    fn mixed_ops_stamp_deadline() {
+        let mut w = MixedOps::new(16, OpMix::DEFAULT, 7);
+        assert_eq!(w.next_request().deadline_ms(), 0, "no deadline by default");
+        let mut w = MixedOps::new(16, OpMix::DEFAULT, 7).with_deadline_ms(250);
+        for _ in 0..100 {
+            assert_eq!(w.next_request().deadline_ms(), 250);
+        }
+        let mut wl = OpenLoop::new(16, OpMix::DEFAULT, 1000.0, 7).with_deadline_ms(9);
+        let (_, req) = wl.next_arrival();
+        assert_eq!(req.deadline_ms(), 9);
     }
 
     #[test]

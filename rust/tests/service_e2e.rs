@@ -1,19 +1,25 @@
 //! End-to-end soak of the sharded TCP serving tier: sustained mixed
 //! traffic across shards over loopback with bounded tail latency,
 //! typed overload shedding, open-loop (arrival-rate) driving, consistent
-//! `(op, width)` shard affinity, and typed rejection of malformed wire
-//! frames. Everything here goes through the real socket path — the same
-//! bytes `posit-div serve`/`client` exchange (docs/SERVING.md).
+//! `(op, width)` shard affinity, typed rejection of malformed wire
+//! frames, brown-out degradation, per-request deadlines, and a seeded
+//! chaos soak through the fault-injecting proxy. Everything here goes
+//! through the real socket path — the same bytes `posit-div
+//! serve`/`client` exchange (docs/SERVING.md).
 
 use std::io::Write;
 use std::net::TcpStream;
+use std::thread;
 use std::time::Duration;
 
 use posit_div::coordinator::{Backend, BatchPolicy, ServedBy, ServiceConfig};
 use posit_div::division::Algorithm;
 use posit_div::posit::Posit;
 use posit_div::service::wire::{self, FrameKind};
-use posit_div::service::{shard_for, Server, ServiceClient, ShardConfig};
+use posit_div::service::{
+    shard_for, BreakerConfig, ConnectOptions, FaultNet, FaultPlan, ResilientClient, RetryPolicy,
+    Server, ServiceClient, ShardConfig,
+};
 use posit_div::unit::{Accuracy, ExecTier, Op, OpRequest};
 use posit_div::workload::{take_requests, MixedOps, OpMix, OpenLoop};
 use posit_div::PositError;
@@ -22,6 +28,8 @@ fn cfg(n: u32, shards: usize, queue_capacity: usize) -> ShardConfig {
     ShardConfig {
         shards,
         queue_capacity,
+        soft_capacity: queue_capacity, // == hard cap: brown-out off unless a test opts in
+        idle_timeout: ShardConfig::DEFAULT_IDLE_TIMEOUT,
         service: ServiceConfig {
             n,
             backend: Backend::Native { alg: Algorithm::DEFAULT, threads: 2 },
@@ -269,7 +277,162 @@ fn malformed_frames_get_typed_error_replies() {
     wire::write_frame(&mut s, FrameKind::Request, &req).unwrap();
     let f = wire::read_frame(&mut s).unwrap();
     assert_eq!(f.kind, FrameKind::Response);
-    assert_eq!(wire::decode_response(&f.payload).unwrap(), (9, one.to_bits()));
+    assert_eq!(wire::decode_response(&f.payload).unwrap(), (9, one.to_bits(), 0));
 
     server.shutdown().shutdown();
+}
+
+/// A request whose deadline expired on the wire (header at t0, payload
+/// trickling in 200 ms later against a 50 ms budget) is dropped at
+/// admission with a typed error — without consuming a shard slot — and
+/// the connection keeps serving.
+#[test]
+fn expired_deadline_is_dropped_typed_over_tcp() {
+    let server = Server::bind("127.0.0.1:0", cfg(16, 1, 64)).unwrap();
+    let addr = server.local_addr();
+    let one = Posit::one(16);
+
+    let mut s = TcpStream::connect(addr).unwrap();
+    wire::write_frame(&mut s, FrameKind::Hello, &wire::encode_hello(16)).unwrap();
+    assert_eq!(wire::read_frame(&mut s).unwrap().kind, FrameKind::Welcome);
+
+    // the admission clock starts when the header lands; stall the
+    // payload past the request's own 50 ms budget
+    let payload = wire::encode_request(3, &OpRequest::sqrt(one).with_deadline_ms(50));
+    s.write_all(&wire::header_bytes(FrameKind::Request, payload.len())).unwrap();
+    thread::sleep(Duration::from_millis(200));
+    s.write_all(&payload).unwrap();
+
+    let f = wire::read_frame(&mut s).unwrap();
+    assert_eq!(f.kind, FrameKind::Error);
+    let (id, e) = wire::decode_error(&f.payload).unwrap();
+    assert_eq!(id, 3);
+    match e {
+        PositError::DeadlineExceeded { deadline_ms, waited_ms } => {
+            assert_eq!(deadline_ms, 50);
+            assert!(waited_ms >= 150, "stalled ~200 ms, reported {waited_ms} ms");
+        }
+        other => panic!("expected DeadlineExceeded, got {other}"),
+    }
+
+    // a deadline drop is per-request: the same connection still serves,
+    // and a generous live deadline passes admission
+    let ok = wire::encode_request(4, &OpRequest::sqrt(one).with_deadline_ms(5_000));
+    wire::write_frame(&mut s, FrameKind::Request, &ok).unwrap();
+    let f = wire::read_frame(&mut s).unwrap();
+    assert_eq!(f.kind, FrameKind::Response);
+    assert_eq!(wire::decode_response(&f.payload).unwrap(), (4, one.to_bits(), 0));
+
+    let svc = server.shutdown();
+    assert_eq!(svc.deadline_drops_total(), 1);
+    assert_eq!(svc.total_requests(), 1, "the dropped request never took a slot");
+    svc.shutdown();
+}
+
+/// Brown-out over the wire: past the soft watermark, ulp-tolerant
+/// traffic with a registered bounded-error kernel degrades to the
+/// approx tier — flagged in the RESPONSE frame, counted in the metrics,
+/// within the kernel's declared bound — while bit-exact traffic is
+/// never degraded, and nothing sheds.
+#[test]
+fn brown_out_degrades_over_tcp_before_shedding() {
+    let n = 16;
+    let base = cfg(n, 1, 64);
+    let server = Server::bind("127.0.0.1:0", ShardConfig { soft_capacity: 1, ..base }).unwrap();
+    let router = server.client();
+    let mut client = ServiceClient::connect(server.local_addr(), n).unwrap();
+
+    let one = Posit::one(16);
+    let x = Posit::from_f64(n, 9.0);
+    let d = Posit::from_f64(n, 3.0);
+    let tolerant = OpRequest::div(x, d).with_accuracy(Accuracy::Ulp(1));
+
+    // calm service: the tolerant request serves exact, nothing degrades
+    let calm = client.run_op(&tolerant).unwrap();
+    assert_eq!(calm, tolerant.golden());
+    assert_eq!(client.degraded_replies(), 0);
+
+    // hold one admission slot from the in-process handle: depth >= soft
+    // watermark (1), deterministically — no timing involved
+    let ticket = router.submit_op(OpRequest::sqrt(one)).unwrap();
+
+    let spec = Op::DIV.approx_spec(n).expect("P16 div has a registered kernel");
+    let got = client.run_op(&tolerant).unwrap();
+    assert!(
+        got.ulp_distance(tolerant.golden()) <= spec.max_ulp,
+        "degraded reply drifted {} ulp, declared bound {}",
+        got.ulp_distance(tolerant.golden()),
+        spec.max_ulp
+    );
+    assert_eq!(client.degraded_replies(), 1, "the RESPONSE frame carried the degraded flag");
+
+    // bit-exact traffic under the same pressure is never degraded
+    let exact = OpRequest::div(x, d);
+    assert_eq!(client.run_op(&exact).unwrap(), exact.golden());
+    // tolerant traffic without a registered kernel stays exact too
+    let add = OpRequest::add(one, one).with_accuracy(Accuracy::Ulp(1));
+    assert_eq!(client.run_op(&add).unwrap(), add.golden());
+    assert_eq!(client.degraded_replies(), 1);
+
+    assert_eq!(ticket.wait().unwrap(), one);
+    client.shutdown_server().unwrap();
+    let svc = server.wait();
+    assert_eq!(svc.degraded_total(), 1);
+    assert_eq!(svc.shed_total(), 0, "brown-out absorbed the pressure before any shed");
+    assert!(svc.metrics(0).tiers.get(ExecTier::Approx) >= 1);
+    assert!(svc.counters_render().contains("degraded=1"), "{}", svc.counters_render());
+    svc.shutdown();
+}
+
+/// The seeded chaos soak: two servers behind two fault-injecting
+/// proxies (`FaultPlan::chaos` — delays, duplicates, black holes,
+/// truncations, dropped connections), one resilient client fanning a
+/// golden-verified stream over both. At fixed seeds the outcome is the
+/// contract itself: every logical request completes exactly once —
+/// 100% success, zero duplicate completions, zero verification
+/// failures — whatever the fault schedule did to individual attempts.
+#[test]
+fn chaos_soak_completes_every_request_exactly_once() {
+    let n = 16;
+    let server_a = Server::bind("127.0.0.1:0", cfg(n, 2, 4096)).unwrap();
+    let server_b = Server::bind("127.0.0.1:0", cfg(n, 2, 4096)).unwrap();
+    let mut net_a = FaultNet::start(server_a.local_addr(), FaultPlan::chaos(0xC4A0)).unwrap();
+    let mut net_b = FaultNet::start(server_b.local_addr(), FaultPlan::chaos(0xC4A1)).unwrap();
+
+    let policy = RetryPolicy {
+        max_retries: 16,
+        base_backoff: Duration::from_millis(2),
+        max_backoff: Duration::from_millis(50),
+        seed: 0x50AC,
+    };
+    let breaker = BreakerConfig { failure_threshold: 3, open_cooldown: Duration::from_millis(50) };
+    let opts = ConnectOptions {
+        connect_timeout: Some(Duration::from_millis(1_000)),
+        // generous against loopback latency, short enough that a
+        // black-holed frame retries quickly
+        read_timeout: Some(Duration::from_millis(400)),
+    };
+    let mut rc =
+        ResilientClient::new(&[net_a.local_addr(), net_b.local_addr()], n, policy, breaker, opts)
+            .unwrap();
+
+    let reqs = take_requests(&mut MixedOps::new(n, full_mix(), 0x0DD5), 300);
+    let rep = rc.run_requests(&reqs, 5);
+
+    assert_eq!(rep.offered, 300);
+    assert_eq!(rep.completed, 300, "chaos must not lose requests: {}", rep.summary());
+    assert_eq!(rep.failed, 0, "{}", rep.summary());
+    assert_eq!(rep.verify_failures, 0, "a duplicate or corrupt completion would show here");
+    // the proxies really did inject faults — on both paths
+    assert!(net_a.counters().faulted() > 0, "endpoint A saw no faults");
+    assert!(net_b.counters().faulted() > 0, "endpoint B saw no faults");
+    // with ~12% of frames faulted, the client must have retried
+    assert!(rep.retries > 0, "{}", rep.summary());
+    assert!(rep.connects >= 2, "both endpoints served: {}", rep.summary());
+
+    rc.close_connections();
+    net_a.stop();
+    net_b.stop();
+    server_a.shutdown().shutdown();
+    server_b.shutdown().shutdown();
 }
